@@ -1,0 +1,7 @@
+"""Repo-root pytest shim: make `python/` importable so
+`pytest python/tests/` works from the repository root."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

@@ -1,0 +1,65 @@
+//! Quickstart: classify a digit end-to-end through all three layers.
+//!
+//! 1. generate a synthetic digit (rust port of the python dataset);
+//! 2. encode it to a spike train (phased rate coding);
+//! 3. run the AOT-compiled JAX/Pallas step function via PJRT (L2+L1);
+//! 4. feed the golden trace to the cycle-level Skydiver simulator with
+//!    the APRC+CBWS schedule (L3) and report cycles/energy/prediction.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use skydiver::coordinator::default_input_rates;
+use skydiver::power::EnergyModel;
+use skydiver::runtime::{Runtime, SnnRunner};
+use skydiver::schedule::cbws::Cbws;
+use skydiver::schedule::AprcPredictor;
+use skydiver::sim::{ArchConfig, Simulator, TraceSource};
+use skydiver::snn::{encode_phased_u8, NetworkWeights};
+
+fn main() -> Result<()> {
+    let dir = skydiver::artifacts_dir();
+    let net = NetworkWeights::load(&dir, "classifier_aprc")?;
+    println!("loaded {} ({} layers, T={})", net.meta.name,
+             net.num_layers(), net.meta.timesteps);
+
+    // A digit frame.
+    let (imgs, labels) = skydiver::data::gen_digits(0xD1617, 1);
+    println!("ground-truth label: {}", labels[0]);
+
+    // Encode.
+    let inputs = encode_phased_u8(&imgs, 1, 28, 28, net.meta.timesteps);
+    let spikes_in: usize = inputs.iter().map(|m| m.nnz()).sum();
+    println!("encoded {} input spikes over {} timesteps", spikes_in,
+             inputs.len());
+
+    // Golden execution through PJRT (the AOT-compiled JAX/Pallas HLO).
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let step = rt.load_step(&dir, &net)?;
+    let mut runner = SnnRunner::new(&step)?;
+    let trace = runner.run_frame(&inputs)?;
+
+    // Simulate the accelerator processing the same workload.
+    let arch = ArchConfig::default();
+    let rates = default_input_rates(&net);
+    let predictor = AprcPredictor::from_network(&net, &rates);
+    let sim = Simulator::new(arch, &net, &Cbws::default(), &predictor);
+    let report = sim.run_frame(&inputs, &TraceSource::Golden(trace))?;
+
+    let pred = report.output_counts.iter().enumerate()
+        .max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap();
+    let energy = EnergyModel::default()
+        .frame_energy(&report, arch.clock_hz);
+    println!("\npredicted: {pred} (counts {:?})", report.output_counts);
+    println!("simulated: {} cycles -> {:.1} KFPS @200MHz",
+             report.total_cycles, report.fps(arch.clock_hz) / 1e3);
+    println!("balance  : {:.2}%  energy: {:.1} uJ  power: {:.2} W",
+             100.0 * report.balance_weighted(arch.n_spes),
+             energy.total_j * 1e6, energy.mean_w);
+    assert_eq!(pred, labels[0] as usize, "misclassified!");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Schedule explorer — sweep the whole scheduler zoo across both
+//! networks and SPE counts; prints balance ratio and simulated FPS for
+//! every combination (the design-space exploration behind Fig. 7 and the
+//! DESIGN.md ablations).
+//!
+//! ```bash
+//! cargo run --release --example schedule_explorer [frames]
+//! ```
+
+use anyhow::Result;
+use skydiver::coordinator::default_input_rates;
+use skydiver::metrics::Table;
+use skydiver::schedule::{all_schedulers, AprcPredictor};
+use skydiver::sim::{ArchConfig, RunSummary, Simulator, TraceSource};
+use skydiver::snn::{encode_phased_u8, NetworkWeights, SpikeMap};
+
+fn frames_for(net: &NetworkWeights, n: usize) -> Vec<Vec<SpikeMap>> {
+    let t = net.meta.timesteps;
+    if net.meta.in_shape[0] == 1 {
+        let (imgs, _) = skydiver::data::gen_digits(0xE8104E, n);
+        imgs.chunks(28 * 28)
+            .map(|i| encode_phased_u8(i, 1, 28, 28, t)).collect()
+    } else {
+        let (imgs, _) = skydiver::data::gen_road_scenes(0xE8104E, n);
+        let (h, w) = (skydiver::data::ROAD_H, skydiver::data::ROAD_W);
+        imgs.chunks(h * w * 3).map(|img| {
+            let mut chw = vec![0u8; 3 * h * w];
+            for y in 0..h {
+                for x in 0..w {
+                    for c in 0..3 {
+                        chw[c * h * w + y * w + x] =
+                            img[(y * w + x) * 3 + c];
+                    }
+                }
+            }
+            encode_phased_u8(&chw, 3, h, w, t)
+        }).collect()
+    }
+}
+
+fn main() -> Result<()> {
+    let n_frames: usize = std::env::args().nth(1)
+        .and_then(|a| a.parse().ok()).unwrap_or(2);
+    let dir = skydiver::artifacts_dir();
+
+    for name in ["classifier_aprc", "segmenter_aprc"] {
+        let net = NetworkWeights::load(&dir, name)?;
+        let inputs = frames_for(&net, n_frames);
+        let rates = default_input_rates(&net);
+        let predictor = AprcPredictor::from_network(&net, &rates);
+
+        let mut table = Table::new(
+            format!("{name}: scheduler x N sweep ({n_frames} frames)"),
+            &["scheduler", "N=4", "N=8", "N=16"]);
+        for s in all_schedulers() {
+            let mut row = vec![s.name().to_string()];
+            for n in [4usize, 8, 16] {
+                let mut arch = ArchConfig::default();
+                arch.n_spes = n;
+                let sim = Simulator::new(arch, &net, s.as_ref(),
+                                         &predictor);
+                let reports: Vec<_> = inputs.iter()
+                    .map(|i| sim.run_frame(i, &TraceSource::Functional))
+                    .collect::<Result<_>>()?;
+                let sum = RunSummary::from_frames(&reports, arch.clock_hz,
+                                                  n);
+                row.push(format!("{:.1}% @{:.0}fps",
+                                 100.0 * sum.mean_balance_weighted,
+                                 sum.mean_fps));
+            }
+            table.row(&row);
+        }
+        table.print();
+        println!();
+    }
+    Ok(())
+}

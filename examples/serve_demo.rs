@@ -1,0 +1,69 @@
+//! Serving demo — the L3 coordinator under load: submit a burst of
+//! classification frames to the batcher + worker pool and report host
+//! throughput, latency percentiles, and the simulated accelerator's
+//! FPS/energy (the paper's Table I view of the same run).
+//!
+//! ```bash
+//! cargo run --release --example serve_demo [frames] [workers]
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+use skydiver::coordinator::{Policy, Service, ServiceConfig, WorkerConfig};
+use skydiver::power::EnergyModel;
+use skydiver::sim::ArchConfig;
+use skydiver::snn::NetKind;
+
+fn main() -> Result<()> {
+    let frames: usize = std::env::args().nth(1)
+        .and_then(|a| a.parse().ok()).unwrap_or(64);
+    let workers: usize = std::env::args().nth(2)
+        .and_then(|a| a.parse().ok()).unwrap_or(2);
+
+    let wcfg = WorkerConfig {
+        artifacts: skydiver::artifacts_dir(),
+        kind: NetKind::Classifier,
+        aprc: true,
+        policy: Policy::Cbws,
+        arch: ArchConfig::default(),
+        energy: EnergyModel::default(),
+        use_runtime: false, // functional model: no PJRT needed per worker
+        timesteps: None,
+    };
+    let scfg = ServiceConfig {
+        workers,
+        batch_max: 8,
+        batch_wait: Duration::from_millis(2),
+    };
+
+    println!("spinning up {} workers; submitting {} frames...", workers,
+             frames);
+    let service = Service::start(scfg, wcfg)?;
+    let (imgs, labels) = skydiver::data::gen_digits(0x5E12E, frames);
+    for (i, img) in imgs.chunks(28 * 28).enumerate() {
+        service.submit(i as u64, img.to_vec())?;
+    }
+    let (responses, report) = service.collect(frames, skydiver::CLOCK_HZ)?;
+    service.shutdown()?;
+
+    let correct = responses.iter().filter(|r| {
+        let pred = r.output_counts.iter().enumerate()
+            .max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap();
+        pred == labels[r.id as usize] as usize
+    }).count();
+
+    println!("\nframes           : {}", report.frames);
+    println!("accuracy         : {:.1}% ({}/{})",
+             100.0 * correct as f64 / frames as f64, correct, frames);
+    println!("host throughput  : {:.1} frames/s", report.served_fps);
+    println!("latency p50/p95  : {} / {} us", report.p50_us,
+             report.p95_us);
+    println!("sim cycles/frame : {:.0}", report.mean_sim_cycles);
+    println!("sim accel FPS    : {:.1} (paper: 22.6 KFPS @ fewer steps)",
+             report.sim_fps);
+    println!("sim energy/frame : {:.1} uJ (paper: 42.4 uJ)",
+             report.mean_energy_uj);
+    println!("per-worker load  : {:?}", report.per_worker);
+    Ok(())
+}

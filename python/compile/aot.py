@@ -1,0 +1,226 @@
+"""AOT build: train -> convert -> lower to HLO text -> artifacts/.
+
+Run once by ``make artifacts``; the rust binary is self-contained after.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Artifacts written per network variant (classifier/segmenter x aprc/plain):
+
+* ``<name>.step.hlo.txt``   — one SNN timestep: (s_in, vmem_0..L) ->
+  (spikes_0..L, vmem'_0..L), weights baked as constants, Pallas kernels
+  (interpret mode) lowered inline. The rust runtime drives T steps and
+  harvests the per-layer spike traces for the cycle-level simulator.
+* ``<name>.weights.bin/json`` — the same weights for the rust-side
+  scheduler (APRC filter magnitudes) and simulator.
+* ``meta.json``             — dataset seeds/hashes, eval metrics, encoding
+  cross-check hashes, variant inventory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export_step_hlo(cfg: model.NetConfig, params: dict, out: Path) -> int:
+    """Lower the per-timestep network step to HLO text. Returns #bytes.
+
+    Weights are *parameters*, not baked constants: ``as_hlo_text`` elides
+    large literals (``constant({...})``), so baked weights would not
+    round-trip through the text format. Argument order (matches the rust
+    runtime and the ``layers`` list in the weights json):
+
+        s_in, vmem_0..vmem_L, conv_w_0..conv_w_{n-1}[, dense_w, dense_b]
+
+    Outputs: spikes_0..spikes_L, vmem'_0..vmem'_L (flat tuple).
+    """
+    nconv = len(params["conv"])
+
+    def step(s_in, *rest):
+        nv = cfg.num_layers()
+        vmems = rest[:nv]
+        ws = list(rest[nv:nv + nconv])
+        p = {"conv": ws, "dense": None}
+        if cfg.dense_out is not None:
+            p["dense"] = {"w": rest[nv + nconv], "b": rest[nv + nconv + 1]}
+        spikes, new_vmems = model.network_step(p, cfg, s_in, vmems,
+                                               use_pallas=True)
+        return spikes + new_vmems
+
+    specs = [jax.ShapeDtypeStruct((cfg.in_ch, cfg.in_h, cfg.in_w),
+                                  jnp.float32)]
+    specs += [jax.ShapeDtypeStruct(s, jnp.float32)
+              for s in cfg.vmem_shapes()]
+    specs += [jax.ShapeDtypeStruct(w.shape, jnp.float32)
+              for w in params["conv"]]
+    if cfg.dense_out is not None:
+        specs += [jax.ShapeDtypeStruct(params["dense"]["w"].shape,
+                                       jnp.float32),
+                  jax.ShapeDtypeStruct(params["dense"]["b"].shape,
+                                       jnp.float32)]
+    lowered = jax.jit(step).lower(*specs)
+    text = to_hlo_text(lowered)
+    out.write_text(text)
+    return len(text)
+
+
+def load_weights(out_dir: Path, name: str) -> tuple[dict, dict] | None:
+    """Load previously trained weights (inverse of train.save_weights)."""
+    jpath = out_dir / f"{name}.weights.json"
+    bpath = out_dir / f"{name}.weights.bin"
+    if not (jpath.exists() and bpath.exists()):
+        return None
+    meta = json.loads(jpath.read_text())
+    blob = np.frombuffer(bpath.read_bytes(), dtype="<f4")
+    if blob.size != meta["total_floats"]:
+        return None
+    params: dict = {"conv": [], "dense": None}
+    dense_w = dense_b = None
+    for layer in meta["layers"]:
+        n = int(np.prod(layer["shape"]))
+        arr = jnp.asarray(blob[layer["offset"]:layer["offset"] + n]
+                          .reshape(layer["shape"]))
+        if layer["kind"] == "conv":
+            params["conv"].append(arr)
+        elif layer["kind"] == "dense_w":
+            dense_w = arr
+        elif layer["kind"] == "dense_b":
+            dense_b = arr
+    if dense_w is not None:
+        params["dense"] = {"w": dense_w, "b": dense_b}
+    return params, meta
+
+
+def build_variant(cfg: model.NetConfig, out_dir: Path, *, quick: bool,
+                  retrain: bool, log=print) -> dict:
+    """Train (or reuse), convert, evaluate, serialise, export one variant."""
+    cached = None if retrain else load_weights(out_dir, cfg.name)
+    if cached is not None:
+        log(f"[{cfg.name}] reusing cached weights")
+        snn_params, meta = cached
+        extra = {k: meta[k] for k in ("ann_metric", "snn_metric",
+                                      "seg_rate_threshold") if k in meta}
+        lambdas = meta["lambdas"]
+    else:
+        t0 = time.time()
+        if cfg.dense_out is not None:
+            ann = train.train_classifier(cfg, epochs=2 if quick else 5,
+                                         log=log)
+            acc = train.eval_ann_classifier(ann, cfg)
+            log(f"[{cfg.name}] ANN accuracy: {acc:.4f}")
+            imgs, _ = datasets.gen_digits(train.DIGITS_TRAIN_SEED, 512)
+            calib = jnp.asarray(imgs, jnp.float32)[:, None] / 255.0
+            snn_params, lambdas = train.convert_to_snn(ann, cfg, calib)
+            snn_acc = train.eval_snn_classifier(
+                snn_params, cfg, 128 if quick else 512)
+            log(f"[{cfg.name}] SNN accuracy: {snn_acc:.4f}")
+            extra = {"ann_metric": acc, "snn_metric": snn_acc}
+        else:
+            ann = train.train_segmenter(cfg, epochs=1 if quick else 3,
+                                        log=log)
+            imgs, _ = datasets.gen_road_scenes(train.ROADS_TRAIN_SEED, 16)
+            calib = jnp.asarray(imgs, jnp.float32).transpose(0, 3, 1, 2) / 255.0
+            snn_params, lambdas = train.convert_to_snn(ann, cfg, calib)
+            thr, iou = train.calibrate_seg_threshold(
+                snn_params, cfg, 4 if quick else 8)
+            log(f"[{cfg.name}] SNN IoU: {iou:.4f} @ rate>={thr}")
+            extra = {"snn_metric": iou, "seg_rate_threshold": thr}
+        log(f"[{cfg.name}] trained+converted in {time.time() - t0:.1f}s")
+        train.save_weights(out_dir, cfg, snn_params, lambdas, extra)
+
+    hlo_path = out_dir / f"{cfg.name}.step.hlo.txt"
+    nbytes = export_step_hlo(cfg, snn_params, hlo_path)
+    log(f"[{cfg.name}] wrote {hlo_path.name} ({nbytes / 1e6:.1f} MB)")
+    mags = [[float(x) for x in model.filter_magnitudes(snn_params, li)]
+            for li in range(len(cfg.convs))]
+    return {"name": cfg.name, "hlo": hlo_path.name,
+            "timesteps": cfg.timesteps, "filter_magnitudes": mags, **extra}
+
+
+def encoding_crosscheck() -> dict:
+    """Hash a known encoded spike train so rust/src/snn can verify its
+    port of encode_phased bit-for-bit."""
+    imgs, _ = datasets.gen_digits(train.DIGITS_TEST_SEED, 1)
+    x = jnp.asarray(imgs[0], jnp.float32)[None] / 255.0  # (1, 28, 28)
+    spikes = np.asarray(model.encode_phased(x, 24), dtype=np.uint8)
+    return {"image_seed": train.DIGITS_TEST_SEED, "timesteps": 24,
+            "spike_count": int(spikes.sum()),
+            "fnv1a64": f"{datasets.fnv1a64(spikes.tobytes()):016x}"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced training (CI smoke)")
+    ap.add_argument("--retrain", action="store_true",
+                    help="ignore cached weights")
+    ap.add_argument("--only", default=None,
+                    help="build a single variant by name")
+    args = ap.parse_args()
+    out_dir = Path(args.out).resolve()
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    configs = [
+        model.classifier_config(aprc=True),
+        model.classifier_config(aprc=False),
+        model.segmenter_config(aprc=True),
+        model.segmenter_config(aprc=False),
+    ]
+    if args.only:
+        configs = [c for c in configs if c.name == args.only]
+
+    variants = []
+    for cfg in configs:
+        variants.append(build_variant(cfg, out_dir, quick=args.quick,
+                                      retrain=args.retrain))
+
+    meta = {
+        "paper": "Skydiver (TCAD 2022), DOI 10.1109/TCAD.2022.3158834",
+        "datasets": {
+            "digits": {
+                "train_seed": train.DIGITS_TRAIN_SEED,
+                "test_seed": train.DIGITS_TEST_SEED,
+                "train_n": train.DIGITS_TRAIN_N,
+                "test_n": train.DIGITS_TEST_N,
+                "test_hash16": f"{datasets.digits_hash(train.DIGITS_TEST_SEED, 16):016x}",
+            },
+            "roads": {
+                "train_seed": train.ROADS_TRAIN_SEED,
+                "test_seed": train.ROADS_TEST_SEED,
+                "train_n": train.ROADS_TRAIN_N,
+                "test_n": train.ROADS_TEST_N,
+                "test_hash2": f"{datasets.road_scenes_hash(train.ROADS_TEST_SEED, 2):016x}",
+            },
+        },
+        "encoding_crosscheck": encoding_crosscheck(),
+        "variants": variants,
+    }
+    (out_dir / "meta.json").write_text(json.dumps(meta, indent=1))
+    print(f"wrote {out_dir / 'meta.json'}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

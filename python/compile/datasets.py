@@ -1,0 +1,251 @@
+"""Deterministic synthetic datasets (no internet in the sandbox).
+
+Substitutes for the paper's data per DESIGN.md §2:
+
+* ``digits``      — MNIST substitute: 28x28 grayscale seven-segment-style
+                    digit glyphs with integer affine jitter, per-segment
+                    wobble, brightness variation and additive noise.
+* ``road_scenes`` — MLND-Capstone driving-video substitute: 80x160x3
+                    perspective road scenes with lane markings plus the
+                    ground-truth binary road mask.
+
+Everything is generated with *integer-only* math on top of a splitmix64
+PRNG so the Rust port in ``rust/src/data/`` reproduces the streams
+byte-for-byte (cross-checked by FNV-1a hashes stored in
+``artifacts/meta.json``). splitmix64 is counter-based (the state advances
+by a fixed gamma per draw), so Python vectorises blocks of draws with
+numpy while Rust draws sequentially — the streams are identical.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+GAMMA = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+
+DIGIT_H = 28
+DIGIT_W = 28
+ROAD_H = 80
+ROAD_W = 160
+
+
+def _mix_array(z: np.ndarray) -> np.ndarray:
+    """Vectorised splitmix64 finaliser (u64 arrays wrap silently)."""
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(MIX1)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(MIX2)
+    return z ^ (z >> np.uint64(31))
+
+
+class SplitMix64:
+    """splitmix64 PRNG — trivially portable to Rust (sequential there).
+
+    State is kept as a Python int (masked to 64 bits) so scalar draws never
+    trip numpy overflow warnings; block draws vectorise with numpy."""
+
+    def __init__(self, seed: int):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GAMMA) & 0xFFFFFFFFFFFFFFFF
+        z = self.state
+        z = ((z ^ (z >> 30)) * MIX1) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * MIX2) & 0xFFFFFFFFFFFFFFFF
+        return z ^ (z >> 31)
+
+    def next_block(self, n: int) -> np.ndarray:
+        """n consecutive draws as a u64 array; advances the state by n.
+        Identical to calling next_u64() n times."""
+        idx = np.arange(1, n + 1, dtype=np.uint64)
+        states = np.uint64(self.state) + idx * np.uint64(GAMMA)
+        self.state = (self.state + n * GAMMA) & 0xFFFFFFFFFFFFFFFF
+        return _mix_array(states)
+
+    def next_below(self, n: int) -> int:
+        """Uniform integer in [0, n). Modulo bias is irrelevant here and
+        keeps the Rust port a one-liner."""
+        return self.next_u64() % n
+
+    def next_range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi] inclusive."""
+        return lo + self.next_below(hi - lo + 1)
+
+
+# --------------------------------------------------------------------------
+# Digits
+# --------------------------------------------------------------------------
+
+# Seven-segment layout inside the 28x28 box (inclusive coordinates).
+#      A
+#    F   B
+#      G
+#    E   C
+#      D
+# Segments as (y0, x0, y1, x1) line endpoints on the glyph grid.
+_SEG_COORDS = {
+    "A": (4, 9, 4, 19),
+    "B": (4, 19, 13, 19),
+    "C": (13, 19, 23, 19),
+    "D": (23, 9, 23, 19),
+    "E": (13, 9, 23, 9),
+    "F": (4, 9, 13, 9),
+    "G": (13, 9, 13, 19),
+}
+
+_DIGIT_SEGMENTS = {
+    0: "ABCDEF",
+    1: "BC",
+    2: "ABGED",
+    3: "ABGCD",
+    4: "FGBC",
+    5: "AFGCD",
+    6: "AFGECD",
+    7: "ABC",
+    8: "ABCDEFG",
+    9: "ABCDFG",
+}
+
+
+def _draw_thick_line(img: np.ndarray, y0: int, x0: int, y1: int, x1: int,
+                     thickness: int, value: int) -> None:
+    """Axis-aligned line with thickness (all templates are axis-aligned,
+    which keeps the Rust port trivial while staying exact)."""
+    h, w = img.shape
+    t0 = -(thickness // 2)
+    t1 = thickness // 2 + (thickness & 1)
+    if y0 == y1:  # horizontal
+        for x in range(min(x0, x1), max(x0, x1) + 1):
+            for dy in range(t0, t1):
+                y = y0 + dy
+                if 0 <= y < h and 0 <= x < w:
+                    img[y, x] = max(img[y, x], value)
+    else:  # vertical
+        for y in range(min(y0, y1), max(y0, y1) + 1):
+            for dx in range(t0, t1):
+                x = x0 + dx
+                if 0 <= y < h and 0 <= x < w:
+                    img[y, x] = max(img[y, x], value)
+
+
+def gen_digit(rng: SplitMix64, label: int) -> np.ndarray:
+    """Render one 28x28 uint8 digit glyph. Consumes a fixed-structure PRNG
+    stream: 4 header draws + 2 wobble draws per segment + 784 noise draws."""
+    img = np.zeros((DIGIT_H, DIGIT_W), dtype=np.int64)
+    dy = rng.next_range(-2, 2)
+    dx = rng.next_range(-3, 3)
+    thickness = rng.next_range(2, 3)
+    brightness = rng.next_range(170, 255)
+    for seg in _DIGIT_SEGMENTS[label]:
+        y0, x0, y1, x1 = _SEG_COORDS[seg]
+        wy = rng.next_range(-1, 1)
+        wx = rng.next_range(-1, 1)
+        _draw_thick_line(img, y0 + dy + wy, x0 + dx + wx,
+                         y1 + dy + wy, x1 + dx + wx, thickness, brightness)
+    noise = (rng.next_block(DIGIT_H * DIGIT_W) % np.uint64(36)) \
+        .astype(np.int64).reshape(DIGIT_H, DIGIT_W)
+    img = np.minimum(255, img + noise)
+    return img.astype(np.uint8)
+
+
+def gen_digits(seed: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``count`` digit images with PRNG-chosen labels.
+
+    Returns (images [count,28,28] u8, labels [count] u8)."""
+    rng = SplitMix64(seed)
+    imgs = np.zeros((count, DIGIT_H, DIGIT_W), dtype=np.uint8)
+    labels = np.zeros((count,), dtype=np.uint8)
+    for i in range(count):
+        label = rng.next_below(10)
+        labels[i] = label
+        imgs[i] = gen_digit(rng, label)
+    return imgs, labels
+
+
+# --------------------------------------------------------------------------
+# Road scenes
+# --------------------------------------------------------------------------
+
+def gen_road_scene(rng: SplitMix64) -> tuple[np.ndarray, np.ndarray]:
+    """One 80x160 RGB road scene + binary road mask.
+
+    Stream structure: 10 header draws, then exactly one draw per pixel in
+    (y, x) order. Returns (img [80,160,3] u8, mask [80,160] u8 in {0,1})."""
+    h, w = ROAD_H, ROAD_W
+    img = np.zeros((h, w, 3), dtype=np.int64)
+    mask = np.zeros((h, w), dtype=np.uint8)
+
+    horizon = rng.next_range(20, 30)
+    vx = rng.next_range(60, 100)            # vanishing point x
+    bl = rng.next_range(10, 40)             # road left edge at bottom
+    br = rng.next_range(120, 150)           # road right edge at bottom
+    sky_r = rng.next_range(90, 140)
+    sky_g = rng.next_range(130, 180)
+    sky_b = rng.next_range(190, 240)
+    grass_g = rng.next_range(100, 150)
+    road_gray = rng.next_range(90, 130)
+    dash_phase = rng.next_below(12)
+
+    raw = rng.next_block(h * w).reshape(h, w)
+    denom = (h - 1) - horizon  # >= 49
+    for y in range(h):
+        if y < horizon:
+            # Sky gradient: darker towards the top.
+            fade = (horizon - y) * 40 // horizon
+            n = (raw[y] % np.uint64(8)).astype(np.int64)
+            img[y, :, 0] = sky_r - fade + n
+            img[y, :, 1] = sky_g - fade + n
+            img[y, :, 2] = sky_b - fade // 2 + n
+        else:
+            t = y - horizon
+            le = vx + (bl - vx) * t // denom
+            re = vx + (br - vx) * t // denom
+            cx = vx + ((bl + br) // 2 - vx) * t // denom
+            lane_w = 1 + t * 3 // denom
+            dash_on = ((y + dash_phase) // 6) % 2 == 0
+            n = (raw[y] % np.uint64(16)).astype(np.int64)
+            x = np.arange(w)
+            on_road = (x >= le) & (x <= re)
+            mask[y, on_road] = 1
+            v = np.where(on_road, road_gray + n, 0)
+            if dash_on:
+                v = np.where(on_road & (np.abs(x - cx) <= lane_w), 220 + n, v)
+            v = np.where(on_road & ((x == le) | (x == re)), 200 + n, v)
+            img[y, :, 0] = np.where(on_road, v, 60 + n)
+            img[y, :, 1] = np.where(on_road, v, grass_g + n)
+            img[y, :, 2] = np.where(on_road, v, 40 + n)
+    np.clip(img, 0, 255, out=img)
+    return img.astype(np.uint8), mask
+
+
+def gen_road_scenes(seed: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (imgs [count,80,160,3] u8, masks [count,80,160] u8)."""
+    rng = SplitMix64(seed)
+    imgs = np.zeros((count, ROAD_H, ROAD_W, 3), dtype=np.uint8)
+    masks = np.zeros((count, ROAD_H, ROAD_W), dtype=np.uint8)
+    for i in range(count):
+        imgs[i], masks[i] = gen_road_scene(rng)
+    return imgs, masks
+
+
+# --------------------------------------------------------------------------
+# Hashing for the cross-language determinism check
+# --------------------------------------------------------------------------
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit — the same tiny hash lives in rust/src/data."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def digits_hash(seed: int, count: int) -> int:
+    imgs, labels = gen_digits(seed, count)
+    return fnv1a64(imgs.tobytes() + labels.tobytes())
+
+
+def road_scenes_hash(seed: int, count: int) -> int:
+    imgs, masks = gen_road_scenes(seed, count)
+    return fnv1a64(imgs.tobytes() + masks.tobytes())

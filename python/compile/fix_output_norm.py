@@ -1,0 +1,93 @@
+"""One-off migration: apply output-layer normalisation to artifacts that
+were converted before `convert_to_snn` normalised the output layer.
+
+The stored SNN weights are an invertible transform of the ANN weights
+given the recorded lambdas, and `ann_forward` run *with the SNN params*
+yields logits in the original trained units (hidden rates = a/lambda are
+exactly compensated by the rescaled weights). So we can compute
+lambda_out on calibration data and rescale the output layer in place —
+no retraining.
+
+Usage: python -m compile.fix_output_norm --out ../artifacts [names...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from . import aot, datasets, model, train
+
+
+def fix_variant(out_dir: Path, name: str, pct: float = 99.9) -> None:
+    loaded = aot.load_weights(out_dir, name)
+    if loaded is None:
+        print(f"[{name}] no cached weights; skipping")
+        return
+    params, meta = loaded
+    if len(meta["lambdas"]) > len(meta["feature_sizes"]) - (
+            0 if meta["dense_out"] is not None else 1):
+        print(f"[{name}] already normalised; skipping")
+        return
+    cfg = model.config_by_name(name)
+
+    if cfg.dense_out is not None:
+        imgs, _ = datasets.gen_digits(train.DIGITS_TRAIN_SEED, 512)
+        calib = jnp.asarray(imgs, jnp.float32)[:, None] / 255.0
+    else:
+        imgs, _ = datasets.gen_road_scenes(train.ROADS_TRAIN_SEED, 16)
+        calib = jnp.asarray(imgs, jnp.float32).transpose(0, 3, 1, 2) / 255.0
+
+    # SNN params act as an ANN whose logits are in original units.
+    logits = model.ann_forward(params, cfg, calib)
+    lam_out = max(float(jnp.percentile(jnp.abs(logits), pct)), 1e-6)
+    print(f"[{name}] lambda_out = {lam_out:.4f}")
+    if cfg.dense_out is not None:
+        params["dense"]["w"] = params["dense"]["w"] / lam_out
+        params["dense"]["b"] = params["dense"]["b"] / lam_out
+        acc = train.eval_snn_classifier(params, cfg, 512)
+        print(f"[{name}] SNN accuracy after fix: {acc:.4f}")
+        extra = {"ann_metric": meta.get("ann_metric"), "snn_metric": acc}
+    else:
+        params["conv"][-1] = params["conv"][-1] / lam_out
+        thr, iou = train.calibrate_seg_threshold(params, cfg, 8)
+        print(f"[{name}] SNN IoU after fix: {iou:.4f} @ rate>={thr}")
+        extra = {"snn_metric": iou, "seg_rate_threshold": thr}
+
+    lambdas = list(meta["lambdas"]) + [lam_out]
+    train.save_weights(out_dir, cfg, params, lambdas, extra)
+    hlo = out_dir / f"{cfg.name}.step.hlo.txt"
+    aot.export_step_hlo(cfg, params, hlo)
+    print(f"[{name}] weights + HLO re-exported")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("names", nargs="*",
+                    default=["classifier_aprc", "classifier_plain",
+                             "segmenter_aprc", "segmenter_plain"])
+    args = ap.parse_args()
+    out_dir = Path(args.out).resolve()
+    for name in args.names:
+        fix_variant(out_dir, name)
+    # Refresh variant metrics inside meta.json if it exists.
+    meta_path = out_dir / "meta.json"
+    if meta_path.exists():
+        meta = json.loads(meta_path.read_text())
+        for v in meta.get("variants", []):
+            wj = out_dir / f"{v['name']}.weights.json"
+            if wj.exists():
+                w = json.loads(wj.read_text())
+                for k in ("ann_metric", "snn_metric",
+                          "seg_rate_threshold"):
+                    if k in w and w[k] is not None:
+                        v[k] = w[k]
+        meta_path.write_text(json.dumps(meta, indent=1))
+
+
+if __name__ == "__main__":
+    main()

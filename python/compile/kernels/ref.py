@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match these references under interpret
+mode (f32 op order may differ, so membrane potentials use assert_allclose
+with tight tolerances; spikes must match exactly away from the threshold).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(spikes: jax.Array, weights: jax.Array, pad: int) -> jax.Array:
+    """(C,H,W) x (M,C,R,R) -> (M,E,E) convolution via lax.conv."""
+    out = lax.conv_general_dilated(
+        spikes[None],              # (1, C, H, W)
+        weights,                   # (M, C, R, R) OIHW
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def lif_update(vmem: jax.Array, z: jax.Array, vth: float):
+    """Eq. 1/3: integrate, fire with a unit step, reset by subtraction."""
+    v = vmem + z
+    spk = (v >= vth).astype(jnp.float32)
+    return spk, v - vth * spk
+
+
+def spiking_conv_step_ref(spikes, weights, vmem, *, vth: float, pad: int):
+    """Oracle for kernels.spiking_conv.spiking_conv_step."""
+    z = conv2d_ref(spikes, weights, pad)
+    return lif_update(vmem, z, vth)
+
+
+def spiking_dense_step_ref(spikes, weights, bias, vmem, *, vth: float):
+    """Oracle for kernels.spiking_dense.spiking_dense_step."""
+    z = weights @ spikes + bias
+    return lif_update(vmem, z, vth)

@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: one SNN timestep of a spiking convolution layer.
+
+The paper's hot spot is the event-driven spike-gated convolution plus the
+LIF membrane update (Eq. 1-3). On the FPGA this is a spatial SPE array;
+per DESIGN.md §3 we re-express it for the TPU programming model as a
+*shift-and-matmul* convolution over the binary spike tensor fused with the
+LIF threshold/reset:
+
+* the R*R static shifts turn the conv into R*R dense (M_tile, C) x (C, E*E)
+  matmuls — exactly the MXU-friendly formulation (spikes are {0,1} floats,
+  so on real hardware these are bfloat16 matmuls on the systolic array);
+* the grid tiles output channels; one tile's weights + membrane block stay
+  resident in VMEM while the (padded) spike map is shared across grid
+  steps — the BlockSpec below is the HBM<->VMEM schedule that the FPGA
+  implemented with per-cluster weight banks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both the python
+tests and the rust runtime execute. Real-TPU performance is *estimated*
+in DESIGN.md §8 from the VMEM footprint / MXU utilisation of this tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block_m(m: int, target: int = 8) -> int:
+    """Largest divisor of ``m`` that is <= ``target``.
+
+    Output-channel tiles must divide M exactly so every grid step is full;
+    8 keeps the weight tile + two (bm, E, E) blocks comfortably inside a
+    TPU core's VMEM for every layer shape in the paper's two networks.
+    """
+    best = 1
+    for d in range(1, min(m, target) + 1):
+        if m % d == 0:
+            best = d
+    return best
+
+
+def _conv_lif_kernel(sp_ref, w_ref, v_ref, os_ref, ov_ref, *,
+                     block_m: int, c: int, r: int, eh: int, ew: int,
+                     vth: float):
+    """Kernel body for one output-channel tile.
+
+    sp_ref: (C, Hp, Wp) padded binary spikes   (shared across grid steps)
+    w_ref:  (block_m, C, R, R) weight tile     (resident per grid step)
+    v_ref:  (block_m, Eh, Ew) membrane potentials
+    os_ref/ov_ref: output spike / updated membrane blocks
+    """
+    s = sp_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros((block_m, eh * ew), jnp.float32)
+    # R*R static shifts; each is a (bm, C) @ (C, Eh*Ew) matmul on the MXU.
+    for j in range(r):
+        for k in range(r):
+            patch = s[:, j:j + eh, k:k + ew].reshape(c, eh * ew)
+            acc = acc + jnp.dot(w[:, :, j, k], patch)
+    v = v_ref[...] + acc.reshape(block_m, eh, ew)
+    spk = (v >= vth).astype(jnp.float32)
+    os_ref[...] = spk
+    ov_ref[...] = v - vth * spk
+
+
+@functools.partial(jax.jit, static_argnames=("vth", "pad", "block_m"))
+def spiking_conv_step(spikes: jax.Array, weights: jax.Array,
+                      vmem: jax.Array, *, vth: float, pad: int,
+                      block_m: int | None = None):
+    """One SNN timestep of a conv layer.
+
+    Args:
+      spikes:  (C, H, W) float32 binary input spike map.
+      weights: (M, C, R, R) float32 filters.
+      vmem:    (M, Eh, Ew) float32 membrane potentials,
+               Eh = H + 2*pad - R + 1, Ew likewise.
+      vth:     firing threshold (static).
+      pad:     zero padding per side. ``pad == R - 1`` is the APRC *full*
+               convolution (every filter tap sees every input element,
+               Eq. 5); ``pad == R // 2`` is the baseline same-pad conv.
+
+    Returns:
+      (out_spikes (M, Eh, Ew), new_vmem (M, Eh, Ew)) — LIF with
+      reset-by-subtraction per Eq. 1.
+    """
+    c, h, w_in = spikes.shape
+    m, cw, r, r2 = weights.shape
+    assert cw == c and r == r2, (weights.shape, spikes.shape)
+    eh = h + 2 * pad - r + 1
+    ew = w_in + 2 * pad - r + 1
+    assert vmem.shape == (m, eh, ew), (vmem.shape, (m, eh, ew))
+    if block_m is None:
+        block_m = pick_block_m(m)
+    assert m % block_m == 0
+
+    sp = jnp.pad(spikes, ((0, 0), (pad, pad), (pad, pad)))
+    hp, wp = h + 2 * pad, w_in + 2 * pad
+    kernel = functools.partial(_conv_lif_kernel, block_m=block_m, c=c,
+                               r=r, eh=eh, ew=ew, vth=vth)
+    out_spikes, new_vmem = pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((c, hp, wp), lambda i: (0, 0, 0)),
+            pl.BlockSpec((block_m, c, r, r), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((block_m, eh, ew), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, eh, ew), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_m, eh, ew), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, eh, ew), jnp.float32),
+            jax.ShapeDtypeStruct((m, eh, ew), jnp.float32),
+        ],
+        interpret=True,
+    )(sp, weights, vmem)
+    return out_spikes, new_vmem
+
+
+def vmem_bytes_estimate(c: int, h: int, w: int, m: int, r: int, pad: int,
+                        block_m: int | None = None) -> int:
+    """Estimated TPU VMEM residency of one grid step (DESIGN.md §8):
+    padded spike map + weight tile + 3x (bm, E, E) f32 blocks."""
+    if block_m is None:
+        block_m = pick_block_m(m)
+    e = h + 2 * pad - r + 1
+    hp, wp = h + 2 * pad, w + 2 * pad
+    floats = c * hp * wp + block_m * c * r * r + 3 * block_m * e * e
+    return 4 * floats

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: one SNN timestep of a spiking fully-connected layer.
+
+Used for the classifier's output layer (flattened conv spikes -> 10 output
+neurons). Small enough for a single VMEM-resident block: the whole
+(K, F) weight matrix and the F-element spike vector fit in one grid step,
+so there is no BlockSpec tiling here — the matmul-vector product is the
+MXU mapping and the LIF update is fused exactly as in spiking_conv.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_lif_kernel(s_ref, w_ref, b_ref, v_ref, os_ref, ov_ref, *,
+                      vth: float):
+    s = s_ref[...]
+    z = jnp.dot(w_ref[...], s) + b_ref[...]
+    v = v_ref[...] + z
+    spk = (v >= vth).astype(jnp.float32)
+    os_ref[...] = spk
+    ov_ref[...] = v - vth * spk
+
+
+@functools.partial(jax.jit, static_argnames=("vth",))
+def spiking_dense_step(spikes: jax.Array, weights: jax.Array,
+                       bias: jax.Array, vmem: jax.Array, *, vth: float):
+    """One SNN timestep of a dense layer.
+
+    Args:
+      spikes:  (F,) float32 binary input spikes (flattened previous layer).
+      weights: (K, F) float32.
+      bias:    (K,) float32 constant input current per timestep (Eq. 2).
+      vmem:    (K,) float32 membrane potentials.
+
+    Returns: (out_spikes (K,), new_vmem (K,)).
+    """
+    k, f = weights.shape
+    assert spikes.shape == (f,) and vmem.shape == (k,) and bias.shape == (k,)
+    kernel = functools.partial(_dense_lif_kernel, vth=vth)
+    out_spikes, new_vmem = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(spikes, weights, bias, vmem)
+    return out_spikes, new_vmem

@@ -1,0 +1,249 @@
+"""L2: JAX definitions of the paper's two spiking networks.
+
+* Classifier — ``28x28-16c-32c-8c-10`` (paper §IV) on the synthetic digit
+  dataset (MNIST substitute).
+* Segmenter  — ``160x80x3-8C3-16C3-32C3-32C3-16C3-1C3-160x80x1`` (paper
+  §IV, MLND-Capstone substitute road scenes).
+
+Each network exists in two convolution variants:
+
+* ``aprc``  — the paper's APRC-modified convolution: pad = R-1 per side
+  (a *full* convolution, stride 1). Eq. 5 then makes the summed membrane
+  update of an output channel **exactly** filter_magnitude x input_sum,
+  so channel spikerates become approximately proportional to the filter
+  magnitudes that the offline scheduler knows.
+* ``plain`` — the ordinary same-padded convolution (pad = R//2), used as
+  the "without APRC" baseline of Fig. 6(a)/Fig. 7.
+
+The per-timestep *step* function (input spikes + membrane state in,
+per-layer output spikes + new state out) is what ``aot.py`` lowers to HLO
+text for the rust runtime; Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spiking_conv import spiking_conv_step
+from .kernels.spiking_dense import spiking_dense_step
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    cin: int
+    cout: int
+    r: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    """Static description of one network variant."""
+
+    name: str
+    in_ch: int
+    in_h: int
+    in_w: int
+    convs: tuple[ConvSpec, ...]
+    dense_out: Optional[int]     # classifier: 10; segmenter: None
+    pad: int                     # R-1 (APRC) or R//2 (plain)
+    vth: float
+    timesteps: int
+
+    @property
+    def aprc(self) -> bool:
+        return self.pad == self.convs[0].r - 1
+
+    def feature_sizes(self) -> list[tuple[int, int, int]]:
+        """(C, H, W) of every conv layer *output*."""
+        sizes = []
+        h, w = self.in_h, self.in_w
+        for cs in self.convs:
+            h = h + 2 * self.pad - cs.r + 1
+            w = w + 2 * self.pad - cs.r + 1
+            sizes.append((cs.cout, h, w))
+        return sizes
+
+    def dense_in(self) -> int:
+        c, h, w = self.feature_sizes()[-1]
+        return c * h * w
+
+    def vmem_shapes(self) -> list[tuple[int, ...]]:
+        shapes: list[tuple[int, ...]] = [tuple(s) for s in
+                                         self.feature_sizes()]
+        if self.dense_out is not None:
+            shapes.append((self.dense_out,))
+        return shapes
+
+    def num_layers(self) -> int:
+        return len(self.convs) + (1 if self.dense_out is not None else 0)
+
+
+def classifier_config(aprc: bool, timesteps: int = 24) -> NetConfig:
+    r = 3
+    return NetConfig(
+        name="classifier_aprc" if aprc else "classifier_plain",
+        in_ch=1, in_h=28, in_w=28,
+        convs=(ConvSpec(1, 16, r), ConvSpec(16, 32, r), ConvSpec(32, 8, r)),
+        dense_out=10,
+        pad=r - 1 if aprc else r // 2,
+        vth=1.0,
+        timesteps=timesteps,
+    )
+
+
+def segmenter_config(aprc: bool, timesteps: int = 50) -> NetConfig:
+    r = 3
+    return NetConfig(
+        name="segmenter_aprc" if aprc else "segmenter_plain",
+        in_ch=3, in_h=80, in_w=160,
+        convs=(ConvSpec(3, 8, r), ConvSpec(8, 16, r), ConvSpec(16, 32, r),
+               ConvSpec(32, 32, r), ConvSpec(32, 16, r), ConvSpec(16, 1, r)),
+        dense_out=None,
+        pad=r - 1 if aprc else r // 2,
+        vth=1.0,
+        timesteps=timesteps,
+    )
+
+
+def config_by_name(name: str, timesteps: int | None = None) -> NetConfig:
+    base = {
+        "classifier_aprc": lambda: classifier_config(True),
+        "classifier_plain": lambda: classifier_config(False),
+        "segmenter_aprc": lambda: segmenter_config(True),
+        "segmenter_plain": lambda: segmenter_config(False),
+    }[name]()
+    if timesteps is not None:
+        base = dataclasses.replace(base, timesteps=timesteps)
+    return base
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: NetConfig, key: jax.Array) -> dict:
+    """He-style init. Conv layers are bias-free (keeps the Eq. 5
+    proportionality exact; the paper's Eq. 2 bias is absorbed into the
+    dense layer only)."""
+    params: dict = {"conv": [], "dense": None}
+    for cs in cfg.convs:
+        key, sub = jax.random.split(key)
+        fan_in = cs.cin * cs.r * cs.r
+        w = jax.random.normal(sub, (cs.cout, cs.cin, cs.r, cs.r),
+                              jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        params["conv"].append(w)
+    if cfg.dense_out is not None:
+        key, sub = jax.random.split(key)
+        f = cfg.dense_in()
+        w = jax.random.normal(sub, (cfg.dense_out, f),
+                              jnp.float32) * jnp.sqrt(2.0 / f)
+        params["dense"] = {"w": w, "b": jnp.zeros((cfg.dense_out,),
+                                                  jnp.float32)}
+    return params
+
+
+def filter_magnitudes(params: dict, layer: int) -> jax.Array:
+    """APRC predictor input: the summed elements of each filter of a conv
+    layer — (M,) signed magnitudes (paper §III-B)."""
+    return params["conv"][layer].sum(axis=(1, 2, 3))
+
+
+# --------------------------------------------------------------------------
+# SNN step / scan
+# --------------------------------------------------------------------------
+
+def network_step(params: dict, cfg: NetConfig, s_in: jax.Array,
+                 vmems: tuple[jax.Array, ...], *, use_pallas: bool = True):
+    """One SNN timestep through all layers.
+
+    Returns (per-layer output spikes tuple, new vmems tuple). This is the
+    function AOT-exported for the rust runtime; per-layer spikes are what
+    the cycle-level simulator consumes as its workload trace.
+    """
+    spikes = []
+    new_vmems = []
+    s = s_in
+    for li, w in enumerate(params["conv"]):
+        if use_pallas:
+            s, v = spiking_conv_step(s, w, vmems[li], vth=cfg.vth,
+                                     pad=cfg.pad)
+        else:
+            s, v = kref.spiking_conv_step_ref(s, w, vmems[li], vth=cfg.vth,
+                                              pad=cfg.pad)
+        spikes.append(s)
+        new_vmems.append(v)
+    if cfg.dense_out is not None:
+        d = params["dense"]
+        flat = s.reshape(-1)
+        li = len(params["conv"])
+        if use_pallas:
+            s, v = spiking_dense_step(flat, d["w"], d["b"], vmems[li],
+                                      vth=cfg.vth)
+        else:
+            s, v = kref.spiking_dense_step_ref(flat, d["w"], d["b"],
+                                               vmems[li], vth=cfg.vth)
+        spikes.append(s)
+        new_vmems.append(v)
+    return tuple(spikes), tuple(new_vmems)
+
+
+def init_vmems(cfg: NetConfig) -> tuple[jax.Array, ...]:
+    return tuple(jnp.zeros(s, jnp.float32) for s in cfg.vmem_shapes())
+
+
+def run_snn(params: dict, cfg: NetConfig, spike_train: jax.Array,
+            *, use_pallas: bool = True):
+    """Run T timesteps with lax.scan; returns per-layer spike *counts*
+    (summed over time). spike_train: (T, C, H, W)."""
+
+    def step(vmems, s_in):
+        spikes, new_vmems = network_step(params, cfg, s_in, vmems,
+                                         use_pallas=use_pallas)
+        return new_vmems, spikes
+
+    _, spikes_t = jax.lax.scan(step, init_vmems(cfg), spike_train)
+    return tuple(s.sum(axis=0) for s in spikes_t)
+
+
+# --------------------------------------------------------------------------
+# Input encoding
+# --------------------------------------------------------------------------
+
+def encode_phased(img01: jax.Array, timesteps: int) -> jax.Array:
+    """Deterministic phased rate coding: pixel p in [0,1] emits
+    floor(p*(t+1)) - floor(p*t) spikes at step t, i.e. ~p*T evenly spaced
+    spikes over T steps. Integer-friendly so the rust port in
+    rust/src/snn matches bit-for-bit. Output (T, ...)."""
+    t = jnp.arange(timesteps, dtype=jnp.float32)[
+        (slice(None),) + (None,) * img01.ndim]
+    p = img01[None]
+    return jnp.floor(p * (t + 1.0)) - jnp.floor(p * t)
+
+
+# --------------------------------------------------------------------------
+# ANN twin (training-time only)
+# --------------------------------------------------------------------------
+
+def ann_forward(params: dict, cfg: NetConfig, x: jax.Array,
+                *, collect: bool = False):
+    """ReLU twin of the SNN used for training + threshold-balanced
+    conversion. x: (B, C, H, W) in [0,1]. The final layer is linear
+    (logits / mask scores). When ``collect``, also returns every
+    post-ReLU hidden activation for conversion calibration."""
+    acts = []
+    nconv = len(params["conv"])
+    for li, w in enumerate(params["conv"]):
+        x = jax.vmap(lambda xi, wi=w: kref.conv2d_ref(xi, wi, cfg.pad))(x)
+        last_conv_is_output = cfg.dense_out is None and li == nconv - 1
+        if not last_conv_is_output:
+            x = jax.nn.relu(x)
+            acts.append(x)
+    if cfg.dense_out is not None:
+        d = params["dense"]
+        x = x.reshape(x.shape[0], -1) @ d["w"].T + d["b"]
+    return (x, acts) if collect else x

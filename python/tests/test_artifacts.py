@@ -1,0 +1,70 @@
+"""Build-output contract tests: the artifacts the rust side depends on.
+These run against the artifacts/ directory produced by `make artifacts`
+(they are the python half of the cross-language contract)."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import aot, datasets, model
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ARTIFACTS / "meta.json").exists(),
+    reason="run `make artifacts` first")
+
+VARIANTS = ["classifier_aprc", "classifier_plain", "segmenter_aprc",
+            "segmenter_plain"]
+
+
+def test_meta_lists_all_variants():
+    meta = json.loads((ARTIFACTS / "meta.json").read_text())
+    names = {v["name"] for v in meta["variants"]}
+    assert names == set(VARIANTS)
+
+
+@pytest.mark.parametrize("name", VARIANTS)
+def test_weights_roundtrip(name):
+    loaded = aot.load_weights(ARTIFACTS, name)
+    assert loaded is not None, f"{name} missing"
+    params, meta = loaded
+    cfg = model.config_by_name(name)
+    assert len(params["conv"]) == len(cfg.convs)
+    for w, spec in zip(params["conv"], cfg.convs):
+        assert w.shape == (spec.cout, spec.cin, spec.r, spec.r)
+    if cfg.dense_out is not None:
+        assert params["dense"]["w"].shape == (cfg.dense_out,
+                                              cfg.dense_in())
+    blob = (ARTIFACTS / f"{name}.weights.bin").read_bytes()
+    assert f"{datasets.fnv1a64(blob):016x}" == meta["blob_fnv1a64"]
+
+
+@pytest.mark.parametrize("name", VARIANTS)
+def test_hlo_exports_exist_and_have_no_elided_constants(name):
+    text = (ARTIFACTS / f"{name}.step.hlo.txt").read_text()
+    assert "ENTRY" in text
+    # Elided big constants would silently corrupt the rust runtime.
+    assert "constant({...})" not in text, \
+        "HLO text contains elided constants — weights must be parameters"
+
+
+def test_reported_metrics_meet_paper_claims():
+    meta = json.loads((ARTIFACTS / "meta.json").read_text())
+    by_name = {v["name"]: v for v in meta["variants"]}
+    # Paper claims 98.5% on MNIST; our synthetic split must match it.
+    clf = json.loads(
+        (ARTIFACTS / "classifier_aprc.weights.json").read_text())
+    assert clf["snn_metric"] >= 0.985
+    seg = json.loads(
+        (ARTIFACTS / "segmenter_aprc.weights.json").read_text())
+    assert seg["snn_metric"] >= 0.9  # IoU
+    assert by_name["classifier_aprc"]["timesteps"] == 24
+
+
+def test_encoding_crosscheck_reproducible():
+    meta = json.loads((ARTIFACTS / "meta.json").read_text())
+    again = aot.encoding_crosscheck()
+    assert again == meta["encoding_crosscheck"]

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle — the CORE
+correctness signal. Spikes must match exactly; membrane potentials to f32
+tolerance. Hypothesis sweeps shapes/rates/paddings."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref as kref
+from compile.kernels.spiking_conv import (pick_block_m, spiking_conv_step,
+                                          vmem_bytes_estimate)
+from compile.kernels.spiking_dense import spiking_dense_step
+
+
+def rand_case(key, c, h, w, m, r, pad, rate, vscale=0.3):
+    k1, k2, k3 = jax.random.split(key, 3)
+    spikes = (jax.random.uniform(k1, (c, h, w)) < rate).astype(jnp.float32)
+    weights = jax.random.normal(k2, (m, c, r, r), jnp.float32) * 0.3
+    eh = h + 2 * pad - r + 1
+    ew = w + 2 * pad - r + 1
+    vmem = jax.random.normal(k3, (m, eh, ew), jnp.float32) * vscale
+    return spikes, weights, vmem
+
+
+@pytest.mark.parametrize("pad", [1, 2])
+@pytest.mark.parametrize("shape", [(1, 28, 28, 16), (3, 10, 20, 8),
+                                   (16, 9, 9, 32), (5, 12, 14, 6)])
+def test_conv_matches_ref(pad, shape):
+    c, h, w, m = shape
+    spikes, weights, vmem = rand_case(jax.random.PRNGKey(42), c, h, w, m,
+                                      3, pad, 0.2)
+    os_k, ov_k = spiking_conv_step(spikes, weights, vmem, vth=1.0, pad=pad)
+    os_r, ov_r = kref.spiking_conv_step_ref(spikes, weights, vmem,
+                                            vth=1.0, pad=pad)
+    assert bool((os_k == os_r).all()), "spike mismatch"
+    np.testing.assert_allclose(ov_k, ov_r, atol=1e-5)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    c=st.integers(1, 8),
+    h=st.integers(4, 16),
+    w=st.integers(4, 16),
+    m=st.integers(1, 12),
+    pad=st.sampled_from([1, 2]),
+    rate=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref_hypothesis(c, h, w, m, pad, rate, seed):
+    spikes, weights, vmem = rand_case(jax.random.PRNGKey(seed), c, h, w,
+                                      m, 3, pad, rate)
+    os_k, ov_k = spiking_conv_step(spikes, weights, vmem, vth=1.0, pad=pad)
+    os_r, ov_r = kref.spiking_conv_step_ref(spikes, weights, vmem,
+                                            vth=1.0, pad=pad)
+    assert bool((os_k == os_r).all())
+    np.testing.assert_allclose(ov_k, ov_r, atol=1e-5)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    f=st.integers(1, 200),
+    k=st.integers(1, 16),
+    rate=st.floats(0.0, 1.0),
+    vth=st.sampled_from([0.5, 1.0, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref_hypothesis(f, k, rate, vth, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    spikes = (jax.random.uniform(k1, (f,)) < rate).astype(jnp.float32)
+    w = jax.random.normal(k2, (k, f), jnp.float32) * 0.3
+    b = jax.random.normal(k3, (k,), jnp.float32) * 0.05
+    vmem = jax.random.normal(k4, (k,), jnp.float32) * 0.2
+    os_k, ov_k = spiking_dense_step(spikes, w, b, vmem, vth=vth)
+    os_r, ov_r = kref.spiking_dense_step_ref(spikes, w, b, vmem, vth=vth)
+    assert bool((os_k == os_r).all())
+    np.testing.assert_allclose(ov_k, ov_r, atol=1e-5)
+
+
+def test_reset_by_subtraction():
+    # A neuron driven at 0.6/step with vth=1 fires on steps 2,4,5,7...
+    # (accumulated 0.6,1.2->0.2,0.8,1.4->0.4,1.0->0.0,...).
+    spikes = jnp.ones((1, 1, 1), jnp.float32)
+    w = jnp.full((1, 1, 1, 1), 0.6, jnp.float32)
+    vmem = jnp.zeros((1, 1, 1), jnp.float32)
+    fired = []
+    for _ in range(5):
+        out, vmem = spiking_conv_step(spikes, w, vmem, vth=1.0, pad=0)
+        fired.append(int(out.sum()))
+    assert fired == [0, 1, 0, 1, 1]
+
+
+def test_zero_input_only_bias_acts():
+    f, k = 10, 4
+    spikes = jnp.zeros((f,), jnp.float32)
+    w = jnp.ones((k, f), jnp.float32)
+    b = jnp.array([0.0, 0.5, 1.0, 2.0], jnp.float32)
+    vmem = jnp.zeros((k,), jnp.float32)
+    out, v = spiking_dense_step(spikes, w, b, vmem, vth=1.0)
+    assert out.tolist() == [0.0, 0.0, 1.0, 1.0]
+    np.testing.assert_allclose(v, [0.0, 0.5, 0.0, 1.0], atol=1e-6)
+
+
+def test_pick_block_m_divides():
+    for m in range(1, 65):
+        bm = pick_block_m(m)
+        assert m % bm == 0 and bm <= 8
+
+
+def test_vmem_estimate_within_tpu_budget():
+    # Every layer of both networks must fit a 16 MiB VMEM tile budget.
+    for (c, h, w, m, pad) in [(1, 28, 28, 16, 2), (16, 30, 30, 32, 2),
+                              (32, 32, 32, 8, 2), (3, 80, 160, 8, 2),
+                              (32, 86, 166, 32, 2), (16, 90, 170, 1, 2)]:
+        est = vmem_bytes_estimate(c, h, w, m, 3, pad)
+        assert est < 16 * 2**20, f"{(c, h, w, m)}: {est} bytes"
+
+
+def test_full_conv_eq5_proportionality():
+    """Eq. 5: with full padding, the summed dV of output channel m is
+    exactly sum_c (per-input-channel filter magnitude) x (per-channel
+    spike count) — and when all input channels fire equally, exactly
+    filter_magnitude x spike count."""
+    key = jax.random.PRNGKey(7)
+    spikes, weights, _ = rand_case(key, 4, 8, 8, 6, 3, 2, 0.3, vscale=0.0)
+    vmem = jnp.zeros((6, 10, 10), jnp.float32)  # E = 8 + 2*2 - 3 + 1
+    _, v = spiking_conv_step(spikes, weights, vmem, vth=1e9, pad=2)
+    per_channel_mags = weights.sum(axis=(2, 3))        # (M, C)
+    nnz_c = spikes.sum(axis=(1, 2))                    # (C,)
+    expect = per_channel_mags @ nnz_c
+    np.testing.assert_allclose(v.sum(axis=(1, 2)), expect, rtol=1e-4)
+
+    # Uniform per-channel firing -> the paper's headline form.
+    uniform = jnp.ones((4, 8, 8), jnp.float32)
+    vmem0 = jnp.zeros((6, 10, 10), jnp.float32)
+    _, v2 = spiking_conv_step(uniform, weights, vmem0, vth=1e9, pad=2)
+    mags = weights.sum(axis=(1, 2, 3))
+    np.testing.assert_allclose(v2.sum(axis=(1, 2)), mags * 64.0,
+                               rtol=1e-4)
+
+
+def test_same_pad_breaks_eq5():
+    key = jax.random.PRNGKey(8)
+    spikes = jnp.zeros((1, 8, 8), jnp.float32).at[0, 0, 0].set(1.0)
+    weights = jnp.ones((1, 1, 3, 3), jnp.float32)
+    vmem = jnp.zeros((1, 8, 8), jnp.float32)
+    _, v = spiking_conv_step(spikes, weights, vmem, vth=1e9, pad=1)
+    # Corner spike: only 4 of 9 taps land.
+    assert float(v.sum()) == pytest.approx(4.0)

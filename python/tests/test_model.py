@@ -1,0 +1,115 @@
+"""L2 correctness: network step/scan consistency, geometry, encoding,
+and the APRC (Eq. 5) property at network level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def clf_cfg():
+    return model.classifier_config(aprc=True, timesteps=6)
+
+
+@pytest.fixture(scope="module")
+def clf_params(clf_cfg):
+    return model.init_params(clf_cfg, jax.random.PRNGKey(0))
+
+
+def test_classifier_geometry():
+    cfg = model.classifier_config(aprc=True)
+    assert cfg.feature_sizes() == [(16, 30, 30), (32, 32, 32), (8, 34, 34)]
+    assert cfg.dense_in() == 8 * 34 * 34
+    cfg_p = model.classifier_config(aprc=False)
+    assert cfg_p.feature_sizes() == [(16, 28, 28), (32, 28, 28),
+                                     (8, 28, 28)]
+
+
+def test_segmenter_geometry():
+    cfg = model.segmenter_config(aprc=True)
+    sizes = cfg.feature_sizes()
+    assert sizes[0] == (8, 82, 162)
+    assert sizes[-1] == (1, 92, 172)
+    assert cfg.dense_out is None
+    assert cfg.num_layers() == 6
+
+
+def test_step_pallas_equals_ref(clf_cfg, clf_params):
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, 28, 28))
+    s_in = model.encode_phased(x, clf_cfg.timesteps)[0]
+    vmems = model.init_vmems(clf_cfg)
+    sp, vp = model.network_step(clf_params, clf_cfg, s_in, vmems,
+                                use_pallas=True)
+    sr, vr = model.network_step(clf_params, clf_cfg, s_in, vmems,
+                                use_pallas=False)
+    for a, b in zip(sp, sr):
+        assert bool((a == b).all())
+    for a, b in zip(vp, vr):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_scan_accumulates_steps(clf_cfg, clf_params):
+    """run_snn's scan must equal manually chaining network_step."""
+    x = jax.random.uniform(jax.random.PRNGKey(2), (1, 28, 28))
+    train = model.encode_phased(x, clf_cfg.timesteps)
+    counts = model.run_snn(clf_params, clf_cfg, train, use_pallas=False)
+
+    vmems = model.init_vmems(clf_cfg)
+    manual = [jnp.zeros(s) for s in clf_cfg.vmem_shapes()]
+    totals = [jnp.zeros(s) for s in clf_cfg.vmem_shapes()]
+    for t in range(clf_cfg.timesteps):
+        spikes, vmems = model.network_step(clf_params, clf_cfg, train[t],
+                                           vmems, use_pallas=False)
+        totals = [tot + s for tot, s in zip(totals, spikes)]
+    for a, b in zip(counts, totals):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_encode_phased_rate():
+    img = jnp.array([[0.0, 0.25], [0.5, 1.0]])[None]
+    train = model.encode_phased(img, 8)
+    counts = train.sum(axis=0)[0]
+    np.testing.assert_allclose(counts, [[0, 2], [4, 8]])
+    # Binary.
+    assert bool(jnp.isin(train, jnp.array([0.0, 1.0])).all())
+
+
+def test_filter_magnitudes(clf_params):
+    mags = model.filter_magnitudes(clf_params, 0)
+    assert mags.shape == (16,)
+    expect = clf_params["conv"][0].sum(axis=(1, 2, 3))
+    np.testing.assert_allclose(mags, expect)
+
+
+def test_ann_forward_shapes(clf_cfg, clf_params):
+    x = jax.random.uniform(jax.random.PRNGKey(3), (2, 1, 28, 28))
+    logits, acts = model.ann_forward(clf_params, clf_cfg, x, collect=True)
+    assert logits.shape == (2, 10)
+    assert len(acts) == 3
+    assert all(bool((a >= 0).all()) for a in acts), "post-ReLU"
+
+
+def test_network_eq5_property(clf_cfg, clf_params):
+    """First layer of the APRC net: summed dV per output channel equals
+    magnitude x input spike count (before any reset)."""
+    x = jax.random.uniform(jax.random.PRNGKey(4), (1, 28, 28))
+    s_in = model.encode_phased(x, 4)[1]
+    from compile.kernels.spiking_conv import spiking_conv_step
+    vmem = jnp.zeros((16, 30, 30), jnp.float32)
+    _, v = spiking_conv_step(s_in, clf_params["conv"][0], vmem,
+                             vth=1e9, pad=clf_cfg.pad)
+    mags = model.filter_magnitudes(clf_params, 0)
+    np.testing.assert_allclose(v.sum(axis=(1, 2)), mags * s_in.sum(),
+                               rtol=1e-4)
+
+
+def test_config_by_name_roundtrip():
+    for name in ["classifier_aprc", "classifier_plain", "segmenter_aprc",
+                 "segmenter_plain"]:
+        cfg = model.config_by_name(name)
+        assert cfg.name == name
+    cfg = model.config_by_name("classifier_aprc", timesteps=7)
+    assert cfg.timesteps == 7

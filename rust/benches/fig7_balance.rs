@@ -1,0 +1,27 @@
+//! Fig. 7 regeneration as a benchmark: measures how fast the simulator
+//! reproduces the balance-ratio experiment (all four configurations on a
+//! segmentation frame) and prints the resulting ratios — the bench
+//! doubles as the figure's data source.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use skydiver::experiments::{fig7, ExperimentCtx};
+
+fn main() {
+    let mut ctx = ExperimentCtx::new(skydiver::artifacts_dir());
+    ctx.frames = 1;
+    let it = if harness::quick() { 1 } else { 3 };
+    let mut last = None;
+    bench("fig7 (4 configs x 2 nets, 1 frame)", 0, it, || {
+        last = Some(fig7::run(&ctx).expect("artifacts built"));
+    });
+    if let Some(res) = last {
+        println!("\nseg averages: {:?}",
+                 res.segmenter.iter()
+                     .map(|c| format!("{}={:.1}%", c.label,
+                                      100.0 * c.average_balance))
+                     .collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,59 @@
+//! Tiny benchmark harness (the build is offline — no criterion).
+//! Measures wall time over warmup + timed iterations and prints
+//! mean / p50 / p95 per iteration plus derived throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!("{:<44} iters={:<4} mean={:>12?} p50={:>12?} p95={:>12?}",
+                 self.name, self.iters, self.mean, self.p50, self.p95);
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize,
+                mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+    };
+    r.print();
+    r
+}
+
+/// `--quick` on the command line shrinks iteration counts (CI).
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+#[allow(dead_code)]
+fn main() {
+    unreachable!("harness is included by the bench binaries");
+}

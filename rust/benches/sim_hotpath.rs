@@ -1,0 +1,91 @@
+//! Microbenchmarks of the simulator hot path (DESIGN.md §8 L3):
+//! spike-map construction, event iteration, per-layer timing, and a full
+//! functional frame of each network.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use skydiver::coordinator::default_input_rates;
+use skydiver::data::SplitMix64;
+use skydiver::schedule::cbws::Cbws;
+use skydiver::schedule::{AprcPredictor, Scheduler};
+use skydiver::sim::{layer_timing, ArchConfig, Simulator, TraceSource};
+use skydiver::snn::{encode_phased_u8, FunctionalNet, NetworkWeights,
+                    SpikeMap};
+
+fn rand_map(rng: &mut SplitMix64, c: usize, h: usize, w: usize,
+            rate_pct: u64) -> SpikeMap {
+    let mut m = SpikeMap::zeros(c, h, w);
+    for ch in 0..c {
+        for i in 0..h * w {
+            if rng.next_below(100) < rate_pct {
+                m.set(ch, i);
+            }
+        }
+    }
+    m
+}
+
+fn main() {
+    let (wu, it) = if harness::quick() { (1, 10) } else { (3, 50) };
+    let mut rng = SplitMix64::new(0xBE7C);
+
+    // Event iteration at segmentation-layer scale (32ch, 88x168, 8%).
+    let map = rand_map(&mut rng, 32, 88, 168, 8);
+    bench("iter_events 32x88x168 @8%", wu, it * 10, || {
+        map.iter_events().count()
+    });
+    bench("nnz_per_channel 32x88x168", wu, it * 10, || {
+        map.nnz_per_channel()
+    });
+
+    // Timing-model kernel.
+    let arch = ArchConfig::default();
+    let layer = skydiver::snn::LayerWeights::Conv {
+        geom: skydiver::snn::ConvGeom {
+            cin: 32, cout: 32, r: 3, pad: 2, h: 86, w: 166,
+            eh: 88, ew: 168 },
+        w: vec![],
+    };
+    let pred = vec![1.0; 32];
+    let part = Cbws::default().assign(&pred, 8);
+    let nnz = map.nnz_per_channel();
+    bench("layer_timing conv32->32", wu, it * 100, || {
+        layer_timing(&arch, &layer, &part, &nnz)
+    });
+
+    // Full functional frames on the trained networks (if built).
+    let dir = skydiver::artifacts_dir();
+    if let Ok(net) = NetworkWeights::load(&dir, "classifier_aprc") {
+        let (imgs, _) = skydiver::data::gen_digits(1, 1);
+        let inputs = encode_phased_u8(&imgs[..784], 1, 28, 28,
+                                      net.meta.timesteps);
+        bench("functional frame classifier (T=24)", wu, it, || {
+            FunctionalNet::new(&net).run_frame_counts(&inputs)
+        });
+        let rates = default_input_rates(&net);
+        let predictor = AprcPredictor::from_network(&net, &rates);
+        let sim = Simulator::new(arch, &net, &Cbws::default(), &predictor);
+        bench("sim frame classifier (functional trace)", wu, it, || {
+            sim.run_frame(&inputs, &TraceSource::Functional).unwrap()
+        });
+    }
+    if let Ok(net) = NetworkWeights::load(&dir, "segmenter_aprc") {
+        let (imgs, _) = skydiver::data::gen_road_scenes(1, 1);
+        let (h, w) = (skydiver::data::ROAD_H, skydiver::data::ROAD_W);
+        let mut chw = vec![0u8; 3 * h * w];
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..3 {
+                    chw[c * h * w + y * w + x] = imgs[(y * w + x) * 3 + c];
+                }
+            }
+        }
+        let inputs = encode_phased_u8(&chw, 3, h, w, net.meta.timesteps);
+        let seg_it = if harness::quick() { 3 } else { 10 };
+        bench("functional frame segmenter (T=50)", 1, seg_it, || {
+            FunctionalNet::new(&net).run_frame_counts(&inputs)
+        });
+    }
+}

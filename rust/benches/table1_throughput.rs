@@ -1,0 +1,27 @@
+//! Table I regeneration as a benchmark: end-to-end simulated frames of
+//! both tasks (encode -> functional trace -> cycle model -> energy),
+//! printing the paper-table rows and the wall-clock cost of producing
+//! them.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use skydiver::experiments::{table1, ExperimentCtx};
+
+fn main() {
+    let mut ctx = ExperimentCtx::new(skydiver::artifacts_dir());
+    ctx.frames = if harness::quick() { 2 } else { 4 };
+    let it = if harness::quick() { 1 } else { 3 };
+    let mut last = None;
+    bench("table1 (classif + seg rows)", 0, it, || {
+        last = Some(table1::run(&ctx).expect("artifacts built"));
+    });
+    if let Some(res) = last {
+        for row in &res.rows {
+            println!("{}: {:.1} FPS, {:.3} GSOp/s, {:.1} uJ/frame",
+                     row.task, row.fps, row.gsops,
+                     row.energy_per_frame_j * 1e6);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! vLLM-router-shaped: an async front end accepts frames, a batcher
+//! groups them (amortising DMA setup like the paper's host-managed
+//! transfers), a round-robin router dispatches batches to a pool of
+//! worker threads, each owning a full pipeline (its own PJRT client when
+//! golden traces are requested + a configured [`Simulator`]). PJRT
+//! handles are constructed *inside* each worker thread, so no Send/Sync
+//! requirements leak out of the `xla` crate.
+
+mod service;
+mod stats;
+pub mod worker;
+
+pub use service::{Service, ServiceConfig};
+pub use stats::{ServingReport, Stats};
+pub use worker::{default_input_rates, Policy, Request, Response,
+                 WorkerConfig};

@@ -1,0 +1,146 @@
+//! The service: submission queue + batcher + round-robin router over a
+//! worker-thread pool (std-only; the build is offline).
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::stats::{ServingReport, Stats};
+use super::worker::{worker_loop, Request, Response, WorkerConfig};
+
+/// Coordinator-level knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    /// Max frames per dispatched batch.
+    pub batch_max: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub batch_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            batch_max: 8,
+            batch_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A running service instance.
+pub struct Service {
+    submit_tx: mpsc::Sender<Request>,
+    resp_rx: mpsc::Receiver<Response>,
+    handles: Vec<thread::JoinHandle<Result<()>>>,
+    batcher_handle: Option<thread::JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Service {
+    /// Spawn workers + batcher. Each worker builds its own pipeline
+    /// (PJRT client included) inside its thread.
+    pub fn start(cfg: ServiceConfig, wcfg: WorkerConfig) -> Result<Self> {
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let mut worker_txs = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel::<Vec<Request>>();
+            worker_txs.push(tx);
+            let wc = wcfg.clone();
+            let rt = resp_tx.clone();
+            handles.push(thread::Builder::new()
+                .name(format!("skydiver-worker-{i}"))
+                .spawn(move || worker_loop(i, wc, rx, rt))?);
+        }
+        drop(resp_tx);
+
+        // Batcher: drain the submission queue, group, round-robin
+        // dispatch to the worker pool.
+        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+        let batch_max = cfg.batch_max;
+        let batch_wait = cfg.batch_wait;
+        let batcher_handle = thread::Builder::new()
+            .name("skydiver-batcher".into())
+            .spawn(move || {
+                let mut next = 0usize;
+                'outer: loop {
+                    // Block for the first request of a batch.
+                    let Ok(first) = submit_rx.recv() else {
+                        break 'outer;
+                    };
+                    let mut batch = vec![first];
+                    let deadline = Instant::now() + batch_wait;
+                    while batch.len() < batch_max {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match submit_rx.recv_timeout(deadline - now) {
+                            Ok(r) => batch.push(r),
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                let _ = worker_txs[next].send(batch);
+                                break 'outer;
+                            }
+                        }
+                    }
+                    if worker_txs[next].send(batch).is_err() {
+                        break 'outer;
+                    }
+                    next = (next + 1) % worker_txs.len();
+                }
+                // Dropping worker_txs closes the pool.
+            })?;
+
+        Ok(Self {
+            submit_tx,
+            resp_rx,
+            handles,
+            batcher_handle: Some(batcher_handle),
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit one frame (non-blocking).
+    pub fn submit(&self, id: u64, pixels: Vec<u8>) -> Result<()> {
+        self.submit_tx.send(Request {
+            id,
+            pixels,
+            submitted: Instant::now(),
+        })?;
+        Ok(())
+    }
+
+    /// Collect exactly `n` responses (blocking), then return stats.
+    pub fn collect(&self, n: usize, clock_hz: f64)
+                   -> Result<(Vec<Response>, ServingReport)> {
+        let mut stats = Stats::default();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let r = self.resp_rx.recv()?;
+            stats.record(&r);
+            out.push(r);
+        }
+        let report = stats.report(self.started.elapsed().as_secs_f64(),
+                                  clock_hz);
+        Ok((out, report))
+    }
+
+    /// Shut down: close the queue and join all threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        drop(self.submit_tx);
+        if let Some(b) = self.batcher_handle.take() {
+            let _ = b.join();
+        }
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("worker panicked"),
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving statistics collection.
+
+
+
+use crate::metrics::percentile;
+
+use super::worker::Response;
+
+/// Online accumulator for responses.
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    latencies_us: Vec<u64>,
+    sim_cycles: Vec<u64>,
+    energy_j: f64,
+    per_worker: Vec<u64>,
+}
+
+impl Stats {
+    pub fn record(&mut self, r: &Response) {
+        self.latencies_us.push(r.latency_us);
+        self.sim_cycles.push(r.sim_cycles);
+        self.energy_j += r.energy_j;
+        if self.per_worker.len() <= r.worker {
+            self.per_worker.resize(r.worker + 1, 0);
+        }
+        self.per_worker[r.worker] += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    /// Final report; `wall_secs` is the makespan of the run.
+    pub fn report(&self, wall_secs: f64, clock_hz: f64) -> ServingReport {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_unstable();
+        let n = self.count().max(1);
+        let sim_total: u64 = self.sim_cycles.iter().sum();
+        ServingReport {
+            frames: self.count(),
+            wall_secs,
+            served_fps: self.count() as f64 / wall_secs.max(1e-9),
+            p50_us: percentile(&lat, 50.0),
+            p95_us: percentile(&lat, 95.0),
+            p99_us: percentile(&lat, 99.0),
+            mean_sim_cycles: sim_total as f64 / n as f64,
+            sim_fps: clock_hz / (sim_total as f64 / n as f64),
+            mean_energy_uj: self.energy_j * 1e6 / n as f64,
+            per_worker: self.per_worker.clone(),
+        }
+    }
+}
+
+/// Summary of a serving run: wall-clock (host) and simulated
+/// (accelerator) views.
+#[derive(Debug, Clone, Default)]
+pub struct ServingReport {
+    pub frames: usize,
+    pub wall_secs: f64,
+    /// Host serving throughput (frames/s of the whole coordinator).
+    pub served_fps: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    /// Mean simulated accelerator cycles per frame.
+    pub mean_sim_cycles: f64,
+    /// Simulated accelerator FPS (the paper's Table I metric).
+    pub sim_fps: f64,
+    pub mean_energy_uj: f64,
+    pub per_worker: Vec<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn stats_aggregate() {
+        let mut s = Stats::default();
+        for i in 0..10u64 {
+            s.record(&Response {
+                id: i,
+                output_counts: vec![],
+                sim_cycles: 1000 + i,
+                energy_j: 1e-6,
+                latency_us: 100 * (i + 1),
+                worker: (i % 2) as usize,
+            });
+        }
+        let _ = Instant::now();
+        let r = s.report(1.0, 200e6);
+        assert_eq!(r.frames, 10);
+        assert_eq!(r.per_worker, vec![5, 5]);
+        assert!((r.mean_energy_uj - 1.0).abs() < 1e-9);
+        assert!(r.p99_us >= r.p50_us);
+        assert!((r.served_fps - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,188 @@
+//! Worker: one thread owning a complete inference pipeline.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::power::{EnergyModel, ResourceModel};
+use crate::runtime::{Runtime, SnnRunner};
+use crate::schedule::cbws::Cbws;
+use crate::schedule::{baselines, Scheduler};
+use crate::sim::{ArchConfig, Simulator, TraceSource};
+use crate::snn::{encode_phased_u8, NetKind, NetworkWeights};
+
+/// One inference request: a raw image frame.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// u8 pixels, channel-major (C, H, W) flattened.
+    pub pixels: Vec<u8>,
+    pub submitted: Instant,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Output spike counts (argmax = class for the classifier;
+    /// thresholded = mask for the segmenter).
+    pub output_counts: Vec<u32>,
+    /// Simulated accelerator cycles for this frame.
+    pub sim_cycles: u64,
+    /// Simulated energy (J).
+    pub energy_j: f64,
+    /// Wall-clock service latency in microseconds.
+    pub latency_us: u64,
+    /// Worker that served it.
+    pub worker: usize,
+}
+
+/// Scheduling policy selector (serde-friendly mirror of the zoo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Contiguous,
+    RoundRobin,
+    Random,
+    SparTen,
+    Cbws,
+}
+
+impl Policy {
+    pub fn build(self) -> Box<dyn Scheduler> {
+        match self {
+            Policy::Contiguous => Box::new(baselines::Contiguous),
+            Policy::RoundRobin => Box::new(baselines::RoundRobin),
+            Policy::Random => Box::new(baselines::Random { seed: 0x5EED }),
+            Policy::SparTen => Box::new(baselines::SparTen),
+            Policy::Cbws => Box::new(Cbws::default()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "contiguous" => Policy::Contiguous,
+            "round_robin" | "roundrobin" => Policy::RoundRobin,
+            "random" => Policy::Random,
+            "sparten" => Policy::SparTen,
+            "cbws" => Policy::Cbws,
+            _ => return None,
+        })
+    }
+}
+
+/// Static configuration a worker thread builds its pipeline from.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub artifacts: PathBuf,
+    pub kind: NetKind,
+    pub aprc: bool,
+    pub policy: Policy,
+    pub arch: ArchConfig,
+    pub energy: EnergyModel,
+    /// Drive the simulator from PJRT golden traces (true) or the
+    /// functional model (false, no PJRT needed).
+    pub use_runtime: bool,
+    /// Override timesteps (default: weights meta).
+    pub timesteps: Option<usize>,
+}
+
+impl WorkerConfig {
+    pub fn variant_name(&self) -> &'static str {
+        self.kind.variant_name(self.aprc)
+    }
+}
+
+/// Runs inside the worker thread: build pipeline, serve until the
+/// channel closes.
+pub fn worker_loop(idx: usize, cfg: WorkerConfig,
+                   rx: mpsc::Receiver<Vec<Request>>,
+                   tx: mpsc::Sender<Response>) -> Result<()> {
+    let net = NetworkWeights::load(&cfg.artifacts, cfg.variant_name())?;
+    let rates = default_input_rates(&net);
+    let predictor =
+        crate::schedule::AprcPredictor::from_network(&net, &rates);
+    let scheduler = cfg.policy.build();
+    let sim = Simulator::new(cfg.arch, &net, scheduler.as_ref(),
+                             &predictor);
+    let timesteps = cfg.timesteps.unwrap_or(net.meta.timesteps);
+
+    // PJRT client lives entirely inside this thread.
+    let runtime = if cfg.use_runtime {
+        Some(Runtime::cpu()?)
+    } else {
+        None
+    };
+    let step = match &runtime {
+        Some(rt) => Some(rt.load_step(&cfg.artifacts, &net)?),
+        None => None,
+    };
+
+    let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
+                     net.meta.in_shape[2]);
+    while let Ok(batch) = rx.recv() {
+        for req in batch {
+            let inputs = encode_phased_u8(&req.pixels, c, h, w, timesteps);
+            let trace = match &step {
+                Some(s) => {
+                    let mut runner = SnnRunner::new(s)?;
+                    TraceSource::Golden(runner.run_frame(&inputs)?)
+                }
+                None => TraceSource::Functional,
+            };
+            let report = sim.run_frame(&inputs, &trace)?;
+            let energy = cfg.energy.frame_energy(&report,
+                                                 cfg.arch.clock_hz);
+            let resp = Response {
+                id: req.id,
+                output_counts: report.output_counts.clone(),
+                sim_cycles: report.total_cycles,
+                energy_j: energy.total_j,
+                latency_us: req.submitted.elapsed().as_micros() as u64,
+                worker: idx,
+            };
+            if tx.send(resp).is_err() {
+                return Ok(()); // collector gone; shut down
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Offline input-rate profile for the APRC predictor's first layer: mean
+/// channel rates over a small calibration batch of the matching dataset.
+pub fn default_input_rates(net: &NetworkWeights) -> Vec<f64> {
+    let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
+                     net.meta.in_shape[2]);
+    let t = net.meta.timesteps;
+    let images: Vec<Vec<f32>> = if c == 1 {
+        let (imgs, _) = crate::data::gen_digits(0xCA11B, 8);
+        imgs.chunks(h * w)
+            .map(|ch| ch.iter().map(|&v| v as f32 / 255.0).collect())
+            .collect()
+    } else {
+        let (imgs, _) = crate::data::gen_road_scenes(0xCA11B, 4);
+        // HWC u8 -> CHW f32
+        imgs.chunks(h * w * 3)
+            .map(|img| {
+                let mut out = vec![0.0f32; 3 * h * w];
+                for y in 0..h {
+                    for x in 0..w {
+                        for ch in 0..3 {
+                            out[ch * h * w + y * w + x] =
+                                img[(y * w + x) * 3 + ch] as f32 / 255.0;
+                        }
+                    }
+                }
+                out
+            })
+            .collect()
+    };
+    crate::schedule::aprc::profile_input_rates(&images, c, h, w, t)
+}
+
+/// `ResourceModel` sanity check exposed for the service banner.
+pub fn fits_device(arch: &ArchConfig) -> bool {
+    ResourceModel::default().estimate(arch).fits_xc7z045()
+}

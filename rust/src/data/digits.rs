@@ -1,0 +1,133 @@
+//! Synthetic digit glyphs — the MNIST substitute (DESIGN.md §2).
+//!
+//! Exact port of `datasets.gen_digit(s)`: seven-segment-style strokes with
+//! integer affine jitter, per-segment wobble, brightness variation and
+//! additive noise. Stream structure per image: 4 header draws + 2 wobble
+//! draws per segment + 784 noise draws.
+
+use super::SplitMix64;
+
+pub const DIGIT_H: usize = 28;
+pub const DIGIT_W: usize = 28;
+
+/// (y0, x0, y1, x1) endpoints of the seven segments A..G.
+const SEG_COORDS: [(i64, i64, i64, i64); 7] = [
+    (4, 9, 4, 19),    // A (top)
+    (4, 19, 13, 19),  // B (top right)
+    (13, 19, 23, 19), // C (bottom right)
+    (23, 9, 23, 19),  // D (bottom)
+    (13, 9, 23, 9),   // E (bottom left)
+    (4, 9, 13, 9),    // F (top left)
+    (13, 9, 13, 19),  // G (middle)
+];
+
+/// Segment indices (into `SEG_COORDS`) per digit 0..9.
+const DIGIT_SEGMENTS: [&[usize]; 10] = [
+    &[0, 1, 2, 3, 4, 5],    // 0: ABCDEF
+    &[1, 2],                // 1: BC
+    &[0, 1, 6, 4, 3],       // 2: ABGED
+    &[0, 1, 6, 2, 3],       // 3: ABGCD
+    &[5, 6, 1, 2],          // 4: FGBC
+    &[0, 5, 6, 2, 3],       // 5: AFGCD
+    &[0, 5, 6, 4, 2, 3],    // 6: AFGECD
+    &[0, 1, 2],             // 7: ABC
+    &[0, 1, 2, 3, 4, 5, 6], // 8: ABCDEFG
+    &[0, 1, 2, 3, 5, 6],    // 9: ABCDFG
+];
+
+fn draw_thick_line(img: &mut [i64; DIGIT_H * DIGIT_W], y0: i64, x0: i64,
+                   y1: i64, x1: i64, thickness: i64, value: i64) {
+    let (h, w) = (DIGIT_H as i64, DIGIT_W as i64);
+    let t0 = -(thickness / 2);
+    let t1 = thickness / 2 + (thickness & 1);
+    if y0 == y1 {
+        for x in x0.min(x1)..=x0.max(x1) {
+            for dy in t0..t1 {
+                let y = y0 + dy;
+                if (0..h).contains(&y) && (0..w).contains(&x) {
+                    let p = &mut img[(y * w + x) as usize];
+                    *p = (*p).max(value);
+                }
+            }
+        }
+    } else {
+        for y in y0.min(y1)..=y0.max(y1) {
+            for dx in t0..t1 {
+                let x = x0 + dx;
+                if (0..h).contains(&y) && (0..w).contains(&x) {
+                    let p = &mut img[(y * w + x) as usize];
+                    *p = (*p).max(value);
+                }
+            }
+        }
+    }
+}
+
+/// Render one 28x28 u8 glyph for `label`, consuming the documented PRNG
+/// stream from `rng`.
+pub fn gen_digit(rng: &mut SplitMix64, label: usize) -> [u8; DIGIT_H * DIGIT_W] {
+    let mut img = [0i64; DIGIT_H * DIGIT_W];
+    let dy = rng.next_range(-2, 2);
+    let dx = rng.next_range(-3, 3);
+    let thickness = rng.next_range(2, 3);
+    let brightness = rng.next_range(170, 255);
+    for &seg in DIGIT_SEGMENTS[label] {
+        let (y0, x0, y1, x1) = SEG_COORDS[seg];
+        let wy = rng.next_range(-1, 1);
+        let wx = rng.next_range(-1, 1);
+        draw_thick_line(&mut img, y0 + dy + wy, x0 + dx + wx, y1 + dy + wy,
+                        x1 + dx + wx, thickness, brightness);
+    }
+    let mut out = [0u8; DIGIT_H * DIGIT_W];
+    for i in 0..DIGIT_H * DIGIT_W {
+        let n = rng.next_below(36) as i64;
+        out[i] = (img[i] + n).min(255) as u8;
+    }
+    out
+}
+
+/// Generate `count` images with PRNG-chosen labels.
+/// Returns (images flattened `count*784`, labels).
+pub fn gen_digits(seed: u64, count: usize) -> (Vec<u8>, Vec<u8>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut imgs = Vec::with_capacity(count * DIGIT_H * DIGIT_W);
+    let mut labels = Vec::with_capacity(count);
+    for _ in 0..count {
+        let label = rng.next_below(10) as usize;
+        labels.push(label as u8);
+        imgs.extend_from_slice(&gen_digit(&mut rng, label));
+    }
+    (imgs, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, la) = gen_digits(1, 4);
+        let (b, lb) = gen_digits(1, 4);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn glyphs_nonempty_and_bounded() {
+        let (imgs, labels) = gen_digits(3, 20);
+        for i in 0..20 {
+            let img = &imgs[i * 784..(i + 1) * 784];
+            let bright = img.iter().filter(|&&v| v > 100).count();
+            assert!(bright > 20, "label {} too sparse", labels[i]);
+            assert!(bright < 500, "label {} too dense", labels[i]);
+        }
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let (_, labels) = gen_digits(5, 200);
+        for d in 0..10u8 {
+            assert!(labels.contains(&d), "digit {d} missing");
+        }
+    }
+}

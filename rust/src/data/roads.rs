@@ -1,0 +1,117 @@
+//! Synthetic road scenes — the MLND-Capstone driving-video substitute.
+//!
+//! Exact port of `datasets.gen_road_scene(s)`: perspective road polygon
+//! from a jittered vanishing point, dashed centre lane marking, sky
+//! gradient and grass/road noise. Stream structure per scene: 10 header
+//! draws then exactly one draw per pixel in (y, x) order.
+
+use super::SplitMix64;
+
+pub const ROAD_H: usize = 80;
+pub const ROAD_W: usize = 160;
+
+/// One scene. Returns (rgb `H*W*3`, mask `H*W` in {0,1}).
+pub fn gen_road_scene(rng: &mut SplitMix64) -> (Vec<u8>, Vec<u8>) {
+    let (h, w) = (ROAD_H as i64, ROAD_W as i64);
+    let mut img = vec![0i64; (h * w * 3) as usize];
+    let mut mask = vec![0u8; (h * w) as usize];
+
+    let horizon = rng.next_range(20, 30);
+    let vx = rng.next_range(60, 100);
+    let bl = rng.next_range(10, 40);
+    let br = rng.next_range(120, 150);
+    let sky_r = rng.next_range(90, 140);
+    let sky_g = rng.next_range(130, 180);
+    let sky_b = rng.next_range(190, 240);
+    let grass_g = rng.next_range(100, 150);
+    let road_gray = rng.next_range(90, 130);
+    let dash_phase = rng.next_below(12) as i64;
+
+    let denom = (h - 1) - horizon;
+    for y in 0..h {
+        if y < horizon {
+            let fade = (horizon - y) * 40 / horizon;
+            for x in 0..w {
+                let n = rng.next_below(8) as i64;
+                let i = ((y * w + x) * 3) as usize;
+                img[i] = sky_r - fade + n;
+                img[i + 1] = sky_g - fade + n;
+                img[i + 2] = sky_b - fade / 2 + n;
+            }
+        } else {
+            let t = y - horizon;
+            // div_euclid = python floor division (numerators go negative).
+            let le = vx + ((bl - vx) * t).div_euclid(denom);
+            let re = vx + ((br - vx) * t).div_euclid(denom);
+            let cx = vx + (((bl + br).div_euclid(2) - vx) * t)
+                .div_euclid(denom);
+            let lane_w = 1 + t * 3 / denom;
+            let dash_on = ((y + dash_phase) / 6) % 2 == 0;
+            for x in 0..w {
+                let n = rng.next_below(16) as i64;
+                let i = ((y * w + x) * 3) as usize;
+                if x >= le && x <= re {
+                    mask[(y * w + x) as usize] = 1;
+                    let mut v = road_gray + n;
+                    if dash_on && (x - cx).abs() <= lane_w {
+                        v = 220 + n;
+                    }
+                    if x == le || x == re {
+                        v = 200 + n;
+                    }
+                    img[i] = v;
+                    img[i + 1] = v;
+                    img[i + 2] = v;
+                } else {
+                    img[i] = 60 + n;
+                    img[i + 1] = grass_g + n;
+                    img[i + 2] = 40 + n;
+                }
+            }
+        }
+    }
+    let rgb = img.iter().map(|&v| v.clamp(0, 255) as u8).collect();
+    (rgb, mask)
+}
+
+/// `count` scenes. Returns (rgb `count*H*W*3`, masks `count*H*W`).
+pub fn gen_road_scenes(seed: u64, count: usize) -> (Vec<u8>, Vec<u8>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut imgs = Vec::with_capacity(count * ROAD_H * ROAD_W * 3);
+    let mut masks = Vec::with_capacity(count * ROAD_H * ROAD_W);
+    for _ in 0..count {
+        let (i, m) = gen_road_scene(&mut rng);
+        imgs.extend_from_slice(&i);
+        masks.extend_from_slice(&m);
+    }
+    (imgs, masks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, ma) = gen_road_scenes(2, 2);
+        let (b, mb) = gen_road_scenes(2, 2);
+        assert_eq!(a, b);
+        assert_eq!(ma, mb);
+    }
+
+    #[test]
+    fn mask_is_perspective_wedge() {
+        let mut rng = SplitMix64::new(11);
+        let (_, mask) = gen_road_scene(&mut rng);
+        // Road fraction grows towards the bottom of the frame.
+        let row_frac = |y: usize| -> usize {
+            mask[y * ROAD_W..(y + 1) * ROAD_W].iter()
+                .map(|&v| v as usize).sum()
+        };
+        assert_eq!(row_frac(0), 0, "sky has no road");
+        assert!(row_frac(ROAD_H - 1) > row_frac(40));
+        let total: usize = mask.iter().map(|&v| v as usize).sum();
+        let frac = total as f64 / (ROAD_H * ROAD_W) as f64;
+        assert!((0.05..0.6).contains(&frac), "road fraction {frac}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Ablations DESIGN.md §5 calls out:
+//!
+//! * SPE count N in {2, 4, 8, 16} x scheduler zoo — balance + FPS
+//!   (+ whether the configuration still fits the XC7Z045);
+//! * CBWS fine-tune iteration budget T_ft in {0, 4, 64};
+//! * timestep count T sensitivity for the classifier.
+
+use anyhow::Result;
+
+
+use super::common::{classifier_frames, segmenter_frames, ExperimentCtx};
+use crate::coordinator::default_input_rates;
+use crate::metrics::Table;
+use crate::power::ResourceModel;
+use crate::schedule::cbws::{cbws_assign, Cbws};
+use crate::schedule::{all_schedulers, AprcPredictor, Partition,
+                      Scheduler};
+use crate::sim::{ArchConfig, RunSummary, Simulator, TraceSource};
+use crate::snn::NetworkWeights;
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub scheduler: String,
+    pub n_spes: usize,
+    pub balance: f64,
+    pub fps: f64,
+    pub fits_device: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct FinetunePoint {
+    pub iters: usize,
+    pub balance: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct AblationResult {
+    pub spe_sweep: Vec<SweepPoint>,
+    pub finetune: Vec<FinetunePoint>,
+    pub oracle_balance: f64,
+}
+
+pub fn run(ctx: &ExperimentCtx) -> Result<AblationResult> {
+    let net = NetworkWeights::load(&ctx.artifacts, "segmenter_aprc")?;
+    let (trains, _) = segmenter_frames(0xAB1A, ctx.frames_or(1),
+                                       net.meta.timesteps);
+    let rates = default_input_rates(&net);
+    let predictor = AprcPredictor::from_network(&net, &rates);
+    let rm = ResourceModel::default();
+
+    let mut spe_sweep = Vec::new();
+    for n in [2usize, 4, 8, 16] {
+        let mut arch = ArchConfig::default();
+        arch.n_spes = n;
+        for s in all_schedulers() {
+            let sim = Simulator::new(arch, &net, s.as_ref(), &predictor);
+            let frames: Vec<_> = trains.iter()
+                .map(|t| sim.run_frame(t, &TraceSource::Functional))
+                .collect::<Result<_>>()?;
+            let sum = RunSummary::from_frames(&frames, arch.clock_hz, n);
+            spe_sweep.push(SweepPoint {
+                scheduler: s.name().into(),
+                n_spes: n,
+                balance: sum.mean_balance_weighted,
+                fps: sum.mean_fps,
+                fits_device: rm.estimate(&arch).fits_xc7z045(),
+            });
+        }
+    }
+
+    // Fine-tune budget: measured directly on one timestep's workload.
+    let arch = ArchConfig::default();
+    // Use the actual spike counts of a mid-network layer as workload.
+    let mut f = crate::snn::FunctionalNet::new(&net);
+    let outs = f.run_frame(&trains[0]);
+    let mid = 2usize;
+    let workload: Vec<f64> = (0..net.layer_input_shape(mid + 1).0)
+        .map(|c| outs.iter()
+            .map(|step| step[mid].spikes.nnz_channel(c) as f64)
+            .sum())
+        .collect();
+    let finetune = [0usize, 4, 64].iter().map(|&iters| {
+        let p = cbws_assign(predictor.layer(mid + 1), arch.n_spes, iters);
+        FinetunePoint { iters, balance: p.balance_ratio(&workload) }
+    }).collect::<Vec<_>>();
+
+    // Oracle upper bound on the same workload.
+    let oracle_p: Partition = crate::schedule::baselines::Oracle
+        .assign(&workload, arch.n_spes);
+    let oracle_balance = oracle_p.balance_ratio(&workload);
+
+    let res = AblationResult { spe_sweep, finetune, oracle_balance };
+
+    let mut t = Table::new(
+        "Ablation: scheduler x SPE count (segmenter)",
+        &["scheduler", "N", "balance", "FPS", "fits XC7Z045"]);
+    for p in &res.spe_sweep {
+        t.row(&[p.scheduler.clone(), p.n_spes.to_string(),
+                format!("{:.2}%", 100.0 * p.balance),
+                format!("{:.1}", p.fps),
+                if p.fits_device { "yes".into() } else { "NO".into() }]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        format!("Ablation: CBWS fine-tune budget (layer {} workload; oracle {:.2}%)",
+                3, 100.0 * res.oracle_balance),
+        &["iters", "balance"]);
+    for p in &res.finetune {
+        t2.row(&[p.iters.to_string(), format!("{:.2}%", 100.0 * p.balance)]);
+    }
+    t2.print();
+    Ok(res)
+}
+
+/// Classifier timestep sensitivity: accuracy + FPS vs T (uses the
+/// functional model; exported separately because it is slower).
+#[derive(Debug, Clone)]
+pub struct TimestepPoint {
+    pub timesteps: usize,
+    pub accuracy: f64,
+    pub fps: f64,
+}
+
+pub fn timestep_sweep(ctx: &ExperimentCtx) -> Result<Vec<TimestepPoint>> {
+    let net = NetworkWeights::load(&ctx.artifacts, "classifier_aprc")?;
+    let arch = ArchConfig::default();
+    let rates = default_input_rates(&net);
+    let predictor = AprcPredictor::from_network(&net, &rates);
+    let sim = Simulator::new(arch, &net, &Cbws::default(), &predictor);
+    let n = ctx.frames_or(64);
+    let mut out = Vec::new();
+    for t_steps in [8usize, 16, 24, 32] {
+        let (trains, labels) =
+            classifier_frames(super::accuracy::DIGITS_TEST_SEED, n, t_steps);
+        let mut correct = 0usize;
+        let mut frames = Vec::new();
+        for (train, &label) in trains.iter().zip(&labels) {
+            let rep = sim.run_frame(train, &TraceSource::Functional)?;
+            let pred = rep.output_counts.iter().enumerate()
+                .max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap_or(0);
+            correct += (pred == label as usize) as usize;
+            frames.push(rep);
+        }
+        let sum = RunSummary::from_frames(&frames, arch.clock_hz,
+                                          arch.n_spes);
+        out.push(TimestepPoint {
+            timesteps: t_steps,
+            accuracy: correct as f64 / n as f64,
+            fps: sum.mean_fps,
+        });
+    }
+    let mut t = Table::new("Ablation: classifier timesteps",
+                           &["T", "accuracy", "FPS"]);
+    for p in &out {
+        t.row(&[p.timesteps.to_string(), format!("{:.4}", p.accuracy),
+                format!("{:.0}", p.fps)]);
+    }
+    t.print();
+    Ok(out)
+}

@@ -1,0 +1,103 @@
+//! Accuracy reproduction — the paper's 98.5 % MNIST claim, evaluated on
+//! the synthetic test split with the rust inference stack end-to-end
+//! (encode -> golden/functional SNN -> argmax of output spike counts),
+//! plus segmentation IoU.
+
+use anyhow::Result;
+
+
+use super::common::{classifier_frames, segmenter_frames, ExperimentCtx};
+use crate::metrics::Table;
+use crate::runtime::{Runtime, SnnRunner};
+use crate::snn::{FunctionalNet, NetworkWeights};
+
+/// Seeds must match `python/compile/train.py`.
+pub const DIGITS_TEST_SEED: u64 = 0x7E57D161;
+pub const ROADS_TEST_SEED: u64 = 0x7E570AD5;
+
+#[derive(Debug, Clone)]
+pub struct AccuracyResult {
+    pub classifier_accuracy: f64,
+    pub classifier_frames: usize,
+    pub python_snn_metric: Option<f64>,
+    pub segmenter_iou: f64,
+    pub segmenter_frames: usize,
+}
+
+pub fn run(ctx: &ExperimentCtx) -> Result<AccuracyResult> {
+    let net = NetworkWeights::load(&ctx.artifacts, "classifier_aprc")?;
+    let n = ctx.frames_or(256);
+    let (trains, labels) = classifier_frames(DIGITS_TEST_SEED, n,
+                                             net.meta.timesteps);
+
+    // Optional golden path (PJRT); functional otherwise.
+    let runtime = if ctx.golden { Some(Runtime::cpu()?) } else { None };
+    let step = match &runtime {
+        Some(rt) => Some(rt.load_step(&ctx.artifacts, &net)?),
+        None => None,
+    };
+
+    let mut correct = 0usize;
+    for (train, &label) in trains.iter().zip(&labels) {
+        let counts: Vec<u32> = match &step {
+            Some(s) => SnnRunner::new(s)?.run_frame_counts(train)?,
+            None => FunctionalNet::new(&net).run_frame_counts(train),
+        };
+        let pred = counts.iter().enumerate()
+            .max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap_or(0);
+        if pred == label as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+
+    // Segmentation IoU.
+    let seg = NetworkWeights::load(&ctx.artifacts, "segmenter_aprc")?;
+    let n_seg = ctx.frames_or(256).min(8).max(2);
+    let (seg_trains, masks) = segmenter_frames(ROADS_TEST_SEED, n_seg,
+                                               seg.meta.timesteps);
+    let thr = seg.meta.seg_rate_threshold.unwrap_or(0.5);
+    let t_steps = seg.meta.timesteps as f64;
+    let (oc, oh, ow) = seg.layer_output_shape(seg.layers.len() - 1);
+    assert_eq!(oc, 1);
+    let (ih, iw) = (crate::data::ROAD_H, crate::data::ROAD_W);
+    let (dh, dw) = ((oh - ih) / 2, (ow - iw) / 2);
+    let mut iou_sum = 0.0;
+    for (train, mask) in seg_trains.iter().zip(&masks) {
+        let counts = FunctionalNet::new(&seg).run_frame_counts(train);
+        let mut inter = 0usize;
+        let mut union = 0usize;
+        for y in 0..ih {
+            for x in 0..iw {
+                let rate = counts[(y + dh) * ow + (x + dw)] as f64 / t_steps;
+                let pred = rate >= thr;
+                let gt = mask[y * iw + x] == 1;
+                inter += (pred && gt) as usize;
+                union += (pred || gt) as usize;
+            }
+        }
+        iou_sum += inter as f64 / union.max(1) as f64;
+    }
+    let iou = iou_sum / n_seg as f64;
+
+    let res = AccuracyResult {
+        classifier_accuracy: acc,
+        classifier_frames: n,
+        python_snn_metric: net.meta.snn_metric,
+        segmenter_iou: iou,
+        segmenter_frames: n_seg,
+    };
+    let mut t = Table::new(
+        "Accuracy (paper: 98.5% MNIST classification)",
+        &["metric", "value", "frames", "python-side"]);
+    t.row(&["classifier accuracy".into(), format!("{:.4}", acc),
+            n.to_string(),
+            res.python_snn_metric.map(|v| format!("{v:.4}"))
+                .unwrap_or_default()]);
+    t.row(&["segmentation IoU".into(), format!("{iou:.4}"),
+            n_seg.to_string(),
+            seg.meta.snn_metric.map(|v| format!("{v:.4}"))
+                .unwrap_or_default()]);
+    t.print();
+    Ok(res)
+}

@@ -1,0 +1,137 @@
+//! Shared experiment plumbing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, SnnRunner};
+use crate::sim::TraceSource;
+use crate::snn::{encode_phased_u8, NetworkWeights, SpikeMap};
+
+/// Context every experiment receives.
+#[derive(Debug, Clone)]
+pub struct ExperimentCtx {
+    pub artifacts: PathBuf,
+    /// Use the PJRT golden trace (true) or the functional model (false).
+    pub golden: bool,
+    /// Frame budget knob (experiments pick sensible defaults when 0).
+    pub frames: usize,
+}
+
+impl ExperimentCtx {
+    pub fn new(artifacts: PathBuf) -> Self {
+        Self { artifacts, golden: false, frames: 0 }
+    }
+
+    pub fn frames_or(&self, default: usize) -> usize {
+        if self.frames == 0 { default } else { self.frames }
+    }
+}
+
+pub fn load_net(dir: &Path, name: &str) -> Result<NetworkWeights> {
+    NetworkWeights::load(dir, name)
+}
+
+/// Encoded digit frames + labels: `(spike trains, labels)`.
+pub fn classifier_frames(seed: u64, n: usize, timesteps: usize)
+                         -> (Vec<Vec<SpikeMap>>, Vec<u8>) {
+    let (imgs, labels) = crate::data::gen_digits(seed, n);
+    let trains = imgs.chunks(28 * 28)
+        .map(|img| encode_phased_u8(img, 1, 28, 28, timesteps))
+        .collect();
+    (trains, labels)
+}
+
+/// Encoded road frames + masks: `(spike trains, masks)`.
+pub fn segmenter_frames(seed: u64, n: usize, timesteps: usize)
+                        -> (Vec<Vec<SpikeMap>>, Vec<Vec<u8>>) {
+    let (imgs, masks) = crate::data::gen_road_scenes(seed, n);
+    let (h, w) = (crate::data::ROAD_H, crate::data::ROAD_W);
+    let trains = imgs.chunks(h * w * 3)
+        .map(|img| {
+            // HWC u8 -> CHW u8
+            let mut chw = vec![0u8; 3 * h * w];
+            for y in 0..h {
+                for x in 0..w {
+                    for c in 0..3 {
+                        chw[c * h * w + y * w + x] = img[(y * w + x) * 3 + c];
+                    }
+                }
+            }
+            encode_phased_u8(&chw, 3, h, w, timesteps)
+        })
+        .collect();
+    let masks = masks.chunks(h * w).map(|m| m.to_vec()).collect();
+    (trains, masks)
+}
+
+/// Produce the trace source for one frame: PJRT golden when requested
+/// (and available), otherwise functional.
+pub fn trace_for(ctx: &ExperimentCtx, net: &NetworkWeights,
+                 inputs: &[SpikeMap]) -> Result<TraceSource> {
+    if !ctx.golden {
+        return Ok(TraceSource::Functional);
+    }
+    let rt = Runtime::cpu()?;
+    let step = rt.load_step(&ctx.artifacts, net)?;
+    let mut runner = SnnRunner::new(&step)?;
+    Ok(TraceSource::Golden(runner.run_frame(inputs)?))
+}
+
+/// Pearson correlation of two equal-length series.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    if a.len() != b.len() || a.len() < 2 {
+        return f64::NAN;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return f64::NAN;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_anticorrelated() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [3.0, 2.0, 1.0];
+        assert!((pearson(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn classifier_frames_shapes() {
+        let (trains, labels) = classifier_frames(1, 3, 5);
+        assert_eq!(trains.len(), 3);
+        assert_eq!(labels.len(), 3);
+        assert_eq!(trains[0].len(), 5);
+        assert_eq!(trains[0][0].c, 1);
+    }
+
+    #[test]
+    fn segmenter_frames_shapes() {
+        let (trains, masks) = segmenter_frames(2, 1, 4);
+        assert_eq!(trains[0].len(), 4);
+        assert_eq!(trains[0][0].c, 3);
+        assert_eq!(masks[0].len(), 80 * 160);
+    }
+}

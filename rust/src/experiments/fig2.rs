@@ -1,0 +1,101 @@
+//! Fig. 2 — motivation: spatio-temporal sparsity and channel imbalance.
+//!
+//! (a) per-layer spikerates of the segmentation network on one frame;
+//! (b) per-channel spike summations of the representative 16-channel
+//!     layer over 50 timesteps;
+//! (c) the spike-rate distribution of those channels.
+//!
+//! Paper shape to reproduce: rates range roughly 2-18% with average
+//! <8%; channel sums spread over orders of magnitude.
+
+use anyhow::Result;
+
+
+use super::common::{segmenter_frames, ExperimentCtx};
+use crate::metrics::Table;
+use crate::snn::{FunctionalNet, NetworkWeights};
+
+#[derive(Debug, Clone)]
+pub struct Fig2Result {
+    /// (a) mean spikerate per spiking layer.
+    pub layer_rates: Vec<f64>,
+    /// (b) spike summation per channel of the 16-channel layer.
+    pub channel_sums: Vec<u64>,
+    /// (c) per-channel rates of that layer.
+    pub channel_rates: Vec<f64>,
+    /// max/min channel-sum ratio (the "orders of magnitude" claim).
+    pub imbalance_ratio: f64,
+}
+
+/// Index of the representative 16-channel layer in the segmenter
+/// (8-16-32-32-16-1: the 5th conv, index 4).
+pub const REP_LAYER: usize = 4;
+
+pub fn run(ctx: &ExperimentCtx) -> Result<Fig2Result> {
+    let net = NetworkWeights::load(&ctx.artifacts, "segmenter_aprc")?;
+    let t = net.meta.timesteps;
+    let (trains, _) = segmenter_frames(0xF16_2, ctx.frames_or(1), t);
+
+    let nl = net.layers.len();
+    let mut spikes_per_layer = vec![0u64; nl];
+    let mut neurons_per_layer = vec![0usize; nl];
+    let (rep_c, rep_h, rep_w) = net.layer_output_shape(REP_LAYER);
+    let mut channel_sums = vec![0u64; rep_c];
+
+    for train in &trains {
+        let mut f = FunctionalNet::new(&net);
+        for step in f.run_frame(train) {
+            for (l, out) in step.iter().enumerate() {
+                spikes_per_layer[l] += out.spikes.nnz() as u64;
+                neurons_per_layer[l] = out.spikes.len();
+                if l == REP_LAYER {
+                    for (c, s) in channel_sums.iter_mut().enumerate() {
+                        *s += out.spikes.nnz_channel(c) as u64;
+                    }
+                }
+            }
+        }
+    }
+
+    let frames = trains.len() as f64;
+    let layer_rates: Vec<f64> = (0..nl)
+        .map(|l| spikes_per_layer[l] as f64
+            / (neurons_per_layer[l] as f64 * t as f64 * frames))
+        .collect();
+    let channel_rates: Vec<f64> = channel_sums.iter()
+        .map(|&s| s as f64 / (rep_h as f64 * rep_w as f64 * t as f64
+            * frames))
+        .collect();
+    let max = *channel_sums.iter().max().unwrap() as f64;
+    let min = *channel_sums.iter().min().unwrap() as f64;
+    let res = Fig2Result {
+        layer_rates,
+        channel_sums,
+        channel_rates,
+        imbalance_ratio: max / min.max(1.0),
+    };
+
+    let mut ta = Table::new(
+        "Fig 2(a): spikerate per spiking layer (segmenter)",
+        &["layer", "spikerate"]);
+    for (l, r) in res.layer_rates.iter().enumerate() {
+        ta.row(&[format!("conv{}", l + 1), format!("{:.4}", r)]);
+    }
+    ta.row(&["average".into(),
+             format!("{:.4}", res.layer_rates.iter().sum::<f64>()
+                 / res.layer_rates.len() as f64)]);
+    ta.print();
+
+    let mut tb = Table::new(
+        format!("Fig 2(b,c): channel spike sums, layer {} ({} ch, {} steps)",
+                REP_LAYER + 1, rep_c, t),
+        &["channel", "spike_sum", "rate"]);
+    for c in 0..rep_c {
+        tb.row(&[c.to_string(), res.channel_sums[c].to_string(),
+                 format!("{:.5}", res.channel_rates[c])]);
+    }
+    tb.row(&["max/min".into(),
+             format!("{:.1}x", res.imbalance_ratio), String::new()]);
+    tb.print();
+    Ok(res)
+}

@@ -1,0 +1,92 @@
+//! Fig. 6 — the relation between output-channel spike counts and filter
+//! magnitudes in the classifier's conv layers, with and without APRC.
+//!
+//! Shape to reproduce: the plain (same-pad) network shows an irregular
+//! relation (low correlation); the APRC network shows an approximately
+//! proportional one (high rank correlation on the positive-magnitude
+//! side).
+
+use anyhow::Result;
+
+
+use super::common::{classifier_frames, pearson, ExperimentCtx};
+use crate::metrics::Table;
+use crate::snn::{FunctionalNet, NetworkWeights};
+
+#[derive(Debug, Clone)]
+pub struct LayerScatter {
+    pub layer: usize,
+    pub magnitudes: Vec<f64>,
+    pub spike_counts: Vec<u64>,
+    pub correlation: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig6Result {
+    /// (a) without APRC (same-pad network).
+    pub plain: Vec<LayerScatter>,
+    /// (b) with APRC (full-pad network).
+    pub aprc: Vec<LayerScatter>,
+}
+
+fn scatter(net: &NetworkWeights, frames: usize) -> Result<Vec<LayerScatter>> {
+    let t = net.meta.timesteps;
+    let (trains, _) = classifier_frames(0xF16_6, frames, t);
+    let nconv = net.layers.iter()
+        .filter(|l| matches!(l, crate::snn::LayerWeights::Conv { .. }))
+        .count();
+    let mut counts: Vec<Vec<u64>> = (0..nconv)
+        .map(|l| vec![0u64; net.layer_output_shape(l).0])
+        .collect();
+    for train in &trains {
+        let mut f = FunctionalNet::new(net);
+        for step in f.run_frame(train) {
+            for l in 0..nconv {
+                for (c, cnt) in counts[l].iter_mut().enumerate() {
+                    *cnt += step[l].spikes.nnz_channel(c) as u64;
+                }
+            }
+        }
+    }
+    Ok((0..nconv).map(|l| {
+        let mags = net.layers[l].filter_magnitudes();
+        let sc: Vec<f64> = counts[l].iter().map(|&c| c as f64).collect();
+        let correlation = pearson(&mags, &sc);
+        LayerScatter {
+            layer: l,
+            magnitudes: mags,
+            spike_counts: counts[l].clone(),
+            correlation,
+        }
+    }).collect())
+}
+
+pub fn run(ctx: &ExperimentCtx) -> Result<Fig6Result> {
+    let frames = ctx.frames_or(16);
+    let plain_net = NetworkWeights::load(&ctx.artifacts,
+                                         "classifier_plain")?;
+    let aprc_net = NetworkWeights::load(&ctx.artifacts,
+                                        "classifier_aprc")?;
+    let res = Fig6Result {
+        plain: scatter(&plain_net, frames)?,
+        aprc: scatter(&aprc_net, frames)?,
+    };
+
+    for (tag, series) in [("(a) without APRC", &res.plain),
+                          ("(b) with APRC", &res.aprc)] {
+        let mut t = Table::new(
+            format!("Fig 6{tag}: spikes vs filter magnitude (classifier)"),
+            &["layer", "channel", "magnitude", "spikes"]);
+        for s in series {
+            for (c, (&m, &n)) in s.magnitudes.iter()
+                .zip(&s.spike_counts).enumerate() {
+                t.row(&[format!("conv{}", s.layer + 1), c.to_string(),
+                        format!("{m:.3}"), n.to_string()]);
+            }
+            t.row(&[format!("conv{} corr", s.layer + 1), String::new(),
+                    String::new(), format!("{:.3}", s.correlation)]);
+        }
+        t.print();
+    }
+    Ok(res)
+}

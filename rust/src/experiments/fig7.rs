@@ -1,0 +1,170 @@
+//! Fig. 7 — balance ratio per layer of the segmentation network under
+//! the four configurations the paper evaluates:
+//!
+//! * neither (plain conv + contiguous assignment)      — paper avg 69.19%
+//! * CBWS only (plain conv + CBWS on plain magnitudes)  — paper avg 54.37%
+//! * APRC only (full-pad conv + contiguous)             — plotted, no avg
+//! * APRC + CBWS                                        — paper avg 95.69%
+//!
+//! Shape to reproduce: APRC+CBWS >> all others (>90%), CBWS-alone can be
+//! *worse* than doing nothing (mispredicted magnitudes actively skew).
+//! Also reports the classifier's pair (paper: 79.63% -> 94.14%).
+
+use anyhow::Result;
+
+
+use super::common::{classifier_frames, segmenter_frames, trace_for,
+                    ExperimentCtx};
+use crate::metrics::Table;
+use crate::schedule::baselines::Contiguous;
+use crate::schedule::cbws::Cbws;
+use crate::schedule::{AprcPredictor, Scheduler};
+use crate::sim::{ArchConfig, RunSummary, Simulator};
+use crate::snn::{NetworkWeights, SpikeMap};
+
+#[derive(Debug, Clone)]
+pub struct ConfigResult {
+    pub label: String,
+    pub per_layer_balance: Vec<f64>,
+    pub average_balance: f64,
+    pub mean_fps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig7Result {
+    pub segmenter: Vec<ConfigResult>,
+    pub classifier: Vec<ConfigResult>,
+}
+
+fn run_config(ctx: &ExperimentCtx, net: &NetworkWeights,
+              scheduler: &dyn Scheduler, label: &str,
+              trains: &[Vec<SpikeMap>], arch: ArchConfig)
+              -> Result<ConfigResult> {
+    let rates = crate::coordinator::worker::default_input_rates(net);
+    let predictor = AprcPredictor::from_network(net, &rates);
+    let sim = Simulator::new(arch, net, scheduler, &predictor);
+    let frames: Vec<_> = trains.iter()
+        .map(|train| {
+            let trace = trace_for(ctx, net, train)?;
+            sim.run_frame(train, &trace)
+        })
+        .collect::<Result<_>>()?;
+    let summary = RunSummary::from_frames(&frames, arch.clock_hz,
+                                          arch.n_spes);
+    Ok(ConfigResult {
+        label: label.into(),
+        per_layer_balance: summary.per_layer_balance,
+        average_balance: summary.mean_balance_weighted,
+        mean_fps: summary.mean_fps,
+    })
+}
+
+fn run_profiled(ctx: &ExperimentCtx, net: &NetworkWeights,
+                trains: &[Vec<SpikeMap>], arch: ArchConfig)
+                -> Result<ConfigResult> {
+    // Offline calibration profile (distinct frames from the eval set).
+    let calib: Vec<Vec<SpikeMap>> = if net.meta.in_shape[0] == 1 {
+        super::common::classifier_frames(0xCA11B0, 4,
+                                         net.meta.timesteps).0
+    } else {
+        super::common::segmenter_frames(0xCA11B0, 1,
+                                        net.meta.timesteps).0
+    };
+    let predictor = AprcPredictor::from_profile(net, &calib);
+    let sim = Simulator::new(arch, net, &Cbws::default(), &predictor);
+    let frames: Vec<_> = trains.iter()
+        .map(|train| {
+            let trace = trace_for(ctx, net, train)?;
+            sim.run_frame(train, &trace)
+        })
+        .collect::<Result<_>>()?;
+    let summary = RunSummary::from_frames(&frames, arch.clock_hz,
+                                          arch.n_spes);
+    Ok(ConfigResult {
+        label: "profiled+cbws".into(),
+        per_layer_balance: summary.per_layer_balance,
+        average_balance: summary.mean_balance_weighted,
+        mean_fps: summary.mean_fps,
+    })
+}
+
+fn net_sweep(ctx: &ExperimentCtx, plain: &NetworkWeights,
+             aprc: &NetworkWeights, trains_plain: &[Vec<SpikeMap>],
+             trains_aprc: &[Vec<SpikeMap>]) -> Result<Vec<ConfigResult>> {
+    let arch = ArchConfig::default();
+    let cbws = Cbws::default();
+    Ok(vec![
+        run_config(ctx, plain, &Contiguous, "neither", trains_plain, arch)?,
+        run_config(ctx, plain, &cbws, "cbws_only", trains_plain, arch)?,
+        run_config(ctx, aprc, &Contiguous, "aprc_only", trains_aprc, arch)?,
+        run_config(ctx, aprc, &cbws, "aprc+cbws", trains_aprc, arch)?,
+        run_rectified(ctx, aprc, trains_aprc, arch)?,
+        run_profiled(ctx, aprc, trains_aprc, arch)?,
+    ])
+}
+
+/// Our rectified-Gaussian APRC extension (weight-only, zero profiling).
+fn run_rectified(ctx: &ExperimentCtx, net: &NetworkWeights,
+                 trains: &[Vec<SpikeMap>], arch: ArchConfig)
+                 -> Result<ConfigResult> {
+    let rates = crate::coordinator::worker::default_input_rates(net);
+    let predictor = AprcPredictor::from_network_rectified(net, &rates, 0.1);
+    let sim = Simulator::new(arch, net, &Cbws::default(), &predictor);
+    let frames: Vec<_> = trains.iter()
+        .map(|train| {
+            let trace = trace_for(ctx, net, train)?;
+            sim.run_frame(train, &trace)
+        })
+        .collect::<Result<_>>()?;
+    let summary = RunSummary::from_frames(&frames, arch.clock_hz,
+                                          arch.n_spes);
+    Ok(ConfigResult {
+        label: "aprc-rg+cbws".into(),
+        per_layer_balance: summary.per_layer_balance,
+        average_balance: summary.mean_balance_weighted,
+        mean_fps: summary.mean_fps,
+    })
+}
+
+pub fn run(ctx: &ExperimentCtx) -> Result<Fig7Result> {
+    let seg_plain = NetworkWeights::load(&ctx.artifacts,
+                                         "segmenter_plain")?;
+    let seg_aprc = NetworkWeights::load(&ctx.artifacts, "segmenter_aprc")?;
+    let n_seg = ctx.frames_or(2);
+    let (seg_trains, _) = segmenter_frames(0xF16_7, n_seg,
+                                           seg_aprc.meta.timesteps);
+    let segmenter = net_sweep(ctx, &seg_plain, &seg_aprc, &seg_trains,
+                              &seg_trains)?;
+
+    let clf_plain = NetworkWeights::load(&ctx.artifacts,
+                                         "classifier_plain")?;
+    let clf_aprc = NetworkWeights::load(&ctx.artifacts,
+                                        "classifier_aprc")?;
+    let n_clf = ctx.frames_or(2).max(8);
+    let (clf_trains, _) = classifier_frames(0xF16_7C, n_clf,
+                                            clf_aprc.meta.timesteps);
+    let classifier = net_sweep(ctx, &clf_plain, &clf_aprc, &clf_trains,
+                               &clf_trains)?;
+
+    let res = Fig7Result { segmenter, classifier };
+    for (name, series) in [("segmentation", &res.segmenter),
+                           ("classification", &res.classifier)] {
+        let nl = series[0].per_layer_balance.len();
+        let mut headers: Vec<String> = vec!["config".into()];
+        headers.extend((0..nl).map(|l| format!("L{}", l + 1)));
+        headers.push("avg".into());
+        let hdr_refs: Vec<&str> =
+            headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            format!("Fig 7: balance ratio per layer ({name})"), &hdr_refs);
+        for cfg in series {
+            let mut row = vec![cfg.label.clone()];
+            row.extend(cfg.per_layer_balance.iter()
+                .map(|b| format!("{:.1}%", 100.0 * b)));
+            row.push(format!("{:.2}%", 100.0 * cfg.average_balance));
+            t.row(&row);
+        }
+        t.print();
+    }
+    Ok(res)
+}

@@ -1,0 +1,20 @@
+//! Experiment harness — regenerates every table and figure of the paper
+//! (DESIGN.md §5 maps experiment ids to paper artifacts).
+//!
+//! Each experiment prints the same rows/series the paper reports and
+//! returns a serde-serializable struct so tests and benches can assert
+//! on shapes (who wins, by what factor) rather than absolute numbers.
+
+mod common;
+pub mod fig2;
+pub mod fig4c;
+pub mod fig6;
+pub mod fig7;
+pub mod gains;
+pub mod table1;
+pub mod table2;
+pub mod accuracy;
+pub mod ablation;
+
+pub use common::{load_net, classifier_frames, segmenter_frames,
+                 trace_for, ExperimentCtx};

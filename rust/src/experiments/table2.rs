@@ -1,0 +1,28 @@
+//! Table II — XC7Z045 resource utilisation of the default configuration
+//! (from the analytical model calibrated in `power::resources`).
+
+use anyhow::Result;
+
+
+use crate::metrics::Table;
+use crate::power::resource_table;
+use crate::sim::ArchConfig;
+
+#[derive(Debug, Clone)]
+pub struct Table2Result {
+    pub rows: Vec<(String, u64, u64, f64)>,
+}
+
+pub fn run(arch: &ArchConfig) -> Result<Table2Result> {
+    let rows = resource_table(arch);
+    let mut t = Table::new(
+        format!("Table II: XC7Z045 utilisation (M={}, N={}, {} streams)",
+                arch.m_clusters, arch.n_spes, arch.streams),
+        &["metric", "available", "used", "percent"]);
+    for (name, avail, used, pct) in &rows {
+        t.row(&[name.clone(), avail.to_string(), used.to_string(),
+                format!("{pct:.2}%")]);
+    }
+    t.print();
+    Ok(Table2Result { rows })
+}

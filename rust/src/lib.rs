@@ -1,0 +1,70 @@
+//! # Skydiver — SNN accelerator exploiting spatio-temporal workload balance
+//!
+//! Reproduction of *"Skydiver: A Spiking Neural Network Accelerator
+//! Exploiting Spatio-Temporal Workload Balance"* (Chen, Gao, Fang, Luan —
+//! IEEE TCAD 2022, DOI 10.1109/TCAD.2022.3158834) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's testbed is a Xilinx XC7Z045 FPGA; per DESIGN.md §2 the
+//! silicon is substituted by a **cycle-level simulator** ([`sim`]) of the
+//! exact published microarchitecture (spike scheduler, filter-based SPE
+//! clusters, channel-based SPEs, 4 output streams + adder trees, banked
+//! memories, DMA, controller), while the paper's algorithmic
+//! contributions — **APRC** workload prediction and the **CBWS** balanced
+//! channel schedule (Algorithm 1) — live in [`schedule`].
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — the event loop, serving [`coordinator`], the
+//!   accelerator [`sim`], the [`schedule`] zoo, [`power`] models and the
+//!   experiment harness ([`experiments`]) that regenerates every table
+//!   and figure of the paper.
+//! * **L2 (python/compile/model.py)** — the JAX definitions of the
+//!   paper's classifier (`28x28-16c-32c-8c-10`) and segmenter
+//!   (`160x80x3-8C3-...-1C3`), AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the spiking
+//!   conv / dense timestep, lowered inline into the same HLO.
+//!
+//! Python never runs at request time: [`runtime`] loads the HLO text via
+//! the PJRT C API and executes it natively.
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts            # one-time python AOT build
+//! cargo run --release -- run --net classifier --frames 64
+//! cargo run --release -- experiment fig7
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod power;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod snn;
+pub mod util;
+
+/// The paper's FPGA clock: 200 MHz (§IV). FPS = CLOCK_HZ / cycles-per-frame.
+pub const CLOCK_HZ: f64 = 200.0e6;
+
+/// Default artifacts directory produced by `make artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("SKYDIVER_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            // Walk up from CWD until a directory containing `artifacts/`.
+            let mut d = std::env::current_dir().unwrap_or_default();
+            loop {
+                let cand = d.join("artifacts");
+                if cand.is_dir() {
+                    return cand;
+                }
+                if !d.pop() {
+                    return std::path::PathBuf::from("artifacts");
+                }
+            }
+        })
+}

@@ -1,0 +1,314 @@
+//! Skydiver CLI — leader entrypoint (in-crate arg parsing; offline build).
+//!
+//! ```bash
+//! skydiver report                      # artifact inventory + metrics
+//! skydiver run --net classifier       # serve frames end-to-end
+//! skydiver trace --net segmenter      # one-frame per-layer trace
+//! skydiver experiment fig7            # regenerate a paper artifact
+//! skydiver experiment all
+//! ```
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use skydiver::coordinator::{Policy, Service, ServiceConfig, WorkerConfig};
+use skydiver::experiments::{self, ExperimentCtx};
+use skydiver::metrics::Table;
+use skydiver::power::EnergyModel;
+use skydiver::sim::ArchConfig;
+use skydiver::snn::{NetKind, NetworkWeights};
+
+const USAGE: &str = "\
+skydiver — Skydiver (TCAD'22) reproduction
+
+USAGE:
+  skydiver [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  report                           artifact inventory + eval metrics
+  run        [--net classifier|segmenter] [--plain] [--policy P]
+             [--frames N] [--workers N] [--golden]
+  trace      [--net classifier|segmenter] [--plain] [--policy P] [--golden]
+  experiment <id> [--frames N] [--golden]
+             ids: fig2 fig4c fig6 fig7 table1 table2 gains accuracy
+                  ablation timesteps all
+
+POLICIES: contiguous round_robin random sparten cbws (default cbws)
+";
+
+/// Tiny flag parser: `--key value` and boolean `--key`.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let has_val = i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--");
+                if has_val && !is_bool_flag(name) {
+                    flags.push((name.to_string(),
+                                Some(argv[i + 1].clone())));
+                    i += 2;
+                } else {
+                    flags.push((name.to_string(), None));
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+fn is_bool_flag(name: &str) -> bool {
+    matches!(name, "plain" | "golden" | "help" | "version")
+}
+
+fn parse_net(args: &Args) -> Result<NetKind> {
+    match args.get("net").unwrap_or("classifier") {
+        "classifier" => Ok(NetKind::Classifier),
+        "segmenter" => Ok(NetKind::Segmenter),
+        other => bail!("unknown --net {other}"),
+    }
+}
+
+fn parse_policy(args: &Args) -> Result<Policy> {
+    let s = args.get("policy").unwrap_or("cbws");
+    Policy::parse(s).ok_or_else(|| anyhow!("unknown policy {s}"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    if args.has("help") || argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    if args.has("version") {
+        println!("skydiver {}", env!("CARGO_PKG_VERSION"));
+        return Ok(());
+    }
+    let artifacts = args.get("artifacts").map(PathBuf::from)
+        .unwrap_or_else(skydiver::artifacts_dir);
+
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("report") => report(&artifacts),
+        Some("run") => run_serve(&artifacts, &args),
+        Some("trace") => trace(&artifacts, &args),
+        Some("experiment") => {
+            let id = args.positional.get(1)
+                .ok_or_else(|| anyhow!("experiment needs an id"))?;
+            let mut ctx = ExperimentCtx::new(artifacts);
+            ctx.frames = args.get_usize("frames", 0)?;
+            ctx.golden = args.has("golden");
+            experiment(&ctx, id)
+        }
+        Some(other) => bail!("unknown command {other}\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn report(artifacts: &PathBuf) -> Result<()> {
+    let mut t = Table::new(
+        format!("Artifacts in {}", artifacts.display()),
+        &["variant", "layers", "T", "pad", "metric", "params"]);
+    for name in ["classifier_aprc", "classifier_plain", "segmenter_aprc",
+                 "segmenter_plain"] {
+        match NetworkWeights::load(artifacts, name) {
+            Ok(net) => {
+                t.row(&[name.into(), net.num_layers().to_string(),
+                        net.meta.timesteps.to_string(),
+                        net.meta.pad.to_string(),
+                        net.meta.snn_metric
+                            .map(|m| format!("{m:.4}")).unwrap_or_default(),
+                        net.meta.total_floats.to_string()]);
+            }
+            Err(e) => t.row(&[name.into(), format!("missing: {e}"),
+                              String::new(), String::new(), String::new(),
+                              String::new()]),
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn make_frames(kind: NetKind, n: usize) -> Vec<Vec<u8>> {
+    match kind {
+        NetKind::Classifier => {
+            let (imgs, _) = skydiver::data::gen_digits(0x5E12E, n);
+            imgs.chunks(28 * 28).map(|c| c.to_vec()).collect()
+        }
+        NetKind::Segmenter => {
+            let (imgs, _) = skydiver::data::gen_road_scenes(0x5E12E, n);
+            let (h, w) = (skydiver::data::ROAD_H, skydiver::data::ROAD_W);
+            imgs.chunks(h * w * 3)
+                .map(|img| {
+                    let mut chw = vec![0u8; 3 * h * w];
+                    for y in 0..h {
+                        for x in 0..w {
+                            for c in 0..3 {
+                                chw[c * h * w + y * w + x] =
+                                    img[(y * w + x) * 3 + c];
+                            }
+                        }
+                    }
+                    chw
+                })
+                .collect()
+        }
+    }
+}
+
+fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let kind = parse_net(args)?;
+    let aprc = !args.has("plain");
+    let policy = parse_policy(args)?;
+    let frames = args.get_usize("frames", 32)?;
+    let workers = args.get_usize("workers", 2)?;
+    let golden = args.has("golden");
+
+    let wcfg = WorkerConfig {
+        artifacts: artifacts.clone(),
+        kind,
+        aprc,
+        policy,
+        arch: ArchConfig::default(),
+        energy: EnergyModel::default(),
+        use_runtime: golden,
+        timesteps: None,
+    };
+    let scfg = ServiceConfig {
+        workers,
+        batch_max: 8,
+        batch_wait: Duration::from_millis(2),
+    };
+    println!("serving {} frames of {} ({}) with {} workers, policy {:?}",
+             frames, wcfg.variant_name(),
+             if golden { "golden/PJRT" } else { "functional" },
+             workers, policy);
+    let service = Service::start(scfg, wcfg)?;
+    for (i, px) in make_frames(kind, frames).into_iter().enumerate() {
+        service.submit(i as u64, px)?;
+    }
+    let (_, rep) = service.collect(frames, skydiver::CLOCK_HZ)?;
+    service.shutdown()?;
+
+    let mut t = Table::new("Serving report", &["metric", "value"]);
+    t.row(&["frames".into(), rep.frames.to_string()]);
+    t.row(&["host throughput (fps)".into(),
+            format!("{:.1}", rep.served_fps)]);
+    t.row(&["latency p50/p95/p99 (us)".into(),
+            format!("{}/{}/{}", rep.p50_us, rep.p95_us, rep.p99_us)]);
+    t.row(&["sim cycles/frame".into(),
+            format!("{:.0}", rep.mean_sim_cycles)]);
+    t.row(&["sim accelerator FPS".into(), format!("{:.1}", rep.sim_fps)]);
+    t.row(&["sim energy/frame (uJ)".into(),
+            format!("{:.2}", rep.mean_energy_uj)]);
+    t.row(&["per-worker frames".into(), format!("{:?}", rep.per_worker)]);
+    t.print();
+    Ok(())
+}
+
+fn trace(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let kind = match args.get("net").unwrap_or("segmenter") {
+        "classifier" => NetKind::Classifier,
+        "segmenter" => NetKind::Segmenter,
+        other => bail!("unknown --net {other}"),
+    };
+    let aprc = !args.has("plain");
+    let policy = parse_policy(args)?;
+    let golden = args.has("golden");
+    let name = kind.variant_name(aprc);
+    let net = NetworkWeights::load(artifacts, name)?;
+    let rates = skydiver::coordinator::default_input_rates(&net);
+    let predictor =
+        skydiver::schedule::AprcPredictor::from_network(&net, &rates);
+    let scheduler = policy.build();
+    let arch = ArchConfig::default();
+    let sim = skydiver::sim::Simulator::new(arch, &net, scheduler.as_ref(),
+                                            &predictor);
+
+    let pixels = make_frames(kind, 1).remove(0);
+    let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
+                     net.meta.in_shape[2]);
+    let inputs = skydiver::snn::encode_phased_u8(&pixels, c, h, w,
+                                                 net.meta.timesteps);
+    let mut ctx = ExperimentCtx::new(artifacts.clone());
+    ctx.golden = golden;
+    let trace = experiments::trace_for(&ctx, &net, &inputs)?;
+    let rep = sim.run_frame(&inputs, &trace)?;
+
+    let mut t = Table::new(
+        format!("Trace: {name} (policy {policy:?})"),
+        &["layer", "cycles", "events", "synops", "balance(w)"]);
+    for l in &rep.layers {
+        t.row(&[format!("L{}", l.layer + 1), l.cycles.to_string(),
+                l.events.to_string(), l.synops.to_string(),
+                format!("{:.2}%", 100.0 * l.balance_weighted)]);
+    }
+    t.row(&["total".into(), rep.total_cycles.to_string(),
+            rep.events.to_string(), rep.synops.to_string(),
+            format!("{:.2}%",
+                    100.0 * rep.balance_weighted(arch.n_spes))]);
+    t.print();
+    let e = EnergyModel::default().frame_energy(&rep, arch.clock_hz);
+    println!("fps={:.1} gsops={:.3} energy={:.1}uJ power={:.2}W",
+             rep.fps(arch.clock_hz), rep.gsops(arch.clock_hz),
+             e.total_j * 1e6, e.mean_w);
+    Ok(())
+}
+
+fn experiment(ctx: &ExperimentCtx, id: &str) -> Result<()> {
+    match id {
+        "fig2" => { experiments::fig2::run(ctx)?; }
+        "fig4c" => { experiments::fig4c::run()?; }
+        "fig6" => { experiments::fig6::run(ctx)?; }
+        "fig7" => { experiments::fig7::run(ctx)?; }
+        "table1" => { experiments::table1::run(ctx)?; }
+        "table2" => { experiments::table2::run(&ArchConfig::default())?; }
+        "gains" => { experiments::gains::run(ctx)?; }
+        "accuracy" => { experiments::accuracy::run(ctx)?; }
+        "ablation" => { experiments::ablation::run(ctx)?; }
+        "timesteps" => { experiments::ablation::timestep_sweep(ctx)?; }
+        "all" => {
+            for id in ["fig4c", "table2", "fig2", "fig6", "fig7", "gains",
+                       "table1", "accuracy", "ablation"] {
+                println!("\n########## experiment {id} ##########");
+                experiment(ctx, id)?;
+            }
+        }
+        other => bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}

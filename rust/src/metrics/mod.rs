@@ -1,0 +1,115 @@
+//! Reporting helpers: fixed-width tables, SI formatting, serving stats.
+
+
+
+/// A printable fixed-width table (the experiment harness prints the same
+/// rows/series the paper's tables and figures report).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>,
+               headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells.iter().zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>()
+            + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a value with SI prefix (e.g. 22600 -> "22.6K").
+pub fn si(v: f64) -> String {
+    let (scaled, suffix) = if v.abs() >= 1e9 {
+        (v / 1e9, "G")
+    } else if v.abs() >= 1e6 {
+        (v / 1e6, "M")
+    } else if v.abs() >= 1e3 {
+        (v / 1e3, "K")
+    } else {
+        (v, "")
+    };
+    format!("{scaled:.3}{suffix}")
+}
+
+/// Latency percentile helper for the serving coordinator.
+pub fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(&["xxx".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("xxx  1"));
+    }
+
+    #[test]
+    fn si_prefixes() {
+        assert_eq!(si(22_600.0), "22.600K");
+        assert_eq!(si(0.11e9), "110.000M");
+        assert_eq!(si(2.26e10), "22.600G");
+        assert_eq!(si(42.0), "42.000");
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let v = vec![1, 2, 3, 4, 100];
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 100.0), 100);
+        assert_eq!(percentile(&v, 50.0), 3);
+        assert_eq!(percentile(&[], 50.0), 0);
+    }
+}

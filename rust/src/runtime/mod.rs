@@ -1,0 +1,207 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas step functions and
+//! executes them natively. Python is never on this path.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `PjRtClient::compile` once at load;
+//! per-timestep execution is `PjRtLoadedExecutable::execute`.
+//!
+//! The step signature (argument order fixed by `aot.export_step_hlo`):
+//!
+//! ```text
+//! inputs : s_in, vmem_0..vmem_L, conv_w_0..[, dense_w, dense_b]
+//! outputs: (spikes_0..spikes_L, vmem'_0..vmem'_L)   -- one tuple
+//! ```
+//!
+//! [`SnnRunner`] drives T timesteps, keeping membrane state as host
+//! literals between steps, and harvests per-layer spike traces — the
+//! golden workload the cycle-level simulator consumes.
+
+use std::path::Path;
+
+use anyhow::{ensure, anyhow, Result};
+
+use crate::snn::{NetworkWeights, SpikeMap};
+
+/// A compiled SNN step function + its weight literals.
+pub struct StepExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight literals in export order (conv..., dense_w, dense_b).
+    weights: Vec<xla::Literal>,
+    /// (C, H, W) of the network input.
+    in_shape: (usize, usize, usize),
+    /// Flattened vmem lengths per layer.
+    vmem_lens: Vec<usize>,
+    /// Output-spike shapes per layer (C, H, W).
+    out_shapes: Vec<(usize, usize, usize)>,
+}
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<dir>/<name>.step.hlo.txt` for `net`.
+    pub fn load_step(&self, dir: &Path, net: &NetworkWeights)
+                     -> Result<StepExecutable> {
+        let path = dir.join(format!("{}.step.hlo.txt", net.meta.name));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(|e| anyhow!("parsing {path:?}: {e} — run `make artifacts`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
+
+        // Weight literals in export order.
+        let mut weights = Vec::new();
+        for layer in &net.layers {
+            match layer {
+                crate::snn::LayerWeights::Conv { geom, w } => {
+                    weights.push(literal_4d(w, geom.cout, geom.cin,
+                                            geom.r, geom.r)?);
+                }
+                crate::snn::LayerWeights::Dense { geom, w, b } => {
+                    weights.push(literal_2d(w, geom.fout, geom.fin)?);
+                    weights.push(literal_1d(b)?);
+                }
+            }
+        }
+        let in_shape = (net.meta.in_shape[0], net.meta.in_shape[1],
+                        net.meta.in_shape[2]);
+        let vmem_lens = (0..net.layers.len())
+            .map(|l| {
+                let (c, h, w) = net.layer_output_shape(l);
+                c * h * w
+            })
+            .collect();
+        let out_shapes = (0..net.layers.len())
+            .map(|l| net.layer_output_shape(l))
+            .collect();
+        Ok(StepExecutable { exe, weights, in_shape, vmem_lens, out_shapes })
+    }
+}
+
+fn literal_1d(data: &[f32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data))
+}
+
+fn literal_2d(data: &[f32], d0: usize, d1: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[d0 as i64, d1 as i64])
+        .map_err(|e| anyhow!("reshape2d: {e}"))
+}
+
+fn literal_3d(data: &[f32], d: (usize, usize, usize))
+              -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[d.0 as i64, d.1 as i64, d.2 as i64])
+        .map_err(|e| anyhow!("reshape3d: {e}"))
+}
+
+fn literal_4d(data: &[f32], d0: usize, d1: usize, d2: usize, d3: usize)
+              -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[d0 as i64, d1 as i64, d2 as i64, d3 as i64])
+        .map_err(|e| anyhow!("reshape4d: {e}"))
+}
+
+/// Per-layer spike maps for every timestep of one frame: `trace[t][l]`.
+pub type GoldenTrace = Vec<Vec<SpikeMap>>;
+
+/// Drives a [`StepExecutable`] over timesteps for one frame.
+pub struct SnnRunner<'a> {
+    step: &'a StepExecutable,
+    /// Membrane state literals between steps.
+    vmems: Vec<xla::Literal>,
+}
+
+impl<'a> SnnRunner<'a> {
+    pub fn new(step: &'a StepExecutable) -> Result<Self> {
+        let vmems = step.vmem_lens.iter()
+            .map(|&n| Ok(xla::Literal::vec1(&vec![0.0f32; n])))
+            .collect::<Result<_>>()?;
+        Ok(Self { step, vmems })
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        self.vmems = self.step.vmem_lens.iter()
+            .map(|&n| Ok(xla::Literal::vec1(&vec![0.0f32; n])))
+            .collect::<Result<_>>()?;
+        Ok(())
+    }
+
+    /// Execute one timestep; returns per-layer output spike maps.
+    pub fn step(&mut self, input: &SpikeMap) -> Result<Vec<SpikeMap>> {
+        let (c, h, w) = self.step.in_shape;
+        ensure!((input.c, input.h, input.w) == (c, h, w),
+                "input shape mismatch");
+        let nl = self.step.vmem_lens.len();
+
+        // `execute` wants a slice of Borrow<Literal>; build owned refs
+        // is not possible without clones, so use a small shim that
+        // borrows. &Literal implements Borrow<Literal>.
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(
+            1 + nl + self.step.weights.len());
+        let in_lit = literal_3d(&input.to_f32(), (c, h, w))?;
+        args.push(&in_lit);
+        for v in &self.vmems {
+            args.push(v);
+        }
+        for wl in &self.step.weights {
+            args.push(wl);
+        }
+
+        let result = self.step.exe.execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let out = result[0][0].to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        ensure!(parts.len() == 2 * nl,
+                "expected {} outputs, got {}", 2 * nl, parts.len());
+
+        let mut spikes = Vec::with_capacity(nl);
+        let mut iter = parts.into_iter();
+        for l in 0..nl {
+            let lit = iter.next().unwrap();
+            let data: Vec<f32> = lit.to_vec()
+                .map_err(|e| anyhow!("spikes[{l}] to_vec: {e}"))?;
+            let (oc, oh, ow) = self.step.out_shapes[l];
+            spikes.push(SpikeMap::from_f32(oc, oh, ow, &data));
+        }
+        // Remaining literals are the new membrane state.
+        self.vmems = iter.collect();
+        Ok(spikes)
+    }
+
+    /// Run a whole frame; returns the golden per-layer trace.
+    pub fn run_frame(&mut self, inputs: &[SpikeMap]) -> Result<GoldenTrace> {
+        self.reset()?;
+        inputs.iter().map(|i| self.step(i)).collect()
+    }
+
+    /// Run a frame and return only the accumulated output counts.
+    pub fn run_frame_counts(&mut self, inputs: &[SpikeMap])
+                            -> Result<Vec<u32>> {
+        let trace = self.run_frame(inputs)?;
+        let (oc, oh, ow) = *self.step.out_shapes.last().unwrap();
+        let mut counts = vec![0u32; oc * oh * ow];
+        for step in &trace {
+            let last = step.last().unwrap();
+            for (ch, idx) in last.iter_events() {
+                counts[ch * oh * ow + idx] += 1;
+            }
+        }
+        Ok(counts)
+    }
+}

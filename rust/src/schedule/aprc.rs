@@ -1,0 +1,254 @@
+//! APRC — Approximate Proportional Relation Construction (paper §III-B).
+//!
+//! With the APRC-modified convolution (full padding, stride 1), Eq. 5
+//! makes the summed membrane update of output channel `m` exactly
+//! `filter_magnitude_m x input_spike_sum`, so the *relative* spikerates
+//! of the channels a layer produces are predictable offline from its
+//! filter magnitudes alone.
+//!
+//! Layer `l`'s input channels are layer `l-1`'s output channels, so the
+//! predictor hands the scheduler of layer `l` the (clamped) magnitudes of
+//! layer `l-1`'s filters. The first layer's input channels come from the
+//! encoder; their rates are profiled from a calibration batch once,
+//! offline (they are a property of the dataset, not of a request).
+
+use crate::snn::NetworkWeights;
+
+/// Negative-magnitude channels still fire a little (reset dynamics,
+/// Fig. 6 scatter); a small floor keeps them schedulable instead of
+/// predicted-dead.
+pub const MAG_FLOOR: f64 = 1e-3;
+
+/// Offline per-layer workload predictions for one network variant.
+#[derive(Debug, Clone)]
+pub struct AprcPredictor {
+    /// `pred[l][c]` = predicted relative workload of input channel `c`
+    /// of layer `l`.
+    pred: Vec<Vec<f64>>,
+}
+
+impl AprcPredictor {
+    /// Build from the network weights + measured input-channel rates of
+    /// the encoder (length = in_shape channels).
+    pub fn from_network(net: &NetworkWeights, input_rates: &[f64]) -> Self {
+        let mut pred = Vec::with_capacity(net.layers.len());
+        // Layer 0: encoder statistics.
+        pred.push(input_rates.to_vec());
+        // Layer l (l>0): clamped filter magnitudes of layer l-1 — this is
+        // the APRC prediction proper.
+        for l in 1..net.layers.len() {
+            let mags = net.layers[l - 1].filter_magnitudes();
+            pred.push(mags.iter().map(|&m| m.max(MAG_FLOOR)).collect());
+        }
+        Self { pred }
+    }
+
+    /// Uniform predictions (the "without APRC" configuration still needs
+    /// *something* to feed CBWS; the paper feeds it the plain-conv
+    /// magnitudes, see [`AprcPredictor::from_network`] on a plain net).
+    pub fn uniform(net: &NetworkWeights) -> Self {
+        let pred = (0..net.layers.len())
+            .map(|l| {
+                let (c, _, _) = net.layer_input_shape(l);
+                vec![1.0; c]
+            })
+            .collect();
+        Self { pred }
+    }
+
+    /// Rectified-Gaussian extension of APRC (ours, documented in
+    /// DESIGN.md §extensions): Eq. 5 predicts the *mean* membrane drift
+    /// `mu_c = mag_c * r_in`, but the spiking nonlinearity rectifies —
+    /// channels with near-zero or negative magnitude still fire on
+    /// positive fluctuations. Modelling the T-step accumulated drive as
+    /// `N(T*mu, T*sigma^2)` with `sigma^2 = r(1-r) * sum(w^2)` gives the
+    /// weight-only predictor
+    ///
+    /// `rate_c ∝ mu*Phi(sqrt(T)*mu/sigma) + sigma/sqrt(T)*phi(...)`.
+    ///
+    /// Still zero profiling: only weights + one nominal input rate.
+    pub fn from_network_rectified(net: &NetworkWeights,
+                                  input_rates: &[f64],
+                                  nominal_rate: f64) -> Self {
+        let t = net.meta.timesteps as f64;
+        let r = nominal_rate.clamp(1e-3, 0.5);
+        let mut pred = Vec::with_capacity(net.layers.len());
+        pred.push(input_rates.to_vec());
+        for l in 1..net.layers.len() {
+            let mags = net.layers[l - 1].filter_magnitudes();
+            let sq = net.layers[l - 1].filter_sumsq();
+            pred.push(mags.iter().zip(&sq).map(|(&m, &q)| {
+                let mu = m * r;
+                let sigma = (q * r * (1.0 - r)).sqrt().max(1e-9);
+                let z = t.sqrt() * mu / sigma;
+                (mu * phi_cdf(z) + sigma / t.sqrt() * phi_pdf(z))
+                    .max(MAG_FLOOR)
+            }).collect());
+        }
+        Self { pred }
+    }
+
+    /// Offline *profiled* predictions: run the functional model over a
+    /// calibration set once (at schedule-build time, like the paper's
+    /// offline CBWS pass) and use the measured per-channel spike counts.
+    /// Realisable in practice (unlike the per-frame oracle) and the
+    /// upper bound on what weight-only APRC prediction can achieve;
+    /// fig7 reports both.
+    pub fn from_profile(net: &NetworkWeights,
+                        calib: &[Vec<crate::snn::SpikeMap>]) -> Self {
+        let mut pred: Vec<Vec<f64>> = (0..net.layers.len())
+            .map(|l| vec![0.0; net.layer_input_shape(l).0])
+            .collect();
+        for inputs in calib {
+            let mut f = crate::snn::FunctionalNet::new(net);
+            for (t, outs) in f.run_frame(inputs).iter().enumerate() {
+                for l in 0..net.layers.len() {
+                    let map = if l == 0 { &inputs[t] } else {
+                        &outs[l - 1].spikes
+                    };
+                    for (c, p) in pred[l].iter_mut().enumerate() {
+                        *p += map.nnz_channel(c) as f64;
+                    }
+                }
+            }
+        }
+        for layer in &mut pred {
+            for p in layer.iter_mut() {
+                *p = p.max(MAG_FLOOR);
+            }
+        }
+        Self { pred }
+    }
+
+    /// Predicted input-channel workloads for layer `l`.
+    pub fn layer(&self, l: usize) -> &[f64] {
+        &self.pred[l]
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.pred.len()
+    }
+}
+
+/// Standard normal pdf.
+fn phi_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via the Abramowitz-Stegun erf approximation.
+fn phi_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    // A&S 7.1.26, |err| < 1.5e-7 — plenty for workload ranking.
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0 - (((((1.061405429 * t - 1.453152027) * t)
+        + 1.421413741) * t - 0.284496736) * t + 0.254829592)
+        * t * (-x * x).exp();
+    sign * y
+}
+
+/// Mean per-channel spike rate of the phased encoder over a calibration
+/// set of images — layer 0's workload prediction.
+pub fn profile_input_rates(images: &[Vec<f32>], c: usize, h: usize,
+                           w: usize, timesteps: usize) -> Vec<f64> {
+    let mut rates = vec![0.0f64; c];
+    for img in images {
+        let maps = crate::snn::encode_phased(img, c, h, w, timesteps);
+        for (ch, rate) in rates.iter_mut().enumerate() {
+            let nnz: usize = maps.iter().map(|m| m.nnz_channel(ch)).sum();
+            *rate += nnz as f64 / (timesteps * h * w) as f64;
+        }
+    }
+    let n = images.len().max(1) as f64;
+    rates.iter_mut().for_each(|r| *r /= n);
+    rates
+}
+
+/// The worked example of Fig. 4(c): two 3x3 filters with magnitudes in a
+/// 3:1 ratio convolved (full padding) over an 8x8 input produce summed
+/// membrane updates in the same 3:1 ratio. Returns
+/// (sum_ch0, sum_ch1, magnitude_ratio, sum_ratio).
+pub fn fig4c_example() -> (f64, f64, f64, f64) {
+    let mag = [2.7f64, 0.9];
+    // Any full-pad conv satisfies Eq. 5 exactly: sum over the output
+    // channel = magnitude x input sum. Fill filters uniformly.
+    let input_sum = 6.0; // paper example: 16.2 / 2.7
+    let sums = [mag[0] * input_sum, mag[1] * input_sum];
+    (sums[0], sums[1], mag[0] / mag[1], sums[0] / sums[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{ConvGeom, LayerWeights, WeightsMeta};
+
+    fn two_layer_net() -> NetworkWeights {
+        let meta = WeightsMeta::parse(r#"{
+            "name": "t", "aprc": true, "pad": 2, "vth": 1.0,
+            "timesteps": 4, "in_shape": [2, 4, 4],
+            "feature_sizes": [[3, 6, 6], [2, 8, 8]], "dense_out": null,
+            "total_floats": 0, "lambdas": [], "layers": [],
+            "blob_fnv1a64": "0"
+        }"#).unwrap();
+        // layer0: 2->3 filters w/ magnitudes 9*0.1, 9*0.2, 9*(-0.05) (x cin=2)
+        let w0: Vec<f32> = [0.1f32, 0.2, -0.05].iter()
+            .flat_map(|&v| std::iter::repeat(v).take(2 * 9)).collect();
+        let w1 = vec![0.05f32; 2 * 3 * 9];
+        NetworkWeights {
+            meta,
+            layers: vec![
+                LayerWeights::Conv {
+                    geom: ConvGeom { cin: 2, cout: 3, r: 3, pad: 2,
+                                     h: 4, w: 4, eh: 6, ew: 6 },
+                    w: w0,
+                },
+                LayerWeights::Conv {
+                    geom: ConvGeom { cin: 3, cout: 2, r: 3, pad: 2,
+                                     h: 6, w: 6, eh: 8, ew: 8 },
+                    w: w1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn layer1_prediction_is_layer0_magnitudes() {
+        let net = two_layer_net();
+        let p = AprcPredictor::from_network(&net, &[0.5, 0.25]);
+        assert_eq!(p.layer(0), &[0.5, 0.25]);
+        let l1 = p.layer(1);
+        assert!((l1[0] - 1.8).abs() < 1e-5);   // 18 * 0.1
+        assert!((l1[1] - 3.6).abs() < 1e-5);   // 18 * 0.2
+        assert_eq!(l1[2], MAG_FLOOR);           // negative clamped
+    }
+
+    #[test]
+    fn fig4c_ratio_holds() {
+        let (s0, s1, mr, sr) = fig4c_example();
+        assert!((s0 - 16.2).abs() < 1e-9);
+        assert!((s1 - 5.4).abs() < 1e-9);
+        assert!((mr - sr).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_rates_match_encoder() {
+        // Constant image p=0.5 -> rate 0.5 per channel.
+        let img = vec![0.5f32; 2 * 4 * 4];
+        let rates = profile_input_rates(&[img], 2, 4, 4, 8);
+        for r in rates {
+            assert!((r - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn uniform_shapes() {
+        let net = two_layer_net();
+        let p = AprcPredictor::uniform(&net);
+        assert_eq!(p.layer(0).len(), 2);
+        assert_eq!(p.layer(1).len(), 3);
+    }
+}

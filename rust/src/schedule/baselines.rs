@@ -1,0 +1,179 @@
+//! Baseline schedulers the paper compares against (explicitly or
+//! implicitly): the no-schedule default, classic static policies, the
+//! SparTen-style density grouping [16], and the oracle upper bound.
+
+use super::{Partition, Scheduler};
+use crate::data::SplitMix64;
+
+/// Contiguous blocks — what a scheduler-less accelerator does (channels
+/// 0..K/N to SPE 0, etc). The paper's "without CBWS" configuration.
+pub struct Contiguous;
+
+impl Scheduler for Contiguous {
+    fn name(&self) -> &'static str {
+        "contiguous"
+    }
+
+    fn assign(&self, predicted: &[f64], n: usize) -> Partition {
+        let k = predicted.len();
+        let per = (k + n - 1) / n.max(1);
+        let groups = (0..n)
+            .map(|g| (g * per..((g + 1) * per).min(k)).collect())
+            .collect();
+        Partition { groups }
+    }
+}
+
+/// Round-robin interleave: channel c -> SPE c % N. Ignores workloads but
+/// spreads spatially-correlated channels.
+pub struct RoundRobin;
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn assign(&self, predicted: &[f64], n: usize) -> Partition {
+        let mut groups = vec![Vec::new(); n];
+        for c in 0..predicted.len() {
+            groups[c % n].push(c);
+        }
+        Partition { groups }
+    }
+}
+
+/// Uniform random assignment (seeded).
+pub struct Random {
+    pub seed: u64,
+}
+
+impl Scheduler for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn assign(&self, predicted: &[f64], n: usize) -> Partition {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut groups = vec![Vec::new(); n];
+        for c in 0..predicted.len() {
+            groups[rng.next_below(n as u64) as usize].push(c);
+        }
+        Partition { groups }
+    }
+}
+
+/// SparTen-style density grouping [16]: sort channels by predicted
+/// density and deal them in descending snake order. SparTen groups
+/// *filters* by weight density; applied to our channel-partition problem
+/// it becomes snake-order dealing — better than contiguous, but it has no
+/// fine-tune step and no APRC-quality prediction of *dynamic* sparsity,
+/// which is the gap the paper calls out in §IV.
+pub struct SparTen;
+
+impl Scheduler for SparTen {
+    fn name(&self) -> &'static str {
+        "sparten"
+    }
+
+    fn assign(&self, predicted: &[f64], n: usize) -> Partition {
+        let k = predicted.len();
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| predicted[b].partial_cmp(&predicted[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b)));
+        let mut groups = vec![Vec::new(); n];
+        for (pos, &c) in order.iter().enumerate() {
+            let round = pos / n;
+            let j = pos % n;
+            let g = if round % 2 == 0 { j } else { n - 1 - j };
+            groups[g].push(c);
+        }
+        Partition { groups }
+    }
+}
+
+/// Oracle: greedy longest-processing-time assignment using the *actual*
+/// workloads of the timestep being scheduled — unrealisable in hardware
+/// (the workload is only known after the fact), but it upper-bounds every
+/// online policy.
+pub struct Oracle;
+
+impl Scheduler for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn assign(&self, actual: &[f64], n: usize) -> Partition {
+        let k = actual.len();
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| actual[b].partial_cmp(&actual[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b)));
+        let mut groups = vec![Vec::new(); n];
+        let mut sums = vec![0.0f64; n];
+        for &c in &order {
+            let (gi, _) = sums.iter().enumerate()
+                .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                .unwrap();
+            groups[gi].push(c);
+            sums[gi] += actual[c];
+        }
+        Partition { groups }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> Vec<f64> {
+        (0..16).map(|i| ((i * 37 % 11) + 1) as f64).collect()
+    }
+
+    #[test]
+    fn all_cover() {
+        let w = workload();
+        for s in [&Contiguous as &dyn Scheduler, &RoundRobin,
+                  &Random { seed: 1 }, &SparTen, &Oracle] {
+            let p = s.assign(&w, 4);
+            assert!(p.validate(16), "{} does not cover", s.name());
+        }
+    }
+
+    #[test]
+    fn oracle_beats_contiguous() {
+        // Strongly skewed workload.
+        let w: Vec<f64> = (0..16).map(|i| if i < 4 { 100.0 } else { 1.0 })
+            .collect();
+        let o = Oracle.assign(&w, 4).balance_ratio(&w);
+        let c = Contiguous.assign(&w, 4).balance_ratio(&w);
+        assert!(o > c, "oracle {o} <= contiguous {c}");
+    }
+
+    #[test]
+    fn oracle_is_upper_bound_for_zoo() {
+        let w = workload();
+        let o = Oracle.assign(&w, 4).balance_ratio(&w);
+        for s in super::super::all_schedulers() {
+            let r = s.assign(&w, 4).balance_ratio(&w);
+            assert!(o >= r - 1e-9, "{} beats oracle: {r} > {o}", s.name());
+        }
+    }
+
+    #[test]
+    fn sparten_snake_order() {
+        let w = vec![4.0, 3.0, 2.0, 1.0];
+        let p = SparTen.assign(&w, 2);
+        // Descending snake: g0 gets {4.0, 1.0}, g1 gets {3.0, 2.0}.
+        let totals = p.group_totals(&w);
+        assert_eq!(totals, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let w = workload();
+        let a = Random { seed: 9 }.assign(&w, 4);
+        let b = Random { seed: 9 }.assign(&w, 4);
+        assert_eq!(a, b);
+    }
+}

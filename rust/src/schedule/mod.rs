@@ -1,0 +1,136 @@
+//! Workload scheduling — the paper's algorithmic contribution.
+//!
+//! Layer `l`'s event-driven work is dominated by the number of input
+//! spikes per *input channel*; each channel-based SPE of a cluster owns a
+//! subset of input channels (Fig. 5), so the slowest SPE bounds the
+//! layer's latency. A schedule is therefore a partition of the `K` input
+//! channels into `N` groups.
+//!
+//! * [`aprc`] predicts relative channel workloads offline: with the
+//!   APRC-modified convolution, the spikerate of the producing layer's
+//!   output channel is approximately proportional to its filter magnitude
+//!   (Eq. 5), which is known at compile time.
+//! * [`cbws`] is Algorithm 1: zigzag-sort the predicted workloads, split
+//!   round-robin into `N` sublists, then greedily fine-tune.
+//! * [`baselines`] are the comparison points: contiguous (the no-schedule
+//!   default), round-robin, random, a SparTen-style density grouping
+//!   [16], and the oracle that sees the true future workloads.
+//!
+//! Balance ratio (from Spartus [15]): `total / (N * max_group_total)` for
+//! one (layer, timestep); 1.0 = perfectly balanced.
+
+pub mod aprc;
+pub mod baselines;
+pub mod cbws;
+
+pub use aprc::AprcPredictor;
+
+/// A partition of channels `0..k` into `n` groups.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Validates the partition covers 0..k exactly once.
+    pub fn validate(&self, k: usize) -> bool {
+        let mut seen = vec![false; k];
+        for g in &self.groups {
+            for &c in g {
+                if c >= k || seen[c] {
+                    return false;
+                }
+                seen[c] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+
+    /// Channel -> group index lookup table.
+    pub fn channel_to_group(&self, k: usize) -> Vec<usize> {
+        let mut map = vec![usize::MAX; k];
+        for (gi, g) in self.groups.iter().enumerate() {
+            for &c in g {
+                map[c] = gi;
+            }
+        }
+        map
+    }
+
+    /// Per-group totals of `workload`.
+    pub fn group_totals(&self, workload: &[f64]) -> Vec<f64> {
+        self.groups.iter()
+            .map(|g| g.iter().map(|&c| workload[c]).sum())
+            .collect()
+    }
+
+    /// Balance ratio of this partition under the *actual* workloads:
+    /// `total / (n * max_group)`. 1.0 iff perfectly balanced; the paper
+    /// reports >90% with APRC+CBWS (Fig. 7).
+    pub fn balance_ratio(&self, workload: &[f64]) -> f64 {
+        let totals = self.group_totals(workload);
+        let total: f64 = totals.iter().sum();
+        let max = totals.iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            return 1.0;
+        }
+        total / (self.groups.len() as f64 * max)
+    }
+}
+
+/// A channel-to-SPE scheduling policy.
+pub trait Scheduler: Send + Sync {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Partition `predicted.len()` channels into `n` groups given the
+    /// per-channel *predicted* workloads.
+    fn assign(&self, predicted: &[f64], n: usize) -> Partition;
+}
+
+/// All schedulers in the zoo, for sweep experiments.
+pub fn all_schedulers() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(baselines::Contiguous),
+        Box::new(baselines::RoundRobin),
+        Box::new(baselines::Random { seed: 0x5EED }),
+        Box::new(baselines::SparTen),
+        Box::new(cbws::Cbws::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_validate_rejects_duplicates() {
+        let p = Partition { groups: vec![vec![0, 1], vec![1, 2]] };
+        assert!(!p.validate(3));
+    }
+
+    #[test]
+    fn partition_validate_rejects_missing() {
+        let p = Partition { groups: vec![vec![0], vec![2]] };
+        assert!(!p.validate(3));
+    }
+
+    #[test]
+    fn balance_ratio_perfect() {
+        let p = Partition { groups: vec![vec![0], vec![1]] };
+        assert!((p.balance_ratio(&[5.0, 5.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balance_ratio_worst_case() {
+        // All work in one of two groups: ratio = total/(2*max) = 0.5.
+        let p = Partition { groups: vec![vec![0, 1], vec![]] };
+        assert!((p.balance_ratio(&[3.0, 7.0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_workload_is_balanced() {
+        let p = Partition { groups: vec![vec![0], vec![1]] };
+        assert_eq!(p.balance_ratio(&[0.0, 0.0]), 1.0);
+    }
+}

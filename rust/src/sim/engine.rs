@@ -1,0 +1,233 @@
+//! The simulation engine: drives the timing model over full frames.
+//!
+//! Two trace sources:
+//! * **Functional** — the event-driven f32 model ([`FunctionalNet`])
+//!   computes every layer's spikes; no PJRT needed. Used by schedule
+//!   sweeps, ablations, property tests.
+//! * **Golden** — per-layer spike traces produced by the PJRT runtime
+//!   executing the AOT-compiled JAX step function; authoritative for the
+//!   experiments (DESIGN.md §5).
+
+use anyhow::{ensure, Result};
+
+use super::report::{FrameReport, LayerStats};
+use super::timing::{dma_cycles, layer_timing_with_rows};
+use super::ArchConfig;
+use crate::schedule::{Partition, Scheduler};
+use crate::schedule::aprc::AprcPredictor;
+use crate::snn::{FunctionalNet, NetworkWeights, SpikeMap};
+
+/// Where the per-layer spike activity comes from.
+pub enum TraceSource {
+    /// Compute spikes with the in-crate functional model.
+    Functional,
+    /// Pre-computed per-timestep per-layer output maps
+    /// (`trace[t][l]` = output spikes of layer `l` at step `t`).
+    Golden(Vec<Vec<SpikeMap>>),
+}
+
+/// A configured accelerator instance: architecture + per-layer channel
+/// partitions (the offline CBWS output loaded at "bitstream" time).
+pub struct Simulator<'a> {
+    pub arch: ArchConfig,
+    pub net: &'a NetworkWeights,
+    pub partitions: Vec<Partition>,
+}
+
+impl<'a> Simulator<'a> {
+    /// Build with a scheduling policy + workload predictor
+    /// (`scheduler.assign(predictor.layer(l), N)` per layer).
+    pub fn new(arch: ArchConfig, net: &'a NetworkWeights,
+               scheduler: &dyn Scheduler, predictor: &AprcPredictor)
+               -> Self {
+        let partitions = (0..net.layers.len())
+            .map(|l| scheduler.assign(predictor.layer(l), arch.n_spes))
+            .collect();
+        Self { arch, net, partitions }
+    }
+
+    /// Build with explicit partitions (ablations, oracle replay).
+    pub fn with_partitions(arch: ArchConfig, net: &'a NetworkWeights,
+                           partitions: Vec<Partition>) -> Result<Self> {
+        ensure!(partitions.len() == net.layers.len(),
+                "need one partition per layer");
+        Ok(Self { arch, net, partitions })
+    }
+
+    /// Simulate one frame given the encoded input spike train.
+    pub fn run_frame(&self, inputs: &[SpikeMap], trace: &TraceSource)
+                     -> Result<FrameReport> {
+        let nl = self.net.layers.len();
+        let mut report = FrameReport {
+            layers: (0..nl).map(|l| LayerStats { layer: l,
+                                                 ..Default::default() })
+                .collect(),
+            timesteps: inputs.len(),
+            ..Default::default()
+        };
+        let last = nl - 1;
+        let (oc, ohh, oww) = self.net.layer_output_shape(last);
+        report.output_counts = vec![0u32; oc * ohh * oww];
+
+        let mut functional = match trace {
+            TraceSource::Functional => Some(FunctionalNet::new(self.net)),
+            TraceSource::Golden(t) => {
+                ensure!(t.len() == inputs.len(),
+                        "trace length {} != timesteps {}", t.len(),
+                        inputs.len());
+                None
+            }
+        };
+
+        for (t, input) in inputs.iter().enumerate() {
+            // Per-layer outputs at this timestep.
+            let outs: Vec<SpikeMap> = match (&mut functional, trace) {
+                (Some(f), _) => f.step(input).into_iter()
+                    .map(|o| o.spikes).collect(),
+                (None, TraceSource::Golden(tr)) => tr[t].clone(),
+                _ => unreachable!(),
+            };
+            ensure!(outs.len() == nl, "trace has {} layers, net {}",
+                    outs.len(), nl);
+
+            for l in 0..nl {
+                let in_map = if l == 0 { input } else { &outs[l - 1] };
+                let nnz = in_map.nnz_per_channel();
+                // Sub-channel fallbacks (paper §III-C stream
+                // partitioning): conv layers with fewer input channels
+                // than SPEs split by interleaved rows; the dense layer
+                // always splits by interleaved input neuron (its weight
+                // rows are per-neuron, so the channel grain is
+                // artificial there).
+                let rows = match &self.net.layers[l] {
+                    crate::snn::LayerWeights::Dense { .. } => {
+                        Some(in_map.nnz_index_interleaved(self.arch.n_spes))
+                    }
+                    _ if in_map.c < self.arch.n_spes => {
+                        Some(in_map.nnz_row_interleaved(self.arch.n_spes))
+                    }
+                    _ => None,
+                };
+                let timing = layer_timing_with_rows(
+                    &self.arch, &self.net.layers[l], &self.partitions[l],
+                    &nnz, rows.as_deref());
+                report.layers[l].absorb(&timing, self.arch.n_spes);
+                report.compute_cycles += timing.cycles;
+                report.synops += timing.synops;
+                report.events += timing.events;
+                report.weight_reads += timing.weight_reads;
+                report.vmem_rmw += timing.vmem_rmw;
+                report.state_reads += timing.state_reads;
+            }
+            for (ch, idx) in outs[last].iter_events() {
+                report.output_counts[ch * ohh * oww + idx] += 1;
+            }
+        }
+
+        // DMA: input spike words in, output spike words out.
+        let in_bytes: usize = inputs.iter()
+            .map(|m| m.scan_words() * 8).sum();
+        let out_bytes = report.output_counts.len() * 4;
+        report.dma_bytes = (in_bytes + out_bytes) as u64;
+        report.dma_cycles = dma_cycles(&self.arch, in_bytes)
+            + dma_cycles(&self.arch, out_bytes);
+        report.total_cycles = report.compute_cycles + report.dma_cycles;
+        Ok(report)
+    }
+
+    /// Simulate with the functional model (convenience).
+    pub fn run_frame_functional(&self, inputs: &[SpikeMap])
+                                -> Result<FrameReport> {
+        self.run_frame(inputs, &TraceSource::Functional)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::baselines::Contiguous;
+    use crate::snn::{ConvGeom, LayerWeights, WeightsMeta};
+
+    fn tiny_net() -> NetworkWeights {
+        let meta = WeightsMeta::parse(r#"{
+            "name": "tiny", "aprc": true, "pad": 2, "vth": 0.5,
+            "timesteps": 4, "in_shape": [2, 6, 6],
+            "feature_sizes": [[4, 8, 8]], "dense_out": null,
+            "total_floats": 0, "lambdas": [], "layers": [],
+            "blob_fnv1a64": "0"
+        }"#).unwrap();
+        NetworkWeights {
+            meta,
+            layers: vec![LayerWeights::Conv {
+                geom: ConvGeom { cin: 2, cout: 4, r: 3, pad: 2, h: 6, w: 6,
+                                 eh: 8, ew: 8 },
+                w: vec![0.3; 4 * 2 * 9],
+            }],
+        }
+    }
+
+    fn encoded_inputs(rate: f32, t: usize) -> Vec<SpikeMap> {
+        let img = vec![rate; 2 * 6 * 6];
+        crate::snn::encode_phased(&img, 2, 6, 6, t)
+    }
+
+    #[test]
+    fn frame_report_consistency() {
+        let net = tiny_net();
+        let pred = AprcPredictor::uniform(&net);
+        let sim = Simulator::new(ArchConfig::default(), &net,
+                                 &Contiguous, &pred);
+        let inputs = encoded_inputs(0.5, 4);
+        let r = sim.run_frame_functional(&inputs).unwrap();
+        assert_eq!(r.layers.len(), 1);
+        assert_eq!(r.timesteps, 4);
+        assert!(r.total_cycles > 0);
+        assert!(r.synops > 0, "0.5-rate input must trigger work");
+        assert_eq!(r.synops, r.events * 9 * 4);
+        assert!(r.total_cycles >= r.compute_cycles);
+        assert_eq!(r.output_counts.len(), 4 * 8 * 8);
+    }
+
+    #[test]
+    fn golden_trace_equals_functional() {
+        let net = tiny_net();
+        let pred = AprcPredictor::uniform(&net);
+        let sim = Simulator::new(ArchConfig::default(), &net,
+                                 &Contiguous, &pred);
+        let inputs = encoded_inputs(0.7, 3);
+        // Build a golden trace with the functional model itself.
+        let mut f = FunctionalNet::new(&net);
+        let trace: Vec<Vec<SpikeMap>> = inputs.iter()
+            .map(|i| f.step(i).into_iter().map(|o| o.spikes).collect())
+            .collect();
+        let a = sim.run_frame_functional(&inputs).unwrap();
+        let b = sim.run_frame(&inputs, &TraceSource::Golden(trace)).unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.synops, b.synops);
+        assert_eq!(a.output_counts, b.output_counts);
+    }
+
+    #[test]
+    fn silent_input_costs_only_scan_and_overheads() {
+        let net = tiny_net();
+        let pred = AprcPredictor::uniform(&net);
+        let sim = Simulator::new(ArchConfig::default(), &net,
+                                 &Contiguous, &pred);
+        let inputs = encoded_inputs(0.0, 4);
+        let r = sim.run_frame_functional(&inputs).unwrap();
+        assert_eq!(r.events, 0);
+        assert_eq!(r.synops, 0);
+        assert!(r.total_cycles > 0, "scan + setup still cost");
+    }
+
+    #[test]
+    fn trace_length_mismatch_rejected() {
+        let net = tiny_net();
+        let pred = AprcPredictor::uniform(&net);
+        let sim = Simulator::new(ArchConfig::default(), &net,
+                                 &Contiguous, &pred);
+        let inputs = encoded_inputs(0.5, 4);
+        let err = sim.run_frame(&inputs, &TraceSource::Golden(vec![]));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Cycle-level model of the Skydiver accelerator (paper Fig. 3 + Fig. 5).
+//!
+//! This module substitutes the paper's XC7Z045 FPGA (DESIGN.md §2): it
+//! models the published microarchitecture faithfully enough that balance
+//! ratio, cycles/frame, and the APRC/CBWS gains are measured, not
+//! asserted.
+//!
+//! # Microarchitecture (paper §III-A)
+//!
+//! * **Spike scheduler** — scans the neuron-state memory (bit-packed, 64
+//!   neurons/word/cycle) and emits (channel, position) events plus weight
+//!   addresses. Scan overlaps compute; a layer is bounded by
+//!   `max(scan, compute)`.
+//! * **SPE clusters** — `M` filter-based clusters; each owns one *output*
+//!   channel per pass (its filter lives in a private weight bank). A
+//!   layer with `cout` output channels takes `ceil(cout / M)` passes, all
+//!   clusters replaying the same event stream.
+//! * **Channel-based SPEs** — `N` per cluster; SPE `n` processes the
+//!   events of its assigned *input* channels (the partition CBWS
+//!   computes). One input spike fans out to an `RxR` window, executed on
+//!   `streams` parallel lanes: `ceil(R*R / streams)` cycles per event.
+//! * **Adder trees** — one per stream; pipeline depth `ceil(log2 N)`,
+//!   counted as pass drain.
+//! * **Memories** — neuron state (bit-packed spikes), VMEM (membrane
+//!   potentials, read-modify-write per touched output), weight banks.
+//!   Widths/sizes feed the BRAM model in [`crate::power`].
+//! * **DMA** — input spike train in / output spikes out over a 64-bit
+//!   AXI-style stream, `dma_bytes_per_cycle` per cycle.
+//!
+//! # Timing model
+//!
+//! For layer `l`, timestep `t`, with per-input-channel spike counts
+//! `nnz_c` and partition groups `g_0..g_{N-1}`:
+//!
+//! ```text
+//! events_n   = sum_{c in g_n} nnz_c
+//! spe_n      = events_n * ceil(R^2 / streams)          (conv)
+//!            = events_n * ceil(1   / streams) = events (dense)
+//! pass       = max_n spe_n + ceil(log2 N) + pipe_fill
+//! compute    = ceil(cout / M) * pass
+//! scan       = ceil(C*H*W / 64)
+//! layer(t,l) = max(compute, scan) + setup
+//! ```
+//!
+//! The balance ratio of `(l, t)` is `sum_n events_n / (N * max_n
+//! events_n)` — Spartus's [15] definition, the quantity Fig. 7 plots.
+
+mod engine;
+mod report;
+mod timing;
+
+pub use engine::{Simulator, TraceSource};
+pub use report::{FrameReport, LayerStats, RunSummary};
+pub use timing::{layer_timing, LayerTiming};
+
+
+
+/// Architecture parameters of a Skydiver instance.
+///
+/// Defaults reproduce the paper's XC7Z045 configuration (Table II):
+/// `M = 16` clusters x `N = 4` SPEs x 4 streams at 200 MHz (64 SPEs,
+/// 256 accumulate lanes). The paper does not state (M, N); N = 4 is the
+/// value consistent with its >90% channel-grain balance on layers with
+/// as few as 8 input channels (see EXPERIMENTS.md fig7 notes).
+#[derive(Debug, Clone, Copy)]
+pub struct ArchConfig {
+    /// Filter-based SPE clusters (parallel output channels).
+    pub m_clusters: usize,
+    /// Channel-based SPEs per cluster (the CBWS partition width).
+    pub n_spes: usize,
+    /// Parallel accumulate lanes per SPE ("four streams", §III-C).
+    pub streams: usize,
+    /// Spike-scheduler scan width (neurons per cycle).
+    pub scan_width: usize,
+    /// DMA payload bytes per cycle (64-bit AXI).
+    pub dma_bytes_per_cycle: usize,
+    /// Pipeline fill cycles charged per pass.
+    pub pipe_fill: usize,
+    /// Controller setup cycles charged per (layer, timestep).
+    pub setup_cycles: usize,
+    /// Clock in Hz (paper: 200 MHz).
+    pub clock_hz: f64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            m_clusters: 16,
+            n_spes: 4,
+            streams: 4,
+            scan_width: 64,
+            dma_bytes_per_cycle: 8,
+            pipe_fill: 8,
+            setup_cycles: 16,
+            clock_hz: crate::CLOCK_HZ,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Peak synaptic ops per cycle (all lanes busy).
+    pub fn peak_ops_per_cycle(&self) -> usize {
+        self.m_clusters * self.n_spes * self.streams
+    }
+
+    /// Adder-tree pipeline depth for N partial-sum inputs.
+    pub fn adder_depth(&self) -> usize {
+        (usize::BITS - (self.n_spes.max(1) - 1).leading_zeros()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_config() {
+        let a = ArchConfig::default();
+        assert_eq!(a.m_clusters, 16);
+        assert_eq!(a.n_spes, 4);
+        assert_eq!(a.streams, 4);
+        assert_eq!(a.peak_ops_per_cycle(), 256);
+        assert!((a.clock_hz - 200e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn adder_depth_log2() {
+        let mut a = ArchConfig::default();
+        assert_eq!(a.adder_depth(), 2);
+        a.n_spes = 16;
+        assert_eq!(a.adder_depth(), 4);
+        a.n_spes = 1;
+        assert_eq!(a.adder_depth(), 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Aggregated simulation results: per-layer, per-frame, per-run.
+
+
+
+use super::timing::LayerTiming;
+
+/// Per-layer aggregation over the timesteps of one frame.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    pub layer: usize,
+    pub cycles: u64,
+    pub synops: u64,
+    pub events: u64,
+    pub weight_reads: u64,
+    pub vmem_rmw: u64,
+    pub state_reads: u64,
+    /// Workload-weighted balance: `sum_t total_t / (N * sum_t max_t)` —
+    /// equals achieved/ideal event throughput over the frame, the
+    /// operational quantity behind Fig. 7.
+    pub balance_weighted: f64,
+    /// Plain mean of per-timestep ratios (for comparison).
+    pub balance_mean: f64,
+    /// Scratch accumulators (serialized for auditability).
+    pub work_total: u64,
+    pub work_max: u64,
+    pub steps: u64,
+    pub balance_sum: f64,
+}
+
+impl LayerStats {
+    pub fn absorb(&mut self, t: &LayerTiming, n_spes: usize) {
+        self.cycles += t.cycles;
+        self.synops += t.synops;
+        self.events += t.events;
+        self.weight_reads += t.weight_reads;
+        self.vmem_rmw += t.vmem_rmw;
+        self.state_reads += t.state_reads;
+        self.work_total += t.work_total;
+        self.work_max += t.work_max;
+        self.steps += 1;
+        self.balance_sum += t.balance;
+        self.balance_mean = self.balance_sum / self.steps as f64;
+        self.balance_weighted = if self.work_max == 0 {
+            1.0
+        } else {
+            self.work_total as f64 / (n_spes as f64 * self.work_max as f64)
+        };
+    }
+}
+
+/// One frame through the accelerator.
+#[derive(Debug, Clone, Default)]
+pub struct FrameReport {
+    pub layers: Vec<LayerStats>,
+    /// Compute cycles summed over layers and timesteps.
+    pub compute_cycles: u64,
+    /// DMA-in / DMA-out cycles (not overlapped with compute).
+    pub dma_cycles: u64,
+    /// Total frame latency in cycles.
+    pub total_cycles: u64,
+    pub synops: u64,
+    pub events: u64,
+    pub weight_reads: u64,
+    pub vmem_rmw: u64,
+    pub state_reads: u64,
+    pub dma_bytes: u64,
+    pub timesteps: usize,
+    /// Output spike counts of the last layer (argmax = class,
+    /// thresholded = segmentation mask).
+    pub output_counts: Vec<u32>,
+}
+
+impl FrameReport {
+    /// Frames per second at `clock_hz`.
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.total_cycles.max(1) as f64
+    }
+
+    /// Giga synaptic operations per second.
+    pub fn gsops(&self, clock_hz: f64) -> f64 {
+        let secs = self.total_cycles.max(1) as f64 / clock_hz;
+        self.synops as f64 / secs / 1e9
+    }
+
+    /// Workload-weighted balance over all layers.
+    pub fn balance_weighted(&self, n_spes: usize) -> f64 {
+        let total: u64 = self.layers.iter().map(|l| l.work_total).sum();
+        let max: u64 = self.layers.iter().map(|l| l.work_max).sum();
+        if max == 0 {
+            1.0
+        } else {
+            total as f64 / (n_spes as f64 * max as f64)
+        }
+    }
+}
+
+/// Aggregation over many frames (a run / benchmark).
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub frames: usize,
+    pub total_cycles: u64,
+    pub synops: u64,
+    pub mean_balance_weighted: f64,
+    pub mean_fps: f64,
+    pub mean_gsops: f64,
+    /// Per-layer weighted balance averaged over frames (Fig. 7 series).
+    pub per_layer_balance: Vec<f64>,
+}
+
+impl RunSummary {
+    pub fn from_frames(frames: &[FrameReport], clock_hz: f64,
+                       n_spes: usize) -> Self {
+        if frames.is_empty() {
+            return Self::default();
+        }
+        let nl = frames[0].layers.len();
+        let mut per_layer = vec![0.0f64; nl];
+        for f in frames {
+            for (i, l) in f.layers.iter().enumerate() {
+                per_layer[i] += l.balance_weighted;
+            }
+        }
+        per_layer.iter_mut().for_each(|b| *b /= frames.len() as f64);
+        let total_cycles: u64 = frames.iter().map(|f| f.total_cycles).sum();
+        let synops: u64 = frames.iter().map(|f| f.synops).sum();
+        Self {
+            frames: frames.len(),
+            total_cycles,
+            synops,
+            mean_balance_weighted: frames.iter()
+                .map(|f| f.balance_weighted(n_spes)).sum::<f64>()
+                / frames.len() as f64,
+            mean_fps: clock_hz * frames.len() as f64 / total_cycles as f64,
+            mean_gsops: synops as f64
+                / (total_cycles as f64 / clock_hz) / 1e9,
+            per_layer_balance: per_layer,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_weighted_balance() {
+        let mut ls = LayerStats::default();
+        let mut t = LayerTiming { work_total: 80, work_max: 10,
+                                  balance: 1.0, ..Default::default() };
+        ls.absorb(&t, 8);
+        assert!((ls.balance_weighted - 1.0).abs() < 1e-12);
+        // Second step fully imbalanced: total 80 in one group of 8.
+        t.work_total = 80;
+        t.work_max = 80;
+        t.balance = 0.125;
+        ls.absorb(&t, 8);
+        // weighted: 160 / (8 * 90) = 0.2222; mean: (1.0+0.125)/2
+        assert!((ls.balance_weighted - 160.0 / 720.0).abs() < 1e-9);
+        assert!((ls.balance_mean - 0.5625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fps_and_gsops() {
+        let f = FrameReport { total_cycles: 200_000, synops: 1_000_000,
+                              ..Default::default() };
+        assert!((f.fps(200e6) - 1000.0).abs() < 1e-9);
+        assert!((f.gsops(200e6) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,229 @@
+//! Per-(layer, timestep) timing + op accounting — the simulator kernel.
+//!
+//! Pure function of (geometry, partition, per-channel spike counts); the
+//! engine calls it once per layer per timestep, so this is the hot path
+//! (see DESIGN.md §8 and benches/sim_hotpath.rs).
+
+
+
+use super::ArchConfig;
+use crate::schedule::Partition;
+use crate::snn::LayerWeights;
+
+/// Timing/op result for one (layer, timestep).
+#[derive(Debug, Clone, Default)]
+pub struct LayerTiming {
+    /// Total accelerator cycles charged to this layer-step.
+    pub cycles: u64,
+    /// Cycles the slowest SPE computed (per pass, before x passes).
+    pub critical_spe_cycles: u64,
+    /// Spike-scheduler scan cycles (overlapped with compute).
+    pub scan_cycles: u64,
+    /// Number of output-channel passes.
+    pub passes: u32,
+    /// Synaptic operations actually performed (adds).
+    pub synops: u64,
+    /// Input events (spikes) consumed.
+    pub events: u64,
+    /// Weight-memory words fetched.
+    pub weight_reads: u64,
+    /// VMEM read-modify-writes.
+    pub vmem_rmw: u64,
+    /// Neuron-state words scanned.
+    pub state_reads: u64,
+    /// Balance ratio of this layer-step: `total / (N * max_group)`.
+    pub balance: f64,
+    /// Numerator/denominator for workload-weighted aggregation.
+    pub work_total: u64,
+    pub work_max: u64,
+}
+
+/// Events per SPE group under `partition` given per-channel counts.
+pub fn events_per_group(partition: &Partition, nnz: &[usize]) -> Vec<u64> {
+    partition.groups.iter()
+        .map(|g| g.iter().map(|&c| nnz[c] as u64).sum())
+        .collect()
+}
+
+/// The timing model of `sim::mod` docs, for one layer-step.
+///
+/// `nnz` is the per-input-channel spike count of this timestep;
+/// `partition` is the CBWS (or baseline) channel-to-SPE assignment.
+/// `row_events`: when the layer has fewer input channels than SPEs the
+/// cluster falls back to *row-interleaved* splitting (each SPE takes the
+/// rows `r % N == spe` of every channel — the same intra-channel spatial
+/// partitioning the 4 output streams already use, paper §III-C); the
+/// engine passes the measured per-SPE event counts here and the channel
+/// partition is ignored.
+pub fn layer_timing_with_rows(arch: &ArchConfig, layer: &LayerWeights,
+                              partition: &Partition, nnz: &[usize],
+                              row_events: Option<&[u64]>) -> LayerTiming {
+    let (cout, synops_per_event, in_neurons) = match layer {
+        LayerWeights::Conv { geom, .. } => (
+            geom.cout,
+            geom.r * geom.r,
+            geom.cin * geom.h * geom.w,
+        ),
+        LayerWeights::Dense { geom, .. } => (geom.fout, 1, geom.fin),
+    };
+    let group_events = match row_events {
+        Some(re) => re.to_vec(),
+        None => events_per_group(partition, nnz),
+    };
+    let events: u64 = group_events.iter().sum();
+    let max_events = group_events.iter().copied().max().unwrap_or(0);
+
+    // Cycles per event on one SPE: RxR window over `streams` lanes.
+    let ev_cycles = (synops_per_event + arch.streams - 1) / arch.streams;
+    let spe_max = max_events * ev_cycles as u64;
+    let passes = (cout + arch.m_clusters - 1) / arch.m_clusters;
+    let pass_overhead = (arch.adder_depth() + arch.pipe_fill) as u64;
+    let compute = passes as u64 * (spe_max + pass_overhead);
+    let scan = ((in_neurons + arch.scan_width - 1) / arch.scan_width) as u64;
+    let cycles = compute.max(scan) + arch.setup_cycles as u64;
+
+    // Ops: every event is applied once per output channel.
+    let synops = events * (synops_per_event * cout) as u64;
+    let n = match row_events {
+        Some(re) => re.len().max(1) as u64,
+        None => partition.groups.len().max(1) as u64,
+    };
+    let balance = if max_events == 0 {
+        1.0
+    } else {
+        events as f64 / (n * max_events) as f64
+    };
+
+    LayerTiming {
+        cycles,
+        critical_spe_cycles: spe_max,
+        scan_cycles: scan,
+        passes: passes as u32,
+        synops,
+        events,
+        weight_reads: synops, // one weight word per add (worst case)
+        vmem_rmw: synops,     // read-modify-write per touched output
+        state_reads: scan,
+        balance,
+        work_total: events,
+        work_max: max_events,
+    }
+}
+
+/// Channel-partitioned timing (no row fallback) — see
+/// [`layer_timing_with_rows`].
+pub fn layer_timing(arch: &ArchConfig, layer: &LayerWeights,
+                    partition: &Partition, nnz: &[usize]) -> LayerTiming {
+    layer_timing_with_rows(arch, layer, partition, nnz, None)
+}
+
+/// DMA cycles to move `bytes` over the AXI stream.
+pub fn dma_cycles(arch: &ArchConfig, bytes: usize) -> u64 {
+    ((bytes + arch.dma_bytes_per_cycle - 1) / arch.dma_bytes_per_cycle) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::ConvGeom;
+
+    fn conv_layer(cin: usize, cout: usize) -> LayerWeights {
+        LayerWeights::Conv {
+            geom: ConvGeom { cin, cout, r: 3, pad: 2, h: 8, w: 8,
+                             eh: 10, ew: 10 },
+            w: vec![0.0; cout * cin * 9],
+        }
+    }
+
+    fn contiguous(k: usize, n: usize) -> Partition {
+        let per = (k + n - 1) / n;
+        Partition {
+            groups: (0..n)
+                .map(|g| (g * per..((g + 1) * per).min(k)).collect())
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn balanced_input_fully_utilises() {
+        let arch = ArchConfig::default();
+        let layer = conv_layer(8, 8);
+        let p = contiguous(8, 8);
+        let t = layer_timing(&arch, &layer, &p, &[10; 8]);
+        assert!((t.balance - 1.0).abs() < 1e-12);
+        assert_eq!(t.events, 80);
+        assert_eq!(t.synops, 80 * 9 * 8);
+        assert_eq!(t.passes, 1);
+        // 10 events x ceil(9/4)=3 cycles
+        assert_eq!(t.critical_spe_cycles, 30);
+    }
+
+    #[test]
+    fn imbalance_slows_down() {
+        let arch = ArchConfig::default();
+        let layer = conv_layer(8, 8);
+        let p = contiguous(8, 8);
+        let balanced = layer_timing(&arch, &layer, &p, &[10; 8]);
+        // Same total work, all in one channel.
+        let mut skew = vec![0usize; 8];
+        skew[0] = 80;
+        let skewed = layer_timing(&arch, &layer, &p, &skew);
+        assert_eq!(balanced.synops, skewed.synops);
+        assert!(skewed.cycles > balanced.cycles);
+        assert!((skewed.balance - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn passes_scale_with_cout() {
+        let arch = ArchConfig::default();
+        let p = contiguous(4, 8);
+        let t8 = layer_timing(&arch, &conv_layer(4, 8), &p, &[5; 4]);
+        let t32 = layer_timing(&arch, &conv_layer(4, 32), &p, &[5; 4]);
+        assert_eq!(t8.passes, 1);  // ceil(8 / 16 clusters)
+        assert_eq!(t32.passes, 2); // ceil(32 / 16 clusters)
+        assert!(t32.cycles > t8.cycles);
+        assert_eq!(t32.synops, 4 * t8.synops);
+    }
+
+    #[test]
+    fn scan_bound_when_nearly_silent() {
+        let arch = ArchConfig::default();
+        // Huge quiet layer: scanning dominates.
+        let layer = LayerWeights::Conv {
+            geom: ConvGeom { cin: 32, cout: 8, r: 3, pad: 1, h: 64, w: 64,
+                             eh: 64, ew: 64 },
+            w: vec![],
+        };
+        let p = contiguous(32, 8);
+        let t = layer_timing(&arch, &layer, &p, &[0; 32]);
+        assert_eq!(t.events, 0);
+        assert_eq!(t.scan_cycles, (32 * 64 * 64) as u64 / 64);
+        assert_eq!(t.cycles, t.scan_cycles + arch.setup_cycles as u64);
+        assert_eq!(t.balance, 1.0);
+    }
+
+    #[test]
+    fn dense_one_op_per_event() {
+        let arch = ArchConfig::default();
+        let layer = LayerWeights::Dense {
+            geom: crate::snn::DenseGeom { fin: 64, fout: 10,
+                                          src_channels: 8 },
+            w: vec![0.0; 640],
+            b: vec![0.0; 10],
+        };
+        let p = contiguous(8, 8);
+        let t = layer_timing(&arch, &layer, &p, &[4; 8]);
+        assert_eq!(t.events, 32);
+        assert_eq!(t.synops, 32 * 10);
+        assert_eq!(t.passes, 1); // ceil(10 / 16 clusters)
+    }
+
+    #[test]
+    fn dma_rounds_up() {
+        let arch = ArchConfig::default();
+        assert_eq!(dma_cycles(&arch, 0), 0);
+        assert_eq!(dma_cycles(&arch, 1), 1);
+        assert_eq!(dma_cycles(&arch, 8), 1);
+        assert_eq!(dma_cycles(&arch, 9), 2);
+    }
+}

@@ -1,0 +1,85 @@
+//! Phased rate encoding — port of `model.encode_phased`.
+//!
+//! Pixel p in [0,1] emits `floor(p*(t+1)) - floor(p*t)` spikes at step t:
+//! ~p*T evenly spaced spikes over T steps, fully deterministic. All math
+//! is f32 to match the jax lowering bit-for-bit (cross-checked against
+//! `meta.json:encoding_crosscheck` in tests/cross_language.rs).
+
+use super::SpikeMap;
+
+/// Encode a (C, H, W) f32 image in [0,1] into T spike maps.
+pub fn encode_phased(img: &[f32], c: usize, h: usize, w: usize,
+                     timesteps: usize) -> Vec<SpikeMap> {
+    assert_eq!(img.len(), c * h * w);
+    let mut out = Vec::with_capacity(timesteps);
+    for t in 0..timesteps {
+        let tf = t as f32;
+        let mut m = SpikeMap::zeros(c, h, w);
+        let per = h * w;
+        for ch in 0..c {
+            for i in 0..per {
+                let p = img[ch * per + i];
+                let s = (p * (tf + 1.0)).floor() - (p * tf).floor();
+                if s >= 0.5 {
+                    m.set(ch, i);
+                }
+            }
+        }
+        out.push(m);
+    }
+    out
+}
+
+/// Convenience: encode a u8 image (scaled by 1/255, matching python).
+pub fn encode_phased_u8(img: &[u8], c: usize, h: usize, w: usize,
+                        timesteps: usize) -> Vec<SpikeMap> {
+    let f: Vec<f32> = img.iter().map(|&v| v as f32 / 255.0).collect();
+    encode_phased(&f, c, h, w, timesteps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_spikes_approximate_rate() {
+        // p = 0.5 over 8 steps -> exactly 4 spikes.
+        let img = vec![0.5f32];
+        let maps = encode_phased(&img, 1, 1, 1, 8);
+        let total: usize = maps.iter().map(|m| m.nnz()).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn extremes() {
+        let maps = encode_phased(&[0.0, 1.0], 2, 1, 1, 10);
+        let c0: usize = maps.iter().map(|m| m.nnz_channel(0)).sum();
+        let c1: usize = maps.iter().map(|m| m.nnz_channel(1)).sum();
+        assert_eq!(c0, 0);
+        assert_eq!(c1, 10);
+    }
+
+    #[test]
+    fn evenly_spaced() {
+        // p=0.25 over 8 steps: spikes at t where floor crosses: 4 total? 2.
+        let maps = encode_phased(&[0.25f32], 1, 1, 1, 8);
+        let pattern: Vec<usize> = maps.iter().map(|m| m.nnz()).collect();
+        assert_eq!(pattern.iter().sum::<usize>(), 2);
+        // No two consecutive spikes for a rate this low.
+        for w in pattern.windows(2) {
+            assert!(w[0] + w[1] <= 1);
+        }
+    }
+
+    #[test]
+    fn count_matches_floor_pt() {
+        for &p in &[0.1f32, 0.3, 0.7, 0.93] {
+            for t in [5usize, 16, 50] {
+                let maps = encode_phased(&[p], 1, 1, 1, t);
+                let total: usize = maps.iter().map(|m| m.nnz()).sum();
+                assert_eq!(total, (p * t as f32).floor() as usize,
+                           "p={p} T={t}");
+            }
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Functional (f32) LIF model — the event-driven twin of the JAX model.
+//!
+//! Computes exactly what the accelerator computes, the way the accelerator
+//! computes it: *scatter* an RxR weight window into the membrane array per
+//! input spike (the SPE dataflow of Fig. 5), then threshold + reset by
+//! subtraction (Eq. 1/3). Summation order differs from XLA's conv, so
+//! membrane potentials may differ by f32 rounding; spike disagreement is
+//! bounded by tests against the PJRT golden trace (<0.1% of neurons).
+//!
+//! This is the simulator's functional path: it lets sim-only flows
+//! (ablations, schedule sweeps) run without a PJRT client, and it
+//! produces the per-layer spike traces that the timing model consumes.
+
+use super::{LayerWeights, NetworkWeights, SpikeMap};
+
+/// Output of one layer for one timestep.
+#[derive(Debug, Clone)]
+pub struct LayerOutput {
+    pub spikes: SpikeMap,
+}
+
+/// Mutable network state (membrane potentials) + weights reference.
+pub struct FunctionalNet<'a> {
+    pub net: &'a NetworkWeights,
+    /// Per-layer flattened membrane potentials.
+    vmem: Vec<Vec<f32>>,
+}
+
+impl<'a> FunctionalNet<'a> {
+    pub fn new(net: &'a NetworkWeights) -> Self {
+        let vmem = net.layers.iter().map(|l| match l {
+            LayerWeights::Conv { geom, .. } =>
+                vec![0.0; geom.cout * geom.eh * geom.ew],
+            LayerWeights::Dense { geom, .. } => vec![0.0; geom.fout],
+        }).collect();
+        Self { net, vmem }
+    }
+
+    pub fn reset(&mut self) {
+        for v in &mut self.vmem {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Read-only view of a layer's membrane potentials.
+    pub fn vmem(&self, layer: usize) -> &[f32] {
+        &self.vmem[layer]
+    }
+
+    /// One timestep: input spikes -> per-layer output spikes.
+    pub fn step(&mut self, input: &SpikeMap) -> Vec<LayerOutput> {
+        let vth = self.net.meta.vth;
+        let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.net.layers.len());
+        let mut cur = input;
+        for (li, layer) in self.net.layers.iter().enumerate() {
+            let spikes = match layer {
+                LayerWeights::Conv { geom, w } => {
+                    conv_step(cur, geom, w, &mut self.vmem[li], vth)
+                }
+                LayerWeights::Dense { geom, w, b } => {
+                    dense_step(cur, geom.fin, geom.fout, w, b,
+                               &mut self.vmem[li], vth)
+                }
+            };
+            outs.push(LayerOutput { spikes });
+            cur = &outs[li].spikes;
+        }
+        outs
+    }
+
+    /// Run a full frame: T input maps -> per-layer per-timestep traces,
+    /// indexed `[t][layer]`.
+    pub fn run_frame(&mut self, inputs: &[SpikeMap]) -> Vec<Vec<LayerOutput>> {
+        self.reset();
+        inputs.iter().map(|s| self.step(s)).collect()
+    }
+
+    /// Accumulated output-layer spike counts over a frame (classification
+    /// logits / segmentation mask counts).
+    pub fn run_frame_counts(&mut self, inputs: &[SpikeMap]) -> Vec<u32> {
+        self.reset();
+        let last = self.net.layers.len() - 1;
+        let (c, h, w) = self.net.layer_output_shape(last);
+        let mut counts = vec![0u32; c * h * w];
+        for s in inputs {
+            let outs = self.step(s);
+            for (ch, idx) in outs[last].spikes.iter_events() {
+                counts[ch * h * w + idx] += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// Event-driven conv + LIF for one timestep.
+///
+/// Hot path of the whole simulator (see DESIGN.md §8 / EXPERIMENTS.md
+/// §Perf): events are decoded once, then the scatter runs output-channel
+/// -major (the per-channel membrane block stays cache-resident and the
+/// (m, c) weight window is 9 contiguous floats), with a branch-free
+/// interior fast path for R = 3. Full-pad (APRC) layers are *always*
+/// interior — `oy = y + pad - j` spans `y .. y+2 < eh` — so the paper's
+/// own convolution modification also makes the simulator fast.
+fn conv_step(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
+             vmem: &mut [f32], vth: f32) -> SpikeMap {
+    let (r, pad) = (geom.r, geom.pad);
+    let (eh, ew) = (geom.eh, geom.ew);
+    let per_out = eh * ew;
+    let r2 = r * r;
+
+    // Classify events once (independent of the output channel): interior
+    // events carry a precomputed top-left membrane offset; border events
+    // keep coordinates for the clipped path. Full-pad R=3 layers are
+    // 100% interior by construction.
+    let mut interior: Vec<(u32, u32)> = Vec::new();
+    let mut border: Vec<(u32, u32, u32)> = Vec::new();
+    for (c, idx) in input.iter_events() {
+        let y = idx / geom.w;
+        let x = idx % geom.w;
+        let (iy, ix) = (y + pad, x + pad);
+        if r == 3 && iy >= 2 && iy < eh + 1 && ix >= 2 && ix < ew + 1
+            && iy - 2 + 2 < eh && ix - 2 + 2 < ew {
+            interior.push((c as u32, ((iy - 2) * ew + (ix - 2)) as u32));
+        } else {
+            border.push((c as u32, y as u32, x as u32));
+        }
+    }
+
+    // Scatter + threshold per output channel. (A scoped-thread split
+    // over channels was tried and reverted: on the 2-core testbed the
+    // per-step spawn overhead dominated the small classifier layers and
+    // bought <5% on the segmenter — see EXPERIMENTS.md §Perf.)
+    let wpc = (per_out + 63) / 64;
+    let mut words = vec![0u64; geom.cout * wpc];
+    let cin_r2 = geom.cin * r2;
+    for m in 0..geom.cout {
+        let vm = &mut vmem[m * per_out..(m + 1) * per_out];
+        let wm = &w[m * cin_r2..(m + 1) * cin_r2];
+        // Branch-free interior scatter: 3 rows x 3 contiguous adds,
+        // kernel mirrored in both axes (oy = y+pad-j). Bounds are
+        // guaranteed by the interior classification above.
+        for &(c, base) in &interior {
+            let b = base as usize;
+            unsafe {
+                let w9 = wm.get_unchecked(
+                    c as usize * 9..c as usize * 9 + 9);
+                for j in 0..3usize {
+                    let row = b + (2 - j) * ew;
+                    *vm.get_unchecked_mut(row) += w9[j * 3 + 2];
+                    *vm.get_unchecked_mut(row + 1) += w9[j * 3 + 1];
+                    *vm.get_unchecked_mut(row + 2) += w9[j * 3];
+                }
+            }
+        }
+        for &(c, y, x) in &border {
+            let wc = &wm[c as usize * r2..(c as usize + 1) * r2];
+            scatter_clipped(vm, wc, y as usize, x as usize, r, pad, eh, ew);
+        }
+        // Threshold + reset-by-subtraction, packing spikes directly
+        // into this channel's words (cheaper than SpikeMap::set).
+        let wout = &mut words[m * wpc..(m + 1) * wpc];
+        for i in 0..per_out {
+            let v = &mut vm[i];
+            if *v >= vth {
+                *v -= vth;
+                wout[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+    SpikeMap::from_words(geom.cout, eh, ew, words)
+}
+
+/// Border-clipped scatter (slow path / generic R).
+#[inline(never)]
+fn scatter_clipped(vm: &mut [f32], wc: &[f32], y: usize, x: usize,
+                   r: usize, pad: usize, eh: usize, ew: usize) {
+    let (y, x) = (y as isize, x as isize);
+    for j in 0..r {
+        let oy = y + pad as isize - j as isize;
+        if oy < 0 || oy >= eh as isize {
+            continue;
+        }
+        let row = oy as usize * ew;
+        for k in 0..r {
+            let ox = x + pad as isize - k as isize;
+            if ox < 0 || ox >= ew as isize {
+                continue;
+            }
+            vm[row + ox as usize] += wc[j * r + k];
+        }
+    }
+}
+
+/// Event-driven dense + LIF for one timestep.
+fn dense_step(input: &SpikeMap, fin: usize, fout: usize, w: &[f32],
+              b: &[f32], vmem: &mut [f32], vth: f32) -> SpikeMap {
+    // Input is the flattened previous layer viewed as
+    // (src_channels, 1, per): linear index = ch*per + i.
+    let per = input.h * input.w;
+    debug_assert_eq!(input.c * per, fin);
+    for (c, idx) in input.iter_events() {
+        let f = c * per + idx;
+        for k in 0..fout {
+            vmem[k] += w[k * fin + f];
+        }
+    }
+    let mut out = SpikeMap::zeros(fout, 1, 1);
+    for k in 0..fout {
+        vmem[k] += b[k];
+        if vmem[k] >= vth {
+            vmem[k] -= vth;
+            out.set(k, 0);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{ConvGeom, DenseGeom, WeightsMeta};
+
+    fn tiny_net(pad: usize) -> NetworkWeights {
+        // 1 input channel 4x4, one conv layer 2 filters 3x3, all weights
+        // 0.25, vth 1.0.
+        let r = 3;
+        let eh = 4 + 2 * pad - r + 1;
+        let meta = WeightsMeta::parse(&format!(r#"{{
+            "name": "tiny", "aprc": {}, "pad": {pad}, "vth": 1.0,
+            "timesteps": 4, "in_shape": [1, 4, 4],
+            "feature_sizes": [[2, {eh}, {eh}]], "dense_out": null,
+            "total_floats": 18, "lambdas": [],
+            "layers": [{{"kind": "conv", "shape": [2,1,3,3], "offset": 0,
+                        "layer": 0, "pad": {pad}}}],
+            "blob_fnv1a64": "0"
+        }}"#, pad == 2)).unwrap();
+        NetworkWeights {
+            meta,
+            layers: vec![LayerWeights::Conv {
+                geom: ConvGeom { cin: 1, cout: 2, r, pad, h: 4, w: 4,
+                                 eh, ew: eh },
+                w: vec![0.25; 18],
+            }],
+        }
+    }
+
+    #[test]
+    fn single_spike_scatters_full_window() {
+        let net = tiny_net(2);
+        let mut f = FunctionalNet::new(&net);
+        let mut input = SpikeMap::zeros(1, 4, 4);
+        input.set(0, 5); // (y=1, x=1)
+        let out = f.step(&input);
+        // 0.25 < vth: no output spikes, but vmem holds the 3x3 window.
+        assert_eq!(out[0].spikes.nnz(), 0);
+        let touched = f.vmem[0].iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(touched, 2 * 9, "full 3x3 window per output channel");
+    }
+
+    #[test]
+    fn accumulation_reaches_threshold() {
+        let net = tiny_net(2);
+        let mut f = FunctionalNet::new(&net);
+        let mut input = SpikeMap::zeros(1, 4, 4);
+        input.set(0, 5);
+        // 4 identical steps x 0.25 = 1.0 >= vth at the 4th.
+        for _ in 0..3 {
+            assert_eq!(f.step(&input)[0].spikes.nnz(), 0);
+        }
+        let out = f.step(&input);
+        assert_eq!(out[0].spikes.nnz(), 2 * 9);
+        // Reset by subtraction: vmem back to ~0.
+        assert!(f.vmem[0].iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn border_clipping_same_pad() {
+        let net = tiny_net(1);
+        let mut f = FunctionalNet::new(&net);
+        let mut input = SpikeMap::zeros(1, 4, 4);
+        input.set(0, 0); // corner (0,0)
+        f.step(&input);
+        // Same-pad: corner spike reaches only a 2x2 output window.
+        let touched = f.vmem[0].iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(touched, 2 * 4);
+    }
+
+    #[test]
+    fn dense_step_counts() {
+        let mut vmem = vec![0.0f32; 2];
+        let w = vec![0.6, 0.0, 0.0, 0.6]; // (2,2) identity-ish
+        let b = vec![0.0, 0.0];
+        let mut input = SpikeMap::zeros(2, 1, 1);
+        input.set(0, 0);
+        let out = dense_step(&input, 2, 2, &w, &b, &mut vmem, 1.0);
+        assert_eq!(out.nnz(), 0);
+        let mut input2 = SpikeMap::zeros(2, 1, 1);
+        input2.set(0, 0);
+        let out2 = dense_step(&input2, 2, 2, &w, &b, &mut vmem, 1.0);
+        assert!(out2.get(0, 0) && !out2.get(1, 0));
+    }
+
+    #[test]
+    fn eq5_proportionality_full_pad() {
+        // APRC exactness (Eq. 5): with full padding, the summed membrane
+        // update of output channel m equals filter_magnitude_m x #spikes.
+        let net = tiny_net(2);
+        let mut f = FunctionalNet::new(&net);
+        let mut input = SpikeMap::zeros(1, 4, 4);
+        for i in [0usize, 3, 7, 9, 15] {
+            input.set(0, i);
+        }
+        f.step(&input);
+        let per = 6 * 6;
+        let mag = 9.0 * 0.25;
+        for m in 0..2 {
+            let sum: f32 = f.vmem[0][m * per..(m + 1) * per].iter().sum();
+            assert!((sum - mag * 5.0).abs() < 1e-4,
+                    "channel {m}: {sum} != {}", mag * 5.0);
+        }
+    }
+
+    #[test]
+    fn eq5_fails_same_pad() {
+        // Border clipping breaks exact proportionality for same-pad.
+        let net = tiny_net(1);
+        let mut f = FunctionalNet::new(&net);
+        let mut input = SpikeMap::zeros(1, 4, 4);
+        input.set(0, 0);
+        f.step(&input);
+        let per = 4 * 4;
+        let sum: f32 = f.vmem[0][..per].iter().sum();
+        assert!(sum < 9.0 * 0.25, "clipped corner must lose taps");
+    }
+
+    #[test]
+    fn run_frame_counts_shape() {
+        let net = tiny_net(2);
+        let mut f = FunctionalNet::new(&net);
+        let inputs: Vec<SpikeMap> =
+            (0..4).map(|_| SpikeMap::zeros(1, 4, 4)).collect();
+        let counts = f.run_frame_counts(&inputs);
+        assert_eq!(counts.len(), 2 * 36);
+        assert!(counts.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn dense_geom_consistency() {
+        let g = DenseGeom { fin: 72, fout: 3, src_channels: 2 };
+        assert_eq!(g.fin / g.src_channels, 36);
+    }
+}

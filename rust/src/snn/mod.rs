@@ -1,0 +1,74 @@
+//! SNN substrate: network descriptions, weights, spike trains, encoding
+//! and a functional (f32) LIF model.
+//!
+//! The network geometry mirrors `python/compile/model.py` exactly; the
+//! weights are the ANN->SNN-converted parameters written by
+//! `make artifacts` (`<name>.weights.{bin,json}`).
+
+mod encode;
+mod functional;
+mod spikes;
+mod weights;
+
+pub use encode::{encode_phased, encode_phased_u8};
+pub use functional::{FunctionalNet, LayerOutput};
+pub use spikes::SpikeMap;
+pub use weights::{LayerWeights, NetworkWeights, WeightsMeta};
+
+
+
+/// Which of the paper's two benchmark networks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetKind {
+    /// `28x28-16c-32c-8c-10` MNIST-substitute classifier (paper §IV).
+    Classifier,
+    /// `160x80x3-8C3-16C3-32C3-32C3-16C3-1C3` road segmenter (paper §IV).
+    Segmenter,
+}
+
+impl NetKind {
+    /// Artifact base name for the APRC / plain conv variant.
+    pub fn variant_name(self, aprc: bool) -> &'static str {
+        match (self, aprc) {
+            (NetKind::Classifier, true) => "classifier_aprc",
+            (NetKind::Classifier, false) => "classifier_plain",
+            (NetKind::Segmenter, true) => "segmenter_aprc",
+            (NetKind::Segmenter, false) => "segmenter_plain",
+        }
+    }
+}
+
+/// Geometry of one conv layer instance inside a concrete network variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub cin: usize,
+    pub cout: usize,
+    pub r: usize,
+    pub pad: usize,
+    /// Input feature map height/width.
+    pub h: usize,
+    pub w: usize,
+    /// Output feature map height/width (`h + 2*pad - r + 1`).
+    pub eh: usize,
+    pub ew: usize,
+}
+
+impl ConvGeom {
+    /// Synaptic operations triggered by ONE input spike in this layer for
+    /// ONE output channel: the spike fans out to an RxR window (clipped at
+    /// the borders; we count the unclipped worst case like the paper's SOp
+    /// accounting).
+    pub fn synops_per_spike(&self) -> usize {
+        self.r * self.r
+    }
+}
+
+/// Geometry of the optional dense output layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DenseGeom {
+    pub fin: usize,
+    pub fout: usize,
+    /// Channel count of the conv layer feeding the flattened input — the
+    /// CBWS schedule groups dense inputs by source channel.
+    pub src_channels: usize,
+}

@@ -1,0 +1,215 @@
+//! Bit-packed binary spike maps.
+//!
+//! A `SpikeMap` is the unit the spike scheduler scans: one timestep of one
+//! layer's (C, H, W) binary activity, packed 64 neurons per word. Packing
+//! matters twice: it is the paper's neuron-state-memory layout (the
+//! scheduler detects firing neurons by scanning words, §III-A) and it is
+//! the simulator hot path (popcount per word instead of per-neuron
+//! branches — see DESIGN.md §8).
+
+/// Bit-packed (C, H, W) binary spike map; channel-major, rows packed
+/// per-channel so per-channel popcounts never straddle channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikeMap {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// words_per_channel = ceil(h*w / 64)
+    wpc: usize,
+    words: Vec<u64>,
+}
+
+impl SpikeMap {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        let wpc = (h * w + 63) / 64;
+        Self { c, h, w, wpc, words: vec![0; c * wpc] }
+    }
+
+    /// Words per channel (packing stride).
+    pub fn words_per_channel(&self) -> usize {
+        self.wpc
+    }
+
+    /// Assemble from pre-packed words (len must be `c * wpc`); used by
+    /// the parallel functional model which packs per-channel chunks on
+    /// worker threads.
+    pub fn from_words(c: usize, h: usize, w: usize, words: Vec<u64>)
+                      -> Self {
+        let wpc = (h * w + 63) / 64;
+        assert_eq!(words.len(), c * wpc);
+        Self { c, h, w, wpc, words }
+    }
+
+    /// Build from a dense f32 slice (C*H*W, values 0.0/1.0) — the format
+    /// the PJRT runtime returns.
+    pub fn from_f32(c: usize, h: usize, w: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), c * h * w);
+        let mut m = Self::zeros(c, h, w);
+        let per = h * w;
+        for ch in 0..c {
+            for i in 0..per {
+                if data[ch * per + i] >= 0.5 {
+                    m.set(ch, i);
+                }
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn set(&mut self, ch: usize, idx: usize) {
+        self.words[ch * self.wpc + idx / 64] |= 1u64 << (idx % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, ch: usize, idx: usize) -> bool {
+        (self.words[ch * self.wpc + idx / 64] >> (idx % 64)) & 1 == 1
+    }
+
+    /// Words of one channel (the scheduler's scan granularity).
+    #[inline]
+    pub fn channel_words(&self, ch: usize) -> &[u64] {
+        &self.words[ch * self.wpc..(ch + 1) * self.wpc]
+    }
+
+    /// Number of spikes in channel `ch` (one popcount per word).
+    #[inline]
+    pub fn nnz_channel(&self, ch: usize) -> usize {
+        self.channel_words(ch).iter()
+            .map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Total spikes in the map.
+    pub fn nnz(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Per-channel spike counts.
+    pub fn nnz_per_channel(&self) -> Vec<usize> {
+        (0..self.c).map(|ch| self.nnz_channel(ch)).collect()
+    }
+
+    /// Iterate (channel, linear index) of set bits — the event stream the
+    /// spike scheduler emits.
+    pub fn iter_events(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.c).flat_map(move |ch| {
+            self.channel_words(ch).iter().enumerate()
+                .flat_map(move |(wi, &word)| {
+                    let mut rem = word;
+                    std::iter::from_fn(move || {
+                        if rem == 0 {
+                            return None;
+                        }
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        Some((ch, wi * 64 + b))
+                    })
+                })
+                .filter(move |&(_, idx)| idx < self.h * self.w)
+        })
+    }
+
+    /// Dense f32 view (for feeding the runtime).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let per = self.h * self.w;
+        let mut out = vec![0.0f32; self.c * per];
+        for (ch, idx) in self.iter_events() {
+            out[ch * per + idx] = 1.0;
+        }
+        out
+    }
+
+    /// Total number of neurons.
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spike rate over the whole map.
+    pub fn rate(&self) -> f64 {
+        self.nnz() as f64 / self.len() as f64
+    }
+
+    /// Memory words the spike scheduler must scan for this map.
+    pub fn scan_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Spike counts per interleaved row-group: counts[g] = spikes in rows
+    /// `r` with `r % n == g`, summed over channels. This is the
+    /// row-interleaved work split the SPE streams use when a layer has
+    /// fewer input channels than SPEs (see sim::timing).
+    pub fn nnz_row_interleaved(&self, n: usize) -> Vec<u64> {
+        let mut counts = vec![0u64; n];
+        for (_, idx) in self.iter_events() {
+            let row = idx / self.w;
+            counts[row % n] += 1;
+        }
+        counts
+    }
+
+    /// Spike counts per interleaved *neuron* group: counts[g] = spikes at
+    /// linear index `ch*h*w + idx` with `index % n == g`. The dense
+    /// layer's SPE split: weight rows are per input neuron, so neurons
+    /// interleave freely across SPEs.
+    pub fn nnz_index_interleaved(&self, n: usize) -> Vec<u64> {
+        let per = self.h * self.w;
+        let mut counts = vec![0u64; n];
+        for (ch, idx) in self.iter_events() {
+            counts[(ch * per + idx) % n] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let mut data = vec![0.0f32; 3 * 5 * 7];
+        data[0] = 1.0;
+        data[36] = 1.0;
+        data[104] = 1.0;
+        let m = SpikeMap::from_f32(3, 5, 7, &data);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.to_f32(), data);
+    }
+
+    #[test]
+    fn per_channel_counts() {
+        let mut m = SpikeMap::zeros(2, 8, 8);
+        for i in 0..10 {
+            m.set(0, i * 3);
+        }
+        m.set(1, 63);
+        m.set(1, 64 - 1); // same bit, idempotent
+        assert_eq!(m.nnz_channel(0), 10);
+        assert_eq!(m.nnz_channel(1), 1);
+        assert_eq!(m.nnz(), 11);
+    }
+
+    #[test]
+    fn events_match_bits() {
+        let mut m = SpikeMap::zeros(4, 9, 9);
+        let idxs = [(0, 0), (0, 80), (2, 13), (3, 64), (3, 65)];
+        for &(c, i) in &idxs {
+            m.set(c, i);
+        }
+        let got: Vec<_> = m.iter_events().collect();
+        assert_eq!(got, idxs.to_vec());
+    }
+
+    #[test]
+    fn word_boundary_straddle_excluded() {
+        // h*w = 65 means bit 65..127 of the 2nd word must never report.
+        let mut m = SpikeMap::zeros(1, 5, 13);
+        m.set(0, 64);
+        assert_eq!(m.nnz_channel(0), 1);
+        assert_eq!(m.iter_events().count(), 1);
+    }
+}

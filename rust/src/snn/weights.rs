@@ -1,0 +1,318 @@
+//! Loader for the `<name>.weights.{bin,json}` interchange written by
+//! `python/compile/train.save_weights`.
+//!
+//! The `.bin` is raw little-endian f32 in layer order (conv OIHW ...,
+//! dense W (K,F), dense b (K)); the `.json` carries shapes/offsets plus
+//! the conversion metadata (vth, lambdas, eval metrics). Parsing uses the
+//! in-crate [`crate::util::Json`] (the build is offline; no serde).
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::{ConvGeom, DenseGeom};
+use crate::data::fnv1a64;
+use crate::util::Json;
+
+/// One entry of the json `layers` list.
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub layer: usize,
+    pub pad: Option<usize>,
+}
+
+impl LayerEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            kind: v.field("kind")?.as_str()?.to_string(),
+            shape: v.field("shape")?.usize_vec()?,
+            offset: v.field("offset")?.as_usize()?,
+            layer: v.get("layer").map(|x| x.as_usize()).transpose()?
+                .unwrap_or(0),
+            pad: v.get("pad").filter(|x| !x.is_null())
+                .map(|x| x.as_usize()).transpose()?,
+        })
+    }
+}
+
+/// `<name>.weights.json` (see train.save_weights for the writer).
+#[derive(Debug, Clone)]
+pub struct WeightsMeta {
+    pub name: String,
+    pub aprc: bool,
+    pub pad: usize,
+    pub vth: f32,
+    pub timesteps: usize,
+    pub in_shape: Vec<usize>,
+    pub feature_sizes: Vec<Vec<usize>>,
+    pub dense_out: Option<usize>,
+    pub total_floats: usize,
+    pub lambdas: Vec<f64>,
+    pub layers: Vec<LayerEntry>,
+    pub blob_fnv1a64: String,
+    pub ann_metric: Option<f64>,
+    pub snn_metric: Option<f64>,
+    pub seg_rate_threshold: Option<f64>,
+}
+
+impl WeightsMeta {
+    /// Parse from JSON text (python `json.dumps` output).
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let opt_f64 = |key: &str| -> Result<Option<f64>> {
+            v.get(key).filter(|x| !x.is_null())
+                .map(|x| x.as_f64()).transpose()
+        };
+        Ok(Self {
+            name: v.field("name")?.as_str()?.to_string(),
+            aprc: v.field("aprc")?.as_bool()?,
+            pad: v.field("pad")?.as_usize()?,
+            vth: v.field("vth")?.as_f64()? as f32,
+            timesteps: v.field("timesteps")?.as_usize()?,
+            in_shape: v.field("in_shape")?.usize_vec()?,
+            feature_sizes: v.field("feature_sizes")?.as_arr()?.iter()
+                .map(|x| x.usize_vec()).collect::<Result<_>>()?,
+            dense_out: v.get("dense_out").filter(|x| !x.is_null())
+                .map(|x| x.as_usize()).transpose()?,
+            total_floats: v.field("total_floats")?.as_usize()?,
+            lambdas: v.field("lambdas")?.f64_vec()?,
+            layers: v.field("layers")?.as_arr()?.iter()
+                .map(LayerEntry::from_json).collect::<Result<_>>()?,
+            blob_fnv1a64: v.field("blob_fnv1a64")?.as_str()?.to_string(),
+            ann_metric: opt_f64("ann_metric")?,
+            snn_metric: opt_f64("snn_metric")?,
+            seg_rate_threshold: opt_f64("seg_rate_threshold")?,
+        })
+    }
+}
+
+/// Weights of a single layer.
+#[derive(Debug, Clone)]
+pub enum LayerWeights {
+    /// OIHW conv filters with geometry.
+    Conv { geom: ConvGeom, w: Vec<f32> },
+    /// Dense (K, F) weights + K bias.
+    Dense { geom: DenseGeom, w: Vec<f32>, b: Vec<f32> },
+}
+
+impl LayerWeights {
+    /// Number of output channels (filters) of this layer.
+    pub fn cout(&self) -> usize {
+        match self {
+            LayerWeights::Conv { geom, .. } => geom.cout,
+            LayerWeights::Dense { geom, .. } => geom.fout,
+        }
+    }
+
+    /// APRC filter magnitudes: the summed elements of each filter
+    /// (paper §III-B). For dense layers, per-output-row sums.
+    pub fn filter_magnitudes(&self) -> Vec<f64> {
+        match self {
+            LayerWeights::Conv { geom, w } => {
+                let per = geom.cin * geom.r * geom.r;
+                (0..geom.cout)
+                    .map(|m| w[m * per..(m + 1) * per].iter()
+                        .map(|&x| x as f64).sum())
+                    .collect()
+            }
+            LayerWeights::Dense { geom, w, .. } => (0..geom.fout)
+                .map(|k| w[k * geom.fin..(k + 1) * geom.fin].iter()
+                    .map(|&x| x as f64).sum())
+                .collect(),
+        }
+    }
+
+    /// Per-filter sum of squared weights — the fluctuation term of the
+    /// rectified-Gaussian APRC extension (see `schedule::aprc`).
+    pub fn filter_sumsq(&self) -> Vec<f64> {
+        match self {
+            LayerWeights::Conv { geom, w } => {
+                let per = geom.cin * geom.r * geom.r;
+                (0..geom.cout)
+                    .map(|m| w[m * per..(m + 1) * per].iter()
+                        .map(|&x| (x as f64) * (x as f64)).sum())
+                    .collect()
+            }
+            LayerWeights::Dense { geom, w, .. } => (0..geom.fout)
+                .map(|k| w[k * geom.fin..(k + 1) * geom.fin].iter()
+                    .map(|&x| (x as f64) * (x as f64)).sum())
+                .collect(),
+        }
+    }
+}
+
+/// A fully-loaded network variant.
+#[derive(Debug, Clone)]
+pub struct NetworkWeights {
+    pub meta: WeightsMeta,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl NetworkWeights {
+    /// Load `<dir>/<name>.weights.{bin,json}` and verify the blob hash.
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let json_path = dir.join(format!("{name}.weights.json"));
+        let bin_path = dir.join(format!("{name}.weights.bin"));
+        let meta = WeightsMeta::parse(
+            &std::fs::read_to_string(&json_path).with_context(
+                || format!("reading {json_path:?} — run `make artifacts`"))?)?;
+        let blob = std::fs::read(&bin_path)
+            .with_context(|| format!("reading {bin_path:?}"))?;
+        ensure!(blob.len() == meta.total_floats * 4,
+                "blob size {} != {} floats", blob.len(), meta.total_floats);
+        let got = format!("{:016x}", fnv1a64(&blob));
+        ensure!(got == meta.blob_fnv1a64,
+                "weights blob hash mismatch: {got} != {}", meta.blob_fnv1a64);
+        let floats: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::assemble(meta, &floats)
+    }
+
+    /// Build from parsed metadata + raw floats (also used by tests).
+    pub fn assemble(meta: WeightsMeta, floats: &[f32]) -> Result<Self> {
+        let mut layers = Vec::new();
+        let (mut h, mut w) = (meta.in_shape[1], meta.in_shape[2]);
+        let mut cin = meta.in_shape[0];
+        let mut dense_w: Option<(Vec<usize>, Vec<f32>)> = None;
+        let mut dense_b: Option<Vec<f32>> = None;
+        for e in &meta.layers {
+            let n: usize = e.shape.iter().product();
+            ensure!(e.offset + n <= floats.len(),
+                    "layer {} out of range", e.kind);
+            let data = floats[e.offset..e.offset + n].to_vec();
+            match e.kind.as_str() {
+                "conv" => {
+                    let (cout, ci, r, r2) =
+                        (e.shape[0], e.shape[1], e.shape[2], e.shape[3]);
+                    ensure!(ci == cin && r == r2,
+                            "conv geometry mismatch at layer {}", e.layer);
+                    let pad = e.pad.unwrap_or(meta.pad);
+                    let eh = h + 2 * pad - r + 1;
+                    let ew = w + 2 * pad - r + 1;
+                    layers.push(LayerWeights::Conv {
+                        geom: ConvGeom { cin, cout, r, pad, h, w, eh, ew },
+                        w: data,
+                    });
+                    cin = cout;
+                    h = eh;
+                    w = ew;
+                }
+                "dense_w" => dense_w = Some((e.shape.clone(), data)),
+                "dense_b" => dense_b = Some(data),
+                other => return Err(anyhow!("unknown layer kind {other}")),
+            }
+        }
+        if let (Some((shape, wdat)), Some(bdat)) = (dense_w, dense_b) {
+            let (fout, fin) = (shape[0], shape[1]);
+            ensure!(fin == cin * h * w, "dense fin {} != {}", fin,
+                    cin * h * w);
+            layers.push(LayerWeights::Dense {
+                geom: DenseGeom { fin, fout, src_channels: cin },
+                w: wdat,
+                b: bdat,
+            });
+        }
+        Ok(Self { meta, layers })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Conv geometry of layer `l` (panics on the dense layer).
+    pub fn conv_geom(&self, l: usize) -> ConvGeom {
+        match &self.layers[l] {
+            LayerWeights::Conv { geom, .. } => *geom,
+            _ => panic!("layer {l} is not conv"),
+        }
+    }
+
+    /// Input spike-map shape (C, H, W) seen by layer `l`.
+    pub fn layer_input_shape(&self, l: usize) -> (usize, usize, usize) {
+        match &self.layers[l] {
+            LayerWeights::Conv { geom, .. } => (geom.cin, geom.h, geom.w),
+            LayerWeights::Dense { geom, .. } => {
+                // Flattened input viewed as (src_channels, 1, per_channel).
+                let per = geom.fin / geom.src_channels;
+                (geom.src_channels, 1, per)
+            }
+        }
+    }
+
+    /// Output spike-map shape (C, H, W) of layer `l`.
+    pub fn layer_output_shape(&self, l: usize) -> (usize, usize, usize) {
+        match &self.layers[l] {
+            LayerWeights::Conv { geom, .. } => (geom.cout, geom.eh, geom.ew),
+            LayerWeights::Dense { geom, .. } => (geom.fout, 1, 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_meta() -> WeightsMeta {
+        WeightsMeta::parse(r#"{
+            "name": "tiny", "aprc": true, "pad": 2, "vth": 1.0,
+            "timesteps": 4, "in_shape": [1, 4, 4],
+            "feature_sizes": [[2, 6, 6]], "dense_out": 3,
+            "total_floats": 237,
+            "lambdas": [1.0],
+            "layers": [
+                {"kind": "conv", "shape": [2,1,3,3], "offset": 0,
+                 "layer": 0, "pad": 2},
+                {"kind": "dense_w", "shape": [3, 72], "offset": 18,
+                 "layer": 1},
+                {"kind": "dense_b", "shape": [3], "offset": 234,
+                 "layer": 1}
+            ],
+            "blob_fnv1a64": "0"
+        }"#).unwrap()
+    }
+
+    #[test]
+    fn assemble_tiny() {
+        let meta = tiny_meta();
+        let floats = vec![0.5f32; meta.total_floats];
+        let net = NetworkWeights::assemble(meta, &floats).unwrap();
+        assert_eq!(net.num_layers(), 2);
+        let g = net.conv_geom(0);
+        assert_eq!((g.eh, g.ew), (6, 6));
+        assert_eq!(net.layer_output_shape(1), (3, 1, 1));
+        // magnitude of a 1x3x3 filter of 0.5s = 4.5
+        let mags = net.layers[0].filter_magnitudes();
+        assert!((mags[0] - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_input_grouped_by_source_channel() {
+        let meta = tiny_meta();
+        let floats = vec![0.1f32; meta.total_floats];
+        let net = NetworkWeights::assemble(meta, &floats).unwrap();
+        assert_eq!(net.layer_input_shape(1), (2, 1, 36));
+    }
+
+    #[test]
+    fn optional_metrics_parse() {
+        let mut src = r#"{
+            "name": "m", "aprc": false, "pad": 1, "vth": 1.0,
+            "timesteps": 8, "in_shape": [1, 4, 4], "feature_sizes": [],
+            "dense_out": null, "total_floats": 0, "lambdas": [],
+            "layers": [], "blob_fnv1a64": "0""#.to_string();
+        src.push_str(r#", "snn_metric": 0.985, "seg_rate_threshold": null}"#);
+        let m = WeightsMeta::parse(&src).unwrap();
+        assert_eq!(m.snn_metric, Some(0.985));
+        assert_eq!(m.seg_rate_threshold, None);
+        assert_eq!(m.dense_out, None);
+    }
+}

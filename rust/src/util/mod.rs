@@ -1,0 +1,6 @@
+//! In-crate utilities replacing external dependencies (the build is
+//! fully offline; see Cargo.toml).
+
+pub mod json;
+
+pub use json::Json;

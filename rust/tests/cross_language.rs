@@ -1,0 +1,90 @@
+//! Cross-language determinism: the rust ports of the dataset generators
+//! and the phased encoder must match the python originals byte-for-byte.
+//! The python side records FNV-1a hashes in `artifacts/meta.json` at
+//! `make artifacts` time; we regenerate and compare.
+
+use std::path::PathBuf;
+
+use skydiver::data::{fnv1a64, gen_digits, gen_road_scenes};
+use skydiver::snn::encode_phased_u8;
+use skydiver::util::Json;
+
+fn artifacts() -> PathBuf {
+    skydiver::artifacts_dir()
+}
+
+fn meta() -> Option<Json> {
+    let text = std::fs::read_to_string(artifacts().join("meta.json")).ok()?;
+    Some(Json::parse(&text).expect("meta.json parses"))
+}
+
+#[test]
+fn digits_hash_matches_python() {
+    let Some(meta) = meta() else {
+        panic!("meta.json missing — run `make artifacts`");
+    };
+    let d = meta.field("datasets").unwrap().field("digits").unwrap();
+    let seed = d.field("test_seed").unwrap().as_usize().unwrap() as u64;
+    let expect = d.field("test_hash16").unwrap().as_str().unwrap();
+    let (imgs, labels) = gen_digits(seed, 16);
+    let mut blob = imgs.clone();
+    blob.extend_from_slice(&labels);
+    assert_eq!(format!("{:016x}", fnv1a64(&blob)), expect,
+               "digit generator diverged from python");
+}
+
+#[test]
+fn roads_hash_matches_python() {
+    let Some(meta) = meta() else {
+        panic!("meta.json missing — run `make artifacts`");
+    };
+    let d = meta.field("datasets").unwrap().field("roads").unwrap();
+    let seed = d.field("test_seed").unwrap().as_usize().unwrap() as u64;
+    let expect = d.field("test_hash2").unwrap().as_str().unwrap();
+    let (imgs, masks) = gen_road_scenes(seed, 2);
+    let mut blob = imgs.clone();
+    blob.extend_from_slice(&masks);
+    assert_eq!(format!("{:016x}", fnv1a64(&blob)), expect,
+               "road generator diverged from python");
+}
+
+#[test]
+fn encoder_matches_python() {
+    let Some(meta) = meta() else {
+        panic!("meta.json missing — run `make artifacts`");
+    };
+    let e = meta.field("encoding_crosscheck").unwrap();
+    let seed = e.field("image_seed").unwrap().as_usize().unwrap() as u64;
+    let t = e.field("timesteps").unwrap().as_usize().unwrap();
+    let expect_count = e.field("spike_count").unwrap().as_usize().unwrap();
+    let expect_hash = e.field("fnv1a64").unwrap().as_str().unwrap();
+
+    let (imgs, _) = gen_digits(seed, 1);
+    let maps = encode_phased_u8(&imgs[..28 * 28], 1, 28, 28, t);
+    // Python hashed the (T, 1, 28, 28) u8 spike tensor.
+    let mut blob = Vec::with_capacity(t * 28 * 28);
+    let mut count = 0usize;
+    for m in &maps {
+        for i in 0..28 * 28 {
+            let s = m.get(0, i) as u8;
+            count += s as usize;
+            blob.push(s);
+        }
+    }
+    assert_eq!(count, expect_count, "total spike count diverged");
+    assert_eq!(format!("{:016x}", fnv1a64(&blob)), expect_hash,
+               "phased encoder diverged from python");
+}
+
+#[test]
+fn weights_blob_hashes_verify() {
+    // NetworkWeights::load verifies the fnv hash internally; loading all
+    // four variants is the cross-check.
+    let dir = artifacts();
+    for name in ["classifier_aprc", "classifier_plain", "segmenter_aprc",
+                 "segmenter_plain"] {
+        let net = skydiver::snn::NetworkWeights::load(&dir, name)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(net.num_layers() >= 3);
+    }
+}

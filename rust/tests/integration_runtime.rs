@@ -1,0 +1,125 @@
+//! Integration: PJRT runtime executes the AOT step functions and agrees
+//! with the in-crate functional model — the L1/L2 <-> L3 contract.
+//!
+//! Requires `make artifacts` (skips loudly otherwise is NOT allowed:
+//! these tests are the core correctness signal of the AOT bridge).
+
+use skydiver::runtime::{Runtime, SnnRunner};
+use skydiver::snn::{encode_phased_u8, FunctionalNet, NetworkWeights};
+
+fn load(name: &str) -> NetworkWeights {
+    NetworkWeights::load(&skydiver::artifacts_dir(), name)
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn classifier_golden_matches_functional() {
+    let net = load("classifier_aprc");
+    let rt = Runtime::cpu().expect("PJRT cpu client");
+    let step = rt.load_step(&skydiver::artifacts_dir(), &net).unwrap();
+
+    let (imgs, _) = skydiver::data::gen_digits(0x17E57, 4);
+    let t = net.meta.timesteps;
+    let mut total = 0usize;
+    let mut mismatched = 0usize;
+    for img in imgs.chunks(28 * 28) {
+        let inputs = encode_phased_u8(img, 1, 28, 28, t);
+        let golden = SnnRunner::new(&step).unwrap()
+            .run_frame(&inputs).unwrap();
+        let functional = FunctionalNet::new(&net).run_frame(&inputs);
+        assert_eq!(golden.len(), functional.len());
+        for (g_step, f_step) in golden.iter().zip(&functional) {
+            for (l, (g, f)) in g_step.iter()
+                .zip(f_step.iter().map(|o| &o.spikes)).enumerate() {
+                assert_eq!((g.c, g.h, g.w), (f.c, f.h, f.w),
+                           "layer {l} shape");
+                total += g.len();
+                for ch in 0..g.c {
+                    for i in 0..g.h * g.w {
+                        if g.get(ch, i) != f.get(ch, i) {
+                            mismatched += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // f32 summation-order differences may flip neurons sitting exactly
+    // at threshold; must be a vanishing fraction.
+    let frac = mismatched as f64 / total as f64;
+    assert!(frac < 1e-3,
+            "golden vs functional spike mismatch {frac} ({mismatched}/{total})");
+}
+
+#[test]
+fn classifier_golden_predictions_correct() {
+    let net = load("classifier_aprc");
+    let rt = Runtime::cpu().unwrap();
+    let step = rt.load_step(&skydiver::artifacts_dir(), &net).unwrap();
+    let (imgs, labels) = skydiver::data::gen_digits(0x7E57D161, 16);
+    let t = net.meta.timesteps;
+    let mut correct = 0;
+    for (img, &label) in imgs.chunks(28 * 28).zip(&labels) {
+        let inputs = encode_phased_u8(img, 1, 28, 28, t);
+        let counts = SnnRunner::new(&step).unwrap()
+            .run_frame_counts(&inputs).unwrap();
+        let pred = counts.iter().enumerate()
+            .max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap();
+        correct += (pred == label as usize) as usize;
+    }
+    // Paper claims 98.5%; on 16 easy synthetic digits demand >= 14.
+    assert!(correct >= 14, "only {correct}/16 correct via PJRT");
+}
+
+#[test]
+fn segmenter_golden_runs_and_masks() {
+    let net = load("segmenter_aprc");
+    let rt = Runtime::cpu().unwrap();
+    let step = rt.load_step(&skydiver::artifacts_dir(), &net).unwrap();
+    let (imgs, masks) = skydiver::data::gen_road_scenes(0x7E570AD5, 1);
+    let (h, w) = (skydiver::data::ROAD_H, skydiver::data::ROAD_W);
+    let mut chw = vec![0u8; 3 * h * w];
+    for y in 0..h {
+        for x in 0..w {
+            for c in 0..3 {
+                chw[c * h * w + y * w + x] = imgs[(y * w + x) * 3 + c];
+            }
+        }
+    }
+    let inputs = encode_phased_u8(&chw, 3, h, w, net.meta.timesteps);
+    let counts = SnnRunner::new(&step).unwrap()
+        .run_frame_counts(&inputs).unwrap();
+
+    // IoU of thresholded rates vs ground truth must be high (~0.99 at
+    // calibration; demand > 0.8 here).
+    let thr = net.meta.seg_rate_threshold.unwrap_or(0.5);
+    let t = net.meta.timesteps as f64;
+    let (_, oh, ow) = net.layer_output_shape(net.num_layers() - 1);
+    let (dh, dw) = ((oh - h) / 2, (ow - w) / 2);
+    let mut inter = 0usize;
+    let mut union = 0usize;
+    for y in 0..h {
+        for x in 0..w {
+            let pred = counts[(y + dh) * ow + (x + dw)] as f64 / t >= thr;
+            let gt = masks[y * w + x] == 1;
+            inter += (pred && gt) as usize;
+            union += (pred || gt) as usize;
+        }
+    }
+    let iou = inter as f64 / union.max(1) as f64;
+    assert!(iou > 0.8, "segmentation IoU via PJRT too low: {iou}");
+}
+
+#[test]
+fn runner_reset_between_frames() {
+    let net = load("classifier_aprc");
+    let rt = Runtime::cpu().unwrap();
+    let step = rt.load_step(&skydiver::artifacts_dir(), &net).unwrap();
+    let (imgs, _) = skydiver::data::gen_digits(0xAB, 1);
+    let inputs = encode_phased_u8(&imgs[..28 * 28], 1, 28, 28,
+                                  net.meta.timesteps);
+    let mut runner = SnnRunner::new(&step).unwrap();
+    let a = runner.run_frame_counts(&inputs).unwrap();
+    let b = runner.run_frame_counts(&inputs).unwrap();
+    assert_eq!(a, b, "state leaked across frames");
+}

@@ -1,0 +1,212 @@
+//! Property-based tests over randomized inputs (in-crate generator on
+//! SplitMix64 — the build is offline, so no proptest crate; same
+//! shrink-free randomized-invariant methodology, 256 cases per property).
+
+use skydiver::data::SplitMix64;
+use skydiver::schedule::baselines::{Contiguous, Oracle, Random,
+                                    RoundRobin, SparTen};
+use skydiver::schedule::cbws::cbws_assign;
+use skydiver::schedule::{Partition, Scheduler};
+use skydiver::sim::{layer_timing, ArchConfig};
+use skydiver::snn::{ConvGeom, LayerWeights, SpikeMap};
+
+const CASES: usize = 256;
+
+fn rand_workload(rng: &mut SplitMix64, k: usize, scale: u64) -> Vec<f64> {
+    (0..k).map(|_| (rng.next_below(scale) as f64)
+        * if rng.next_below(4) == 0 { 10.0 } else { 1.0 })
+        .collect()
+}
+
+// ---------------- CBWS / Partition invariants ----------------
+
+#[test]
+fn prop_cbws_partitions_exactly() {
+    let mut rng = SplitMix64::new(0xC85);
+    for _ in 0..CASES {
+        let k = 1 + rng.next_below(64) as usize;
+        let n = 1 + rng.next_below(16) as usize;
+        let w = rand_workload(&mut rng, k, 1000);
+        let iters = rng.next_below(100) as usize;
+        let p = cbws_assign(&w, n, iters);
+        assert!(p.validate(k), "k={k} n={n} iters={iters}");
+        assert_eq!(p.groups.len(), n);
+    }
+}
+
+#[test]
+fn prop_cbws_at_least_as_good_as_contiguous_on_predictions() {
+    // On the *predicted* workload itself, CBWS must never lose to the
+    // contiguous baseline (it optimises exactly this quantity).
+    let mut rng = SplitMix64::new(0xC85 + 1);
+    for _ in 0..CASES {
+        let k = 2 + rng.next_below(48) as usize;
+        let n = 1 + rng.next_below(12) as usize;
+        let w = rand_workload(&mut rng, k, 500);
+        let cbws = cbws_assign(&w, n, 64).balance_ratio(&w);
+        let cont = Contiguous.assign(&w, n).balance_ratio(&w);
+        assert!(cbws >= cont - 1e-9,
+                "cbws {cbws} < contiguous {cont} (k={k}, n={n}, w={w:?})");
+    }
+}
+
+#[test]
+fn prop_oracle_within_lpt_bound_of_all() {
+    // Oracle is greedy longest-processing-time, a 4/3-approximation of
+    // the optimal makespan — so any scheduler may beat it by at most
+    // that factor on the balance ratio.
+    let mut rng = SplitMix64::new(0xC85 + 2);
+    let zoo: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Contiguous), Box::new(RoundRobin),
+        Box::new(Random { seed: 7 }), Box::new(SparTen),
+    ];
+    for _ in 0..CASES {
+        let k = 2 + rng.next_below(32) as usize;
+        let n = 1 + rng.next_below(8) as usize;
+        let w = rand_workload(&mut rng, k, 300);
+        let oracle = Oracle.assign(&w, n).balance_ratio(&w);
+        for s in &zoo {
+            let b = s.assign(&w, n).balance_ratio(&w);
+            assert!(oracle >= b * 0.75 - 1e-9,
+                    "{} {b} beats oracle {oracle} beyond the LPT bound",
+                    s.name());
+        }
+        let cbws = cbws_assign(&w, n, 64).balance_ratio(&w);
+        assert!(oracle >= cbws * 0.75 - 1e-9,
+                "cbws {cbws} beats oracle {oracle} beyond the LPT bound");
+    }
+}
+
+#[test]
+fn prop_balance_ratio_in_unit_interval() {
+    let mut rng = SplitMix64::new(0xC85 + 3);
+    for _ in 0..CASES {
+        let k = 1 + rng.next_below(40) as usize;
+        let n = 1 + rng.next_below(10) as usize;
+        let w = rand_workload(&mut rng, k, 100);
+        for p in [cbws_assign(&w, n, 16),
+                  Contiguous.assign(&w, n),
+                  RoundRobin.assign(&w, n)] {
+            let b = p.balance_ratio(&w);
+            assert!((0.0..=1.0 + 1e-12).contains(&b), "ratio {b}");
+        }
+    }
+}
+
+// ---------------- SpikeMap invariants ----------------
+
+#[test]
+fn prop_spikemap_roundtrip_and_counts() {
+    let mut rng = SplitMix64::new(0x5B1);
+    for _ in 0..CASES {
+        let c = 1 + rng.next_below(8) as usize;
+        let h = 1 + rng.next_below(20) as usize;
+        let w = 1 + rng.next_below(20) as usize;
+        let mut dense = vec![0.0f32; c * h * w];
+        let spikes = rng.next_below((c * h * w) as u64 + 1) as usize;
+        for _ in 0..spikes {
+            let i = rng.next_below((c * h * w) as u64) as usize;
+            dense[i] = 1.0;
+        }
+        let m = SpikeMap::from_f32(c, h, w, &dense);
+        // Roundtrip.
+        assert_eq!(m.to_f32(), dense);
+        // Counts agree in three independent ways.
+        let by_channel: usize = m.nnz_per_channel().iter().sum();
+        let by_events = m.iter_events().count();
+        let by_dense = dense.iter().filter(|&&v| v >= 0.5).count();
+        assert_eq!(m.nnz(), by_channel);
+        assert_eq!(m.nnz(), by_events);
+        assert_eq!(m.nnz(), by_dense);
+    }
+}
+
+// ---------------- Timing-model invariants ----------------
+
+fn rand_conv(rng: &mut SplitMix64) -> LayerWeights {
+    let cin = 1 + rng.next_below(16) as usize;
+    let cout = 1 + rng.next_below(32) as usize;
+    let h = 4 + rng.next_below(24) as usize;
+    let w = 4 + rng.next_below(24) as usize;
+    let r = 3;
+    let pad = if rng.next_below(2) == 0 { 1 } else { 2 };
+    LayerWeights::Conv {
+        geom: ConvGeom { cin, cout, r, pad, h, w,
+                         eh: h + 2 * pad - r + 1,
+                         ew: w + 2 * pad - r + 1 },
+        w: vec![],
+    }
+}
+
+#[test]
+fn prop_timing_monotone_in_workload() {
+    // Adding spikes can never reduce cycles or ops.
+    let mut rng = SplitMix64::new(0x71E);
+    let arch = ArchConfig::default();
+    for _ in 0..CASES {
+        let layer = rand_conv(&mut rng);
+        let cin = match &layer {
+            LayerWeights::Conv { geom, .. } => geom.cin,
+            _ => unreachable!(),
+        };
+        let nnz: Vec<usize> = (0..cin)
+            .map(|_| rng.next_below(50) as usize).collect();
+        let mut more = nnz.clone();
+        let idx = rng.next_below(cin as u64) as usize;
+        more[idx] += 1 + rng.next_below(20) as usize;
+        let p = RoundRobin.assign(&vec![1.0; cin], 8);
+        let t1 = layer_timing(&arch, &layer, &p, &nnz);
+        let t2 = layer_timing(&arch, &layer, &p, &more);
+        assert!(t2.cycles >= t1.cycles);
+        assert!(t2.synops > t1.synops);
+    }
+}
+
+#[test]
+fn prop_timing_balance_matches_partition_ratio() {
+    // The timing model's balance must equal Partition::balance_ratio on
+    // the same workload.
+    let mut rng = SplitMix64::new(0x71E + 1);
+    let arch = ArchConfig::default();
+    for _ in 0..CASES {
+        let layer = rand_conv(&mut rng);
+        let cin = match &layer {
+            LayerWeights::Conv { geom, .. } => geom.cin,
+            _ => unreachable!(),
+        };
+        let nnz: Vec<usize> = (0..cin)
+            .map(|_| rng.next_below(40) as usize).collect();
+        let wl: Vec<f64> = nnz.iter().map(|&x| x as f64).collect();
+        let p: Partition = SparTen.assign(&wl, 4);
+        let t = layer_timing(&arch, &layer, &p, &nnz);
+        let expect = p.balance_ratio(&wl);
+        assert!((t.balance - expect).abs() < 1e-9,
+                "timing {} vs partition {}", t.balance, expect);
+    }
+}
+
+#[test]
+fn prop_better_balance_never_slower() {
+    // For the same total workload and geometry, a partition with higher
+    // balance ratio must not take more compute cycles.
+    let mut rng = SplitMix64::new(0x71E + 2);
+    let arch = ArchConfig::default();
+    for _ in 0..CASES {
+        let layer = rand_conv(&mut rng);
+        let cin = match &layer {
+            LayerWeights::Conv { geom, .. } => geom.cin,
+            _ => unreachable!(),
+        };
+        let nnz: Vec<usize> = (0..cin)
+            .map(|_| rng.next_below(60) as usize).collect();
+        let wl: Vec<f64> = nnz.iter().map(|&x| x as f64).collect();
+        let a = Oracle.assign(&wl, 8);
+        let b = Contiguous.assign(&wl, 8);
+        let ta = layer_timing(&arch, &layer, &a, &nnz);
+        let tb = layer_timing(&arch, &layer, &b, &nnz);
+        if ta.balance >= tb.balance {
+            assert!(ta.cycles <= tb.cycles,
+                    "higher balance but more cycles");
+        }
+    }
+}
