@@ -1,7 +1,12 @@
 //! Serving demo — the L3 coordinator under load: submit a burst of
-//! classification frames to the batcher + worker pool and report host
-//! throughput, latency percentiles, and the simulated accelerator's
-//! FPS/energy (the paper's Table I view of the same run).
+//! classification frames to the shared work queue + pull-based worker
+//! pool and report host throughput, latency percentiles, host-side
+//! workload balance, and the simulated accelerator's FPS/energy (the
+//! paper's Table I view of the same run).
+//!
+//! The submit loop uses `try_submit`, so the demo also shows the
+//! backpressure path: when the bounded queue fills, the submitter
+//! falls back to a blocking `submit` and counts the stall.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo [frames] [workers]
@@ -10,7 +15,8 @@
 use std::time::Duration;
 
 use anyhow::Result;
-use skydiver::coordinator::{Policy, Service, ServiceConfig, WorkerConfig};
+use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
+                            SubmitError, WorkerConfig};
 use skydiver::power::EnergyModel;
 use skydiver::sim::ArchConfig;
 use skydiver::snn::NetKind;
@@ -34,15 +40,28 @@ fn main() -> Result<()> {
     let scfg = ServiceConfig {
         workers,
         batch_max: 8,
+        // Small on purpose so the burst exercises backpressure.
+        queue_cap: 32,
         batch_wait: Duration::from_millis(2),
+        dispatch: DispatchMode::WorkQueue,
     };
 
     println!("spinning up {} workers; submitting {} frames...", workers,
              frames);
     let service = Service::start(scfg, wcfg)?;
     let (imgs, labels) = skydiver::data::gen_digits(0x5E12E, frames);
+    let mut stalls = 0usize;
     for (i, img) in imgs.chunks(28 * 28).enumerate() {
-        service.submit(i as u64, img.to_vec())?;
+        match service.try_submit(i as u64, img.to_vec()) {
+            Ok(()) => {}
+            Err(SubmitError::Full { .. }) => {
+                // Queue full: fall back to the blocking (backpressured)
+                // path and remember we were throttled.
+                stalls += 1;
+                service.submit(i as u64, img.to_vec())?;
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
     let (responses, report) = service.collect(frames, skydiver::CLOCK_HZ)?;
     service.shutdown()?;
@@ -65,5 +84,10 @@ fn main() -> Result<()> {
     println!("sim energy/frame : {:.1} uJ (paper: 42.4 uJ)",
              report.mean_energy_uj);
     println!("per-worker load  : {:?}", report.per_worker);
+    println!("per-worker busy  : {:?} us", report.per_worker_busy_us);
+    println!("host balance     : {:.1}% (total_busy / workers*max_busy)",
+             100.0 * report.host_balance_ratio);
+    println!("queue depth max  : {}/{} (submit stalled {} times)",
+             report.queue_max_depth, report.queue_capacity, stalls);
     Ok(())
 }

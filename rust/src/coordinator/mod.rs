@@ -1,18 +1,63 @@
 //! Serving coordinator — the L3 request path.
 //!
-//! vLLM-router-shaped: an async front end accepts frames, a batcher
-//! groups them (amortising DMA setup like the paper's host-managed
-//! transfers), a round-robin router dispatches batches to a pool of
-//! worker threads, each owning a full pipeline (its own PJRT client when
-//! golden traces are requested + a configured [`Simulator`]). PJRT
-//! handles are constructed *inside* each worker thread, so no Send/Sync
-//! requirements leak out of the `xla` crate.
+//! A front end accepts frames into a shared bounded work queue; a pool
+//! of worker threads — each owning a full pipeline (its own PJRT client
+//! when golden traces are requested + a configured
+//! [`Simulator`](crate::sim::Simulator)) —
+//! pulls batches from it the moment they free up. PJRT handles are
+//! constructed *inside* each worker thread, so no Send/Sync
+//! requirements leak out of the `xla` crate; the heavyweight read-only
+//! state (loaded weights, APRC predictions, CBWS partitions) is built
+//! once and shared across the pool via `Arc`
+//! ([`worker::SharedPipeline`]).
+//!
+//! ## Serving architecture
+//!
+//! ```text
+//! submit/try_submit --> [ BoundedQueue (cap = queue_cap) ] <-- pull -- worker 0
+//!                                                          <-- pull -- worker 1
+//!         events: Served | Failed | Undeliverable ------------------------+
+//!                                v                                        |
+//!                        Service::collect  <------------------------------+
+//! ```
+//!
+//! **Queue & dispatch.** The submission queue is bounded and shared.
+//! In the default [`DispatchMode::WorkQueue`], each worker pulls up to
+//! `batch_max` frames whenever it is idle — work-conserving, so a slow
+//! frame on one worker never strands queued requests behind it (the
+//! host-level analogue of the SPE workload balance the paper's CBWS
+//! schedule buys, and what `ServingReport::host_balance_ratio`
+//! measures). [`DispatchMode::RoundRobinBatch`] preserves the old
+//! whole-batch round-robin dealing as a comparison baseline.
+//!
+//! **Backpressure.** [`Service::submit`] blocks while the queue is at
+//! `queue_cap`; [`Service::try_submit`] instead returns
+//! [`SubmitError::Full`] so callers can shed load. Both fail fast with
+//! [`SubmitError::NoWorkers`] once every worker has exited — a
+//! submission that nothing will ever drain is refused, not stranded.
+//!
+//! **Failure.** A worker that errors — while building its pipeline or
+//! mid-request — sends [`worker::WorkerEvent::Failed`] (carrying the
+//! count of requests it had in hand that are now lost) before exiting.
+//! [`Service::collect`] therefore always terminates: it returns an
+//! error as soon as any accepted request is lost (a worker died
+//! holding requests — those responses will never arrive) or every
+//! worker has failed or exited, and
+//! [`Service::collect_within`] adds a hard wall-clock bound on top.
+//! Artifact problems (missing/corrupt weights) fail even earlier, at
+//! [`Service::start`], because the pipeline is loaded once up front.
+//!
+//! **Shutdown.** [`Service::shutdown`] closes the queue; workers drain
+//! what remains, exit, and are joined. The first worker error (build
+//! failure, serving failure, panic) is returned to the caller.
 
+mod queue;
 mod service;
 mod stats;
 pub mod worker;
 
-pub use service::{Service, ServiceConfig};
-pub use stats::{ServingReport, Stats};
+pub use queue::{BoundedQueue, QueueStats, SubmitError};
+pub use service::{DispatchMode, Service, ServiceConfig};
+pub use stats::{host_balance_ratio, ServingReport, Stats};
 pub use worker::{default_input_rates, Policy, Request, Response,
-                 WorkerConfig};
+                 SharedPipeline, WorkerConfig, WorkerEvent};

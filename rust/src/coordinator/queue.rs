@@ -1,0 +1,388 @@
+//! Bounded multi-producer / multi-consumer work queue (std-only).
+//!
+//! The serving layer's single point of coordination: submitters push
+//! requests in, workers pull batches out as they free up. Capacity is
+//! fixed at construction — a full queue is the backpressure signal
+//! ([`SubmitError::Full`]) — and the queue tracks its consumer
+//! population so producers are never left blocking on a queue nothing
+//! will ever drain (every worker exit decrements the count via a
+//! [`ConsumerGuard`]; at zero, waiting and future pushes fail with
+//! [`SubmitError::NoWorkers`]).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a submission was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is at capacity (non-blocking submit only). Retry later
+    /// or shed load — this is the backpressure signal.
+    Full { capacity: usize },
+    /// The queue was closed (shutdown has begun).
+    Closed,
+    /// Every consumer (worker) has exited; nothing will drain the
+    /// queue, so accepting the item would strand it forever.
+    NoWorkers,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full { capacity } => {
+                write!(f, "work queue full ({capacity} entries)")
+            }
+            SubmitError::Closed => write!(f, "work queue closed"),
+            SubmitError::NoWorkers => {
+                write!(f, "no live workers to drain the queue")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Point-in-time queue counters for reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    pub capacity: usize,
+    /// Items currently enqueued.
+    pub depth: usize,
+    /// High-water mark of `depth` over the queue's lifetime.
+    pub max_depth: usize,
+    /// Total items ever accepted.
+    pub pushed: u64,
+    /// Total items ever handed to a consumer.
+    pub popped: u64,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    consumers: usize,
+    max_depth: usize,
+    pushed: u64,
+    popped: u64,
+}
+
+/// The queue proper. Shared as `Arc<BoundedQueue<T>>`.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+                consumers: 0,
+                max_depth: 0,
+                pushed: 0,
+                popped: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Register `n` consumers *before* their threads start, so a
+    /// producer can never observe a spurious zero between service
+    /// construction and worker startup.
+    pub fn add_consumers(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.consumers += n;
+    }
+
+    fn consumer_gone(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.consumers = g.consumers.saturating_sub(1);
+        if g.consumers == 0 {
+            // Wake producers blocked on a queue that will never drain
+            // and consumers waiting for items that will never matter.
+            self.not_full.notify_all();
+            self.not_empty.notify_all();
+        }
+    }
+
+    /// Non-blocking push; [`SubmitError::Full`] is the backpressure
+    /// signal.
+    pub fn try_push(&self, item: T) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(SubmitError::Closed);
+        }
+        if g.consumers == 0 {
+            return Err(SubmitError::NoWorkers);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(SubmitError::Full { capacity: self.capacity });
+        }
+        g.items.push_back(item);
+        g.pushed += 1;
+        g.max_depth = g.max_depth.max(g.items.len());
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space (backpressure), failing only if
+    /// the queue closes or every consumer exits while waiting.
+    pub fn push(&self, item: T) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(SubmitError::Closed);
+            }
+            if g.consumers == 0 {
+                return Err(SubmitError::NoWorkers);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                g.pushed += 1;
+                g.max_depth = g.max_depth.max(g.items.len());
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Pull up to `max` items, blocking while the queue is empty.
+    /// Returns `None` once the queue is closed *and* drained — the
+    /// consumer's signal to exit. Greedy: takes whatever is there
+    /// rather than waiting to fill `max`.
+    pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let take = g.items.len().min(max);
+                let batch: Vec<T> = g.items.drain(..take).collect();
+                g.popped += take as u64;
+                drop(g);
+                self.not_full.notify_all();
+                return Some(batch);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Like [`pop_batch`](Self::pop_batch), but after the first item
+    /// arrives keeps waiting up to `fill_wait` for the batch to fill to
+    /// `max` — the legacy batcher's grouping window.
+    pub fn pop_batch_wait(&self, max: usize, fill_wait: Duration)
+                          -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        // Phase 1: block for the first item (or closure).
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        // Phase 2: fill until `max` or the window expires.
+        let deadline = Instant::now() + fill_wait;
+        while g.items.len() < max && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) =
+                self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.items.len().min(max);
+        let batch: Vec<T> = g.items.drain(..take).collect();
+        g.popped += take as u64;
+        drop(g);
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Take everything immediately (no blocking). Used by the legacy
+    /// dispatcher to account for stranded requests when its last worker
+    /// dies.
+    pub fn drain_now(&self) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.items.len();
+        g.popped += n as u64;
+        let out: Vec<T> = g.items.drain(..).collect();
+        drop(g);
+        self.not_full.notify_all();
+        out
+    }
+
+    /// Close the queue: wakes every waiter; pushes fail from now on,
+    /// pops drain the remainder and then return `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        let g = self.inner.lock().unwrap();
+        QueueStats {
+            capacity: self.capacity,
+            depth: g.items.len(),
+            max_depth: g.max_depth,
+            pushed: g.pushed,
+            popped: g.popped,
+        }
+    }
+}
+
+/// RAII token for one registered consumer: dropping it (worker exit,
+/// normal or by failure/panic) decrements the live-consumer count, which
+/// is what converts "all workers died" from an indefinite producer hang
+/// into an immediate [`SubmitError::NoWorkers`].
+pub struct ConsumerGuard<T> {
+    queue: Arc<BoundedQueue<T>>,
+}
+
+impl<T> ConsumerGuard<T> {
+    /// Adopt a consumer slot previously reserved with
+    /// [`BoundedQueue::add_consumers`] (does *not* increment).
+    pub fn adopt(queue: Arc<BoundedQueue<T>>) -> Self {
+        Self { queue }
+    }
+}
+
+impl<T> Drop for ConsumerGuard<T> {
+    fn drop(&mut self) {
+        self.queue.consumer_gone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_and_batching() {
+        let q = BoundedQueue::new(8);
+        q.add_consumers(1);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.pop_batch(3), Some(vec![0, 1, 2]));
+        assert_eq!(q.pop_batch(3), Some(vec![3, 4]));
+    }
+
+    #[test]
+    fn full_queue_reports_backpressure() {
+        let q = BoundedQueue::new(2);
+        q.add_consumers(1);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(SubmitError::Full { capacity: 2 }));
+        assert_eq!(q.stats().max_depth, 2);
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_drains() {
+        let q = BoundedQueue::new(4);
+        q.add_consumers(1);
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(SubmitError::Closed));
+        assert_eq!(q.pop_batch(4), Some(vec![7]));
+        assert_eq!(q.pop_batch(4), None);
+    }
+
+    #[test]
+    fn no_consumers_rejects_push() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        q.add_consumers(1);
+        drop(ConsumerGuard::adopt(q.clone()));
+        assert_eq!(q.try_push(1), Err(SubmitError::NoWorkers));
+        assert_eq!(q.push(1), Err(SubmitError::NoWorkers));
+    }
+
+    #[test]
+    fn blocking_push_unblocks_when_last_consumer_dies() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        q.add_consumers(1);
+        q.try_push(0).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(1)); // blocks: full
+        thread::sleep(Duration::from_millis(20));
+        drop(ConsumerGuard::adopt(q.clone())); // consumers -> 0
+        assert_eq!(h.join().unwrap(), Err(SubmitError::NoWorkers));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        q.add_consumers(1);
+        q.try_push(0).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(1));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_batch(1), Some(vec![0]));
+        assert_eq!(h.join().unwrap(), Ok(()));
+        assert_eq!(q.pop_batch(1), Some(vec![1]));
+    }
+
+    #[test]
+    fn pop_blocks_until_close() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop_batch(2));
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn fill_window_groups_late_arrivals() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(8));
+        q.add_consumers(1);
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            q2.pop_batch_wait(4, Duration::from_millis(200))
+        });
+        thread::sleep(Duration::from_millis(20));
+        q.try_push(2).unwrap();
+        q.try_push(3).unwrap();
+        q.try_push(4).unwrap();
+        assert_eq!(h.join().unwrap(), Some(vec![1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn stats_count_flow() {
+        let q = BoundedQueue::new(4);
+        q.add_consumers(1);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        let _ = q.pop_batch(2);
+        let s = q.stats();
+        assert_eq!((s.pushed, s.popped, s.depth, s.max_depth), (4, 2, 2, 4));
+    }
+}

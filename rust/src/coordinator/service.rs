@@ -1,23 +1,63 @@
-//! The service: submission queue + batcher + round-robin router over a
-//! worker-thread pool (std-only; the build is offline).
+//! The service: a shared bounded work queue feeding a pull-based worker
+//! pool (std-only; the build is offline).
+//!
+//! `submit` pushes into the bounded queue (blocking on backpressure;
+//! `try_submit` reports `Full` instead), workers pull batches as they
+//! free up, and every worker outcome — response or failure — flows back
+//! over one event channel so `collect` can always make progress or
+//! return an error, never hang. A legacy round-robin whole-batch
+//! dispatcher ([`DispatchMode::RoundRobinBatch`]) is kept as the
+//! baseline the work-queue mode is measured against.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, ensure, Result};
 
+use super::queue::{BoundedQueue, ConsumerGuard, QueueStats, SubmitError};
 use super::stats::{ServingReport, Stats};
-use super::worker::{worker_loop, Request, Response, WorkerConfig};
+use super::worker::{worker_loop, Request, Response, SharedPipeline,
+                    WorkSource, WorkerConfig, WorkerEvent};
+
+/// How batches reach the workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Workers pull from the shared queue the moment they free up
+    /// (work-conserving; the default).
+    #[default]
+    WorkQueue,
+    /// A dispatcher thread forms whole batches and deals them
+    /// round-robin to per-worker channels — the pre-rebuild behaviour,
+    /// kept as the head-of-line-blocking baseline.
+    RoundRobinBatch,
+}
+
+impl DispatchMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "queue" | "workqueue" | "pull" => DispatchMode::WorkQueue,
+            "rr" | "round_robin_batch" | "batch" => {
+                DispatchMode::RoundRobinBatch
+            }
+            _ => return None,
+        })
+    }
+}
 
 /// Coordinator-level knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub workers: usize,
-    /// Max frames per dispatched batch.
+    /// Max frames a worker pulls (or the legacy dispatcher groups) at
+    /// once.
     pub batch_max: usize,
-    /// Max time the batcher waits to fill a batch.
+    /// Bounded submission-queue capacity — the backpressure threshold.
+    pub queue_cap: usize,
+    /// Legacy mode only: how long the dispatcher waits to fill a batch.
     pub batch_wait: Duration,
+    pub dispatch: DispatchMode,
 }
 
 impl Default for ServiceConfig {
@@ -25,122 +65,274 @@ impl Default for ServiceConfig {
         Self {
             workers: 2,
             batch_max: 8,
+            queue_cap: 256,
             batch_wait: Duration::from_millis(2),
+            dispatch: DispatchMode::WorkQueue,
         }
     }
 }
 
 /// A running service instance.
 pub struct Service {
-    submit_tx: mpsc::Sender<Request>,
-    resp_rx: mpsc::Receiver<Response>,
+    queue: Arc<BoundedQueue<Request>>,
+    events_rx: mpsc::Receiver<WorkerEvent>,
     handles: Vec<thread::JoinHandle<Result<()>>>,
-    batcher_handle: Option<thread::JoinHandle<()>>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    worker_count: usize,
     started: Instant,
 }
 
 impl Service {
-    /// Spawn workers + batcher. Each worker builds its own pipeline
-    /// (PJRT client included) inside its thread.
+    /// Load the pipeline once (weights + APRC prediction + CBWS
+    /// schedule — artifact problems fail fast here), then spawn the
+    /// worker pool sharing it. Each worker still builds its own PJRT
+    /// client inside its thread; those failures surface through
+    /// `collect`/`shutdown` as errors, not hangs.
     pub fn start(cfg: ServiceConfig, wcfg: WorkerConfig) -> Result<Self> {
-        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
-        let mut worker_txs = Vec::new();
-        let mut handles = Vec::new();
-        for i in 0..cfg.workers {
-            let (tx, rx) = mpsc::channel::<Vec<Request>>();
-            worker_txs.push(tx);
-            let wc = wcfg.clone();
-            let rt = resp_tx.clone();
-            handles.push(thread::Builder::new()
-                .name(format!("skydiver-worker-{i}"))
-                .spawn(move || worker_loop(i, wc, rx, rt))?);
-        }
-        drop(resp_tx);
+        ensure!(cfg.workers > 0, "service needs at least one worker");
+        let shared = SharedPipeline::build(&wcfg)?;
+        let queue: Arc<BoundedQueue<Request>> =
+            Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let (events_tx, events_rx) = mpsc::channel::<WorkerEvent>();
+        let batch_max = cfg.batch_max.max(1);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        let mut dispatcher = None;
 
-        // Batcher: drain the submission queue, group, round-robin
-        // dispatch to the worker pool.
-        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
-        let batch_max = cfg.batch_max;
-        let batch_wait = cfg.batch_wait;
-        let batcher_handle = thread::Builder::new()
-            .name("skydiver-batcher".into())
-            .spawn(move || {
-                let mut next = 0usize;
-                'outer: loop {
-                    // Block for the first request of a batch.
-                    let Ok(first) = submit_rx.recv() else {
-                        break 'outer;
+        match cfg.dispatch {
+            DispatchMode::WorkQueue => {
+                // Reserve consumer slots before any thread runs so a
+                // submit can never race ahead of worker startup.
+                queue.add_consumers(cfg.workers);
+                for i in 0..cfg.workers {
+                    let source = WorkSource::Shared {
+                        queue: queue.clone(),
+                        batch_max,
                     };
-                    let mut batch = vec![first];
-                    let deadline = Instant::now() + batch_wait;
-                    while batch.len() < batch_max {
-                        let now = Instant::now();
-                        if now >= deadline {
-                            break;
-                        }
-                        match submit_rx.recv_timeout(deadline - now) {
-                            Ok(r) => batch.push(r),
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                let _ = worker_txs[next].send(batch);
-                                break 'outer;
-                            }
-                        }
-                    }
-                    if worker_txs[next].send(batch).is_err() {
-                        break 'outer;
-                    }
-                    next = (next + 1) % worker_txs.len();
+                    let (wc, sh, tx) =
+                        (wcfg.clone(), shared.clone(), events_tx.clone());
+                    handles.push(thread::Builder::new()
+                        .name(format!("skydiver-worker-{i}"))
+                        .spawn(move || worker_loop(i, wc, sh, source, tx))?);
                 }
-                // Dropping worker_txs closes the pool.
-            })?;
+            }
+            DispatchMode::RoundRobinBatch => {
+                let mut worker_txs = Vec::with_capacity(cfg.workers);
+                for i in 0..cfg.workers {
+                    let (tx, rx) = mpsc::channel::<Vec<Request>>();
+                    worker_txs.push(tx);
+                    let source = WorkSource::Private(rx);
+                    let (wc, sh, etx) =
+                        (wcfg.clone(), shared.clone(), events_tx.clone());
+                    handles.push(thread::Builder::new()
+                        .name(format!("skydiver-worker-{i}"))
+                        .spawn(move || worker_loop(i, wc, sh, source, etx))?);
+                }
+                // The dispatcher is the queue's one consumer.
+                queue.add_consumers(1);
+                let (q, etx, wait) =
+                    (queue.clone(), events_tx.clone(), cfg.batch_wait);
+                dispatcher = Some(thread::Builder::new()
+                    .name("skydiver-dispatch".into())
+                    .spawn(move || {
+                        rr_dispatch(q, worker_txs, batch_max, wait, etx)
+                    })?);
+            }
+        }
+        drop(events_tx);
 
         Ok(Self {
-            submit_tx,
-            resp_rx,
+            queue,
+            events_rx,
             handles,
-            batcher_handle: Some(batcher_handle),
+            dispatcher,
+            worker_count: cfg.workers,
             started: Instant::now(),
         })
     }
 
-    /// Submit one frame (non-blocking).
+    /// Submit one frame, blocking while the queue is full
+    /// (backpressure). Errors if the service is shutting down or every
+    /// worker has already died.
     pub fn submit(&self, id: u64, pixels: Vec<u8>) -> Result<()> {
-        self.submit_tx.send(Request {
+        self.queue
+            .push(Request { id, pixels, submitted: Instant::now() })
+            .map_err(|e| anyhow!("submit frame {id}: {e}"))
+    }
+
+    /// Non-blocking submit: `Err(SubmitError::Full)` is the
+    /// backpressure signal — shed load or retry later.
+    pub fn try_submit(&self, id: u64, pixels: Vec<u8>)
+                      -> std::result::Result<(), SubmitError> {
+        self.queue.try_push(Request {
             id,
             pixels,
             submitted: Instant::now(),
-        })?;
-        Ok(())
+        })
+    }
+
+    /// Snapshot of the submission queue (depth, high-water mark, flow
+    /// counters).
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
     }
 
     /// Collect exactly `n` responses (blocking), then return stats.
+    /// Returns an error — instead of hanging — as soon as any accepted
+    /// request is lost (a worker died with requests in hand: those
+    /// responses will never arrive, even if others still could) or
+    /// every worker has exited.
     pub fn collect(&self, n: usize, clock_hz: f64)
                    -> Result<(Vec<Response>, ServingReport)> {
+        self.collect_inner(n, clock_hz, None)
+    }
+
+    /// [`collect`](Self::collect) with a hard wall-clock bound.
+    pub fn collect_within(&self, n: usize, clock_hz: f64,
+                          timeout: Duration)
+                          -> Result<(Vec<Response>, ServingReport)> {
+        self.collect_inner(n, clock_hz, Some(Instant::now() + timeout))
+    }
+
+    fn collect_inner(&self, n: usize, clock_hz: f64,
+                     deadline: Option<Instant>)
+                     -> Result<(Vec<Response>, ServingReport)> {
         let mut stats = Stats::default();
         let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let r = self.resp_rx.recv()?;
-            stats.record(&r);
-            out.push(r);
+        let mut failures: Vec<String> = Vec::new();
+        // A worker emits `Failed` only as its final event, so once every
+        // worker has failed no further responses can ever arrive — even
+        // if the legacy dispatcher thread still holds the channel open.
+        let mut dead_workers = 0usize;
+        while out.len() < n {
+            let ev = match deadline {
+                None => match self.events_rx.recv() {
+                    Ok(ev) => ev,
+                    Err(_) => bail!(
+                        "all workers exited after {}/{n} responses{}",
+                        out.len(), describe(&failures)),
+                },
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    match self.events_rx.recv_timeout(left) {
+                        Ok(ev) => ev,
+                        Err(mpsc::RecvTimeoutError::Timeout) => bail!(
+                            "timed out with {}/{n} responses{}",
+                            out.len(), describe(&failures)),
+                        Err(mpsc::RecvTimeoutError::Disconnected) => bail!(
+                            "all workers exited after {}/{n} responses{}",
+                            out.len(), describe(&failures)),
+                    }
+                }
+            };
+            match ev {
+                WorkerEvent::Served(r) => {
+                    stats.record(&r);
+                    out.push(r);
+                }
+                WorkerEvent::Failed { worker, error, lost } => {
+                    failures.push(format!("worker {worker}: {error}"));
+                    dead_workers += 1;
+                    if lost > 0 {
+                        bail!("worker {worker} failed with {lost} \
+                               request(s) in hand after {}/{n} \
+                               responses: {error}", out.len());
+                    }
+                    // Build-time failure: surviving workers may still
+                    // serve everything; keep collecting — unless none
+                    // survive.
+                    if dead_workers >= self.worker_count {
+                        bail!("every worker failed after {}/{n} \
+                               responses{}", out.len(),
+                              describe(&failures));
+                    }
+                }
+                WorkerEvent::Undeliverable { lost } => {
+                    bail!("{lost} request(s) undeliverable (no live \
+                           workers) after {}/{n} responses{}",
+                          out.len(), describe(&failures));
+                }
+            }
         }
-        let report = stats.report(self.started.elapsed().as_secs_f64(),
-                                  clock_hz);
+        let mut report = stats.report(
+            self.started.elapsed().as_secs_f64(), clock_hz,
+            self.worker_count);
+        let q = self.queue.stats();
+        report.queue_capacity = q.capacity;
+        report.queue_max_depth = q.max_depth;
+        report.worker_failures = failures;
         Ok((out, report))
     }
 
-    /// Shut down: close the queue and join all threads.
+    /// Shut down: close the queue (workers drain the remainder and
+    /// exit), join all threads, and surface the first worker error.
     pub fn shutdown(mut self) -> Result<()> {
-        drop(self.submit_tx);
-        if let Some(b) = self.batcher_handle.take() {
-            let _ = b.join();
+        self.queue.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
         }
+        let mut first_err: Option<anyhow::Error> = None;
         for h in self.handles.drain(..) {
             match h.join() {
-                Ok(r) => r?,
-                Err(_) => anyhow::bail!("worker panicked"),
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow!("worker panicked"));
+                }
             }
         }
-        Ok(())
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
     }
+}
+
+fn describe(failures: &[String]) -> String {
+    if failures.is_empty() {
+        String::new()
+    } else {
+        format!("; failures: [{}]", failures.join("; "))
+    }
+}
+
+/// Legacy baseline: group whole batches off the shared queue and deal
+/// them round-robin to per-worker channels. Unlike the original, a dead
+/// worker is pruned from the rotation (its batch goes to the next live
+/// one) and a batch with no live worker left is *reported* as lost, so
+/// `collect` errors instead of hanging.
+fn rr_dispatch(queue: Arc<BoundedQueue<Request>>,
+               mut worker_txs: Vec<mpsc::Sender<Vec<Request>>>,
+               batch_max: usize, batch_wait: Duration,
+               events: mpsc::Sender<WorkerEvent>) {
+    let _guard = ConsumerGuard::adopt(queue.clone());
+    let mut next = 0usize;
+    while let Some(batch) = queue.pop_batch_wait(batch_max, batch_wait) {
+        if batch.is_empty() {
+            continue;
+        }
+        let mut undelivered = Some(batch);
+        while let Some(b) = undelivered.take() {
+            if worker_txs.is_empty() {
+                let stranded = queue.drain_now();
+                let _ = events.send(WorkerEvent::Undeliverable {
+                    lost: b.len() + stranded.len(),
+                });
+                return; // guard drops -> submits start failing
+            }
+            if next >= worker_txs.len() {
+                next = 0;
+            }
+            match worker_txs[next].send(b) {
+                Ok(()) => next = (next + 1) % worker_txs.len(),
+                Err(mpsc::SendError(b)) => {
+                    // Receiver gone: prune and retry on the next one.
+                    worker_txs.remove(next);
+                    undelivered = Some(b);
+                }
+            }
+        }
+    }
+    // Queue closed and drained: dropping worker_txs closes the pool.
 }

@@ -1,7 +1,5 @@
 //! Serving statistics collection.
 
-
-
 use crate::metrics::percentile;
 
 use super::worker::Response;
@@ -13,6 +11,7 @@ pub struct Stats {
     sim_cycles: Vec<u64>,
     energy_j: f64,
     per_worker: Vec<u64>,
+    per_worker_busy_us: Vec<u64>,
 }
 
 impl Stats {
@@ -22,33 +21,80 @@ impl Stats {
         self.energy_j += r.energy_j;
         if self.per_worker.len() <= r.worker {
             self.per_worker.resize(r.worker + 1, 0);
+            self.per_worker_busy_us.resize(r.worker + 1, 0);
         }
         self.per_worker[r.worker] += 1;
+        self.per_worker_busy_us[r.worker] += r.service_us;
     }
 
     pub fn count(&self) -> usize {
         self.latencies_us.len()
     }
 
-    /// Final report; `wall_secs` is the makespan of the run.
-    pub fn report(&self, wall_secs: f64, clock_hz: f64) -> ServingReport {
+    /// Final report; `wall_secs` is the makespan of the run, `workers`
+    /// the configured pool size (a worker that served nothing — e.g.
+    /// one that died at build time — still counts against balance).
+    pub fn report(&self, wall_secs: f64, clock_hz: f64, workers: usize)
+                  -> ServingReport {
         let mut lat = self.latencies_us.clone();
         lat.sort_unstable();
-        let n = self.count().max(1);
+        let frames = self.count();
         let sim_total: u64 = self.sim_cycles.iter().sum();
+        let mean_sim_cycles = if frames == 0 {
+            0.0
+        } else {
+            sim_total as f64 / frames as f64
+        };
+        // Guard: zero frames (or an all-zero trace) must report 0.0,
+        // not inf/NaN from dividing by a zero mean.
+        let sim_fps = if mean_sim_cycles > 0.0 {
+            clock_hz / mean_sim_cycles
+        } else {
+            0.0
+        };
+        let mut busy = self.per_worker_busy_us.clone();
+        if busy.len() < workers {
+            busy.resize(workers, 0);
+        }
+        let mut per_worker = self.per_worker.clone();
+        if per_worker.len() < workers {
+            per_worker.resize(workers, 0);
+        }
         ServingReport {
-            frames: self.count(),
+            frames,
             wall_secs,
-            served_fps: self.count() as f64 / wall_secs.max(1e-9),
+            served_fps: frames as f64 / wall_secs.max(1e-9),
             p50_us: percentile(&lat, 50.0),
             p95_us: percentile(&lat, 95.0),
             p99_us: percentile(&lat, 99.0),
-            mean_sim_cycles: sim_total as f64 / n as f64,
-            sim_fps: clock_hz / (sim_total as f64 / n as f64),
-            mean_energy_uj: self.energy_j * 1e6 / n as f64,
-            per_worker: self.per_worker.clone(),
+            mean_sim_cycles,
+            sim_fps,
+            mean_energy_uj: if frames == 0 {
+                0.0
+            } else {
+                self.energy_j * 1e6 / frames as f64
+            },
+            host_balance_ratio: host_balance_ratio(&busy),
+            per_worker,
+            per_worker_busy_us: busy,
+            queue_capacity: 0,
+            queue_max_depth: 0,
+            worker_failures: Vec::new(),
         }
     }
+}
+
+/// Host-side analogue of the simulator's Fig.-7 balance ratio:
+/// `total_busy / (workers * max_busy)`. 1.0 iff every worker was busy
+/// for the same time; `1/workers` when one worker did everything.
+/// An idle pool (no busy time at all) is vacuously balanced: 1.0.
+pub fn host_balance_ratio(busy_us: &[u64]) -> f64 {
+    let max = busy_us.iter().copied().max().unwrap_or(0);
+    if max == 0 || busy_us.is_empty() {
+        return 1.0;
+    }
+    let total: u64 = busy_us.iter().sum();
+    total as f64 / (busy_us.len() as f64 * max as f64)
 }
 
 /// Summary of a serving run: wall-clock (host) and simulated
@@ -64,10 +110,23 @@ pub struct ServingReport {
     pub p99_us: u64,
     /// Mean simulated accelerator cycles per frame.
     pub mean_sim_cycles: f64,
-    /// Simulated accelerator FPS (the paper's Table I metric).
+    /// Simulated accelerator FPS (the paper's Table I metric); 0.0 when
+    /// no frames were recorded.
     pub sim_fps: f64,
     pub mean_energy_uj: f64,
+    /// Frames served per worker (padded to the configured pool size).
     pub per_worker: Vec<u64>,
+    /// Wall-clock busy time per worker in microseconds.
+    pub per_worker_busy_us: Vec<u64>,
+    /// `total_busy / (workers * max_busy)` — the host-side counterpart
+    /// of the paper's SPE balance ratio (Fig. 7).
+    pub host_balance_ratio: f64,
+    /// Submission-queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+    /// High-water mark of the submission queue during the run.
+    pub queue_max_depth: usize,
+    /// Human-readable failure reports from workers that died.
+    pub worker_failures: Vec<String>,
 }
 
 #[cfg(test)]
@@ -75,25 +134,76 @@ mod tests {
     use super::*;
     use std::time::Instant;
 
+    fn resp(id: u64, worker: usize, latency_us: u64, service_us: u64)
+            -> Response {
+        Response {
+            id,
+            output_counts: vec![],
+            sim_cycles: 1000 + id,
+            energy_j: 1e-6,
+            latency_us,
+            service_us,
+            worker,
+        }
+    }
+
     #[test]
     fn stats_aggregate() {
         let mut s = Stats::default();
         for i in 0..10u64 {
-            s.record(&Response {
-                id: i,
-                output_counts: vec![],
-                sim_cycles: 1000 + i,
-                energy_j: 1e-6,
-                latency_us: 100 * (i + 1),
-                worker: (i % 2) as usize,
-            });
+            s.record(&resp(i, (i % 2) as usize, 100 * (i + 1), 50));
         }
         let _ = Instant::now();
-        let r = s.report(1.0, 200e6);
+        let r = s.report(1.0, 200e6, 2);
         assert_eq!(r.frames, 10);
         assert_eq!(r.per_worker, vec![5, 5]);
+        assert_eq!(r.per_worker_busy_us, vec![250, 250]);
+        assert!((r.host_balance_ratio - 1.0).abs() < 1e-12);
         assert!((r.mean_energy_uj - 1.0).abs() < 1e-9);
         assert!(r.p99_us >= r.p50_us);
         assert!((r.served_fps - 10.0).abs() < 1e-9);
+        assert!(r.sim_fps > 0.0);
+    }
+
+    #[test]
+    fn zero_frames_report_is_finite() {
+        let s = Stats::default();
+        let r = s.report(0.5, 200e6, 4);
+        assert_eq!(r.frames, 0);
+        assert_eq!(r.sim_fps, 0.0);
+        assert_eq!(r.mean_sim_cycles, 0.0);
+        assert_eq!(r.mean_energy_uj, 0.0);
+        assert!(r.served_fps.is_finite());
+        assert!(r.host_balance_ratio.is_finite());
+        assert_eq!(r.per_worker, vec![0; 4]);
+        assert_eq!(r.per_worker_busy_us, vec![0; 4]);
+    }
+
+    #[test]
+    fn balance_ratio_penalises_skew() {
+        // One worker did all the work on a 2-pool: ratio = 1/2.
+        let mut s = Stats::default();
+        for i in 0..4u64 {
+            s.record(&resp(i, 0, 100, 1000));
+        }
+        let r = s.report(1.0, 200e6, 2);
+        assert!((r.host_balance_ratio - 0.5).abs() < 1e-12);
+        // Perfectly split busy time: ratio = 1.0.
+        assert!((host_balance_ratio(&[300, 300, 300]) - 1.0).abs()
+                < 1e-12);
+        // Idle pool is vacuously balanced.
+        assert_eq!(host_balance_ratio(&[0, 0]), 1.0);
+        assert_eq!(host_balance_ratio(&[]), 1.0);
+    }
+
+    #[test]
+    fn dead_worker_counts_against_balance() {
+        // Configured 3 workers, only two ever served.
+        let mut s = Stats::default();
+        s.record(&resp(0, 0, 100, 600));
+        s.record(&resp(1, 1, 100, 600));
+        let r = s.report(1.0, 200e6, 3);
+        assert_eq!(r.per_worker_busy_us, vec![600, 600, 0]);
+        assert!((r.host_balance_ratio - 2.0 / 3.0).abs() < 1e-12);
     }
 }

@@ -1,15 +1,31 @@
 //! Worker: one thread owning a complete inference pipeline.
+//!
+//! Workers are *pull*-based: each loops on the shared bounded queue,
+//! taking the next batch the moment it frees up, so a slow frame on one
+//! worker never strands queued requests behind it. The heavyweight
+//! read-only state — loaded [`NetworkWeights`], the APRC predictor and
+//! the CBWS partitions — is built once by the service and shared via
+//! [`SharedPipeline`] (`Arc`s); only the PJRT client, which must not
+//! cross threads, is constructed inside the worker.
+//!
+//! A worker that fails — during pipeline construction or mid-request —
+//! reports a [`WorkerEvent::Failed`] (with the count of requests it had
+//! in hand that are now lost) before exiting, so the service's
+//! `collect` sees the failure instead of blocking forever on responses
+//! that will never arrive.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Context, Result};
 
+use super::queue::{BoundedQueue, ConsumerGuard};
 use crate::power::{EnergyModel, ResourceModel};
 use crate::runtime::{Runtime, SnnRunner};
 use crate::schedule::cbws::Cbws;
-use crate::schedule::{baselines, Scheduler};
+use crate::schedule::{baselines, AprcPredictor, Partition, Scheduler};
 use crate::sim::{ArchConfig, Simulator, TraceSource};
 use crate::snn::{encode_phased_u8, NetKind, NetworkWeights};
 
@@ -33,10 +49,30 @@ pub struct Response {
     pub sim_cycles: u64,
     /// Simulated energy (J).
     pub energy_j: f64,
-    /// Wall-clock service latency in microseconds.
+    /// Wall-clock service latency in microseconds (submit -> done).
     pub latency_us: u64,
+    /// Wall-clock worker processing time in microseconds (the busy-time
+    /// share this frame contributed to its worker).
+    pub service_us: u64,
     /// Worker that served it.
     pub worker: usize,
+}
+
+/// What a worker reports back to the service.
+#[derive(Debug, Clone)]
+pub enum WorkerEvent {
+    /// One frame served successfully.
+    Served(Response),
+    /// The worker's pipeline failed (at build time or mid-request) and
+    /// the worker is exiting. `lost` counts requests it had already
+    /// pulled that will never produce a response (0 for build-time
+    /// failures — nothing was pulled yet).
+    Failed { worker: usize, error: String, lost: usize },
+    /// Legacy round-robin dispatch only: a batch was (or had been)
+    /// dealt to a worker that cannot serve it — either the dispatcher
+    /// found no live worker, or a failed worker drained it from its
+    /// private channel.
+    Undeliverable { lost: usize },
 }
 
 /// Scheduling policy selector (serde-friendly mirror of the zoo).
@@ -94,44 +130,162 @@ impl WorkerConfig {
     }
 }
 
-/// Runs inside the worker thread: build pipeline, serve until the
-/// channel closes.
-pub fn worker_loop(idx: usize, cfg: WorkerConfig,
-                   rx: mpsc::Receiver<Vec<Request>>,
-                   tx: mpsc::Sender<Response>) -> Result<()> {
-    let net = NetworkWeights::load(&cfg.artifacts, cfg.variant_name())?;
-    let rates = default_input_rates(&net);
-    let predictor =
-        crate::schedule::AprcPredictor::from_network(&net, &rates);
-    let scheduler = cfg.policy.build();
-    let sim = Simulator::new(cfg.arch, &net, scheduler.as_ref(),
-                             &predictor);
+/// The read-only pipeline state every worker shares: weights loaded
+/// once, workloads predicted once, channels scheduled once.
+#[derive(Clone)]
+pub struct SharedPipeline {
+    pub net: Arc<NetworkWeights>,
+    pub predictor: Arc<AprcPredictor>,
+    /// One CBWS (or baseline) partition per layer.
+    pub partitions: Arc<Vec<Partition>>,
+}
+
+impl SharedPipeline {
+    /// Load + schedule once, on the caller's thread: artifact problems
+    /// fail fast at `Service::start` instead of inside N workers.
+    pub fn build(cfg: &WorkerConfig) -> Result<Self> {
+        let net = Arc::new(
+            NetworkWeights::load(&cfg.artifacts, cfg.variant_name())
+                .with_context(|| format!(
+                    "loading weights for {}", cfg.variant_name()))?);
+        let rates = default_input_rates(&net);
+        let predictor =
+            Arc::new(AprcPredictor::from_network(&net, &rates));
+        let scheduler = cfg.policy.build();
+        let partitions: Vec<Partition> = (0..net.layers.len())
+            .map(|l| scheduler.assign(predictor.layer(l), cfg.arch.n_spes))
+            .collect();
+        Ok(Self { net, predictor, partitions: Arc::new(partitions) })
+    }
+}
+
+/// Where a worker gets its work from.
+pub enum WorkSource {
+    /// Pull batches from the shared bounded queue (the default,
+    /// load-balanced path).
+    Shared { queue: Arc<BoundedQueue<Request>>, batch_max: usize },
+    /// Receive pre-formed batches from the legacy round-robin
+    /// dispatcher.
+    Private(mpsc::Receiver<Vec<Request>>),
+}
+
+impl WorkSource {
+    fn next_batch(&self) -> Option<Vec<Request>> {
+        match self {
+            WorkSource::Shared { queue, batch_max } => {
+                queue.pop_batch(*batch_max)
+            }
+            WorkSource::Private(rx) => rx.recv().ok(),
+        }
+    }
+
+    fn consumer_guard(&self) -> Option<ConsumerGuard<Request>> {
+        match self {
+            WorkSource::Shared { queue, .. } => {
+                Some(ConsumerGuard::adopt(queue.clone()))
+            }
+            WorkSource::Private(_) => None,
+        }
+    }
+}
+
+/// Forward an error to the service before propagating it — the step
+/// that turns a dying worker from a silent hang into a reported
+/// failure.
+fn check<T>(events: &mpsc::Sender<WorkerEvent>, worker: usize,
+            lost: usize, res: Result<T>) -> Result<T> {
+    if let Err(e) = &res {
+        let _ = events.send(WorkerEvent::Failed {
+            worker,
+            error: format!("{e:#}"),
+            lost,
+        });
+    }
+    res
+}
+
+/// Runs inside the worker thread: build the thread-local half of the
+/// pipeline (PJRT lives entirely here), then serve until the work
+/// source closes.
+pub fn worker_loop(idx: usize, cfg: WorkerConfig, shared: SharedPipeline,
+                   source: WorkSource, events: mpsc::Sender<WorkerEvent>)
+                   -> Result<()> {
+    // Held for the whole loop: its Drop is what tells producers this
+    // worker is gone, even if we exit early on error.
+    let _guard = source.consumer_guard();
+    let res = serve(idx, &cfg, &shared, &source, &events);
+    if res.is_err() {
+        if let WorkSource::Private(rx) = &source {
+            // Legacy round-robin mode: the dispatcher may already have
+            // delivered batches into our private channel (and may keep
+            // doing so — it only learns of our death if the channel
+            // closes). Dropping the receiver here would silently lose
+            // them and leave `collect` waiting forever, so keep
+            // draining and report every delivered batch as lost until
+            // the dispatcher hangs up.
+            while let Ok(batch) = rx.recv() {
+                let _ = events.send(WorkerEvent::Undeliverable {
+                    lost: batch.len(),
+                });
+            }
+        }
+    }
+    res
+}
+
+fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
+         source: &WorkSource, events: &mpsc::Sender<WorkerEvent>)
+         -> Result<()> {
+    let net: &NetworkWeights = &shared.net;
+    let sim = check(events, idx, 0, Simulator::with_partitions(
+        cfg.arch, net, shared.partitions.as_ref().clone()))?;
     let timesteps = cfg.timesteps.unwrap_or(net.meta.timesteps);
 
     // PJRT client lives entirely inside this thread.
-    let runtime = if cfg.use_runtime {
-        Some(Runtime::cpu()?)
-    } else {
-        None
+    let runtime = match cfg.use_runtime {
+        true => Some(check(events, idx, 0, Runtime::cpu())?),
+        false => None,
     };
     let step = match &runtime {
-        Some(rt) => Some(rt.load_step(&cfg.artifacts, &net)?),
+        Some(rt) => {
+            Some(check(events, idx, 0, rt.load_step(&cfg.artifacts, net))?)
+        }
+        None => None,
+    };
+    // One runner reused for every request (run_frame resets membrane
+    // state per frame), instead of a fresh allocation per request.
+    let mut runner = match &step {
+        Some(s) => Some(check(events, idx, 0, SnnRunner::new(s))?),
         None => None,
     };
 
     let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
                      net.meta.in_shape[2]);
-    while let Ok(batch) = rx.recv() {
-        for req in batch {
+    while let Some(batch) = source.next_batch() {
+        let mut pending = batch.into_iter();
+        while let Some(req) = pending.next() {
+            // This request plus the rest of the batch die with us.
+            let lost = 1 + pending.len();
+            let t0 = Instant::now();
+            // Reject malformed frames as a reported failure — the
+            // encoder would assert (panic) and the loss would be
+            // silent.
+            check(events, idx, lost,
+                  if req.pixels.len() == c * h * w {
+                      Ok(())
+                  } else {
+                      Err(anyhow!("frame {}: got {} pixels, expected \
+                                   {}x{}x{}", req.id, req.pixels.len(),
+                                  c, h, w))
+                  })?;
             let inputs = encode_phased_u8(&req.pixels, c, h, w, timesteps);
-            let trace = match &step {
-                Some(s) => {
-                    let mut runner = SnnRunner::new(s)?;
-                    TraceSource::Golden(runner.run_frame(&inputs)?)
-                }
+            let trace = match runner.as_mut() {
+                Some(r) => TraceSource::Golden(
+                    check(events, idx, lost, r.run_frame(&inputs))?),
                 None => TraceSource::Functional,
             };
-            let report = sim.run_frame(&inputs, &trace)?;
+            let report =
+                check(events, idx, lost, sim.run_frame(&inputs, &trace))?;
             let energy = cfg.energy.frame_energy(&report,
                                                  cfg.arch.clock_hz);
             let resp = Response {
@@ -140,9 +294,10 @@ pub fn worker_loop(idx: usize, cfg: WorkerConfig,
                 sim_cycles: report.total_cycles,
                 energy_j: energy.total_j,
                 latency_us: req.submitted.elapsed().as_micros() as u64,
+                service_us: t0.elapsed().as_micros() as u64,
                 worker: idx,
             };
-            if tx.send(resp).is_err() {
+            if events.send(WorkerEvent::Served(resp)).is_err() {
                 return Ok(()); // collector gone; shut down
             }
         }
@@ -156,15 +311,18 @@ pub fn default_input_rates(net: &NetworkWeights) -> Vec<f64> {
     let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
                      net.meta.in_shape[2]);
     let t = net.meta.timesteps;
+    // `chunks_exact`: a trailing partial image (calibration set not a
+    // multiple of this net's input size) would fail the encoder's
+    // length assert.
     let images: Vec<Vec<f32>> = if c == 1 {
         let (imgs, _) = crate::data::gen_digits(0xCA11B, 8);
-        imgs.chunks(h * w)
+        imgs.chunks_exact(h * w)
             .map(|ch| ch.iter().map(|&v| v as f32 / 255.0).collect())
             .collect()
     } else {
         let (imgs, _) = crate::data::gen_road_scenes(0xCA11B, 4);
         // HWC u8 -> CHW f32
-        imgs.chunks(h * w * 3)
+        imgs.chunks_exact(h * w * 3)
             .map(|img| {
                 let mut out = vec![0.0f32; 3 * h * w];
                 for y in 0..h {

@@ -13,7 +13,8 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use skydiver::coordinator::{Policy, Service, ServiceConfig, WorkerConfig};
+use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
+                            WorkerConfig};
 use skydiver::experiments::{self, ExperimentCtx};
 use skydiver::metrics::Table;
 use skydiver::power::EnergyModel;
@@ -30,6 +31,7 @@ COMMANDS:
   report                           artifact inventory + eval metrics
   run        [--net classifier|segmenter] [--plain] [--policy P]
              [--frames N] [--workers N] [--golden]
+             [--dispatch queue|rr] [--queue-cap N] [--batch-max N]
   trace      [--net classifier|segmenter] [--plain] [--policy P] [--golden]
   experiment <id> [--frames N] [--golden]
              ids: fig2 fig4c fig6 fig7 table1 table2 gains accuracy
@@ -197,6 +199,11 @@ fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let frames = args.get_usize("frames", 32)?;
     let workers = args.get_usize("workers", 2)?;
     let golden = args.has("golden");
+    let dispatch = match args.get("dispatch") {
+        None => DispatchMode::WorkQueue,
+        Some(s) => DispatchMode::parse(s)
+            .ok_or_else(|| anyhow!("unknown --dispatch {s}"))?,
+    };
 
     let wcfg = WorkerConfig {
         artifacts: artifacts.clone(),
@@ -210,13 +217,16 @@ fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     };
     let scfg = ServiceConfig {
         workers,
-        batch_max: 8,
+        batch_max: args.get_usize("batch-max", 8)?,
+        queue_cap: args.get_usize("queue-cap", 256)?,
         batch_wait: Duration::from_millis(2),
+        dispatch,
     };
-    println!("serving {} frames of {} ({}) with {} workers, policy {:?}",
+    println!("serving {} frames of {} ({}) with {} workers, policy {:?}, \
+              dispatch {:?}",
              frames, wcfg.variant_name(),
              if golden { "golden/PJRT" } else { "functional" },
-             workers, policy);
+             workers, policy, dispatch);
     let service = Service::start(scfg, wcfg)?;
     for (i, px) in make_frames(kind, frames).into_iter().enumerate() {
         service.submit(i as u64, px)?;
@@ -236,6 +246,16 @@ fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     t.row(&["sim energy/frame (uJ)".into(),
             format!("{:.2}", rep.mean_energy_uj)]);
     t.row(&["per-worker frames".into(), format!("{:?}", rep.per_worker)]);
+    t.row(&["per-worker busy (us)".into(),
+            format!("{:?}", rep.per_worker_busy_us)]);
+    t.row(&["host balance ratio".into(),
+            format!("{:.2}%", 100.0 * rep.host_balance_ratio)]);
+    t.row(&["queue depth max/cap".into(),
+            format!("{}/{}", rep.queue_max_depth, rep.queue_capacity)]);
+    if !rep.worker_failures.is_empty() {
+        t.row(&["worker failures".into(),
+                rep.worker_failures.join("; ")]);
+    }
     t.print();
     Ok(())
 }

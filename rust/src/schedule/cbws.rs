@@ -41,8 +41,13 @@ impl Scheduler for Cbws {
 pub fn cbws_assign(predicted: &[f64], n: usize, finetune_iters: usize)
                    -> Partition {
     let k = predicted.len();
-    if n == 0 || k == 0 {
-        return Partition { groups: vec![Vec::new(); n.max(1)] };
+    if n == 0 {
+        // Zero groups requested -> zero groups returned; silently
+        // handing back one group would hide a misconfigured arch.
+        return Partition { groups: Vec::new() };
+    }
+    if k == 0 {
+        return Partition { groups: vec![Vec::new(); n] };
     }
     // Line 1-2: list of (channel, workload) sorted descending.
     let mut c: Vec<usize> = (0..k).collect();
@@ -152,6 +157,22 @@ mod tests {
         let p = cbws_assign(&w, 4, 64);
         assert!(p.validate(13));
         assert!(p.balance_ratio(&w) > 0.7);
+    }
+
+    #[test]
+    fn zero_groups_requested_returns_zero_groups() {
+        let p = cbws_assign(&[1.0, 2.0, 3.0], 0, 64);
+        assert!(p.groups.is_empty(), "asked for 0 groups, got {:?}",
+                p.groups);
+        assert!(p.balance_ratio(&[1.0, 2.0, 3.0]).is_finite());
+    }
+
+    #[test]
+    fn zero_channels_returns_n_empty_groups() {
+        let p = cbws_assign(&[], 3, 64);
+        assert_eq!(p.groups.len(), 3);
+        assert!(p.validate(0));
+        assert_eq!(p.balance_ratio(&[]), 1.0);
     }
 
     #[test]

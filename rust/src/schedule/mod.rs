@@ -68,10 +68,15 @@ impl Partition {
     /// `total / (n * max_group)`. 1.0 iff perfectly balanced; the paper
     /// reports >90% with APRC+CBWS (Fig. 7).
     pub fn balance_ratio(&self, workload: &[f64]) -> f64 {
+        // A partition with zero groups is vacuously balanced (guards
+        // the `total / (0 * max)` NaN).
+        if self.groups.is_empty() {
+            return 1.0;
+        }
         let totals = self.group_totals(workload);
         let total: f64 = totals.iter().sum();
         let max = totals.iter().cloned().fold(0.0f64, f64::max);
-        if max <= 0.0 {
+        if !(max > 0.0) {
             return 1.0;
         }
         total / (self.groups.len() as f64 * max)
@@ -132,5 +137,19 @@ mod tests {
     fn zero_workload_is_balanced() {
         let p = Partition { groups: vec![vec![0], vec![1]] };
         assert_eq!(p.balance_ratio(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn empty_partition_balance_ratio_is_finite() {
+        let p = Partition { groups: Vec::new() };
+        let r = p.balance_ratio(&[1.0, 2.0]);
+        assert!(r.is_finite(), "zero-group partition gave {r}");
+        assert_eq!(r, 1.0);
+    }
+
+    #[test]
+    fn nan_workload_does_not_poison_ratio() {
+        let p = Partition { groups: vec![vec![0], vec![1]] };
+        assert!(p.balance_ratio(&[f64::NAN, f64::NAN]).is_finite());
     }
 }

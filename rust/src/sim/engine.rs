@@ -58,6 +58,7 @@ impl<'a> Simulator<'a> {
     pub fn run_frame(&self, inputs: &[SpikeMap], trace: &TraceSource)
                      -> Result<FrameReport> {
         let nl = self.net.layers.len();
+        ensure!(nl > 0, "cannot simulate a zero-layer network");
         let mut report = FrameReport {
             layers: (0..nl).map(|l| LayerStats { layer: l,
                                                  ..Default::default() })
@@ -218,6 +219,24 @@ mod tests {
         assert_eq!(r.events, 0);
         assert_eq!(r.synops, 0);
         assert!(r.total_cycles > 0, "scan + setup still cost");
+    }
+
+    #[test]
+    fn zero_layer_network_rejected_not_panicking() {
+        // Regression: `let last = nl - 1` used to underflow and panic.
+        let meta = WeightsMeta::parse(r#"{
+            "name": "empty", "aprc": true, "pad": 2, "vth": 0.5,
+            "timesteps": 4, "in_shape": [2, 6, 6],
+            "feature_sizes": [], "dense_out": null,
+            "total_floats": 0, "lambdas": [], "layers": [],
+            "blob_fnv1a64": "0"
+        }"#).unwrap();
+        let net = NetworkWeights { meta, layers: vec![] };
+        let sim = Simulator::with_partitions(ArchConfig::default(), &net,
+                                             vec![]).unwrap();
+        let inputs = encoded_inputs(0.5, 4);
+        let err = sim.run_frame_functional(&inputs);
+        assert!(err.is_err(), "zero-layer net must Err, not panic");
     }
 
     #[test]

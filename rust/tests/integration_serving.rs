@@ -1,0 +1,293 @@
+//! Integration: the serving coordinator under load and under failure.
+//!
+//! These tests use a small synthetic network written to a temp
+//! artifacts dir (no `make artifacts` needed), so they exercise the
+//! full Service path — shared pipeline load, bounded queue, pull-based
+//! workers, failure propagation — hermetically.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
+                            ServingReport, SubmitError, WorkerConfig};
+use skydiver::power::EnergyModel;
+use skydiver::sim::ArchConfig;
+use skydiver::snn::NetKind;
+
+const SIDE: usize = 32; // synthetic net input is 1 x SIDE x SIDE
+const TIMESTEPS: usize = 20;
+
+/// Write `classifier_aprc.weights.{bin,json}` for a tiny single-conv
+/// net into a fresh temp dir and return the dir.
+fn write_tiny_artifacts(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("skydiver-serving-{label}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let name = "classifier_aprc";
+    // 8 filters of 1x3x3, magnitudes varied so CBWS has work to do.
+    let floats: Vec<f32> = (0..8 * 9)
+        .map(|i| 0.04 + 0.012 * ((i % 9) as f32) + 0.01 * ((i / 9) as f32))
+        .collect();
+    let bytes: Vec<u8> =
+        floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+    let hash = format!("{:016x}", skydiver::data::fnv1a64(&bytes));
+    let eh = SIDE + 2 * 2 - 3 + 1; // pad 2, r 3
+    let json = format!(
+        r#"{{
+  "name": "{name}", "aprc": true, "pad": 2, "vth": 0.5,
+  "timesteps": 6, "in_shape": [1, {SIDE}, {SIDE}],
+  "feature_sizes": [[8, {eh}, {eh}]], "dense_out": null,
+  "total_floats": 72, "lambdas": [],
+  "layers": [
+    {{"kind": "conv", "shape": [8, 1, 3, 3], "offset": 0,
+      "layer": 0, "pad": 2}}
+  ],
+  "blob_fnv1a64": "{hash}"
+}}"#);
+    std::fs::write(dir.join(format!("{name}.weights.json")), json)
+        .unwrap();
+    std::fs::write(dir.join(format!("{name}.weights.bin")), bytes)
+        .unwrap();
+    dir
+}
+
+fn worker_cfg(artifacts: PathBuf, use_runtime: bool) -> WorkerConfig {
+    WorkerConfig {
+        artifacts,
+        kind: NetKind::Classifier,
+        aprc: true,
+        policy: Policy::Cbws,
+        arch: ArchConfig::default(),
+        energy: EnergyModel::default(),
+        use_runtime,
+        timesteps: Some(TIMESTEPS),
+    }
+}
+
+/// Bright frame: near-full spike rate -> lots of event-driven work.
+fn expensive_frame() -> Vec<u8> {
+    vec![255u8; SIDE * SIDE]
+}
+
+/// Silent frame: zero spikes -> almost free.
+fn cheap_frame() -> Vec<u8> {
+    vec![0u8; SIDE * SIDE]
+}
+
+#[test]
+fn bad_artifacts_fail_fast_at_start() {
+    let wcfg = worker_cfg(PathBuf::from("/nonexistent/skydiver-nowhere"),
+                          false);
+    let t0 = Instant::now();
+    let res = Service::start(ServiceConfig::default(), wcfg);
+    assert!(res.is_err(), "missing weights must fail Service::start");
+    assert!(t0.elapsed() < Duration::from_secs(30));
+}
+
+#[test]
+fn zero_workers_rejected() {
+    let dir = write_tiny_artifacts("zerow");
+    let scfg = ServiceConfig { workers: 0, ..Default::default() };
+    assert!(Service::start(scfg, worker_cfg(dir, false)).is_err());
+}
+
+/// The headline bugfix: a worker whose pipeline build fails (here: the
+/// PJRT step artifact is absent while `use_runtime: true`) must surface
+/// an error through `collect`/`shutdown` in bounded time — the old
+/// coordinator left `collect` blocked forever.
+fn assert_build_failure_surfaces(dispatch: DispatchMode) {
+    let dir = write_tiny_artifacts("fail");
+    let scfg = ServiceConfig {
+        workers: 2,
+        batch_max: 2,
+        queue_cap: 16,
+        batch_wait: Duration::from_millis(2),
+        dispatch,
+    };
+    // Weights exist, so start() succeeds; the runtime half of the
+    // pipeline is built per-worker, inside the worker threads.
+    let service = Service::start(scfg, worker_cfg(dir, true))
+        .expect("weights are valid; runtime build failure is per-worker");
+    let t0 = Instant::now();
+    let mut submit_err = false;
+    for i in 0..4u64 {
+        // Submits may themselves start failing once every worker has
+        // died (NoWorkers) — that is an acceptable, observable outcome.
+        if service.submit(i, expensive_frame()).is_err() {
+            submit_err = true;
+            break;
+        }
+    }
+    let collected =
+        service.collect_within(4, skydiver::CLOCK_HZ,
+                               Duration::from_secs(30));
+    assert!(submit_err || collected.is_err(),
+            "worker build failure must surface, not hang");
+    let shut = service.shutdown();
+    assert!(shut.is_err(), "shutdown must report the worker failure");
+    assert!(t0.elapsed() < Duration::from_secs(60),
+            "failure took unboundedly long to surface");
+}
+
+#[test]
+fn worker_build_failure_surfaces_work_queue() {
+    assert_build_failure_surfaces(DispatchMode::WorkQueue);
+}
+
+#[test]
+fn worker_build_failure_surfaces_round_robin() {
+    assert_build_failure_surfaces(DispatchMode::RoundRobinBatch);
+}
+
+/// Skewed load used for the balance comparison: bursts of expensive
+/// frames alternating with bursts of cheap ones, sized to whole
+/// batches so the legacy dispatcher deals all-expensive batches to one
+/// worker and all-cheap ones to the other.
+fn run_skewed(dir: &PathBuf, dispatch: DispatchMode) -> ServingReport {
+    let scfg = ServiceConfig {
+        workers: 2,
+        batch_max: 4,
+        queue_cap: 64,
+        // Generous fill window so the legacy batcher forms full
+        // batches deterministically.
+        batch_wait: Duration::from_millis(100),
+        dispatch,
+    };
+    let service =
+        Service::start(scfg, worker_cfg(dir.clone(), false)).unwrap();
+    let mut id = 0u64;
+    for _burst in 0..2 {
+        for _ in 0..4 {
+            service.submit(id, expensive_frame()).unwrap();
+            id += 1;
+        }
+        for _ in 0..4 {
+            service.submit(id, cheap_frame()).unwrap();
+            id += 1;
+        }
+    }
+    let (resps, report) = service
+        .collect_within(16, skydiver::CLOCK_HZ, Duration::from_secs(120))
+        .unwrap();
+    service.shutdown().unwrap();
+    assert_eq!(resps.len(), 16);
+    report
+}
+
+/// Acceptance: under a skewed load every worker serves frames and the
+/// pull-based work queue beats the old whole-batch round-robin dispatch
+/// on the host-side balance ratio.
+#[test]
+fn work_queue_balances_better_than_round_robin_on_skewed_load() {
+    let dir = write_tiny_artifacts("balance");
+    let rr = run_skewed(&dir, DispatchMode::RoundRobinBatch);
+    let wq = run_skewed(&dir, DispatchMode::WorkQueue);
+
+    assert!(wq.per_worker.iter().all(|&c| c > 0),
+            "every worker must serve at least one frame: {:?}",
+            wq.per_worker);
+    assert!(wq.host_balance_ratio > 0.0
+            && wq.host_balance_ratio <= 1.0 + 1e-9,
+            "balance ratio out of range: {}", wq.host_balance_ratio);
+    assert!(wq.host_balance_ratio > rr.host_balance_ratio,
+            "work-queue dispatch ({:.3}, busy {:?}) must beat \
+             round-robin whole-batch ({:.3}, busy {:?}) on skewed load",
+            wq.host_balance_ratio, wq.per_worker_busy_us,
+            rr.host_balance_ratio, rr.per_worker_busy_us);
+}
+
+/// Bursty submit: all frames at once, pool of 4 — every worker must
+/// get a share (pull dispatch is work-conserving).
+#[test]
+fn all_workers_serve_under_bursty_load() {
+    let dir = write_tiny_artifacts("bursty");
+    let scfg = ServiceConfig {
+        workers: 4,
+        batch_max: 2,
+        queue_cap: 128,
+        batch_wait: Duration::from_millis(2),
+        dispatch: DispatchMode::WorkQueue,
+    };
+    let service =
+        Service::start(scfg, worker_cfg(dir, false)).unwrap();
+    let n = 64u64;
+    for i in 0..n {
+        // Mixed burst: every 4th frame is expensive.
+        let px = if i % 4 == 0 { expensive_frame() } else { cheap_frame() };
+        service.submit(i, px).unwrap();
+    }
+    let (resps, report) = service
+        .collect_within(n as usize, skydiver::CLOCK_HZ,
+                        Duration::from_secs(120))
+        .unwrap();
+    service.shutdown().unwrap();
+
+    assert_eq!(resps.len(), n as usize);
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "every frame answered");
+    assert_eq!(report.per_worker.len(), 4);
+    assert!(report.per_worker.iter().all(|&c| c > 0),
+            "bursty load must reach all 4 workers: {:?}",
+            report.per_worker);
+    assert!(report.worker_failures.is_empty());
+    assert!(report.queue_max_depth <= 128);
+}
+
+/// try_submit reports queue-full (backpressure) instead of buffering
+/// without bound; blocking submit then absorbs the overflow.
+#[test]
+fn backpressure_reports_queue_full() {
+    let dir = write_tiny_artifacts("backpressure");
+    let scfg = ServiceConfig {
+        workers: 1,
+        batch_max: 1,
+        queue_cap: 2,
+        batch_wait: Duration::from_millis(2),
+        dispatch: DispatchMode::WorkQueue,
+    };
+    let service =
+        Service::start(scfg, worker_cfg(dir, false)).unwrap();
+    let n = 8u64;
+    let mut saw_full = false;
+    for i in 0..n {
+        match service.try_submit(i, expensive_frame()) {
+            Ok(()) => {}
+            Err(SubmitError::Full { capacity }) => {
+                assert_eq!(capacity, 2);
+                saw_full = true;
+                service.submit(i, expensive_frame()).unwrap();
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(saw_full,
+            "8 instant submits against a cap-2 queue and a 1-worker \
+             pool chewing multi-ms frames must hit backpressure");
+    let (resps, report) = service
+        .collect_within(n as usize, skydiver::CLOCK_HZ,
+                        Duration::from_secs(120))
+        .unwrap();
+    service.shutdown().unwrap();
+    assert_eq!(resps.len(), n as usize);
+    assert!(report.queue_max_depth <= 2);
+    assert_eq!(report.per_worker, vec![n]);
+}
+
+/// Zero-frame runs produce a finite, all-zero report (regression for
+/// the sim_fps inf/NaN).
+#[test]
+fn zero_frames_collect_is_finite_and_clean() {
+    let dir = write_tiny_artifacts("zero");
+    let service = Service::start(ServiceConfig::default(),
+                                 worker_cfg(dir, false))
+        .unwrap();
+    let (resps, report) =
+        service.collect(0, skydiver::CLOCK_HZ).unwrap();
+    service.shutdown().unwrap();
+    assert!(resps.is_empty());
+    assert_eq!(report.frames, 0);
+    assert_eq!(report.sim_fps, 0.0);
+    assert!(report.served_fps.is_finite());
+    assert!(report.host_balance_ratio.is_finite());
+}
