@@ -11,7 +11,7 @@ use anyhow::Result;
 use skydiver::coordinator::default_input_rates;
 use skydiver::metrics::Table;
 use skydiver::schedule::{all_schedulers, AprcPredictor};
-use skydiver::sim::{ArchConfig, RunSummary, Simulator, TraceSource};
+use skydiver::sim::{sweep, ArchConfig, RunSummary, Simulator};
 use skydiver::snn::{encode_phased_u8, NetworkWeights, SpikeMap};
 
 fn frames_for(net: &NetworkWeights, n: usize) -> Vec<Vec<SpikeMap>> {
@@ -59,9 +59,8 @@ fn main() -> Result<()> {
                 arch.n_spes = n;
                 let sim = Simulator::new(arch, &net, s.as_ref(),
                                          &predictor);
-                let reports: Vec<_> = inputs.iter()
-                    .map(|i| sim.run_frame(i, &TraceSource::Functional))
-                    .collect::<Result<_>>()?;
+                let reports = sweep::run_frames_functional(
+                    &sim, &inputs, sweep::default_threads())?;
                 let sum = RunSummary::from_frames(&reports, arch.clock_hz,
                                                   n);
                 row.push(format!("{:.1}% @{:.0}fps",

@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         energy: EnergyModel::default(),
         use_runtime: false, // functional model: no PJRT needed per worker
         timesteps: None,
+        sweep_threads: 1, // worker pool is the parallel grain here
     };
     let scfg = ServiceConfig {
         workers,

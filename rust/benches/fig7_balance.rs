@@ -14,7 +14,7 @@ fn main() {
     ctx.frames = 1;
     let it = if harness::quick() { 1 } else { 3 };
     let mut last = None;
-    bench("fig7 (4 configs x 2 nets, 1 frame)", 0, it, || {
+    let r = bench("fig7 (4 configs x 2 nets, 1 frame)", 0, it, || {
         last = Some(fig7::run(&ctx).expect("artifacts built"));
     });
     if let Some(res) = last {
@@ -24,4 +24,5 @@ fn main() {
                                       100.0 * c.average_balance))
                      .collect::<Vec<_>>());
     }
+    harness::write_json(&[r]);
 }

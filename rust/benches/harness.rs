@@ -1,8 +1,50 @@
 //! Tiny benchmark harness (the build is offline — no criterion).
 //! Measures wall time over warmup + timed iterations and prints
-//! mean / p50 / p95 per iteration plus derived throughput.
+//! mean / p50 / p95 per iteration plus derived throughput, and counts
+//! heap allocations per iteration through a counting global allocator.
+//!
+//! Besides the human-readable stdout lines, results are merged into a
+//! machine-readable `BENCH_sim.json` (schema documented in PERF.md;
+//! path overridable via `BENCH_SIM_JSON`) so every PR's numbers are
+//! comparable to the last.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+use skydiver::util::Json;
+
+/// Counting wrapper around the system allocator: lets benches report
+/// allocations-per-iteration (the quantity the allocation-free hot
+/// path is measured by — see PERF.md).
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Heap allocations since process start (monotonic).
+#[allow(dead_code)]
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -10,31 +52,69 @@ pub struct BenchResult {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    /// Mean heap allocations per measured iteration.
+    pub allocs_per_iter: f64,
+    /// Work items (frames) completed per iteration — 1 unless the
+    /// bench processes a batch per call.
+    pub items_per_iter: f64,
 }
 
 impl BenchResult {
     pub fn print(&self) {
-        println!("{:<44} iters={:<4} mean={:>12?} p50={:>12?} p95={:>12?}",
-                 self.name, self.iters, self.mean, self.p50, self.p95);
+        println!("{:<44} iters={:<4} mean={:>12?} p50={:>12?} \
+                  p95={:>12?} allocs/iter={:<9.1} items/s={:.1}",
+                 self.name, self.iters, self.mean, self.p50, self.p95,
+                 self.allocs_per_iter, self.per_sec());
     }
 
+    /// Work items per second (frames/sec when items are frames).
     pub fn per_sec(&self) -> f64 {
-        1.0 / self.mean.as_secs_f64()
+        self.items_per_iter / self.mean.as_secs_f64()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean.as_nanos() as f64)),
+            ("p50_ns", Json::num(self.p50.as_nanos() as f64)),
+            ("p95_ns", Json::num(self.p95.as_nanos() as f64)),
+            ("frames_per_sec", Json::num(self.per_sec())),
+            ("allocs_per_iter", Json::num(self.allocs_per_iter)),
+            // Methodology markers: a --quick (CI smoke) row is not
+            // comparable to a full run, and throughput rows depend on
+            // the host's core count.
+            ("quick", Json::Bool(quick())),
+            ("threads", Json::num(
+                std::thread::available_parallelism()
+                    .map(|n| n.get()).unwrap_or(1) as f64)),
+        ])
     }
 }
 
 /// Run `f` for `warmup` unmeasured + `iters` measured iterations.
 pub fn bench<R>(name: &str, warmup: usize, iters: usize,
-                mut f: impl FnMut() -> R) -> BenchResult {
+                f: impl FnMut() -> R) -> BenchResult {
+    bench_items(name, warmup, iters, 1.0, f)
+}
+
+/// [`bench`] for batch workloads: `items_per_iter` work items (e.g.
+/// frames in a sweep) complete per call, so `per_sec` reports item
+/// throughput.
+pub fn bench_items<R>(name: &str, warmup: usize, iters: usize,
+                      items_per_iter: f64, mut f: impl FnMut() -> R)
+                      -> BenchResult {
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
     let mut samples = Vec::with_capacity(iters);
+    let a0 = alloc_count();
     for _ in 0..iters {
         let t0 = Instant::now();
         std::hint::black_box(f());
         samples.push(t0.elapsed());
     }
+    let allocs_per_iter = (alloc_count() - a0) as f64 / iters as f64;
     samples.sort();
     let mean = samples.iter().sum::<Duration>() / iters as u32;
     let r = BenchResult {
@@ -43,6 +123,8 @@ pub fn bench<R>(name: &str, warmup: usize, iters: usize,
         mean,
         p50: samples[iters / 2],
         p95: samples[(iters * 95 / 100).min(iters - 1)],
+        allocs_per_iter,
+        items_per_iter,
     };
     r.print();
     r
@@ -51,6 +133,36 @@ pub fn bench<R>(name: &str, warmup: usize, iters: usize,
 /// `--quick` on the command line shrinks iteration counts (CI).
 pub fn quick() -> bool {
     std::env::args().any(|a| a == "--quick")
+}
+
+/// Merge `results` into the tracked benchmark file (`BENCH_sim.json`,
+/// or `$BENCH_SIM_JSON`): entries are keyed by name, so re-running one
+/// bench binary updates its rows and leaves the others' in place.
+pub fn write_json(results: &[BenchResult]) {
+    let path = std::env::var("BENCH_SIM_JSON")
+        .unwrap_or_else(|_| "BENCH_sim.json".into());
+    let mut entries: Vec<Json> = std::fs::read_to_string(&path).ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|v| v.field("results").ok().map(|r| r.clone()))
+        .and_then(|r| r.as_arr().ok().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    for r in results {
+        entries.retain(|e| {
+            e.get("name").and_then(|n| n.as_str().ok())
+                != Some(r.name.as_str())
+        });
+        entries.push(r.to_json());
+    }
+    let n_entries = entries.len();
+    let doc = Json::obj(vec![
+        ("schema", Json::str("skydiver-bench-v1")),
+        ("results", Json::Arr(entries)),
+    ]);
+    match std::fs::write(&path, doc.to_string()) {
+        Ok(()) => println!("\nwrote {path} ({n_entries} result entries, \
+                            {} updated)", results.len()),
+        Err(e) => eprintln!("bench: could not write {path}: {e}"),
+    }
 }
 
 #[allow(dead_code)]

@@ -14,17 +14,21 @@ use skydiver::schedule::{all_schedulers, Scheduler};
 fn main() {
     let (wu, it) = if harness::quick() { (2, 20) } else { (5, 200) };
     let mut rng = SplitMix64::new(0x5C4ED);
+    let mut results = Vec::new();
 
     for k in [16usize, 64, 512] {
         let w: Vec<f64> = (0..k)
             .map(|_| rng.next_below(10_000) as f64).collect();
         for s in all_schedulers() {
-            bench(&format!("{} k={k} n=8", s.name()), wu, it, || {
+            results.push(bench(&format!("{} k={k} n=8", s.name()), wu, it,
+                               || {
                 s.assign(&w, 8)
-            });
+            }));
         }
-        bench(&format!("cbws k={k} n=8 finetune=1024"), wu, it, || {
+        results.push(bench(&format!("cbws k={k} n=8 finetune=1024"), wu,
+                           it, || {
             cbws_assign(&w, 8, 1024)
-        });
+        }));
     }
+    harness::write_json(&results);
 }

@@ -1,18 +1,23 @@
-//! Microbenchmarks of the simulator hot path (DESIGN.md §8 L3):
-//! spike-map construction, event iteration, per-layer timing, and a full
-//! functional frame of each network.
+//! Microbenchmarks of the simulator hot path (PERF.md): spike-map
+//! construction, event iteration, per-layer timing, the allocation-free
+//! functional step, and the frame-parallel sweep (serial vs parallel on
+//! the same synthetic workload). Trained-network benches run too when
+//! the artifacts are built; the synthetic ones always run, so
+//! `BENCH_sim.json` is populated on any host.
 
 #[path = "harness.rs"]
 mod harness;
 
-use harness::bench;
+use harness::{bench, bench_items};
 use skydiver::coordinator::default_input_rates;
 use skydiver::data::SplitMix64;
 use skydiver::schedule::cbws::Cbws;
 use skydiver::schedule::{AprcPredictor, Scheduler};
-use skydiver::sim::{layer_timing, ArchConfig, Simulator, TraceSource};
-use skydiver::snn::{encode_phased_u8, FunctionalNet, NetworkWeights,
-                    SpikeMap};
+use skydiver::sim::{layer_timing, sweep, ArchConfig, Simulator,
+                    TraceSource};
+use skydiver::snn::{encode_phased, encode_phased_u8, ConvGeom,
+                    FunctionalNet, LayerWeights, NetworkWeights,
+                    SpikeMap, WeightsMeta};
 
 fn rand_map(rng: &mut SplitMix64, c: usize, h: usize, w: usize,
             rate_pct: u64) -> SpikeMap {
@@ -27,18 +32,66 @@ fn rand_map(rng: &mut SplitMix64, c: usize, h: usize, w: usize,
     m
 }
 
+/// Synthetic 3-conv-layer network (segmenter-shaped, smaller): lets the
+/// hot-path and sweep benches run without `make artifacts`.
+fn synthetic_net(rng: &mut SplitMix64) -> NetworkWeights {
+    let (h, w) = (40usize, 80usize);
+    let chans = [3usize, 8, 16, 8];
+    let pad = 2;
+    let mut layers = Vec::new();
+    let (mut lh, mut lw) = (h, w);
+    let mut feat = Vec::new();
+    for l in 0..3 {
+        let (cin, cout) = (chans[l], chans[l + 1]);
+        let eh = lh + 2 * pad - 3 + 1;
+        let ew = lw + 2 * pad - 3 + 1;
+        let weights: Vec<f32> = (0..cout * cin * 9)
+            .map(|_| (rng.next_below(1000) as f32 / 1000.0 - 0.3) * 0.2)
+            .collect();
+        layers.push(LayerWeights::Conv {
+            geom: ConvGeom { cin, cout, r: 3, pad, h: lh, w: lw, eh, ew },
+            w: weights,
+        });
+        feat.push(format!("[{cout}, {eh}, {ew}]"));
+        lh = eh;
+        lw = ew;
+    }
+    let meta = WeightsMeta::parse(&format!(r#"{{
+        "name": "synthetic", "aprc": true, "pad": {pad}, "vth": 0.4,
+        "timesteps": 8, "in_shape": [3, {h}, {w}],
+        "feature_sizes": [{}], "dense_out": null,
+        "total_floats": 0, "lambdas": [],
+        "layers": [], "blob_fnv1a64": "0"
+    }}"#, feat.join(", "))).expect("synthetic meta");
+    NetworkWeights { meta, layers }
+}
+
+/// Encoded synthetic frames with varied content.
+fn synthetic_frames(rng: &mut SplitMix64, net: &NetworkWeights, n: usize)
+                    -> Vec<Vec<SpikeMap>> {
+    let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
+                     net.meta.in_shape[2]);
+    (0..n).map(|_| {
+        let img: Vec<f32> = (0..c * h * w)
+            .map(|_| rng.next_below(1000) as f32 / 1000.0 * 0.4)
+            .collect();
+        encode_phased(&img, c, h, w, net.meta.timesteps)
+    }).collect()
+}
+
 fn main() {
     let (wu, it) = if harness::quick() { (1, 10) } else { (3, 50) };
     let mut rng = SplitMix64::new(0xBE7C);
+    let mut results = Vec::new();
 
     // Event iteration at segmentation-layer scale (32ch, 88x168, 8%).
     let map = rand_map(&mut rng, 32, 88, 168, 8);
-    bench("iter_events 32x88x168 @8%", wu, it * 10, || {
+    results.push(bench("iter_events 32x88x168 @8%", wu, it * 10, || {
         map.iter_events().count()
-    });
-    bench("nnz_per_channel 32x88x168", wu, it * 10, || {
+    }));
+    results.push(bench("nnz_per_channel 32x88x168", wu, it * 10, || {
         map.nnz_per_channel()
-    });
+    }));
 
     // Timing-model kernel.
     let arch = ArchConfig::default();
@@ -51,9 +104,46 @@ fn main() {
     let pred = vec![1.0; 32];
     let part = Cbws::default().assign(&pred, 8);
     let nnz = map.nnz_per_channel();
-    bench("layer_timing conv32->32", wu, it * 100, || {
+    results.push(bench("layer_timing conv32->32", wu, it * 100, || {
         layer_timing(&arch, &layer, &part, &nnz)
-    });
+    }));
+
+    // Allocation-free functional step on the synthetic net: after
+    // warmup the scratch has grown to peak activity, so allocs/iter
+    // must read ~0 here.
+    let net = synthetic_net(&mut rng);
+    let trains = synthetic_frames(&mut rng, &net, 16);
+    let mut fnet = FunctionalNet::new(&net);
+    let step_input = trains[0][2].clone();
+    results.push(bench("functional step synthetic (reuse)", wu.max(2),
+                       it * 10, || {
+        fnet.step_reuse(&step_input).len()
+    }));
+    results.push(bench("functional frame synthetic (T=8)", wu, it, || {
+        fnet.run_frame_counts(&trains[0])
+    }));
+
+    // Frame-parallel sweep: the same 16-frame fig7-style workload,
+    // serial vs all-cores (the ratio is the sweep engine's speedup).
+    let rates = vec![0.2f64; 3];
+    let predictor = AprcPredictor::from_network(&net, &rates);
+    let sim = Simulator::new(arch, &net, &Cbws::default(), &predictor);
+    let nf = trains.len() as f64;
+    results.push(bench_items("sweep 16 frames serial", 1,
+                             if harness::quick() { 3 } else { 10 }, nf,
+                             || {
+        sweep::run_frames_functional(&sim, &trains, 1).unwrap().len()
+    }));
+    // Stable name (no thread count): the JSON entry records the host's
+    // `threads` separately, so rows stay comparable across hosts.
+    let threads = sweep::default_threads();
+    println!("(parallel sweep width: {threads})");
+    results.push(bench_items(
+        "sweep 16 frames parallel", 1,
+        if harness::quick() { 3 } else { 10 }, nf, || {
+            sweep::run_frames_functional(&sim, &trains, threads)
+                .unwrap().len()
+        }));
 
     // Full functional frames on the trained networks (if built).
     let dir = skydiver::artifacts_dir();
@@ -61,15 +151,17 @@ fn main() {
         let (imgs, _) = skydiver::data::gen_digits(1, 1);
         let inputs = encode_phased_u8(&imgs[..784], 1, 28, 28,
                                       net.meta.timesteps);
-        bench("functional frame classifier (T=24)", wu, it, || {
+        results.push(bench("functional frame classifier (T=24)", wu, it,
+                           || {
             FunctionalNet::new(&net).run_frame_counts(&inputs)
-        });
+        }));
         let rates = default_input_rates(&net);
         let predictor = AprcPredictor::from_network(&net, &rates);
         let sim = Simulator::new(arch, &net, &Cbws::default(), &predictor);
-        bench("sim frame classifier (functional trace)", wu, it, || {
+        results.push(bench("sim frame classifier (functional trace)", wu,
+                           it, || {
             sim.run_frame(&inputs, &TraceSource::Functional).unwrap()
-        });
+        }));
     }
     if let Ok(net) = NetworkWeights::load(&dir, "segmenter_aprc") {
         let (imgs, _) = skydiver::data::gen_road_scenes(1, 1);
@@ -84,8 +176,11 @@ fn main() {
         }
         let inputs = encode_phased_u8(&chw, 3, h, w, net.meta.timesteps);
         let seg_it = if harness::quick() { 3 } else { 10 };
-        bench("functional frame segmenter (T=50)", 1, seg_it, || {
+        results.push(bench("functional frame segmenter (T=50)", 1, seg_it,
+                           || {
             FunctionalNet::new(&net).run_frame_counts(&inputs)
-        });
+        }));
     }
+
+    harness::write_json(&results);
 }

@@ -14,7 +14,7 @@ fn main() {
     ctx.frames = if harness::quick() { 2 } else { 4 };
     let it = if harness::quick() { 1 } else { 3 };
     let mut last = None;
-    bench("table1 (classif + seg rows)", 0, it, || {
+    let r = bench("table1 (classif + seg rows)", 0, it, || {
         last = Some(table1::run(&ctx).expect("artifacts built"));
     });
     if let Some(res) = last {
@@ -24,4 +24,5 @@ fn main() {
                      row.energy_per_frame_j * 1e6);
         }
     }
+    harness::write_json(&[r]);
 }

@@ -26,8 +26,8 @@ use crate::power::{EnergyModel, ResourceModel};
 use crate::runtime::{Runtime, SnnRunner};
 use crate::schedule::cbws::Cbws;
 use crate::schedule::{baselines, AprcPredictor, Partition, Scheduler};
-use crate::sim::{ArchConfig, Simulator, TraceSource};
-use crate::snn::{encode_phased_u8, NetKind, NetworkWeights};
+use crate::sim::{sweep, ArchConfig, Simulator, TraceSource};
+use crate::snn::{encode_phased_u8, NetKind, NetworkWeights, SpikeMap};
 
 /// One inference request: a raw image frame.
 #[derive(Debug, Clone)]
@@ -122,6 +122,12 @@ pub struct WorkerConfig {
     pub use_runtime: bool,
     /// Override timesteps (default: weights meta).
     pub timesteps: Option<usize>,
+    /// Frame-parallel sweep width *inside* one worker for functional
+    /// batches (`sim::sweep`). 1 = serial: the worker pool is usually
+    /// the right parallel grain; raise this only when workers <<
+    /// cores (e.g. one worker on a many-core host). Ignored on the
+    /// golden/PJRT path — the client is not thread-safe.
+    pub sweep_threads: usize,
 }
 
 impl WorkerConfig {
@@ -186,6 +192,19 @@ impl WorkSource {
             }
             WorkSource::Private(_) => None,
         }
+    }
+}
+
+/// Reject malformed frames before encoding — the encoder would assert
+/// (panic) and the loss would be silent. One helper shared by the
+/// serial loop and the sweep path, so both report identical errors.
+fn validate_frame(req: &Request, c: usize, h: usize, w: usize)
+                  -> Result<()> {
+    if req.pixels.len() == c * h * w {
+        Ok(())
+    } else {
+        Err(anyhow!("frame {}: got {} pixels, expected {}x{}x{}",
+                    req.id, req.pixels.len(), c, h, w))
     }
 }
 
@@ -262,22 +281,20 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
     let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
                      net.meta.in_shape[2]);
     while let Some(batch) = source.next_batch() {
+        // Functional batches can fan out over the frame-parallel sweep
+        // when the worker is configured wider than 1; responses are
+        // still emitted in batch order.
+        if runner.is_none() && cfg.sweep_threads > 1 && batch.len() > 1 {
+            serve_batch_sweep(idx, cfg, &sim, (c, h, w), timesteps,
+                              batch, events)?;
+            continue;
+        }
         let mut pending = batch.into_iter();
         while let Some(req) = pending.next() {
             // This request plus the rest of the batch die with us.
             let lost = 1 + pending.len();
             let t0 = Instant::now();
-            // Reject malformed frames as a reported failure — the
-            // encoder would assert (panic) and the loss would be
-            // silent.
-            check(events, idx, lost,
-                  if req.pixels.len() == c * h * w {
-                      Ok(())
-                  } else {
-                      Err(anyhow!("frame {}: got {} pixels, expected \
-                                   {}x{}x{}", req.id, req.pixels.len(),
-                                  c, h, w))
-                  })?;
+            check(events, idx, lost, validate_frame(&req, c, h, w))?;
             let inputs = encode_phased_u8(&req.pixels, c, h, w, timesteps);
             let trace = match runner.as_mut() {
                 Some(r) => TraceSource::Golden(
@@ -301,6 +318,54 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
                 return Ok(()); // collector gone; shut down
             }
         }
+    }
+    Ok(())
+}
+
+/// Serve one functional batch through the frame-parallel sweep
+/// (`sim::sweep`): encode serially, simulate every frame across
+/// `cfg.sweep_threads` scoped threads, then emit responses in batch
+/// order — the output ordering is identical to the serial loop. A
+/// malformed frame fails exactly like the serial loop: everything
+/// before it is served, it and everything after are reported lost. A
+/// sweep failure loses the whole batch.
+fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
+                     (c, h, w): (usize, usize, usize), timesteps: usize,
+                     batch: Vec<Request>,
+                     events: &mpsc::Sender<WorkerEvent>) -> Result<()> {
+    let t0 = Instant::now();
+    let first_bad = batch.iter()
+        .position(|r| validate_frame(r, c, h, w).is_err())
+        .unwrap_or(batch.len());
+    let good = &batch[..first_bad];
+    let trains: Vec<Vec<SpikeMap>> = good.iter()
+        .map(|r| encode_phased_u8(&r.pixels, c, h, w, timesteps))
+        .collect();
+    let reports = check(events, idx, batch.len(),
+                        sweep::run_frames_functional(sim, &trains,
+                                                     cfg.sweep_threads))?;
+    // Frames ran concurrently: attribute an equal share of the batch
+    // wall time to each response's busy-time contribution.
+    let per_frame_us =
+        (t0.elapsed().as_micros() as u64) / good.len().max(1) as u64;
+    for (req, report) in good.iter().zip(&reports) {
+        let energy = cfg.energy.frame_energy(report, cfg.arch.clock_hz);
+        let resp = Response {
+            id: req.id,
+            output_counts: report.output_counts.clone(),
+            sim_cycles: report.total_cycles,
+            energy_j: energy.total_j,
+            latency_us: req.submitted.elapsed().as_micros() as u64,
+            service_us: per_frame_us,
+            worker: idx,
+        };
+        if events.send(WorkerEvent::Served(resp)).is_err() {
+            return Ok(()); // collector gone; shut down
+        }
+    }
+    if first_bad < batch.len() {
+        check(events, idx, batch.len() - first_bad,
+              validate_frame(&batch[first_bad], c, h, w))?;
     }
     Ok(())
 }

@@ -15,7 +15,7 @@ use crate::power::ResourceModel;
 use crate::schedule::cbws::{cbws_assign, Cbws};
 use crate::schedule::{all_schedulers, AprcPredictor, Partition,
                       Scheduler};
-use crate::sim::{ArchConfig, RunSummary, Simulator, TraceSource};
+use crate::sim::{sweep, ArchConfig, RunSummary, Simulator};
 use crate::snn::NetworkWeights;
 
 #[derive(Debug, Clone)]
@@ -54,9 +54,8 @@ pub fn run(ctx: &ExperimentCtx) -> Result<AblationResult> {
         arch.n_spes = n;
         for s in all_schedulers() {
             let sim = Simulator::new(arch, &net, s.as_ref(), &predictor);
-            let frames: Vec<_> = trains.iter()
-                .map(|t| sim.run_frame(t, &TraceSource::Functional))
-                .collect::<Result<_>>()?;
+            let frames = sweep::run_frames_functional(
+                &sim, &trains, sweep::default_threads())?;
             let sum = RunSummary::from_frames(&frames, arch.clock_hz, n);
             spe_sweep.push(SweepPoint {
                 scheduler: s.name().into(),
@@ -133,14 +132,13 @@ pub fn timestep_sweep(ctx: &ExperimentCtx) -> Result<Vec<TimestepPoint>> {
     for t_steps in [8usize, 16, 24, 32] {
         let (trains, labels) =
             classifier_frames(super::accuracy::DIGITS_TEST_SEED, n, t_steps);
+        let frames = sweep::run_frames_functional(
+            &sim, &trains, sweep::default_threads())?;
         let mut correct = 0usize;
-        let mut frames = Vec::new();
-        for (train, &label) in trains.iter().zip(&labels) {
-            let rep = sim.run_frame(train, &TraceSource::Functional)?;
+        for (rep, &label) in frames.iter().zip(&labels) {
             let pred = rep.output_counts.iter().enumerate()
                 .max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap_or(0);
             correct += (pred == label as usize) as usize;
-            frames.push(rep);
         }
         let sum = RunSummary::from_frames(&frames, arch.clock_hz,
                                           arch.n_spes);

@@ -9,6 +9,7 @@ use anyhow::Result;
 use super::common::{classifier_frames, segmenter_frames, ExperimentCtx};
 use crate::metrics::Table;
 use crate::runtime::{Runtime, SnnRunner};
+use crate::sim::sweep;
 use crate::snn::{FunctionalNet, NetworkWeights};
 
 /// Seeds must match `python/compile/train.py`.
@@ -37,12 +38,20 @@ pub fn run(ctx: &ExperimentCtx) -> Result<AccuracyResult> {
         None => None,
     };
 
+    // Golden frames run serially (one PJRT runner, reused across
+    // frames); functional frames fan out over the frame-parallel sweep.
+    let all_counts: Vec<Vec<u32>> = match &step {
+        Some(s) => {
+            let mut runner = SnnRunner::new(s)?;
+            trains.iter().map(|t| runner.run_frame_counts(t))
+                .collect::<Result<_>>()?
+        }
+        None => sweep::parallel_map(
+            &trains, sweep::default_threads(),
+            |_, train| FunctionalNet::new(&net).run_frame_counts(train)),
+    };
     let mut correct = 0usize;
-    for (train, &label) in trains.iter().zip(&labels) {
-        let counts: Vec<u32> = match &step {
-            Some(s) => SnnRunner::new(s)?.run_frame_counts(train)?,
-            None => FunctionalNet::new(&net).run_frame_counts(train),
-        };
+    for (counts, &label) in all_counts.iter().zip(&labels) {
         let pred = counts.iter().enumerate()
             .max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap_or(0);
         if pred == label as usize {
@@ -62,9 +71,11 @@ pub fn run(ctx: &ExperimentCtx) -> Result<AccuracyResult> {
     assert_eq!(oc, 1);
     let (ih, iw) = (crate::data::ROAD_H, crate::data::ROAD_W);
     let (dh, dw) = ((oh - ih) / 2, (ow - iw) / 2);
+    let seg_counts = sweep::parallel_map(
+        &seg_trains, sweep::default_threads(),
+        |_, train| FunctionalNet::new(&seg).run_frame_counts(train));
     let mut iou_sum = 0.0;
-    for (train, mask) in seg_trains.iter().zip(&masks) {
-        let counts = FunctionalNet::new(&seg).run_frame_counts(train);
+    for (counts, mask) in seg_counts.iter().zip(&masks) {
         let mut inter = 0usize;
         let mut union = 0usize;
         for y in 0..ih {

@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 use anyhow::Result;
 
 use crate::runtime::{Runtime, SnnRunner};
-use crate::sim::TraceSource;
+use crate::sim::{sweep, FrameReport, Simulator, TraceSource};
 use crate::snn::{encode_phased_u8, NetworkWeights, SpikeMap};
 
 /// Context every experiment receives.
@@ -76,6 +76,23 @@ pub fn trace_for(ctx: &ExperimentCtx, net: &NetworkWeights,
     let step = rt.load_step(&ctx.artifacts, net)?;
     let mut runner = SnnRunner::new(&step)?;
     Ok(TraceSource::Golden(runner.run_frame(inputs)?))
+}
+
+/// Simulate many frames of one configuration. Functional mode fans the
+/// frames out across the frame-parallel sweep engine (`sim::sweep`) —
+/// reports come back in frame order, bit-identical to a serial loop.
+/// Golden mode keeps the old interleaved serial loop: the PJRT client
+/// is not thread-safe, trace generation dominates the cost anyway, and
+/// interleaving keeps trace memory at one frame instead of all frames.
+pub fn sweep_run(ctx: &ExperimentCtx, net: &NetworkWeights,
+                 sim: &Simulator, trains: &[Vec<SpikeMap>])
+                 -> Result<Vec<FrameReport>> {
+    if ctx.golden {
+        return trains.iter()
+            .map(|t| sim.run_frame(t, &trace_for(ctx, net, t)?))
+            .collect();
+    }
+    sweep::run_frames_functional(sim, trains, sweep::default_threads())
 }
 
 /// Pearson correlation of two equal-length series.

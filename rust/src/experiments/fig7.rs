@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 
-use super::common::{classifier_frames, segmenter_frames, trace_for,
+use super::common::{classifier_frames, segmenter_frames, sweep_run,
                     ExperimentCtx};
 use crate::metrics::Table;
 use crate::schedule::baselines::Contiguous;
@@ -43,12 +43,7 @@ fn run_config(ctx: &ExperimentCtx, net: &NetworkWeights,
     let rates = crate::coordinator::worker::default_input_rates(net);
     let predictor = AprcPredictor::from_network(net, &rates);
     let sim = Simulator::new(arch, net, scheduler, &predictor);
-    let frames: Vec<_> = trains.iter()
-        .map(|train| {
-            let trace = trace_for(ctx, net, train)?;
-            sim.run_frame(train, &trace)
-        })
-        .collect::<Result<_>>()?;
+    let frames = sweep_run(ctx, net, &sim, trains)?;
     let summary = RunSummary::from_frames(&frames, arch.clock_hz,
                                           arch.n_spes);
     Ok(ConfigResult {
@@ -72,12 +67,7 @@ fn run_profiled(ctx: &ExperimentCtx, net: &NetworkWeights,
     };
     let predictor = AprcPredictor::from_profile(net, &calib);
     let sim = Simulator::new(arch, net, &Cbws::default(), &predictor);
-    let frames: Vec<_> = trains.iter()
-        .map(|train| {
-            let trace = trace_for(ctx, net, train)?;
-            sim.run_frame(train, &trace)
-        })
-        .collect::<Result<_>>()?;
+    let frames = sweep_run(ctx, net, &sim, trains)?;
     let summary = RunSummary::from_frames(&frames, arch.clock_hz,
                                           arch.n_spes);
     Ok(ConfigResult {
@@ -110,12 +100,7 @@ fn run_rectified(ctx: &ExperimentCtx, net: &NetworkWeights,
     let rates = crate::coordinator::worker::default_input_rates(net);
     let predictor = AprcPredictor::from_network_rectified(net, &rates, 0.1);
     let sim = Simulator::new(arch, net, &Cbws::default(), &predictor);
-    let frames: Vec<_> = trains.iter()
-        .map(|train| {
-            let trace = trace_for(ctx, net, train)?;
-            sim.run_frame(train, &trace)
-        })
-        .collect::<Result<_>>()?;
+    let frames = sweep_run(ctx, net, &sim, trains)?;
     let summary = RunSummary::from_frames(&frames, arch.clock_hz,
                                           arch.n_spes);
     Ok(ConfigResult {

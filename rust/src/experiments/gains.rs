@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 
-use super::common::{classifier_frames, segmenter_frames, trace_for,
+use super::common::{classifier_frames, segmenter_frames, sweep_run,
                     ExperimentCtx};
 use crate::coordinator::default_input_rates;
 use crate::metrics::Table;
@@ -47,9 +47,7 @@ fn fps(ctx: &ExperimentCtx, net: &NetworkWeights,
         AprcPredictor::from_network(net, &rates)
     };
     let sim = Simulator::new(arch, net, scheduler, &predictor);
-    let frames: Vec<_> = trains.iter()
-        .map(|tr| sim.run_frame(tr, &trace_for(ctx, net, tr)?))
-        .collect::<Result<_>>()?;
+    let frames = sweep_run(ctx, net, &sim, trains)?;
     Ok(RunSummary::from_frames(&frames, arch.clock_hz, arch.n_spes)
         .mean_fps)
 }

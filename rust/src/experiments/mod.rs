@@ -17,4 +17,4 @@ pub mod accuracy;
 pub mod ablation;
 
 pub use common::{load_net, classifier_frames, segmenter_frames,
-                 trace_for, ExperimentCtx};
+                 sweep_run, trace_for, ExperimentCtx};

@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 
-use super::common::{classifier_frames, segmenter_frames, trace_for,
+use super::common::{classifier_frames, segmenter_frames, sweep_run,
                     ExperimentCtx};
 use crate::metrics::{si, Table};
 use crate::power::EnergyModel;
@@ -47,8 +47,7 @@ fn task_row(ctx: &ExperimentCtx, net: &NetworkWeights, task: &str,
     let mut cycles = 0u64;
     let mut synops = 0u64;
     let mut joules = 0.0;
-    for train in trains {
-        let rep = sim.run_frame(train, &trace_for(ctx, net, train)?)?;
+    for rep in sweep_run(ctx, net, &sim, trains)? {
         cycles += rep.total_cycles;
         synops += rep.synops;
         joules += energy.frame_energy(&rep, arch.clock_hz).total_j;

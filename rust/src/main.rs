@@ -32,6 +32,7 @@ COMMANDS:
   run        [--net classifier|segmenter] [--plain] [--policy P]
              [--frames N] [--workers N] [--golden]
              [--dispatch queue|rr] [--queue-cap N] [--batch-max N]
+             [--sweep-threads N]   (frame-parallel width per worker)
   trace      [--net classifier|segmenter] [--plain] [--policy P] [--golden]
   experiment <id> [--frames N] [--golden]
              ids: fig2 fig4c fig6 fig7 table1 table2 gains accuracy
@@ -214,6 +215,7 @@ fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
         energy: EnergyModel::default(),
         use_runtime: golden,
         timesteps: None,
+        sweep_threads: args.get_usize("sweep-threads", 1)?,
     };
     let scfg = ServiceConfig {
         workers,

@@ -32,6 +32,10 @@ pub struct StepExecutable {
     in_shape: (usize, usize, usize),
     /// Flattened vmem lengths per layer.
     vmem_lens: Vec<usize>,
+    /// Pristine zero membrane buffers, one per layer, built once at
+    /// load: `SnnRunner::reset` wraps these as literals instead of
+    /// allocating fresh `vec![0.0; n]` zeros every frame.
+    zero_vmems: Vec<Vec<f32>>,
     /// Output-spike shapes per layer (C, H, W).
     out_shapes: Vec<(usize, usize, usize)>,
 }
@@ -71,7 +75,7 @@ impl Runtime {
                     weights.push(literal_4d(w, geom.cout, geom.cin,
                                             geom.r, geom.r)?);
                 }
-                crate::snn::LayerWeights::Dense { geom, w, b } => {
+                crate::snn::LayerWeights::Dense { geom, w, b, .. } => {
                     weights.push(literal_2d(w, geom.fout, geom.fin)?);
                     weights.push(literal_1d(b)?);
                 }
@@ -79,16 +83,19 @@ impl Runtime {
         }
         let in_shape = (net.meta.in_shape[0], net.meta.in_shape[1],
                         net.meta.in_shape[2]);
-        let vmem_lens = (0..net.layers.len())
+        let vmem_lens: Vec<usize> = (0..net.layers.len())
             .map(|l| {
                 let (c, h, w) = net.layer_output_shape(l);
                 c * h * w
             })
             .collect();
+        let zero_vmems = vmem_lens.iter().map(|&n| vec![0.0f32; n])
+            .collect();
         let out_shapes = (0..net.layers.len())
             .map(|l| net.layer_output_shape(l))
             .collect();
-        Ok(StepExecutable { exe, weights, in_shape, vmem_lens, out_shapes })
+        Ok(StepExecutable { exe, weights, in_shape, vmem_lens, zero_vmems,
+                            out_shapes })
     }
 }
 
@@ -124,20 +131,29 @@ pub struct SnnRunner<'a> {
     step: &'a StepExecutable,
     /// Membrane state literals between steps.
     vmems: Vec<xla::Literal>,
+    /// Reused dense-f32 staging buffer for the input spike map
+    /// (`SpikeMap::to_f32_into` — one allocation per runner, not per
+    /// timestep).
+    in_f32: Vec<f32>,
 }
 
 impl<'a> SnnRunner<'a> {
     pub fn new(step: &'a StepExecutable) -> Result<Self> {
-        let vmems = step.vmem_lens.iter()
-            .map(|&n| Ok(xla::Literal::vec1(&vec![0.0f32; n])))
-            .collect::<Result<_>>()?;
-        Ok(Self { step, vmems })
+        let vmems = Self::zero_literals(step)?;
+        Ok(Self { step, vmems, in_f32: Vec::new() })
+    }
+
+    /// Wrap the executable's pristine zero buffers as fresh literals —
+    /// no host-side zero vector is allocated per frame (the buffers are
+    /// built once at load; see `StepExecutable::zero_vmems`).
+    fn zero_literals(step: &StepExecutable) -> Result<Vec<xla::Literal>> {
+        step.zero_vmems.iter()
+            .map(|z| Ok(xla::Literal::vec1(z)))
+            .collect()
     }
 
     pub fn reset(&mut self) -> Result<()> {
-        self.vmems = self.step.vmem_lens.iter()
-            .map(|&n| Ok(xla::Literal::vec1(&vec![0.0f32; n])))
-            .collect::<Result<_>>()?;
+        self.vmems = Self::zero_literals(self.step)?;
         Ok(())
     }
 
@@ -153,7 +169,8 @@ impl<'a> SnnRunner<'a> {
         // borrows. &Literal implements Borrow<Literal>.
         let mut args: Vec<&xla::Literal> = Vec::with_capacity(
             1 + nl + self.step.weights.len());
-        let in_lit = literal_3d(&input.to_f32(), (c, h, w))?;
+        input.to_f32_into(&mut self.in_f32);
+        let in_lit = literal_3d(&self.in_f32, (c, h, w))?;
         args.push(&in_lit);
         for v in &self.vmems {
             args.push(v);

@@ -80,12 +80,18 @@ impl<'a> Simulator<'a> {
             }
         };
 
+        // Per-step scratch, reused across the whole frame: the timestep
+        // loop below performs no heap allocation (see PERF.md) — the
+        // functional model steps into its own retained buffers, golden
+        // traces are borrowed, and the per-layer count vectors live
+        // here.
+        let mut nnz: Vec<usize> = Vec::new();
+        let mut row_buf: Vec<u64> = Vec::new();
         for (t, input) in inputs.iter().enumerate() {
-            // Per-layer outputs at this timestep.
-            let outs: Vec<SpikeMap> = match (&mut functional, trace) {
-                (Some(f), _) => f.step(input).into_iter()
-                    .map(|o| o.spikes).collect(),
-                (None, TraceSource::Golden(tr)) => tr[t].clone(),
+            // Per-layer outputs at this timestep (borrowed, not cloned).
+            let outs: &[SpikeMap] = match (&mut functional, trace) {
+                (Some(f), _) => f.step_reuse(input),
+                (None, TraceSource::Golden(tr)) => tr[t].as_slice(),
                 _ => unreachable!(),
             };
             ensure!(outs.len() == nl, "trace has {} layers, net {}",
@@ -93,25 +99,29 @@ impl<'a> Simulator<'a> {
 
             for l in 0..nl {
                 let in_map = if l == 0 { input } else { &outs[l - 1] };
-                let nnz = in_map.nnz_per_channel();
+                in_map.nnz_per_channel_into(&mut nnz);
                 // Sub-channel fallbacks (paper §III-C stream
                 // partitioning): conv layers with fewer input channels
                 // than SPEs split by interleaved rows; the dense layer
                 // always splits by interleaved input neuron (its weight
                 // rows are per-neuron, so the channel grain is
                 // artificial there).
-                let rows = match &self.net.layers[l] {
+                let rows: Option<&[u64]> = match &self.net.layers[l] {
                     crate::snn::LayerWeights::Dense { .. } => {
-                        Some(in_map.nnz_index_interleaved(self.arch.n_spes))
+                        in_map.nnz_index_interleaved_into(
+                            self.arch.n_spes, &mut row_buf);
+                        Some(&row_buf)
                     }
                     _ if in_map.c < self.arch.n_spes => {
-                        Some(in_map.nnz_row_interleaved(self.arch.n_spes))
+                        in_map.nnz_row_interleaved_into(
+                            self.arch.n_spes, &mut row_buf);
+                        Some(&row_buf)
                     }
                     _ => None,
                 };
                 let timing = layer_timing_with_rows(
                     &self.arch, &self.net.layers[l], &self.partitions[l],
-                    &nnz, rows.as_deref());
+                    &nnz, rows);
                 report.layers[l].absorb(&timing, self.arch.n_spes);
                 report.compute_cycles += timing.cycles;
                 report.synops += timing.synops;

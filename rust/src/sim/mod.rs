@@ -47,10 +47,12 @@
 
 mod engine;
 mod report;
+pub mod sweep;
 mod timing;
 
 pub use engine::{Simulator, TraceSource};
 pub use report::{FrameReport, LayerStats, RunSummary};
+pub use sweep::{parallel_map, FrameJob};
 pub use timing::{layer_timing, LayerTiming};
 
 

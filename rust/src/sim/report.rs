@@ -5,7 +5,9 @@
 use super::timing::LayerTiming;
 
 /// Per-layer aggregation over the timesteps of one frame.
-#[derive(Debug, Clone, Default)]
+/// (`PartialEq` so parity tests can assert the parallel sweep is
+/// bit-identical to the serial path.)
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct LayerStats {
     pub layer: usize,
     pub cycles: u64,
@@ -49,7 +51,7 @@ impl LayerStats {
 }
 
 /// One frame through the accelerator.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FrameReport {
     pub layers: Vec<LayerStats>,
     /// Compute cycles summed over layers and timesteps.

@@ -1,0 +1,133 @@
+//! Frame-parallel sweep engine: run many independent frames of one
+//! configured [`Simulator`] across scoped threads (std-only; the build
+//! is offline, so no rayon).
+//!
+//! The parallel grain is the whole frame. Frames share nothing mutable
+//! — each worker gets its own [`FunctionalNet`](crate::snn::FunctionalNet)
+//! scratch via `Simulator::run_frame` — so there is no synchronization
+//! inside the hot loop, and per-*step* channel threading (tried and
+//! reverted, see PERF.md) is not needed. Output ordering is
+//! deterministic: result `i` always corresponds to input `i`, and each
+//! frame's arithmetic is untouched, so a parallel sweep is bit-identical
+//! to the serial one (asserted by `rust/tests/parallel_sweep.rs`).
+//!
+//! Golden (PJRT) traces must be produced *before* the sweep — the PJRT
+//! client is not thread-safe — and are then consumed read-only by any
+//! number of workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::engine::{Simulator, TraceSource};
+use super::report::FrameReport;
+use crate::snn::SpikeMap;
+
+/// Sweep width: `SKYDIVER_SWEEP_THREADS` if set, else the machine's
+/// available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Some(n) = std::env::var("SKYDIVER_SWEEP_THREADS").ok()
+        .and_then(|v| v.parse::<usize>().ok()) {
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Deterministic parallel map over a slice: `f(i, &items[i])` for every
+/// item, on up to `threads` scoped threads pulling indices from a
+/// shared atomic counter (work-conserving — the host-side analogue of
+/// the pull-based worker queue). Results come back in input order
+/// regardless of completion order. `threads <= 1` (or a single item)
+/// degenerates to a plain serial loop with no thread machinery at all.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every slot filled"))
+        .collect()
+}
+
+/// One frame of a sweep: the encoded spike train plus where its
+/// per-layer activity comes from.
+pub struct FrameJob<'a> {
+    pub inputs: &'a [SpikeMap],
+    pub trace: &'a TraceSource,
+}
+
+/// Simulate every job on up to `threads` threads; reports come back in
+/// job order. The first frame error aborts the result (remaining frames
+/// may still have been simulated — their reports are dropped).
+pub fn run_frames(sim: &Simulator, jobs: &[FrameJob], threads: usize)
+                  -> Result<Vec<FrameReport>> {
+    parallel_map(jobs, threads, |_, j| sim.run_frame(j.inputs, j.trace))
+        .into_iter()
+        .collect()
+}
+
+/// Functional-trace convenience: sweep over many encoded frames.
+pub fn run_frames_functional(sim: &Simulator, trains: &[Vec<SpikeMap>],
+                             threads: usize) -> Result<Vec<FrameReport>> {
+    parallel_map(trains, threads,
+                 |_, t| sim.run_frame(t, &TraceSource::Functional))
+        .into_iter()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let got = parallel_map(&items, 4, |i, &v| {
+            assert_eq!(i, v);
+            v * 3
+        });
+        assert_eq!(got, (0..100).map(|v| v * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_serial_degenerate() {
+        let items = [1usize, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |_, &v| v + 1), vec![2, 3, 4]);
+        assert_eq!(parallel_map(&items, 0, |_, &v| v + 1), vec![2, 3, 4]);
+        let empty: Vec<usize> = Vec::new();
+        assert!(parallel_map(&empty, 8, |_, &v: &usize| v).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_more_threads_than_items() {
+        let items = [10usize, 20];
+        assert_eq!(parallel_map(&items, 16, |_, &v| v), vec![10, 20]);
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

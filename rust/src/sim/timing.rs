@@ -2,7 +2,7 @@
 //!
 //! Pure function of (geometry, partition, per-channel spike counts); the
 //! engine calls it once per layer per timestep, so this is the hot path
-//! (see DESIGN.md §8 and benches/sim_hotpath.rs).
+//! (see PERF.md and benches/sim_hotpath.rs) — it must not allocate.
 
 
 
@@ -38,13 +38,6 @@ pub struct LayerTiming {
     pub work_max: u64,
 }
 
-/// Events per SPE group under `partition` given per-channel counts.
-pub fn events_per_group(partition: &Partition, nnz: &[usize]) -> Vec<u64> {
-    partition.groups.iter()
-        .map(|g| g.iter().map(|&c| nnz[c] as u64).sum())
-        .collect()
-}
-
 /// The timing model of `sim::mod` docs, for one layer-step.
 ///
 /// `nnz` is the per-input-channel spike count of this timestep;
@@ -66,12 +59,22 @@ pub fn layer_timing_with_rows(arch: &ArchConfig, layer: &LayerWeights,
         ),
         LayerWeights::Dense { geom, .. } => (geom.fout, 1, geom.fin),
     };
-    let group_events = match row_events {
-        Some(re) => re.to_vec(),
-        None => events_per_group(partition, nnz),
+    // Sum + max over the per-group event counts without materialising
+    // the group vector (this runs per layer per timestep).
+    let (events, max_events) = match row_events {
+        Some(re) => (re.iter().sum::<u64>(),
+                     re.iter().copied().max().unwrap_or(0)),
+        None => {
+            let mut total = 0u64;
+            let mut max = 0u64;
+            for g in &partition.groups {
+                let e: u64 = g.iter().map(|&c| nnz[c] as u64).sum();
+                total += e;
+                max = max.max(e);
+            }
+            (total, max)
+        }
     };
-    let events: u64 = group_events.iter().sum();
-    let max_events = group_events.iter().copied().max().unwrap_or(0);
 
     // Cycles per event on one SPE: RxR window over `streams` lanes.
     let ev_cycles = (synops_per_event + arch.streams - 1) / arch.streams;
@@ -209,6 +212,7 @@ mod tests {
             geom: crate::snn::DenseGeom { fin: 64, fout: 10,
                                           src_channels: 8 },
             w: vec![0.0; 640],
+            wt: vec![0.0; 640],
             b: vec![0.0; 10],
         };
         let p = contiguous(8, 8);

@@ -19,21 +19,41 @@ pub struct LayerOutput {
     pub spikes: SpikeMap,
 }
 
-/// Mutable network state (membrane potentials) + weights reference.
+/// Mutable network state (membrane potentials) + weights reference,
+/// plus the per-step scratch that makes steady-state stepping
+/// allocation-free: per-layer output spike maps and the event
+/// classification buffers are allocated once here and reused by every
+/// [`step_reuse`](Self::step_reuse) call (see PERF.md).
 pub struct FunctionalNet<'a> {
     pub net: &'a NetworkWeights,
     /// Per-layer flattened membrane potentials.
     vmem: Vec<Vec<f32>>,
+    /// Per-layer output spike maps, overwritten in place every step.
+    outs: Vec<SpikeMap>,
+    /// Interior-event scratch: (input channel, top-left vmem offset).
+    interior: Vec<(u32, u32)>,
+    /// Border-event scratch: (input channel, y, x) for the clipped path.
+    border: Vec<(u32, u32, u32)>,
 }
 
 impl<'a> FunctionalNet<'a> {
     pub fn new(net: &'a NetworkWeights) -> Self {
-        let vmem = net.layers.iter().map(|l| match l {
-            LayerWeights::Conv { geom, .. } =>
-                vec![0.0; geom.cout * geom.eh * geom.ew],
-            LayerWeights::Dense { geom, .. } => vec![0.0; geom.fout],
-        }).collect();
-        Self { net, vmem }
+        let mut vmem = Vec::with_capacity(net.layers.len());
+        let mut outs = Vec::with_capacity(net.layers.len());
+        for l in &net.layers {
+            match l {
+                LayerWeights::Conv { geom, .. } => {
+                    vmem.push(vec![0.0; geom.cout * geom.eh * geom.ew]);
+                    outs.push(SpikeMap::zeros(geom.cout, geom.eh,
+                                              geom.ew));
+                }
+                LayerWeights::Dense { geom, .. } => {
+                    vmem.push(vec![0.0; geom.fout]);
+                    outs.push(SpikeMap::zeros(geom.fout, 1, 1));
+                }
+            }
+        }
+        Self { net, vmem, outs, interior: Vec::new(), border: Vec::new() }
     }
 
     pub fn reset(&mut self) {
@@ -47,25 +67,39 @@ impl<'a> FunctionalNet<'a> {
         &self.vmem[layer]
     }
 
-    /// One timestep: input spikes -> per-layer output spikes.
-    pub fn step(&mut self, input: &SpikeMap) -> Vec<LayerOutput> {
+    /// One timestep into the retained per-layer scratch maps. Performs
+    /// zero heap allocations once the event buffers have grown to the
+    /// frame's peak activity (typically after the first step). The
+    /// returned maps are overwritten by the next call — clone what must
+    /// survive (that is what [`step`](Self::step) does).
+    pub fn step_reuse(&mut self, input: &SpikeMap) -> &[SpikeMap] {
         let vth = self.net.meta.vth;
-        let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.net.layers.len());
-        let mut cur = input;
-        for (li, layer) in self.net.layers.iter().enumerate() {
-            let spikes = match layer {
+        for li in 0..self.net.layers.len() {
+            let (done, rest) = self.outs.split_at_mut(li);
+            let cur: &SpikeMap = if li == 0 { input } else { &done[li - 1] };
+            let out = &mut rest[0];
+            match &self.net.layers[li] {
                 LayerWeights::Conv { geom, w } => {
-                    conv_step(cur, geom, w, &mut self.vmem[li], vth)
+                    conv_step_into(cur, geom, w, &mut self.vmem[li], vth,
+                                   &mut self.interior, &mut self.border,
+                                   out);
                 }
-                LayerWeights::Dense { geom, w, b } => {
-                    dense_step(cur, geom.fin, geom.fout, w, b,
-                               &mut self.vmem[li], vth)
+                LayerWeights::Dense { geom, wt, b, .. } => {
+                    dense_step_into(cur, geom.fin, geom.fout, wt, b,
+                                    &mut self.vmem[li], vth, out);
                 }
-            };
-            outs.push(LayerOutput { spikes });
-            cur = &outs[li].spikes;
+            }
         }
-        outs
+        &self.outs
+    }
+
+    /// One timestep: input spikes -> owned per-layer output spikes
+    /// (a cloning convenience over [`step_reuse`](Self::step_reuse)).
+    pub fn step(&mut self, input: &SpikeMap) -> Vec<LayerOutput> {
+        self.step_reuse(input);
+        self.outs.iter()
+            .map(|s| LayerOutput { spikes: s.clone() })
+            .collect()
     }
 
     /// Run a full frame: T input maps -> per-layer per-timestep traces,
@@ -83,8 +117,8 @@ impl<'a> FunctionalNet<'a> {
         let (c, h, w) = self.net.layer_output_shape(last);
         let mut counts = vec![0u32; c * h * w];
         for s in inputs {
-            let outs = self.step(s);
-            for (ch, idx) in outs[last].spikes.iter_events() {
+            let outs = self.step_reuse(s);
+            for (ch, idx) in outs[last].iter_events() {
                 counts[ch * h * w + idx] += 1;
             }
         }
@@ -92,17 +126,22 @@ impl<'a> FunctionalNet<'a> {
     }
 }
 
-/// Event-driven conv + LIF for one timestep.
+/// Event-driven conv + LIF for one timestep, written into `out`.
 ///
-/// Hot path of the whole simulator (see DESIGN.md §8 / EXPERIMENTS.md
-/// §Perf): events are decoded once, then the scatter runs output-channel
-/// -major (the per-channel membrane block stays cache-resident and the
-/// (m, c) weight window is 9 contiguous floats), with a branch-free
-/// interior fast path for R = 3. Full-pad (APRC) layers are *always*
-/// interior — `oy = y + pad - j` spans `y .. y+2 < eh` — so the paper's
-/// own convolution modification also makes the simulator fast.
-fn conv_step(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
-             vmem: &mut [f32], vth: f32) -> SpikeMap {
+/// Hot path of the whole simulator (see PERF.md): events are decoded
+/// once into the caller's reused `interior`/`border` scratch, then the
+/// scatter runs output-channel-major (the per-channel membrane block
+/// stays cache-resident and the (m, c) weight window is 9 contiguous
+/// floats), with a branch-free interior fast path for R = 3. Spikes are
+/// packed straight into `out`'s words — no allocation anywhere on this
+/// path. Full-pad (APRC) layers are *always* interior — `oy = y + pad
+/// - j` spans `y .. y+2 < eh` — so the paper's own convolution
+/// modification also makes the simulator fast.
+#[allow(clippy::too_many_arguments)]
+fn conv_step_into(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
+                  vmem: &mut [f32], vth: f32,
+                  interior: &mut Vec<(u32, u32)>,
+                  border: &mut Vec<(u32, u32, u32)>, out: &mut SpikeMap) {
     let (r, pad) = (geom.r, geom.pad);
     let (eh, ew) = (geom.eh, geom.ew);
     let per_out = eh * ew;
@@ -111,15 +150,16 @@ fn conv_step(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
     // Classify events once (independent of the output channel): interior
     // events carry a precomputed top-left membrane offset; border events
     // keep coordinates for the clipped path. Full-pad R=3 layers are
-    // 100% interior by construction.
-    let mut interior: Vec<(u32, u32)> = Vec::new();
-    let mut border: Vec<(u32, u32, u32)> = Vec::new();
+    // 100% interior by construction. An event is interior iff the whole
+    // 3x3 window lands in-bounds: the scatter touches rows iy-2..=iy
+    // and columns ix-2..=ix.
+    interior.clear();
+    border.clear();
     for (c, idx) in input.iter_events() {
         let y = idx / geom.w;
         let x = idx % geom.w;
         let (iy, ix) = (y + pad, x + pad);
-        if r == 3 && iy >= 2 && iy < eh + 1 && ix >= 2 && ix < ew + 1
-            && iy - 2 + 2 < eh && ix - 2 + 2 < ew {
+        if r == 3 && iy >= 2 && iy < eh && ix >= 2 && ix < ew {
             interior.push((c as u32, ((iy - 2) * ew + (ix - 2)) as u32));
         } else {
             border.push((c as u32, y as u32, x as u32));
@@ -129,9 +169,12 @@ fn conv_step(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
     // Scatter + threshold per output channel. (A scoped-thread split
     // over channels was tried and reverted: on the 2-core testbed the
     // per-step spawn overhead dominated the small classifier layers and
-    // bought <5% on the segmenter — see EXPERIMENTS.md §Perf.)
-    let wpc = (per_out + 63) / 64;
-    let mut words = vec![0u64; geom.cout * wpc];
+    // bought <5% on the segmenter — see PERF.md. The parallel grain
+    // that does pay is whole frames: sim::sweep.)
+    debug_assert_eq!((out.c, out.h, out.w), (geom.cout, eh, ew));
+    out.clear();
+    let wpc = out.words_per_channel();
+    let words = out.words_mut();
     let cin_r2 = geom.cin * r2;
     for m in 0..geom.cout {
         let vm = &mut vmem[m * per_out..(m + 1) * per_out];
@@ -139,7 +182,7 @@ fn conv_step(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
         // Branch-free interior scatter: 3 rows x 3 contiguous adds,
         // kernel mirrored in both axes (oy = y+pad-j). Bounds are
         // guaranteed by the interior classification above.
-        for &(c, base) in &interior {
+        for &(c, base) in interior.iter() {
             let b = base as usize;
             unsafe {
                 let w9 = wm.get_unchecked(
@@ -152,7 +195,7 @@ fn conv_step(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
                 }
             }
         }
-        for &(c, y, x) in &border {
+        for &(c, y, x) in border.iter() {
             let wc = &wm[c as usize * r2..(c as usize + 1) * r2];
             scatter_clipped(vm, wc, y as usize, x as usize, r, pad, eh, ew);
         }
@@ -167,7 +210,6 @@ fn conv_step(input: &SpikeMap, geom: &super::ConvGeom, w: &[f32],
             }
         }
     }
-    SpikeMap::from_words(geom.cout, eh, ew, words)
 }
 
 /// Border-clipped scatter (slow path / generic R).
@@ -191,20 +233,30 @@ fn scatter_clipped(vm: &mut [f32], wc: &[f32], y: usize, x: usize,
     }
 }
 
-/// Event-driven dense + LIF for one timestep.
-fn dense_step(input: &SpikeMap, fin: usize, fout: usize, w: &[f32],
-              b: &[f32], vmem: &mut [f32], vth: f32) -> SpikeMap {
+/// Event-driven dense + LIF for one timestep, written into `out`.
+///
+/// `wt` is the input-major (fin, fout) transpose built at load
+/// ([`crate::snn::transpose_dense`]): one event reads `fout` contiguous
+/// floats instead of striding the (fout, fin) matrix by `fin`. The
+/// per-output add order is unchanged, so results stay bit-identical to
+/// the row-major scatter.
+fn dense_step_into(input: &SpikeMap, fin: usize, fout: usize, wt: &[f32],
+                   b: &[f32], vmem: &mut [f32], vth: f32,
+                   out: &mut SpikeMap) {
     // Input is the flattened previous layer viewed as
     // (src_channels, 1, per): linear index = ch*per + i.
     let per = input.h * input.w;
     debug_assert_eq!(input.c * per, fin);
+    debug_assert_eq!(wt.len(), fin * fout);
     for (c, idx) in input.iter_events() {
         let f = c * per + idx;
-        for k in 0..fout {
-            vmem[k] += w[k * fin + f];
+        let row = &wt[f * fout..(f + 1) * fout];
+        for (v, &wv) in vmem.iter_mut().zip(row) {
+            *v += wv;
         }
     }
-    let mut out = SpikeMap::zeros(fout, 1, 1);
+    debug_assert_eq!((out.c, out.h, out.w), (fout, 1, 1));
+    out.clear();
     for k in 0..fout {
         vmem[k] += b[k];
         if vmem[k] >= vth {
@@ -212,7 +264,6 @@ fn dense_step(input: &SpikeMap, fin: usize, fout: usize, w: &[f32],
             out.set(k, 0);
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -289,15 +340,98 @@ mod tests {
     fn dense_step_counts() {
         let mut vmem = vec![0.0f32; 2];
         let w = vec![0.6, 0.0, 0.0, 0.6]; // (2,2) identity-ish
+        let wt = crate::snn::transpose_dense(&w, 2, 2);
         let b = vec![0.0, 0.0];
+        let mut out = SpikeMap::zeros(2, 1, 1);
         let mut input = SpikeMap::zeros(2, 1, 1);
         input.set(0, 0);
-        let out = dense_step(&input, 2, 2, &w, &b, &mut vmem, 1.0);
+        dense_step_into(&input, 2, 2, &wt, &b, &mut vmem, 1.0, &mut out);
         assert_eq!(out.nnz(), 0);
-        let mut input2 = SpikeMap::zeros(2, 1, 1);
-        input2.set(0, 0);
-        let out2 = dense_step(&input2, 2, 2, &w, &b, &mut vmem, 1.0);
-        assert!(out2.get(0, 0) && !out2.get(1, 0));
+        dense_step_into(&input, 2, 2, &wt, &b, &mut vmem, 1.0, &mut out);
+        assert!(out.get(0, 0) && !out.get(1, 0));
+    }
+
+    #[test]
+    fn interior_classification_matches_clipped_scatter() {
+        // Same-pad layer: every event through the real step must leave
+        // vmem identical to routing *all* events through the clipped
+        // (slow-path) scatter. vth is high so thresholding never fires
+        // and the accumulated membrane is directly comparable.
+        let r = 3;
+        let pad = 1;
+        let (h, w) = (5usize, 6usize);
+        let eh = h + 2 * pad - r + 1;
+        let ew = w + 2 * pad - r + 1;
+        let meta = WeightsMeta::parse(&format!(r#"{{
+            "name": "clip", "aprc": false, "pad": {pad}, "vth": 1000.0,
+            "timesteps": 1, "in_shape": [2, {h}, {w}],
+            "feature_sizes": [[3, {eh}, {ew}]], "dense_out": null,
+            "total_floats": 54, "lambdas": [],
+            "layers": [{{"kind": "conv", "shape": [3,2,3,3], "offset": 0,
+                        "layer": 0, "pad": {pad}}}],
+            "blob_fnv1a64": "0"
+        }}"#)).unwrap();
+        let weights: Vec<f32> =
+            (0..3 * 2 * 9).map(|i| 0.01 + 0.003 * i as f32).collect();
+        let net = NetworkWeights {
+            meta,
+            layers: vec![LayerWeights::Conv {
+                geom: ConvGeom { cin: 2, cout: 3, r, pad, h, w, eh, ew },
+                w: weights.clone(),
+            }],
+        };
+        // Every corner, every edge midpoint, plus interior spikes.
+        let mut input = SpikeMap::zeros(2, h, w);
+        for &(c, y, x) in &[(0, 0, 0), (0, 0, w - 1), (0, h - 1, 0),
+                            (1, h - 1, w - 1), (1, 0, 3), (1, 2, 0),
+                            (0, 2, 3), (1, 3, 4)] {
+            input.set(c, y * w + x);
+        }
+        let mut f = FunctionalNet::new(&net);
+        f.step_reuse(&input);
+
+        // Reference: the clipped scatter for every event.
+        let per_out = eh * ew;
+        let mut want = vec![0.0f32; 3 * per_out];
+        for m in 0..3usize {
+            let vm = &mut want[m * per_out..(m + 1) * per_out];
+            for (c, idx) in input.iter_events() {
+                let wc = &weights[m * 2 * 9 + c * 9..m * 2 * 9 + (c + 1) * 9];
+                scatter_clipped(vm, wc, idx / w, idx % w, r, pad, eh, ew);
+            }
+        }
+        // Same adds in a different event order: tolerance, not equality.
+        for (got, want) in f.vmem(0).iter().zip(&want) {
+            assert!((got - want).abs() < 1e-5,
+                    "interior/border split diverged: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_step_matches_fresh_instance() {
+        // Stepping a reused instance (after reset) must reproduce a
+        // fresh instance's trace bit-for-bit — the scratch carries no
+        // state across frames.
+        let net = tiny_net(1);
+        let inputs: Vec<SpikeMap> = (0..5).map(|t| {
+            let mut m = SpikeMap::zeros(1, 4, 4);
+            for i in 0..16 {
+                if (i + t) % 3 == 0 {
+                    m.set(0, i);
+                }
+            }
+            m
+        }).collect();
+        let mut reused = FunctionalNet::new(&net);
+        reused.run_frame(&inputs); // dirty the scratch with frame 0
+        let trace_reused = reused.run_frame(&inputs);
+        let mut fresh = FunctionalNet::new(&net);
+        let trace_fresh = fresh.run_frame(&inputs);
+        for (a, b) in trace_reused.iter().flatten()
+            .zip(trace_fresh.iter().flatten()) {
+            assert_eq!(a.spikes, b.spikes);
+        }
+        assert_eq!(reused.vmem(0), fresh.vmem(0));
     }
 
     #[test]

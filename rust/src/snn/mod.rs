@@ -13,7 +13,8 @@ mod weights;
 pub use encode::{encode_phased, encode_phased_u8};
 pub use functional::{FunctionalNet, LayerOutput};
 pub use spikes::SpikeMap;
-pub use weights::{LayerWeights, NetworkWeights, WeightsMeta};
+pub use weights::{transpose_dense, LayerWeights, NetworkWeights,
+                  WeightsMeta};
 
 
 

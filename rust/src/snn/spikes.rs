@@ -5,7 +5,7 @@
 //! matters twice: it is the paper's neuron-state-memory layout (the
 //! scheduler detects firing neurons by scanning words, §III-A) and it is
 //! the simulator hot path (popcount per word instead of per-neuron
-//! branches — see DESIGN.md §8).
+//! branches — see PERF.md).
 
 /// Bit-packed (C, H, W) binary spike map; channel-major, rows packed
 /// per-channel so per-channel popcounts never straddle channels.
@@ -30,9 +30,9 @@ impl SpikeMap {
         self.wpc
     }
 
-    /// Assemble from pre-packed words (len must be `c * wpc`); used by
-    /// the parallel functional model which packs per-channel chunks on
-    /// worker threads.
+    /// Assemble from pre-packed words (len must be `c * wpc`). The
+    /// functional model packs in place via [`Self::words_mut`] instead;
+    /// this constructor remains for callers that build words externally.
     pub fn from_words(c: usize, h: usize, w: usize, words: Vec<u64>)
                       -> Self {
         let wpc = (h * w + 63) / 64;
@@ -41,24 +41,44 @@ impl SpikeMap {
     }
 
     /// Build from a dense f32 slice (C*H*W, values 0.0/1.0) — the format
-    /// the PJRT runtime returns.
+    /// the PJRT runtime returns. Packs 64 neurons per word directly (no
+    /// per-bit `set`): this runs once per layer per timestep on the PJRT
+    /// boundary in `SnnRunner::step`, so it is hot (see PERF.md).
     pub fn from_f32(c: usize, h: usize, w: usize, data: &[f32]) -> Self {
         assert_eq!(data.len(), c * h * w);
-        let mut m = Self::zeros(c, h, w);
         let per = h * w;
+        let wpc = (per + 63) / 64;
+        let mut words = vec![0u64; c * wpc];
         for ch in 0..c {
-            for i in 0..per {
-                if data[ch * per + i] >= 0.5 {
-                    m.set(ch, i);
+            let src = &data[ch * per..(ch + 1) * per];
+            let dst = &mut words[ch * wpc..(ch + 1) * wpc];
+            for (wi, chunk) in src.chunks(64).enumerate() {
+                let mut word = 0u64;
+                for (b, &v) in chunk.iter().enumerate() {
+                    word |= ((v >= 0.5) as u64) << b;
                 }
+                dst[wi] = word;
             }
         }
-        m
+        Self { c, h, w, wpc, words }
     }
 
     #[inline]
     pub fn set(&mut self, ch: usize, idx: usize) {
         self.words[ch * self.wpc + idx / 64] |= 1u64 << (idx % 64);
+    }
+
+    /// Zero every bit, keeping the allocation (scratch-reuse stepping).
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Mutable word storage for in-place packing by the functional
+    /// model's scratch-reuse step (crate-internal: callers must respect
+    /// the straddle invariant — bits >= h*w of a channel's last word
+    /// stay zero).
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
     }
 
     #[inline]
@@ -86,7 +106,16 @@ impl SpikeMap {
 
     /// Per-channel spike counts.
     pub fn nnz_per_channel(&self) -> Vec<usize> {
-        (0..self.c).map(|ch| self.nnz_channel(ch)).collect()
+        let mut out = Vec::new();
+        self.nnz_per_channel_into(&mut out);
+        out
+    }
+
+    /// [`nnz_per_channel`](Self::nnz_per_channel) into a reused buffer
+    /// (the engine calls this per layer per timestep; see PERF.md).
+    pub fn nnz_per_channel_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.c).map(|ch| self.nnz_channel(ch)));
     }
 
     /// Iterate (channel, linear index) of set bits — the event stream the
@@ -111,12 +140,32 @@ impl SpikeMap {
 
     /// Dense f32 view (for feeding the runtime).
     pub fn to_f32(&self) -> Vec<f32> {
-        let per = self.h * self.w;
-        let mut out = vec![0.0f32; self.c * per];
-        for (ch, idx) in self.iter_events() {
-            out[ch * per + idx] = 1.0;
-        }
+        let mut out = Vec::new();
+        self.to_f32_into(&mut out);
         out
+    }
+
+    /// Dense f32 view into a reused buffer: zeros it, then writes 1.0
+    /// straight from the packed words (no iterator machinery) — the
+    /// other half of the per-timestep PJRT boundary.
+    pub fn to_f32_into(&self, out: &mut Vec<f32>) {
+        let per = self.h * self.w;
+        out.clear();
+        out.resize(self.c * per, 0.0);
+        for ch in 0..self.c {
+            let base = ch * per;
+            for (wi, &word) in self.channel_words(ch).iter().enumerate() {
+                let mut rem = word;
+                while rem != 0 {
+                    let b = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let idx = wi * 64 + b;
+                    if idx < per {
+                        out[base + idx] = 1.0;
+                    }
+                }
+            }
+        }
     }
 
     /// Total number of neurons.
@@ -143,12 +192,20 @@ impl SpikeMap {
     /// row-interleaved work split the SPE streams use when a layer has
     /// fewer input channels than SPEs (see sim::timing).
     pub fn nnz_row_interleaved(&self, n: usize) -> Vec<u64> {
-        let mut counts = vec![0u64; n];
+        let mut counts = Vec::new();
+        self.nnz_row_interleaved_into(n, &mut counts);
+        counts
+    }
+
+    /// [`nnz_row_interleaved`](Self::nnz_row_interleaved) into a reused
+    /// buffer.
+    pub fn nnz_row_interleaved_into(&self, n: usize, out: &mut Vec<u64>) {
+        out.clear();
+        out.resize(n, 0);
         for (_, idx) in self.iter_events() {
             let row = idx / self.w;
-            counts[row % n] += 1;
+            out[row % n] += 1;
         }
-        counts
     }
 
     /// Spike counts per interleaved *neuron* group: counts[g] = spikes at
@@ -156,12 +213,20 @@ impl SpikeMap {
     /// layer's SPE split: weight rows are per input neuron, so neurons
     /// interleave freely across SPEs.
     pub fn nnz_index_interleaved(&self, n: usize) -> Vec<u64> {
-        let per = self.h * self.w;
-        let mut counts = vec![0u64; n];
-        for (ch, idx) in self.iter_events() {
-            counts[(ch * per + idx) % n] += 1;
-        }
+        let mut counts = Vec::new();
+        self.nnz_index_interleaved_into(n, &mut counts);
         counts
+    }
+
+    /// [`nnz_index_interleaved`](Self::nnz_index_interleaved) into a
+    /// reused buffer.
+    pub fn nnz_index_interleaved_into(&self, n: usize, out: &mut Vec<u64>) {
+        let per = self.h * self.w;
+        out.clear();
+        out.resize(n, 0);
+        for (ch, idx) in self.iter_events() {
+            out[(ch * per + idx) % n] += 1;
+        }
     }
 }
 
@@ -202,6 +267,70 @@ mod tests {
         }
         let got: Vec<_> = m.iter_events().collect();
         assert_eq!(got, idxs.to_vec());
+    }
+
+    #[test]
+    fn from_f32_word_packing_matches_per_bit_set() {
+        // Per-neuron ground truth vs the word-packed fast path, at a
+        // size whose per-channel tail word is partial (h*w = 65).
+        let (c, h, w) = (3usize, 5usize, 13usize);
+        let per = h * w;
+        let mut data = vec![0.0f32; c * per];
+        for i in (0..c * per).step_by(7) {
+            data[i] = 1.0;
+        }
+        data[64] = 1.0; // word boundary
+        data[per] = 1.0; // first neuron of channel 1
+        let fast = SpikeMap::from_f32(c, h, w, &data);
+        let mut slow = SpikeMap::zeros(c, h, w);
+        for ch in 0..c {
+            for i in 0..per {
+                if data[ch * per + i] >= 0.5 {
+                    slow.set(ch, i);
+                }
+            }
+        }
+        assert_eq!(fast, slow);
+        assert_eq!(fast.to_f32(), slow.to_f32());
+    }
+
+    #[test]
+    fn to_f32_into_reuses_and_zeroes_buffer() {
+        let mut m = SpikeMap::zeros(2, 3, 3);
+        m.set(0, 4);
+        let mut buf = vec![7.0f32; 100]; // stale, oversized
+        m.to_f32_into(&mut buf);
+        assert_eq!(buf.len(), 18);
+        assert_eq!(buf.iter().filter(|&&v| v == 1.0).count(), 1);
+        assert!(buf.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert_eq!(buf[4], 1.0);
+    }
+
+    #[test]
+    fn clear_keeps_shape_drops_bits() {
+        let mut m = SpikeMap::zeros(2, 4, 4);
+        m.set(0, 3);
+        m.set(1, 15);
+        m.clear();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!((m.c, m.h, m.w), (2, 4, 4));
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let mut m = SpikeMap::zeros(3, 6, 5);
+        for &(c, i) in &[(0, 0), (0, 29), (1, 7), (2, 13), (2, 14)] {
+            m.set(c, i);
+        }
+        let mut nnz = vec![99usize; 1];
+        m.nnz_per_channel_into(&mut nnz);
+        assert_eq!(nnz, m.nnz_per_channel());
+        let mut rows = vec![99u64; 1];
+        m.nnz_row_interleaved_into(4, &mut rows);
+        assert_eq!(rows, m.nnz_row_interleaved(4));
+        let mut idxs = vec![99u64; 9];
+        m.nnz_index_interleaved_into(4, &mut idxs);
+        assert_eq!(idxs, m.nnz_index_interleaved(4));
     }
 
     #[test]

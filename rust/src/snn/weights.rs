@@ -98,8 +98,26 @@ impl WeightsMeta {
 pub enum LayerWeights {
     /// OIHW conv filters with geometry.
     Conv { geom: ConvGeom, w: Vec<f32> },
-    /// Dense (K, F) weights + K bias.
-    Dense { geom: DenseGeom, w: Vec<f32>, b: Vec<f32> },
+    /// Dense (K, F) weights + K bias. `wt` is the input-major (F, K)
+    /// transpose of `w`, built once at load (see
+    /// [`transpose_dense`]) so the functional model's per-event
+    /// scatter reads `fout` contiguous floats instead of striding by
+    /// `fin` (see PERF.md).
+    Dense { geom: DenseGeom, w: Vec<f32>, wt: Vec<f32>, b: Vec<f32> },
+}
+
+/// Transpose (K, F) dense weights to input-major (F, K) — the layout
+/// the event-driven scatter wants: one input spike touches one
+/// contiguous row of `fout` floats.
+pub fn transpose_dense(w: &[f32], fout: usize, fin: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), fout * fin);
+    let mut wt = vec![0.0f32; w.len()];
+    for k in 0..fout {
+        for f in 0..fin {
+            wt[f * fout + k] = w[k * fin + f];
+        }
+    }
+    wt
 }
 
 impl LayerWeights {
@@ -215,9 +233,11 @@ impl NetworkWeights {
             let (fout, fin) = (shape[0], shape[1]);
             ensure!(fin == cin * h * w, "dense fin {} != {}", fin,
                     cin * h * w);
+            let wt = transpose_dense(&wdat, fout, fin);
             layers.push(LayerWeights::Dense {
                 geom: DenseGeom { fin, fout, src_channels: cin },
                 w: wdat,
+                wt,
                 b: bdat,
             });
         }
@@ -292,6 +312,26 @@ mod tests {
         // magnitude of a 1x3x3 filter of 0.5s = 4.5
         let mags = net.layers[0].filter_magnitudes();
         assert!((mags[0] - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_transpose_built_at_load() {
+        let meta = tiny_meta();
+        let floats: Vec<f32> =
+            (0..meta.total_floats).map(|i| i as f32 * 0.01).collect();
+        let net = NetworkWeights::assemble(meta, &floats).unwrap();
+        match &net.layers[1] {
+            LayerWeights::Dense { geom, w, wt, .. } => {
+                assert_eq!(wt.len(), w.len());
+                for k in 0..geom.fout {
+                    for f in 0..geom.fin {
+                        assert_eq!(wt[f * geom.fout + k],
+                                   w[k * geom.fin + f]);
+                    }
+                }
+            }
+            _ => panic!("layer 1 should be dense"),
+        }
     }
 
     #[test]

@@ -61,6 +61,7 @@ fn worker_cfg(artifacts: PathBuf, use_runtime: bool) -> WorkerConfig {
         energy: EnergyModel::default(),
         use_runtime,
         timesteps: Some(TIMESTEPS),
+        sweep_threads: 1,
     }
 }
 
@@ -290,4 +291,55 @@ fn zero_frames_collect_is_finite_and_clean() {
     assert_eq!(report.sim_fps, 0.0);
     assert!(report.served_fps.is_finite());
     assert!(report.host_balance_ratio.is_finite());
+}
+
+/// The in-worker frame-parallel sweep (`sweep_threads > 1`) must
+/// produce exactly the same responses as the serial worker loop —
+/// same ids, same output counts, same simulated cycles/energy.
+///
+/// Uses the round-robin *batching* dispatcher with a generous fill
+/// window: all 12 frames are submitted up front, so the dispatcher
+/// deterministically forms multi-frame batches (8 + 4) and the worker
+/// is guaranteed to take the `serve_batch_sweep` path — a pull-based
+/// worker draining fast could otherwise see only 1-frame batches and
+/// make this parity check vacuous.
+#[test]
+fn worker_sweep_matches_serial_outputs() {
+    let dir = write_tiny_artifacts("sweep");
+    let run = |sweep_threads: usize| {
+        let scfg = ServiceConfig {
+            workers: 1,
+            batch_max: 8,
+            queue_cap: 64,
+            batch_wait: Duration::from_millis(300),
+            dispatch: DispatchMode::RoundRobinBatch,
+        };
+        let wcfg = WorkerConfig {
+            sweep_threads,
+            ..worker_cfg(dir.clone(), false)
+        };
+        let service = Service::start(scfg, wcfg).unwrap();
+        for i in 0..12u64 {
+            let px =
+                if i % 3 == 0 { expensive_frame() } else { cheap_frame() };
+            service.submit(i, px).unwrap();
+        }
+        let (mut resps, _) = service
+            .collect_within(12, skydiver::CLOCK_HZ,
+                            Duration::from_secs(120))
+            .unwrap();
+        service.shutdown().unwrap();
+        resps.sort_by_key(|r| r.id);
+        resps
+    };
+    let serial = run(1);
+    let swept = run(4);
+    assert_eq!(serial.len(), swept.len());
+    for (a, b) in serial.iter().zip(&swept) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output_counts, b.output_counts,
+                   "sweep diverged on frame {}", a.id);
+        assert_eq!(a.sim_cycles, b.sim_cycles);
+        assert!((a.energy_j - b.energy_j).abs() < 1e-15);
+    }
 }

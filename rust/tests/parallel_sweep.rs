@@ -1,0 +1,157 @@
+//! Parity + determinism tests for the frame-parallel sweep engine and
+//! the allocation-free (scratch-reuse) stepping path: the fast paths
+//! must be bit-identical to the simple serial/fresh ones. Hermetic —
+//! all networks are synthetic, no `make artifacts` needed.
+
+use skydiver::schedule::cbws::Cbws;
+use skydiver::schedule::AprcPredictor;
+use skydiver::sim::{sweep, ArchConfig, FrameJob, Simulator, TraceSource};
+use skydiver::snn::{encode_phased, ConvGeom, FunctionalNet,
+                    LayerWeights, NetworkWeights, SpikeMap, WeightsMeta};
+
+/// Two-conv-layer synthetic net with mixed padding (full-pad layer 0 is
+/// all-interior; same-pad layer 1 exercises the border path).
+fn synthetic_net() -> NetworkWeights {
+    let (h, w) = (12usize, 14usize);
+    let eh0 = h + 2 * 2 - 3 + 1; // pad 2
+    let ew0 = w + 2 * 2 - 3 + 1;
+    let eh1 = eh0 + 2 * 1 - 3 + 1; // pad 1
+    let ew1 = ew0 + 2 * 1 - 3 + 1;
+    let meta = WeightsMeta::parse(&format!(r#"{{
+        "name": "sweep-test", "aprc": true, "pad": 2, "vth": 0.35,
+        "timesteps": 6, "in_shape": [2, {h}, {w}],
+        "feature_sizes": [[4, {eh0}, {ew0}], [3, {eh1}, {ew1}]],
+        "dense_out": null, "total_floats": 0, "lambdas": [],
+        "layers": [], "blob_fnv1a64": "0"
+    }}"#)).unwrap();
+    let w0: Vec<f32> = (0..4 * 2 * 9)
+        .map(|i| 0.02 + 0.005 * ((i * 7 % 23) as f32)).collect();
+    let w1: Vec<f32> = (0..3 * 4 * 9)
+        .map(|i| 0.01 + 0.004 * ((i * 5 % 19) as f32)).collect();
+    NetworkWeights {
+        meta,
+        layers: vec![
+            LayerWeights::Conv {
+                geom: ConvGeom { cin: 2, cout: 4, r: 3, pad: 2, h, w,
+                                 eh: eh0, ew: ew0 },
+                w: w0,
+            },
+            LayerWeights::Conv {
+                geom: ConvGeom { cin: 4, cout: 3, r: 3, pad: 1, h: eh0,
+                                 w: ew0, eh: eh1, ew: ew1 },
+                w: w1,
+            },
+        ],
+    }
+}
+
+/// Encoded frames with per-frame distinct content.
+fn frames(net: &NetworkWeights, n: usize) -> Vec<Vec<SpikeMap>> {
+    let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
+                     net.meta.in_shape[2]);
+    (0..n).map(|f| {
+        let img: Vec<f32> = (0..c * h * w)
+            .map(|i| (((i * 13 + f * 29) % 97) as f32) / 97.0 * 0.8)
+            .collect();
+        encode_phased(&img, c, h, w, net.meta.timesteps)
+    }).collect()
+}
+
+fn simulator(net: &NetworkWeights) -> Simulator<'_> {
+    let rates = vec![0.3f64; net.meta.in_shape[0]];
+    let predictor = AprcPredictor::from_network(net, &rates);
+    Simulator::new(ArchConfig::default(), net, &Cbws::default(),
+                   &predictor)
+}
+
+#[test]
+fn parallel_sweep_bit_identical_to_serial() {
+    let net = synthetic_net();
+    let sim = simulator(&net);
+    let trains = frames(&net, 9);
+    let serial =
+        sweep::run_frames_functional(&sim, &trains, 1).unwrap();
+    let parallel =
+        sweep::run_frames_functional(&sim, &trains, 4).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a, b, "frame {i} diverged between serial and \
+                          4-thread sweep");
+    }
+    // Frames are genuinely distinct, so order preservation is visible.
+    assert!(serial.windows(2).any(|w| w[0] != w[1]),
+            "test frames should differ");
+}
+
+#[test]
+fn parallel_sweep_deterministic_across_runs() {
+    let net = synthetic_net();
+    let sim = simulator(&net);
+    let trains = frames(&net, 8);
+    let a = sweep::run_frames_functional(&sim, &trains, 4).unwrap();
+    let b = sweep::run_frames_functional(&sim, &trains, 4).unwrap();
+    let c = sweep::run_frames_functional(&sim, &trains, 7).unwrap();
+    assert_eq!(a, b, "same thread count must reproduce exactly");
+    assert_eq!(a, c, "thread count must not affect results");
+}
+
+#[test]
+fn golden_jobs_through_sweep_match_functional() {
+    let net = synthetic_net();
+    let sim = simulator(&net);
+    let trains = frames(&net, 5);
+    // Golden traces produced by the functional model itself.
+    let mut f = FunctionalNet::new(&net);
+    let traces: Vec<TraceSource> = trains.iter().map(|inputs| {
+        f.reset();
+        TraceSource::Golden(inputs.iter()
+            .map(|s| f.step(s).into_iter().map(|o| o.spikes).collect())
+            .collect())
+    }).collect();
+    let jobs: Vec<FrameJob> = trains.iter().zip(&traces)
+        .map(|(t, tr)| FrameJob { inputs: t, trace: tr })
+        .collect();
+    let golden = sweep::run_frames(&sim, &jobs, 4).unwrap();
+    let functional =
+        sweep::run_frames_functional(&sim, &trains, 4).unwrap();
+    assert_eq!(golden, functional);
+}
+
+#[test]
+fn scratch_reuse_traces_match_fresh_instances() {
+    // A single FunctionalNet stepped over many frames (reset between)
+    // must reproduce per-frame fresh instances bit-for-bit, spikes and
+    // counts alike.
+    let net = synthetic_net();
+    let trains = frames(&net, 4);
+    let mut reused = FunctionalNet::new(&net);
+    for inputs in &trains {
+        let trace_reused = reused.run_frame(inputs);
+        let mut fresh = FunctionalNet::new(&net);
+        let trace_fresh = fresh.run_frame(inputs);
+        for (a, b) in trace_reused.iter().flatten()
+            .zip(trace_fresh.iter().flatten()) {
+            assert_eq!(a.spikes, b.spikes);
+        }
+        let mut reused2 = FunctionalNet::new(&net);
+        assert_eq!(reused2.run_frame_counts(inputs),
+                   reused.run_frame_counts(inputs));
+    }
+}
+
+#[test]
+fn sweep_error_propagates() {
+    // A trace-length mismatch inside one job must fail the whole sweep.
+    let net = synthetic_net();
+    let sim = simulator(&net);
+    let trains = frames(&net, 3);
+    let bad = TraceSource::Golden(Vec::new());
+    let good: Vec<TraceSource> =
+        (0..2).map(|_| TraceSource::Functional).collect();
+    let jobs: Vec<FrameJob> = vec![
+        FrameJob { inputs: &trains[0], trace: &good[0] },
+        FrameJob { inputs: &trains[1], trace: &bad },
+        FrameJob { inputs: &trains[2], trace: &good[1] },
+    ];
+    assert!(sweep::run_frames(&sim, &jobs, 4).is_err());
+}
