@@ -8,8 +8,12 @@
 //! backpressure path: when the bounded queue fills, the submitter
 //! falls back to a blocking `submit` and counts the stall.
 //!
+//! With `tcp` as an argument, the same frames travel over a loopback
+//! TCP gateway instead (wire protocol + admission control + router),
+//! ending with a Prometheus metrics scrape and a graceful drain.
+//!
 //! ```bash
-//! cargo run --release --example serve_demo [frames] [workers]
+//! cargo run --release --example serve_demo [frames] [workers] [tcp]
 //! ```
 
 use std::time::Duration;
@@ -18,14 +22,69 @@ use anyhow::Result;
 use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
                             SubmitError, WorkerConfig};
 use skydiver::power::EnergyModel;
+use skydiver::server::protocol::net_code;
+use skydiver::server::{Client, Gateway, GatewayConfig, RequestBody,
+                       ResponseBody, WirePayload, WireRequest};
 use skydiver::sim::ArchConfig;
 use skydiver::snn::NetKind;
 
+/// Stream the digit frames through a loopback TCP gateway with
+/// window-8 pipelining, then scrape metrics and drain.
+fn serve_over_tcp(frames: usize, wcfg: WorkerConfig,
+                  scfg: ServiceConfig) -> Result<()> {
+    let gw = Gateway::start(GatewayConfig::default(), scfg, wcfg)?;
+    let addr = gw.local_addr().to_string();
+    println!("gateway on {addr}; streaming {frames} digit frames \
+              over TCP...");
+    let (imgs, labels) = skydiver::data::gen_digits(0x5E12E, frames);
+    let pixel_frames: Vec<Vec<u8>> =
+        imgs.chunks(28 * 28).map(|c| c.to_vec()).collect();
+    let mut client = Client::connect(&addr)?;
+    let (mut next, mut inflight, mut done, mut correct) =
+        (0usize, 0usize, 0usize, 0usize);
+    while done < pixel_frames.len() {
+        while inflight < 8 && next < pixel_frames.len() {
+            client.send(&WireRequest {
+                id: next as u64,
+                body: RequestBody::Infer {
+                    net: net_code(NetKind::Classifier),
+                    payload: WirePayload::Pixels(
+                        pixel_frames[next].clone()),
+                },
+            })?;
+            next += 1;
+            inflight += 1;
+        }
+        let resp = client.recv()?;
+        inflight -= 1;
+        done += 1;
+        if let ResponseBody::Infer { prediction, .. } = resp.body {
+            if prediction as usize == labels[resp.id as usize] as usize {
+                correct += 1;
+            }
+        }
+    }
+    println!("accuracy over TCP : {:.1}% ({}/{})",
+             100.0 * correct as f64 / frames as f64, correct, frames);
+    println!("\n--- metrics scrape ---\n{}", client.metrics()?);
+    client.shutdown_server()?;
+    drop(client);
+    let report = gw.wait()?;
+    println!("server-side      : fps {:.1}, p50/p95 {}/{} us, \
+              balance {:.1}%",
+             report.serving.served_fps, report.serving.p50_us,
+             report.serving.p95_us,
+             100.0 * report.serving.host_balance_ratio);
+    Ok(())
+}
+
 fn main() -> Result<()> {
-    let frames: usize = std::env::args().nth(1)
-        .and_then(|a| a.parse().ok()).unwrap_or(64);
-    let workers: usize = std::env::args().nth(2)
-        .and_then(|a| a.parse().ok()).unwrap_or(2);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tcp = args.iter().any(|a| a == "tcp");
+    let nums: Vec<usize> =
+        args.iter().filter_map(|a| a.parse().ok()).collect();
+    let frames: usize = nums.first().copied().unwrap_or(64);
+    let workers: usize = nums.get(1).copied().unwrap_or(2);
 
     let wcfg = WorkerConfig {
         artifacts: skydiver::artifacts_dir(),
@@ -46,6 +105,10 @@ fn main() -> Result<()> {
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
     };
+
+    if tcp {
+        return serve_over_tcp(frames, wcfg, scfg);
+    }
 
     println!("spinning up {} workers; submitting {} frames...", workers,
              frames);

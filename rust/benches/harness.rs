@@ -52,6 +52,7 @@ pub struct BenchResult {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     /// Mean heap allocations per measured iteration.
     pub allocs_per_iter: f64,
     /// Work items (frames) completed per iteration — 1 unless the
@@ -79,6 +80,7 @@ impl BenchResult {
             ("mean_ns", Json::num(self.mean.as_nanos() as f64)),
             ("p50_ns", Json::num(self.p50.as_nanos() as f64)),
             ("p95_ns", Json::num(self.p95.as_nanos() as f64)),
+            ("p99_ns", Json::num(self.p99.as_nanos() as f64)),
             ("frames_per_sec", Json::num(self.per_sec())),
             ("allocs_per_iter", Json::num(self.allocs_per_iter)),
             // Methodology markers: a --quick (CI smoke) row is not
@@ -123,6 +125,7 @@ pub fn bench_items<R>(name: &str, warmup: usize, iters: usize,
         mean,
         p50: samples[iters / 2],
         p95: samples[(iters * 95 / 100).min(iters - 1)],
+        p99: samples[(iters * 99 / 100).min(iters - 1)],
         allocs_per_iter,
         items_per_iter,
     };
@@ -138,10 +141,19 @@ pub fn quick() -> bool {
 /// Merge `results` into the tracked benchmark file (`BENCH_sim.json`,
 /// or `$BENCH_SIM_JSON`): entries are keyed by name, so re-running one
 /// bench binary updates its rows and leaves the others' in place.
+#[allow(dead_code)]
 pub fn write_json(results: &[BenchResult]) {
     let path = std::env::var("BENCH_SIM_JSON")
         .unwrap_or_else(|_| "BENCH_sim.json".into());
-    let mut entries: Vec<Json> = std::fs::read_to_string(&path).ok()
+    write_json_to(&path, results);
+}
+
+/// [`write_json`] targeting an explicit file — the serving bench
+/// tracks its own `BENCH_serving.json` next to `BENCH_sim.json`, in
+/// the same `skydiver-bench-v1` schema.
+#[allow(dead_code)]
+pub fn write_json_to(path: &str, results: &[BenchResult]) {
+    let mut entries: Vec<Json> = std::fs::read_to_string(path).ok()
         .and_then(|t| Json::parse(&t).ok())
         .and_then(|v| v.field("results").ok().map(|r| r.clone()))
         .and_then(|r| r.as_arr().ok().map(|a| a.to_vec()))

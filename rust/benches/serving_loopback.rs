@@ -1,0 +1,125 @@
+//! Loopback serving benchmark: a real `Gateway` on an ephemeral
+//! 127.0.0.1 port, driven over actual TCP — so the tracked numbers
+//! include the wire protocol, admission control, and router, not just
+//! the simulator. Fully hermetic (synthetic artifacts; no
+//! `make artifacts`).
+//!
+//! Emits two rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
+//!
+//! * `serving_loopback_rtt` — single-connection, window-1 round-trip
+//!   latency (one request fully served per iteration).
+//! * `serving_loopback_e2e` — 4 connections x window 8 pipelined
+//!   throughput; `frames_per_sec` is the measured end-to-end FPS and
+//!   mean/p50/p95/p99 are client-side per-request latencies.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{bench, BenchResult};
+use skydiver::coordinator::{DispatchMode, Policy, ServiceConfig,
+                            WorkerConfig};
+use skydiver::power::EnergyModel;
+use skydiver::server::{loadgen, Client, Gateway, GatewayConfig,
+                       LoadGenConfig};
+use skydiver::sim::ArchConfig;
+use skydiver::snn::NetKind;
+
+const SIDE: usize = 32;
+
+fn main() {
+    let quick = harness::quick();
+    let dir = std::env::temp_dir()
+        .join(format!("skydiver-servbench-{}", std::process::id()));
+    skydiver::data::write_synthetic_classifier(&dir, SIDE)
+        .expect("synthetic artifacts");
+
+    let wcfg = WorkerConfig {
+        artifacts: dir.clone(),
+        kind: NetKind::Classifier,
+        aprc: true,
+        policy: Policy::Cbws,
+        arch: ArchConfig::default(),
+        energy: EnergyModel::default(),
+        use_runtime: false,
+        timesteps: None,
+        sweep_threads: 1,
+    };
+    let scfg = ServiceConfig {
+        workers: 2,
+        batch_max: 8,
+        queue_cap: 256,
+        batch_wait: Duration::from_millis(2),
+        dispatch: DispatchMode::WorkQueue,
+    };
+    let gw = Gateway::start(GatewayConfig::default(), scfg, wcfg)
+        .expect("gateway start");
+    let addr = gw.local_addr().to_string();
+
+    // 1. Single-connection round-trip latency (window = 1): protocol
+    // encode + TCP + admission + simulate + route + decode.
+    let mut client = Client::connect(&addr).expect("connect");
+    let info = client.info().expect("info");
+    let pixels: Vec<u8> = (0..info.pixels_len())
+        .map(|i| (i * 37 % 256) as u8)
+        .collect();
+    let (warm, iters) = if quick { (5, 50) } else { (20, 400) };
+    let mut id = 0u64;
+    let rtt = bench("serving_loopback_rtt", warm, iters, || {
+        id += 1;
+        client.infer_pixels(id, NetKind::Classifier, pixels.clone())
+            .expect("infer")
+    });
+    drop(client);
+
+    // 2. Multi-connection pipelined throughput — the configuration the
+    // acceptance loopback test uses (4 conns, window 8).
+    let frames = if quick { 200 } else { 2000 };
+    let cfg = LoadGenConfig {
+        addr: addr.clone(),
+        conns: 4,
+        frames,
+        window: 8,
+        spikes: false,
+        retry_busy: true,
+        seed: 0xBE7C,
+    };
+    let a0 = harness::alloc_count();
+    let rep = loadgen::run(&cfg).expect("loadgen");
+    let allocs =
+        (harness::alloc_count() - a0) as f64 / rep.ok.max(1) as f64;
+    assert_eq!(rep.errors, 0, "loadgen frames failed");
+    assert_eq!(rep.ok as usize, frames, "not all frames served");
+    let mean = Duration::from_nanos((rep.mean_us * 1000.0) as u64)
+        .max(Duration::from_nanos(1));
+    let e2e = BenchResult {
+        name: "serving_loopback_e2e".into(),
+        iters: rep.ok as usize,
+        mean,
+        p50: Duration::from_micros(rep.p50_us),
+        p95: Duration::from_micros(rep.p95_us),
+        p99: Duration::from_micros(rep.p99_us),
+        allocs_per_iter: allocs,
+        // per_sec() = items_per_iter / mean — pick items so this row's
+        // frames_per_sec equals the measured end-to-end throughput
+        // (mean latency alone would understate pipelined FPS).
+        items_per_iter: rep.fps * mean.as_secs_f64(),
+    };
+    e2e.print();
+    println!("loadgen: ok={} busy={} errors={} fps={:.1}",
+             rep.ok, rep.busy, rep.errors, rep.fps);
+
+    // Graceful drain through the wire, like a real operator would.
+    Client::connect(&addr).expect("connect for shutdown")
+        .shutdown_server().expect("shutdown");
+    let report = gw.wait().expect("gateway wait");
+    println!("server: served={} busy={} p50={}us balance={:.2}",
+             report.counters.served, report.counters.busy,
+             report.serving.p50_us, report.serving.host_balance_ratio);
+
+    let path = std::env::var("BENCH_SERVING_JSON")
+        .unwrap_or_else(|_| "BENCH_serving.json".into());
+    harness::write_json_to(&path, &[rtt, e2e]);
+}

@@ -38,7 +38,7 @@
 //!
 //! **Failure.** A worker that errors — while building its pipeline or
 //! mid-request — sends [`worker::WorkerEvent::Failed`] (carrying the
-//! count of requests it had in hand that are now lost) before exiting.
+//! ids of requests it had in hand that are now lost) before exiting.
 //! [`Service::collect`] therefore always terminates: it returns an
 //! error as soon as any accepted request is lost (a worker died
 //! holding requests — those responses will never arrive) or every
@@ -57,7 +57,9 @@ mod stats;
 pub mod worker;
 
 pub use queue::{BoundedQueue, QueueStats, SubmitError};
-pub use service::{DispatchMode, Service, ServiceConfig};
-pub use stats::{host_balance_ratio, ServingReport, Stats};
-pub use worker::{default_input_rates, Policy, Request, Response,
-                 SharedPipeline, WorkerConfig, WorkerEvent};
+pub use service::{DispatchMode, FrameSpec, Service, ServiceConfig,
+                  ServiceHandle};
+pub use stats::{host_balance_ratio, LatencyHistogram, ServingReport,
+                Stats};
+pub use worker::{default_input_rates, FramePayload, Policy, Request,
+                 Response, SharedPipeline, WorkerConfig, WorkerEvent};

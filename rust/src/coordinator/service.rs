@@ -18,8 +18,10 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use super::queue::{BoundedQueue, ConsumerGuard, QueueStats, SubmitError};
 use super::stats::{ServingReport, Stats};
-use super::worker::{worker_loop, Request, Response, SharedPipeline,
-                    WorkSource, WorkerConfig, WorkerEvent};
+use super::worker::{worker_loop, FramePayload, Request, Response,
+                    SharedPipeline, WorkSource, WorkerConfig,
+                    WorkerEvent};
+use crate::snn::NetKind;
 
 /// How batches reach the workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -72,13 +74,118 @@ impl Default for ServiceConfig {
     }
 }
 
+/// What one frame of the served network looks like — the contract a
+/// network front end validates payloads against *before* submitting,
+/// so a malformed request is refused per-request instead of erroring
+/// inside a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameSpec {
+    pub kind: NetKind,
+    /// Input shape (channels, height, width).
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Timesteps the workers run (config override or weights meta).
+    pub timesteps: usize,
+}
+
+impl FrameSpec {
+    /// Expected byte length of a raw-pixel payload.
+    pub fn pixels_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Spike words per channel per timestep (the `SpikeMap` stride).
+    pub fn words_per_channel(&self) -> usize {
+        (self.h * self.w + 63) / 64
+    }
+
+    /// Expected u64 word count of a pre-encoded spike payload.
+    pub fn spike_words_len(&self) -> usize {
+        self.timesteps * self.c * self.words_per_channel()
+    }
+
+    /// Check a payload against this spec; the error string is suitable
+    /// for a wire-level `BAD_REQUEST` detail.
+    pub fn validate(&self, payload: &FramePayload)
+                    -> std::result::Result<(), String> {
+        match payload {
+            FramePayload::Pixels(px) => {
+                if px.len() == self.pixels_len() {
+                    Ok(())
+                } else {
+                    Err(format!("got {} pixels, expected {} ({}x{}x{})",
+                                px.len(), self.pixels_len(), self.c,
+                                self.h, self.w))
+                }
+            }
+            FramePayload::Spikes { timesteps, words } => {
+                if *timesteps != self.timesteps {
+                    Err(format!("spike payload spans {timesteps} \
+                                 timesteps, the pipeline runs {}",
+                                self.timesteps))
+                } else if words.len() != self.spike_words_len() {
+                    Err(format!("got {} spike words, expected {}",
+                                words.len(), self.spike_words_len()))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+/// A cheap, cloneable, `Sync` submission handle onto a running
+/// [`Service`] — what the network gateway hands to each connection
+/// thread. Submissions flow into the same bounded queue; collection
+/// stays with whoever holds the worker event stream.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    queue: Arc<BoundedQueue<Request>>,
+    spec: FrameSpec,
+}
+
+impl ServiceHandle {
+    pub fn spec(&self) -> &FrameSpec {
+        &self.spec
+    }
+
+    /// Non-blocking submit; `SubmitError::Full` is the backpressure
+    /// signal (map it to `BUSY` on the wire — shed, never hang).
+    pub fn try_submit(&self, id: u64, payload: FramePayload)
+                      -> std::result::Result<(), SubmitError> {
+        self.queue.try_push(Request {
+            id,
+            payload,
+            submitted: Instant::now(),
+        })
+    }
+
+    /// Blocking submit (backpressure by waiting).
+    pub fn submit(&self, id: u64, payload: FramePayload)
+                  -> std::result::Result<(), SubmitError> {
+        self.queue.push(Request {
+            id,
+            payload,
+            submitted: Instant::now(),
+        })
+    }
+
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+}
+
 /// A running service instance.
 pub struct Service {
     queue: Arc<BoundedQueue<Request>>,
-    events_rx: mpsc::Receiver<WorkerEvent>,
+    /// `Some` until a gateway takes the stream with
+    /// [`Service::take_events`]; `collect` needs it present.
+    events_rx: Option<mpsc::Receiver<WorkerEvent>>,
     handles: Vec<thread::JoinHandle<Result<()>>>,
     dispatcher: Option<thread::JoinHandle<()>>,
     worker_count: usize,
+    spec: FrameSpec,
     started: Instant,
 }
 
@@ -91,6 +198,14 @@ impl Service {
     pub fn start(cfg: ServiceConfig, wcfg: WorkerConfig) -> Result<Self> {
         ensure!(cfg.workers > 0, "service needs at least one worker");
         let shared = SharedPipeline::build(&wcfg)?;
+        let meta = &shared.net.meta;
+        let spec = FrameSpec {
+            kind: wcfg.kind,
+            c: meta.in_shape[0],
+            h: meta.in_shape[1],
+            w: meta.in_shape[2],
+            timesteps: wcfg.timesteps.unwrap_or(meta.timesteps),
+        };
         let queue: Arc<BoundedQueue<Request>> =
             Arc::new(BoundedQueue::new(cfg.queue_cap));
         let (events_tx, events_rx) = mpsc::channel::<WorkerEvent>();
@@ -142,20 +257,54 @@ impl Service {
 
         Ok(Self {
             queue,
-            events_rx,
+            events_rx: Some(events_rx),
             handles,
             dispatcher,
             worker_count: cfg.workers,
+            spec,
             started: Instant::now(),
         })
+    }
+
+    /// The served network's frame contract (shape, timesteps).
+    pub fn frame_spec(&self) -> &FrameSpec {
+        &self.spec
+    }
+
+    /// Number of workers in the pool.
+    pub fn worker_count(&self) -> usize {
+        self.worker_count
+    }
+
+    /// A cloneable, thread-safe submission handle (the gateway's
+    /// per-connection entry point).
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle { queue: self.queue.clone(), spec: self.spec }
+    }
+
+    /// Move the worker event stream out of the service, for a response
+    /// router that matches responses to submitters by id (the network
+    /// gateway). After this, [`collect`](Self::collect) is unavailable
+    /// — exactly one side may own the stream.
+    pub fn take_events(&mut self)
+                       -> Result<mpsc::Receiver<WorkerEvent>> {
+        self.events_rx.take()
+            .ok_or_else(|| anyhow!("worker event stream already taken"))
     }
 
     /// Submit one frame, blocking while the queue is full
     /// (backpressure). Errors if the service is shutting down or every
     /// worker has already died.
     pub fn submit(&self, id: u64, pixels: Vec<u8>) -> Result<()> {
+        self.submit_payload(id, FramePayload::Pixels(pixels))
+    }
+
+    /// [`submit`](Self::submit) for an arbitrary payload (raw pixels or
+    /// a pre-encoded spike train).
+    pub fn submit_payload(&self, id: u64, payload: FramePayload)
+                          -> Result<()> {
         self.queue
-            .push(Request { id, pixels, submitted: Instant::now() })
+            .push(Request { id, payload, submitted: Instant::now() })
             .map_err(|e| anyhow!("submit frame {id}: {e}"))
     }
 
@@ -163,9 +312,15 @@ impl Service {
     /// backpressure signal — shed load or retry later.
     pub fn try_submit(&self, id: u64, pixels: Vec<u8>)
                       -> std::result::Result<(), SubmitError> {
+        self.try_submit_payload(id, FramePayload::Pixels(pixels))
+    }
+
+    /// [`try_submit`](Self::try_submit) for an arbitrary payload.
+    pub fn try_submit_payload(&self, id: u64, payload: FramePayload)
+                              -> std::result::Result<(), SubmitError> {
         self.queue.try_push(Request {
             id,
-            pixels,
+            payload,
             submitted: Instant::now(),
         })
     }
@@ -196,6 +351,11 @@ impl Service {
     fn collect_inner(&self, n: usize, clock_hz: f64,
                      deadline: Option<Instant>)
                      -> Result<(Vec<Response>, ServingReport)> {
+        let events_rx = match self.events_rx.as_ref() {
+            Some(rx) => rx,
+            None => bail!("worker event stream was taken (a gateway \
+                           owns it); collect is unavailable"),
+        };
         let mut stats = Stats::default();
         let mut out = Vec::with_capacity(n);
         let mut failures: Vec<String> = Vec::new();
@@ -205,7 +365,7 @@ impl Service {
         let mut dead_workers = 0usize;
         while out.len() < n {
             let ev = match deadline {
-                None => match self.events_rx.recv() {
+                None => match events_rx.recv() {
                     Ok(ev) => ev,
                     Err(_) => bail!(
                         "all workers exited after {}/{n} responses{}",
@@ -213,7 +373,7 @@ impl Service {
                 },
                 Some(d) => {
                     let left = d.saturating_duration_since(Instant::now());
-                    match self.events_rx.recv_timeout(left) {
+                    match events_rx.recv_timeout(left) {
                         Ok(ev) => ev,
                         Err(mpsc::RecvTimeoutError::Timeout) => bail!(
                             "timed out with {}/{n} responses{}",
@@ -232,10 +392,11 @@ impl Service {
                 WorkerEvent::Failed { worker, error, lost } => {
                     failures.push(format!("worker {worker}: {error}"));
                     dead_workers += 1;
-                    if lost > 0 {
-                        bail!("worker {worker} failed with {lost} \
+                    if !lost.is_empty() {
+                        bail!("worker {worker} failed with {} \
                                request(s) in hand after {}/{n} \
-                               responses: {error}", out.len());
+                               responses: {error}", lost.len(),
+                              out.len());
                     }
                     // Build-time failure: surviving workers may still
                     // serve everything; keep collecting — unless none
@@ -247,9 +408,9 @@ impl Service {
                     }
                 }
                 WorkerEvent::Undeliverable { lost } => {
-                    bail!("{lost} request(s) undeliverable (no live \
+                    bail!("{} request(s) undeliverable (no live \
                            workers) after {}/{n} responses{}",
-                          out.len(), describe(&failures));
+                          lost.len(), out.len(), describe(&failures));
                 }
             }
         }
@@ -316,9 +477,10 @@ fn rr_dispatch(queue: Arc<BoundedQueue<Request>>,
         while let Some(b) = undelivered.take() {
             if worker_txs.is_empty() {
                 let stranded = queue.drain_now();
-                let _ = events.send(WorkerEvent::Undeliverable {
-                    lost: b.len() + stranded.len(),
-                });
+                let lost: Vec<u64> = b.iter().map(|r| r.id)
+                    .chain(stranded.iter().map(|r| r.id))
+                    .collect();
+                let _ = events.send(WorkerEvent::Undeliverable { lost });
                 return; // guard drops -> submits start failing
             }
             if next >= worker_txs.len() {

@@ -1,14 +1,143 @@
 //! Serving statistics collection.
+//!
+//! [`Stats`] is built for a *long-lived* server: every per-response
+//! quantity is folded into fixed-size state (a log-bucketed
+//! [`LatencyHistogram`], running sums, per-worker counters), so memory
+//! never grows with the number of frames served. Small runs still get
+//! exact percentiles — the histogram keeps the first
+//! [`LatencyHistogram::EXACT_CAP`] raw samples and routes through
+//! [`metrics::percentile`] until that capacity is exceeded.
 
 use crate::metrics::percentile;
 
 use super::worker::Response;
 
-/// Online accumulator for responses.
+/// Sub-bucket resolution: 2^4 = 16 linear sub-buckets per octave, so a
+/// bucketed percentile is within ~1/16 (6.25%) of the true value.
+const SUB_BITS: u32 = 4;
+const SUB: u64 = 1 << SUB_BITS;
+/// Bucket count covering the full u64 range at SUB_BITS resolution:
+/// indices 0..SUB are exact, then 16 per octave up to 2^63.
+const NBUCKETS: usize = ((64 - SUB_BITS as usize) * SUB as usize) + 16;
+
+/// Fixed-memory latency histogram: log-spaced buckets with linear
+/// sub-buckets (HdrHistogram-style), plus an exact-sample prefix so
+/// short runs report exact percentiles. Total footprint is a few KiB
+/// regardless of how many values are recorded.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    /// First `EXACT_CAP` raw samples (exact small-run percentiles).
+    exact: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: vec![0; NBUCKETS],
+            exact: Vec::new(),
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Runs at or under this many samples report *exact* percentiles.
+    pub const EXACT_CAP: usize = 512;
+
+    /// Bucket index for a value. Values below `SUB` get their own
+    /// bucket (exact); above, each power-of-two octave is split into
+    /// `SUB` linear sub-buckets.
+    fn bucket_index(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let octave = (msb - SUB_BITS) as usize + 1;
+        let sub = ((v >> (msb - SUB_BITS)) - SUB) as usize;
+        octave * SUB as usize + sub
+    }
+
+    /// Midpoint of a bucket — the value a bucketed percentile reports.
+    fn bucket_mid(index: usize) -> u64 {
+        if index < SUB as usize {
+            return index as u64;
+        }
+        let octave = index / SUB as usize;
+        let sub = (index % SUB as usize) as u64;
+        let width = 1u64 << (octave - 1);
+        (SUB + sub) * width + width / 2
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+        if self.exact.len() < Self::EXACT_CAP {
+            self.exact.push(v);
+        }
+        self.buckets[Self::bucket_index(v)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// p in [0, 100]. Exact while `count <= EXACT_CAP`; bucketed
+    /// (≤ ~6.25% relative error, capped at the observed max) beyond.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if self.count as usize <= Self::EXACT_CAP {
+            let mut sorted = self.exact.clone();
+            sorted.sort_unstable();
+            return percentile(&sorted, p);
+        }
+        // Same rank convention as `metrics::percentile`: index
+        // round(p/100 * (n-1)) of the sorted samples, i.e. the bucket
+        // holding the (rank+1)-th smallest value.
+        let rank =
+            ((self.count - 1) as f64 * p / 100.0).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::bucket_mid(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fixed memory bound in bytes (buckets + exact prefix capacity) —
+    /// asserted by tests, independent of `count`.
+    pub fn mem_bound_bytes(&self) -> usize {
+        self.buckets.len() * 8 + self.exact.capacity() * 8
+    }
+}
+
+/// Online accumulator for responses — O(1) memory per response.
 #[derive(Debug, Default, Clone)]
 pub struct Stats {
-    latencies_us: Vec<u64>,
-    sim_cycles: Vec<u64>,
+    latency: LatencyHistogram,
+    sim_cycles_sum: u128,
     energy_j: f64,
     per_worker: Vec<u64>,
     per_worker_busy_us: Vec<u64>,
@@ -16,8 +145,8 @@ pub struct Stats {
 
 impl Stats {
     pub fn record(&mut self, r: &Response) {
-        self.latencies_us.push(r.latency_us);
-        self.sim_cycles.push(r.sim_cycles);
+        self.latency.record(r.latency_us);
+        self.sim_cycles_sum += r.sim_cycles as u128;
         self.energy_j += r.energy_j;
         if self.per_worker.len() <= r.worker {
             self.per_worker.resize(r.worker + 1, 0);
@@ -28,7 +157,13 @@ impl Stats {
     }
 
     pub fn count(&self) -> usize {
-        self.latencies_us.len()
+        self.latency.count() as usize
+    }
+
+    /// The latency distribution (for metrics endpoints that want more
+    /// quantiles than the report carries).
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.latency
     }
 
     /// Final report; `wall_secs` is the makespan of the run, `workers`
@@ -36,14 +171,11 @@ impl Stats {
     /// one that died at build time — still counts against balance).
     pub fn report(&self, wall_secs: f64, clock_hz: f64, workers: usize)
                   -> ServingReport {
-        let mut lat = self.latencies_us.clone();
-        lat.sort_unstable();
         let frames = self.count();
-        let sim_total: u64 = self.sim_cycles.iter().sum();
         let mean_sim_cycles = if frames == 0 {
             0.0
         } else {
-            sim_total as f64 / frames as f64
+            self.sim_cycles_sum as f64 / frames as f64
         };
         // Guard: zero frames (or an all-zero trace) must report 0.0,
         // not inf/NaN from dividing by a zero mean.
@@ -64,9 +196,9 @@ impl Stats {
             frames,
             wall_secs,
             served_fps: frames as f64 / wall_secs.max(1e-9),
-            p50_us: percentile(&lat, 50.0),
-            p95_us: percentile(&lat, 95.0),
-            p99_us: percentile(&lat, 99.0),
+            p50_us: self.latency.percentile(50.0),
+            p95_us: self.latency.percentile(95.0),
+            p99_us: self.latency.percentile(99.0),
             mean_sim_cycles,
             sim_fps,
             mean_energy_uj: if frames == 0 {
@@ -205,5 +337,96 @@ mod tests {
         let r = s.report(1.0, 200e6, 3);
         assert_eq!(r.per_worker_busy_us, vec![600, 600, 0]);
         assert!((r.host_balance_ratio - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    // ---------------- histogram ----------------
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        // Powers of two and neighbours across the whole range.
+        for shift in 0..63u32 {
+            for delta in [-1i64, 0, 1] {
+                let v = (1u64 << shift).wrapping_add(delta as u64);
+                if v == 0 || v == u64::MAX {
+                    continue;
+                }
+                let idx = LatencyHistogram::bucket_index(v);
+                assert!(idx < NBUCKETS, "index {idx} for {v}");
+                assert!(idx >= prev || v < (1u64 << shift),
+                        "bucket index not monotone at {v}");
+                prev = prev.max(idx);
+            }
+        }
+        // Exact region: identity.
+        for v in 0..SUB {
+            assert_eq!(LatencyHistogram::bucket_index(v), v as usize);
+        }
+        // Midpoint stays within the bucket (relative error bound).
+        for v in [17u64, 100, 999, 12_345, 1 << 20, (1 << 40) + 7] {
+            let idx = LatencyHistogram::bucket_index(v);
+            let mid = LatencyHistogram::bucket_mid(idx);
+            let err = (mid as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 1.0 / SUB as f64 + 1e-12,
+                    "midpoint {mid} too far from {v} (err {err})");
+        }
+    }
+
+    #[test]
+    fn small_runs_are_exact() {
+        let mut h = LatencyHistogram::default();
+        let vals: Vec<u64> = (1..=100u64).map(|v| v * 37).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), percentile(&sorted, p),
+                       "exact path diverged at p{p}");
+        }
+    }
+
+    #[test]
+    fn histogram_memory_is_bounded_and_accurate() {
+        let mut h = LatencyHistogram::default();
+        // A long-lived server's worth of samples: far beyond EXACT_CAP.
+        let n = 1_000_000u64;
+        for i in 0..n {
+            // Deterministic spread over [1, 100_000].
+            h.record(1 + (i.wrapping_mul(2654435761) % 100_000));
+        }
+        assert_eq!(h.count(), n);
+        // Fixed footprint: buckets + the capped exact prefix, a few KiB
+        // — not 8 MB of raw samples.
+        assert!(h.mem_bound_bytes()
+                <= (NBUCKETS + LatencyHistogram::EXACT_CAP * 2) * 8,
+                "memory bound grew: {} bytes", h.mem_bound_bytes());
+        // Accuracy: within the sub-bucket bound of the true quantile
+        // of the (near-uniform) distribution.
+        let p50 = h.percentile(50.0) as f64;
+        let p99 = h.percentile(99.0) as f64;
+        assert!((p50 - 50_000.0).abs() / 50_000.0 < 0.10,
+                "p50 {p50} too far from 50k");
+        assert!((p99 - 99_000.0).abs() / 99_000.0 < 0.10,
+                "p99 {p99} too far from 99k");
+        assert!(h.percentile(50.0) <= h.percentile(95.0));
+        assert!(h.percentile(95.0) <= h.percentile(99.0));
+        assert!(h.percentile(100.0) <= h.max());
+    }
+
+    #[test]
+    fn stats_memory_stays_bounded_across_many_records() {
+        let mut s = Stats::default();
+        for i in 0..200_000u64 {
+            s.record(&resp(i, (i % 4) as usize, 10 + i % 5_000, 3));
+        }
+        assert_eq!(s.count(), 200_000);
+        assert!(s.latency().mem_bound_bytes() < 64 * 1024,
+                "latency state must stay a few KiB");
+        let r = s.report(10.0, 200e6, 4);
+        assert_eq!(r.frames, 200_000);
+        assert!(r.p50_us > 0 && r.p50_us <= r.p95_us
+                && r.p95_us <= r.p99_us);
     }
 }

@@ -9,10 +9,11 @@
 //! cross threads, is constructed inside the worker.
 //!
 //! A worker that fails — during pipeline construction or mid-request —
-//! reports a [`WorkerEvent::Failed`] (with the count of requests it had
+//! reports a [`WorkerEvent::Failed`] (with the ids of requests it had
 //! in hand that are now lost) before exiting, so the service's
 //! `collect` sees the failure instead of blocking forever on responses
-//! that will never arrive.
+//! that will never arrive, and the network gateway's router can fail
+//! exactly the affected requests.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -22,6 +23,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::queue::{BoundedQueue, ConsumerGuard};
+use super::service::FrameSpec;
 use crate::power::{EnergyModel, ResourceModel};
 use crate::runtime::{Runtime, SnnRunner};
 use crate::schedule::cbws::Cbws;
@@ -29,12 +31,37 @@ use crate::schedule::{baselines, AprcPredictor, Partition, Scheduler};
 use crate::sim::{sweep, ArchConfig, Simulator, TraceSource};
 use crate::snn::{encode_phased_u8, NetKind, NetworkWeights, SpikeMap};
 
-/// One inference request: a raw image frame.
+/// What a request carries: either raw pixels (the worker encodes) or a
+/// pre-encoded spike train (the network client already ran the phased
+/// encoder — the accelerator-side view of the host↔device boundary).
+#[derive(Debug, Clone)]
+pub enum FramePayload {
+    /// u8 pixels, channel-major (C, H, W) flattened.
+    Pixels(Vec<u8>),
+    /// Bit-packed spike words: `timesteps` frames of
+    /// `c * words_per_channel` u64 words each (the [`SpikeMap`] layout),
+    /// concatenated in timestep order.
+    Spikes { timesteps: usize, words: Vec<u64> },
+}
+
+impl FramePayload {
+    /// Short human description for error messages.
+    pub fn describe(&self) -> String {
+        match self {
+            FramePayload::Pixels(px) => format!("{} pixels", px.len()),
+            FramePayload::Spikes { timesteps, words } => {
+                format!("{} spike words over {timesteps} timesteps",
+                        words.len())
+            }
+        }
+    }
+}
+
+/// One inference request: a raw image frame or a pre-encoded train.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// u8 pixels, channel-major (C, H, W) flattened.
-    pub pixels: Vec<u8>,
+    pub payload: FramePayload,
     pub submitted: Instant,
 }
 
@@ -64,15 +91,16 @@ pub enum WorkerEvent {
     /// One frame served successfully.
     Served(Response),
     /// The worker's pipeline failed (at build time or mid-request) and
-    /// the worker is exiting. `lost` counts requests it had already
-    /// pulled that will never produce a response (0 for build-time
-    /// failures — nothing was pulled yet).
-    Failed { worker: usize, error: String, lost: usize },
+    /// the worker is exiting. `lost` holds the ids of requests it had
+    /// already pulled that will never produce a response (empty for
+    /// build-time failures — nothing was pulled yet), so a response
+    /// router can fail exactly those requests instead of guessing.
+    Failed { worker: usize, error: String, lost: Vec<u64> },
     /// Legacy round-robin dispatch only: a batch was (or had been)
     /// dealt to a worker that cannot serve it — either the dispatcher
     /// found no live worker, or a failed worker drained it from its
-    /// private channel.
-    Undeliverable { lost: usize },
+    /// private channel. `lost` holds the stranded request ids.
+    Undeliverable { lost: Vec<u64> },
 }
 
 /// Scheduling policy selector (serde-friendly mirror of the zoo).
@@ -195,29 +223,58 @@ impl WorkSource {
     }
 }
 
-/// Reject malformed frames before encoding — the encoder would assert
-/// (panic) and the loss would be silent. One helper shared by the
-/// serial loop and the sweep path, so both report identical errors.
-fn validate_frame(req: &Request, c: usize, h: usize, w: usize)
-                  -> Result<()> {
-    if req.pixels.len() == c * h * w {
-        Ok(())
-    } else {
-        Err(anyhow!("frame {}: got {} pixels, expected {}x{}x{}",
-                    req.id, req.pixels.len(), c, h, w))
+/// Reject malformed frames before encoding — the encoder (or
+/// `SpikeMap::from_words`) would assert (panic) and the loss would be
+/// silent. Delegates to [`FrameSpec::validate`] — the *same* rules the
+/// network gateway applies before submitting — so the two layers can
+/// never drift apart; this is the in-process defense.
+fn validate_frame(req: &Request, spec: &FrameSpec) -> Result<()> {
+    spec.validate(&req.payload)
+        .map_err(|e| anyhow!("frame {}: {e}", req.id))
+}
+
+/// Turn a validated payload into the per-timestep spike train. Stray
+/// bits beyond `h*w` in a channel's last word (possible in
+/// client-packed spike payloads) are masked off to keep the packing
+/// invariant the popcount paths rely on.
+fn encode_request(req: &Request, spec: &FrameSpec) -> Vec<SpikeMap> {
+    let (c, h, w) = (spec.c, spec.h, spec.w);
+    match &req.payload {
+        FramePayload::Pixels(px) => {
+            encode_phased_u8(px, c, h, w, spec.timesteps)
+        }
+        FramePayload::Spikes { timesteps: t, words } => {
+            let wpc = spec.words_per_channel();
+            let per_frame = c * wpc;
+            let rem = (h * w) % 64;
+            let mask: u64 = if rem == 0 { !0u64 } else { (1 << rem) - 1 };
+            (0..*t)
+                .map(|step| {
+                    let mut chunk = words
+                        [step * per_frame..(step + 1) * per_frame]
+                        .to_vec();
+                    if wpc > 0 {
+                        for ch in 0..c {
+                            chunk[ch * wpc + wpc - 1] &= mask;
+                        }
+                    }
+                    SpikeMap::from_words(c, h, w, chunk)
+                })
+                .collect()
+        }
     }
 }
 
 /// Forward an error to the service before propagating it — the step
 /// that turns a dying worker from a silent hang into a reported
-/// failure.
+/// failure. `lost` names the requests in hand that die with the worker.
 fn check<T>(events: &mpsc::Sender<WorkerEvent>, worker: usize,
-            lost: usize, res: Result<T>) -> Result<T> {
+            lost: &[u64], res: Result<T>) -> Result<T> {
     if let Err(e) = &res {
         let _ = events.send(WorkerEvent::Failed {
             worker,
             error: format!("{e:#}"),
-            lost,
+            lost: lost.to_vec(),
         });
     }
     res
@@ -244,7 +301,7 @@ pub fn worker_loop(idx: usize, cfg: WorkerConfig, shared: SharedPipeline,
             // the dispatcher hangs up.
             while let Ok(batch) = rx.recv() {
                 let _ = events.send(WorkerEvent::Undeliverable {
-                    lost: batch.len(),
+                    lost: batch.iter().map(|r| r.id).collect(),
                 });
             }
         }
@@ -256,46 +313,49 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
          source: &WorkSource, events: &mpsc::Sender<WorkerEvent>)
          -> Result<()> {
     let net: &NetworkWeights = &shared.net;
-    let sim = check(events, idx, 0, Simulator::with_partitions(
+    let sim = check(events, idx, &[], Simulator::with_partitions(
         cfg.arch, net, shared.partitions.as_ref().clone()))?;
     let timesteps = cfg.timesteps.unwrap_or(net.meta.timesteps);
 
     // PJRT client lives entirely inside this thread.
     let runtime = match cfg.use_runtime {
-        true => Some(check(events, idx, 0, Runtime::cpu())?),
+        true => Some(check(events, idx, &[], Runtime::cpu())?),
         false => None,
     };
     let step = match &runtime {
-        Some(rt) => {
-            Some(check(events, idx, 0, rt.load_step(&cfg.artifacts, net))?)
-        }
+        Some(rt) => Some(check(events, idx, &[],
+                               rt.load_step(&cfg.artifacts, net))?),
         None => None,
     };
     // One runner reused for every request (run_frame resets membrane
     // state per frame), instead of a fresh allocation per request.
     let mut runner = match &step {
-        Some(s) => Some(check(events, idx, 0, SnnRunner::new(s))?),
+        Some(s) => Some(check(events, idx, &[], SnnRunner::new(s))?),
         None => None,
     };
 
-    let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
-                     net.meta.in_shape[2]);
+    let spec = FrameSpec {
+        kind: cfg.kind,
+        c: net.meta.in_shape[0],
+        h: net.meta.in_shape[1],
+        w: net.meta.in_shape[2],
+        timesteps,
+    };
     while let Some(batch) = source.next_batch() {
         // Functional batches can fan out over the frame-parallel sweep
         // when the worker is configured wider than 1; responses are
         // still emitted in batch order.
         if runner.is_none() && cfg.sweep_threads > 1 && batch.len() > 1 {
-            serve_batch_sweep(idx, cfg, &sim, (c, h, w), timesteps,
-                              batch, events)?;
+            serve_batch_sweep(idx, cfg, &sim, &spec, batch, events)?;
             continue;
         }
-        let mut pending = batch.into_iter();
-        while let Some(req) = pending.next() {
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        for (i, req) in batch.into_iter().enumerate() {
             // This request plus the rest of the batch die with us.
-            let lost = 1 + pending.len();
+            let lost = &ids[i..];
             let t0 = Instant::now();
-            check(events, idx, lost, validate_frame(&req, c, h, w))?;
-            let inputs = encode_phased_u8(&req.pixels, c, h, w, timesteps);
+            check(events, idx, lost, validate_frame(&req, &spec))?;
+            let inputs = encode_request(&req, &spec);
             let trace = match runner.as_mut() {
                 Some(r) => TraceSource::Golden(
                     check(events, idx, lost, r.run_frame(&inputs))?),
@@ -330,18 +390,18 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
 /// before it is served, it and everything after are reported lost. A
 /// sweep failure loses the whole batch.
 fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
-                     (c, h, w): (usize, usize, usize), timesteps: usize,
-                     batch: Vec<Request>,
+                     spec: &FrameSpec, batch: Vec<Request>,
                      events: &mpsc::Sender<WorkerEvent>) -> Result<()> {
     let t0 = Instant::now();
+    let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
     let first_bad = batch.iter()
-        .position(|r| validate_frame(r, c, h, w).is_err())
+        .position(|r| validate_frame(r, spec).is_err())
         .unwrap_or(batch.len());
     let good = &batch[..first_bad];
     let trains: Vec<Vec<SpikeMap>> = good.iter()
-        .map(|r| encode_phased_u8(&r.pixels, c, h, w, timesteps))
+        .map(|r| encode_request(r, spec))
         .collect();
-    let reports = check(events, idx, batch.len(),
+    let reports = check(events, idx, &ids,
                         sweep::run_frames_functional(sim, &trains,
                                                      cfg.sweep_threads))?;
     // Frames ran concurrently: attribute an equal share of the batch
@@ -364,8 +424,8 @@ fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
         }
     }
     if first_bad < batch.len() {
-        check(events, idx, batch.len() - first_bad,
-              validate_frame(&batch[first_bad], c, h, w))?;
+        check(events, idx, &ids[first_bad..],
+              validate_frame(&batch[first_bad], spec))?;
     }
     Ok(())
 }

@@ -55,6 +55,41 @@ pub fn fnv1a64(data: &[u8]) -> u64 {
     h
 }
 
+/// Write a tiny synthetic single-conv classifier
+/// (`classifier_aprc.weights.{json,bin}`) into `dir`: 8 filters of
+/// 1x3x3 with varied magnitudes (so CBWS has real balancing work),
+/// input `1 x side x side`, full padding. Shared by the hermetic
+/// serving tests, the loopback serving bench, and the `skydiver synth`
+/// command, so a gateway can be served (and CI can smoke-test it)
+/// without `make artifacts`.
+pub fn write_synthetic_classifier(dir: &std::path::Path, side: usize)
+                                  -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let name = "classifier_aprc";
+    let floats: Vec<f32> = (0..8 * 9)
+        .map(|i| 0.04 + 0.012 * ((i % 9) as f32) + 0.01 * ((i / 9) as f32))
+        .collect();
+    let bytes: Vec<u8> =
+        floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+    let hash = format!("{:016x}", fnv1a64(&bytes));
+    let eh = side + 2 * 2 - 3 + 1; // pad 2, r 3
+    let json = format!(
+        r#"{{
+  "name": "{name}", "aprc": true, "pad": 2, "vth": 0.5,
+  "timesteps": 6, "in_shape": [1, {side}, {side}],
+  "feature_sizes": [[8, {eh}, {eh}]], "dense_out": null,
+  "total_floats": 72, "lambdas": [],
+  "layers": [
+    {{"kind": "conv", "shape": [8, 1, 3, 3], "offset": 0,
+      "layer": 0, "pad": 2}}
+  ],
+  "blob_fnv1a64": "{hash}"
+}}"#);
+    std::fs::write(dir.join(format!("{name}.weights.json")), json)?;
+    std::fs::write(dir.join(format!("{name}.weights.bin")), bytes)?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

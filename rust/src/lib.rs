@@ -15,7 +15,8 @@
 //!
 //! ## Layer map
 //!
-//! * **L3 (this crate)** — the event loop, serving [`coordinator`], the
+//! * **L3 (this crate)** — the network [`server`] (wire protocol, TCP
+//!   gateway, client, load generator), the serving [`coordinator`], the
 //!   accelerator [`sim`], the [`schedule`] zoo, [`power`] models and the
 //!   experiment harness ([`experiments`]) that regenerates every table
 //!   and figure of the paper.
@@ -43,6 +44,7 @@ pub mod metrics;
 pub mod power;
 pub mod runtime;
 pub mod schedule;
+pub mod server;
 pub mod sim;
 pub mod snn;
 pub mod util;

@@ -3,6 +3,8 @@
 //! ```bash
 //! skydiver report                      # artifact inventory + metrics
 //! skydiver run --net classifier       # serve frames end-to-end
+//! skydiver serve --addr 127.0.0.1:0   # TCP gateway over the coordinator
+//! skydiver loadgen --addr HOST:PORT   # drive a gateway over the wire
 //! skydiver trace --net segmenter      # one-frame per-layer trace
 //! skydiver experiment fig7            # regenerate a paper artifact
 //! skydiver experiment all
@@ -13,11 +15,13 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
-                            WorkerConfig};
+use skydiver::coordinator::{DispatchMode, Policy, Service,
+                            ServiceConfig, ServingReport, WorkerConfig};
 use skydiver::experiments::{self, ExperimentCtx};
 use skydiver::metrics::Table;
 use skydiver::power::EnergyModel;
+use skydiver::server::{Client, Gateway, GatewayConfig, GatewayReport,
+                       LoadGenConfig};
 use skydiver::sim::ArchConfig;
 use skydiver::snn::{NetKind, NetworkWeights};
 
@@ -33,6 +37,18 @@ COMMANDS:
              [--frames N] [--workers N] [--golden]
              [--dispatch queue|rr] [--queue-cap N] [--batch-max N]
              [--sweep-threads N]   (frame-parallel width per worker)
+  serve      [--addr HOST:PORT] [--max-conns N] [--port-file PATH]
+             [--net ...] [--plain] [--policy P] [--golden]
+             [--workers N] [--dispatch queue|rr] [--queue-cap N]
+             [--batch-max N] [--sweep-threads N]
+             TCP gateway; --addr defaults to 127.0.0.1:7878, port 0
+             picks an ephemeral port (written to --port-file)
+  loadgen    --addr HOST:PORT [--conns N] [--frames N] [--window N]
+             [--spikes] [--no-retry] [--shutdown]
+             drive a gateway; --shutdown sends a drain request after
+  synth      [--out DIR] [--side N]
+             write synthetic classifier artifacts (serve/test without
+             `make artifacts`)
   trace      [--net classifier|segmenter] [--plain] [--policy P] [--golden]
   experiment <id> [--frames N] [--golden]
              ids: fig2 fig4c fig6 fig7 table1 table2 gains accuracy
@@ -41,25 +57,103 @@ COMMANDS:
 POLICIES: contiguous round_robin random sparten cbws (default cbws)
 ";
 
-/// Tiny flag parser: `--key value` and boolean `--key`.
+/// Every flag the CLI understands, with whether it takes a value.
+/// `Args::parse` rejects anything not listed — a typo must be an
+/// error, not a silently applied default.
+const FLAG_SPECS: &[(&str, bool)] = &[
+    ("artifacts", true),
+    ("net", true),
+    ("policy", true),
+    ("frames", true),
+    ("workers", true),
+    ("dispatch", true),
+    ("queue-cap", true),
+    ("batch-max", true),
+    ("sweep-threads", true),
+    ("addr", true),
+    ("max-conns", true),
+    ("port-file", true),
+    ("conns", true),
+    ("window", true),
+    ("out", true),
+    ("side", true),
+    ("plain", false),
+    ("golden", false),
+    ("spikes", false),
+    ("no-retry", false),
+    ("shutdown", false),
+    ("help", false),
+    ("version", false),
+];
+
+fn flag_spec(name: &str) -> Option<bool> {
+    FLAG_SPECS.iter()
+        .find(|(n, _)| *n == name)
+        .map(|&(_, takes_value)| takes_value)
+}
+
+/// Two-row Levenshtein distance for typo suggestions.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1)
+                .min(cur[j - 1] + 1)
+                .min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest known flag within edit distance 2, if any.
+fn suggest(name: &str) -> Option<&'static str> {
+    FLAG_SPECS.iter()
+        .map(|&(n, _)| (edit_distance(name, n), n))
+        .min()
+        .filter(|&(d, _)| d <= 2)
+        .map(|(_, n)| n)
+}
+
+/// Tiny strict flag parser: `--key value` and boolean `--key`.
+/// Unknown flags and missing values are errors (with a usage hint),
+/// never silently ignored.
 struct Args {
     positional: Vec<String>,
     flags: Vec<(String, Option<String>)>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Self {
+    fn parse(argv: &[String]) -> Result<Self> {
         let mut positional = Vec::new();
         let mut flags = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                let has_val = i + 1 < argv.len()
-                    && !argv[i + 1].starts_with("--");
-                if has_val && !is_bool_flag(name) {
-                    flags.push((name.to_string(),
-                                Some(argv[i + 1].clone())));
+                let takes_value = match flag_spec(name) {
+                    Some(tv) => tv,
+                    None => {
+                        let hint = match suggest(name) {
+                            Some(s) => format!(" (did you mean --{s}?)"),
+                            None => String::new(),
+                        };
+                        bail!("unknown flag --{name}{hint}\n\
+                               run `skydiver --help` for usage");
+                    }
+                };
+                if takes_value {
+                    let val = argv.get(i + 1)
+                        .filter(|v| !v.starts_with("--"))
+                        .ok_or_else(|| anyhow!(
+                            "flag --{name} requires a value\n\
+                             run `skydiver --help` for usage"))?;
+                    flags.push((name.to_string(), Some(val.clone())));
                     i += 2;
                 } else {
                     flags.push((name.to_string(), None));
@@ -70,7 +164,7 @@ impl Args {
                 i += 1;
             }
         }
-        Self { positional, flags }
+        Ok(Self { positional, flags })
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -85,14 +179,11 @@ impl Args {
 
     fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v.parse().map_err(|_| anyhow!(
+                "flag --{name}: '{v}' is not a non-negative integer")),
             None => Ok(default),
         }
     }
-}
-
-fn is_bool_flag(name: &str) -> bool {
-    matches!(name, "plain" | "golden" | "help" | "version")
 }
 
 fn parse_net(args: &Args) -> Result<NetKind> {
@@ -110,7 +201,7 @@ fn parse_policy(args: &Args) -> Result<Policy> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv);
+    let args = Args::parse(&argv)?;
     if args.has("help") || argv.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -125,6 +216,9 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("report") => report(&artifacts),
         Some("run") => run_serve(&artifacts, &args),
+        Some("serve") => serve_cmd(&artifacts, &args),
+        Some("loadgen") => loadgen_cmd(&args),
+        Some("synth") => synth_cmd(&args),
         Some("trace") => trace(&artifacts, &args),
         Some("experiment") => {
             let id = args.positional.get(1)
@@ -193,49 +287,38 @@ fn make_frames(kind: NetKind, n: usize) -> Vec<Vec<u8>> {
     }
 }
 
-fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
+/// Build the worker + service configuration shared by `run` (in
+/// process) and `serve` (TCP gateway) from the same flags.
+fn build_cfgs(artifacts: &PathBuf, args: &Args)
+              -> Result<(WorkerConfig, ServiceConfig)> {
     let kind = parse_net(args)?;
-    let aprc = !args.has("plain");
-    let policy = parse_policy(args)?;
-    let frames = args.get_usize("frames", 32)?;
-    let workers = args.get_usize("workers", 2)?;
-    let golden = args.has("golden");
     let dispatch = match args.get("dispatch") {
         None => DispatchMode::WorkQueue,
         Some(s) => DispatchMode::parse(s)
             .ok_or_else(|| anyhow!("unknown --dispatch {s}"))?,
     };
-
     let wcfg = WorkerConfig {
         artifacts: artifacts.clone(),
         kind,
-        aprc,
-        policy,
+        aprc: !args.has("plain"),
+        policy: parse_policy(args)?,
         arch: ArchConfig::default(),
         energy: EnergyModel::default(),
-        use_runtime: golden,
+        use_runtime: args.has("golden"),
         timesteps: None,
         sweep_threads: args.get_usize("sweep-threads", 1)?,
     };
     let scfg = ServiceConfig {
-        workers,
+        workers: args.get_usize("workers", 2)?,
         batch_max: args.get_usize("batch-max", 8)?,
         queue_cap: args.get_usize("queue-cap", 256)?,
         batch_wait: Duration::from_millis(2),
         dispatch,
     };
-    println!("serving {} frames of {} ({}) with {} workers, policy {:?}, \
-              dispatch {:?}",
-             frames, wcfg.variant_name(),
-             if golden { "golden/PJRT" } else { "functional" },
-             workers, policy, dispatch);
-    let service = Service::start(scfg, wcfg)?;
-    for (i, px) in make_frames(kind, frames).into_iter().enumerate() {
-        service.submit(i as u64, px)?;
-    }
-    let (_, rep) = service.collect(frames, skydiver::CLOCK_HZ)?;
-    service.shutdown()?;
+    Ok((wcfg, scfg))
+}
 
+fn print_serving_report(rep: &ServingReport) {
     let mut t = Table::new("Serving report", &["metric", "value"]);
     t.row(&["frames".into(), rep.frames.to_string()]);
     t.row(&["host throughput (fps)".into(),
@@ -259,6 +342,125 @@ fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
                 rep.worker_failures.join("; ")]);
     }
     t.print();
+}
+
+fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let (wcfg, scfg) = build_cfgs(artifacts, args)?;
+    let frames = args.get_usize("frames", 32)?;
+    let kind = wcfg.kind;
+    println!("serving {} frames of {} ({}) with {} workers, policy {:?}, \
+              dispatch {:?}",
+             frames, wcfg.variant_name(),
+             if wcfg.use_runtime { "golden/PJRT" } else { "functional" },
+             scfg.workers, wcfg.policy, scfg.dispatch);
+    let service = Service::start(scfg, wcfg)?;
+    for (i, px) in make_frames(kind, frames).into_iter().enumerate() {
+        service.submit(i as u64, px)?;
+    }
+    let (_, rep) = service.collect(frames, skydiver::CLOCK_HZ)?;
+    service.shutdown()?;
+    print_serving_report(&rep);
+    Ok(())
+}
+
+/// `skydiver serve`: the TCP gateway. Blocks until a client sends a
+/// `Shutdown` frame (e.g. `skydiver loadgen --shutdown`), then drains
+/// and prints the final serving report.
+fn serve_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let (wcfg, scfg) = build_cfgs(artifacts, args)?;
+    let gcfg = GatewayConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        max_conns: args.get_usize("max-conns", 64)?,
+        drain_timeout: Duration::from_secs(10),
+    };
+    println!("starting gateway for {} ({}) with {} workers, \
+              queue cap {}",
+             wcfg.variant_name(),
+             if wcfg.use_runtime { "golden/PJRT" } else { "functional" },
+             scfg.workers, scfg.queue_cap);
+    let gw = Gateway::start(gcfg, scfg, wcfg)?;
+    let addr = gw.local_addr();
+    println!("listening on {addr}");
+    println!("stop with: skydiver loadgen --addr {addr} --frames 0 \
+              --shutdown");
+    if let Some(pf) = args.get("port-file") {
+        std::fs::write(pf, addr.to_string())?;
+    }
+    let report = gw.wait()?;
+    print_gateway_report(&report);
+    Ok(())
+}
+
+fn print_gateway_report(report: &GatewayReport) {
+    let c = &report.counters;
+    let mut t = Table::new("Gateway", &["metric", "value"]);
+    t.row(&["connections accepted/rejected".into(),
+            format!("{}/{}", c.conns_accepted, c.conns_rejected)]);
+    t.row(&["requests".into(), c.requests.to_string()]);
+    t.row(&["served".into(), c.served.to_string()]);
+    t.row(&["busy (shed)".into(), c.busy.to_string()]);
+    t.row(&["bad request".into(), c.bad_request.to_string()]);
+    t.row(&["shutting down".into(), c.shutting_down.to_string()]);
+    t.row(&["internal errors".into(), c.internal.to_string()]);
+    t.print();
+    print_serving_report(&report.serving);
+}
+
+/// `skydiver loadgen`: drive a gateway over the wire and report
+/// client-side throughput + latency.
+fn loadgen_cmd(args: &Args) -> Result<()> {
+    let addr = args.get("addr")
+        .ok_or_else(|| anyhow!("loadgen needs --addr HOST:PORT"))?
+        .to_string();
+    let cfg = LoadGenConfig {
+        addr: addr.clone(),
+        conns: args.get_usize("conns", 4)?,
+        frames: args.get_usize("frames", 1000)?,
+        window: args.get_usize("window", 8)?,
+        spikes: args.has("spikes"),
+        retry_busy: !args.has("no-retry"),
+        seed: 0x10AD,
+    };
+    let mut failed = 0u64;
+    if cfg.frames > 0 {
+        println!("loadgen: {} frames over {} connections (window {}, \
+                  {} payload) against {}",
+                 cfg.frames, cfg.conns, cfg.window,
+                 if cfg.spikes { "spike" } else { "pixel" }, cfg.addr);
+        let rep = skydiver::server::loadgen::run(&cfg)?;
+        let mut t = Table::new("Loadgen report", &["metric", "value"]);
+        t.row(&["sent (incl. retries)".into(), rep.sent.to_string()]);
+        t.row(&["ok".into(), rep.ok.to_string()]);
+        t.row(&["busy (shed)".into(), rep.busy.to_string()]);
+        t.row(&["errors".into(), rep.errors.to_string()]);
+        t.row(&["wall (s)".into(), format!("{:.3}", rep.wall_secs)]);
+        t.row(&["throughput (fps)".into(), format!("{:.1}", rep.fps)]);
+        t.row(&["latency p50/p95/p99 (us)".into(),
+                format!("{}/{}/{}", rep.p50_us, rep.p95_us,
+                        rep.p99_us)]);
+        t.row(&["per-conn ok".into(), format!("{:?}", rep.per_conn_ok)]);
+        t.print();
+        failed = rep.errors;
+    }
+    if args.has("shutdown") {
+        let mut client = Client::connect(&addr)?;
+        client.shutdown_server()?;
+        println!("server acknowledged shutdown");
+    }
+    if failed > 0 {
+        bail!("{failed} frame(s) failed terminally");
+    }
+    Ok(())
+}
+
+/// `skydiver synth`: write synthetic classifier artifacts so serve /
+/// tests / CI run without the python `make artifacts` step.
+fn synth_cmd(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out").unwrap_or("artifacts"));
+    let side = args.get_usize("side", 32)?;
+    skydiver::data::write_synthetic_classifier(&out, side)?;
+    println!("wrote synthetic classifier_aprc ({side}x{side}) to {}",
+             out.display());
     Ok(())
 }
 
@@ -333,4 +535,75 @@ fn experiment(ctx: &ExperimentCtx, id: &str) -> Result<()> {
         other => bail!("unknown experiment {other}"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_flag_rejected_with_suggestion() {
+        // The motivating bug: `--quue-cap 4` used to fall through to
+        // the default queue capacity with no warning at all.
+        let err = Args::parse(&sv(&["run", "--quue-cap", "4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--quue-cap"), "{err}");
+        assert!(err.contains("--queue-cap"), "{err}");
+    }
+
+    #[test]
+    fn typoed_bool_flag_is_an_error_not_a_token_swallow() {
+        // Pre-fix, a typoed bool flag was parsed as a *valued* flag
+        // and silently consumed the next token.
+        assert!(Args::parse(&sv(&["--golde", "trace"])).is_err());
+        assert!(Args::parse(&sv(&["--plian"])).is_err());
+    }
+
+    #[test]
+    fn valued_flag_requires_a_value() {
+        assert!(Args::parse(&sv(&["run", "--queue-cap"])).is_err());
+        // A following flag is not a value.
+        assert!(Args::parse(&sv(&["run", "--queue-cap", "--golden"]))
+                .is_err());
+    }
+
+    #[test]
+    fn valid_flags_parse() {
+        let a = Args::parse(&sv(&[
+            "run", "--net", "classifier", "--golden", "--workers", "4",
+        ])).unwrap();
+        assert_eq!(a.positional, vec!["run".to_string()]);
+        assert_eq!(a.get("net"), Some("classifier"));
+        assert!(a.has("golden"));
+        assert_eq!(a.get_usize("workers", 2).unwrap(), 4);
+        assert_eq!(a.get_usize("queue-cap", 256).unwrap(), 256);
+    }
+
+    #[test]
+    fn bool_flag_does_not_consume_positional() {
+        let a = Args::parse(&sv(&["--golden", "trace"])).unwrap();
+        assert!(a.has("golden"));
+        assert_eq!(a.positional, vec!["trace".to_string()]);
+    }
+
+    #[test]
+    fn bad_integer_value_is_an_error() {
+        let a = Args::parse(&sv(&["run", "--workers", "two"])).unwrap();
+        assert!(a.get_usize("workers", 2).is_err());
+    }
+
+    #[test]
+    fn suggestions_use_edit_distance() {
+        assert_eq!(suggest("quue-cap"), Some("queue-cap"));
+        assert_eq!(suggest("gloden"), Some("golden"));
+        assert_eq!(suggest("zzzzzzzzzz"), None);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+    }
 }

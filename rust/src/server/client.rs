@@ -1,0 +1,184 @@
+//! Blocking, pipelining client for the Skydiver wire protocol.
+//!
+//! The client is deliberately thin: [`Client::send`] queues a request
+//! frame (buffered), [`Client::recv`] flushes and blocks for the next
+//! response frame. Because the protocol matches responses to requests
+//! by id (not by order), a caller may keep any number of requests in
+//! flight on one connection — that is the whole point of the
+//! pipelined design, and what the load generator exercises.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::snn::NetKind;
+
+use super::protocol::{net_code, read_frame, write_frame, ErrorCode,
+                      RequestBody, ResponseBody, WirePayload,
+                      WireRequest, WireResponse, CONN_ERR_ID,
+                      HEADER_LEN, KIND_RESPONSE, MAX_BODY};
+
+/// The served network's frame contract, as reported by the `Info`
+/// request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerInfo {
+    pub net: u8,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub timesteps: usize,
+}
+
+impl ServerInfo {
+    pub fn pixels_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// One blocking connection to a gateway.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .context("connecting to skydiver gateway")?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(
+            stream.try_clone().context("cloning stream")?);
+        Ok(Self { reader, writer: BufWriter::new(stream) })
+    }
+
+    /// Bound how long [`recv`](Self::recv) blocks (None = forever).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>)
+                            -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Queue one request frame (buffered; flushed by
+    /// [`recv`](Self::recv) or [`flush`](Self::flush)). Refuses a
+    /// request whose body would exceed the protocol's `MAX_BODY` (the
+    /// server would treat the oversized frame as stream corruption and
+    /// drop the whole connection) or that uses the reserved
+    /// connection-error id.
+    pub fn send(&mut self, req: &WireRequest) -> Result<()> {
+        if req.id == CONN_ERR_ID {
+            bail!("request id {CONN_ERR_ID} is reserved for \
+                   connection-level errors");
+        }
+        let frame = req.encode();
+        if frame.len() - HEADER_LEN > MAX_BODY {
+            bail!("request body {} bytes exceeds protocol cap {} — \
+                   the server would drop the connection",
+                  frame.len() - HEADER_LEN, MAX_BODY);
+        }
+        write_frame(&mut self.writer, &frame)
+            .context("writing request frame")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush().context("flushing request frames")?;
+        Ok(())
+    }
+
+    /// Flush queued requests and block for the next response frame.
+    /// Responses may arrive in any order — match on
+    /// [`WireResponse::id`].
+    pub fn recv(&mut self) -> Result<WireResponse> {
+        self.flush()?;
+        let body = read_frame(&mut self.reader, KIND_RESPONSE)
+            .map_err(|e| anyhow!("reading response frame: {e}"))?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        WireResponse::decode_body(&body)
+            .map_err(|e| anyhow!("decoding response: {e}"))
+    }
+
+    /// Convenience: one pixel-frame inference round trip.
+    pub fn infer_pixels(&mut self, id: u64, net: NetKind,
+                        pixels: Vec<u8>) -> Result<WireResponse> {
+        self.send(&WireRequest {
+            id,
+            body: RequestBody::Infer {
+                net: net_code(net),
+                payload: WirePayload::Pixels(pixels),
+            },
+        })?;
+        self.recv()
+    }
+
+    /// Convenience: one pre-encoded-spike inference round trip.
+    pub fn infer_spikes(&mut self, id: u64, net: NetKind,
+                        timesteps: u32, words: Vec<u64>)
+                        -> Result<WireResponse> {
+        self.send(&WireRequest {
+            id,
+            body: RequestBody::Infer {
+                net: net_code(net),
+                payload: WirePayload::Spikes { timesteps, words },
+            },
+        })?;
+        self.recv()
+    }
+
+    /// Fetch the served net's frame contract.
+    pub fn info(&mut self) -> Result<ServerInfo> {
+        self.send(&WireRequest { id: 0, body: RequestBody::Info })?;
+        match self.recv()?.body {
+            ResponseBody::Info { net, c, h, w, timesteps } => {
+                Ok(ServerInfo {
+                    net,
+                    c: c as usize,
+                    h: h as usize,
+                    w: w as usize,
+                    timesteps: timesteps as usize,
+                })
+            }
+            ResponseBody::Error { code, detail } => {
+                bail!("info failed: {} {detail}", code.as_str())
+            }
+            other => bail!("unexpected info response: {other:?}"),
+        }
+    }
+
+    /// Fetch the Prometheus-style metrics exposition.
+    pub fn metrics(&mut self) -> Result<String> {
+        self.send(&WireRequest { id: 0, body: RequestBody::Metrics })?;
+        match self.recv()?.body {
+            ResponseBody::Metrics { text } => Ok(text),
+            ResponseBody::Error { code, detail } => {
+                bail!("metrics failed: {} {detail}", code.as_str())
+            }
+            other => bail!("unexpected metrics response: {other:?}"),
+        }
+    }
+
+    /// Ask the gateway to drain and shut down; returns once the ack
+    /// arrives.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.send(&WireRequest { id: 0, body: RequestBody::Shutdown })?;
+        match self.recv()?.body {
+            ResponseBody::ShutdownAck => Ok(()),
+            ResponseBody::Error { code, detail } => {
+                bail!("shutdown refused: {} {detail}", code.as_str())
+            }
+            other => bail!("unexpected shutdown response: {other:?}"),
+        }
+    }
+}
+
+/// Pull the typed error (if any) out of a response.
+pub fn response_error(resp: &WireResponse)
+                      -> Option<(ErrorCode, &str)> {
+    match &resp.body {
+        ResponseBody::Error { code, detail } => {
+            Some((*code, detail.as_str()))
+        }
+        _ => None,
+    }
+}

@@ -1,0 +1,258 @@
+//! Multi-connection load generator for the TCP gateway.
+//!
+//! Opens `conns` connections, splits `frames` across them, and drives
+//! each with window-based pipelining (`window` requests in flight per
+//! connection). Latency is measured client-side per request
+//! (send→matching response); throughput is total successful frames
+//! over wall time. `BUSY` responses (shed load) are counted and —
+//! optionally — retried with a small backoff, so an overloaded server
+//! still converges instead of dropping work silently.
+
+use std::collections::{HashMap, VecDeque};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::data::SplitMix64;
+use crate::metrics::percentile;
+use crate::snn::encode_phased_u8;
+
+use super::client::{Client, ServerInfo};
+use super::protocol::{ErrorCode, RequestBody, ResponseBody,
+                      WirePayload, WireRequest, CONN_ERR_ID};
+
+/// Max resubmissions of one frame after `BUSY` before giving up.
+const MAX_BUSY_RETRIES: u32 = 200;
+
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    pub addr: String,
+    /// Concurrent connections.
+    pub conns: usize,
+    /// Total frames across all connections.
+    pub frames: usize,
+    /// Per-connection pipelining window (requests in flight).
+    pub window: usize,
+    /// Pre-encode spike trains client-side (exercises the `Spikes`
+    /// payload) instead of sending raw pixels.
+    pub spikes: bool,
+    /// Re-send frames shed with `BUSY` (with backoff) instead of
+    /// counting them as terminal.
+    pub retry_busy: bool,
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            conns: 4,
+            frames: 1000,
+            window: 8,
+            spikes: false,
+            retry_busy: true,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Aggregated result of one load-generation run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadGenReport {
+    /// Request frames written (including retries).
+    pub sent: u64,
+    /// Successful predictions.
+    pub ok: u64,
+    /// `BUSY` responses observed (shed load; retries count each time).
+    pub busy: u64,
+    /// Terminal failures (non-busy errors, or busy past the retry cap).
+    pub errors: u64,
+    pub wall_secs: f64,
+    /// Successful frames per second of wall time, all connections.
+    pub fps: f64,
+    /// Client-side latency percentiles over successful frames (us).
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    /// Successful frames per connection.
+    pub per_conn_ok: Vec<u64>,
+    /// All client-side latencies (us), sorted — for benches that need
+    /// the full distribution.
+    pub latencies_us: Vec<u64>,
+}
+
+struct ConnResult {
+    sent: u64,
+    ok: u64,
+    busy: u64,
+    errors: u64,
+    latencies_us: Vec<u64>,
+}
+
+/// Deterministic workload: ~1 in 4 frames dense-random (expensive),
+/// the rest sparse (cheap) — the skew the balance machinery exists
+/// for. Regenerable from (seed, id) so busy retries resend identical
+/// bytes.
+fn make_pixels(info: &ServerInfo, seed: u64, id: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed ^ id.wrapping_mul(0x9E37_79B9));
+    let n = info.pixels_len();
+    let dense = id % 4 == 0;
+    (0..n)
+        .map(|_| {
+            if dense {
+                rng.next_below(256) as u8
+            } else if rng.next_below(100) < 10 {
+                rng.next_below(256) as u8
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+fn make_payload(info: &ServerInfo, seed: u64, id: u64, spikes: bool)
+                -> WirePayload {
+    let pixels = make_pixels(info, seed, id);
+    if !spikes {
+        return WirePayload::Pixels(pixels);
+    }
+    let train = encode_phased_u8(&pixels, info.c, info.h, info.w,
+                                 info.timesteps);
+    let mut words = Vec::new();
+    for map in &train {
+        for ch in 0..info.c {
+            words.extend_from_slice(map.channel_words(ch));
+        }
+    }
+    WirePayload::Spikes {
+        timesteps: info.timesteps as u32,
+        words,
+    }
+}
+
+fn run_conn(addr: &str, info: ServerInfo, frames: usize, window: usize,
+            spikes: bool, retry_busy: bool, seed: u64)
+            -> Result<ConnResult> {
+    let mut client = Client::connect(addr)?;
+    client.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut to_send: VecDeque<(u64, u32)> =
+        (0..frames as u64).map(|id| (id, 0)).collect();
+    let mut inflight: HashMap<u64, (Instant, u32)> = HashMap::new();
+    let mut latencies_us = Vec::with_capacity(frames);
+    let (mut sent, mut ok, mut busy, mut errors) = (0u64, 0u64, 0u64,
+                                                    0u64);
+    while ok + errors < frames as u64 {
+        while inflight.len() < window {
+            let Some((id, attempts)) = to_send.pop_front() else {
+                break;
+            };
+            let payload = make_payload(&info, seed, id, spikes);
+            client.send(&WireRequest {
+                id,
+                body: RequestBody::Infer { net: info.net, payload },
+            })?;
+            inflight.insert(id, (Instant::now(), attempts));
+            sent += 1;
+        }
+        if inflight.is_empty() {
+            break;
+        }
+        let resp = client.recv()?;
+        if resp.id == CONN_ERR_ID {
+            // Connection-level error (shed connection, framing
+            // damage): the whole connection is failing, not one frame.
+            match resp.body {
+                ResponseBody::Error { code, detail } => {
+                    return Err(anyhow!(
+                        "connection-level {}: {detail}", code.as_str()));
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unexpected connection-level response: \
+                         {other:?}"));
+                }
+            }
+        }
+        let (t0, attempts) = inflight.remove(&resp.id).ok_or_else(
+            || anyhow!("response for unknown id {}", resp.id))?;
+        match resp.body {
+            ResponseBody::Infer { .. } => {
+                ok += 1;
+                latencies_us.push(t0.elapsed().as_micros() as u64);
+            }
+            ResponseBody::Error { code: ErrorCode::Busy, .. } => {
+                busy += 1;
+                if retry_busy && attempts < MAX_BUSY_RETRIES {
+                    // Back off briefly so the shedding server can
+                    // drain, then requeue the same frame.
+                    thread::sleep(Duration::from_millis(
+                        (1 + attempts as u64 / 10).min(10)));
+                    to_send.push_back((resp.id, attempts + 1));
+                } else {
+                    errors += 1;
+                }
+            }
+            ResponseBody::Error { .. } => errors += 1,
+            _ => errors += 1,
+        }
+    }
+    Ok(ConnResult { sent, ok, busy, errors, latencies_us })
+}
+
+/// Run a full multi-connection load generation against `cfg.addr`.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
+    ensure!(cfg.conns > 0, "loadgen needs at least one connection");
+    let info = Client::connect(&cfg.addr)?.info()?;
+    let window = cfg.window.max(1);
+
+    let t0 = Instant::now();
+    let results: Vec<Result<ConnResult>> = thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.conns)
+            .map(|i| {
+                let n = cfg.frames / cfg.conns
+                    + usize::from(i < cfg.frames % cfg.conns);
+                let seed =
+                    cfg.seed.wrapping_add(0xC0FF_EE00 * i as u64);
+                s.spawn(move || {
+                    run_conn(&cfg.addr, info, n, window, cfg.spikes,
+                             cfg.retry_busy, seed)
+                })
+            })
+            .collect();
+        handles.into_iter()
+            .map(|h| h.join().unwrap_or_else(
+                |_| Err(anyhow!("loadgen connection thread panicked"))))
+            .collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let mut report = LoadGenReport {
+        wall_secs,
+        per_conn_ok: Vec::with_capacity(cfg.conns),
+        ..Default::default()
+    };
+    let mut all_lat: Vec<u64> = Vec::with_capacity(cfg.frames);
+    for res in results {
+        let r = res?;
+        report.sent += r.sent;
+        report.ok += r.ok;
+        report.busy += r.busy;
+        report.errors += r.errors;
+        report.per_conn_ok.push(r.ok);
+        all_lat.extend_from_slice(&r.latencies_us);
+    }
+    all_lat.sort_unstable();
+    report.fps = report.ok as f64 / wall_secs.max(1e-9);
+    report.p50_us = percentile(&all_lat, 50.0);
+    report.p95_us = percentile(&all_lat, 95.0);
+    report.p99_us = percentile(&all_lat, 99.0);
+    report.mean_us = if all_lat.is_empty() {
+        0.0
+    } else {
+        all_lat.iter().sum::<u64>() as f64 / all_lat.len() as f64
+    };
+    report.latencies_us = all_lat;
+    Ok(report)
+}

@@ -1,0 +1,32 @@
+//! Network serving subsystem — the ingress path in front of the
+//! [`coordinator`](crate::coordinator).
+//!
+//! The paper's headline numbers are *serving* numbers (22.6 KFPS,
+//! 42.4 uJ/image on classification); streaming SNN accelerators treat
+//! the host↔accelerator boundary as a first-class subsystem. This
+//! module is that boundary as real code:
+//!
+//! * [`protocol`] — versioned, length-prefixed binary wire format
+//!   (requests carry raw pixels or pre-encoded spike words; responses
+//!   carry prediction + latency + worker id; typed error codes
+//!   `BUSY` / `BAD_REQUEST` / `SHUTTING_DOWN` / `INTERNAL`).
+//! * [`server`] — the TCP [`Gateway`]: per-connection threads,
+//!   pipelined requests, a connection cap, admission control that maps
+//!   queue-full onto `BUSY` (shed load, never hang), a
+//!   Prometheus-style `metrics` request, and graceful
+//!   drain-then-shutdown.
+//! * [`client`] — a blocking, pipelining client library.
+//! * [`loadgen`] — a multi-connection load generator (the
+//!   `skydiver loadgen` CLI and the loopback serving bench).
+
+pub mod client;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use client::{Client, ServerInfo};
+pub use loadgen::{LoadGenConfig, LoadGenReport};
+pub use protocol::{ErrorCode, ProtoError, RequestBody, ResponseBody,
+                   WirePayload, WireRequest, WireResponse};
+pub use server::{CounterSnapshot, Gateway, GatewayConfig,
+                 GatewayReport, GatewayStop};

@@ -1,0 +1,712 @@
+//! Skydiver wire protocol v1 — versioned, length-prefixed binary
+//! frames (std-only, little-endian throughout).
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! +----------+---------+--------+-------------+--------~~--+
+//! | magic(4) | ver(1)  | kind(1)| body_len(4) | body       |
+//! | "SKYD"   | 0x01    | 1|2    | u32 LE      | body_len B |
+//! +----------+---------+--------+-------------+------------+
+//! ```
+//!
+//! `kind` is [`KIND_REQUEST`] or [`KIND_RESPONSE`]. `body_len` is
+//! capped at [`MAX_BODY`]; an oversized header is a framing error and
+//! the peer disconnects (the stream can no longer be trusted).
+//!
+//! ## Request body
+//!
+//! `id: u64`, `op: u8`, then per-op:
+//!
+//! * `op 0` **Infer** — `net: u8` (0 classifier / 1 segmenter),
+//!   `payload_kind: u8`: `0` pixels (`n: u32`, `n` raw bytes) or `1`
+//!   pre-encoded spikes (`timesteps: u32`, `nwords: u32`, `nwords`
+//!   u64 spike words in [`SpikeMap`](crate::snn::SpikeMap) packing).
+//! * `op 1` **Metrics** — empty; response is a Prometheus-style
+//!   plaintext exposition.
+//! * `op 2` **Shutdown** — empty; asks the gateway to drain and exit.
+//! * `op 3` **Info** — empty; response describes the served net
+//!   (shape + timesteps), so a client can build valid frames.
+//!
+//! ## Response body
+//!
+//! `id: u64` (echo), `tag: u8`:
+//!
+//! * `tag 0` **Infer** — `prediction: u32` (argmax class),
+//!   `ncounts: u32`, `ncounts` u32 output spike counts,
+//!   `latency_us: u64` (server-side submit→served), `worker: u32`.
+//! * `tag 1` **Metrics** — `len: u32`, UTF-8 text.
+//! * `tag 2` **ShutdownAck** — empty.
+//! * `tag 3` **Error** — `code: u8` ([`ErrorCode`]), `len: u32`,
+//!   UTF-8 detail.
+//! * `tag 4` **Info** — `net: u8`, `c/h/w/timesteps: u32` each.
+//!
+//! Decoding is total: every malformed input returns a typed
+//! [`ProtoError`], never panics. [`ProtoError::is_fatal`] separates
+//! framing damage (desynced stream → disconnect) from a malformed body
+//! inside an intact frame (answerable with `BAD_REQUEST`). Response id
+//! [`CONN_ERR_ID`] is reserved for connection-level errors (shed
+//! connection, framing damage) — requests must not use it.
+
+use std::io::{self, Read, Write};
+
+use crate::snn::NetKind;
+
+pub const MAGIC: [u8; 4] = *b"SKYD";
+pub const VERSION: u8 = 1;
+pub const KIND_REQUEST: u8 = 1;
+pub const KIND_RESPONSE: u8 = 2;
+/// Frame header bytes: magic + version + kind + body_len.
+pub const HEADER_LEN: usize = 10;
+/// Hard cap on body size (16 MiB) — an oversized header is treated as
+/// stream corruption, not an allocation request.
+pub const MAX_BODY: usize = 1 << 24;
+/// Reserved response id for *connection-level* errors (shed
+/// connection, framing damage, unparsable request id): it can never
+/// collide with a request id a well-behaved client chose, so a
+/// pipelined client can tell "your request failed" from "this
+/// connection failed". Requests must not use it.
+pub const CONN_ERR_ID: u64 = u64::MAX;
+
+// ---------------------------------------------------------------- errors
+
+/// Typed decode/IO failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Header did not start with [`MAGIC`] — stream desync or a
+    /// non-Skydiver peer.
+    BadMagic([u8; 4]),
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Unknown frame kind byte.
+    BadKind(u8),
+    /// `body_len` exceeded [`MAX_BODY`].
+    Oversized(usize),
+    /// The peer closed (or the buffer ended) mid-frame.
+    Truncated,
+    /// The frame arrived whole but its body does not parse.
+    Malformed(String),
+    /// Underlying socket error.
+    Io(String),
+}
+
+impl ProtoError {
+    /// Fatal errors mean the byte stream can no longer be trusted
+    /// (framing lost) — the only safe reaction is to drop the
+    /// connection. Non-fatal errors (a malformed body inside a
+    /// correctly framed message) can be answered with `BAD_REQUEST`
+    /// and the connection kept.
+    pub fn is_fatal(&self) -> bool {
+        !matches!(self, ProtoError::Malformed(_))
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadMagic(m) => {
+                write!(f, "bad magic {m:02x?} (expected \"SKYD\")")
+            }
+            ProtoError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v}")
+            }
+            ProtoError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtoError::Oversized(n) => {
+                write!(f, "frame body {n} bytes exceeds cap {MAX_BODY}")
+            }
+            ProtoError::Truncated => write!(f, "truncated frame"),
+            ProtoError::Malformed(d) => write!(f, "malformed body: {d}"),
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Typed wire-level error codes carried by `Error` responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Admission control shed this request (queue full / connection
+    /// cap). Retry later.
+    Busy = 1,
+    /// The request failed validation (wrong payload size, unknown op,
+    /// wrong net, unparsable body).
+    BadRequest = 2,
+    /// The gateway is draining; no new work is accepted.
+    ShuttingDown = 3,
+    /// A worker failed while holding this request.
+    Internal = 4,
+}
+
+impl ErrorCode {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => ErrorCode::Busy,
+            2 => ErrorCode::BadRequest,
+            3 => ErrorCode::ShuttingDown,
+            4 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::Busy => "BUSY",
+            ErrorCode::BadRequest => "BAD_REQUEST",
+            ErrorCode::ShuttingDown => "SHUTTING_DOWN",
+            ErrorCode::Internal => "INTERNAL",
+        }
+    }
+}
+
+// ------------------------------------------------------------- messages
+
+/// Net kind on the wire.
+pub fn net_code(kind: NetKind) -> u8 {
+    match kind {
+        NetKind::Classifier => 0,
+        NetKind::Segmenter => 1,
+    }
+}
+
+pub fn net_from_code(code: u8) -> Option<NetKind> {
+    Some(match code {
+        0 => NetKind::Classifier,
+        1 => NetKind::Segmenter,
+        _ => return None,
+    })
+}
+
+/// Inference payload as carried on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WirePayload {
+    Pixels(Vec<u8>),
+    Spikes { timesteps: u32, words: Vec<u64> },
+}
+
+/// Client → server message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub body: RequestBody,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestBody {
+    Infer { net: u8, payload: WirePayload },
+    Metrics,
+    Shutdown,
+    Info,
+}
+
+/// Server → client message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireResponse {
+    pub id: u64,
+    pub body: ResponseBody,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResponseBody {
+    Infer {
+        prediction: u32,
+        output_counts: Vec<u32>,
+        latency_us: u64,
+        worker: u32,
+    },
+    Metrics { text: String },
+    ShutdownAck,
+    Error { code: ErrorCode, detail: String },
+    Info { net: u8, c: u32, h: u32, w: u32, timesteps: u32 },
+}
+
+// -------------------------------------------------------------- encode
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+// Note: no size assert here — encode stays infallible; `Client::send`
+// rejects over-cap bodies *before* any bytes reach the wire (sending
+// one would desync the peer: it reads the header as corruption).
+fn frame(kind: u8, body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+impl WireRequest {
+    /// Full frame (header + body), ready to write to a socket.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_u64(&mut b, self.id);
+        match &self.body {
+            RequestBody::Infer { net, payload } => {
+                b.push(0);
+                b.push(*net);
+                match payload {
+                    WirePayload::Pixels(px) => {
+                        b.push(0);
+                        put_u32(&mut b, px.len() as u32);
+                        b.extend_from_slice(px);
+                    }
+                    WirePayload::Spikes { timesteps, words } => {
+                        b.push(1);
+                        put_u32(&mut b, *timesteps);
+                        put_u32(&mut b, words.len() as u32);
+                        for w in words {
+                            put_u64(&mut b, *w);
+                        }
+                    }
+                }
+            }
+            RequestBody::Metrics => b.push(1),
+            RequestBody::Shutdown => b.push(2),
+            RequestBody::Info => b.push(3),
+        }
+        frame(KIND_REQUEST, b)
+    }
+
+    /// Decode a request body (the bytes after the frame header).
+    pub fn decode_body(body: &[u8]) -> Result<Self, ProtoError> {
+        let mut r = Cursor::new(body);
+        let id = r.u64()?;
+        let op = r.u8()?;
+        let body = match op {
+            0 => {
+                let net = r.u8()?;
+                let payload = match r.u8()? {
+                    0 => {
+                        let n = r.u32()? as usize;
+                        WirePayload::Pixels(r.bytes(n)?.to_vec())
+                    }
+                    1 => {
+                        let timesteps = r.u32()?;
+                        let n = r.u32()? as usize;
+                        let raw = r.bytes(n.checked_mul(8).ok_or_else(
+                            || ProtoError::Malformed(
+                                "word count overflow".into()))?)?;
+                        let words = raw.chunks_exact(8)
+                            .map(|c| u64::from_le_bytes(
+                                c.try_into().unwrap()))
+                            .collect();
+                        WirePayload::Spikes { timesteps, words }
+                    }
+                    k => {
+                        return Err(ProtoError::Malformed(format!(
+                            "unknown payload kind {k}")))
+                    }
+                };
+                RequestBody::Infer { net, payload }
+            }
+            1 => RequestBody::Metrics,
+            2 => RequestBody::Shutdown,
+            3 => RequestBody::Info,
+            op => {
+                return Err(ProtoError::Malformed(format!(
+                    "unknown request op {op}")))
+            }
+        };
+        r.finish()?;
+        Ok(WireRequest { id, body })
+    }
+}
+
+impl WireResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_u64(&mut b, self.id);
+        match &self.body {
+            ResponseBody::Infer {
+                prediction,
+                output_counts,
+                latency_us,
+                worker,
+            } => {
+                b.push(0);
+                put_u32(&mut b, *prediction);
+                put_u32(&mut b, output_counts.len() as u32);
+                for c in output_counts {
+                    put_u32(&mut b, *c);
+                }
+                put_u64(&mut b, *latency_us);
+                put_u32(&mut b, *worker);
+            }
+            ResponseBody::Metrics { text } => {
+                b.push(1);
+                put_u32(&mut b, text.len() as u32);
+                b.extend_from_slice(text.as_bytes());
+            }
+            ResponseBody::ShutdownAck => b.push(2),
+            ResponseBody::Error { code, detail } => {
+                b.push(3);
+                b.push(*code as u8);
+                put_u32(&mut b, detail.len() as u32);
+                b.extend_from_slice(detail.as_bytes());
+            }
+            ResponseBody::Info { net, c, h, w, timesteps } => {
+                b.push(4);
+                b.push(*net);
+                put_u32(&mut b, *c);
+                put_u32(&mut b, *h);
+                put_u32(&mut b, *w);
+                put_u32(&mut b, *timesteps);
+            }
+        }
+        frame(KIND_RESPONSE, b)
+    }
+
+    pub fn decode_body(body: &[u8]) -> Result<Self, ProtoError> {
+        let mut r = Cursor::new(body);
+        let id = r.u64()?;
+        let tag = r.u8()?;
+        let body = match tag {
+            0 => {
+                let prediction = r.u32()?;
+                let n = r.u32()? as usize;
+                if n > MAX_BODY / 4 {
+                    return Err(ProtoError::Malformed(format!(
+                        "count vector too long: {n}")));
+                }
+                let mut output_counts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    output_counts.push(r.u32()?);
+                }
+                let latency_us = r.u64()?;
+                let worker = r.u32()?;
+                ResponseBody::Infer {
+                    prediction,
+                    output_counts,
+                    latency_us,
+                    worker,
+                }
+            }
+            1 => {
+                let n = r.u32()? as usize;
+                ResponseBody::Metrics { text: r.utf8(n)? }
+            }
+            2 => ResponseBody::ShutdownAck,
+            3 => {
+                let code = ErrorCode::from_u8(r.u8()?).ok_or_else(
+                    || ProtoError::Malformed("bad error code".into()))?;
+                let n = r.u32()? as usize;
+                ResponseBody::Error { code, detail: r.utf8(n)? }
+            }
+            4 => ResponseBody::Info {
+                net: r.u8()?,
+                c: r.u32()?,
+                h: r.u32()?,
+                w: r.u32()?,
+                timesteps: r.u32()?,
+            },
+            tag => {
+                return Err(ProtoError::Malformed(format!(
+                    "unknown response tag {tag}")))
+            }
+        };
+        r.finish()?;
+        Ok(WireResponse { id, body })
+    }
+}
+
+// ------------------------------------------------------------ frame IO
+
+/// Read one frame of the expected kind. `Ok(None)` on clean EOF (the
+/// peer closed between frames); [`ProtoError::Truncated`] if the
+/// stream ends mid-frame.
+pub fn read_frame(r: &mut impl Read, expect_kind: u8)
+                  -> Result<Option<Vec<u8>>, ProtoError> {
+    let mut header = [0u8; HEADER_LEN];
+    // First byte separately: 0 bytes here is a clean close, not an
+    // error.
+    let got = loop {
+        match r.read(&mut header[..1]) {
+            Ok(n) => break n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_err(e)),
+        }
+    };
+    if got == 0 {
+        return Ok(None);
+    }
+    read_exact(r, &mut header[1..])?;
+    if header[..4] != MAGIC {
+        let mut m = [0u8; 4];
+        m.copy_from_slice(&header[..4]);
+        return Err(ProtoError::BadMagic(m));
+    }
+    if header[4] != VERSION {
+        return Err(ProtoError::BadVersion(header[4]));
+    }
+    if header[5] != expect_kind {
+        return Err(ProtoError::BadKind(header[5]));
+    }
+    let len = u32::from_le_bytes(header[6..10].try_into().unwrap())
+        as usize;
+    if len > MAX_BODY {
+        return Err(ProtoError::Oversized(len));
+    }
+    let mut body = vec![0u8; len];
+    read_exact(r, &mut body)?;
+    Ok(Some(body))
+}
+
+fn read_exact(r: &mut impl Read, buf: &mut [u8])
+              -> Result<(), ProtoError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+            Err(ProtoError::Truncated)
+        }
+        Err(e) => Err(io_err(e)),
+    }
+}
+
+fn io_err(e: io::Error) -> ProtoError {
+    ProtoError::Io(e.to_string())
+}
+
+/// Write one already-encoded frame.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+    w.write_all(frame)
+}
+
+// -------------------------------------------------------------- cursor
+
+/// Bounds-checked little-endian reader over a body slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        let end = self.pos.checked_add(n)
+            .ok_or(ProtoError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(ProtoError::Truncated);
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String, ProtoError> {
+        String::from_utf8(self.bytes(n)?.to_vec()).map_err(|_| {
+            ProtoError::Malformed("invalid utf-8".into())
+        })
+    }
+
+    /// Reject trailing bytes — a well-formed body is consumed exactly.
+    fn finish(&self) -> Result<(), ProtoError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ProtoError::Malformed(format!(
+                "{} trailing byte(s)", self.buf.len() - self.pos)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor as IoCursor;
+
+    fn roundtrip_req(req: WireRequest) {
+        let f = req.encode();
+        let body = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+            .unwrap().unwrap();
+        assert_eq!(WireRequest::decode_body(&body).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: WireResponse) {
+        let f = resp.encode();
+        let body = read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
+            .unwrap().unwrap();
+        assert_eq!(WireResponse::decode_body(&body).unwrap(), resp);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(WireRequest {
+            id: 0,
+            body: RequestBody::Infer {
+                net: 0,
+                payload: WirePayload::Pixels(vec![]),
+            },
+        });
+        roundtrip_req(WireRequest {
+            id: u64::MAX,
+            body: RequestBody::Infer {
+                net: 1,
+                payload: WirePayload::Pixels((0..=255).collect()),
+            },
+        });
+        roundtrip_req(WireRequest {
+            id: 7,
+            body: RequestBody::Infer {
+                net: 0,
+                payload: WirePayload::Spikes {
+                    timesteps: 6,
+                    words: vec![0, u64::MAX, 0x0123_4567_89AB_CDEF],
+                },
+            },
+        });
+        roundtrip_req(WireRequest { id: 1, body: RequestBody::Metrics });
+        roundtrip_req(WireRequest { id: 2, body: RequestBody::Shutdown });
+        roundtrip_req(WireRequest { id: 3, body: RequestBody::Info });
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(WireResponse {
+            id: 9,
+            body: ResponseBody::Infer {
+                prediction: 3,
+                output_counts: vec![0, 5, 2, 9],
+                latency_us: 12345,
+                worker: 1,
+            },
+        });
+        roundtrip_resp(WireResponse {
+            id: 10,
+            body: ResponseBody::Metrics {
+                text: "skydiver_up 1\n".into(),
+            },
+        });
+        roundtrip_resp(WireResponse {
+            id: 11,
+            body: ResponseBody::ShutdownAck,
+        });
+        roundtrip_resp(WireResponse {
+            id: 12,
+            body: ResponseBody::Error {
+                code: ErrorCode::Busy,
+                detail: "queue full (2 entries)".into(),
+            },
+        });
+        roundtrip_resp(WireResponse {
+            id: 13,
+            body: ResponseBody::Info {
+                net: 0,
+                c: 1,
+                h: 28,
+                w: 28,
+                timesteps: 20,
+            },
+        });
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut f = WireRequest { id: 1, body: RequestBody::Info }
+            .encode();
+        f[0] = b'X';
+        let err = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+            .unwrap_err();
+        assert!(matches!(err, ProtoError::BadMagic(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn bad_version_and_kind_rejected() {
+        let mut f = WireRequest { id: 1, body: RequestBody::Info }
+            .encode();
+        f[4] = 99;
+        assert!(matches!(
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST),
+            Err(ProtoError::BadVersion(99))));
+        let f = WireRequest { id: 1, body: RequestBody::Info }.encode();
+        assert!(matches!(
+            read_frame(&mut IoCursor::new(&f), KIND_RESPONSE),
+            Err(ProtoError::BadKind(KIND_REQUEST))));
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut f = WireRequest { id: 1, body: RequestBody::Info }
+            .encode();
+        f[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+            .unwrap_err();
+        assert!(matches!(err, ProtoError::Oversized(_)));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn truncation_never_panics() {
+        let f = WireRequest {
+            id: 42,
+            body: RequestBody::Infer {
+                net: 0,
+                payload: WirePayload::Pixels(vec![7; 100]),
+            },
+        }.encode();
+        // Every proper prefix either reports clean EOF (empty) or a
+        // typed error — never a panic, never a bogus success.
+        for cut in 0..f.len() {
+            let res =
+                read_frame(&mut IoCursor::new(&f[..cut]), KIND_REQUEST);
+            match res {
+                Ok(None) => assert_eq!(cut, 0),
+                Ok(Some(_)) => panic!("prefix {cut} decoded as whole"),
+                Err(e) => assert!(e.is_fatal() || cut >= HEADER_LEN),
+            }
+        }
+        // Truncated *bodies* (whole frame read, bytes missing inside)
+        // are malformed-or-truncated, never a panic.
+        let body = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+            .unwrap().unwrap();
+        for cut in 0..body.len() {
+            assert!(WireRequest::decode_body(&body[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_malformed() {
+        let f = WireRequest { id: 5, body: RequestBody::Metrics }
+            .encode();
+        let mut body = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+            .unwrap().unwrap();
+        body.push(0xEE);
+        let err = WireRequest::decode_body(&body).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        assert!(!err.is_fatal());
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [ErrorCode::Busy, ErrorCode::BadRequest,
+                     ErrorCode::ShuttingDown, ErrorCode::Internal] {
+            assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(200), None);
+    }
+}

@@ -1,0 +1,711 @@
+//! TCP gateway: the network front end of the serving coordinator.
+//!
+//! ```text
+//! clients ──TCP──> accept loop ──> per-connection reader threads
+//!                                      │  validate + try_submit
+//!                                      v            (Full -> BUSY)
+//!                          [ Service bounded queue ] <── pull ── workers
+//!                                      │ WorkerEvent
+//!                                      v
+//!                                router thread ──> per-connection
+//!                                (match by id)      writer threads
+//! ```
+//!
+//! Design rules:
+//!
+//! * **Shed, never hang.** Admission is [`ServiceHandle::try_submit`];
+//!   a full queue maps to a `BUSY` error response immediately. A
+//!   connection beyond the cap gets one `BUSY` frame and a close.
+//! * **Pipelined.** A connection may have any number of requests in
+//!   flight; responses carry the request id and may arrive out of
+//!   order (different workers finish at different times).
+//! * **Per-request failure.** Malformed bodies get `BAD_REQUEST` on
+//!   that request only; framing damage (bad magic, oversized length)
+//!   poisons the stream and drops the connection — both without
+//!   touching the worker pool.
+//! * **Drain then stop.** Shutdown (wire `Shutdown` message or
+//!   [`Gateway::stop_handle`]) stops admission, waits for in-flight
+//!   requests to finish (bounded by `drain_timeout`), then shuts the
+//!   service down and force-closes lingering connections.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{FramePayload, Service, ServiceConfig,
+                         ServiceHandle, ServingReport, Stats,
+                         SubmitError, WorkerConfig, WorkerEvent};
+
+use super::protocol::{net_code, read_frame, write_frame, ErrorCode,
+                      RequestBody, ResponseBody, WirePayload,
+                      WireRequest, WireResponse, CONN_ERR_ID,
+                      KIND_REQUEST};
+
+/// Gateway-level knobs.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Bind address; port 0 picks an ephemeral port (read it back via
+    /// [`Gateway::local_addr`]).
+    pub addr: String,
+    /// Max simultaneously served connections; one beyond the cap gets
+    /// a `BUSY` error frame and an immediate close.
+    pub max_conns: usize,
+    /// How long shutdown waits for in-flight requests before failing
+    /// them with `SHUTTING_DOWN`.
+    pub drain_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 64,
+            drain_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Monotonic gateway counters (all atomics — readable from any
+/// thread, rendered by the `metrics` request).
+#[derive(Default)]
+struct Counters {
+    conns_accepted: AtomicU64,
+    conns_active: AtomicU64,
+    conns_rejected: AtomicU64,
+    requests: AtomicU64,
+    served: AtomicU64,
+    busy: AtomicU64,
+    bad_request: AtomicU64,
+    shutting_down: AtomicU64,
+    internal: AtomicU64,
+}
+
+/// Point-in-time copy of the gateway counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub conns_accepted: u64,
+    pub conns_active: u64,
+    pub conns_rejected: u64,
+    /// Infer requests received (valid or not).
+    pub requests: u64,
+    /// Infer requests answered with a successful prediction.
+    pub served: u64,
+    /// Requests shed with `BUSY` (queue full).
+    pub busy: u64,
+    pub bad_request: u64,
+    pub shutting_down: u64,
+    /// Requests failed because a worker died holding them.
+    pub internal: u64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> CounterSnapshot {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        CounterSnapshot {
+            conns_accepted: ld(&self.conns_accepted),
+            conns_active: ld(&self.conns_active),
+            conns_rejected: ld(&self.conns_rejected),
+            requests: ld(&self.requests),
+            served: ld(&self.served),
+            busy: ld(&self.busy),
+            bad_request: ld(&self.bad_request),
+            shutting_down: ld(&self.shutting_down),
+            internal: ld(&self.internal),
+        }
+    }
+}
+
+/// Final gateway summary returned by [`Gateway::wait`].
+#[derive(Debug, Clone)]
+pub struct GatewayReport {
+    /// The coordinator-level serving view (latency percentiles from
+    /// the bounded histogram, balance, sim FPS/energy).
+    pub serving: ServingReport,
+    pub counters: CounterSnapshot,
+}
+
+struct PendingEntry {
+    tx: mpsc::Sender<WireResponse>,
+    client_id: u64,
+}
+
+/// State shared by the accept loop, router, and connection threads.
+struct Shared {
+    handle: ServiceHandle,
+    /// internal id -> who to answer. Inserted *before* submit so a
+    /// response can never race past its route.
+    pending: Mutex<HashMap<u64, PendingEntry>>,
+    stats: Mutex<Stats>,
+    failures: Mutex<Vec<String>>,
+    counters: Counters,
+    next_id: AtomicU64,
+    conn_seq: AtomicU64,
+    /// Drain trigger: stops admission and the accept loop.
+    stop: AtomicBool,
+    /// One socket clone per *live* connection (removed on connection
+    /// exit — bounded), for force-closing lingering connections at
+    /// shutdown (readers blocked in `read` otherwise never exit).
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    started: Instant,
+    workers: usize,
+}
+
+/// Remote-controllable drain trigger (cheap clone).
+#[derive(Clone)]
+pub struct GatewayStop(Arc<Shared>);
+
+impl GatewayStop {
+    /// Begin drain-then-shutdown, exactly like a wire `Shutdown`
+    /// message.
+    pub fn trigger(&self) {
+        self.0.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// A running gateway: a bound listener, its accept loop, the response
+/// router, and the owned [`Service`].
+pub struct Gateway {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    service: Service,
+    accept: thread::JoinHandle<()>,
+    router: thread::JoinHandle<()>,
+    drain_timeout: Duration,
+}
+
+impl Gateway {
+    /// Start the service, bind, and begin accepting. Artifact problems
+    /// fail here (inside `Service::start`), before the port opens.
+    pub fn start(gcfg: GatewayConfig, scfg: ServiceConfig,
+                 wcfg: WorkerConfig) -> Result<Self> {
+        let mut service = Service::start(scfg, wcfg)?;
+        let events = service.take_events()?;
+        let handle = service.handle();
+        let workers = service.worker_count();
+        let listener = TcpListener::bind(&gcfg.addr)
+            .with_context(|| format!("binding {}", gcfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            handle,
+            pending: Mutex::new(HashMap::new()),
+            stats: Mutex::new(Stats::default()),
+            failures: Mutex::new(Vec::new()),
+            counters: Counters::default(),
+            next_id: AtomicU64::new(1),
+            conn_seq: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            started: Instant::now(),
+            workers,
+        });
+
+        let router = {
+            let shared = shared.clone();
+            thread::Builder::new()
+                .name("skydiver-router".into())
+                .spawn(move || router_loop(events, shared))?
+        };
+        let accept = {
+            let shared = shared.clone();
+            let max_conns = gcfg.max_conns.max(1);
+            thread::Builder::new()
+                .name("skydiver-accept".into())
+                .spawn(move || {
+                    accept_loop(listener, shared, max_conns)
+                })?
+        };
+
+        Ok(Self {
+            addr,
+            shared,
+            service,
+            accept,
+            router,
+            drain_timeout: gcfg.drain_timeout,
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A handle that can trigger drain-then-shutdown from any thread.
+    pub fn stop_handle(&self) -> GatewayStop {
+        GatewayStop(self.shared.clone())
+    }
+
+    /// Live counter snapshot (tests / banners).
+    pub fn counters(&self) -> CounterSnapshot {
+        self.shared.counters.snapshot()
+    }
+
+    /// Block until shutdown is triggered (wire message or
+    /// [`Self::stop_handle`]), then drain and tear down.
+    pub fn wait(self) -> Result<GatewayReport> {
+        while !self.shared.stop.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(25));
+        }
+        self.finish()
+    }
+
+    /// Trigger shutdown and tear down immediately (still drains).
+    pub fn stop_and_wait(self) -> Result<GatewayReport> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.finish()
+    }
+
+    fn finish(self) -> Result<GatewayReport> {
+        let Gateway {
+            shared,
+            service,
+            accept,
+            router,
+            drain_timeout,
+            ..
+        } = self;
+        // Accept loop polls the stop flag; joining is bounded.
+        let _ = accept.join();
+        // Drain: in-flight requests finish as workers catch up (new
+        // admissions are already refused with SHUTTING_DOWN).
+        let deadline = Instant::now() + drain_timeout;
+        while Instant::now() < deadline {
+            if shared.pending.lock().unwrap().is_empty() {
+                break;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        // Whatever outlived the drain window is failed, not stranded.
+        {
+            let mut pending = shared.pending.lock().unwrap();
+            for (_, p) in pending.drain() {
+                shared.counters.shutting_down
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(err_resp(
+                    p.client_id, ErrorCode::ShuttingDown,
+                    "gateway drain timeout"));
+            }
+        }
+        // Close the queue and join workers; their event senders drop,
+        // which ends the router.
+        let service_result = service.shutdown();
+        let _ = router.join();
+        // Force-close lingering connections so blocked readers exit
+        // (connection threads are detached; wait for the active count
+        // to hit zero, bounded).
+        for (_, s) in shared.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let conn_deadline = Instant::now() + Duration::from_secs(5);
+        while shared.counters.conns_active.load(Ordering::SeqCst) > 0
+            && Instant::now() < conn_deadline
+        {
+            thread::sleep(Duration::from_millis(5));
+        }
+
+        let mut serving = shared.stats.lock().unwrap().report(
+            shared.started.elapsed().as_secs_f64(), crate::CLOCK_HZ,
+            shared.workers);
+        let q = shared.handle.queue_stats();
+        serving.queue_capacity = q.capacity;
+        serving.queue_max_depth = q.max_depth;
+        serving.worker_failures =
+            shared.failures.lock().unwrap().clone();
+        let counters = shared.counters.snapshot();
+        service_result?;
+        Ok(GatewayReport { serving, counters })
+    }
+}
+
+fn err_resp(id: u64, code: ErrorCode, detail: &str) -> WireResponse {
+    WireResponse {
+        id,
+        body: ResponseBody::Error { code, detail: detail.to_string() },
+    }
+}
+
+// --------------------------------------------------------- accept loop
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>,
+               max_conns: usize) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.counters.conns_accepted
+                    .fetch_add(1, Ordering::Relaxed);
+                let active = shared.counters.conns_active
+                    .load(Ordering::SeqCst);
+                if active >= max_conns as u64 {
+                    shared.counters.conns_rejected
+                        .fetch_add(1, Ordering::Relaxed);
+                    shed_connection(stream);
+                    continue;
+                }
+                shared.counters.conns_active
+                    .fetch_add(1, Ordering::SeqCst);
+                let conn_id =
+                    shared.conn_seq.fetch_add(1, Ordering::Relaxed);
+                let sh = shared.clone();
+                // Detached: lifetime is bounded by the socket, which
+                // `finish` force-closes; `conns_active` is the join.
+                let spawned = thread::Builder::new()
+                    .name("skydiver-conn".into())
+                    .spawn(move || {
+                        handle_conn(stream, conn_id, &sh);
+                        sh.conns.lock().unwrap().remove(&conn_id);
+                        sh.counters.conns_active
+                            .fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    shared.counters.conns_active
+                        .fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(15));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(15)),
+        }
+    }
+}
+
+/// Over-cap connection: one typed `BUSY` frame, then close — the
+/// client learns *why* instead of seeing a bare RST.
+fn shed_connection(mut stream: TcpStream) {
+    let resp = err_resp(CONN_ERR_ID, ErrorCode::Busy,
+                        "connection cap reached; retry later");
+    let _ = stream.write_all(&resp.encode());
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+// --------------------------------------------------------- connections
+
+fn handle_conn(stream: TcpStream, conn_id: u64, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let ctl = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    shared.conns.lock().unwrap().insert(conn_id, ctl);
+    let (tx, rx) = mpsc::channel::<WireResponse>();
+    let writer = match thread::Builder::new()
+        .name("skydiver-conn-writer".into())
+        .spawn(move || writer_loop(stream, rx))
+    {
+        Ok(h) => h,
+        Err(_) => return,
+    };
+    read_loop(reader_stream, shared, &tx);
+    drop(tx);
+    let _ = writer.join();
+    // The registry clone keeps the fd alive until removed by our
+    // caller; shut the TCP stream down explicitly so the peer sees
+    // FIN now.
+    if let Some(s) = shared.conns.lock().unwrap().get(&conn_id) {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+/// Serialize responses onto the socket. Responses from the router and
+/// from the reader (errors, metrics) interleave through one channel,
+/// so frames never interleave mid-frame. Batches writes: flush only
+/// when the channel momentarily empties.
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<WireResponse>) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(resp) = rx.recv() {
+        if write_frame(&mut w, &resp.encode()).is_err() {
+            return;
+        }
+        while let Ok(next) = rx.try_recv() {
+            if write_frame(&mut w, &next.encode()).is_err() {
+                return;
+            }
+        }
+        if w.flush().is_err() {
+            return;
+        }
+    }
+}
+
+fn read_loop(stream: TcpStream, shared: &Arc<Shared>,
+             tx: &mpsc::Sender<WireResponse>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let body = match read_frame(&mut r, KIND_REQUEST) {
+            Ok(Some(body)) => body,
+            // Clean close between frames.
+            Ok(None) => return,
+            Err(e) => {
+                // Framing damage: the stream is desynced. Answer once
+                // (best effort) so the peer learns why, then drop.
+                shared.counters.bad_request
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(err_resp(
+                    CONN_ERR_ID, ErrorCode::BadRequest, &e.to_string()));
+                return;
+            }
+        };
+        let req = match WireRequest::decode_body(&body) {
+            Ok(req) => req,
+            Err(e) => {
+                // The frame boundary held: reject this request, keep
+                // the connection. The request id may not have parsed,
+                // so answer on the reserved connection-error id.
+                shared.counters.bad_request
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(err_resp(
+                    CONN_ERR_ID, ErrorCode::BadRequest, &e.to_string()));
+                continue;
+            }
+        };
+        match req.body {
+            RequestBody::Infer { net, payload } => {
+                handle_infer(shared, tx, req.id, net, payload);
+            }
+            RequestBody::Metrics => {
+                let text = render_metrics(shared);
+                let _ = tx.send(WireResponse {
+                    id: req.id,
+                    body: ResponseBody::Metrics { text },
+                });
+            }
+            RequestBody::Info => {
+                let s = shared.handle.spec();
+                let _ = tx.send(WireResponse {
+                    id: req.id,
+                    body: ResponseBody::Info {
+                        net: net_code(s.kind),
+                        c: s.c as u32,
+                        h: s.h as u32,
+                        w: s.w as u32,
+                        timesteps: s.timesteps as u32,
+                    },
+                });
+            }
+            RequestBody::Shutdown => {
+                let _ = tx.send(WireResponse {
+                    id: req.id,
+                    body: ResponseBody::ShutdownAck,
+                });
+                shared.stop.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<WireResponse>,
+                client_id: u64, net: u8, payload: WirePayload) {
+    shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+    if shared.stop.load(Ordering::SeqCst) {
+        shared.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(err_resp(client_id, ErrorCode::ShuttingDown,
+                                 "gateway is draining"));
+        return;
+    }
+    let spec = shared.handle.spec();
+    if net != net_code(spec.kind) {
+        shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(err_resp(
+            client_id, ErrorCode::BadRequest,
+            &format!("server runs net {:?}, request asked for code {net}",
+                     spec.kind)));
+        return;
+    }
+    let payload = match payload {
+        WirePayload::Pixels(px) => FramePayload::Pixels(px),
+        WirePayload::Spikes { timesteps, words } => {
+            FramePayload::Spikes { timesteps: timesteps as usize, words }
+        }
+    };
+    // Validate against the frame contract *here*: a malformed request
+    // costs one response, never a worker.
+    if let Err(detail) = spec.validate(&payload) {
+        shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(err_resp(client_id, ErrorCode::BadRequest,
+                                 &detail));
+        return;
+    }
+    let internal = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    shared.pending.lock().unwrap().insert(internal, PendingEntry {
+        tx: tx.clone(),
+        client_id,
+    });
+    match shared.handle.try_submit(internal, payload) {
+        Ok(()) => {}
+        Err(e) => {
+            shared.pending.lock().unwrap().remove(&internal);
+            let code = match e {
+                SubmitError::Full { .. } => {
+                    shared.counters.busy.fetch_add(1, Ordering::Relaxed);
+                    ErrorCode::Busy
+                }
+                SubmitError::Closed | SubmitError::NoWorkers => {
+                    shared.counters.shutting_down
+                        .fetch_add(1, Ordering::Relaxed);
+                    ErrorCode::ShuttingDown
+                }
+            };
+            let _ = tx.send(err_resp(client_id, code, &e.to_string()));
+        }
+    }
+}
+
+// -------------------------------------------------------------- router
+
+/// Owns the worker event stream: matches responses back to their
+/// connection by internal id, folds serving stats, and fails exactly
+/// the requests a dying worker had in hand.
+fn router_loop(events: mpsc::Receiver<WorkerEvent>,
+               shared: Arc<Shared>) {
+    while let Ok(ev) = events.recv() {
+        match ev {
+            WorkerEvent::Served(r) => {
+                shared.stats.lock().unwrap().record(&r);
+                shared.counters.served.fetch_add(1, Ordering::Relaxed);
+                let entry = shared.pending.lock().unwrap().remove(&r.id);
+                if let Some(p) = entry {
+                    let prediction = r.output_counts.iter().enumerate()
+                        .max_by_key(|&(_, c)| *c)
+                        .map(|(i, _)| i as u32)
+                        .unwrap_or(0);
+                    let _ = p.tx.send(WireResponse {
+                        id: p.client_id,
+                        body: ResponseBody::Infer {
+                            prediction,
+                            output_counts: r.output_counts,
+                            latency_us: r.latency_us,
+                            worker: r.worker as u32,
+                        },
+                    });
+                }
+            }
+            WorkerEvent::Failed { worker, error, lost } => {
+                shared.failures.lock().unwrap()
+                    .push(format!("worker {worker}: {error}"));
+                fail_ids(&shared, &lost, ErrorCode::Internal, &error);
+            }
+            WorkerEvent::Undeliverable { lost } => {
+                fail_ids(&shared, &lost, ErrorCode::ShuttingDown,
+                         "no live workers");
+            }
+        }
+    }
+    // Event stream disconnected: every worker (and the dispatcher) is
+    // gone, so nothing still in `pending` can ever be answered — a
+    // request sitting in the queue when the last worker died produced
+    // no Failed/Undeliverable event naming it. Fail the remainder and
+    // trigger drain-shutdown: a gateway with no workers must die
+    // loudly, not hold clients on recv forever.
+    {
+        let mut pending = shared.pending.lock().unwrap();
+        for (_, p) in pending.drain() {
+            shared.counters.internal.fetch_add(1, Ordering::Relaxed);
+            let _ = p.tx.send(err_resp(
+                p.client_id, ErrorCode::Internal,
+                "all workers exited"));
+        }
+    }
+    shared.stop.store(true, Ordering::SeqCst);
+}
+
+fn fail_ids(shared: &Shared, ids: &[u64], code: ErrorCode,
+            detail: &str) {
+    let counter = match code {
+        ErrorCode::ShuttingDown => &shared.counters.shutting_down,
+        ErrorCode::Busy => &shared.counters.busy,
+        ErrorCode::BadRequest => &shared.counters.bad_request,
+        ErrorCode::Internal => &shared.counters.internal,
+    };
+    let mut pending = shared.pending.lock().unwrap();
+    for id in ids {
+        if let Some(p) = pending.remove(id) {
+            counter.fetch_add(1, Ordering::Relaxed);
+            let _ = p.tx.send(err_resp(p.client_id, code, detail));
+        }
+    }
+}
+
+// ------------------------------------------------------------- metrics
+
+fn push_metric(out: &mut String, name: &str, kind: &str, v: f64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Prometheus-style plaintext exposition of the gateway counters, the
+/// queue, and the serving report (the wire `metrics` request).
+fn render_metrics(shared: &Shared) -> String {
+    use std::fmt::Write as _;
+    let c = shared.counters.snapshot();
+    let q = shared.handle.queue_stats();
+    let rep = shared.stats.lock().unwrap().report(
+        shared.started.elapsed().as_secs_f64(), crate::CLOCK_HZ,
+        shared.workers);
+    let mut out = String::with_capacity(2048);
+    push_metric(&mut out, "skydiver_connections_accepted_total",
+                "counter", c.conns_accepted as f64);
+    push_metric(&mut out, "skydiver_connections_rejected_total",
+                "counter", c.conns_rejected as f64);
+    push_metric(&mut out, "skydiver_connections_active", "gauge",
+                c.conns_active as f64);
+    push_metric(&mut out, "skydiver_requests_total", "counter",
+                c.requests as f64);
+    push_metric(&mut out, "skydiver_served_total", "counter",
+                c.served as f64);
+    push_metric(&mut out, "skydiver_busy_total", "counter",
+                c.busy as f64);
+    push_metric(&mut out, "skydiver_bad_request_total", "counter",
+                c.bad_request as f64);
+    push_metric(&mut out, "skydiver_shutting_down_total", "counter",
+                c.shutting_down as f64);
+    push_metric(&mut out, "skydiver_internal_error_total", "counter",
+                c.internal as f64);
+    push_metric(&mut out, "skydiver_queue_depth", "gauge",
+                q.depth as f64);
+    push_metric(&mut out, "skydiver_queue_capacity", "gauge",
+                q.capacity as f64);
+    push_metric(&mut out, "skydiver_queue_max_depth", "gauge",
+                q.max_depth as f64);
+    push_metric(&mut out, "skydiver_queue_pushed_total", "counter",
+                q.pushed as f64);
+    push_metric(&mut out, "skydiver_queue_popped_total", "counter",
+                q.popped as f64);
+    push_metric(&mut out, "skydiver_frames_served_total", "counter",
+                rep.frames as f64);
+    push_metric(&mut out, "skydiver_served_fps", "gauge",
+                rep.served_fps);
+    push_metric(&mut out, "skydiver_host_balance_ratio", "gauge",
+                rep.host_balance_ratio);
+    push_metric(&mut out, "skydiver_sim_fps", "gauge", rep.sim_fps);
+    push_metric(&mut out, "skydiver_sim_energy_uj_mean", "gauge",
+                rep.mean_energy_uj);
+    let _ = writeln!(out, "# TYPE skydiver_latency_us summary");
+    for (quant, v) in [("0.5", rep.p50_us), ("0.95", rep.p95_us),
+                       ("0.99", rep.p99_us)] {
+        let _ = writeln!(
+            out, "skydiver_latency_us{{quantile=\"{quant}\"}} {v}");
+    }
+    let _ = writeln!(out, "# TYPE skydiver_worker_frames_total counter");
+    for (i, n) in rep.per_worker.iter().enumerate() {
+        let _ = writeln!(
+            out, "skydiver_worker_frames_total{{worker=\"{i}\"}} {n}");
+    }
+    out
+}

@@ -18,36 +18,12 @@ const SIDE: usize = 32; // synthetic net input is 1 x SIDE x SIDE
 const TIMESTEPS: usize = 20;
 
 /// Write `classifier_aprc.weights.{bin,json}` for a tiny single-conv
-/// net into a fresh temp dir and return the dir.
+/// net into a fresh temp dir and return the dir (shared helper:
+/// `data::write_synthetic_classifier`, also behind `skydiver synth`).
 fn write_tiny_artifacts(label: &str) -> PathBuf {
     let dir = std::env::temp_dir()
         .join(format!("skydiver-serving-{label}-{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    let name = "classifier_aprc";
-    // 8 filters of 1x3x3, magnitudes varied so CBWS has work to do.
-    let floats: Vec<f32> = (0..8 * 9)
-        .map(|i| 0.04 + 0.012 * ((i % 9) as f32) + 0.01 * ((i / 9) as f32))
-        .collect();
-    let bytes: Vec<u8> =
-        floats.iter().flat_map(|f| f.to_le_bytes()).collect();
-    let hash = format!("{:016x}", skydiver::data::fnv1a64(&bytes));
-    let eh = SIDE + 2 * 2 - 3 + 1; // pad 2, r 3
-    let json = format!(
-        r#"{{
-  "name": "{name}", "aprc": true, "pad": 2, "vth": 0.5,
-  "timesteps": 6, "in_shape": [1, {SIDE}, {SIDE}],
-  "feature_sizes": [[8, {eh}, {eh}]], "dense_out": null,
-  "total_floats": 72, "lambdas": [],
-  "layers": [
-    {{"kind": "conv", "shape": [8, 1, 3, 3], "offset": 0,
-      "layer": 0, "pad": 2}}
-  ],
-  "blob_fnv1a64": "{hash}"
-}}"#);
-    std::fs::write(dir.join(format!("{name}.weights.json")), json)
-        .unwrap();
-    std::fs::write(dir.join(format!("{name}.weights.bin")), bytes)
-        .unwrap();
+    skydiver::data::write_synthetic_classifier(&dir, SIDE).unwrap();
     dir
 }
 
