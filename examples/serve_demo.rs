@@ -10,7 +10,11 @@
 //!
 //! With `tcp` as an argument, the same frames travel over a loopback
 //! TCP gateway instead (wire protocol + admission control + router),
-//! ending with a Prometheus metrics scrape and a graceful drain.
+//! ending with a Prometheus metrics scrape and a graceful drain. The
+//! gateway is registry-backed: when segmenter artifacts are present
+//! next to the classifier's, both nets are mounted behind the one
+//! port and the demo addresses the classifier *by model name*
+//! (protocol v2), the way a multi-model client would.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo [frames] [workers] [tcp]
@@ -19,27 +23,50 @@
 use std::time::Duration;
 
 use anyhow::Result;
-use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
-                            SubmitError, WorkerConfig};
+use skydiver::coordinator::{DispatchMode, ModelRegistry, ModelSpec,
+                            Policy, Service, ServiceConfig, SubmitError,
+                            WorkerConfig};
 use skydiver::power::EnergyModel;
-use skydiver::server::protocol::net_code;
+use skydiver::server::protocol::NET_ANY;
 use skydiver::server::{Client, Gateway, GatewayConfig, RequestBody,
                        ResponseBody, WirePayload, WireRequest};
 use skydiver::sim::ArchConfig;
-use skydiver::snn::NetKind;
+use skydiver::snn::{NetKind, NetworkWeights};
 
 /// Stream the digit frames through a loopback TCP gateway with
-/// window-8 pipelining, then scrape metrics and drain.
+/// window-8 pipelining — addressed to the `classifier` model by name —
+/// then scrape metrics and drain.
 fn serve_over_tcp(frames: usize, wcfg: WorkerConfig,
                   scfg: ServiceConfig) -> Result<()> {
-    let gw = Gateway::start(GatewayConfig::default(), scfg, wcfg)?;
+    // Registry: always the classifier; the segmenter rides along when
+    // its artifacts exist (multi-model serving from one process).
+    let mut specs = vec![ModelSpec {
+        name: NetKind::Classifier.as_str().to_string(),
+        scfg: scfg.clone(),
+        wcfg: wcfg.clone(),
+    }];
+    let seg_wcfg = WorkerConfig { kind: NetKind::Segmenter, ..wcfg };
+    if NetworkWeights::load(&seg_wcfg.artifacts,
+                            seg_wcfg.variant_name()).is_ok() {
+        specs.push(ModelSpec {
+            name: NetKind::Segmenter.as_str().to_string(),
+            scfg,
+            wcfg: seg_wcfg,
+        });
+    }
+    let registry = ModelRegistry::start(specs)?;
+    let gw = Gateway::start(GatewayConfig::default(), registry)?;
     let addr = gw.local_addr().to_string();
-    println!("gateway on {addr}; streaming {frames} digit frames \
-              over TCP...");
+    println!("gateway on {addr} (models: {:?}); streaming {frames} \
+              digit frames over TCP...", gw.model_names());
     let (imgs, labels) = skydiver::data::gen_digits(0x5E12E, frames);
     let pixel_frames: Vec<Vec<u8>> =
         imgs.chunks(28 * 28).map(|c| c.to_vec()).collect();
     let mut client = Client::connect(&addr)?;
+    let info = client.info_model("classifier")?;
+    println!("classifier contract: {}x{}x{}, {} timesteps ({} model(s) \
+              mounted)", info.c, info.h, info.w, info.timesteps,
+             info.nmodels);
     let (mut next, mut inflight, mut done, mut correct) =
         (0usize, 0usize, 0usize, 0usize);
     while done < pixel_frames.len() {
@@ -47,7 +74,8 @@ fn serve_over_tcp(frames: usize, wcfg: WorkerConfig,
             client.send(&WireRequest {
                 id: next as u64,
                 body: RequestBody::Infer {
-                    net: net_code(NetKind::Classifier),
+                    net: NET_ANY,
+                    model: "classifier".to_string(),
                     payload: WirePayload::Pixels(
                         pixel_frames[next].clone()),
                 },
@@ -70,11 +98,13 @@ fn serve_over_tcp(frames: usize, wcfg: WorkerConfig,
     client.shutdown_server()?;
     drop(client);
     let report = gw.wait()?;
-    println!("server-side      : fps {:.1}, p50/p95 {}/{} us, \
-              balance {:.1}%",
-             report.serving.served_fps, report.serving.p50_us,
-             report.serving.p95_us,
-             100.0 * report.serving.host_balance_ratio);
+    for m in &report.models {
+        println!("model '{}'      : fps {:.1}, p50/p95 {}/{} us, \
+                  balance {:.1}%",
+                 m.name, m.serving.served_fps, m.serving.p50_us,
+                 m.serving.p95_us,
+                 100.0 * m.serving.host_balance_ratio);
+    }
     Ok(())
 }
 

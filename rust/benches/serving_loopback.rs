@@ -4,7 +4,7 @@
 //! the simulator. Fully hermetic (synthetic artifacts; no
 //! `make artifacts`).
 //!
-//! Emits two rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! Emits four rows into `BENCH_serving.json` (`skydiver-bench-v1`
 //! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
 //!
 //! * `serving_loopback_rtt` — single-connection, window-1 round-trip
@@ -12,33 +12,33 @@
 //! * `serving_loopback_e2e` — 4 connections x window 8 pipelined
 //!   throughput; `frames_per_sec` is the measured end-to-end FPS and
 //!   mean/p50/p95/p99 are client-side per-request latencies.
+//! * `serving_mixed_classifier` / `serving_mixed_segmenter` — the
+//!   multi-model scenario: one registry-backed gateway mounts both
+//!   synthetic nets, and two loadgen runs drive them concurrently
+//!   (interleaved mixed traffic at the gateway), one row per model.
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::thread;
 use std::time::Duration;
 
 use harness::{bench, BenchResult};
-use skydiver::coordinator::{DispatchMode, Policy, ServiceConfig,
-                            WorkerConfig};
+use skydiver::coordinator::{DispatchMode, ModelRegistry, ModelSpec,
+                            Policy, ServiceConfig, WorkerConfig};
 use skydiver::power::EnergyModel;
 use skydiver::server::{loadgen, Client, Gateway, GatewayConfig,
-                       LoadGenConfig};
+                       LoadGenConfig, LoadGenReport};
 use skydiver::sim::ArchConfig;
 use skydiver::snn::NetKind;
 
 const SIDE: usize = 32;
+const SEG_SIDE: usize = 16;
 
-fn main() {
-    let quick = harness::quick();
-    let dir = std::env::temp_dir()
-        .join(format!("skydiver-servbench-{}", std::process::id()));
-    skydiver::data::write_synthetic_classifier(&dir, SIDE)
-        .expect("synthetic artifacts");
-
-    let wcfg = WorkerConfig {
-        artifacts: dir.clone(),
-        kind: NetKind::Classifier,
+fn worker_cfg(dir: &std::path::Path, kind: NetKind) -> WorkerConfig {
+    WorkerConfig {
+        artifacts: dir.to_path_buf(),
+        kind,
         aprc: true,
         policy: Policy::Cbws,
         arch: ArchConfig::default(),
@@ -46,15 +46,53 @@ fn main() {
         use_runtime: false,
         timesteps: None,
         sweep_threads: 1,
-    };
-    let scfg = ServiceConfig {
+    }
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
         workers: 2,
         batch_max: 8,
         queue_cap: 256,
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
-    };
-    let gw = Gateway::start(GatewayConfig::default(), scfg, wcfg)
+    }
+}
+
+/// Turn one loadgen report into a tracked bench row: latencies are
+/// client-side per-request, `frames_per_sec` reproduces the measured
+/// end-to-end throughput (see the e2e row note below).
+fn loadgen_row(name: &str, rep: &LoadGenReport, allocs: f64)
+               -> BenchResult {
+    let mean = Duration::from_nanos((rep.mean_us * 1000.0) as u64)
+        .max(Duration::from_nanos(1));
+    BenchResult {
+        name: name.into(),
+        iters: rep.ok as usize,
+        mean,
+        p50: Duration::from_micros(rep.p50_us),
+        p95: Duration::from_micros(rep.p95_us),
+        p99: Duration::from_micros(rep.p99_us),
+        allocs_per_iter: allocs,
+        // per_sec() = items_per_iter / mean — pick items so this row's
+        // frames_per_sec equals the measured end-to-end throughput
+        // (mean latency alone would understate pipelined FPS).
+        items_per_iter: rep.fps * mean.as_secs_f64(),
+    }
+}
+
+fn main() {
+    let quick = harness::quick();
+    let dir = std::env::temp_dir()
+        .join(format!("skydiver-servbench-{}", std::process::id()));
+    skydiver::data::write_synthetic_classifier(&dir, SIDE)
+        .expect("synthetic classifier artifacts");
+    skydiver::data::write_synthetic_segmenter(&dir, SEG_SIDE)
+        .expect("synthetic segmenter artifacts");
+
+    let gw = Gateway::start_single(
+        GatewayConfig::default(), service_cfg(),
+        worker_cfg(&dir, NetKind::Classifier))
         .expect("gateway start");
     let addr = gw.local_addr().to_string();
 
@@ -69,8 +107,7 @@ fn main() {
     let mut id = 0u64;
     let rtt = bench("serving_loopback_rtt", warm, iters, || {
         id += 1;
-        client.infer_pixels(id, NetKind::Classifier, pixels.clone())
-            .expect("infer")
+        client.infer_pixels(id, "", pixels.clone()).expect("infer")
     });
     drop(client);
 
@@ -79,6 +116,7 @@ fn main() {
     let frames = if quick { 200 } else { 2000 };
     let cfg = LoadGenConfig {
         addr: addr.clone(),
+        model: String::new(),
         conns: 4,
         frames,
         window: 8,
@@ -92,21 +130,7 @@ fn main() {
         (harness::alloc_count() - a0) as f64 / rep.ok.max(1) as f64;
     assert_eq!(rep.errors, 0, "loadgen frames failed");
     assert_eq!(rep.ok as usize, frames, "not all frames served");
-    let mean = Duration::from_nanos((rep.mean_us * 1000.0) as u64)
-        .max(Duration::from_nanos(1));
-    let e2e = BenchResult {
-        name: "serving_loopback_e2e".into(),
-        iters: rep.ok as usize,
-        mean,
-        p50: Duration::from_micros(rep.p50_us),
-        p95: Duration::from_micros(rep.p95_us),
-        p99: Duration::from_micros(rep.p99_us),
-        allocs_per_iter: allocs,
-        // per_sec() = items_per_iter / mean — pick items so this row's
-        // frames_per_sec equals the measured end-to-end throughput
-        // (mean latency alone would understate pipelined FPS).
-        items_per_iter: rep.fps * mean.as_secs_f64(),
-    };
+    let e2e = loadgen_row("serving_loopback_e2e", &rep, allocs);
     e2e.print();
     println!("loadgen: ok={} busy={} errors={} fps={:.1}",
              rep.ok, rep.busy, rep.errors, rep.fps);
@@ -117,9 +141,73 @@ fn main() {
     let report = gw.wait().expect("gateway wait");
     println!("server: served={} busy={} p50={}us balance={:.2}",
              report.counters.served, report.counters.busy,
-             report.serving.p50_us, report.serving.host_balance_ratio);
+             report.default_model().serving.p50_us,
+             report.default_model().serving.host_balance_ratio);
+
+    // 3. Mixed multi-model traffic: one registry-backed gateway mounts
+    // classifier + segmenter; two loadgen runs drive both models at
+    // the same time, so the gateway interleaves genuinely different
+    // workloads. One additive row per model.
+    let registry = ModelRegistry::start(vec![
+        ModelSpec {
+            name: "classifier".into(),
+            scfg: service_cfg(),
+            wcfg: worker_cfg(&dir, NetKind::Classifier),
+        },
+        ModelSpec {
+            name: "segmenter".into(),
+            scfg: service_cfg(),
+            wcfg: worker_cfg(&dir, NetKind::Segmenter),
+        },
+    ]).expect("registry start");
+    let gw2 = Gateway::start(GatewayConfig::default(), registry)
+        .expect("mixed gateway start");
+    let addr2 = gw2.local_addr().to_string();
+    let mixed_frames = if quick { 100 } else { 1000 };
+    let mk_cfg = |model: &str, seed: u64| LoadGenConfig {
+        addr: addr2.clone(),
+        model: model.into(),
+        conns: 2,
+        frames: mixed_frames,
+        window: 8,
+        spikes: false,
+        retry_busy: true,
+        seed,
+    };
+    let cls_cfg = mk_cfg("classifier", 0xC1A5);
+    let seg_cfg = mk_cfg("segmenter", 0x5E65);
+    let a1 = harness::alloc_count();
+    let (cls_rep, seg_rep) = thread::scope(|s| {
+        let ch = s.spawn(|| loadgen::run(&cls_cfg));
+        let sh = s.spawn(|| loadgen::run(&seg_cfg));
+        (ch.join().expect("classifier loadgen thread")
+             .expect("classifier loadgen"),
+         sh.join().expect("segmenter loadgen thread")
+             .expect("segmenter loadgen"))
+    });
+    // One process-wide allocation figure across both concurrent runs,
+    // attributed per served frame (the counter is global).
+    let mixed_allocs = (harness::alloc_count() - a1) as f64
+        / (cls_rep.ok + seg_rep.ok).max(1) as f64;
+    assert_eq!(cls_rep.errors + seg_rep.errors, 0,
+               "mixed loadgen frames failed");
+    let mixed_cls =
+        loadgen_row("serving_mixed_classifier", &cls_rep, mixed_allocs);
+    let mixed_seg =
+        loadgen_row("serving_mixed_segmenter", &seg_rep, mixed_allocs);
+    mixed_cls.print();
+    mixed_seg.print();
+    println!("mixed: classifier fps={:.1} segmenter fps={:.1}",
+             cls_rep.fps, seg_rep.fps);
+    Client::connect(&addr2).expect("connect for mixed shutdown")
+        .shutdown_server().expect("mixed shutdown");
+    let report2 = gw2.wait().expect("mixed gateway wait");
+    for m in &report2.models {
+        println!("mixed model '{}': served={} busy={}",
+                 m.name, m.counters.served, m.counters.busy);
+    }
 
     let path = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".into());
-    harness::write_json_to(&path, &[rtt, e2e]);
+    harness::write_json_to(&path, &[rtt, e2e, mixed_cls, mixed_seg]);
 }

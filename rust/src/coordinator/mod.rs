@@ -50,13 +50,21 @@
 //! **Shutdown.** [`Service::shutdown`] closes the queue; workers drain
 //! what remains, exit, and are joined. The first worker error (build
 //! failure, serving failure, panic) is returned to the caller.
+//!
+//! **Multi-model.** [`ModelRegistry`] stacks N named services into one
+//! process (each with its own queue, pool and spec — per-model
+//! isolation of backpressure and failure); the network gateway routes
+//! wire model selectors to registry slots, with entry 0 as the default
+//! model legacy v1 clients land on.
 
 mod queue;
+mod registry;
 mod service;
 mod stats;
 pub mod worker;
 
 pub use queue::{BoundedQueue, QueueStats, SubmitError};
+pub use registry::{ModelEntry, ModelRegistry, ModelSpec, MAX_MODELS};
 pub use service::{DispatchMode, FrameSpec, Service, ServiceConfig,
                   ServiceHandle};
 pub use stats::{host_balance_ratio, LatencyHistogram, ServingReport,

@@ -1,0 +1,169 @@
+//! Model registry: N named models behind one process, each a complete
+//! [`Service`] (its own worker pool, bounded queue,
+//! [`FrameSpec`](super::service::FrameSpec) and per-model stats
+//! stream).
+//!
+//! The registry is the coordinator-side unlock for multi-model
+//! serving: the network gateway resolves a wire model selector to a
+//! registry slot and submits into *that* model's queue, so admission
+//! control, backpressure and worker failure stay isolated per model —
+//! an overloaded segmenter sheds segmenter traffic while the
+//! classifier keeps serving. Entry 0 is always the **default model**:
+//! the one v1 clients (no selector on the wire) and empty-selector v2
+//! requests route to.
+
+use anyhow::{bail, Result};
+
+use super::service::{Service, ServiceConfig};
+use super::worker::WorkerConfig;
+
+/// Everything needed to mount one named model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Registry name — what wire selectors and `--model` flags match.
+    /// Must be non-empty, unique within the registry, and at most
+    /// [`MAX_MODEL_NAME`](crate::server::protocol::MAX_MODEL_NAME)
+    /// bytes (the wire selector length cap).
+    pub name: String,
+    pub scfg: ServiceConfig,
+    pub wcfg: WorkerConfig,
+}
+
+/// One mounted model: its name and its running [`Service`].
+pub struct ModelEntry {
+    name: String,
+    service: Service,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+
+    /// Mutable service access (the gateway takes each model's worker
+    /// event stream through this).
+    pub fn service_mut(&mut self) -> &mut Service {
+        &mut self.service
+    }
+}
+
+/// An ordered set of named, running models. Index 0 is the default.
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+/// Wire `nmodels` is a u8, and a registry beyond this is operator
+/// error anyway.
+pub const MAX_MODELS: usize = u8::MAX as usize;
+
+impl ModelRegistry {
+    /// Start every model's service. The first spec becomes the default
+    /// model. Any artifact problem fails the whole registry here —
+    /// before a port opens — with already-started services shut down.
+    pub fn start(specs: Vec<ModelSpec>) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("model registry needs at least one model");
+        }
+        if specs.len() > MAX_MODELS {
+            bail!("model registry caps at {MAX_MODELS} models \
+                   (asked for {})", specs.len());
+        }
+        for (i, s) in specs.iter().enumerate() {
+            if s.name.is_empty() {
+                bail!("model {i} has an empty name (the empty selector \
+                       is reserved for default-model routing)");
+            }
+            if s.name.len() > crate::server::protocol::MAX_MODEL_NAME {
+                bail!("model name '{}' exceeds the wire selector cap \
+                       of {} bytes", s.name,
+                      crate::server::protocol::MAX_MODEL_NAME);
+            }
+            if specs[..i].iter().any(|p| p.name == s.name) {
+                bail!("duplicate model name '{}'", s.name);
+            }
+        }
+        let mut entries: Vec<ModelEntry> = Vec::with_capacity(specs.len());
+        for ModelSpec { name, scfg, wcfg } in specs {
+            match Service::start(scfg, wcfg) {
+                Ok(service) => {
+                    entries.push(ModelEntry { name, service });
+                }
+                Err(e) => {
+                    // Unwind the ones that already started; their
+                    // shutdown errors are secondary to the start error.
+                    for entry in entries {
+                        let _ = entry.service.shutdown();
+                    }
+                    return Err(e.context(format!(
+                        "starting model '{name}'")));
+                }
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// Single-model registry — the v1 serving topology as a trivial
+    /// registry, used by `Gateway::start_single` and the legacy tests.
+    pub fn single(name: &str, scfg: ServiceConfig, wcfg: WorkerConfig)
+                  -> Result<Self> {
+        Self::start(vec![ModelSpec { name: name.to_string(), scfg, wcfg }])
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Model names in registry order (index 0 = default).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// The default model's name (entry 0).
+    pub fn default_name(&self) -> &str {
+        &self.entries[0].name
+    }
+
+    /// Resolve a wire selector to a registry slot: the empty string is
+    /// the default model, anything else matches by exact name.
+    pub fn resolve(&self, selector: &str) -> Option<usize> {
+        if selector.is_empty() {
+            return Some(0);
+        }
+        self.entries.iter().position(|e| e.name == selector)
+    }
+
+    pub fn entry(&self, idx: usize) -> &ModelEntry {
+        &self.entries[idx]
+    }
+
+    pub fn entry_mut(&mut self, idx: usize) -> &mut ModelEntry {
+        &mut self.entries[idx]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.entries.iter()
+    }
+
+    /// Shut down every model's service; the first error wins but every
+    /// service is still joined.
+    pub fn shutdown(self) -> Result<()> {
+        let mut first_err: Option<anyhow::Error> = None;
+        for entry in self.entries {
+            if let Err(e) = entry.service.shutdown() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}

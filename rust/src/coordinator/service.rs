@@ -97,7 +97,7 @@ impl FrameSpec {
 
     /// Spike words per channel per timestep (the `SpikeMap` stride).
     pub fn words_per_channel(&self) -> usize {
-        (self.h * self.w + 63) / 64
+        (self.h * self.w).div_ceil(64)
     }
 
     /// Expected u64 word count of a pre-encoded spike payload.

@@ -90,6 +90,46 @@ pub fn write_synthetic_classifier(dir: &std::path::Path, side: usize)
     Ok(())
 }
 
+/// Write a tiny synthetic single-conv **segmenter**
+/// (`segmenter_aprc.weights.{json,bin}`) into `dir`: 4 filters of
+/// 3x3x3 with varied magnitudes, RGB input `3 x side x side`, full
+/// padding, 4 timesteps (cheaper per frame than the classifier so a
+/// mixed-traffic run exercises genuinely unequal workloads). The
+/// segmenter twin of [`write_synthetic_classifier`] — multi-model
+/// serve, tests, benches and CI smoke stay hermetic without
+/// `make artifacts`.
+pub fn write_synthetic_segmenter(dir: &std::path::Path, side: usize)
+                                 -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let name = "segmenter_aprc";
+    // 4 x 3 x 3 x 3 = 108 floats; vary within each filter and between
+    // filters so CBWS sees a skewed per-channel workload.
+    let floats: Vec<f32> = (0..4 * 27)
+        .map(|i| {
+            0.02 + 0.004 * ((i % 27) as f32) + 0.015 * ((i / 27) as f32)
+        })
+        .collect();
+    let bytes: Vec<u8> =
+        floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+    let hash = format!("{:016x}", fnv1a64(&bytes));
+    let eh = side + 2 * 2 - 3 + 1; // pad 2, r 3
+    let json = format!(
+        r#"{{
+  "name": "{name}", "aprc": true, "pad": 2, "vth": 0.5,
+  "timesteps": 4, "in_shape": [3, {side}, {side}],
+  "feature_sizes": [[4, {eh}, {eh}]], "dense_out": null,
+  "total_floats": 108, "lambdas": [],
+  "layers": [
+    {{"kind": "conv", "shape": [4, 3, 3, 3], "offset": 0,
+      "layer": 0, "pad": 2}}
+  ],
+  "blob_fnv1a64": "{hash}"
+}}"#);
+    std::fs::write(dir.join(format!("{name}.weights.json")), json)?;
+    std::fs::write(dir.join(format!("{name}.weights.bin")), bytes)?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

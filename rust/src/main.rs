@@ -4,19 +4,22 @@
 //! skydiver report                      # artifact inventory + metrics
 //! skydiver run --net classifier       # serve frames end-to-end
 //! skydiver serve --addr 127.0.0.1:0   # TCP gateway over the coordinator
-//! skydiver loadgen --addr HOST:PORT   # drive a gateway over the wire
+//! skydiver serve --model classifier --model segmenter   # multi-model
+//! skydiver loadgen --addr HOST:PORT --model segmenter   # drive one model
 //! skydiver trace --net segmenter      # one-frame per-layer trace
 //! skydiver experiment fig7            # regenerate a paper artifact
 //! skydiver experiment all
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
-use skydiver::coordinator::{DispatchMode, Policy, Service,
-                            ServiceConfig, ServingReport, WorkerConfig};
+use skydiver::coordinator::{DispatchMode, FrameSpec, ModelRegistry,
+                            ModelSpec, Policy, Service, ServiceConfig,
+                            ServingReport, WorkerConfig};
+use skydiver::data::SplitMix64;
 use skydiver::experiments::{self, ExperimentCtx};
 use skydiver::metrics::Table;
 use skydiver::power::EnergyModel;
@@ -33,21 +36,28 @@ USAGE:
 
 COMMANDS:
   report                           artifact inventory + eval metrics
-  run        [--net classifier|segmenter] [--plain] [--policy P]
-             [--frames N] [--workers N] [--golden]
-             [--dispatch queue|rr] [--queue-cap N] [--batch-max N]
-             [--sweep-threads N]   (frame-parallel width per worker)
-  serve      [--addr HOST:PORT] [--max-conns N] [--port-file PATH]
-             [--net ...] [--plain] [--policy P] [--golden]
-             [--workers N] [--dispatch queue|rr] [--queue-cap N]
+  run        [--net classifier|segmenter | --model NAME[=KIND]]
+             [--plain] [--policy P] [--frames N] [--workers N]
+             [--golden] [--dispatch queue|rr] [--queue-cap N]
              [--batch-max N] [--sweep-threads N]
+  serve      [--addr HOST:PORT] [--max-conns N] [--port-file PATH]
+             [--net ... | --model NAME[=KIND] (repeatable)]
+             [--plain] [--policy P] [--golden] [--workers N]
+             [--dispatch queue|rr] [--queue-cap N] [--batch-max N]
+             [--sweep-threads N]
              TCP gateway; --addr defaults to 127.0.0.1:7878, port 0
-             picks an ephemeral port (written to --port-file)
-  loadgen    --addr HOST:PORT [--conns N] [--frames N] [--window N]
-             [--spikes] [--no-retry] [--shutdown]
-             drive a gateway; --shutdown sends a drain request after
-  synth      [--out DIR] [--side N]
-             write synthetic classifier artifacts (serve/test without
+             picks an ephemeral port (written to --port-file).
+             Repeat --model to mount several models behind one port
+             (the first is the default model v1 clients route to),
+             e.g. --model classifier --model segmenter or
+             --model fast=classifier
+  loadgen    --addr HOST:PORT [--model NAME] [--conns N] [--frames N]
+             [--window N] [--spikes] [--no-retry] [--shutdown]
+             drive a gateway; --model targets a mounted model (default:
+             the server's default model); --shutdown sends a drain
+             request after
+  synth      [--out DIR] [--side N] [--net classifier|segmenter|both]
+             write synthetic artifacts (serve/test without
              `make artifacts`)
   trace      [--net classifier|segmenter] [--plain] [--policy P] [--golden]
   experiment <id> [--frames N] [--golden]
@@ -63,6 +73,7 @@ POLICIES: contiguous round_robin random sparten cbws (default cbws)
 const FLAG_SPECS: &[(&str, bool)] = &[
     ("artifacts", true),
     ("net", true),
+    ("model", true),
     ("policy", true),
     ("frames", true),
     ("workers", true),
@@ -122,7 +133,9 @@ fn suggest(name: &str) -> Option<&'static str> {
 
 /// Tiny strict flag parser: `--key value` and boolean `--key`.
 /// Unknown flags and missing values are errors (with a usage hint),
-/// never silently ignored.
+/// never silently ignored. Valued flags may repeat (`--model a
+/// --model b`); `get` returns the last occurrence, `get_all` all of
+/// them in order.
 struct Args {
     positional: Vec<String>,
     flags: Vec<(String, Option<String>)>,
@@ -173,6 +186,14 @@ impl Args {
             .and_then(|(_, v)| v.as_deref())
     }
 
+    /// Every occurrence of a repeatable valued flag, in order.
+    fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags.iter()
+            .filter(|(k, _)| k == name)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
     fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|(k, _)| k == name)
     }
@@ -187,16 +208,30 @@ impl Args {
 }
 
 fn parse_net(args: &Args) -> Result<NetKind> {
-    match args.get("net").unwrap_or("classifier") {
-        "classifier" => Ok(NetKind::Classifier),
-        "segmenter" => Ok(NetKind::Segmenter),
-        other => bail!("unknown --net {other}"),
-    }
+    let s = args.get("net").unwrap_or("classifier");
+    NetKind::parse(s)
+        .ok_or_else(|| anyhow!("unknown --net {s} \
+                                (classifier|segmenter)"))
 }
 
 fn parse_policy(args: &Args) -> Result<Policy> {
     let s = args.get("policy").unwrap_or("cbws");
     Policy::parse(s).ok_or_else(|| anyhow!("unknown policy {s}"))
+}
+
+/// A `--model` spec: `NAME` (a net kind, mounted under its own name)
+/// or `NAME=KIND` (a custom registry name over a net kind) — e.g.
+/// `segmenter`, `fast=classifier`.
+fn parse_model_spec(s: &str) -> Result<(String, NetKind)> {
+    let (name, kind_str) = match s.split_once('=') {
+        Some((n, k)) => (n, k),
+        None => (s, s),
+    };
+    ensure!(!name.is_empty(), "model spec '{s}' has an empty name");
+    let kind = NetKind::parse(kind_str).ok_or_else(|| anyhow!(
+        "model spec '{s}': unknown net kind '{kind_str}' \
+         (classifier|segmenter)"))?;
+    Ok((name.to_string(), kind))
 }
 
 fn main() -> Result<()> {
@@ -236,7 +271,7 @@ fn main() -> Result<()> {
     }
 }
 
-fn report(artifacts: &PathBuf) -> Result<()> {
+fn report(artifacts: &Path) -> Result<()> {
     let mut t = Table::new(
         format!("Artifacts in {}", artifacts.display()),
         &["variant", "layers", "T", "pad", "metric", "params"]);
@@ -260,45 +295,77 @@ fn report(artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn make_frames(kind: NetKind, n: usize) -> Vec<Vec<u8>> {
-    match kind {
-        NetKind::Classifier => {
-            let (imgs, _) = skydiver::data::gen_digits(0x5E12E, n);
-            imgs.chunks(28 * 28).map(|c| c.to_vec()).collect()
-        }
-        NetKind::Segmenter => {
-            let (imgs, _) = skydiver::data::gen_road_scenes(0x5E12E, n);
-            let (h, w) = (skydiver::data::ROAD_H, skydiver::data::ROAD_W);
-            imgs.chunks(h * w * 3)
-                .map(|img| {
-                    let mut chw = vec![0u8; 3 * h * w];
-                    for y in 0..h {
-                        for x in 0..w {
-                            for c in 0..3 {
-                                chw[c * h * w + y * w + x] =
-                                    img[(y * w + x) * 3 + c];
-                            }
+/// Deterministic frames for an arbitrary `(c, h, w)` contract: the
+/// canonical datasets when the shape matches them, otherwise a
+/// synthetic mixed workload (every 4th frame dense-random, the rest
+/// sparse) — so `run` works against synthetic artifacts of any shape,
+/// not just the trained 28x28 / road-scene nets.
+fn make_frames(c: usize, h: usize, w: usize, n: usize) -> Vec<Vec<u8>> {
+    if (c, h, w) == (1, skydiver::data::DIGIT_H, skydiver::data::DIGIT_W)
+    {
+        let (imgs, _) = skydiver::data::gen_digits(0x5E12E, n);
+        return imgs.chunks(h * w).map(|ch| ch.to_vec()).collect();
+    }
+    if (c, h, w) == (3, skydiver::data::ROAD_H, skydiver::data::ROAD_W) {
+        let (imgs, _) = skydiver::data::gen_road_scenes(0x5E12E, n);
+        return imgs.chunks(h * w * 3)
+            .map(|img| {
+                let mut chw = vec![0u8; 3 * h * w];
+                for y in 0..h {
+                    for x in 0..w {
+                        for ch in 0..3 {
+                            chw[ch * h * w + y * w + x] =
+                                img[(y * w + x) * 3 + ch];
                         }
                     }
-                    chw
+                }
+                chw
+            })
+            .collect();
+    }
+    (0..n as u64)
+        .map(|id| {
+            let mut rng =
+                SplitMix64::new(0x5E12E ^ id.wrapping_mul(0x9E37));
+            let dense = id % 4 == 0;
+            (0..c * h * w)
+                .map(|_| {
+                    if dense || rng.next_below(100) < 10 {
+                        rng.next_below(256) as u8
+                    } else {
+                        0
+                    }
                 })
                 .collect()
-        }
-    }
+        })
+        .collect()
 }
 
-/// Build the worker + service configuration shared by `run` (in
-/// process) and `serve` (TCP gateway) from the same flags.
-fn build_cfgs(artifacts: &PathBuf, args: &Args)
-              -> Result<(WorkerConfig, ServiceConfig)> {
-    let kind = parse_net(args)?;
+fn make_frames_for(spec: &FrameSpec, n: usize) -> Vec<Vec<u8>> {
+    make_frames(spec.c, spec.h, spec.w, n)
+}
+
+/// The coordinator-side knobs shared by every mounted model.
+fn service_cfg(args: &Args) -> Result<ServiceConfig> {
     let dispatch = match args.get("dispatch") {
         None => DispatchMode::WorkQueue,
         Some(s) => DispatchMode::parse(s)
             .ok_or_else(|| anyhow!("unknown --dispatch {s}"))?,
     };
-    let wcfg = WorkerConfig {
-        artifacts: artifacts.clone(),
+    Ok(ServiceConfig {
+        workers: args.get_usize("workers", 2)?,
+        batch_max: args.get_usize("batch-max", 8)?,
+        queue_cap: args.get_usize("queue-cap", 256)?,
+        batch_wait: Duration::from_millis(2),
+        dispatch,
+    })
+}
+
+/// The worker pipeline knobs for one net kind.
+fn worker_cfg(artifacts: &Path, args: &Args, kind: NetKind)
+              -> Result<WorkerConfig> {
+    Ok(WorkerConfig {
+        artifacts: artifacts.to_path_buf(),
         kind,
         aprc: !args.has("plain"),
         policy: parse_policy(args)?,
@@ -307,15 +374,33 @@ fn build_cfgs(artifacts: &PathBuf, args: &Args)
         use_runtime: args.has("golden"),
         timesteps: None,
         sweep_threads: args.get_usize("sweep-threads", 1)?,
-    };
-    let scfg = ServiceConfig {
-        workers: args.get_usize("workers", 2)?,
-        batch_max: args.get_usize("batch-max", 8)?,
-        queue_cap: args.get_usize("queue-cap", 256)?,
-        batch_wait: Duration::from_millis(2),
-        dispatch,
-    };
-    Ok((wcfg, scfg))
+    })
+}
+
+/// The models to mount: every `--model NAME[=KIND]` in order (the
+/// first is the default model), or the single `--net` when no
+/// `--model` is given.
+fn model_specs(artifacts: &Path, args: &Args) -> Result<Vec<ModelSpec>> {
+    let scfg = service_cfg(args)?;
+    let flags = args.get_all("model");
+    if flags.is_empty() {
+        let kind = parse_net(args)?;
+        return Ok(vec![ModelSpec {
+            name: kind.as_str().to_string(),
+            scfg,
+            wcfg: worker_cfg(artifacts, args, kind)?,
+        }]);
+    }
+    flags.iter()
+        .map(|s| {
+            let (name, kind) = parse_model_spec(s)?;
+            Ok(ModelSpec {
+                name,
+                scfg: scfg.clone(),
+                wcfg: worker_cfg(artifacts, args, kind)?,
+            })
+        })
+        .collect()
 }
 
 fn print_serving_report(rep: &ServingReport) {
@@ -344,17 +429,25 @@ fn print_serving_report(rep: &ServingReport) {
     t.print();
 }
 
-fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
-    let (wcfg, scfg) = build_cfgs(artifacts, args)?;
+fn run_serve(artifacts: &Path, args: &Args) -> Result<()> {
+    // `run` is the in-process single-model path; `--model NAME[=KIND]`
+    // is accepted as an alias for picking the net.
+    let kind = match args.get("model") {
+        Some(spec) => parse_model_spec(spec)?.1,
+        None => parse_net(args)?,
+    };
+    let wcfg = worker_cfg(artifacts, args, kind)?;
+    let scfg = service_cfg(args)?;
     let frames = args.get_usize("frames", 32)?;
-    let kind = wcfg.kind;
     println!("serving {} frames of {} ({}) with {} workers, policy {:?}, \
               dispatch {:?}",
              frames, wcfg.variant_name(),
              if wcfg.use_runtime { "golden/PJRT" } else { "functional" },
              scfg.workers, wcfg.policy, scfg.dispatch);
     let service = Service::start(scfg, wcfg)?;
-    for (i, px) in make_frames(kind, frames).into_iter().enumerate() {
+    let spec = *service.frame_spec();
+    for (i, px) in make_frames_for(&spec, frames).into_iter().enumerate()
+    {
         service.submit(i as u64, px)?;
     }
     let (_, rep) = service.collect(frames, skydiver::CLOCK_HZ)?;
@@ -363,22 +456,28 @@ fn run_serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `skydiver serve`: the TCP gateway. Blocks until a client sends a
+/// `skydiver serve`: the TCP gateway. Mounts every `--model` (or the
+/// single `--net`) behind one port and blocks until a client sends a
 /// `Shutdown` frame (e.g. `skydiver loadgen --shutdown`), then drains
-/// and prints the final serving report.
-fn serve_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
-    let (wcfg, scfg) = build_cfgs(artifacts, args)?;
+/// and prints the final per-model serving reports.
+fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
+    let specs = model_specs(artifacts, args)?;
     let gcfg = GatewayConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
         max_conns: args.get_usize("max-conns", 64)?,
         drain_timeout: Duration::from_secs(10),
     };
-    println!("starting gateway for {} ({}) with {} workers, \
-              queue cap {}",
-             wcfg.variant_name(),
-             if wcfg.use_runtime { "golden/PJRT" } else { "functional" },
-             scfg.workers, scfg.queue_cap);
-    let gw = Gateway::start(gcfg, scfg, wcfg)?;
+    let names: Vec<String> =
+        specs.iter().map(|s| {
+            format!("{} ({})", s.name, s.wcfg.variant_name())
+        }).collect();
+    println!("starting gateway with {} model(s): {} — {} worker(s) \
+              and queue cap {} each",
+             specs.len(), names.join(", "),
+             specs[0].scfg.workers, specs[0].scfg.queue_cap);
+    let registry = ModelRegistry::start(specs)?;
+    println!("default model: {}", registry.default_name());
+    let gw = Gateway::start(gcfg, registry)?;
     let addr = gw.local_addr();
     println!("listening on {addr}");
     println!("stop with: skydiver loadgen --addr {addr} --frames 0 \
@@ -394,6 +493,7 @@ fn serve_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
 fn print_gateway_report(report: &GatewayReport) {
     let c = &report.counters;
     let mut t = Table::new("Gateway", &["metric", "value"]);
+    t.row(&["models mounted".into(), report.models.len().to_string()]);
     t.row(&["connections accepted/rejected".into(),
             format!("{}/{}", c.conns_accepted, c.conns_rejected)]);
     t.row(&["requests".into(), c.requests.to_string()]);
@@ -403,7 +503,12 @@ fn print_gateway_report(report: &GatewayReport) {
     t.row(&["shutting down".into(), c.shutting_down.to_string()]);
     t.row(&["internal errors".into(), c.internal.to_string()]);
     t.print();
-    print_serving_report(&report.serving);
+    for m in &report.models {
+        let mc = &m.counters;
+        println!("--- model '{}': {} served, {} busy, {} bad request",
+                 m.name, mc.served, mc.busy, mc.bad_request);
+        print_serving_report(&m.serving);
+    }
 }
 
 /// `skydiver loadgen`: drive a gateway over the wire and report
@@ -414,6 +519,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         .to_string();
     let cfg = LoadGenConfig {
         addr: addr.clone(),
+        model: args.get("model").unwrap_or("").to_string(),
         conns: args.get_usize("conns", 4)?,
         frames: args.get_usize("frames", 1000)?,
         window: args.get_usize("window", 8)?,
@@ -424,9 +530,13 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     let mut failed = 0u64;
     if cfg.frames > 0 {
         println!("loadgen: {} frames over {} connections (window {}, \
-                  {} payload) against {}",
+                  {} payload, model '{}') against {}",
                  cfg.frames, cfg.conns, cfg.window,
-                 if cfg.spikes { "spike" } else { "pixel" }, cfg.addr);
+                 if cfg.spikes { "spike" } else { "pixel" },
+                 if cfg.model.is_empty() { "<default>" } else {
+                     &cfg.model
+                 },
+                 cfg.addr);
         let rep = skydiver::server::loadgen::run(&cfg)?;
         let mut t = Table::new("Loadgen report", &["metric", "value"]);
         t.row(&["sent (incl. retries)".into(), rep.sent.to_string()]);
@@ -453,22 +563,43 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `skydiver synth`: write synthetic classifier artifacts so serve /
-/// tests / CI run without the python `make artifacts` step.
+/// `skydiver synth`: write synthetic artifacts so serve / tests / CI
+/// run without the python `make artifacts` step. `--net both` writes
+/// the classifier and the segmenter into one directory — the
+/// multi-model smoke topology.
 fn synth_cmd(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").unwrap_or("artifacts"));
     let side = args.get_usize("side", 32)?;
-    skydiver::data::write_synthetic_classifier(&out, side)?;
-    println!("wrote synthetic classifier_aprc ({side}x{side}) to {}",
-             out.display());
+    let net = args.get("net").unwrap_or("classifier");
+    match net {
+        "classifier" => {
+            skydiver::data::write_synthetic_classifier(&out, side)?;
+            println!("wrote synthetic classifier_aprc ({side}x{side}) \
+                      to {}", out.display());
+        }
+        "segmenter" => {
+            skydiver::data::write_synthetic_segmenter(&out, side)?;
+            println!("wrote synthetic segmenter_aprc (3x{side}x{side}) \
+                      to {}", out.display());
+        }
+        "both" => {
+            skydiver::data::write_synthetic_classifier(&out, side)?;
+            skydiver::data::write_synthetic_segmenter(&out, side)?;
+            println!("wrote synthetic classifier_aprc ({side}x{side}) \
+                      + segmenter_aprc (3x{side}x{side}) to {}",
+                     out.display());
+        }
+        other => bail!("unknown --net {other} \
+                        (classifier|segmenter|both)"),
+    }
     Ok(())
 }
 
-fn trace(artifacts: &PathBuf, args: &Args) -> Result<()> {
-    let kind = match args.get("net").unwrap_or("segmenter") {
-        "classifier" => NetKind::Classifier,
-        "segmenter" => NetKind::Segmenter,
-        other => bail!("unknown --net {other}"),
+fn trace(artifacts: &Path, args: &Args) -> Result<()> {
+    let kind = match args.get("net") {
+        None => NetKind::Segmenter,
+        Some(s) => NetKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown --net {s}"))?,
     };
     let aprc = !args.has("plain");
     let policy = parse_policy(args)?;
@@ -483,12 +614,12 @@ fn trace(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let sim = skydiver::sim::Simulator::new(arch, &net, scheduler.as_ref(),
                                             &predictor);
 
-    let pixels = make_frames(kind, 1).remove(0);
     let (c, h, w) = (net.meta.in_shape[0], net.meta.in_shape[1],
                      net.meta.in_shape[2]);
+    let pixels = make_frames(c, h, w, 1).remove(0);
     let inputs = skydiver::snn::encode_phased_u8(&pixels, c, h, w,
                                                  net.meta.timesteps);
-    let mut ctx = ExperimentCtx::new(artifacts.clone());
+    let mut ctx = ExperimentCtx::new(artifacts.to_path_buf());
     ctx.golden = golden;
     let trace = experiments::trace_for(&ctx, &net, &inputs)?;
     let rep = sim.run_frame(&inputs, &trace)?;
@@ -585,6 +716,32 @@ mod tests {
     }
 
     #[test]
+    fn repeated_model_flags_collect_in_order() {
+        let a = Args::parse(&sv(&[
+            "serve", "--model", "classifier", "--model",
+            "seg=segmenter",
+        ])).unwrap();
+        assert_eq!(a.get_all("model"),
+                   vec!["classifier", "seg=segmenter"]);
+        // `get` keeps last-wins semantics for single-valued flags.
+        assert_eq!(a.get("model"), Some("seg=segmenter"));
+        assert!(a.get_all("net").is_empty());
+    }
+
+    #[test]
+    fn model_specs_parse() {
+        assert_eq!(parse_model_spec("classifier").unwrap(),
+                   ("classifier".to_string(), NetKind::Classifier));
+        assert_eq!(parse_model_spec("fast=classifier").unwrap(),
+                   ("fast".to_string(), NetKind::Classifier));
+        assert_eq!(parse_model_spec("roads=segmenter").unwrap(),
+                   ("roads".to_string(), NetKind::Segmenter));
+        assert!(parse_model_spec("fast=nope").is_err());
+        assert!(parse_model_spec("nope").is_err());
+        assert!(parse_model_spec("=classifier").is_err());
+    }
+
+    #[test]
     fn bool_flag_does_not_consume_positional() {
         let a = Args::parse(&sv(&["--golden", "trace"])).unwrap();
         assert!(a.has("golden"));
@@ -605,5 +762,20 @@ mod tests {
         assert_eq!(edit_distance("abc", "abc"), 0);
         assert_eq!(edit_distance("abc", "abd"), 1);
         assert_eq!(edit_distance("", "abc"), 3);
+    }
+
+    #[test]
+    fn synthetic_frames_match_arbitrary_shapes() {
+        let frames = make_frames(1, 24, 24, 8);
+        assert_eq!(frames.len(), 8);
+        assert!(frames.iter().all(|f| f.len() == 24 * 24));
+        // Deterministic: the same id regenerates identical bytes.
+        assert_eq!(make_frames(1, 24, 24, 8), frames);
+        // Canonical digit shape routes to the dataset generator.
+        let digits = make_frames(
+            1, skydiver::data::DIGIT_H, skydiver::data::DIGIT_W, 2);
+        assert!(digits.iter().all(
+            |f| f.len() == skydiver::data::DIGIT_H
+                * skydiver::data::DIGIT_W));
     }
 }

@@ -6,6 +6,13 @@
 //! by id (not by order), a caller may keep any number of requests in
 //! flight on one connection — that is the whole point of the
 //! pipelined design, and what the load generator exercises.
+//!
+//! The client speaks **protocol v2** by default: inference and info
+//! requests carry a model selector (a registry name; the empty string
+//! means the server's default model). [`Client::connect_v1`] pins a
+//! connection to the legacy v1 encoding — useful for compatibility
+//! tests and for talking to pre-v2 servers — in which case requests
+//! must not name a model ([`Client::send`] refuses).
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -13,22 +20,24 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::snn::NetKind;
-
-use super::protocol::{net_code, read_frame, write_frame, ErrorCode,
+use super::protocol::{read_frame, write_frame, ErrorCode, ProtoError,
                       RequestBody, ResponseBody, WirePayload,
                       WireRequest, WireResponse, CONN_ERR_ID,
-                      HEADER_LEN, KIND_RESPONSE, MAX_BODY};
+                      HEADER_LEN, KIND_RESPONSE, MAX_BODY, NET_ANY, V1,
+                      V2};
 
-/// The served network's frame contract, as reported by the `Info`
-/// request.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// A served model's frame contract, as reported by the `Info` request.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServerInfo {
     pub net: u8,
     pub c: usize,
     pub h: usize,
     pub w: usize,
     pub timesteps: usize,
+    /// Resolved model name (empty when the server answered in v1).
+    pub model: String,
+    /// How many models the server mounts (1 under v1).
+    pub nmodels: usize,
 }
 
 impl ServerInfo {
@@ -41,16 +50,56 @@ impl ServerInfo {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    version: u8,
+    /// Net code of the last `Info` response — what a v1-pinned
+    /// connection's convenience helpers put in the `net` byte (a v1
+    /// server validates it, and `NET_ANY` is a v2-only idiom it would
+    /// reject).
+    info_net: Option<u8>,
 }
 
 impl Client {
+    /// Connect speaking the current protocol (v2).
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Self::connect_version(addr, V2)
+    }
+
+    /// Connect pinned to the legacy v1 encoding (single-model; no
+    /// model selectors on the wire).
+    pub fn connect_v1(addr: impl ToSocketAddrs) -> Result<Self> {
+        Self::connect_version(addr, V1)
+    }
+
+    fn connect_version(addr: impl ToSocketAddrs, version: u8)
+                       -> Result<Self> {
         let stream = TcpStream::connect(addr)
             .context("connecting to skydiver gateway")?;
         let _ = stream.set_nodelay(true);
         let reader = BufReader::new(
             stream.try_clone().context("cloning stream")?);
-        Ok(Self { reader, writer: BufWriter::new(stream) })
+        Ok(Self {
+            reader,
+            writer: BufWriter::new(stream),
+            version,
+            info_net: None,
+        })
+    }
+
+    /// The `net` byte the convenience helpers send: `NET_ANY` on v2
+    /// (the model selector addresses the net), the last `Info`'d net
+    /// code on v1 — fetch [`info`](Self::info) first on a v1-pinned
+    /// connection (payload sizing needs it anyway); without it the v1
+    /// default is the classifier code, matching pre-v2 deployments.
+    fn default_net(&self) -> u8 {
+        match self.version {
+            V1 => self.info_net.unwrap_or(0),
+            _ => NET_ANY,
+        }
+    }
+
+    /// The protocol version this connection encodes requests with.
+    pub fn version(&self) -> u8 {
+        self.version
     }
 
     /// Bound how long [`recv`](Self::recv) blocks (None = forever).
@@ -64,14 +113,18 @@ impl Client {
     /// [`recv`](Self::recv) or [`flush`](Self::flush)). Refuses a
     /// request whose body would exceed the protocol's `MAX_BODY` (the
     /// server would treat the oversized frame as stream corruption and
-    /// drop the whole connection) or that uses the reserved
-    /// connection-error id.
+    /// drop the whole connection), that uses the reserved
+    /// connection-error id, or — on a v1 connection — that names a
+    /// model (not expressible in v1).
     pub fn send(&mut self, req: &WireRequest) -> Result<()> {
         if req.id == CONN_ERR_ID {
             bail!("request id {CONN_ERR_ID} is reserved for \
                    connection-level errors");
         }
-        let frame = req.encode();
+        let frame = match self.version {
+            V1 => req.encode_v1(),
+            _ => req.encode(),
+        }.map_err(|e: ProtoError| anyhow!("encoding request: {e}"))?;
         if frame.len() - HEADER_LEN > MAX_BODY {
             bail!("request body {} bytes exceeds protocol cap {} — \
                    the server would drop the connection",
@@ -92,51 +145,68 @@ impl Client {
     /// [`WireResponse::id`].
     pub fn recv(&mut self) -> Result<WireResponse> {
         self.flush()?;
-        let body = read_frame(&mut self.reader, KIND_RESPONSE)
+        let (ver, body) = read_frame(&mut self.reader, KIND_RESPONSE)
             .map_err(|e| anyhow!("reading response frame: {e}"))?
             .ok_or_else(|| anyhow!("server closed the connection"))?;
-        WireResponse::decode_body(&body)
+        WireResponse::decode_body(ver, &body)
             .map_err(|e| anyhow!("decoding response: {e}"))
     }
 
-    /// Convenience: one pixel-frame inference round trip.
-    pub fn infer_pixels(&mut self, id: u64, net: NetKind,
+    /// Convenience: one pixel-frame inference round trip against
+    /// `model` (`""` = the server's default model).
+    pub fn infer_pixels(&mut self, id: u64, model: &str,
                         pixels: Vec<u8>) -> Result<WireResponse> {
         self.send(&WireRequest {
             id,
             body: RequestBody::Infer {
-                net: net_code(net),
+                net: self.default_net(),
+                model: model.to_string(),
                 payload: WirePayload::Pixels(pixels),
             },
         })?;
         self.recv()
     }
 
-    /// Convenience: one pre-encoded-spike inference round trip.
-    pub fn infer_spikes(&mut self, id: u64, net: NetKind,
+    /// Convenience: one pre-encoded-spike inference round trip against
+    /// `model` (`""` = default).
+    pub fn infer_spikes(&mut self, id: u64, model: &str,
                         timesteps: u32, words: Vec<u64>)
                         -> Result<WireResponse> {
         self.send(&WireRequest {
             id,
             body: RequestBody::Infer {
-                net: net_code(net),
+                net: self.default_net(),
+                model: model.to_string(),
                 payload: WirePayload::Spikes { timesteps, words },
             },
         })?;
         self.recv()
     }
 
-    /// Fetch the served net's frame contract.
+    /// Fetch the default model's frame contract.
     pub fn info(&mut self) -> Result<ServerInfo> {
-        self.send(&WireRequest { id: 0, body: RequestBody::Info })?;
+        self.info_model("")
+    }
+
+    /// Fetch a named model's frame contract (`""` = default).
+    pub fn info_model(&mut self, model: &str) -> Result<ServerInfo> {
+        self.send(&WireRequest {
+            id: 0,
+            body: RequestBody::Info { model: model.to_string() },
+        })?;
         match self.recv()?.body {
-            ResponseBody::Info { net, c, h, w, timesteps } => {
+            ResponseBody::Info {
+                net, c, h, w, timesteps, model, nmodels,
+            } => {
+                self.info_net = Some(net);
                 Ok(ServerInfo {
                     net,
                     c: c as usize,
                     h: h as usize,
                     w: w as usize,
                     timesteps: timesteps as usize,
+                    model,
+                    nmodels: nmodels as usize,
                 })
             }
             ResponseBody::Error { code, detail } => {

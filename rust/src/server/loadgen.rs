@@ -20,7 +20,7 @@ use crate::snn::encode_phased_u8;
 
 use super::client::{Client, ServerInfo};
 use super::protocol::{ErrorCode, RequestBody, ResponseBody,
-                      WirePayload, WireRequest, CONN_ERR_ID};
+                      WirePayload, WireRequest, CONN_ERR_ID, NET_ANY};
 
 /// Max resubmissions of one frame after `BUSY` before giving up.
 const MAX_BUSY_RETRIES: u32 = 200;
@@ -28,6 +28,9 @@ const MAX_BUSY_RETRIES: u32 = 200;
 #[derive(Debug, Clone)]
 pub struct LoadGenConfig {
     pub addr: String,
+    /// Target model (registry name); empty = the server's default
+    /// model. Payload shapes follow the selected model's `Info`.
+    pub model: String,
     /// Concurrent connections.
     pub conns: usize,
     /// Total frames across all connections.
@@ -47,6 +50,7 @@ impl Default for LoadGenConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:7878".into(),
+            model: String::new(),
             conns: 4,
             frames: 1000,
             window: 8,
@@ -132,8 +136,9 @@ fn make_payload(info: &ServerInfo, seed: u64, id: u64, spikes: bool)
     }
 }
 
-fn run_conn(addr: &str, info: ServerInfo, frames: usize, window: usize,
-            spikes: bool, retry_busy: bool, seed: u64)
+#[allow(clippy::too_many_arguments)]
+fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
+            window: usize, spikes: bool, retry_busy: bool, seed: u64)
             -> Result<ConnResult> {
     let mut client = Client::connect(addr)?;
     client.set_read_timeout(Some(Duration::from_secs(60)))?;
@@ -148,10 +153,14 @@ fn run_conn(addr: &str, info: ServerInfo, frames: usize, window: usize,
             let Some((id, attempts)) = to_send.pop_front() else {
                 break;
             };
-            let payload = make_payload(&info, seed, id, spikes);
+            let payload = make_payload(info, seed, id, spikes);
             client.send(&WireRequest {
                 id,
-                body: RequestBody::Infer { net: info.net, payload },
+                body: RequestBody::Infer {
+                    net: NET_ANY,
+                    model: model.to_string(),
+                    payload,
+                },
             })?;
             inflight.insert(id, (Instant::now(), attempts));
             sent += 1;
@@ -201,14 +210,16 @@ fn run_conn(addr: &str, info: ServerInfo, frames: usize, window: usize,
     Ok(ConnResult { sent, ok, busy, errors, latencies_us })
 }
 
-/// Run a full multi-connection load generation against `cfg.addr`.
+/// Run a full multi-connection load generation against `cfg.addr`,
+/// targeting `cfg.model` (empty = the server's default model).
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     ensure!(cfg.conns > 0, "loadgen needs at least one connection");
-    let info = Client::connect(&cfg.addr)?.info()?;
+    let info = Client::connect(&cfg.addr)?.info_model(&cfg.model)?;
     let window = cfg.window.max(1);
 
     let t0 = Instant::now();
     let results: Vec<Result<ConnResult>> = thread::scope(|s| {
+        let info = &info;
         let handles: Vec<_> = (0..cfg.conns)
             .map(|i| {
                 let n = cfg.frames / cfg.conns
@@ -216,8 +227,8 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                 let seed =
                     cfg.seed.wrapping_add(0xC0FF_EE00 * i as u64);
                 s.spawn(move || {
-                    run_conn(&cfg.addr, info, n, window, cfg.spikes,
-                             cfg.retry_busy, seed)
+                    run_conn(&cfg.addr, &cfg.model, info, n, window,
+                             cfg.spikes, cfg.retry_busy, seed)
                 })
             })
             .collect();

@@ -9,15 +9,22 @@
 //! * [`protocol`] — versioned, length-prefixed binary wire format
 //!   (requests carry raw pixels or pre-encoded spike words; responses
 //!   carry prediction + latency + worker id; typed error codes
-//!   `BUSY` / `BAD_REQUEST` / `SHUTTING_DOWN` / `INTERNAL`).
-//! * [`server`] — the TCP [`Gateway`]: per-connection threads,
-//!   pipelined requests, a connection cap, admission control that maps
-//!   queue-full onto `BUSY` (shed load, never hang), a
-//!   Prometheus-style `metrics` request, and graceful
-//!   drain-then-shutdown.
-//! * [`client`] — a blocking, pipelining client library.
+//!   `BUSY` / `BAD_REQUEST` / `SHUTTING_DOWN` / `INTERNAL`). Two live
+//!   versions: v1 (single-model) and v2 (`Infer`/`Info` carry a model
+//!   selector); a gateway answers each request in the version it
+//!   arrived with.
+//! * [`server`] — the TCP [`Gateway`]: a
+//!   [`ModelRegistry`](crate::coordinator::ModelRegistry) of named
+//!   models behind one port, per-connection threads, pipelined
+//!   requests, a connection cap, per-model admission control that maps
+//!   queue-full onto `BUSY` (shed load, never hang), per-model
+//!   Prometheus metrics, and graceful drain-then-shutdown. v1 (no
+//!   selector) traffic routes to the default model.
+//! * [`client`] — a blocking, pipelining client library (speaks v2 by
+//!   default; can be pinned to v1).
 //! * [`loadgen`] — a multi-connection load generator (the
-//!   `skydiver loadgen` CLI and the loopback serving bench).
+//!   `skydiver loadgen` CLI and the loopback serving bench), with a
+//!   per-run model selector for mixed multi-model traffic.
 
 pub mod client;
 pub mod loadgen;
@@ -29,4 +36,5 @@ pub use loadgen::{LoadGenConfig, LoadGenReport};
 pub use protocol::{ErrorCode, ProtoError, RequestBody, ResponseBody,
                    WirePayload, WireRequest, WireResponse};
 pub use server::{CounterSnapshot, Gateway, GatewayConfig,
-                 GatewayReport, GatewayStop};
+                 GatewayReport, GatewayStop, ModelCounterSnapshot,
+                 ModelReport};

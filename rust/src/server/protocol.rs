@@ -1,12 +1,17 @@
-//! Skydiver wire protocol v1 — versioned, length-prefixed binary
-//! frames (std-only, little-endian throughout).
+//! Skydiver wire protocol — versioned, length-prefixed binary frames
+//! (std-only, little-endian throughout). Two versions are live:
+//! **v1** (single-model, the original format) and **v2** (multi-model:
+//! `Infer`/`Info` carry a model selector). A server accepts both and
+//! answers each request in the version it arrived with, so old v1
+//! clients keep working against a multi-model gateway (their requests
+//! route to the registry's *default* model).
 //!
 //! ## Frame layout
 //!
 //! ```text
 //! +----------+---------+--------+-------------+--------~~--+
 //! | magic(4) | ver(1)  | kind(1)| body_len(4) | body       |
-//! | "SKYD"   | 0x01    | 1|2    | u32 LE      | body_len B |
+//! | "SKYD"   | 1|2     | 1|2    | u32 LE      | body_len B |
 //! +----------+---------+--------+-------------+------------+
 //! ```
 //!
@@ -18,15 +23,21 @@
 //!
 //! `id: u64`, `op: u8`, then per-op:
 //!
-//! * `op 0` **Infer** — `net: u8` (0 classifier / 1 segmenter),
-//!   `payload_kind: u8`: `0` pixels (`n: u32`, `n` raw bytes) or `1`
-//!   pre-encoded spikes (`timesteps: u32`, `nwords: u32`, `nwords`
-//!   u64 spike words in [`SpikeMap`](crate::snn::SpikeMap) packing).
+//! * `op 0` **Infer** — `net: u8` (0 classifier / 1 segmenter /
+//!   [`NET_ANY`] = whatever the routed model runs), **v2 only:**
+//!   `model_len: u8` + `model_len` UTF-8 bytes naming the target model
+//!   (empty = the server's default model), then `payload_kind: u8`:
+//!   `0` pixels (`n: u32`, `n` raw bytes) or `1` pre-encoded spikes
+//!   (`timesteps: u32`, `nwords: u32`, `nwords` u64 spike words in
+//!   [`SpikeMap`](crate::snn::SpikeMap) packing). A v1 frame has no
+//!   selector and routes to the default model.
 //! * `op 1` **Metrics** — empty; response is a Prometheus-style
-//!   plaintext exposition.
+//!   plaintext exposition (per-model series carry a `model` label).
 //! * `op 2` **Shutdown** — empty; asks the gateway to drain and exit.
-//! * `op 3` **Info** — empty; response describes the served net
-//!   (shape + timesteps), so a client can build valid frames.
+//! * `op 3` **Info** — **v2 only:** `model_len: u8` + name (empty =
+//!   default; v1 = empty body = default). Response describes the
+//!   selected model (shape + timesteps), so a client can build valid
+//!   frames for it.
 //!
 //! ## Response body
 //!
@@ -39,21 +50,30 @@
 //! * `tag 2` **ShutdownAck** — empty.
 //! * `tag 3` **Error** — `code: u8` ([`ErrorCode`]), `len: u32`,
 //!   UTF-8 detail.
-//! * `tag 4` **Info** — `net: u8`, `c/h/w/timesteps: u32` each.
+//! * `tag 4` **Info** — `net: u8`, `c/h/w/timesteps: u32` each,
+//!   **v2 only:** `name_len: u8` + model name, `nmodels: u8` (how many
+//!   models the server mounts).
 //!
 //! Decoding is total: every malformed input returns a typed
 //! [`ProtoError`], never panics. [`ProtoError::is_fatal`] separates
 //! framing damage (desynced stream → disconnect) from a malformed body
 //! inside an intact frame (answerable with `BAD_REQUEST`). Response id
 //! [`CONN_ERR_ID`] is reserved for connection-level errors (shed
-//! connection, framing damage) — requests must not use it.
+//! connection, framing damage) — requests must not use it; the gateway
+//! rejects an `Infer` carrying it with `BAD_REQUEST`.
 
 use std::io::{self, Read, Write};
 
 use crate::snn::NetKind;
 
 pub const MAGIC: [u8; 4] = *b"SKYD";
-pub const VERSION: u8 = 1;
+/// The original single-model protocol version.
+pub const V1: u8 = 1;
+/// The multi-model protocol version ([`RequestBody::Infer`]/`Info`
+/// carry a model selector).
+pub const V2: u8 = 2;
+/// The current (preferred) version new clients speak.
+pub const VERSION: u8 = V2;
 pub const KIND_REQUEST: u8 = 1;
 pub const KIND_RESPONSE: u8 = 2;
 /// Frame header bytes: magic + version + kind + body_len.
@@ -61,6 +81,11 @@ pub const HEADER_LEN: usize = 10;
 /// Hard cap on body size (16 MiB) — an oversized header is treated as
 /// stream corruption, not an allocation request.
 pub const MAX_BODY: usize = 1 << 24;
+/// `net` byte meaning "whatever network the routed model runs" — the
+/// natural value for a v2 client that addresses models by name. v1
+/// clients send a concrete code, which the server checks against the
+/// routed model's kind.
+pub const NET_ANY: u8 = 0xFF;
 /// Reserved response id for *connection-level* errors (shed
 /// connection, framing damage, unparsable request id): it can never
 /// collide with a request id a well-behaved client chose, so a
@@ -131,7 +156,7 @@ pub enum ErrorCode {
     /// cap). Retry later.
     Busy = 1,
     /// The request failed validation (wrong payload size, unknown op,
-    /// wrong net, unparsable body).
+    /// wrong net, unknown model, reserved id, unparsable body).
     BadRequest = 2,
     /// The gateway is draining; no new work is accepted.
     ShuttingDown = 3,
@@ -192,12 +217,16 @@ pub struct WireRequest {
     pub body: RequestBody,
 }
 
+/// `model` is the v2 selector: a model name registered at the gateway,
+/// or the empty string for the server's default model. v1 frames decode
+/// with an empty `model` (they cannot name one), and a request naming a
+/// model is not expressible in v1 ([`WireRequest::encode_v1`] refuses).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RequestBody {
-    Infer { net: u8, payload: WirePayload },
+    Infer { net: u8, model: String, payload: WirePayload },
     Metrics,
     Shutdown,
-    Info,
+    Info { model: String },
 }
 
 /// Server → client message.
@@ -207,6 +236,8 @@ pub struct WireResponse {
     pub body: ResponseBody,
 }
 
+/// `Info.model`/`Info.nmodels` are v2-only fields: a v1 encode drops
+/// them, a v1 decode reports the empty name and `nmodels: 1`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ResponseBody {
     Infer {
@@ -218,7 +249,15 @@ pub enum ResponseBody {
     Metrics { text: String },
     ShutdownAck,
     Error { code: ErrorCode, detail: String },
-    Info { net: u8, c: u32, h: u32, w: u32, timesteps: u32 },
+    Info {
+        net: u8,
+        c: u32,
+        h: u32,
+        w: u32,
+        timesteps: u32,
+        model: String,
+        nmodels: u8,
+    },
 }
 
 // -------------------------------------------------------------- encode
@@ -231,13 +270,29 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Model names travel as `u8 len + bytes`; longer names cannot be
+/// encoded (the registry enforces the same cap at mount time).
+pub const MAX_MODEL_NAME: usize = u8::MAX as usize;
+
+fn put_model(out: &mut Vec<u8>, model: &str)
+             -> Result<(), ProtoError> {
+    if model.len() > MAX_MODEL_NAME {
+        return Err(ProtoError::Malformed(format!(
+            "model name {} bytes exceeds cap {MAX_MODEL_NAME}",
+            model.len())));
+    }
+    out.push(model.len() as u8);
+    out.extend_from_slice(model.as_bytes());
+    Ok(())
+}
+
 // Note: no size assert here — encode stays infallible; `Client::send`
 // rejects over-cap bodies *before* any bytes reach the wire (sending
 // one would desync the peer: it reads the header as corruption).
-fn frame(kind: u8, body: Vec<u8>) -> Vec<u8> {
+fn frame(version: u8, kind: u8, body: Vec<u8>) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
     out.extend_from_slice(&MAGIC);
-    out.push(VERSION);
+    out.push(version);
     out.push(kind);
     put_u32(&mut out, body.len() as u32);
     out.extend_from_slice(&body);
@@ -245,72 +300,85 @@ fn frame(kind: u8, body: Vec<u8>) -> Vec<u8> {
 }
 
 impl WireRequest {
-    /// Full frame (header + body), ready to write to a socket.
-    pub fn encode(&self) -> Vec<u8> {
+    /// Full v2 frame (header + body), ready to write to a socket.
+    /// Errors only on an over-long model name ([`MAX_MODEL_NAME`]).
+    pub fn encode(&self) -> Result<Vec<u8>, ProtoError> {
         let mut b = Vec::new();
         put_u64(&mut b, self.id);
         match &self.body {
-            RequestBody::Infer { net, payload } => {
+            RequestBody::Infer { net, model, payload } => {
                 b.push(0);
                 b.push(*net);
-                match payload {
-                    WirePayload::Pixels(px) => {
-                        b.push(0);
-                        put_u32(&mut b, px.len() as u32);
-                        b.extend_from_slice(px);
-                    }
-                    WirePayload::Spikes { timesteps, words } => {
-                        b.push(1);
-                        put_u32(&mut b, *timesteps);
-                        put_u32(&mut b, words.len() as u32);
-                        for w in words {
-                            put_u64(&mut b, *w);
-                        }
-                    }
-                }
+                put_model(&mut b, model)?;
+                encode_payload(&mut b, payload);
             }
             RequestBody::Metrics => b.push(1),
             RequestBody::Shutdown => b.push(2),
-            RequestBody::Info => b.push(3),
+            RequestBody::Info { model } => {
+                b.push(3);
+                put_model(&mut b, model)?;
+            }
         }
-        frame(KIND_REQUEST, b)
+        Ok(frame(V2, KIND_REQUEST, b))
     }
 
-    /// Decode a request body (the bytes after the frame header).
-    pub fn decode_body(body: &[u8]) -> Result<Self, ProtoError> {
+    /// Full **v1** frame — what a legacy client puts on the wire. A
+    /// request that names a model is not expressible in v1 and returns
+    /// [`ProtoError::Malformed`].
+    pub fn encode_v1(&self) -> Result<Vec<u8>, ProtoError> {
+        let mut b = Vec::new();
+        put_u64(&mut b, self.id);
+        match &self.body {
+            RequestBody::Infer { net, model, payload } => {
+                if !model.is_empty() {
+                    return Err(ProtoError::Malformed(format!(
+                        "model selector '{model}' is not expressible \
+                         in protocol v1")));
+                }
+                b.push(0);
+                b.push(*net);
+                encode_payload(&mut b, payload);
+            }
+            RequestBody::Metrics => b.push(1),
+            RequestBody::Shutdown => b.push(2),
+            RequestBody::Info { model } => {
+                if !model.is_empty() {
+                    return Err(ProtoError::Malformed(format!(
+                        "model selector '{model}' is not expressible \
+                         in protocol v1")));
+                }
+                b.push(3);
+            }
+        }
+        Ok(frame(V1, KIND_REQUEST, b))
+    }
+
+    /// Decode a request body (the bytes after the frame header) at the
+    /// version the frame header carried.
+    pub fn decode_body(version: u8, body: &[u8])
+                       -> Result<Self, ProtoError> {
         let mut r = Cursor::new(body);
         let id = r.u64()?;
         let op = r.u8()?;
         let body = match op {
             0 => {
                 let net = r.u8()?;
-                let payload = match r.u8()? {
-                    0 => {
-                        let n = r.u32()? as usize;
-                        WirePayload::Pixels(r.bytes(n)?.to_vec())
-                    }
-                    1 => {
-                        let timesteps = r.u32()?;
-                        let n = r.u32()? as usize;
-                        let raw = r.bytes(n.checked_mul(8).ok_or_else(
-                            || ProtoError::Malformed(
-                                "word count overflow".into()))?)?;
-                        let words = raw.chunks_exact(8)
-                            .map(|c| u64::from_le_bytes(
-                                c.try_into().unwrap()))
-                            .collect();
-                        WirePayload::Spikes { timesteps, words }
-                    }
-                    k => {
-                        return Err(ProtoError::Malformed(format!(
-                            "unknown payload kind {k}")))
-                    }
+                let model = match version {
+                    V1 => String::new(),
+                    _ => r.model()?,
                 };
-                RequestBody::Infer { net, payload }
+                let payload = decode_payload(&mut r)?;
+                RequestBody::Infer { net, model, payload }
             }
             1 => RequestBody::Metrics,
             2 => RequestBody::Shutdown,
-            3 => RequestBody::Info,
+            3 => {
+                let model = match version {
+                    V1 => String::new(),
+                    _ => r.model()?,
+                };
+                RequestBody::Info { model }
+            }
             op => {
                 return Err(ProtoError::Malformed(format!(
                     "unknown request op {op}")))
@@ -321,8 +389,55 @@ impl WireRequest {
     }
 }
 
+fn encode_payload(b: &mut Vec<u8>, payload: &WirePayload) {
+    match payload {
+        WirePayload::Pixels(px) => {
+            b.push(0);
+            put_u32(b, px.len() as u32);
+            b.extend_from_slice(px);
+        }
+        WirePayload::Spikes { timesteps, words } => {
+            b.push(1);
+            put_u32(b, *timesteps);
+            put_u32(b, words.len() as u32);
+            for w in words {
+                put_u64(b, *w);
+            }
+        }
+    }
+}
+
+fn decode_payload(r: &mut Cursor<'_>)
+                  -> Result<WirePayload, ProtoError> {
+    Ok(match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            WirePayload::Pixels(r.bytes(n)?.to_vec())
+        }
+        1 => {
+            let timesteps = r.u32()?;
+            let n = r.u32()? as usize;
+            let raw = r.bytes(n.checked_mul(8).ok_or_else(
+                || ProtoError::Malformed(
+                    "word count overflow".into()))?)?;
+            let words = raw.chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            WirePayload::Spikes { timesteps, words }
+        }
+        k => {
+            return Err(ProtoError::Malformed(format!(
+                "unknown payload kind {k}")))
+        }
+    })
+}
+
 impl WireResponse {
-    pub fn encode(&self) -> Vec<u8> {
+    /// Encode at `version` — a server answers each request in the
+    /// version it arrived with, so a v1 client never sees a v2 frame.
+    /// Only `Info` differs between the versions (the v2-only model
+    /// fields are dropped under v1).
+    pub fn encode(&self, version: u8) -> Vec<u8> {
         let mut b = Vec::new();
         put_u64(&mut b, self.id);
         match &self.body {
@@ -353,19 +468,36 @@ impl WireResponse {
                 put_u32(&mut b, detail.len() as u32);
                 b.extend_from_slice(detail.as_bytes());
             }
-            ResponseBody::Info { net, c, h, w, timesteps } => {
+            ResponseBody::Info {
+                net, c, h, w, timesteps, model, nmodels,
+            } => {
                 b.push(4);
                 b.push(*net);
                 put_u32(&mut b, *c);
                 put_u32(&mut b, *h);
                 put_u32(&mut b, *w);
                 put_u32(&mut b, *timesteps);
+                if version != V1 {
+                    // Names come from the registry, which enforces the
+                    // wire cap at mount time — an over-long name (only
+                    // possible for hand-built responses) degrades to
+                    // the empty name rather than a corrupt frame.
+                    let name = if model.len() <= MAX_MODEL_NAME {
+                        model.as_str()
+                    } else {
+                        ""
+                    };
+                    b.push(name.len() as u8);
+                    b.extend_from_slice(name.as_bytes());
+                    b.push(*nmodels);
+                }
             }
         }
-        frame(KIND_RESPONSE, b)
+        frame(version, KIND_RESPONSE, b)
     }
 
-    pub fn decode_body(body: &[u8]) -> Result<Self, ProtoError> {
+    pub fn decode_body(version: u8, body: &[u8])
+                       -> Result<Self, ProtoError> {
         let mut r = Cursor::new(body);
         let id = r.u64()?;
         let tag = r.u8()?;
@@ -401,13 +533,20 @@ impl WireResponse {
                 let n = r.u32()? as usize;
                 ResponseBody::Error { code, detail: r.utf8(n)? }
             }
-            4 => ResponseBody::Info {
-                net: r.u8()?,
-                c: r.u32()?,
-                h: r.u32()?,
-                w: r.u32()?,
-                timesteps: r.u32()?,
-            },
+            4 => {
+                let net = r.u8()?;
+                let c = r.u32()?;
+                let h = r.u32()?;
+                let w = r.u32()?;
+                let timesteps = r.u32()?;
+                let (model, nmodels) = match version {
+                    V1 => (String::new(), 1),
+                    _ => (r.model()?, r.u8()?),
+                };
+                ResponseBody::Info {
+                    net, c, h, w, timesteps, model, nmodels,
+                }
+            }
             tag => {
                 return Err(ProtoError::Malformed(format!(
                     "unknown response tag {tag}")))
@@ -420,11 +559,13 @@ impl WireResponse {
 
 // ------------------------------------------------------------ frame IO
 
-/// Read one frame of the expected kind. `Ok(None)` on clean EOF (the
+/// Read one frame of the expected kind; returns the frame's protocol
+/// version (v1 or v2) alongside its body so the caller can decode —
+/// and answer — at the peer's version. `Ok(None)` on clean EOF (the
 /// peer closed between frames); [`ProtoError::Truncated`] if the
 /// stream ends mid-frame.
 pub fn read_frame(r: &mut impl Read, expect_kind: u8)
-                  -> Result<Option<Vec<u8>>, ProtoError> {
+                  -> Result<Option<(u8, Vec<u8>)>, ProtoError> {
     let mut header = [0u8; HEADER_LEN];
     // First byte separately: 0 bytes here is a clean close, not an
     // error.
@@ -444,8 +585,9 @@ pub fn read_frame(r: &mut impl Read, expect_kind: u8)
         m.copy_from_slice(&header[..4]);
         return Err(ProtoError::BadMagic(m));
     }
-    if header[4] != VERSION {
-        return Err(ProtoError::BadVersion(header[4]));
+    let version = header[4];
+    if version != V1 && version != V2 {
+        return Err(ProtoError::BadVersion(version));
     }
     if header[5] != expect_kind {
         return Err(ProtoError::BadKind(header[5]));
@@ -457,7 +599,7 @@ pub fn read_frame(r: &mut impl Read, expect_kind: u8)
     }
     let mut body = vec![0u8; len];
     read_exact(r, &mut body)?;
-    Ok(Some(body))
+    Ok(Some((version, body)))
 }
 
 fn read_exact(r: &mut impl Read, buf: &mut [u8])
@@ -522,6 +664,12 @@ impl<'a> Cursor<'a> {
         })
     }
 
+    /// A `u8 len + bytes` model-name selector.
+    fn model(&mut self) -> Result<String, ProtoError> {
+        let n = self.u8()? as usize;
+        self.utf8(n)
+    }
+
     /// Reject trailing bytes — a well-formed body is consumed exactly.
     fn finish(&self) -> Result<(), ProtoError> {
         if self.pos == self.buf.len() {
@@ -539,17 +687,24 @@ mod tests {
     use std::io::Cursor as IoCursor;
 
     fn roundtrip_req(req: WireRequest) {
-        let f = req.encode();
-        let body = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
-            .unwrap().unwrap();
-        assert_eq!(WireRequest::decode_body(&body).unwrap(), req);
+        let f = req.encode().unwrap();
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        assert_eq!(WireRequest::decode_body(ver, &body).unwrap(), req);
     }
 
     fn roundtrip_resp(resp: WireResponse) {
-        let f = resp.encode();
-        let body = read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
-            .unwrap().unwrap();
-        assert_eq!(WireResponse::decode_body(&body).unwrap(), resp);
+        for ver in [V1, V2] {
+            let f = resp.encode(ver);
+            let (got_ver, body) =
+                read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
+                    .unwrap().unwrap();
+            assert_eq!(got_ver, ver);
+            assert_eq!(WireResponse::decode_body(ver, &body).unwrap(),
+                       resp);
+        }
     }
 
     #[test]
@@ -558,6 +713,7 @@ mod tests {
             id: 0,
             body: RequestBody::Infer {
                 net: 0,
+                model: String::new(),
                 payload: WirePayload::Pixels(vec![]),
             },
         });
@@ -565,13 +721,15 @@ mod tests {
             id: u64::MAX,
             body: RequestBody::Infer {
                 net: 1,
+                model: "segmenter".into(),
                 payload: WirePayload::Pixels((0..=255).collect()),
             },
         });
         roundtrip_req(WireRequest {
             id: 7,
             body: RequestBody::Infer {
-                net: 0,
+                net: NET_ANY,
+                model: "classifier-v2".into(),
                 payload: WirePayload::Spikes {
                     timesteps: 6,
                     words: vec![0, u64::MAX, 0x0123_4567_89AB_CDEF],
@@ -580,7 +738,76 @@ mod tests {
         });
         roundtrip_req(WireRequest { id: 1, body: RequestBody::Metrics });
         roundtrip_req(WireRequest { id: 2, body: RequestBody::Shutdown });
-        roundtrip_req(WireRequest { id: 3, body: RequestBody::Info });
+        roundtrip_req(WireRequest {
+            id: 3,
+            body: RequestBody::Info { model: "mnist".into() },
+        });
+        roundtrip_req(WireRequest {
+            id: 4,
+            body: RequestBody::Info { model: String::new() },
+        });
+    }
+
+    #[test]
+    fn v1_request_roundtrips() {
+        // Model-less requests are expressible in both versions; the v1
+        // bytes decode back to the same value (empty model).
+        for req in [
+            WireRequest {
+                id: 5,
+                body: RequestBody::Infer {
+                    net: 1,
+                    model: String::new(),
+                    payload: WirePayload::Pixels(vec![1, 2, 3]),
+                },
+            },
+            WireRequest { id: 6, body: RequestBody::Metrics },
+            WireRequest { id: 7, body: RequestBody::Shutdown },
+            WireRequest {
+                id: 8,
+                body: RequestBody::Info { model: String::new() },
+            },
+        ] {
+            let f = req.encode_v1().unwrap();
+            let (ver, body) =
+                read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                    .unwrap().unwrap();
+            assert_eq!(ver, V1);
+            assert_eq!(WireRequest::decode_body(ver, &body).unwrap(),
+                       req);
+        }
+    }
+
+    #[test]
+    fn model_selector_not_expressible_in_v1() {
+        let req = WireRequest {
+            id: 9,
+            body: RequestBody::Infer {
+                net: NET_ANY,
+                model: "segmenter".into(),
+                payload: WirePayload::Pixels(vec![]),
+            },
+        };
+        assert!(matches!(req.encode_v1(),
+                         Err(ProtoError::Malformed(_))));
+        let req = WireRequest {
+            id: 10,
+            body: RequestBody::Info { model: "segmenter".into() },
+        };
+        assert!(matches!(req.encode_v1(),
+                         Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn overlong_model_name_refused_at_encode() {
+        let req = WireRequest {
+            id: 11,
+            body: RequestBody::Info {
+                model: "m".repeat(MAX_MODEL_NAME + 1),
+            },
+        };
+        assert!(matches!(req.encode(),
+                         Err(ProtoError::Malformed(_))));
     }
 
     #[test]
@@ -611,6 +838,8 @@ mod tests {
                 detail: "queue full (2 entries)".into(),
             },
         });
+        // Info only roundtrips across *both* versions when the
+        // v2-only fields hold their v1 defaults.
         roundtrip_resp(WireResponse {
             id: 13,
             body: ResponseBody::Info {
@@ -619,14 +848,55 @@ mod tests {
                 h: 28,
                 w: 28,
                 timesteps: 20,
+                model: String::new(),
+                nmodels: 1,
             },
         });
     }
 
     #[test]
+    fn v2_info_response_carries_model_fields() {
+        let resp = WireResponse {
+            id: 14,
+            body: ResponseBody::Info {
+                net: 1,
+                c: 3,
+                h: 80,
+                w: 160,
+                timesteps: 8,
+                model: "segmenter".into(),
+                nmodels: 2,
+            },
+        };
+        let f = resp.encode(V2);
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        assert_eq!(WireResponse::decode_body(ver, &body).unwrap(),
+                   resp);
+        // The v1 encoding of the same response drops the model fields.
+        let f1 = resp.encode(V1);
+        let (ver1, body1) =
+            read_frame(&mut IoCursor::new(&f1), KIND_RESPONSE)
+                .unwrap().unwrap();
+        assert_eq!(ver1, V1);
+        match WireResponse::decode_body(ver1, &body1).unwrap().body {
+            ResponseBody::Info { model, nmodels, net, .. } => {
+                assert_eq!(model, "");
+                assert_eq!(nmodels, 1);
+                assert_eq!(net, 1);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
     fn bad_magic_rejected() {
-        let mut f = WireRequest { id: 1, body: RequestBody::Info }
-            .encode();
+        let mut f = WireRequest {
+            id: 1,
+            body: RequestBody::Info { model: String::new() },
+        }.encode().unwrap();
         f[0] = b'X';
         let err = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
             .unwrap_err();
@@ -636,13 +906,18 @@ mod tests {
 
     #[test]
     fn bad_version_and_kind_rejected() {
-        let mut f = WireRequest { id: 1, body: RequestBody::Info }
-            .encode();
+        let mut f = WireRequest {
+            id: 1,
+            body: RequestBody::Info { model: String::new() },
+        }.encode().unwrap();
         f[4] = 99;
         assert!(matches!(
             read_frame(&mut IoCursor::new(&f), KIND_REQUEST),
             Err(ProtoError::BadVersion(99))));
-        let f = WireRequest { id: 1, body: RequestBody::Info }.encode();
+        let f = WireRequest {
+            id: 1,
+            body: RequestBody::Info { model: String::new() },
+        }.encode().unwrap();
         assert!(matches!(
             read_frame(&mut IoCursor::new(&f), KIND_RESPONSE),
             Err(ProtoError::BadKind(KIND_REQUEST))));
@@ -650,8 +925,10 @@ mod tests {
 
     #[test]
     fn oversized_length_rejected() {
-        let mut f = WireRequest { id: 1, body: RequestBody::Info }
-            .encode();
+        let mut f = WireRequest {
+            id: 1,
+            body: RequestBody::Info { model: String::new() },
+        }.encode().unwrap();
         f[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
             .unwrap_err();
@@ -665,9 +942,10 @@ mod tests {
             id: 42,
             body: RequestBody::Infer {
                 net: 0,
+                model: "classifier".into(),
                 payload: WirePayload::Pixels(vec![7; 100]),
             },
-        }.encode();
+        }.encode().unwrap();
         // Every proper prefix either reports clean EOF (empty) or a
         // typed error — never a panic, never a bogus success.
         for cut in 0..f.len() {
@@ -681,22 +959,43 @@ mod tests {
         }
         // Truncated *bodies* (whole frame read, bytes missing inside)
         // are malformed-or-truncated, never a panic.
-        let body = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
-            .unwrap().unwrap();
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
         for cut in 0..body.len() {
-            assert!(WireRequest::decode_body(&body[..cut]).is_err());
+            assert!(WireRequest::decode_body(ver, &body[..cut])
+                    .is_err());
         }
     }
 
     #[test]
     fn trailing_garbage_is_malformed() {
         let f = WireRequest { id: 5, body: RequestBody::Metrics }
-            .encode();
-        let mut body = read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
-            .unwrap().unwrap();
+            .encode().unwrap();
+        let (ver, mut body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
         body.push(0xEE);
-        let err = WireRequest::decode_body(&body).unwrap_err();
+        let err = WireRequest::decode_body(ver, &body).unwrap_err();
         assert!(matches!(err, ProtoError::Malformed(_)));
+        assert!(!err.is_fatal());
+    }
+
+    #[test]
+    fn non_utf8_model_name_is_malformed() {
+        let req = WireRequest {
+            id: 6,
+            body: RequestBody::Info { model: "ab".into() },
+        };
+        let f = req.encode().unwrap();
+        let (ver, mut body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
+        // Corrupt the selector bytes (after id u64 + op u8 + len u8).
+        body[10] = 0xFF;
+        body[11] = 0xFE;
+        let err = WireRequest::decode_body(ver, &body).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)), "{err}");
         assert!(!err.is_fatal());
     }
 

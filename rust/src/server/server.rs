@@ -1,51 +1,67 @@
-//! TCP gateway: the network front end of the serving coordinator.
+//! TCP gateway: the network front end of the serving coordinator —
+//! registry-routed, multi-model.
 //!
 //! ```text
 //! clients ──TCP──> accept loop ──> per-connection reader threads
-//!                                      │  validate + try_submit
-//!                                      v            (Full -> BUSY)
-//!                          [ Service bounded queue ] <── pull ── workers
-//!                                      │ WorkerEvent
-//!                                      v
-//!                                router thread ──> per-connection
-//!                                (match by id)      writer threads
+//!                                      │  resolve model, validate,
+//!                                      v  try_submit (Full -> BUSY)
+//!              [ model 0: Service queue ] <── pull ── workers ┐
+//!              [ model 1: Service queue ] <── pull ── workers ┤
+//!                                      │ WorkerEvent           │
+//!                                      v                       │
+//!                        per-model router threads <────────────┘
+//!                        (match by id) ──> per-connection
+//!                                          writer threads
 //! ```
 //!
 //! Design rules:
 //!
+//! * **Registry-routed.** Every `Infer`/`Info` resolves its model
+//!   selector against the [`ModelRegistry`]: the empty selector (and
+//!   every protocol-v1 frame, which cannot carry one) routes to the
+//!   default model (registry entry 0); an unknown name is a
+//!   `BAD_REQUEST` on that request only.
+//! * **Per-model isolation.** Each model owns its queue, worker pool,
+//!   stats and admission counters — an overloaded or dead model sheds
+//!   or fails *its* traffic while the others keep serving.
 //! * **Shed, never hang.** Admission is [`ServiceHandle::try_submit`];
 //!   a full queue maps to a `BUSY` error response immediately. A
 //!   connection beyond the cap gets one `BUSY` frame and a close.
 //! * **Pipelined.** A connection may have any number of requests in
 //!   flight; responses carry the request id and may arrive out of
-//!   order (different workers finish at different times).
+//!   order (different workers finish at different times). Each
+//!   response is framed at the protocol version its request arrived
+//!   with, so v1 and v2 clients coexist on one gateway.
 //! * **Per-request failure.** Malformed bodies get `BAD_REQUEST` on
 //!   that request only; framing damage (bad magic, oversized length)
 //!   poisons the stream and drops the connection — both without
-//!   touching the worker pool.
+//!   touching any worker pool. An `Infer` using the reserved
+//!   [`CONN_ERR_ID`] is refused with `BAD_REQUEST` — accepting it
+//!   would make its response indistinguishable from a
+//!   connection-level failure.
 //! * **Drain then stop.** Shutdown (wire `Shutdown` message or
 //!   [`Gateway::stop_handle`]) stops admission, waits for in-flight
-//!   requests to finish (bounded by `drain_timeout`), then shuts the
-//!   service down and force-closes lingering connections.
+//!   requests to finish (bounded by `drain_timeout`), then shuts every
+//!   model down and force-closes lingering connections.
 
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{FramePayload, Service, ServiceConfig,
+use crate::coordinator::{FramePayload, ModelRegistry, ServiceConfig,
                          ServiceHandle, ServingReport, Stats,
                          SubmitError, WorkerConfig, WorkerEvent};
 
 use super::protocol::{net_code, read_frame, write_frame, ErrorCode,
                       RequestBody, ResponseBody, WirePayload,
                       WireRequest, WireResponse, CONN_ERR_ID,
-                      KIND_REQUEST};
+                      KIND_REQUEST, NET_ANY, V1};
 
 /// Gateway-level knobs.
 #[derive(Debug, Clone)]
@@ -86,13 +102,15 @@ struct Counters {
     internal: AtomicU64,
 }
 
-/// Point-in-time copy of the gateway counters.
+/// Point-in-time copy of the gateway-wide counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
     pub conns_accepted: u64,
     pub conns_active: u64,
     pub conns_rejected: u64,
-    /// Infer requests received (valid or not).
+    /// Infer requests admitted to routing (sum over models; excludes
+    /// requests refused before a model was resolved, e.g. a reserved
+    /// id or an unknown model — those only count as `bad_request`).
     pub requests: u64,
     /// Infer requests answered with a successful prediction.
     pub served: u64,
@@ -121,31 +139,107 @@ impl Counters {
     }
 }
 
-/// Final gateway summary returned by [`Gateway::wait`].
+/// Per-model admission/outcome counters (atomics).
+#[derive(Default)]
+struct ModelCounters {
+    requests: AtomicU64,
+    served: AtomicU64,
+    busy: AtomicU64,
+    bad_request: AtomicU64,
+    shutting_down: AtomicU64,
+    internal: AtomicU64,
+}
+
+/// Point-in-time copy of one model's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModelCounterSnapshot {
+    /// Infer requests routed to this model (valid or not).
+    pub requests: u64,
+    pub served: u64,
+    pub busy: u64,
+    pub bad_request: u64,
+    pub shutting_down: u64,
+    pub internal: u64,
+}
+
+impl ModelCounters {
+    fn snapshot(&self) -> ModelCounterSnapshot {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        ModelCounterSnapshot {
+            requests: ld(&self.requests),
+            served: ld(&self.served),
+            busy: ld(&self.busy),
+            bad_request: ld(&self.bad_request),
+            shutting_down: ld(&self.shutting_down),
+            internal: ld(&self.internal),
+        }
+    }
+}
+
+/// One mounted model as the gateway threads see it.
+struct ModelRuntime {
+    name: String,
+    handle: ServiceHandle,
+    stats: Mutex<Stats>,
+    failures: Mutex<Vec<String>>,
+    counters: ModelCounters,
+    workers: usize,
+}
+
+/// Final per-model summary inside a [`GatewayReport`].
 #[derive(Debug, Clone)]
-pub struct GatewayReport {
+pub struct ModelReport {
+    pub name: String,
     /// The coordinator-level serving view (latency percentiles from
     /// the bounded histogram, balance, sim FPS/energy).
     pub serving: ServingReport,
+    pub counters: ModelCounterSnapshot,
+}
+
+/// Final gateway summary returned by [`Gateway::wait`]: gateway-wide
+/// counters plus one [`ModelReport`] per mounted model, in registry
+/// order (index 0 = the default model).
+#[derive(Debug, Clone)]
+pub struct GatewayReport {
     pub counters: CounterSnapshot,
+    pub models: Vec<ModelReport>,
+}
+
+impl GatewayReport {
+    /// The default model's report (registry entry 0) — the view v1
+    /// single-model callers mean by "the" serving report.
+    pub fn default_model(&self) -> &ModelReport {
+        &self.models[0]
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelReport> {
+        self.models.iter().find(|m| m.name == name)
+    }
 }
 
 struct PendingEntry {
-    tx: mpsc::Sender<WireResponse>,
+    /// Pre-encoded frames go straight to the connection's writer.
+    tx: mpsc::Sender<Vec<u8>>,
     client_id: u64,
+    /// Protocol version the request arrived with — its response is
+    /// framed the same way.
+    version: u8,
+    /// Registry slot the request was routed to.
+    model: usize,
 }
 
-/// State shared by the accept loop, router, and connection threads.
+/// State shared by the accept loop, routers, and connection threads.
 struct Shared {
-    handle: ServiceHandle,
+    models: Vec<ModelRuntime>,
     /// internal id -> who to answer. Inserted *before* submit so a
     /// response can never race past its route.
     pending: Mutex<HashMap<u64, PendingEntry>>,
-    stats: Mutex<Stats>,
-    failures: Mutex<Vec<String>>,
     counters: Counters,
     next_id: AtomicU64,
     conn_seq: AtomicU64,
+    /// Routers still draining a live worker event stream; the last one
+    /// to exit declares the gateway dead (no model can serve).
+    live_routers: AtomicUsize,
     /// Drain trigger: stops admission and the accept loop.
     stop: AtomicBool,
     /// One socket clone per *live* connection (removed on connection
@@ -153,7 +247,16 @@ struct Shared {
     /// shutdown (readers blocked in `read` otherwise never exit).
     conns: Mutex<HashMap<u64, TcpStream>>,
     started: Instant,
-    workers: usize,
+}
+
+impl Shared {
+    /// Resolve a wire selector: empty = default model (slot 0).
+    fn resolve(&self, selector: &str) -> Option<usize> {
+        if selector.is_empty() {
+            return Some(0);
+        }
+        self.models.iter().position(|m| m.name == selector)
+    }
 }
 
 /// Remote-controllable drain trigger (cheap clone).
@@ -168,51 +271,62 @@ impl GatewayStop {
     }
 }
 
-/// A running gateway: a bound listener, its accept loop, the response
-/// router, and the owned [`Service`].
+/// A running gateway: a bound listener, its accept loop, one response
+/// router per model, and the owned [`ModelRegistry`].
 pub struct Gateway {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    service: Service,
+    registry: ModelRegistry,
     accept: thread::JoinHandle<()>,
-    router: thread::JoinHandle<()>,
+    routers: Vec<thread::JoinHandle<()>>,
     drain_timeout: Duration,
 }
 
 impl Gateway {
-    /// Start the service, bind, and begin accepting. Artifact problems
-    /// fail here (inside `Service::start`), before the port opens.
-    pub fn start(gcfg: GatewayConfig, scfg: ServiceConfig,
-                 wcfg: WorkerConfig) -> Result<Self> {
-        let mut service = Service::start(scfg, wcfg)?;
-        let events = service.take_events()?;
-        let handle = service.handle();
-        let workers = service.worker_count();
+    /// Start from a registry of already-running models, bind, and
+    /// begin accepting.
+    pub fn start(gcfg: GatewayConfig, mut registry: ModelRegistry)
+                 -> Result<Self> {
+        let mut runtimes = Vec::with_capacity(registry.len());
+        let mut event_streams = Vec::with_capacity(registry.len());
+        for idx in 0..registry.len() {
+            let entry = registry.entry_mut(idx);
+            let events = entry.service_mut().take_events()?;
+            let service = entry.service();
+            runtimes.push(ModelRuntime {
+                name: entry.name().to_string(),
+                handle: service.handle(),
+                stats: Mutex::new(Stats::default()),
+                failures: Mutex::new(Vec::new()),
+                counters: ModelCounters::default(),
+                workers: service.worker_count(),
+            });
+            event_streams.push(events);
+        }
         let listener = TcpListener::bind(&gcfg.addr)
             .with_context(|| format!("binding {}", gcfg.addr))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
         let shared = Arc::new(Shared {
-            handle,
+            models: runtimes,
             pending: Mutex::new(HashMap::new()),
-            stats: Mutex::new(Stats::default()),
-            failures: Mutex::new(Vec::new()),
             counters: Counters::default(),
             next_id: AtomicU64::new(1),
             conn_seq: AtomicU64::new(1),
+            live_routers: AtomicUsize::new(event_streams.len()),
             stop: AtomicBool::new(false),
             conns: Mutex::new(HashMap::new()),
             started: Instant::now(),
-            workers,
         });
 
-        let router = {
+        let mut routers = Vec::with_capacity(event_streams.len());
+        for (idx, events) in event_streams.into_iter().enumerate() {
             let shared = shared.clone();
-            thread::Builder::new()
-                .name("skydiver-router".into())
-                .spawn(move || router_loop(events, shared))?
-        };
+            routers.push(thread::Builder::new()
+                .name(format!("skydiver-router-{idx}"))
+                .spawn(move || router_loop(idx, events, shared))?);
+        }
         let accept = {
             let shared = shared.clone();
             let max_conns = gcfg.max_conns.max(1);
@@ -226,11 +340,21 @@ impl Gateway {
         Ok(Self {
             addr,
             shared,
-            service,
+            registry,
             accept,
-            router,
+            routers,
             drain_timeout: gcfg.drain_timeout,
         })
+    }
+
+    /// Single-model convenience: mount one service under its net's
+    /// canonical name ([`NetKind::as_str`](crate::snn::NetKind::as_str))
+    /// — the v1 topology as a one-entry registry.
+    pub fn start_single(gcfg: GatewayConfig, scfg: ServiceConfig,
+                        wcfg: WorkerConfig) -> Result<Self> {
+        let name = wcfg.kind.as_str();
+        let registry = ModelRegistry::single(name, scfg, wcfg)?;
+        Self::start(gcfg, registry)
     }
 
     /// The actually-bound address (resolves port 0).
@@ -238,14 +362,24 @@ impl Gateway {
         self.addr
     }
 
+    /// Mounted model names, registry order (index 0 = default).
+    pub fn model_names(&self) -> Vec<&str> {
+        self.registry.names()
+    }
+
     /// A handle that can trigger drain-then-shutdown from any thread.
     pub fn stop_handle(&self) -> GatewayStop {
         GatewayStop(self.shared.clone())
     }
 
-    /// Live counter snapshot (tests / banners).
+    /// Live gateway-wide counter snapshot (tests / banners).
     pub fn counters(&self) -> CounterSnapshot {
         self.shared.counters.snapshot()
+    }
+
+    /// Live counter snapshot for one model (by registry slot).
+    pub fn model_counters(&self, idx: usize) -> ModelCounterSnapshot {
+        self.shared.models[idx].counters.snapshot()
     }
 
     /// Block until shutdown is triggered (wire message or
@@ -266,9 +400,9 @@ impl Gateway {
     fn finish(self) -> Result<GatewayReport> {
         let Gateway {
             shared,
-            service,
+            registry,
             accept,
-            router,
+            routers,
             drain_timeout,
             ..
         } = self;
@@ -289,15 +423,19 @@ impl Gateway {
             for (_, p) in pending.drain() {
                 shared.counters.shutting_down
                     .fetch_add(1, Ordering::Relaxed);
-                let _ = p.tx.send(err_resp(
-                    p.client_id, ErrorCode::ShuttingDown,
+                shared.models[p.model].counters.shutting_down
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(err_frame(
+                    p.version, p.client_id, ErrorCode::ShuttingDown,
                     "gateway drain timeout"));
             }
         }
-        // Close the queue and join workers; their event senders drop,
-        // which ends the router.
-        let service_result = service.shutdown();
-        let _ = router.join();
+        // Close every queue and join workers; their event senders
+        // drop, which ends the routers.
+        let registry_result = registry.shutdown();
+        for r in routers {
+            let _ = r.join();
+        }
         // Force-close lingering connections so blocked readers exit
         // (connection threads are detached; wait for the active count
         // to hit zero, bounded).
@@ -311,17 +449,24 @@ impl Gateway {
             thread::sleep(Duration::from_millis(5));
         }
 
-        let mut serving = shared.stats.lock().unwrap().report(
-            shared.started.elapsed().as_secs_f64(), crate::CLOCK_HZ,
-            shared.workers);
-        let q = shared.handle.queue_stats();
-        serving.queue_capacity = q.capacity;
-        serving.queue_max_depth = q.max_depth;
-        serving.worker_failures =
-            shared.failures.lock().unwrap().clone();
+        let wall = shared.started.elapsed().as_secs_f64();
+        let models = shared.models.iter().map(|m| {
+            let mut serving = m.stats.lock().unwrap().report(
+                wall, crate::CLOCK_HZ, m.workers);
+            let q = m.handle.queue_stats();
+            serving.queue_capacity = q.capacity;
+            serving.queue_max_depth = q.max_depth;
+            serving.worker_failures =
+                m.failures.lock().unwrap().clone();
+            ModelReport {
+                name: m.name.clone(),
+                serving,
+                counters: m.counters.snapshot(),
+            }
+        }).collect();
         let counters = shared.counters.snapshot();
-        service_result?;
-        Ok(GatewayReport { serving, counters })
+        registry_result?;
+        Ok(GatewayReport { counters, models })
     }
 }
 
@@ -330,6 +475,12 @@ fn err_resp(id: u64, code: ErrorCode, detail: &str) -> WireResponse {
         id,
         body: ResponseBody::Error { code, detail: detail.to_string() },
     }
+}
+
+/// Encode an error response at the peer's protocol version.
+fn err_frame(version: u8, id: u64, code: ErrorCode, detail: &str)
+             -> Vec<u8> {
+    err_resp(id, code, detail).encode(version)
 }
 
 // --------------------------------------------------------- accept loop
@@ -381,11 +532,13 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>,
 }
 
 /// Over-cap connection: one typed `BUSY` frame, then close — the
-/// client learns *why* instead of seeing a bare RST.
+/// client learns *why* instead of seeing a bare RST. Framed at v1 —
+/// nothing from the peer has been read yet, and every client version
+/// decodes v1 response frames.
 fn shed_connection(mut stream: TcpStream) {
-    let resp = err_resp(CONN_ERR_ID, ErrorCode::Busy,
-                        "connection cap reached; retry later");
-    let _ = stream.write_all(&resp.encode());
+    let frame = err_frame(V1, CONN_ERR_ID, ErrorCode::Busy,
+                          "connection cap reached; retry later");
+    let _ = stream.write_all(&frame);
     let _ = stream.flush();
     let _ = stream.shutdown(Shutdown::Both);
 }
@@ -403,7 +556,7 @@ fn handle_conn(stream: TcpStream, conn_id: u64, shared: &Arc<Shared>) {
         Err(_) => return,
     };
     shared.conns.lock().unwrap().insert(conn_id, ctl);
-    let (tx, rx) = mpsc::channel::<WireResponse>();
+    let (tx, rx) = mpsc::channel::<Vec<u8>>();
     let writer = match thread::Builder::new()
         .name("skydiver-conn-writer".into())
         .spawn(move || writer_loop(stream, rx))
@@ -422,18 +575,18 @@ fn handle_conn(stream: TcpStream, conn_id: u64, shared: &Arc<Shared>) {
     }
 }
 
-/// Serialize responses onto the socket. Responses from the router and
-/// from the reader (errors, metrics) interleave through one channel,
-/// so frames never interleave mid-frame. Batches writes: flush only
-/// when the channel momentarily empties.
-fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<WireResponse>) {
+/// Serialize pre-encoded response frames onto the socket. Frames from
+/// the routers and from the reader (errors, metrics) interleave
+/// through one channel, so they never interleave mid-frame. Batches
+/// writes: flush only when the channel momentarily empties.
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
     let mut w = BufWriter::new(stream);
-    while let Ok(resp) = rx.recv() {
-        if write_frame(&mut w, &resp.encode()).is_err() {
+    while let Ok(frame) = rx.recv() {
+        if write_frame(&mut w, &frame).is_err() {
             return;
         }
         while let Ok(next) = rx.try_recv() {
-            if write_frame(&mut w, &next.encode()).is_err() {
+            if write_frame(&mut w, &next).is_err() {
                 return;
             }
         }
@@ -444,11 +597,15 @@ fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<WireResponse>) {
 }
 
 fn read_loop(stream: TcpStream, shared: &Arc<Shared>,
-             tx: &mpsc::Sender<WireResponse>) {
+             tx: &mpsc::Sender<Vec<u8>>) {
     let mut r = BufReader::new(stream);
+    // Version the last well-framed request arrived with — the best
+    // guess for framing connection-level errors (defaults to v1,
+    // which every client version decodes).
+    let mut peer_ver = V1;
     loop {
-        let body = match read_frame(&mut r, KIND_REQUEST) {
-            Ok(Some(body)) => body,
+        let (ver, body) = match read_frame(&mut r, KIND_REQUEST) {
+            Ok(Some(x)) => x,
             // Clean close between frames.
             Ok(None) => return,
             Err(e) => {
@@ -456,12 +613,14 @@ fn read_loop(stream: TcpStream, shared: &Arc<Shared>,
                 // (best effort) so the peer learns why, then drop.
                 shared.counters.bad_request
                     .fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(err_resp(
-                    CONN_ERR_ID, ErrorCode::BadRequest, &e.to_string()));
+                let _ = tx.send(err_frame(
+                    peer_ver, CONN_ERR_ID, ErrorCode::BadRequest,
+                    &e.to_string()));
                 return;
             }
         };
-        let req = match WireRequest::decode_body(&body) {
+        peer_ver = ver;
+        let req = match WireRequest::decode_body(ver, &body) {
             Ok(req) => req,
             Err(e) => {
                 // The frame boundary held: reject this request, keep
@@ -469,62 +628,112 @@ fn read_loop(stream: TcpStream, shared: &Arc<Shared>,
                 // so answer on the reserved connection-error id.
                 shared.counters.bad_request
                     .fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(err_resp(
-                    CONN_ERR_ID, ErrorCode::BadRequest, &e.to_string()));
+                let _ = tx.send(err_frame(
+                    ver, CONN_ERR_ID, ErrorCode::BadRequest,
+                    &e.to_string()));
                 continue;
             }
         };
+        // The reserved id cannot name a request: its response would be
+        // indistinguishable from a connection-level failure.
+        if req.id == CONN_ERR_ID {
+            shared.counters.bad_request
+                .fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(err_frame(
+                ver, CONN_ERR_ID, ErrorCode::BadRequest,
+                &format!("request id {CONN_ERR_ID} is reserved for \
+                          connection-level errors")));
+            continue;
+        }
         match req.body {
-            RequestBody::Infer { net, payload } => {
-                handle_infer(shared, tx, req.id, net, payload);
+            RequestBody::Infer { net, model, payload } => {
+                handle_infer(shared, tx, ver, req.id, net, &model,
+                             payload);
             }
             RequestBody::Metrics => {
                 let text = render_metrics(shared);
                 let _ = tx.send(WireResponse {
                     id: req.id,
                     body: ResponseBody::Metrics { text },
-                });
+                }.encode(ver));
             }
-            RequestBody::Info => {
-                let s = shared.handle.spec();
-                let _ = tx.send(WireResponse {
-                    id: req.id,
-                    body: ResponseBody::Info {
-                        net: net_code(s.kind),
-                        c: s.c as u32,
-                        h: s.h as u32,
-                        w: s.w as u32,
-                        timesteps: s.timesteps as u32,
-                    },
-                });
+            RequestBody::Info { model } => {
+                let resp = match shared.resolve(&model) {
+                    None => err_resp(req.id, ErrorCode::BadRequest,
+                                     &unknown_model(shared, &model)),
+                    Some(idx) => {
+                        let m = &shared.models[idx];
+                        let s = m.handle.spec();
+                        WireResponse {
+                            id: req.id,
+                            body: ResponseBody::Info {
+                                net: net_code(s.kind),
+                                c: s.c as u32,
+                                h: s.h as u32,
+                                w: s.w as u32,
+                                timesteps: s.timesteps as u32,
+                                model: m.name.clone(),
+                                nmodels: shared.models.len() as u8,
+                            },
+                        }
+                    }
+                };
+                let _ = tx.send(resp.encode(ver));
             }
             RequestBody::Shutdown => {
                 let _ = tx.send(WireResponse {
                     id: req.id,
                     body: ResponseBody::ShutdownAck,
-                });
+                }.encode(ver));
                 shared.stop.store(true, Ordering::SeqCst);
             }
         }
     }
 }
 
-fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<WireResponse>,
-                client_id: u64, net: u8, payload: WirePayload) {
+fn unknown_model(shared: &Shared, selector: &str) -> String {
+    let names: Vec<&str> =
+        shared.models.iter().map(|m| m.name.as_str()).collect();
+    format!("unknown model '{selector}'; mounted: [{}] (empty selector \
+             = default '{}')", names.join(", "), names[0])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
+                version: u8, client_id: u64, net: u8, model: &str,
+                payload: WirePayload) {
+    let idx = match shared.resolve(model) {
+        Some(idx) => idx,
+        None => {
+            shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(err_frame(
+                version, client_id, ErrorCode::BadRequest,
+                &unknown_model(shared, model)));
+            return;
+        }
+    };
+    let m = &shared.models[idx];
     shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+    m.counters.requests.fetch_add(1, Ordering::Relaxed);
     if shared.stop.load(Ordering::SeqCst) {
         shared.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(err_resp(client_id, ErrorCode::ShuttingDown,
-                                 "gateway is draining"));
+        m.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(err_frame(version, client_id,
+                                  ErrorCode::ShuttingDown,
+                                  "gateway is draining"));
         return;
     }
-    let spec = shared.handle.spec();
-    if net != net_code(spec.kind) {
+    let spec = m.handle.spec();
+    // v1 clients address by net code; check it against the routed
+    // model so a misdirected request fails loudly instead of running
+    // through the wrong network. NET_ANY (the v2 idiom) skips this.
+    if net != NET_ANY && net != net_code(spec.kind) {
         shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(err_resp(
-            client_id, ErrorCode::BadRequest,
-            &format!("server runs net {:?}, request asked for code {net}",
-                     spec.kind)));
+        m.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(err_frame(
+            version, client_id, ErrorCode::BadRequest,
+            &format!("model '{}' runs net {:?}, request asked for \
+                      code {net}", m.name, spec.kind)));
         return;
     }
     let payload = match payload {
@@ -533,51 +742,61 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<WireResponse>,
             FramePayload::Spikes { timesteps: timesteps as usize, words }
         }
     };
-    // Validate against the frame contract *here*: a malformed request
-    // costs one response, never a worker.
+    // Validate against the model's frame contract *here*: a malformed
+    // request costs one response, never a worker.
     if let Err(detail) = spec.validate(&payload) {
         shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(err_resp(client_id, ErrorCode::BadRequest,
-                                 &detail));
+        m.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(err_frame(version, client_id,
+                                  ErrorCode::BadRequest, &detail));
         return;
     }
     let internal = shared.next_id.fetch_add(1, Ordering::Relaxed);
     shared.pending.lock().unwrap().insert(internal, PendingEntry {
         tx: tx.clone(),
         client_id,
+        version,
+        model: idx,
     });
-    match shared.handle.try_submit(internal, payload) {
+    match m.handle.try_submit(internal, payload) {
         Ok(()) => {}
         Err(e) => {
             shared.pending.lock().unwrap().remove(&internal);
             let code = match e {
                 SubmitError::Full { .. } => {
                     shared.counters.busy.fetch_add(1, Ordering::Relaxed);
+                    m.counters.busy.fetch_add(1, Ordering::Relaxed);
                     ErrorCode::Busy
                 }
                 SubmitError::Closed | SubmitError::NoWorkers => {
                     shared.counters.shutting_down
                         .fetch_add(1, Ordering::Relaxed);
+                    m.counters.shutting_down
+                        .fetch_add(1, Ordering::Relaxed);
                     ErrorCode::ShuttingDown
                 }
             };
-            let _ = tx.send(err_resp(client_id, code, &e.to_string()));
+            let _ = tx.send(err_frame(version, client_id, code,
+                                      &e.to_string()));
         }
     }
 }
 
 // -------------------------------------------------------------- router
 
-/// Owns the worker event stream: matches responses back to their
-/// connection by internal id, folds serving stats, and fails exactly
-/// the requests a dying worker had in hand.
-fn router_loop(events: mpsc::Receiver<WorkerEvent>,
+/// Owns one model's worker event stream: matches responses back to
+/// their connection by internal id, folds that model's serving stats,
+/// and fails exactly the requests a dying worker had in hand.
+fn router_loop(model_idx: usize,
+               events: mpsc::Receiver<WorkerEvent>,
                shared: Arc<Shared>) {
+    let m = &shared.models[model_idx];
     while let Ok(ev) = events.recv() {
         match ev {
             WorkerEvent::Served(r) => {
-                shared.stats.lock().unwrap().record(&r);
+                m.stats.lock().unwrap().record(&r);
                 shared.counters.served.fetch_add(1, Ordering::Relaxed);
+                m.counters.served.fetch_add(1, Ordering::Relaxed);
                 let entry = shared.pending.lock().unwrap().remove(&r.id);
                 if let Some(p) = entry {
                     let prediction = r.output_counts.iter().enumerate()
@@ -592,51 +811,70 @@ fn router_loop(events: mpsc::Receiver<WorkerEvent>,
                             latency_us: r.latency_us,
                             worker: r.worker as u32,
                         },
-                    });
+                    }.encode(p.version));
                 }
             }
             WorkerEvent::Failed { worker, error, lost } => {
-                shared.failures.lock().unwrap()
+                m.failures.lock().unwrap()
                     .push(format!("worker {worker}: {error}"));
-                fail_ids(&shared, &lost, ErrorCode::Internal, &error);
+                fail_ids(&shared, model_idx, &lost,
+                         ErrorCode::Internal, &error);
             }
             WorkerEvent::Undeliverable { lost } => {
-                fail_ids(&shared, &lost, ErrorCode::ShuttingDown,
-                         "no live workers");
+                fail_ids(&shared, model_idx, &lost,
+                         ErrorCode::ShuttingDown, "no live workers");
             }
         }
     }
-    // Event stream disconnected: every worker (and the dispatcher) is
-    // gone, so nothing still in `pending` can ever be answered — a
-    // request sitting in the queue when the last worker died produced
-    // no Failed/Undeliverable event naming it. Fail the remainder and
-    // trigger drain-shutdown: a gateway with no workers must die
-    // loudly, not hold clients on recv forever.
+    // Event stream disconnected: every worker (and the dispatcher) of
+    // THIS model is gone, so none of its pending requests can ever be
+    // answered — a request sitting in the queue when the last worker
+    // died produced no Failed/Undeliverable event naming it. Fail this
+    // model's remainder; the other models keep serving. Only when the
+    // last router exits does the gateway as a whole die (loudly, via
+    // drain-shutdown) — a gateway with no serviceable model must not
+    // hold clients on recv forever.
     {
         let mut pending = shared.pending.lock().unwrap();
-        for (_, p) in pending.drain() {
-            shared.counters.internal.fetch_add(1, Ordering::Relaxed);
-            let _ = p.tx.send(err_resp(
-                p.client_id, ErrorCode::Internal,
-                "all workers exited"));
+        let dead: Vec<u64> = pending.iter()
+            .filter(|(_, p)| p.model == model_idx)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in dead {
+            if let Some(p) = pending.remove(&id) {
+                shared.counters.internal.fetch_add(1, Ordering::Relaxed);
+                m.counters.internal.fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(err_frame(
+                    p.version, p.client_id, ErrorCode::Internal,
+                    &format!("all workers for model '{}' exited",
+                             m.name)));
+            }
         }
     }
-    shared.stop.store(true, Ordering::SeqCst);
+    if shared.live_routers.fetch_sub(1, Ordering::SeqCst) == 1 {
+        shared.stop.store(true, Ordering::SeqCst);
+    }
 }
 
-fn fail_ids(shared: &Shared, ids: &[u64], code: ErrorCode,
-            detail: &str) {
-    let counter = match code {
-        ErrorCode::ShuttingDown => &shared.counters.shutting_down,
-        ErrorCode::Busy => &shared.counters.busy,
-        ErrorCode::BadRequest => &shared.counters.bad_request,
-        ErrorCode::Internal => &shared.counters.internal,
+fn fail_ids(shared: &Shared, model_idx: usize, ids: &[u64],
+            code: ErrorCode, detail: &str) {
+    let m = &shared.models[model_idx];
+    let (counter, mcounter) = match code {
+        ErrorCode::ShuttingDown => (&shared.counters.shutting_down,
+                                    &m.counters.shutting_down),
+        ErrorCode::Busy => (&shared.counters.busy, &m.counters.busy),
+        ErrorCode::BadRequest => (&shared.counters.bad_request,
+                                  &m.counters.bad_request),
+        ErrorCode::Internal => (&shared.counters.internal,
+                                &m.counters.internal),
     };
     let mut pending = shared.pending.lock().unwrap();
     for id in ids {
         if let Some(p) = pending.remove(id) {
             counter.fetch_add(1, Ordering::Relaxed);
-            let _ = p.tx.send(err_resp(p.client_id, code, detail));
+            mcounter.fetch_add(1, Ordering::Relaxed);
+            let _ = p.tx.send(err_frame(p.version, p.client_id, code,
+                                        detail));
         }
     }
 }
@@ -649,16 +887,27 @@ fn push_metric(out: &mut String, name: &str, kind: &str, v: f64) {
     let _ = writeln!(out, "{name} {v}");
 }
 
-/// Prometheus-style plaintext exposition of the gateway counters, the
-/// queue, and the serving report (the wire `metrics` request).
+/// One `# TYPE` line, then one `{model="<name>"}`-labelled sample per
+/// model — the single emission path for every per-model series.
+fn push_labelled(out: &mut String, shared: &Shared, name: &str,
+                 kind: &str, values: &[f64]) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (m, v) in shared.models.iter().zip(values) {
+        let _ = writeln!(out, "{name}{{model=\"{}\"}} {v}", m.name);
+    }
+}
+
+/// Prometheus-style plaintext exposition: gateway-wide counters
+/// (unlabelled, as in protocol v1 days) plus per-model series labelled
+/// `{model="<name>"}` — admission counters, queue, serving report and
+/// latency quantiles per mounted model.
 fn render_metrics(shared: &Shared) -> String {
     use std::fmt::Write as _;
     let c = shared.counters.snapshot();
-    let q = shared.handle.queue_stats();
-    let rep = shared.stats.lock().unwrap().report(
-        shared.started.elapsed().as_secs_f64(), crate::CLOCK_HZ,
-        shared.workers);
-    let mut out = String::with_capacity(2048);
+    let mut out = String::with_capacity(4096);
+    push_metric(&mut out, "skydiver_models_mounted", "gauge",
+                shared.models.len() as f64);
     push_metric(&mut out, "skydiver_connections_accepted_total",
                 "counter", c.conns_accepted as f64);
     push_metric(&mut out, "skydiver_connections_rejected_total",
@@ -677,35 +926,76 @@ fn render_metrics(shared: &Shared) -> String {
                 c.shutting_down as f64);
     push_metric(&mut out, "skydiver_internal_error_total", "counter",
                 c.internal as f64);
-    push_metric(&mut out, "skydiver_queue_depth", "gauge",
-                q.depth as f64);
-    push_metric(&mut out, "skydiver_queue_capacity", "gauge",
-                q.capacity as f64);
-    push_metric(&mut out, "skydiver_queue_max_depth", "gauge",
-                q.max_depth as f64);
-    push_metric(&mut out, "skydiver_queue_pushed_total", "counter",
-                q.pushed as f64);
-    push_metric(&mut out, "skydiver_queue_popped_total", "counter",
-                q.popped as f64);
-    push_metric(&mut out, "skydiver_frames_served_total", "counter",
-                rep.frames as f64);
-    push_metric(&mut out, "skydiver_served_fps", "gauge",
-                rep.served_fps);
-    push_metric(&mut out, "skydiver_host_balance_ratio", "gauge",
-                rep.host_balance_ratio);
-    push_metric(&mut out, "skydiver_sim_fps", "gauge", rep.sim_fps);
-    push_metric(&mut out, "skydiver_sim_energy_uj_mean", "gauge",
-                rep.mean_energy_uj);
+
+    // One snapshot per model per scrape, so every series of one
+    // exposition comes from the same instant (a scrape that locked
+    // the queue once per metric could show pushed-popped != depth).
+    let wall = shared.started.elapsed().as_secs_f64();
+    let mcs: Vec<ModelCounterSnapshot> =
+        shared.models.iter().map(|m| m.counters.snapshot()).collect();
+    let queues: Vec<crate::coordinator::QueueStats> = shared.models
+        .iter().map(|m| m.handle.queue_stats()).collect();
+    let reports: Vec<ServingReport> = shared.models.iter()
+        .map(|m| m.stats.lock().unwrap().report(wall, crate::CLOCK_HZ,
+                                                m.workers))
+        .collect();
+
+    let col = |f: &dyn Fn(usize) -> f64| -> Vec<f64> {
+        (0..shared.models.len()).map(f).collect()
+    };
+    // Per-model admission counters.
+    push_labelled(&mut out, shared, "skydiver_model_requests_total",
+                  "counter", &col(&|i| mcs[i].requests as f64));
+    push_labelled(&mut out, shared, "skydiver_model_served_total",
+                  "counter", &col(&|i| mcs[i].served as f64));
+    push_labelled(&mut out, shared, "skydiver_model_busy_total",
+                  "counter", &col(&|i| mcs[i].busy as f64));
+    push_labelled(&mut out, shared,
+                  "skydiver_model_bad_request_total", "counter",
+                  &col(&|i| mcs[i].bad_request as f64));
+    push_labelled(&mut out, shared,
+                  "skydiver_model_internal_error_total", "counter",
+                  &col(&|i| mcs[i].internal as f64));
+    // Per-model queue state.
+    push_labelled(&mut out, shared, "skydiver_queue_depth", "gauge",
+                  &col(&|i| queues[i].depth as f64));
+    push_labelled(&mut out, shared, "skydiver_queue_capacity", "gauge",
+                  &col(&|i| queues[i].capacity as f64));
+    push_labelled(&mut out, shared, "skydiver_queue_max_depth", "gauge",
+                  &col(&|i| queues[i].max_depth as f64));
+    push_labelled(&mut out, shared, "skydiver_queue_pushed_total",
+                  "counter", &col(&|i| queues[i].pushed as f64));
+    push_labelled(&mut out, shared, "skydiver_queue_popped_total",
+                  "counter", &col(&|i| queues[i].popped as f64));
+    // Per-model serving reports (histogram-backed).
+    push_labelled(&mut out, shared, "skydiver_frames_served_total",
+                  "counter", &col(&|i| reports[i].frames as f64));
+    push_labelled(&mut out, shared, "skydiver_served_fps", "gauge",
+                  &col(&|i| reports[i].served_fps));
+    push_labelled(&mut out, shared, "skydiver_host_balance_ratio",
+                  "gauge", &col(&|i| reports[i].host_balance_ratio));
+    push_labelled(&mut out, shared, "skydiver_sim_fps", "gauge",
+                  &col(&|i| reports[i].sim_fps));
+    push_labelled(&mut out, shared, "skydiver_sim_energy_uj_mean",
+                  "gauge", &col(&|i| reports[i].mean_energy_uj));
     let _ = writeln!(out, "# TYPE skydiver_latency_us summary");
-    for (quant, v) in [("0.5", rep.p50_us), ("0.95", rep.p95_us),
-                       ("0.99", rep.p99_us)] {
-        let _ = writeln!(
-            out, "skydiver_latency_us{{quantile=\"{quant}\"}} {v}");
+    for (m, rep) in shared.models.iter().zip(&reports) {
+        for (quant, v) in [("0.5", rep.p50_us), ("0.95", rep.p95_us),
+                           ("0.99", rep.p99_us)] {
+            let _ = writeln!(
+                out,
+                "skydiver_latency_us{{model=\"{}\",quantile=\
+                 \"{quant}\"}} {v}", m.name);
+        }
     }
     let _ = writeln!(out, "# TYPE skydiver_worker_frames_total counter");
-    for (i, n) in rep.per_worker.iter().enumerate() {
-        let _ = writeln!(
-            out, "skydiver_worker_frames_total{{worker=\"{i}\"}} {n}");
+    for (m, rep) in shared.models.iter().zip(&reports) {
+        for (i, n) in rep.per_worker.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "skydiver_worker_frames_total{{model=\"{}\",\
+                 worker=\"{i}\"}} {n}", m.name);
+        }
     }
     out
 }

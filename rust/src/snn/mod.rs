@@ -37,6 +37,24 @@ impl NetKind {
             (NetKind::Segmenter, false) => "segmenter_plain",
         }
     }
+
+    /// Canonical lower-case name — the CLI `--net`/`--model` spelling,
+    /// the default registry model name, and the wire model selector.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NetKind::Classifier => "classifier",
+            NetKind::Segmenter => "segmenter",
+        }
+    }
+
+    /// Parse the canonical name (inverse of [`NetKind::as_str`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "classifier" => NetKind::Classifier,
+            "segmenter" => NetKind::Segmenter,
+            _ => return None,
+        })
+    }
 }
 
 /// Geometry of one conv layer instance inside a concrete network variant.

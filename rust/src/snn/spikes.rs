@@ -21,7 +21,7 @@ pub struct SpikeMap {
 
 impl SpikeMap {
     pub fn zeros(c: usize, h: usize, w: usize) -> Self {
-        let wpc = (h * w + 63) / 64;
+        let wpc = (h * w).div_ceil(64);
         Self { c, h, w, wpc, words: vec![0; c * wpc] }
     }
 
@@ -35,7 +35,7 @@ impl SpikeMap {
     /// this constructor remains for callers that build words externally.
     pub fn from_words(c: usize, h: usize, w: usize, words: Vec<u64>)
                       -> Self {
-        let wpc = (h * w + 63) / 64;
+        let wpc = (h * w).div_ceil(64);
         assert_eq!(words.len(), c * wpc);
         Self { c, h, w, wpc, words }
     }
@@ -47,7 +47,7 @@ impl SpikeMap {
     pub fn from_f32(c: usize, h: usize, w: usize, data: &[f32]) -> Self {
         assert_eq!(data.len(), c * h * w);
         let per = h * w;
-        let wpc = (per + 63) / 64;
+        let wpc = per.div_ceil(64);
         let mut words = vec![0u64; c * wpc];
         for ch in 0..c {
             let src = &data[ch * per..(ch + 1) * per];

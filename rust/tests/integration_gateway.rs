@@ -3,9 +3,11 @@
 //! real TCP clients. Covers the acceptance criteria: ≥4 concurrent
 //! connections streaming ≥1k frames with predictions byte-identical
 //! to the in-process `Service` path, BUSY shedding under a tiny
-//! queue (counted in metrics), malformed-frame rejection, connection
-//! capping, the spikes payload path, and graceful drain-shutdown —
-//! no hangs, no panics.
+//! queue (counted in metrics), malformed-frame rejection, the
+//! reserved-request-id rejection, connection capping, the spikes
+//! payload path, and graceful drain-shutdown — no hangs, no panics.
+//! (Multi-model routing has its own suite:
+//! `integration_multimodel.rs`.)
 
 use std::collections::HashMap;
 use std::io::{BufReader, Write};
@@ -19,7 +21,7 @@ use skydiver::coordinator::{DispatchMode, Policy, Service,
 use skydiver::data::SplitMix64;
 use skydiver::power::EnergyModel;
 use skydiver::server::protocol::{read_frame, KIND_REQUEST, MAGIC,
-                                 VERSION};
+                                 NET_ANY, VERSION};
 use skydiver::server::{Client, ErrorCode, Gateway, GatewayConfig,
                        RequestBody, ResponseBody, WirePayload,
                        WireRequest, WireResponse};
@@ -66,8 +68,8 @@ fn start_gateway(label: &str, workers: usize, queue_cap: usize,
         max_conns,
         drain_timeout: Duration::from_secs(30),
     };
-    let gw = Gateway::start(gcfg, service_cfg(workers, queue_cap),
-                            worker_cfg(artifacts(label)))
+    let gw = Gateway::start_single(gcfg, service_cfg(workers, queue_cap),
+                                   worker_cfg(artifacts(label)))
         .expect("gateway start");
     let addr = gw.local_addr().to_string();
     (gw, addr)
@@ -115,6 +117,7 @@ fn loopback_1k_frames_match_in_process_service() {
                                 id: gid,
                                 body: RequestBody::Infer {
                                     net: info.net,
+                                    model: String::new(),
                                     payload: WirePayload::Pixels(
                                         frame_pixels(0xF00D, gid, n)),
                                 },
@@ -146,11 +149,16 @@ fn loopback_1k_frames_match_in_process_service() {
     assert_eq!(report.counters.served, (CONNS as u64) * PER_CONN);
     assert_eq!(report.counters.bad_request, 0);
     assert_eq!(report.counters.internal, 0);
-    assert!(report.serving.worker_failures.is_empty(),
-            "{:?}", report.serving.worker_failures);
-    assert!(report.serving.per_worker.iter().all(|&c| c > 0),
+    let serving = &report.default_model().serving;
+    assert!(serving.worker_failures.is_empty(),
+            "{:?}", serving.worker_failures);
+    assert!(serving.per_worker.iter().all(|&c| c > 0),
             "1k pipelined frames must reach all 4 workers: {:?}",
-            report.serving.per_worker);
+            serving.per_worker);
+    // The single mounted model accounts for every gateway-level serve.
+    assert_eq!(report.default_model().counters.served,
+               report.counters.served);
+    assert_eq!(report.default_model().name, "classifier");
 
     // The same 1000 frames through the in-process Service.
     let service = Service::start(service_cfg(2, 256),
@@ -194,7 +202,7 @@ fn spike_payload_matches_pixel_payload() {
     for id in 0..12u64 {
         let pixels = frame_pixels(0x5EED, id, n);
         let via_pixels = client
-            .infer_pixels(id, NetKind::Classifier, pixels.clone())
+            .infer_pixels(id, "", pixels.clone())
             .unwrap();
         let train = encode_phased_u8(&pixels, info.c, info.h, info.w,
                                      info.timesteps);
@@ -205,8 +213,7 @@ fn spike_payload_matches_pixel_payload() {
             }
         }
         let via_spikes = client
-            .infer_spikes(1000 + id, NetKind::Classifier,
-                          info.timesteps as u32, words)
+            .infer_spikes(1000 + id, "", info.timesteps as u32, words)
             .unwrap();
         match (via_pixels.body, via_spikes.body) {
             (ResponseBody::Infer { output_counts: a, .. },
@@ -237,7 +244,8 @@ fn overload_sheds_busy_counts_it_and_drains() {
         client.send(&WireRequest {
             id,
             body: RequestBody::Infer {
-                net: info.net,
+                net: NET_ANY,
+                model: String::new(),
                 payload: WirePayload::Pixels(
                     frame_pixels(0xB057, id, n)),
             },
@@ -260,15 +268,20 @@ fn overload_sheds_busy_counts_it_and_drains() {
     assert!(ok > 0, "some frames must still be served");
     assert_eq!(ok + busy, burst);
 
-    // Shed load is visible in the metrics exposition.
+    // Shed load is visible in the metrics exposition — both the
+    // gateway-wide counter and the per-model labelled series.
     let text = client.metrics().unwrap();
     let busy_line = text.lines()
         .find(|l| l.starts_with("skydiver_busy_total "))
         .expect("metrics must expose skydiver_busy_total");
     let v: f64 = busy_line.rsplit(' ').next().unwrap().parse().unwrap();
     assert!(v >= busy as f64, "metrics busy {v} < observed {busy}");
-    assert!(text.contains("skydiver_queue_capacity"));
-    assert!(text.contains("skydiver_latency_us{quantile=\"0.99\"}"));
+    assert!(text.contains(
+        "skydiver_model_busy_total{model=\"classifier\"}"));
+    assert!(text.contains(
+        "skydiver_queue_capacity{model=\"classifier\"}"));
+    assert!(text.contains(
+        "skydiver_latency_us{model=\"classifier\",quantile=\"0.99\"}"));
 
     client.shutdown_server().unwrap();
     drop(client);
@@ -277,7 +290,8 @@ fn overload_sheds_busy_counts_it_and_drains() {
     assert_eq!(report.counters.busy, busy);
     assert_eq!(report.counters.served + report.counters.busy,
                report.counters.requests);
-    assert_eq!(report.serving.queue_capacity, 1);
+    assert_eq!(report.default_model().serving.queue_capacity, 1);
+    assert_eq!(report.default_model().counters.busy, busy);
 }
 
 /// Malformed frames: framing damage answers with BAD_REQUEST and
@@ -289,8 +303,8 @@ fn malformed_frames_are_rejected_cleanly() {
     let (gw, addr) = start_gateway("malformed", 1, 16, 8);
 
     let expect_bad_request = |r: &mut BufReader<TcpStream>| {
-        let body = read_frame(r, KIND_RESPONSE).unwrap().unwrap();
-        let resp = WireResponse::decode_body(&body).unwrap();
+        let (ver, body) = read_frame(r, KIND_RESPONSE).unwrap().unwrap();
+        let resp = WireResponse::decode_body(ver, &body).unwrap();
         // Connection-level errors answer on the reserved id, so they
         // can never be confused with a pipelined request's response.
         assert_eq!(resp.id, u64::MAX);
@@ -347,11 +361,14 @@ fn malformed_frames_are_rejected_cleanly() {
         let mut r = BufReader::new(s.try_clone().unwrap());
         expect_bad_request(&mut r);
         // Same connection, now a valid request:
-        s.write_all(&WireRequest { id: 9, body: RequestBody::Info }
-                        .encode()).unwrap();
+        s.write_all(&WireRequest {
+            id: 9,
+            body: RequestBody::Info { model: String::new() },
+        }.encode().unwrap()).unwrap();
         s.flush().unwrap();
-        let body = read_frame(&mut r, KIND_RESPONSE).unwrap().unwrap();
-        let resp = WireResponse::decode_body(&body).unwrap();
+        let (ver, body) =
+            read_frame(&mut r, KIND_RESPONSE).unwrap().unwrap();
+        let resp = WireResponse::decode_body(ver, &body).unwrap();
         assert_eq!(resp.id, 9);
         assert!(matches!(resp.body, ResponseBody::Info { .. }));
     }
@@ -360,28 +377,91 @@ fn malformed_frames_are_rejected_cleanly() {
     let mut client = Client::connect(&addr).unwrap();
     let info = client.info().unwrap();
     let good = vec![0u8; info.pixels_len()];
-    let resp = client
-        .infer_pixels(1, NetKind::Classifier, good.clone()).unwrap();
+    let resp = client.infer_pixels(1, "", good.clone()).unwrap();
     assert!(matches!(resp.body, ResponseBody::Infer { .. }));
-    let resp = client
-        .infer_pixels(2, NetKind::Classifier, vec![0u8; 3]).unwrap();
+    let resp = client.infer_pixels(2, "", vec![0u8; 3]).unwrap();
     match resp.body {
         ResponseBody::Error { code, .. } => {
             assert_eq!(code, ErrorCode::BadRequest);
         }
         other => panic!("expected BAD_REQUEST, got {other:?}"),
     }
-    let resp = client
-        .infer_pixels(3, NetKind::Classifier, good).unwrap();
+    let resp = client.infer_pixels(3, "", good).unwrap();
     assert!(matches!(resp.body, ResponseBody::Infer { .. }),
             "worker pool must survive bad payloads");
     drop(client);
 
     let report = gw.stop_and_wait().unwrap();
     assert!(report.counters.bad_request >= 4);
-    assert!(report.serving.worker_failures.is_empty(),
+    assert!(report.default_model().serving.worker_failures.is_empty(),
             "bad requests must never kill workers: {:?}",
-            report.serving.worker_failures);
+            report.default_model().serving.worker_failures);
+}
+
+/// The reserved connection-error id (`u64::MAX`) cannot name a
+/// request: the gateway must answer `BAD_REQUEST` instead of serving
+/// it — a served response with that id would be indistinguishable
+/// from a connection-level failure. The connection survives and no
+/// worker ever sees the frame.
+#[test]
+fn reserved_request_id_is_rejected_with_bad_request() {
+    use skydiver::server::protocol::KIND_RESPONSE;
+    let (gw, addr) = start_gateway("reserved-id", 1, 16, 8);
+
+    // Client::send refuses the reserved id, so craft the frame
+    // directly — exactly what a buggy or hostile client would put on
+    // the wire.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+
+    // A well-formed Infer with the reserved id (correct payload size,
+    // so only the id check can reject it).
+    let n = SIDE * SIDE;
+    let evil = WireRequest {
+        id: u64::MAX,
+        body: RequestBody::Infer {
+            net: NET_ANY,
+            model: String::new(),
+            payload: WirePayload::Pixels(vec![7u8; n]),
+        },
+    }.encode().unwrap();
+    s.write_all(&evil).unwrap();
+    s.flush().unwrap();
+    let (ver, body) = read_frame(&mut r, KIND_RESPONSE).unwrap().unwrap();
+    let resp = WireResponse::decode_body(ver, &body).unwrap();
+    assert_eq!(resp.id, u64::MAX);
+    match resp.body {
+        ResponseBody::Error { code, detail } => {
+            assert_eq!(code, ErrorCode::BadRequest);
+            assert!(detail.contains("reserved"), "{detail}");
+        }
+        other => panic!("expected BAD_REQUEST, got {other:?}"),
+    }
+
+    // The connection is still usable: a normal request on it serves.
+    let ok = WireRequest {
+        id: 1,
+        body: RequestBody::Infer {
+            net: NET_ANY,
+            model: String::new(),
+            payload: WirePayload::Pixels(vec![7u8; n]),
+        },
+    }.encode().unwrap();
+    s.write_all(&ok).unwrap();
+    s.flush().unwrap();
+    let (ver, body) = read_frame(&mut r, KIND_RESPONSE).unwrap().unwrap();
+    let resp = WireResponse::decode_body(ver, &body).unwrap();
+    assert_eq!(resp.id, 1);
+    assert!(matches!(resp.body, ResponseBody::Infer { .. }));
+    drop((s, r));
+
+    let report = gw.stop_and_wait().unwrap();
+    assert!(report.counters.bad_request >= 1);
+    // The rejected frame never counted as an admitted request and
+    // never reached a worker.
+    assert_eq!(report.counters.requests, 1);
+    assert_eq!(report.counters.served, 1);
+    assert!(report.default_model().serving.worker_failures.is_empty());
 }
 
 /// Connections beyond `max_conns` get a typed BUSY frame and a close;
@@ -398,8 +478,8 @@ fn connection_cap_sheds_with_typed_busy() {
     thread::sleep(Duration::from_millis(100));
     let second = TcpStream::connect(&addr).unwrap();
     let mut r = BufReader::new(second);
-    let body = read_frame(&mut r, KIND_RESPONSE).unwrap().unwrap();
-    let resp = WireResponse::decode_body(&body).unwrap();
+    let (ver, body) = read_frame(&mut r, KIND_RESPONSE).unwrap().unwrap();
+    let resp = WireResponse::decode_body(ver, &body).unwrap();
     assert_eq!(resp.id, u64::MAX, "shed is a connection-level error");
     match resp.body {
         ResponseBody::Error { code, .. } => {
@@ -411,8 +491,7 @@ fn connection_cap_sheds_with_typed_busy() {
 
     // The first connection is unaffected.
     let resp = first
-        .infer_pixels(1, NetKind::Classifier,
-                      vec![0u8; info.pixels_len()])
+        .infer_pixels(1, "", vec![0u8; info.pixels_len()])
         .unwrap();
     assert!(matches!(resp.body, ResponseBody::Infer { .. }));
     drop(first);

@@ -1,0 +1,341 @@
+//! Multi-model serving acceptance: one gateway process mounts the
+//! classifier *and* the segmenter (synthetic artifacts, hermetic),
+//! a single TCP connection drives interleaved pipelined requests
+//! against both by model name, and every response is byte-identical
+//! to the corresponding single-model in-process `Service` path.
+//! Protocol-v1 requests against the same gateway still succeed via
+//! default-model routing, misaddressed net codes fail loudly, and
+//! the per-model metrics/report views add up.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use skydiver::coordinator::{DispatchMode, ModelRegistry, ModelSpec,
+                            Policy, Service, ServiceConfig,
+                            WorkerConfig};
+use skydiver::data::SplitMix64;
+use skydiver::power::EnergyModel;
+use skydiver::server::protocol::{read_frame, KIND_RESPONSE, NET_ANY};
+use skydiver::server::{Client, ErrorCode, Gateway, GatewayConfig,
+                       RequestBody, ResponseBody, WirePayload,
+                       WireRequest, WireResponse};
+use skydiver::sim::ArchConfig;
+use skydiver::snn::NetKind;
+
+const CLS_SIDE: usize = 24; // classifier: 1 x 24 x 24, 6 timesteps
+const SEG_SIDE: usize = 12; // segmenter: 3 x 12 x 12, 4 timesteps
+
+fn artifacts(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(
+        format!("skydiver-multimodel-{label}-{}", std::process::id()));
+    skydiver::data::write_synthetic_classifier(&dir, CLS_SIDE).unwrap();
+    skydiver::data::write_synthetic_segmenter(&dir, SEG_SIDE).unwrap();
+    dir
+}
+
+fn worker_cfg(artifacts: PathBuf, kind: NetKind) -> WorkerConfig {
+    WorkerConfig {
+        artifacts,
+        kind,
+        aprc: true,
+        policy: Policy::Cbws,
+        arch: ArchConfig::default(),
+        energy: EnergyModel::default(),
+        use_runtime: false,
+        timesteps: None,
+        sweep_threads: 1,
+    }
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        batch_max: 8,
+        queue_cap: 256,
+        batch_wait: Duration::from_millis(2),
+        dispatch: DispatchMode::WorkQueue,
+    }
+}
+
+fn start_two_model_gateway(label: &str) -> (Gateway, String) {
+    let dir = artifacts(label);
+    let registry = ModelRegistry::start(vec![
+        ModelSpec {
+            name: "classifier".into(),
+            scfg: service_cfg(),
+            wcfg: worker_cfg(dir.clone(), NetKind::Classifier),
+        },
+        ModelSpec {
+            name: "segmenter".into(),
+            scfg: service_cfg(),
+            wcfg: worker_cfg(dir, NetKind::Segmenter),
+        },
+    ]).expect("registry start");
+    let gcfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: 16,
+        drain_timeout: Duration::from_secs(30),
+    };
+    let gw = Gateway::start(gcfg, registry).expect("gateway start");
+    let addr = gw.local_addr().to_string();
+    (gw, addr)
+}
+
+/// Deterministic mixed workload, regenerable from (seed, id).
+fn frame_pixels(seed: u64, id: u64, n: usize) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed ^ id.wrapping_mul(0x9E37));
+    if id % 4 == 0 {
+        (0..n).map(|_| rng.next_below(256) as u8).collect()
+    } else {
+        (0..n)
+            .map(|_| if rng.next_below(100) < 5 { 255 } else { 0 })
+            .collect()
+    }
+}
+
+/// Run `ids`' frames through a fresh single-model in-process Service
+/// and return id -> output_counts — the byte-equality reference.
+fn in_process_reference(label: &str, kind: NetKind, seed: u64,
+                        ids: &[u64]) -> HashMap<u64, Vec<u32>> {
+    let service = Service::start(
+        service_cfg(), worker_cfg(artifacts(label), kind)).unwrap();
+    let n = service.frame_spec().pixels_len();
+    for &id in ids {
+        service.submit(id, frame_pixels(seed, id, n)).unwrap();
+    }
+    let (resps, _) = service
+        .collect_within(ids.len(), skydiver::CLOCK_HZ,
+                        Duration::from_secs(300))
+        .unwrap();
+    service.shutdown().unwrap();
+    resps.into_iter().map(|r| (r.id, r.output_counts)).collect()
+}
+
+/// Acceptance: interleaved classifier/segmenter traffic over ONE
+/// pipelined connection; every response byte-identical to the
+/// single-model in-process path for its model.
+#[test]
+fn interleaved_two_model_traffic_matches_in_process_paths() {
+    const FRAMES: u64 = 120; // even ids -> classifier, odd -> segmenter
+    const SEED: u64 = 0x2A0D;
+    let (gw, addr) = start_two_model_gateway("interleave");
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let cls = client.info_model("classifier").unwrap();
+    let seg = client.info_model("segmenter").unwrap();
+    assert_eq!(cls.nmodels, 2);
+    assert_eq!(seg.model, "segmenter");
+    assert_eq!((cls.c, cls.h, cls.w), (1, CLS_SIDE, CLS_SIDE));
+    assert_eq!((seg.c, seg.h, seg.w), (3, SEG_SIDE, SEG_SIDE));
+    assert_ne!(cls.timesteps, seg.timesteps,
+               "the two synthetic nets must be genuinely different");
+    // The empty selector resolves to the default model (entry 0).
+    let def = client.info().unwrap();
+    assert_eq!(def.model, "classifier");
+
+    // Interleave both models in one pipelined stream, window 8.
+    let mut out: HashMap<u64, Vec<u32>> = HashMap::new();
+    let (mut next, mut inflight) = (0u64, 0usize);
+    while (out.len() as u64) < FRAMES {
+        while inflight < 8 && next < FRAMES {
+            let (model, n) = if next % 2 == 0 {
+                ("classifier", cls.pixels_len())
+            } else {
+                ("segmenter", seg.pixels_len())
+            };
+            client.send(&WireRequest {
+                id: next,
+                body: RequestBody::Infer {
+                    net: NET_ANY,
+                    model: model.to_string(),
+                    payload: WirePayload::Pixels(
+                        frame_pixels(SEED, next, n)),
+                },
+            }).unwrap();
+            inflight += 1;
+            next += 1;
+        }
+        let resp = client.recv().unwrap();
+        inflight -= 1;
+        match resp.body {
+            ResponseBody::Infer { output_counts, .. } => {
+                out.insert(resp.id, output_counts);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    // v1 compatibility on the same gateway: a legacy client (no model
+    // selector on the wire) routes to the default model and gets the
+    // exact same bytes the classifier path produces.
+    let mut v1 = Client::connect_v1(&addr).unwrap();
+    v1.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let v1_info = v1.info().unwrap();
+    assert_eq!(v1_info.model, "", "v1 Info cannot carry a model name");
+    assert_eq!(v1_info.nmodels, 1);
+    assert_eq!((v1_info.c, v1_info.h, v1_info.w),
+               (1, CLS_SIDE, CLS_SIDE),
+               "v1 info must describe the default model");
+    let mut v1_out: HashMap<u64, Vec<u32>> = HashMap::new();
+    let v1_ids: Vec<u64> = (0..10).map(|i| 10_000 + 2 * i).collect();
+    for &id in &v1_ids {
+        let resp = v1
+            .infer_pixels(id, "",
+                          frame_pixels(SEED, id, cls.pixels_len()))
+            .unwrap();
+        match resp.body {
+            ResponseBody::Infer { output_counts, .. } => {
+                v1_out.insert(resp.id, output_counts);
+            }
+            other => panic!("v1 infer failed: {other:?}"),
+        }
+    }
+    // A v1 client addressing the wrong net code fails loudly instead
+    // of running the wrong network.
+    let resp = v1.send(&WireRequest {
+        id: 77,
+        body: RequestBody::Infer {
+            net: 1, // segmenter code, but default model is classifier
+            model: String::new(),
+            payload: WirePayload::Pixels(
+                frame_pixels(SEED, 77, cls.pixels_len())),
+        },
+    }).and_then(|_| v1.recv()).unwrap();
+    match resp.body {
+        ResponseBody::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::BadRequest);
+        }
+        other => panic!("expected BAD_REQUEST, got {other:?}"),
+    }
+    drop(v1);
+
+    // Unknown model: per-request BAD_REQUEST naming the mounted set.
+    let resp = client
+        .infer_pixels(9999, "resnet",
+                      frame_pixels(SEED, 9999, cls.pixels_len()))
+        .unwrap();
+    match resp.body {
+        ResponseBody::Error { code, detail } => {
+            assert_eq!(code, ErrorCode::BadRequest);
+            assert!(detail.contains("classifier")
+                    && detail.contains("segmenter"), "{detail}");
+        }
+        other => panic!("expected BAD_REQUEST, got {other:?}"),
+    }
+
+    // Per-model metrics are exposed with model labels.
+    let text = client.metrics().unwrap();
+    assert!(text.contains("skydiver_models_mounted"));
+    assert!(text.contains(
+        "skydiver_model_served_total{model=\"classifier\"}"));
+    assert!(text.contains(
+        "skydiver_model_served_total{model=\"segmenter\"}"));
+    assert!(text.contains(
+        "skydiver_latency_us{model=\"segmenter\",quantile=\"0.99\"}"));
+
+    client.shutdown_server().unwrap();
+    drop(client);
+    let report = gw.wait().expect("gateway drain");
+
+    // Reference runs: the same frames through fresh single-model
+    // in-process services.
+    let cls_ids: Vec<u64> = (0..FRAMES).filter(|i| i % 2 == 0)
+        .chain(v1_ids.iter().copied())
+        .collect();
+    let seg_ids: Vec<u64> = (0..FRAMES).filter(|i| i % 2 == 1).collect();
+    let cls_ref = in_process_reference("cls-ref", NetKind::Classifier,
+                                       SEED, &cls_ids);
+    let seg_ref = in_process_reference("seg-ref", NetKind::Segmenter,
+                                       SEED, &seg_ids);
+
+    assert_eq!(out.len() as u64, FRAMES);
+    for (id, counts) in &out {
+        let expected = if id % 2 == 0 {
+            cls_ref.get(id)
+        } else {
+            seg_ref.get(id)
+        };
+        assert_eq!(Some(counts), expected,
+                   "frame {id}: gateway diverged from the single-model \
+                    in-process path");
+    }
+    for (id, counts) in &v1_out {
+        assert_eq!(Some(counts), cls_ref.get(id),
+                   "v1 frame {id}: default-model routing diverged");
+    }
+
+    // Report plumbing: two models, counters add up, names resolve.
+    assert_eq!(report.models.len(), 2);
+    assert_eq!(report.default_model().name, "classifier");
+    let cls_rep = report.model("classifier").unwrap();
+    let seg_rep = report.model("segmenter").unwrap();
+    assert_eq!(cls_rep.counters.served,
+               FRAMES / 2 + v1_out.len() as u64);
+    assert_eq!(seg_rep.counters.served, FRAMES / 2);
+    assert_eq!(report.counters.served,
+               cls_rep.counters.served + seg_rep.counters.served);
+    assert!(report.counters.bad_request >= 2); // wrong net + unknown model
+    assert_eq!(report.counters.internal, 0);
+    assert!(cls_rep.serving.worker_failures.is_empty());
+    assert!(seg_rep.serving.worker_failures.is_empty());
+    // The two models really ran different pipelines.
+    assert!(cls_rep.serving.frames > 0 && seg_rep.serving.frames > 0);
+    assert_ne!(cls_rep.serving.mean_sim_cycles,
+               seg_rep.serving.mean_sim_cycles,
+               "distinct nets should not simulate identically");
+}
+
+/// A raw v1 frame crafted byte-by-byte (not via the Client) decodes,
+/// routes to the default model, and serves — the lowest-level
+/// compatibility guarantee.
+#[test]
+fn raw_v1_bytes_route_to_default_model() {
+    use skydiver::server::protocol::{KIND_REQUEST, MAGIC, V1};
+    let (gw, addr) = start_two_model_gateway("rawv1");
+
+    let n = CLS_SIDE * CLS_SIDE;
+    let pixels = frame_pixels(0xBEEF, 3, n);
+    // Hand-built v1 Infer body: id u64, op 0, net 0, payload_kind 0,
+    // len u32, pixels.
+    let mut body = Vec::new();
+    body.extend_from_slice(&3u64.to_le_bytes());
+    body.push(0); // op Infer
+    body.push(0); // net classifier
+    body.push(0); // payload kind pixels
+    body.extend_from_slice(&(n as u32).to_le_bytes());
+    body.extend_from_slice(&pixels);
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&MAGIC);
+    frame.push(V1);
+    frame.push(KIND_REQUEST);
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&frame).unwrap();
+    s.flush().unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let (ver, resp_body) =
+        read_frame(&mut r, KIND_RESPONSE).unwrap().unwrap();
+    assert_eq!(ver, V1, "a v1 request must be answered in v1");
+    let resp = WireResponse::decode_body(ver, &resp_body).unwrap();
+    assert_eq!(resp.id, 3);
+    let counts = match resp.body {
+        ResponseBody::Infer { output_counts, .. } => output_counts,
+        other => panic!("unexpected: {other:?}"),
+    };
+    drop((s, r));
+
+    let expected = in_process_reference("rawv1-ref",
+                                        NetKind::Classifier, 0xBEEF,
+                                        &[3]);
+    assert_eq!(&counts, expected.get(&3).unwrap());
+
+    let report = gw.stop_and_wait().unwrap();
+    assert_eq!(report.model("classifier").unwrap().counters.served, 1);
+    assert_eq!(report.model("segmenter").unwrap().counters.served, 0);
+}

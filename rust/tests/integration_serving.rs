@@ -5,7 +5,7 @@
 //! full Service path — shared pipeline load, bounded queue, pull-based
 //! workers, failure propagation — hermetically.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
@@ -120,7 +120,7 @@ fn worker_build_failure_surfaces_round_robin() {
 /// frames alternating with bursts of cheap ones, sized to whole
 /// batches so the legacy dispatcher deals all-expensive batches to one
 /// worker and all-cheap ones to the other.
-fn run_skewed(dir: &PathBuf, dispatch: DispatchMode) -> ServingReport {
+fn run_skewed(dir: &Path, dispatch: DispatchMode) -> ServingReport {
     let scfg = ServiceConfig {
         workers: 2,
         batch_max: 4,
@@ -131,7 +131,7 @@ fn run_skewed(dir: &PathBuf, dispatch: DispatchMode) -> ServingReport {
         dispatch,
     };
     let service =
-        Service::start(scfg, worker_cfg(dir.clone(), false)).unwrap();
+        Service::start(scfg, worker_cfg(dir.to_path_buf(), false)).unwrap();
     let mut id = 0u64;
     for _burst in 0..2 {
         for _ in 0..4 {

@@ -1,7 +1,11 @@
 //! Wire-protocol property tests: randomized round-trips (payload
-//! sizes from 0 to near the frame cap) and malformed-frame handling —
-//! truncation, bad magic, oversized length, garbage — must always
-//! produce typed errors, never panics.
+//! sizes from 0 to near the frame cap, random model selectors) and
+//! malformed-frame handling — truncation, bad magic, oversized
+//! length, garbage — must always produce typed errors, never panics.
+//! Plus the v1↔v2 compatibility properties: every valid v1 frame
+//! still decodes under the v2-capable reader (and carries the empty
+//! selector, i.e. routes to the default model), and the v2-only
+//! fields fuzz clean.
 
 use std::io::Cursor;
 
@@ -10,21 +14,36 @@ use skydiver::server::protocol::{read_frame, ErrorCode, ProtoError,
                                  RequestBody, ResponseBody, WirePayload,
                                  WireRequest, WireResponse, HEADER_LEN,
                                  KIND_REQUEST, KIND_RESPONSE, MAGIC,
-                                 MAX_BODY, VERSION};
+                                 MAX_BODY, MAX_MODEL_NAME, NET_ANY, V1,
+                                 V2};
 
 fn rt_req(req: &WireRequest) {
-    let f = req.encode();
-    let body = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+    let f = req.encode().expect("encode");
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
         .expect("frame read").expect("not eof");
-    assert_eq!(&WireRequest::decode_body(&body).expect("decode"), req);
+    assert_eq!(ver, V2);
+    assert_eq!(&WireRequest::decode_body(ver, &body).expect("decode"),
+               req);
 }
 
 fn rt_resp(resp: &WireResponse) {
-    let f = resp.encode();
-    let body = read_frame(&mut Cursor::new(&f), KIND_RESPONSE)
+    let f = resp.encode(V2);
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_RESPONSE)
         .expect("frame read").expect("not eof");
-    assert_eq!(&WireResponse::decode_body(&body).expect("decode"),
+    assert_eq!(ver, V2);
+    assert_eq!(&WireResponse::decode_body(ver, &body).expect("decode"),
                resp);
+}
+
+/// Random model selector: empty (default routing) half the time.
+fn rand_model(rng: &mut SplitMix64) -> String {
+    let n = rng.next_below(2 * MAX_MODEL_NAME as u64 + 2) as usize;
+    if n > MAX_MODEL_NAME {
+        return String::new();
+    }
+    (0..n)
+        .map(|_| (b'a' + rng.next_below(26) as u8) as char)
+        .collect()
 }
 
 #[test]
@@ -32,14 +51,15 @@ fn random_pixel_payloads_roundtrip() {
     let mut rng = SplitMix64::new(0x50F7);
     // 0, 1, word boundaries, a big one close to (but under) the body
     // cap — the largest payload a frame can legally carry.
-    let sizes = [0usize, 1, 63, 64, 65, 1000, 1 << 16, MAX_BODY - 64];
+    let sizes = [0usize, 1, 63, 64, 65, 1000, 1 << 16, MAX_BODY - 512];
     for (k, &n) in sizes.iter().enumerate() {
         let px: Vec<u8> =
             (0..n).map(|_| rng.next_below(256) as u8).collect();
         rt_req(&WireRequest {
-            id: rng.next_u64(),
+            id: rng.next_u64() >> 1, // never the reserved id
             body: RequestBody::Infer {
-                net: (k % 2) as u8,
+                net: if k % 2 == 0 { (k % 2) as u8 } else { NET_ANY },
+                model: rand_model(&mut rng),
                 payload: WirePayload::Pixels(px),
             },
         });
@@ -53,9 +73,10 @@ fn random_spike_payloads_roundtrip() {
         let words: Vec<u64> =
             (0..nwords).map(|_| rng.next_u64()).collect();
         rt_req(&WireRequest {
-            id: rng.next_u64(),
+            id: rng.next_u64() >> 1,
             body: RequestBody::Infer {
                 net: 0,
+                model: rand_model(&mut rng),
                 payload: WirePayload::Spikes {
                     timesteps: 1 + rng.next_below(32) as u32,
                     words,
@@ -97,20 +118,130 @@ fn random_responses_roundtrip() {
             text: "skydiver_busy_total 3\n".repeat(100),
         },
     });
+    rt_resp(&WireResponse {
+        id: 2,
+        body: ResponseBody::Info {
+            net: 1,
+            c: 3,
+            h: 80,
+            w: 160,
+            timesteps: 8,
+            model: "segmenter".into(),
+            nmodels: 7,
+        },
+    });
+}
+
+// ------------------------------------------------- v1 <-> v2 compat
+
+/// Every model-less request encodes in both versions, and BOTH
+/// encodings decode back (at their own version) to the identical
+/// value — the property that lets a v2 gateway serve v1 clients.
+#[test]
+fn every_valid_v1_frame_decodes_under_v2_reader() {
+    let mut rng = SplitMix64::new(0xC0DA);
+    for i in 0..200u64 {
+        let req = match i % 4 {
+            0 => WireRequest {
+                id: rng.next_u64() >> 1,
+                body: RequestBody::Infer {
+                    net: (i % 2) as u8,
+                    model: String::new(),
+                    payload: WirePayload::Pixels(
+                        (0..rng.next_below(512) as usize)
+                            .map(|_| rng.next_below(256) as u8)
+                            .collect()),
+                },
+            },
+            1 => WireRequest {
+                id: rng.next_u64() >> 1,
+                body: RequestBody::Infer {
+                    net: (i % 2) as u8,
+                    model: String::new(),
+                    payload: WirePayload::Spikes {
+                        timesteps: 1 + rng.next_below(16) as u32,
+                        words: (0..rng.next_below(64) as usize)
+                            .map(|_| rng.next_u64())
+                            .collect(),
+                    },
+                },
+            },
+            2 => WireRequest {
+                id: rng.next_u64() >> 1,
+                body: RequestBody::Metrics,
+            },
+            _ => WireRequest {
+                id: rng.next_u64() >> 1,
+                body: RequestBody::Info { model: String::new() },
+            },
+        };
+        // The v1 bytes pass through the same reader the gateway uses…
+        let f1 = req.encode_v1().expect("v1 encode");
+        let (ver, body) =
+            read_frame(&mut Cursor::new(&f1), KIND_REQUEST)
+                .expect("read").expect("not eof");
+        assert_eq!(ver, V1);
+        let decoded =
+            WireRequest::decode_body(ver, &body).expect("v1 decode");
+        // …and the decoded selector is the empty string = the
+        // registry's default model.
+        assert_eq!(decoded, req);
+        match &decoded.body {
+            RequestBody::Infer { model, .. }
+            | RequestBody::Info { model } => {
+                assert!(model.is_empty(),
+                        "v1 frames must route to the default model");
+            }
+            _ => {}
+        }
+        // The v2 encoding of the same request also roundtrips.
+        rt_req(&req);
+    }
+}
+
+/// The version byte is what separates the dialects: the same
+/// model-less body bytes decode under both versions (v2 Infer/Info
+/// bodies differ from v1 only by the selector bytes).
+#[test]
+fn v1_and_v2_bodies_differ_exactly_by_the_selector() {
+    let req = WireRequest {
+        id: 42,
+        body: RequestBody::Infer {
+            net: 0,
+            model: String::new(),
+            payload: WirePayload::Pixels(vec![9; 16]),
+        },
+    };
+    let f1 = req.encode_v1().unwrap();
+    let f2 = req.encode().unwrap();
+    // v2 carries exactly one extra byte here: the zero-length model
+    // selector.
+    assert_eq!(f2.len(), f1.len() + 1);
+    // A v1 body fed to the v2 decoder must NOT parse (the selector
+    // byte is missing → the payload shifts → typed error or wrong
+    // value, never a panic). Verify it errors: the first payload byte
+    // is consumed as the selector length.
+    let (_, body1) = read_frame(&mut Cursor::new(&f1), KIND_REQUEST)
+        .unwrap().unwrap();
+    let as_v2 = WireRequest::decode_body(V2, &body1);
+    assert!(as_v2.is_err() || as_v2.unwrap() != req,
+            "decoding v1 bytes as v2 must not silently yield the \
+             original request");
 }
 
 #[test]
-fn every_truncation_of_a_real_frame_is_a_typed_error() {
+fn every_truncation_of_a_v2_frame_is_a_typed_error() {
     let f = WireRequest {
         id: 77,
         body: RequestBody::Infer {
             net: 0,
+            model: "segmenter".into(),
             payload: WirePayload::Spikes {
                 timesteps: 4,
                 words: vec![0xDEAD_BEEF; 32],
             },
         },
-    }.encode();
+    }.encode().unwrap();
     for cut in 0..f.len() {
         match read_frame(&mut Cursor::new(&f[..cut]), KIND_REQUEST) {
             Ok(None) => assert_eq!(cut, 0, "clean EOF only at 0 bytes"),
@@ -119,12 +250,37 @@ fn every_truncation_of_a_real_frame_is_a_typed_error() {
             Err(e) => panic!("unexpected error at cut {cut}: {e}"),
         }
     }
+    // Body-level truncation (whole frame read, selector or payload
+    // bytes missing inside) is typed, never a panic.
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+        .unwrap().unwrap();
+    for cut in 0..body.len() {
+        assert!(WireRequest::decode_body(ver, &body[..cut]).is_err());
+    }
+}
+
+#[test]
+fn truncated_v1_infer_body_is_typed_too() {
+    let f = WireRequest {
+        id: 5,
+        body: RequestBody::Infer {
+            net: 1,
+            model: String::new(),
+            payload: WirePayload::Pixels(vec![3; 40]),
+        },
+    }.encode_v1().unwrap();
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+        .unwrap().unwrap();
+    assert_eq!(ver, V1);
+    for cut in 0..body.len() {
+        assert!(WireRequest::decode_body(ver, &body[..cut]).is_err());
+    }
 }
 
 #[test]
 fn bad_magic_is_fatal() {
     let mut f = WireRequest { id: 1, body: RequestBody::Metrics }
-        .encode();
+        .encode().unwrap();
     f[2] = b'?';
     let err = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
         .unwrap_err();
@@ -133,10 +289,24 @@ fn bad_magic_is_fatal() {
 }
 
 #[test]
+fn unknown_version_is_fatal() {
+    let mut f = WireRequest { id: 1, body: RequestBody::Metrics }
+        .encode().unwrap();
+    for bad in [0u8, 3, 7, 255] {
+        f[4] = bad;
+        let err = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+            .unwrap_err();
+        assert!(matches!(err, ProtoError::BadVersion(v) if v == bad),
+                "{err}");
+        assert!(err.is_fatal());
+    }
+}
+
+#[test]
 fn oversized_length_is_fatal_and_allocates_nothing() {
     let mut hdr = Vec::new();
     hdr.extend_from_slice(&MAGIC);
-    hdr.push(VERSION);
+    hdr.push(V2);
     hdr.push(KIND_REQUEST);
     hdr.extend_from_slice(&(u32::MAX).to_le_bytes());
     assert_eq!(hdr.len(), HEADER_LEN);
@@ -153,56 +323,112 @@ fn oversized_length_is_fatal_and_allocates_nothing() {
 #[test]
 fn random_garbage_never_panics() {
     let mut rng = SplitMix64::new(0xBAD);
-    for _ in 0..500 {
+    for round in 0..1000 {
         let n = rng.next_below(64) as usize;
         let mut buf: Vec<u8> =
             (0..n).map(|_| rng.next_below(256) as u8).collect();
-        // Half the time, start with valid magic so deeper decode paths
-        // are reached too.
-        if rng.next_below(2) == 0 && buf.len() >= 4 {
+        // Half the time, start with valid magic (and alternate a valid
+        // version byte) so deeper decode paths are reached too.
+        if rng.next_below(2) == 0 && buf.len() >= 5 {
             buf[..4].copy_from_slice(&MAGIC);
+            buf[4] = if round % 2 == 0 { V1 } else { V2 };
         }
         // Must return, not panic; success is fine if the bytes happen
         // to form a frame.
         let _ = read_frame(&mut Cursor::new(&buf), KIND_REQUEST);
-        let _ = WireRequest::decode_body(&buf);
-        let _ = WireResponse::decode_body(&buf);
+        for ver in [V1, V2] {
+            let _ = WireRequest::decode_body(ver, &buf);
+            let _ = WireResponse::decode_body(ver, &buf);
+        }
     }
+}
+
+/// Fuzz specifically the v2 selector bytes: a selector length that
+/// overruns the body, and garbage behind a valid selector, are typed
+/// errors.
+#[test]
+fn v2_selector_field_fuzz_is_typed() {
+    let req = WireRequest {
+        id: 8,
+        body: RequestBody::Info { model: "classifier".into() },
+    };
+    let f = req.encode().unwrap();
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+        .unwrap().unwrap();
+    // Body layout: id(8) op(1) len(1) name(10). Corrupt the length to
+    // every possible value — overruns must be Truncated/Malformed.
+    for bad_len in 0..=255u8 {
+        let mut b = body.clone();
+        b[9] = bad_len;
+        match WireRequest::decode_body(ver, &b) {
+            Ok(decoded) => {
+                // Only the true length can decode, and only to the
+                // original name.
+                assert_eq!(bad_len as usize, 10);
+                assert_eq!(decoded, req);
+            }
+            Err(ProtoError::Truncated)
+            | Err(ProtoError::Malformed(_)) => {}
+            Err(e) => panic!("unexpected error for len {bad_len}: {e}"),
+        }
+    }
+    // Trailing garbage after a well-formed selector is malformed.
+    let mut b = body.clone();
+    b.push(0xAB);
+    assert!(matches!(WireRequest::decode_body(ver, &b),
+                     Err(ProtoError::Malformed(_))));
 }
 
 #[test]
 fn trailing_bytes_rejected_but_recoverable() {
-    let f = WireRequest { id: 3, body: RequestBody::Info }.encode();
-    let mut body = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+    let f = WireRequest {
+        id: 3,
+        body: RequestBody::Info { model: String::new() },
+    }.encode().unwrap();
+    let (ver, mut body) = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
         .unwrap().unwrap();
     body.push(0x00);
-    let err = WireRequest::decode_body(&body).unwrap_err();
+    let err = WireRequest::decode_body(ver, &body).unwrap_err();
     assert!(matches!(err, ProtoError::Malformed(_)));
     assert!(!err.is_fatal(), "body-level damage keeps the connection");
 }
 
 #[test]
-fn pipelined_frames_parse_in_sequence() {
-    // Several frames back to back on one stream — the reader must
-    // consume exactly one frame per call.
-    let reqs: Vec<WireRequest> = (0..10u64)
-        .map(|i| WireRequest {
-            id: i,
-            body: RequestBody::Infer {
-                net: 0,
-                payload: WirePayload::Pixels(vec![i as u8; i as usize]),
-            },
+fn pipelined_mixed_version_frames_parse_in_sequence() {
+    // Several frames back to back on one stream — alternating protocol
+    // versions, as when a proxy funnels old and new clients into one
+    // buffer — the reader must consume exactly one frame per call and
+    // report each frame's own version.
+    let reqs: Vec<(u8, WireRequest)> = (0..10u64)
+        .map(|i| {
+            let req = WireRequest {
+                id: i,
+                body: RequestBody::Infer {
+                    net: 0,
+                    model: String::new(),
+                    payload: WirePayload::Pixels(vec![i as u8;
+                                                      i as usize]),
+                },
+            };
+            ((if i % 2 == 0 { V1 } else { V2 }), req)
         })
         .collect();
     let mut stream = Vec::new();
-    for r in &reqs {
-        stream.extend_from_slice(&r.encode());
+    for (ver, r) in &reqs {
+        let f = if *ver == V1 {
+            r.encode_v1().unwrap()
+        } else {
+            r.encode().unwrap()
+        };
+        stream.extend_from_slice(&f);
     }
     let mut cur = Cursor::new(&stream);
-    for want in &reqs {
-        let body =
+    for (want_ver, want) in &reqs {
+        let (ver, body) =
             read_frame(&mut cur, KIND_REQUEST).unwrap().unwrap();
-        assert_eq!(&WireRequest::decode_body(&body).unwrap(), want);
+        assert_eq!(ver, *want_ver);
+        assert_eq!(&WireRequest::decode_body(ver, &body).unwrap(),
+                   want);
     }
     assert!(matches!(read_frame(&mut cur, KIND_REQUEST), Ok(None)));
 }
