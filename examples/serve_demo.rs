@@ -134,6 +134,7 @@ fn main() -> Result<()> {
         queue_cap: 32,
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
     };
 
     if tcp {

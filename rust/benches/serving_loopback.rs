@@ -4,7 +4,7 @@
 //! the simulator. Fully hermetic (synthetic artifacts; no
 //! `make artifacts`).
 //!
-//! Emits four rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! Emits six rows into `BENCH_serving.json` (`skydiver-bench-v1`
 //! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
 //!
 //! * `serving_loopback_rtt` — single-connection, window-1 round-trip
@@ -16,6 +16,10 @@
 //!   multi-model scenario: one registry-backed gateway mounts both
 //!   synthetic nets, and two loadgen runs drive them concurrently
 //!   (interleaved mixed traffic at the gateway), one row per model.
+//! * `serving_skewed_fifo` / `serving_skewed_cost` — the same
+//!   heavy-tailed (`--traffic skewed`) workload served under FIFO
+//!   pull vs cost-aware LPT dispatch; the per-mode host/cost balance
+//!   ratios are printed alongside the rows.
 
 #[path = "harness.rs"]
 mod harness;
@@ -28,7 +32,7 @@ use skydiver::coordinator::{DispatchMode, ModelRegistry, ModelSpec,
                             Policy, ServiceConfig, WorkerConfig};
 use skydiver::power::EnergyModel;
 use skydiver::server::{loadgen, Client, Gateway, GatewayConfig,
-                       LoadGenConfig, LoadGenReport};
+                       LoadGenConfig, LoadGenReport, TrafficMode};
 use skydiver::sim::ArchConfig;
 use skydiver::snn::NetKind;
 
@@ -56,6 +60,7 @@ fn service_cfg() -> ServiceConfig {
         queue_cap: 256,
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
     }
 }
 
@@ -122,6 +127,7 @@ fn main() {
         window: 8,
         spikes: false,
         retry_busy: true,
+        traffic: TrafficMode::Mixed,
         seed: 0xBE7C,
     };
     let a0 = harness::alloc_count();
@@ -172,6 +178,7 @@ fn main() {
         window: 8,
         spikes: false,
         retry_busy: true,
+        traffic: TrafficMode::Mixed,
         seed,
     };
     let cls_cfg = mk_cfg("classifier", 0xC1A5);
@@ -207,7 +214,60 @@ fn main() {
                  m.name, m.counters.served, m.counters.busy);
     }
 
+    // 4. Skewed-density traffic, FIFO pull vs cost-aware LPT dispatch
+    // on the identical workload — the request-level APRC scenario.
+    // One gateway per mode (a service's dispatch mode is fixed at
+    // start), same loadgen seed, so the *only* variable is batch
+    // assembly; the printed balance ratios are the paper-style
+    // comparison, the rows track throughput/latency per mode.
+    let skew_frames = if quick { 150 } else { 1200 };
+    let run_skewed = |row: &str, dispatch: DispatchMode| {
+        let scfg = ServiceConfig { dispatch, ..service_cfg() };
+        let gw = Gateway::start(
+            GatewayConfig::default(),
+            ModelRegistry::single(
+                "classifier", scfg,
+                worker_cfg(&dir, NetKind::Classifier))
+                .expect("skewed registry start"))
+            .expect("skewed gateway start");
+        let addr = gw.local_addr().to_string();
+        let cfg = LoadGenConfig {
+            addr: addr.clone(),
+            model: String::new(),
+            conns: 2,
+            frames: skew_frames,
+            window: 16,
+            spikes: false,
+            retry_busy: true,
+            traffic: TrafficMode::Skewed,
+            seed: 0x5EED,
+        };
+        let a = harness::alloc_count();
+        let rep = loadgen::run(&cfg).expect("skewed loadgen");
+        let allocs =
+            (harness::alloc_count() - a) as f64 / rep.ok.max(1) as f64;
+        assert_eq!(rep.errors, 0, "skewed loadgen frames failed");
+        Client::connect(&addr).expect("connect for skewed shutdown")
+            .shutdown_server().expect("skewed shutdown");
+        let report = gw.wait().expect("skewed gateway wait");
+        let serving = &report.default_model().serving;
+        println!("skewed [{}]: fps={:.1} host_balance={:.3} \
+                  cost_balance={:.3} calib_err={:.3}",
+                 dispatch.as_str(), rep.fps,
+                 serving.host_balance_ratio,
+                 serving.cost_balance_ratio,
+                 serving.cost_calibration_error);
+        let r = loadgen_row(row, &rep, allocs);
+        r.print();
+        r
+    };
+    let skew_fifo = run_skewed("serving_skewed_fifo",
+                               DispatchMode::WorkQueue);
+    let skew_cost = run_skewed("serving_skewed_cost",
+                               DispatchMode::CostAware);
+
     let path = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".into());
-    harness::write_json_to(&path, &[rtt, e2e, mixed_cls, mixed_seg]);
+    harness::write_json_to(
+        &path, &[rtt, e2e, mixed_cls, mixed_seg, skew_fifo, skew_cost]);
 }

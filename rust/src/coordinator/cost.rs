@@ -1,0 +1,196 @@
+//! Request-level APRC: predict a request's *relative* workload at
+//! admission, before any worker touches it.
+//!
+//! The paper's APRC (§III-B) predicts per-channel workload offline so
+//! CBWS can balance the SPEs; this module carries the same idea one
+//! level up, to the serving tier. The input-layer event count of a
+//! request is knowable *exactly* at the gateway — a pre-encoded spike
+//! payload is popcounted ([`crate::snn::nnz_packed`]), a pixel payload
+//! telescopes through the phased encoder's closed form (a cached
+//! [`crate::snn::phased_events_per_level`] table) — and under APRC every
+//! downstream layer's work scales with the events its predecessor
+//! emits, so a single per-event gain suffices for *relative* ranking.
+//! That constant gain cancels in the normalisation below, which is why
+//! the model needs only the [`AprcPredictor`]'s layer-0 profile (the
+//! offline calibration the pipeline already owns) to fix its scale.
+//!
+//! Costs are dimensionless "cost units", normalised so that a frame at
+//! the profiled mean input density costs [`NOMINAL_FRAME_COST`]. That
+//! gives cost-denominated queue caps a sane default (`queue_cap x
+//! NOMINAL_FRAME_COST` admits the same *nominal* traffic as the
+//! count-denominated cap, but sheds dense bursts proportionally
+//! earlier) and makes the predicted-vs-actual calibration error a
+//! scale-free percentage.
+
+use crate::schedule::AprcPredictor;
+use crate::snn::{nnz_packed, phased_events_per_level};
+
+use super::worker::FramePayload;
+
+/// Cost of a frame at the profiled mean input density — the unit every
+/// cost-denominated knob (queue cost cap, shed accounting, metrics) is
+/// expressed in.
+pub const NOMINAL_FRAME_COST: u64 = 10_000;
+
+/// Per-request workload predictor, built once per model (alongside the
+/// APRC predictor in `SharedPipeline::build`) and shared by every
+/// submission path.
+#[derive(Debug, Clone)]
+pub struct RequestCostModel {
+    h: usize,
+    w: usize,
+    /// `SpikeMap` packing stride of the served shape.
+    wpc: usize,
+    /// Spikes `encode_phased_u8` emits per pixel level over the run's
+    /// timesteps (the exact pixel-path event count, table-driven).
+    px_events: [u64; 256],
+    /// Cost units per input event, fixed by the layer-0 profile.
+    per_event: f64,
+    /// Per-frame floor: even a silent frame costs queue slots, scan
+    /// words and scheduling work.
+    base: f64,
+}
+
+impl RequestCostModel {
+    /// Calibrate against the model's offline input profile: the
+    /// predictor's layer-0 rates are the dataset's mean per-channel
+    /// spike fractions, so `sum(rates) * h * w * timesteps` is the
+    /// expected event count of a nominal frame.
+    pub fn new(c: usize, h: usize, w: usize, timesteps: usize,
+               predictor: &AprcPredictor) -> Self {
+        let rates = predictor.layer(0);
+        debug_assert_eq!(rates.len(), c);
+        let nominal_events: f64 = rates.iter().sum::<f64>()
+            * (h * w * timesteps) as f64;
+        let base = NOMINAL_FRAME_COST as f64 / 16.0;
+        let per_event =
+            (NOMINAL_FRAME_COST as f64 - base) / nominal_events.max(1.0);
+        Self {
+            h,
+            w,
+            wpc: (h * w).div_ceil(64),
+            px_events: phased_events_per_level(timesteps),
+            per_event,
+            base,
+        }
+    }
+
+    /// Exact input-layer event count of a payload (what the encoder /
+    /// spike decoder will hand layer 0). Never panics, even on a
+    /// malformed payload — shape errors are the validator's job, and
+    /// prediction runs before (or without) validation.
+    pub fn input_events(&self, payload: &FramePayload) -> u64 {
+        match payload {
+            FramePayload::Pixels(px) => {
+                px.iter().map(|&v| self.px_events[v as usize]).sum()
+            }
+            FramePayload::Spikes { words, .. } => {
+                nnz_packed(words, self.wpc, self.h * self.w)
+            }
+        }
+    }
+
+    /// Predicted cost in cost units (>= 1): `base + events x
+    /// per_event`, i.e. affine in the exact input event count with the
+    /// scale fixed by the APRC layer-0 profile.
+    pub fn predict(&self, payload: &FramePayload) -> u64 {
+        let ev = self.input_events(payload) as f64;
+        (self.base + ev * self.per_event).round().max(1.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{encode_phased_u8, ConvGeom, LayerWeights,
+                     NetworkWeights, WeightsMeta};
+
+    const SIDE: usize = 12;
+    const T: usize = 8;
+
+    fn tiny_net() -> NetworkWeights {
+        let meta = WeightsMeta::parse(&format!(
+            r#"{{
+            "name": "t", "aprc": true, "pad": 2, "vth": 1.0,
+            "timesteps": {T}, "in_shape": [1, {SIDE}, {SIDE}],
+            "feature_sizes": [[2, {}, {}]], "dense_out": null,
+            "total_floats": 0, "lambdas": [], "layers": [],
+            "blob_fnv1a64": "0"
+        }}"#, SIDE + 2, SIDE + 2)).unwrap();
+        NetworkWeights {
+            meta,
+            layers: vec![LayerWeights::Conv {
+                geom: ConvGeom { cin: 1, cout: 2, r: 3, pad: 2,
+                                 h: SIDE, w: SIDE,
+                                 eh: SIDE + 2, ew: SIDE + 2 },
+                w: vec![0.1f32; 2 * 9],
+            }],
+        }
+    }
+
+    fn model() -> RequestCostModel {
+        let net = tiny_net();
+        let predictor = AprcPredictor::from_network(&net, &[0.25]);
+        RequestCostModel::new(1, SIDE, SIDE, T, &predictor)
+    }
+
+    #[test]
+    fn pixel_events_match_encoder() {
+        let m = model();
+        let px: Vec<u8> = (0..SIDE * SIDE)
+            .map(|i| (i * 31 % 256) as u8)
+            .collect();
+        let maps = encode_phased_u8(&px, 1, SIDE, SIDE, T);
+        let emitted: u64 = maps.iter().map(|s| s.nnz() as u64).sum();
+        assert_eq!(
+            m.input_events(&FramePayload::Pixels(px.clone())), emitted);
+        // The matching spike payload predicts the identical cost: the
+        // two wire encodings of one frame are interchangeable.
+        let mut words = Vec::new();
+        for map in &maps {
+            words.extend_from_slice(map.channel_words(0));
+        }
+        let spikes = FramePayload::Spikes { timesteps: T, words };
+        assert_eq!(m.input_events(&spikes), emitted);
+        assert_eq!(m.predict(&spikes),
+                   m.predict(&FramePayload::Pixels(px)));
+    }
+
+    #[test]
+    fn cost_is_monotone_in_density_with_a_floor() {
+        let m = model();
+        let silent = m.predict(
+            &FramePayload::Pixels(vec![0u8; SIDE * SIDE]));
+        let mid = m.predict(
+            &FramePayload::Pixels(vec![128u8; SIDE * SIDE]));
+        let dense = m.predict(
+            &FramePayload::Pixels(vec![255u8; SIDE * SIDE]));
+        assert!(silent >= 1, "even a silent frame costs something");
+        assert!(silent < mid && mid < dense,
+                "{silent} < {mid} < {dense} violated");
+    }
+
+    #[test]
+    fn nominal_density_frame_costs_about_nominal() {
+        // The predictor was profiled at rate 0.25; a frame whose
+        // pixels emit ~0.25*T spikes each should land near
+        // NOMINAL_FRAME_COST. Pixel value 64/255 -> floor(T/4)/T = 2/8.
+        let m = model();
+        let cost =
+            m.predict(&FramePayload::Pixels(vec![64u8; SIDE * SIDE]));
+        let lo = NOMINAL_FRAME_COST * 9 / 10;
+        let hi = NOMINAL_FRAME_COST * 11 / 10;
+        assert!((lo..=hi).contains(&cost),
+                "nominal frame cost {cost} outside [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn malformed_payloads_predict_without_panicking() {
+        let m = model();
+        let _ = m.predict(&FramePayload::Pixels(vec![7u8; 5]));
+        let _ = m.predict(&FramePayload::Spikes {
+            timesteps: T,
+            words: vec![!0u64; 3], // not a multiple of the stride
+        });
+    }
+}

@@ -56,13 +56,23 @@
 //! isolation of backpressure and failure); the network gateway routes
 //! wire model selectors to registry slots, with entry 0 as the default
 //! model legacy v1 clients land on.
+//!
+//! **Request-level APRC.** Every submission is tagged at admission
+//! with a predicted cost ([`cost::RequestCostModel`]: exact input
+//! event count x an APRC-profile-calibrated gain).
+//! [`DispatchMode::CostAware`] builds on the tags — cost-balanced
+//! LPT batch assembly ([`BoundedQueue::pop_batch_cost`]) and
+//! cost-denominated admission shedding — while the FIFO
+//! [`DispatchMode::WorkQueue`] stays as the measured baseline.
 
+pub mod cost;
 mod queue;
 mod registry;
 mod service;
 mod stats;
 pub mod worker;
 
+pub use cost::{RequestCostModel, NOMINAL_FRAME_COST};
 pub use queue::{BoundedQueue, QueueStats, SubmitError};
 pub use registry::{ModelEntry, ModelRegistry, ModelSpec, MAX_MODELS};
 pub use service::{DispatchMode, FrameSpec, Service, ServiceConfig,

@@ -8,6 +8,22 @@
 //! will ever drain (every worker exit decrements the count via a
 //! [`ConsumerGuard`]; at zero, waiting and future pushes fail with
 //! [`SubmitError::NoWorkers`]).
+//!
+//! Every item carries a *cost* (predicted workload in cost units —
+//! see [`super::cost::RequestCostModel`]; the plain `push`/`try_push`
+//! helpers tag cost 1). Two things build on it:
+//!
+//! * **Cost-denominated admission.** A queue built with
+//!   [`BoundedQueue::with_cost_cap`] refuses pushes that would take
+//!   the queued cost beyond the cap, so backpressure tracks predicted
+//!   *work*, not request count — a burst of dense frames sheds
+//!   earlier, a stream of near-silent ones later. A single item
+//!   costing more than the whole cap is still admitted when the queue
+//!   is empty (it could otherwise never run).
+//! * **Cost-balanced batch assembly.** [`BoundedQueue::pop_batch_cost`]
+//!   hands each idle worker its fair share of the queued cost via an
+//!   LPT-style greedy fill, instead of the FIFO count-based
+//!   [`BoundedQueue::pop_batch`].
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -16,9 +32,11 @@ use std::time::{Duration, Instant};
 /// Why a submission was rejected.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
-    /// The queue is at capacity (non-blocking submit only). Retry later
-    /// or shed load — this is the backpressure signal.
-    Full { capacity: usize },
+    /// The queue is at capacity (non-blocking submit only). Retry
+    /// later or shed load — this is the backpressure signal.
+    /// `by_cost` distinguishes the cost-cap limit from the item-count
+    /// limit, so shed errors name the cap that actually fired.
+    Full { capacity: usize, by_cost: bool },
     /// The queue was closed (shutdown has begun).
     Closed,
     /// Every consumer (worker) has exited; nothing will drain the
@@ -29,7 +47,10 @@ pub enum SubmitError {
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SubmitError::Full { capacity } => {
+            SubmitError::Full { by_cost: true, .. } => {
+                write!(f, "work queue full (predicted-cost cap reached)")
+            }
+            SubmitError::Full { capacity, .. } => {
                 write!(f, "work queue full ({capacity} entries)")
             }
             SubmitError::Closed => write!(f, "work queue closed"),
@@ -54,15 +75,79 @@ pub struct QueueStats {
     pub pushed: u64,
     /// Total items ever handed to a consumer.
     pub popped: u64,
+    /// Admission cap in cost units (`u64::MAX` = uncapped).
+    pub cost_capacity: u64,
+    /// Predicted cost currently enqueued.
+    pub cost_depth: u64,
+    /// High-water mark of `cost_depth`.
+    pub max_cost_depth: u64,
+    /// Total cost ever accepted.
+    pub cost_pushed: u64,
+    /// Total cost ever handed to a consumer.
+    pub cost_popped: u64,
 }
 
 struct Inner<T> {
-    items: VecDeque<T>,
+    /// Items with their predicted cost.
+    items: VecDeque<(T, u64)>,
     closed: bool,
     consumers: usize,
     max_depth: usize,
     pushed: u64,
     popped: u64,
+    cost_depth: u64,
+    max_cost_depth: u64,
+    cost_pushed: u64,
+    cost_popped: u64,
+}
+
+impl<T> Inner<T> {
+    /// Room for one more item of `cost`? `Ok(())` or which limit
+    /// refused it (`Full`, with `by_cost` naming the cost cap when the
+    /// item-count cap still had slots). The cost cap carries the
+    /// single-oversized-item exemption: an empty queue admits any
+    /// cost, else an above-cap item could never run.
+    fn check_room(&self, capacity: usize, cost_cap: u64, cost: u64)
+                  -> Result<(), SubmitError> {
+        if self.items.len() >= capacity {
+            return Err(SubmitError::Full { capacity, by_cost: false });
+        }
+        if !self.items.is_empty()
+            && self.cost_depth.saturating_add(cost) > cost_cap
+        {
+            return Err(SubmitError::Full { capacity, by_cost: true });
+        }
+        Ok(())
+    }
+
+    /// Remove the first `take` items, returning them with their summed
+    /// cost and updating the pop counters — the single accounting path
+    /// for every front-of-queue drain.
+    fn take_front(&mut self, take: usize) -> (Vec<T>, u64) {
+        let mut cost = 0u64;
+        let batch: Vec<T> = self.items.drain(..take)
+            .map(|(item, c)| {
+                cost = cost.saturating_add(c);
+                item
+            })
+            .collect();
+        self.record_pop(take as u64, cost);
+        (batch, cost)
+    }
+
+    fn record_push(&mut self, cost: u64) {
+        self.pushed += 1;
+        self.max_depth = self.max_depth.max(self.items.len());
+        self.cost_depth = self.cost_depth.saturating_add(cost);
+        self.cost_pushed = self.cost_pushed.saturating_add(cost);
+        self.max_cost_depth = self.max_cost_depth.max(self.cost_depth);
+    }
+
+    fn record_pop(&mut self, n: u64, cost: u64) {
+        self.popped += n;
+        self.cost_popped = self.cost_popped.saturating_add(cost);
+        self.cost_depth = self.cost_depth.saturating_sub(cost);
+    }
 }
 
 /// The queue proper. Shared as `Arc<BoundedQueue<T>>`.
@@ -71,11 +156,21 @@ pub struct BoundedQueue<T> {
     not_empty: Condvar,
     not_full: Condvar,
     capacity: usize,
+    cost_cap: u64,
 }
 
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
+        Self::with_cost_cap(capacity, u64::MAX)
+    }
+
+    /// A queue that also refuses pushes beyond `cost_cap` queued cost
+    /// units (see the module docs for the oversized-item exemption).
+    /// `cost_cap` 0 means **uncapped** — the same convention the
+    /// metrics endpoint and the `--queue-cost-cap` flag use.
+    pub fn with_cost_cap(capacity: usize, cost_cap: u64) -> Self {
         let capacity = capacity.max(1);
+        let cost_cap = if cost_cap == 0 { u64::MAX } else { cost_cap };
         Self {
             inner: Mutex::new(Inner {
                 items: VecDeque::with_capacity(capacity),
@@ -84,15 +179,25 @@ impl<T> BoundedQueue<T> {
                 max_depth: 0,
                 pushed: 0,
                 popped: 0,
+                cost_depth: 0,
+                max_cost_depth: 0,
+                cost_pushed: 0,
+                cost_popped: 0,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity,
+            cost_cap,
         }
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Admission cap in cost units (`u64::MAX` = uncapped).
+    pub fn cost_capacity(&self) -> u64 {
+        self.cost_cap
     }
 
     /// Register `n` consumers *before* their threads start, so a
@@ -115,8 +220,15 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Non-blocking push; [`SubmitError::Full`] is the backpressure
-    /// signal.
+    /// signal. Cost 1 — submit paths that predicted a real cost use
+    /// [`try_push_cost`](Self::try_push_cost).
     pub fn try_push(&self, item: T) -> Result<(), SubmitError> {
+        self.try_push_cost(item, 1)
+    }
+
+    /// [`try_push`](Self::try_push) with an explicit predicted cost.
+    pub fn try_push_cost(&self, item: T, cost: u64)
+                         -> Result<(), SubmitError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err(SubmitError::Closed);
@@ -124,20 +236,23 @@ impl<T> BoundedQueue<T> {
         if g.consumers == 0 {
             return Err(SubmitError::NoWorkers);
         }
-        if g.items.len() >= self.capacity {
-            return Err(SubmitError::Full { capacity: self.capacity });
-        }
-        g.items.push_back(item);
-        g.pushed += 1;
-        g.max_depth = g.max_depth.max(g.items.len());
+        g.check_room(self.capacity, self.cost_cap, cost)?;
+        g.items.push_back((item, cost));
+        g.record_push(cost);
         drop(g);
         self.not_empty.notify_one();
         Ok(())
     }
 
     /// Blocking push: waits for space (backpressure), failing only if
-    /// the queue closes or every consumer exits while waiting.
+    /// the queue closes or every consumer exits while waiting. Cost 1.
     pub fn push(&self, item: T) -> Result<(), SubmitError> {
+        self.push_cost(item, 1)
+    }
+
+    /// [`push`](Self::push) with an explicit predicted cost.
+    pub fn push_cost(&self, item: T, cost: u64)
+                     -> Result<(), SubmitError> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
@@ -146,10 +261,9 @@ impl<T> BoundedQueue<T> {
             if g.consumers == 0 {
                 return Err(SubmitError::NoWorkers);
             }
-            if g.items.len() < self.capacity {
-                g.items.push_back(item);
-                g.pushed += 1;
-                g.max_depth = g.max_depth.max(g.items.len());
+            if g.check_room(self.capacity, self.cost_cap, cost).is_ok() {
+                g.items.push_back((item, cost));
+                g.record_push(cost);
                 drop(g);
                 self.not_empty.notify_one();
                 return Ok(());
@@ -161,15 +275,16 @@ impl<T> BoundedQueue<T> {
     /// Pull up to `max` items, blocking while the queue is empty.
     /// Returns `None` once the queue is closed *and* drained — the
     /// consumer's signal to exit. Greedy: takes whatever is there
-    /// rather than waiting to fill `max`.
+    /// rather than waiting to fill `max`. FIFO order — the baseline
+    /// batch assembly [`pop_batch_cost`](Self::pop_batch_cost) is
+    /// measured against.
     pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.inner.lock().unwrap();
         loop {
             if !g.items.is_empty() {
                 let take = g.items.len().min(max);
-                let batch: Vec<T> = g.items.drain(..take).collect();
-                g.popped += take as u64;
+                let (batch, _) = g.take_front(take);
                 drop(g);
                 self.not_full.notify_all();
                 return Some(batch);
@@ -188,7 +303,84 @@ impl<T> BoundedQueue<T> {
                           -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.inner.lock().unwrap();
-        // Phase 1: block for the first item (or closure).
+        g = match self.await_first(g, fill_wait, max) {
+            Some(g) => g,
+            None => return None,
+        };
+        let take = g.items.len().min(max);
+        let (batch, _) = g.take_front(take);
+        drop(g);
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Cost-balanced batch assembly: block for the first item, give
+    /// late arrivals the same `fill_wait` grouping window as
+    /// [`pop_batch_wait`](Self::pop_batch_wait), then assemble this
+    /// consumer's fair share of the queued cost — the **oldest item
+    /// first** (so every pull advances the FIFO head and no request
+    /// can be bypassed indefinitely by costlier newcomers), then an
+    /// LPT-style greedy fill with the costliest remaining items that
+    /// keep the batch within `queued_cost / consumers`. Every batch's
+    /// cost is therefore bounded by `max(costliest_item,
+    /// ceil(queued_cost / consumers))` — within 2x the ideal max-bin
+    /// cost (the classic greedy bound; property-tested in
+    /// `proptest_invariants.rs`).
+    pub fn pop_batch_cost(&self, max: usize, fill_wait: Duration)
+                          -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        g = match self.await_first(g, fill_wait, max) {
+            Some(g) => g,
+            None => return None,
+        };
+        let consumers = g.consumers.max(1) as u64;
+        let budget = (g.cost_depth / consumers).max(1);
+        let mut batch: Vec<T> = Vec::new();
+        let mut batch_cost = 0u64;
+        // Anchor: the FIFO head, unconditionally. An item at queue
+        // position k is served within k pulls, whatever its cost.
+        if let Some((item, cost)) = g.items.pop_front() {
+            batch.push(item);
+            batch_cost = cost;
+        }
+        while batch.len() < max && !g.items.is_empty() {
+            // LPT fill: the costliest item that keeps the batch within
+            // budget; ties go to the oldest, keeping equal-cost
+            // traffic FIFO.
+            let mut pick: Option<(usize, u64)> = None;
+            for (i, (_, c)) in g.items.iter().enumerate() {
+                if batch_cost.saturating_add(*c) > budget {
+                    continue;
+                }
+                let better = match pick {
+                    None => true,
+                    Some((_, best)) => *c > best,
+                };
+                if better {
+                    pick = Some((i, *c));
+                }
+            }
+            let Some((idx, cost)) = pick else { break };
+            let (item, _) = g.items.remove(idx).expect("index in range");
+            batch.push(item);
+            batch_cost = batch_cost.saturating_add(cost);
+        }
+        g.record_pop(batch.len() as u64, batch_cost);
+        drop(g);
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Shared phase-1/phase-2 of the batching pops: block for the
+    /// first item (or closure), then hold the lock loop up to
+    /// `fill_wait` while fewer than `max` items are queued. Returns
+    /// the guard ready for extraction, or `None` when the queue closed
+    /// empty.
+    fn await_first<'a>(&'a self,
+                       mut g: std::sync::MutexGuard<'a, Inner<T>>,
+                       fill_wait: Duration, max: usize)
+                       -> Option<std::sync::MutexGuard<'a, Inner<T>>> {
         loop {
             if !g.items.is_empty() {
                 break;
@@ -198,26 +390,22 @@ impl<T> BoundedQueue<T> {
             }
             g = self.not_empty.wait(g).unwrap();
         }
-        // Phase 2: fill until `max` or the window expires.
-        let deadline = Instant::now() + fill_wait;
-        while g.items.len() < max && !g.closed {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (guard, timeout) =
-                self.not_empty.wait_timeout(g, deadline - now).unwrap();
-            g = guard;
-            if timeout.timed_out() {
-                break;
+        if !fill_wait.is_zero() {
+            let deadline = Instant::now() + fill_wait;
+            while g.items.len() < max && !g.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) = self.not_empty
+                    .wait_timeout(g, deadline - now).unwrap();
+                g = guard;
+                if timeout.timed_out() {
+                    break;
+                }
             }
         }
-        let take = g.items.len().min(max);
-        let batch: Vec<T> = g.items.drain(..take).collect();
-        g.popped += take as u64;
-        drop(g);
-        self.not_full.notify_all();
-        Some(batch)
+        Some(g)
     }
 
     /// Take everything immediately (no blocking). Used by the legacy
@@ -226,8 +414,7 @@ impl<T> BoundedQueue<T> {
     pub fn drain_now(&self) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
         let n = g.items.len();
-        g.popped += n as u64;
-        let out: Vec<T> = g.items.drain(..).collect();
+        let (out, _) = g.take_front(n);
         drop(g);
         self.not_full.notify_all();
         out
@@ -251,6 +438,11 @@ impl<T> BoundedQueue<T> {
             max_depth: g.max_depth,
             pushed: g.pushed,
             popped: g.popped,
+            cost_capacity: self.cost_cap,
+            cost_depth: g.cost_depth,
+            max_cost_depth: g.max_cost_depth,
+            cost_pushed: g.cost_pushed,
+            cost_popped: g.cost_popped,
         }
     }
 }
@@ -299,7 +491,9 @@ mod tests {
         q.add_consumers(1);
         q.try_push(1).unwrap();
         q.try_push(2).unwrap();
-        assert_eq!(q.try_push(3), Err(SubmitError::Full { capacity: 2 }));
+        assert_eq!(q.try_push(3),
+                   Err(SubmitError::Full { capacity: 2,
+                                           by_cost: false }));
         assert_eq!(q.stats().max_depth, 2);
     }
 
@@ -384,5 +578,113 @@ mod tests {
         let _ = q.pop_batch(2);
         let s = q.stats();
         assert_eq!((s.pushed, s.popped, s.depth, s.max_depth), (4, 2, 2, 4));
+    }
+
+    // ---------------- cost accounting ----------------
+
+    #[test]
+    fn cost_flow_is_tracked() {
+        let q = BoundedQueue::new(8);
+        q.add_consumers(1);
+        q.try_push_cost('a', 10).unwrap();
+        q.try_push_cost('b', 30).unwrap();
+        q.try_push_cost('c', 5).unwrap();
+        let s = q.stats();
+        assert_eq!((s.cost_depth, s.cost_pushed, s.max_cost_depth),
+                   (45, 45, 45));
+        assert_eq!(q.pop_batch(2), Some(vec!['a', 'b']));
+        let s = q.stats();
+        assert_eq!((s.cost_depth, s.cost_popped), (5, 40));
+        assert_eq!(q.drain_now(), vec!['c']);
+        assert_eq!(q.stats().cost_depth, 0);
+        assert_eq!(q.stats().cost_popped, 45);
+    }
+
+    #[test]
+    fn cost_cap_sheds_dense_bursts_earlier() {
+        let q = BoundedQueue::with_cost_cap(100, 50);
+        q.add_consumers(1);
+        q.try_push_cost(0, 30).unwrap();
+        q.try_push_cost(1, 20).unwrap(); // exactly at the cap
+        assert_eq!(q.try_push_cost(2, 1),
+                   Err(SubmitError::Full { capacity: 100,
+                                           by_cost: true }),
+                   "cost cap must reject although 98 item slots remain");
+        let _ = q.pop_batch(1); // frees 30 cost units
+        q.try_push_cost(2, 25).unwrap();
+    }
+
+    #[test]
+    fn cost_cap_zero_means_uncapped() {
+        // Same convention as the metrics endpoint and the CLI flag.
+        let q = BoundedQueue::with_cost_cap(4, 0);
+        q.add_consumers(1);
+        assert_eq!(q.cost_capacity(), u64::MAX);
+        for i in 0..4 {
+            q.try_push_cost(i, u64::MAX / 8).unwrap();
+        }
+    }
+
+    #[test]
+    fn oversized_item_admitted_only_into_an_empty_queue() {
+        let q = BoundedQueue::with_cost_cap(4, 50);
+        q.add_consumers(1);
+        q.try_push_cost(0, 10).unwrap();
+        assert!(q.try_push_cost(1, 999).is_err(),
+                "oversized item must wait for an empty queue");
+        assert_eq!(q.pop_batch(1), Some(vec![0]));
+        q.try_push_cost(1, 999).unwrap();
+        assert_eq!(q.pop_batch(4), Some(vec![1]));
+    }
+
+    #[test]
+    fn lpt_pop_anchors_on_head_then_fills_costliest() {
+        let q = BoundedQueue::new(16);
+        q.add_consumers(2);
+        // Queued cost 100, 2 consumers -> budget 50 per pull.
+        for (i, c) in [(0u32, 10u64), (1, 40), (2, 5), (3, 40), (4, 5)] {
+            q.try_push_cost(i, c).unwrap();
+        }
+        // Head first (id 0, cost 10 — guaranteed progress), then the
+        // costliest fit under the remaining 40: id 1 (40).
+        assert_eq!(q.pop_batch_cost(16, Duration::ZERO),
+                   Some(vec![0, 1]));
+        // Remaining cost 50 -> budget 25: head id 2 (5), then the
+        // costliest fit under 20 is id 4 (5); the 40 must wait.
+        assert_eq!(q.pop_batch_cost(16, Duration::ZERO),
+                   Some(vec![2, 4]));
+        // The oversized 40 is taken alone (head always ships).
+        assert_eq!(q.pop_batch_cost(16, Duration::ZERO), Some(vec![3]));
+        assert_eq!(q.stats().cost_popped, 100);
+    }
+
+    #[test]
+    fn cheap_head_is_never_starved_by_dense_newcomers() {
+        // A near-zero-cost item at the head must ship on the next
+        // pull even when every other queued item is costlier.
+        let q = BoundedQueue::new(16);
+        q.add_consumers(1);
+        q.try_push_cost(0u32, 1).unwrap();
+        for i in 1..8 {
+            q.try_push_cost(i, 1000).unwrap();
+        }
+        let batch = q.pop_batch_cost(16, Duration::ZERO).unwrap();
+        assert_eq!(batch[0], 0, "FIFO head must anchor the batch");
+    }
+
+    #[test]
+    fn cost_pop_respects_max_items_and_close() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(16));
+        q.add_consumers(1);
+        for i in 0..6 {
+            q.try_push_cost(i, 1).unwrap();
+        }
+        // Budget 6 but max 4 items: the item cap still binds.
+        let batch = q.pop_batch_cost(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 4);
+        q.close();
+        let rest = q.pop_batch_cost(4, Duration::ZERO).unwrap();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(q.pop_batch_cost(4, Duration::ZERO), None);
     }
 }

@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use super::cost::RequestCostModel;
 use super::queue::{BoundedQueue, ConsumerGuard, QueueStats, SubmitError};
 use super::stats::{ServingReport, Stats};
 use super::worker::{worker_loop, FramePayload, Request, Response,
@@ -27,9 +28,17 @@ use crate::snn::NetKind;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum DispatchMode {
     /// Workers pull from the shared queue the moment they free up
-    /// (work-conserving; the default).
+    /// (work-conserving; the default). Batches form FIFO by request
+    /// *count* — the comparison baseline for the cost-aware mode.
     #[default]
     WorkQueue,
+    /// Cost-aware pull: workers wait out the `batch_wait` grouping
+    /// window, then assemble their fair share of the queued
+    /// *predicted cost* with an LPT-style greedy fill
+    /// ([`BoundedQueue::pop_batch_cost`]), and admission sheds by
+    /// cost units instead of request count — the request-level APRC
+    /// path.
+    CostAware,
     /// A dispatcher thread forms whole batches and deals them
     /// round-robin to per-worker channels — the pre-rebuild behaviour,
     /// kept as the head-of-line-blocking baseline.
@@ -39,12 +48,24 @@ pub enum DispatchMode {
 impl DispatchMode {
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
-            "queue" | "workqueue" | "pull" => DispatchMode::WorkQueue,
+            "queue" | "workqueue" | "pull" | "fifo" => {
+                DispatchMode::WorkQueue
+            }
+            "cost" | "cost_aware" | "lpt" => DispatchMode::CostAware,
             "rr" | "round_robin_batch" | "batch" => {
                 DispatchMode::RoundRobinBatch
             }
             _ => return None,
         })
+    }
+
+    /// Canonical short name (CLI spelling, metrics `dispatch` label).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DispatchMode::WorkQueue => "queue",
+            DispatchMode::CostAware => "cost",
+            DispatchMode::RoundRobinBatch => "rr",
+        }
     }
 }
 
@@ -55,11 +76,22 @@ pub struct ServiceConfig {
     /// Max frames a worker pulls (or the legacy dispatcher groups) at
     /// once.
     pub batch_max: usize,
-    /// Bounded submission-queue capacity — the backpressure threshold.
+    /// Bounded submission-queue capacity — the backpressure threshold
+    /// in request count.
     pub queue_cap: usize,
-    /// Legacy mode only: how long the dispatcher waits to fill a batch.
+    /// Batch grouping window: how long the legacy dispatcher — or a
+    /// cost-aware pull — waits for a batch to fill after its first
+    /// frame arrives (CLI: `--batch-wait-ms`).
     pub batch_wait: Duration,
     pub dispatch: DispatchMode,
+    /// Admission cap in predicted-cost units. `None` defaults to
+    /// `queue_cap x NOMINAL_FRAME_COST` under
+    /// [`DispatchMode::CostAware`] (same nominal traffic as the count
+    /// cap, but dense bursts shed proportionally earlier) and to
+    /// uncapped otherwise, keeping the baselines' admission behaviour
+    /// untouched. `Some(0)` explicitly disables the cost cap (the
+    /// metrics convention: 0 = uncapped).
+    pub cost_cap: Option<u64>,
 }
 
 impl Default for ServiceConfig {
@@ -70,6 +102,7 @@ impl Default for ServiceConfig {
             queue_cap: 256,
             batch_wait: Duration::from_millis(2),
             dispatch: DispatchMode::WorkQueue,
+            cost_cap: None,
         }
     }
 }
@@ -137,11 +170,13 @@ impl FrameSpec {
 
 /// A cheap, cloneable, `Sync` submission handle onto a running
 /// [`Service`] — what the network gateway hands to each connection
-/// thread. Submissions flow into the same bounded queue; collection
-/// stays with whoever holds the worker event stream.
+/// thread. Submissions flow into the same bounded queue (each tagged
+/// with its predicted cost at admission); collection stays with
+/// whoever holds the worker event stream.
 #[derive(Clone)]
 pub struct ServiceHandle {
     queue: Arc<BoundedQueue<Request>>,
+    cost_model: Arc<RequestCostModel>,
     spec: FrameSpec,
 }
 
@@ -150,25 +185,44 @@ impl ServiceHandle {
         &self.spec
     }
 
+    /// Predicted cost of a payload in cost units — what admission
+    /// would tag it with. Exposed so callers (the gateway) can account
+    /// admitted/shed traffic in cost units without predicting twice.
+    pub fn predict_cost(&self, payload: &FramePayload) -> u64 {
+        self.cost_model.predict(payload)
+    }
+
     /// Non-blocking submit; `SubmitError::Full` is the backpressure
     /// signal (map it to `BUSY` on the wire — shed, never hang).
     pub fn try_submit(&self, id: u64, payload: FramePayload)
                       -> std::result::Result<(), SubmitError> {
-        self.queue.try_push(Request {
+        let cost = self.cost_model.predict(&payload);
+        self.try_submit_cost(id, payload, cost)
+    }
+
+    /// [`try_submit`](Self::try_submit) with a pre-computed cost (from
+    /// [`predict_cost`](Self::predict_cost)).
+    pub fn try_submit_cost(&self, id: u64, payload: FramePayload,
+                           cost: u64)
+                           -> std::result::Result<(), SubmitError> {
+        self.queue.try_push_cost(Request {
             id,
             payload,
             submitted: Instant::now(),
-        })
+            cost,
+        }, cost)
     }
 
     /// Blocking submit (backpressure by waiting).
     pub fn submit(&self, id: u64, payload: FramePayload)
                   -> std::result::Result<(), SubmitError> {
-        self.queue.push(Request {
+        let cost = self.cost_model.predict(&payload);
+        self.queue.push_cost(Request {
             id,
             payload,
             submitted: Instant::now(),
-        })
+            cost,
+        }, cost)
     }
 
     pub fn queue_stats(&self) -> QueueStats {
@@ -179,6 +233,7 @@ impl ServiceHandle {
 /// A running service instance.
 pub struct Service {
     queue: Arc<BoundedQueue<Request>>,
+    cost_model: Arc<RequestCostModel>,
     /// `Some` until a gateway takes the stream with
     /// [`Service::take_events`]; `collect` needs it present.
     events_rx: Option<mpsc::Receiver<WorkerEvent>>,
@@ -186,6 +241,7 @@ pub struct Service {
     dispatcher: Option<thread::JoinHandle<()>>,
     worker_count: usize,
     spec: FrameSpec,
+    dispatch: DispatchMode,
     started: Instant,
 }
 
@@ -206,15 +262,30 @@ impl Service {
             w: meta.in_shape[2],
             timesteps: wcfg.timesteps.unwrap_or(meta.timesteps),
         };
+        // Cost-denominated admission: in cost-aware mode the default
+        // cap admits `queue_cap` *nominal* frames' worth of predicted
+        // work; the baselines stay uncapped-by-cost so their admission
+        // behaviour is untouched.
+        let cost_cap = cfg.cost_cap.unwrap_or(match cfg.dispatch {
+            DispatchMode::CostAware => {
+                super::cost::NOMINAL_FRAME_COST
+                    .saturating_mul(cfg.queue_cap.max(1) as u64)
+            }
+            _ => u64::MAX,
+        });
         let queue: Arc<BoundedQueue<Request>> =
-            Arc::new(BoundedQueue::new(cfg.queue_cap));
+            Arc::new(BoundedQueue::with_cost_cap(cfg.queue_cap, cost_cap));
         let (events_tx, events_rx) = mpsc::channel::<WorkerEvent>();
         let batch_max = cfg.batch_max.max(1);
         let mut handles = Vec::with_capacity(cfg.workers);
         let mut dispatcher = None;
 
         match cfg.dispatch {
-            DispatchMode::WorkQueue => {
+            DispatchMode::WorkQueue | DispatchMode::CostAware => {
+                let lpt_fill = match cfg.dispatch {
+                    DispatchMode::CostAware => Some(cfg.batch_wait),
+                    _ => None,
+                };
                 // Reserve consumer slots before any thread runs so a
                 // submit can never race ahead of worker startup.
                 queue.add_consumers(cfg.workers);
@@ -222,6 +293,7 @@ impl Service {
                     let source = WorkSource::Shared {
                         queue: queue.clone(),
                         batch_max,
+                        lpt_fill,
                     };
                     let (wc, sh, tx) =
                         (wcfg.clone(), shared.clone(), events_tx.clone());
@@ -257,13 +329,26 @@ impl Service {
 
         Ok(Self {
             queue,
+            cost_model: shared.cost_model.clone(),
             events_rx: Some(events_rx),
             handles,
             dispatcher,
             worker_count: cfg.workers,
             spec,
+            dispatch: cfg.dispatch,
             started: Instant::now(),
         })
+    }
+
+    /// How this service dispatches batches to its workers.
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.dispatch
+    }
+
+    /// The request-cost model this service admits against (shared with
+    /// every [`ServiceHandle`]).
+    pub fn cost_model(&self) -> &RequestCostModel {
+        &self.cost_model
     }
 
     /// The served network's frame contract (shape, timesteps).
@@ -279,7 +364,11 @@ impl Service {
     /// A cloneable, thread-safe submission handle (the gateway's
     /// per-connection entry point).
     pub fn handle(&self) -> ServiceHandle {
-        ServiceHandle { queue: self.queue.clone(), spec: self.spec }
+        ServiceHandle {
+            queue: self.queue.clone(),
+            cost_model: self.cost_model.clone(),
+            spec: self.spec,
+        }
     }
 
     /// Move the worker event stream out of the service, for a response
@@ -303,8 +392,14 @@ impl Service {
     /// a pre-encoded spike train).
     pub fn submit_payload(&self, id: u64, payload: FramePayload)
                           -> Result<()> {
+        let cost = self.cost_model.predict(&payload);
         self.queue
-            .push(Request { id, payload, submitted: Instant::now() })
+            .push_cost(Request {
+                id,
+                payload,
+                submitted: Instant::now(),
+                cost,
+            }, cost)
             .map_err(|e| anyhow!("submit frame {id}: {e}"))
     }
 
@@ -318,11 +413,13 @@ impl Service {
     /// [`try_submit`](Self::try_submit) for an arbitrary payload.
     pub fn try_submit_payload(&self, id: u64, payload: FramePayload)
                               -> std::result::Result<(), SubmitError> {
-        self.queue.try_push(Request {
+        let cost = self.cost_model.predict(&payload);
+        self.queue.try_push_cost(Request {
             id,
             payload,
             submitted: Instant::now(),
-        })
+            cost,
+        }, cost)
     }
 
     /// Snapshot of the submission queue (depth, high-water mark, flow

@@ -141,6 +141,12 @@ pub struct Stats {
     energy_j: f64,
     per_worker: Vec<u64>,
     per_worker_busy_us: Vec<u64>,
+    per_worker_cost: Vec<u64>,
+    /// Sum of admitted predicted costs over served responses.
+    pred_cost_sum: u128,
+    /// Running predicted-vs-actual calibration error (see `record`).
+    calib_err_sum: f64,
+    calib_n: u64,
 }
 
 impl Stats {
@@ -151,9 +157,30 @@ impl Stats {
         if self.per_worker.len() <= r.worker {
             self.per_worker.resize(r.worker + 1, 0);
             self.per_worker_busy_us.resize(r.worker + 1, 0);
+            self.per_worker_cost.resize(r.worker + 1, 0);
         }
         self.per_worker[r.worker] += 1;
         self.per_worker_busy_us[r.worker] += r.service_us;
+        self.per_worker_cost[r.worker] =
+            self.per_worker_cost[r.worker]
+                .saturating_add(r.predicted_cost);
+        self.pred_cost_sum += r.predicted_cost as u128;
+        // Predicted cost is in dimensionless cost units, actual work
+        // in simulated cycles; score prediction *shape* by scaling
+        // predictions into cycle units with the running totals (the
+        // best online estimate of the unit conversion), then
+        // accumulating this response's relative error. Early responses
+        // are scored against a coarse scale — acceptable for a
+        // monitoring metric that converges with traffic.
+        if r.sim_cycles > 0 && self.pred_cost_sum > 0 {
+            let scale = self.sim_cycles_sum as f64
+                / self.pred_cost_sum as f64;
+            let actual = r.sim_cycles as f64;
+            self.calib_err_sum +=
+                (r.predicted_cost as f64 * scale - actual).abs()
+                    / actual;
+            self.calib_n += 1;
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -192,6 +219,10 @@ impl Stats {
         if per_worker.len() < workers {
             per_worker.resize(workers, 0);
         }
+        let mut per_worker_cost = self.per_worker_cost.clone();
+        if per_worker_cost.len() < workers {
+            per_worker_cost.resize(workers, 0);
+        }
         ServingReport {
             frames,
             wall_secs,
@@ -209,6 +240,18 @@ impl Stats {
             host_balance_ratio: host_balance_ratio(&busy),
             per_worker,
             per_worker_busy_us: busy,
+            mean_predicted_cost: if frames == 0 {
+                0.0
+            } else {
+                self.pred_cost_sum as f64 / frames as f64
+            },
+            cost_calibration_error: if self.calib_n == 0 {
+                0.0
+            } else {
+                self.calib_err_sum / self.calib_n as f64
+            },
+            cost_balance_ratio: host_balance_ratio(&per_worker_cost),
+            per_worker_cost,
             queue_capacity: 0,
             queue_max_depth: 0,
             worker_failures: Vec::new(),
@@ -253,6 +296,17 @@ pub struct ServingReport {
     /// `total_busy / (workers * max_busy)` — the host-side counterpart
     /// of the paper's SPE balance ratio (Fig. 7).
     pub host_balance_ratio: f64,
+    /// Mean admitted predicted cost per served frame (cost units).
+    pub mean_predicted_cost: f64,
+    /// Mean relative error of predicted cost against simulated cycles
+    /// after the online unit-scale fit (0.0 until frames arrive).
+    pub cost_calibration_error: f64,
+    /// Balance ratio over *predicted cost* served per worker — how
+    /// evenly batch assembly spread the predicted work, independent of
+    /// host timing noise.
+    pub cost_balance_ratio: f64,
+    /// Predicted cost served per worker (cost units).
+    pub per_worker_cost: Vec<u64>,
     /// Submission-queue capacity (backpressure threshold).
     pub queue_capacity: usize,
     /// High-water mark of the submission queue during the run.
@@ -276,6 +330,7 @@ mod tests {
             latency_us,
             service_us,
             worker,
+            predicted_cost: 100,
         }
     }
 
@@ -326,6 +381,40 @@ mod tests {
         // Idle pool is vacuously balanced.
         assert_eq!(host_balance_ratio(&[0, 0]), 1.0);
         assert_eq!(host_balance_ratio(&[]), 1.0);
+    }
+
+    #[test]
+    fn cost_accounting_and_calibration() {
+        let mut s = Stats::default();
+        // Prediction perfectly proportional to actual cycles: the
+        // online scale fit should drive the error to ~0.
+        for i in 0..8u64 {
+            let mut r = resp(i, (i % 2) as usize, 100, 50);
+            r.sim_cycles = 500 * (i + 1);
+            r.predicted_cost = 5 * (i + 1);
+            s.record(&r);
+        }
+        let rep = s.report(1.0, 200e6, 2);
+        assert!((rep.mean_predicted_cost - 5.0 * 4.5).abs() < 1e-9);
+        assert!(rep.cost_calibration_error < 1e-9,
+                "proportional prediction must calibrate exactly, got \
+                 {}", rep.cost_calibration_error);
+        // Workers 0 and 1 served costs 5+15+25+35 vs 10+20+30+40.
+        assert_eq!(rep.per_worker_cost, vec![80, 100]);
+        assert!((rep.cost_balance_ratio - 180.0 / 200.0).abs() < 1e-9);
+
+        // A wildly wrong prediction shows up as a large error.
+        let mut s = Stats::default();
+        for i in 0..8u64 {
+            let mut r = resp(i, 0, 100, 50);
+            r.sim_cycles = if i % 2 == 0 { 10_000 } else { 100 };
+            r.predicted_cost = 100; // flat guess against 100x spread
+            s.record(&r);
+        }
+        let rep = s.report(1.0, 200e6, 1);
+        assert!(rep.cost_calibration_error > 0.5,
+                "flat prediction against skewed actuals must score \
+                 badly, got {}", rep.cost_calibration_error);
     }
 
     #[test]

@@ -57,12 +57,18 @@ impl FramePayload {
     }
 }
 
-/// One inference request: a raw image frame or a pre-encoded train.
+/// One inference request: a raw image frame or a pre-encoded train,
+/// tagged at admission with its predicted cost.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub payload: FramePayload,
     pub submitted: Instant,
+    /// Predicted workload in cost units
+    /// ([`RequestCostModel`](super::cost::RequestCostModel)) — what
+    /// cost-aware batch assembly balances and cost-denominated
+    /// admission sheds by.
+    pub cost: u64,
 }
 
 /// Completed inference.
@@ -83,6 +89,9 @@ pub struct Response {
     pub service_us: u64,
     /// Worker that served it.
     pub worker: usize,
+    /// The cost the request was admitted at — echoed back so stats can
+    /// score prediction against the simulated actuals (`sim_cycles`).
+    pub predicted_cost: u64,
 }
 
 /// What a worker reports back to the service.
@@ -165,13 +174,16 @@ impl WorkerConfig {
 }
 
 /// The read-only pipeline state every worker shares: weights loaded
-/// once, workloads predicted once, channels scheduled once.
+/// once, workloads predicted once, channels scheduled once — and the
+/// request-level cost model calibrated from the same APRC profile.
 #[derive(Clone)]
 pub struct SharedPipeline {
     pub net: Arc<NetworkWeights>,
     pub predictor: Arc<AprcPredictor>,
     /// One CBWS (or baseline) partition per layer.
     pub partitions: Arc<Vec<Partition>>,
+    /// Per-request cost predictor (the serving-tier APRC extension).
+    pub cost_model: Arc<super::cost::RequestCostModel>,
 }
 
 impl SharedPipeline {
@@ -189,15 +201,32 @@ impl SharedPipeline {
         let partitions: Vec<Partition> = (0..net.layers.len())
             .map(|l| scheduler.assign(predictor.layer(l), cfg.arch.n_spes))
             .collect();
-        Ok(Self { net, predictor, partitions: Arc::new(partitions) })
+        let meta = &net.meta;
+        let cost_model = Arc::new(super::cost::RequestCostModel::new(
+            meta.in_shape[0], meta.in_shape[1], meta.in_shape[2],
+            cfg.timesteps.unwrap_or(meta.timesteps), &predictor));
+        Ok(Self {
+            net,
+            predictor,
+            partitions: Arc::new(partitions),
+            cost_model,
+        })
     }
 }
 
 /// Where a worker gets its work from.
 pub enum WorkSource {
     /// Pull batches from the shared bounded queue (the default,
-    /// load-balanced path).
-    Shared { queue: Arc<BoundedQueue<Request>>, batch_max: usize },
+    /// load-balanced path). With `lpt_fill: Some(window)` the pull is
+    /// cost-balanced ([`BoundedQueue::pop_batch_cost`]): the worker
+    /// waits out the grouping window, then assembles its fair share of
+    /// the queued *predicted cost* LPT-style; `None` keeps the FIFO
+    /// count-based pull as the comparison baseline.
+    Shared {
+        queue: Arc<BoundedQueue<Request>>,
+        batch_max: usize,
+        lpt_fill: Option<std::time::Duration>,
+    },
     /// Receive pre-formed batches from the legacy round-robin
     /// dispatcher.
     Private(mpsc::Receiver<Vec<Request>>),
@@ -206,8 +235,13 @@ pub enum WorkSource {
 impl WorkSource {
     fn next_batch(&self) -> Option<Vec<Request>> {
         match self {
-            WorkSource::Shared { queue, batch_max } => {
-                queue.pop_batch(*batch_max)
+            WorkSource::Shared { queue, batch_max, lpt_fill } => {
+                match lpt_fill {
+                    Some(window) => {
+                        queue.pop_batch_cost(*batch_max, *window)
+                    }
+                    None => queue.pop_batch(*batch_max),
+                }
             }
             WorkSource::Private(rx) => rx.recv().ok(),
         }
@@ -373,6 +407,7 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
                 latency_us: req.submitted.elapsed().as_micros() as u64,
                 service_us: t0.elapsed().as_micros() as u64,
                 worker: idx,
+                predicted_cost: req.cost,
             };
             if events.send(WorkerEvent::Served(resp)).is_err() {
                 return Ok(()); // collector gone; shut down
@@ -418,6 +453,7 @@ fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
             latency_us: req.submitted.elapsed().as_micros() as u64,
             service_us: per_frame_us,
             worker: idx,
+            predicted_cost: req.cost,
         };
         if events.send(WorkerEvent::Served(resp)).is_err() {
             return Ok(()); // collector gone; shut down

@@ -24,7 +24,7 @@ use skydiver::experiments::{self, ExperimentCtx};
 use skydiver::metrics::Table;
 use skydiver::power::EnergyModel;
 use skydiver::server::{Client, Gateway, GatewayConfig, GatewayReport,
-                       LoadGenConfig};
+                       LoadGenConfig, TrafficMode};
 use skydiver::sim::ArchConfig;
 use skydiver::snn::{NetKind, NetworkWeights};
 
@@ -38,24 +38,34 @@ COMMANDS:
   report                           artifact inventory + eval metrics
   run        [--net classifier|segmenter | --model NAME[=KIND]]
              [--plain] [--policy P] [--frames N] [--workers N]
-             [--golden] [--dispatch queue|rr] [--queue-cap N]
-             [--batch-max N] [--sweep-threads N]
+             [--golden] [--dispatch queue|cost|rr] [--queue-cap N]
+             [--batch-max N] [--batch-wait-ms N] [--queue-cost-cap N]
+             [--sweep-threads N]
   serve      [--addr HOST:PORT] [--max-conns N] [--port-file PATH]
              [--net ... | --model NAME[=KIND] (repeatable)]
              [--plain] [--policy P] [--golden] [--workers N]
-             [--dispatch queue|rr] [--queue-cap N] [--batch-max N]
+             [--dispatch queue|cost|rr] [--queue-cap N] [--batch-max N]
+             [--batch-wait-ms N] [--queue-cost-cap N]
              [--sweep-threads N]
              TCP gateway; --addr defaults to 127.0.0.1:7878, port 0
              picks an ephemeral port (written to --port-file).
              Repeat --model to mount several models behind one port
              (the first is the default model v1 clients route to),
              e.g. --model classifier --model segmenter or
-             --model fast=classifier
+             --model fast=classifier.
+             --dispatch cost enables request-level APRC: predicted-
+             cost-balanced batches + cost-denominated shedding
+             (--queue-cost-cap, in cost units; default queue-cap x
+             10000; 0 = uncapped). --batch-wait-ms sets the batch
+             grouping window (default 2).
   loadgen    --addr HOST:PORT [--model NAME] [--conns N] [--frames N]
-             [--window N] [--spikes] [--no-retry] [--shutdown]
+             [--window N] [--traffic mixed|skewed] [--spikes]
+             [--no-retry] [--shutdown]
              drive a gateway; --model targets a mounted model (default:
-             the server's default model); --shutdown sends a drain
-             request after
+             the server's default model); --traffic skewed sends
+             heavy-tailed input spike densities (the cost-aware
+             dispatch scenario); --shutdown sends a drain request
+             after
   synth      [--out DIR] [--side N] [--net classifier|segmenter|both]
              write synthetic artifacts (serve/test without
              `make artifacts`)
@@ -80,6 +90,9 @@ const FLAG_SPECS: &[(&str, bool)] = &[
     ("dispatch", true),
     ("queue-cap", true),
     ("batch-max", true),
+    ("batch-wait-ms", true),
+    ("queue-cost-cap", true),
+    ("traffic", true),
     ("sweep-threads", true),
     ("addr", true),
     ("max-conns", true),
@@ -350,14 +363,23 @@ fn service_cfg(args: &Args) -> Result<ServiceConfig> {
     let dispatch = match args.get("dispatch") {
         None => DispatchMode::WorkQueue,
         Some(s) => DispatchMode::parse(s)
-            .ok_or_else(|| anyhow!("unknown --dispatch {s}"))?,
+            .ok_or_else(|| anyhow!("unknown --dispatch {s} \
+                                    (queue|cost|rr)"))?,
+    };
+    let cost_cap = match args.get("queue-cost-cap") {
+        None => None,
+        Some(v) => Some(v.parse::<u64>().map_err(|_| anyhow!(
+            "flag --queue-cost-cap: '{v}' is not a non-negative \
+             integer"))?),
     };
     Ok(ServiceConfig {
         workers: args.get_usize("workers", 2)?,
         batch_max: args.get_usize("batch-max", 8)?,
         queue_cap: args.get_usize("queue-cap", 256)?,
-        batch_wait: Duration::from_millis(2),
+        batch_wait: Duration::from_millis(
+            args.get_usize("batch-wait-ms", 2)? as u64),
         dispatch,
+        cost_cap,
     })
 }
 
@@ -420,6 +442,12 @@ fn print_serving_report(rep: &ServingReport) {
             format!("{:?}", rep.per_worker_busy_us)]);
     t.row(&["host balance ratio".into(),
             format!("{:.2}%", 100.0 * rep.host_balance_ratio)]);
+    t.row(&["cost balance ratio".into(),
+            format!("{:.2}%", 100.0 * rep.cost_balance_ratio)]);
+    t.row(&["mean predicted cost".into(),
+            format!("{:.0}", rep.mean_predicted_cost)]);
+    t.row(&["cost calibration err".into(),
+            format!("{:.1}%", 100.0 * rep.cost_calibration_error)]);
     t.row(&["queue depth max/cap".into(),
             format!("{}/{}", rep.queue_max_depth, rep.queue_capacity)]);
     if !rep.worker_failures.is_empty() {
@@ -517,6 +545,12 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     let addr = args.get("addr")
         .ok_or_else(|| anyhow!("loadgen needs --addr HOST:PORT"))?
         .to_string();
+    let traffic = match args.get("traffic") {
+        None => TrafficMode::Mixed,
+        Some(s) => TrafficMode::parse(s)
+            .ok_or_else(|| anyhow!("unknown --traffic {s} \
+                                    (mixed|skewed)"))?,
+    };
     let cfg = LoadGenConfig {
         addr: addr.clone(),
         model: args.get("model").unwrap_or("").to_string(),
@@ -525,14 +559,16 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         window: args.get_usize("window", 8)?,
         spikes: args.has("spikes"),
         retry_busy: !args.has("no-retry"),
+        traffic,
         seed: 0x10AD,
     };
     let mut failed = 0u64;
     if cfg.frames > 0 {
         println!("loadgen: {} frames over {} connections (window {}, \
-                  {} payload, model '{}') against {}",
+                  {} payload, {} traffic, model '{}') against {}",
                  cfg.frames, cfg.conns, cfg.window,
                  if cfg.spikes { "spike" } else { "pixel" },
+                 cfg.traffic.as_str(),
                  if cfg.model.is_empty() { "<default>" } else {
                      &cfg.model
                  },
@@ -739,6 +775,31 @@ mod tests {
         assert!(parse_model_spec("fast=nope").is_err());
         assert!(parse_model_spec("nope").is_err());
         assert!(parse_model_spec("=classifier").is_err());
+    }
+
+    #[test]
+    fn dispatch_and_traffic_flags_parse() {
+        let a = Args::parse(&sv(&[
+            "serve", "--dispatch", "cost", "--batch-wait-ms", "7",
+            "--queue-cost-cap", "123456",
+        ])).unwrap();
+        let scfg = service_cfg(&a).unwrap();
+        assert_eq!(scfg.dispatch, DispatchMode::CostAware);
+        assert_eq!(scfg.batch_wait, Duration::from_millis(7));
+        assert_eq!(scfg.cost_cap, Some(123456));
+        // Defaults: FIFO pull, 2 ms window, no cost cap override.
+        let d = service_cfg(&Args::parse(&sv(&["serve"])).unwrap())
+            .unwrap();
+        assert_eq!(d.dispatch, DispatchMode::WorkQueue);
+        assert_eq!(d.batch_wait, Duration::from_millis(2));
+        assert_eq!(d.cost_cap, None);
+        // Bad values are errors, not silent defaults.
+        let bad = Args::parse(&sv(&[
+            "serve", "--queue-cost-cap", "lots",
+        ])).unwrap();
+        assert!(service_cfg(&bad).is_err());
+        assert!(TrafficMode::parse("skewed").is_some());
+        assert!(TrafficMode::parse("bursty").is_none());
     }
 
     #[test]

@@ -25,6 +25,38 @@ use super::protocol::{ErrorCode, RequestBody, ResponseBody,
 /// Max resubmissions of one frame after `BUSY` before giving up.
 const MAX_BUSY_RETRIES: u32 = 200;
 
+/// Input spike-density distribution of the generated frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrafficMode {
+    /// ~1 in 4 frames dense-random, the rest ~10% sparse — the
+    /// original mixed workload.
+    #[default]
+    Mixed,
+    /// Heavy-tailed per-frame density: most frames nearly silent
+    /// (~2%), a thin tail ramping to ~90% dense (`density = 0.02 +
+    /// 0.9 u^5` on a per-frame uniform draw). This is the skew the
+    /// cost-aware dispatch exists for: request *count* says nothing
+    /// about the work a burst carries.
+    Skewed,
+}
+
+impl TrafficMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "mixed" => TrafficMode::Mixed,
+            "skewed" | "skew" => TrafficMode::Skewed,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrafficMode::Mixed => "mixed",
+            TrafficMode::Skewed => "skewed",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct LoadGenConfig {
     pub addr: String,
@@ -43,6 +75,8 @@ pub struct LoadGenConfig {
     /// Re-send frames shed with `BUSY` (with backoff) instead of
     /// counting them as terminal.
     pub retry_busy: bool,
+    /// Input-density distribution of the generated frames.
+    pub traffic: TrafficMode,
     pub seed: u64,
 }
 
@@ -56,6 +90,7 @@ impl Default for LoadGenConfig {
             window: 8,
             spikes: false,
             retry_busy: true,
+            traffic: TrafficMode::Mixed,
             seed: 0x10AD,
         }
     }
@@ -95,30 +130,52 @@ struct ConnResult {
     latencies_us: Vec<u64>,
 }
 
-/// Deterministic workload: ~1 in 4 frames dense-random (expensive),
-/// the rest sparse (cheap) — the skew the balance machinery exists
-/// for. Regenerable from (seed, id) so busy retries resend identical
-/// bytes.
-fn make_pixels(info: &ServerInfo, seed: u64, id: u64) -> Vec<u8> {
+/// Deterministic pixel workload, regenerable from `(seed, id)` so
+/// busy retries resend identical bytes and tests can reproduce the
+/// exact frames a loadgen run sent (the hermetic balance tests do).
+pub fn gen_pixels(n: usize, seed: u64, id: u64, traffic: TrafficMode)
+                  -> Vec<u8> {
     let mut rng = SplitMix64::new(seed ^ id.wrapping_mul(0x9E37_79B9));
-    let n = info.pixels_len();
-    let dense = id % 4 == 0;
-    (0..n)
-        .map(|_| {
-            if dense {
-                rng.next_below(256) as u8
-            } else if rng.next_below(100) < 10 {
-                rng.next_below(256) as u8
-            } else {
-                0
-            }
-        })
-        .collect()
+    match traffic {
+        // ~1 in 4 frames dense-random (expensive), the rest ~10%
+        // sparse (cheap).
+        TrafficMode::Mixed => {
+            let dense = id % 4 == 0;
+            (0..n)
+                .map(|_| {
+                    if dense {
+                        rng.next_below(256) as u8
+                    } else if rng.next_below(100) < 10 {
+                        rng.next_below(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect()
+        }
+        // Heavy-tailed density: one uniform draw per frame sets its
+        // spike density at `0.02 + 0.9 u^5` — mostly near-silent
+        // frames with a thin, very dense tail.
+        TrafficMode::Skewed => {
+            let u = rng.next_below(1_000_000) as f64 / 1e6;
+            let density = 0.02 + 0.90 * u.powi(5);
+            let thresh = (density * 10_000.0) as u64;
+            (0..n)
+                .map(|_| {
+                    if rng.next_below(10_000) < thresh {
+                        rng.next_below(256) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect()
+        }
+    }
 }
 
-fn make_payload(info: &ServerInfo, seed: u64, id: u64, spikes: bool)
-                -> WirePayload {
-    let pixels = make_pixels(info, seed, id);
+fn make_payload(info: &ServerInfo, seed: u64, id: u64, spikes: bool,
+                traffic: TrafficMode) -> WirePayload {
+    let pixels = gen_pixels(info.pixels_len(), seed, id, traffic);
     if !spikes {
         return WirePayload::Pixels(pixels);
     }
@@ -138,8 +195,8 @@ fn make_payload(info: &ServerInfo, seed: u64, id: u64, spikes: bool)
 
 #[allow(clippy::too_many_arguments)]
 fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
-            window: usize, spikes: bool, retry_busy: bool, seed: u64)
-            -> Result<ConnResult> {
+            window: usize, spikes: bool, retry_busy: bool,
+            traffic: TrafficMode, seed: u64) -> Result<ConnResult> {
     let mut client = Client::connect(addr)?;
     client.set_read_timeout(Some(Duration::from_secs(60)))?;
     let mut to_send: VecDeque<(u64, u32)> =
@@ -153,7 +210,7 @@ fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
             let Some((id, attempts)) = to_send.pop_front() else {
                 break;
             };
-            let payload = make_payload(info, seed, id, spikes);
+            let payload = make_payload(info, seed, id, spikes, traffic);
             client.send(&WireRequest {
                 id,
                 body: RequestBody::Infer {
@@ -228,7 +285,8 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                     cfg.seed.wrapping_add(0xC0FF_EE00 * i as u64);
                 s.spawn(move || {
                     run_conn(&cfg.addr, &cfg.model, info, n, window,
-                             cfg.spikes, cfg.retry_busy, seed)
+                             cfg.spikes, cfg.retry_busy, cfg.traffic,
+                             seed)
                 })
             })
             .collect();

@@ -32,7 +32,7 @@ pub mod protocol;
 pub mod server;
 
 pub use client::{Client, ServerInfo};
-pub use loadgen::{LoadGenConfig, LoadGenReport};
+pub use loadgen::{LoadGenConfig, LoadGenReport, TrafficMode};
 pub use protocol::{ErrorCode, ProtoError, RequestBody, ResponseBody,
                    WirePayload, WireRequest, WireResponse};
 pub use server::{CounterSnapshot, Gateway, GatewayConfig,

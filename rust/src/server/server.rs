@@ -139,7 +139,10 @@ impl Counters {
     }
 }
 
-/// Per-model admission/outcome counters (atomics).
+/// Per-model admission/outcome counters (atomics). The `cost_*`
+/// counters denominate the same admission flow in predicted-cost
+/// units (see `coordinator::cost`), so load and shedding are visible
+/// as *work*, not just request count.
 #[derive(Default)]
 struct ModelCounters {
     requests: AtomicU64,
@@ -148,6 +151,9 @@ struct ModelCounters {
     bad_request: AtomicU64,
     shutting_down: AtomicU64,
     internal: AtomicU64,
+    cost_admitted: AtomicU64,
+    cost_served: AtomicU64,
+    cost_shed: AtomicU64,
 }
 
 /// Point-in-time copy of one model's counters.
@@ -160,6 +166,12 @@ pub struct ModelCounterSnapshot {
     pub bad_request: u64,
     pub shutting_down: u64,
     pub internal: u64,
+    /// Predicted cost accepted into this model's queue (cost units).
+    pub cost_admitted: u64,
+    /// Predicted cost of successfully served responses.
+    pub cost_served: u64,
+    /// Predicted cost shed with `BUSY` (queue full).
+    pub cost_shed: u64,
 }
 
 impl ModelCounters {
@@ -172,6 +184,9 @@ impl ModelCounters {
             bad_request: ld(&self.bad_request),
             shutting_down: ld(&self.shutting_down),
             internal: ld(&self.internal),
+            cost_admitted: ld(&self.cost_admitted),
+            cost_served: ld(&self.cost_served),
+            cost_shed: ld(&self.cost_shed),
         }
     }
 }
@@ -184,6 +199,8 @@ struct ModelRuntime {
     failures: Mutex<Vec<String>>,
     counters: ModelCounters,
     workers: usize,
+    /// Dispatch-mode label of this model's balance metrics.
+    dispatch: &'static str,
 }
 
 /// Final per-model summary inside a [`GatewayReport`].
@@ -300,6 +317,7 @@ impl Gateway {
                 failures: Mutex::new(Vec::new()),
                 counters: ModelCounters::default(),
                 workers: service.worker_count(),
+                dispatch: service.dispatch_mode().as_str(),
             });
             event_streams.push(events);
         }
@@ -751,6 +769,9 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
                                   ErrorCode::BadRequest, &detail));
         return;
     }
+    // Request-level APRC: predict once, tag admission with it, and
+    // account the admitted/shed flow in cost units alongside counts.
+    let cost = m.handle.predict_cost(&payload);
     let internal = shared.next_id.fetch_add(1, Ordering::Relaxed);
     shared.pending.lock().unwrap().insert(internal, PendingEntry {
         tx: tx.clone(),
@@ -758,14 +779,18 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
         version,
         model: idx,
     });
-    match m.handle.try_submit(internal, payload) {
-        Ok(()) => {}
+    match m.handle.try_submit_cost(internal, payload, cost) {
+        Ok(()) => {
+            m.counters.cost_admitted.fetch_add(cost, Ordering::Relaxed);
+        }
         Err(e) => {
             shared.pending.lock().unwrap().remove(&internal);
             let code = match e {
                 SubmitError::Full { .. } => {
                     shared.counters.busy.fetch_add(1, Ordering::Relaxed);
                     m.counters.busy.fetch_add(1, Ordering::Relaxed);
+                    m.counters.cost_shed
+                        .fetch_add(cost, Ordering::Relaxed);
                     ErrorCode::Busy
                 }
                 SubmitError::Closed | SubmitError::NoWorkers => {
@@ -797,6 +822,8 @@ fn router_loop(model_idx: usize,
                 m.stats.lock().unwrap().record(&r);
                 shared.counters.served.fetch_add(1, Ordering::Relaxed);
                 m.counters.served.fetch_add(1, Ordering::Relaxed);
+                m.counters.cost_served
+                    .fetch_add(r.predicted_cost, Ordering::Relaxed);
                 let entry = shared.pending.lock().unwrap().remove(&r.id);
                 if let Some(p) = entry {
                     let prediction = r.output_counts.iter().enumerate()
@@ -967,13 +994,56 @@ fn render_metrics(shared: &Shared) -> String {
                   "counter", &col(&|i| queues[i].pushed as f64));
     push_labelled(&mut out, shared, "skydiver_queue_popped_total",
                   "counter", &col(&|i| queues[i].popped as f64));
+    // Cost-denominated queue state (0 = uncapped: u64::MAX as a gauge
+    // would only obscure the "no cap" case).
+    push_labelled(&mut out, shared, "skydiver_queue_cost_depth",
+                  "gauge", &col(&|i| queues[i].cost_depth as f64));
+    push_labelled(&mut out, shared, "skydiver_queue_cost_capacity",
+                  "gauge", &col(&|i| {
+                      if queues[i].cost_capacity == u64::MAX {
+                          0.0
+                      } else {
+                          queues[i].cost_capacity as f64
+                      }
+                  }));
+    // Request-level APRC series: admission flow in predicted-cost
+    // units and the predictor's live calibration quality.
+    push_labelled(&mut out, shared,
+                  "skydiver_predicted_cost_admitted_total", "counter",
+                  &col(&|i| mcs[i].cost_admitted as f64));
+    push_labelled(&mut out, shared,
+                  "skydiver_predicted_cost_served_total", "counter",
+                  &col(&|i| mcs[i].cost_served as f64));
+    push_labelled(&mut out, shared,
+                  "skydiver_predicted_cost_shed_total", "counter",
+                  &col(&|i| mcs[i].cost_shed as f64));
+    push_labelled(&mut out, shared,
+                  "skydiver_predicted_cost_mean", "gauge",
+                  &col(&|i| reports[i].mean_predicted_cost));
+    push_labelled(&mut out, shared,
+                  "skydiver_cost_calibration_error", "gauge",
+                  &col(&|i| reports[i].cost_calibration_error));
     // Per-model serving reports (histogram-backed).
     push_labelled(&mut out, shared, "skydiver_frames_served_total",
                   "counter", &col(&|i| reports[i].frames as f64));
     push_labelled(&mut out, shared, "skydiver_served_fps", "gauge",
                   &col(&|i| reports[i].served_fps));
-    push_labelled(&mut out, shared, "skydiver_host_balance_ratio",
-                  "gauge", &col(&|i| reports[i].host_balance_ratio));
+    // Balance ratios carry the model's dispatch mode, so FIFO-vs-cost
+    // comparisons read straight off the metrics endpoint.
+    let _ = writeln!(out, "# TYPE skydiver_host_balance_ratio gauge");
+    for (m, rep) in shared.models.iter().zip(&reports) {
+        let _ = writeln!(
+            out,
+            "skydiver_host_balance_ratio{{model=\"{}\",dispatch=\
+             \"{}\"}} {}", m.name, m.dispatch, rep.host_balance_ratio);
+    }
+    let _ = writeln!(out, "# TYPE skydiver_cost_balance_ratio gauge");
+    for (m, rep) in shared.models.iter().zip(&reports) {
+        let _ = writeln!(
+            out,
+            "skydiver_cost_balance_ratio{{model=\"{}\",dispatch=\
+             \"{}\"}} {}", m.name, m.dispatch, rep.cost_balance_ratio);
+    }
     push_labelled(&mut out, shared, "skydiver_sim_fps", "gauge",
                   &col(&|i| reports[i].sim_fps));
     push_labelled(&mut out, shared, "skydiver_sim_energy_uj_mean",

@@ -37,6 +37,30 @@ pub fn encode_phased_u8(img: &[u8], c: usize, h: usize, w: usize,
     encode_phased(&f, c, h, w, timesteps)
 }
 
+/// Spikes [`encode_phased_u8`] emits for one pixel value over `T`
+/// steps: the per-step emissions `floor(p*(t+1)) - floor(p*t)`
+/// telescope to `floor(p*T)` (computed in f32, exactly like the
+/// encoder), so the total is known without building any map. The
+/// request-cost predictor (`coordinator::cost`) caches this table
+/// once per model and sums it per pixel at admission.
+pub fn phased_events_per_level(timesteps: usize) -> [u64; 256] {
+    let mut table = [0u64; 256];
+    for (v, e) in table.iter_mut().enumerate() {
+        *e = ((v as f32 / 255.0) * timesteps as f32).floor() as u64;
+    }
+    table
+}
+
+/// One-shot convenience over [`phased_events_per_level`]: the exact
+/// total input-spike count `encode_phased_u8` would produce for this
+/// image, without materialising a `SpikeMap`. Rebuilds the 256-entry
+/// table per call — fine for tests and tools; the admission hot path
+/// goes through the model's cached table instead.
+pub fn phased_event_count_u8(img: &[u8], timesteps: usize) -> u64 {
+    let table = phased_events_per_level(timesteps);
+    img.iter().map(|&v| table[v as usize]).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +105,19 @@ mod tests {
                            "p={p} T={t}");
             }
         }
+    }
+
+    #[test]
+    fn event_count_matches_encoder_exactly() {
+        // Every pixel level, several timestep counts: the closed form
+        // must equal what the encoder actually emits.
+        for t in [1usize, 4, 7, 20] {
+            let img: Vec<u8> = (0..=255).collect();
+            let maps = encode_phased_u8(&img, 1, 16, 16, t);
+            let emitted: u64 =
+                maps.iter().map(|m| m.nnz() as u64).sum();
+            assert_eq!(phased_event_count_u8(&img, t), emitted, "T={t}");
+        }
+        assert_eq!(phased_event_count_u8(&[], 8), 0);
     }
 }

@@ -230,6 +230,35 @@ impl SpikeMap {
     }
 }
 
+/// Population count over externally packed channel blocks: `words`
+/// holds consecutive blocks of `wpc` words, each covering `neurons`
+/// valid bits (the [`SpikeMap`] per-channel layout — a multi-timestep
+/// wire payload is just `timesteps * c` such blocks). Stray bits at or
+/// beyond `neurons` in a block's tail word are masked off, exactly as
+/// the worker masks client-packed spike payloads, so the count matches
+/// what the pipeline will actually process. A trailing partial block
+/// (malformed payload) is counted unmasked rather than panicking —
+/// cost prediction must never be the thing that dies on bad input.
+pub fn nnz_packed(words: &[u64], wpc: usize, neurons: usize) -> u64 {
+    if wpc == 0 {
+        return 0;
+    }
+    let rem = neurons % 64;
+    let mask: u64 = if rem == 0 { !0u64 } else { (1u64 << rem) - 1 };
+    let mut total = 0u64;
+    let mut chunks = words.chunks_exact(wpc);
+    for block in &mut chunks {
+        for (i, &w) in block.iter().enumerate() {
+            let w = if i + 1 == wpc { w & mask } else { w };
+            total += w.count_ones() as u64;
+        }
+    }
+    total
+        + chunks.remainder().iter()
+            .map(|w| w.count_ones() as u64)
+            .sum::<u64>()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,5 +369,31 @@ mod tests {
         m.set(0, 64);
         assert_eq!(m.nnz_channel(0), 1);
         assert_eq!(m.iter_events().count(), 1);
+    }
+
+    #[test]
+    fn nnz_packed_matches_spikemap_and_masks_straddle() {
+        // Two channels of 5x13 = 65 neurons -> wpc = 2, partial tail.
+        let mut m = SpikeMap::zeros(2, 5, 13);
+        for &(c, i) in &[(0usize, 0usize), (0, 64), (1, 3), (1, 40)] {
+            m.set(c, i);
+        }
+        let mut words = Vec::new();
+        for ch in 0..2 {
+            words.extend_from_slice(m.channel_words(ch));
+        }
+        assert_eq!(nnz_packed(&words, m.words_per_channel(), 65),
+                   m.nnz() as u64);
+        // Stray bits beyond neuron 65 in a tail word are excluded,
+        // matching the worker-side mask on client-packed payloads.
+        let mut dirty = words.clone();
+        dirty[1] |= 1u64 << 30; // bit 94 of channel 0: out of range
+        assert_eq!(nnz_packed(&dirty, 2, 65), m.nnz() as u64);
+        // Exact multiple of 64 neurons: no masking applies.
+        assert_eq!(nnz_packed(&[!0u64], 1, 64), 64);
+        // Degenerate inputs count zero / raw, never panic.
+        assert_eq!(nnz_packed(&[], 2, 65), 0);
+        assert_eq!(nnz_packed(&[1, 1, 1], 2, 65), 3);
+        assert_eq!(nnz_packed(&[7], 0, 65), 0);
     }
 }

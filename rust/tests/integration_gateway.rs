@@ -58,6 +58,7 @@ fn service_cfg(workers: usize, queue_cap: usize) -> ServiceConfig {
         queue_cap,
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
     }
 }
 

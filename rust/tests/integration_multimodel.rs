@@ -57,6 +57,7 @@ fn service_cfg() -> ServiceConfig {
         queue_cap: 256,
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
     }
 }
 

@@ -8,9 +8,11 @@
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
-use skydiver::coordinator::{DispatchMode, Policy, Service, ServiceConfig,
-                            ServingReport, SubmitError, WorkerConfig};
+use skydiver::coordinator::{DispatchMode, Policy, Response, Service,
+                            ServiceConfig, ServingReport, SubmitError,
+                            WorkerConfig};
 use skydiver::power::EnergyModel;
+use skydiver::server::loadgen::{gen_pixels, TrafficMode};
 use skydiver::sim::ArchConfig;
 use skydiver::snn::NetKind;
 
@@ -80,6 +82,7 @@ fn assert_build_failure_surfaces(dispatch: DispatchMode) {
         queue_cap: 16,
         batch_wait: Duration::from_millis(2),
         dispatch,
+        cost_cap: None,
     };
     // Weights exist, so start() succeeds; the runtime half of the
     // pipeline is built per-worker, inside the worker threads.
@@ -129,6 +132,7 @@ fn run_skewed(dir: &Path, dispatch: DispatchMode) -> ServingReport {
         // batches deterministically.
         batch_wait: Duration::from_millis(100),
         dispatch,
+        cost_cap: None,
     };
     let service =
         Service::start(scfg, worker_cfg(dir.to_path_buf(), false)).unwrap();
@@ -184,6 +188,7 @@ fn all_workers_serve_under_bursty_load() {
         queue_cap: 128,
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
     };
     let service =
         Service::start(scfg, worker_cfg(dir, false)).unwrap();
@@ -222,6 +227,7 @@ fn backpressure_reports_queue_full() {
         queue_cap: 2,
         batch_wait: Duration::from_millis(2),
         dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
     };
     let service =
         Service::start(scfg, worker_cfg(dir, false)).unwrap();
@@ -230,7 +236,7 @@ fn backpressure_reports_queue_full() {
     for i in 0..n {
         match service.try_submit(i, expensive_frame()) {
             Ok(()) => {}
-            Err(SubmitError::Full { capacity }) => {
+            Err(SubmitError::Full { capacity, .. }) => {
                 assert_eq!(capacity, 2);
                 saw_full = true;
                 service.submit(i, expensive_frame()).unwrap();
@@ -249,6 +255,162 @@ fn backpressure_reports_queue_full() {
     assert_eq!(resps.len(), n as usize);
     assert!(report.queue_max_depth <= 2);
     assert_eq!(report.per_worker, vec![n]);
+}
+
+/// Run one dispatch mode over a fixed frame list: submit everything,
+/// collect, shut down, return responses sorted by id plus the report.
+fn run_frames(dir: &Path, dispatch: DispatchMode,
+              frames: &[Vec<u8>]) -> (Vec<Response>, ServingReport) {
+    let scfg = ServiceConfig {
+        workers: 2,
+        // Large enough that FIFO's first free worker can pull the
+        // whole dense half of the burst as ONE batch — maximising the
+        // imbalance cost-aware assembly must beat, which also keeps
+        // the >= comparison below far from timing noise.
+        batch_max: 16,
+        queue_cap: 64,
+        // Cost-aware mode's batch grouping window; FIFO pull ignores
+        // it. Generous enough that the queued burst is fully visible
+        // to the first LPT fill.
+        batch_wait: Duration::from_millis(25),
+        dispatch,
+        cost_cap: None,
+    };
+    let service =
+        Service::start(scfg, worker_cfg(dir.to_path_buf(), false))
+            .unwrap();
+    for (i, px) in frames.iter().enumerate() {
+        service.submit(i as u64, px.clone()).unwrap();
+    }
+    let (mut resps, report) = service
+        .collect_within(frames.len(), skydiver::CLOCK_HZ,
+                        Duration::from_secs(120))
+        .unwrap();
+    service.shutdown().unwrap();
+    resps.sort_by_key(|r| r.id);
+    (resps, report)
+}
+
+/// The skewed-density loadgen workload, arranged adversarially: two
+/// expensive "plug" frames occupy both workers while the burst queues
+/// behind them, and the burst itself arrives densest-first — so FIFO
+/// count-based batch assembly hands one worker the heavy tail in a
+/// single batch, while cost-aware LPT assembly splits it by predicted
+/// cost.
+fn skewed_burst() -> Vec<Vec<u8>> {
+    let mut burst: Vec<Vec<u8>> = (0..32u64)
+        .map(|id| gen_pixels(SIDE * SIDE, 0x5EED, id,
+                             TrafficMode::Skewed))
+        .collect();
+    // Densest first (deterministic proxy for predicted cost).
+    burst.sort_by_key(|px| {
+        std::cmp::Reverse(px.iter().map(|&v| v as u64).sum::<u64>())
+    });
+    let mut frames = vec![expensive_frame(), expensive_frame()];
+    frames.extend(burst);
+    frames
+}
+
+/// Acceptance (tentpole): under the skewed-density loadgen workload,
+/// cost-aware dispatch answers every request byte-identically to the
+/// FIFO baseline *and* reports a host balance ratio at least as good.
+#[test]
+fn cost_aware_matches_fifo_outputs_and_balance_on_skewed_load() {
+    let dir = write_tiny_artifacts("costparity");
+    let frames = skewed_burst();
+    let (fifo, fifo_rep) =
+        run_frames(&dir, DispatchMode::WorkQueue, &frames);
+    let (cost, cost_rep) =
+        run_frames(&dir, DispatchMode::CostAware, &frames);
+
+    // Byte-identical per-request outputs: dispatch order must never
+    // change what a frame computes.
+    assert_eq!(fifo.len(), cost.len());
+    for (a, b) in fifo.iter().zip(&cost) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output_counts, b.output_counts,
+                   "cost-aware dispatch changed frame {} output", a.id);
+        assert_eq!(a.sim_cycles, b.sim_cycles);
+        assert_eq!(a.predicted_cost, b.predicted_cost,
+                   "cost model must tag identically across modes");
+        assert!((a.energy_j - b.energy_j).abs() < 1e-15);
+    }
+
+    // Balance: the whole point of predicting request cost.
+    assert!(cost_rep.host_balance_ratio >= fifo_rep.host_balance_ratio,
+            "cost-aware balance {:.3} (busy {:?}) must be >= FIFO \
+             {:.3} (busy {:?}) on the skewed burst",
+            cost_rep.host_balance_ratio, cost_rep.per_worker_busy_us,
+            fifo_rep.host_balance_ratio, fifo_rep.per_worker_busy_us);
+    // And the predicted-cost split itself must be near-even (timing-
+    // noise-free check of the LPT assembly).
+    assert!(cost_rep.cost_balance_ratio > 0.7,
+            "LPT assembly should spread predicted cost evenly, got \
+             {:.3} ({:?})", cost_rep.cost_balance_ratio,
+            cost_rep.per_worker_cost);
+    // The calibration metric is populated and finite.
+    assert!(cost_rep.mean_predicted_cost > 0.0);
+    assert!(cost_rep.cost_calibration_error.is_finite());
+}
+
+/// Cost-denominated admission: the real pipeline's cost model prices
+/// a dense frame far above a silent one, cost-aware services run a
+/// cost-capped queue, and a dense burst sheds on predicted cost long
+/// before the request-count cap is reached.
+#[test]
+fn cost_cap_sheds_dense_bursts_before_count_cap() {
+    use skydiver::coordinator::{FramePayload, NOMINAL_FRAME_COST};
+    let dir = write_tiny_artifacts("costcap");
+    let cap = NOMINAL_FRAME_COST * 3 / 2;
+    let scfg = ServiceConfig {
+        workers: 1,
+        batch_max: 1,
+        queue_cap: 64,
+        batch_wait: Duration::from_millis(2),
+        dispatch: DispatchMode::CostAware,
+        cost_cap: Some(cap),
+    };
+    let service =
+        Service::start(scfg, worker_cfg(dir.to_path_buf(), false))
+            .unwrap();
+    // The calibrated model must price density, with a non-zero floor.
+    let dense_cost = service.cost_model()
+        .predict(&FramePayload::Pixels(expensive_frame()));
+    let silent_cost = service.cost_model()
+        .predict(&FramePayload::Pixels(cheap_frame()));
+    assert!(silent_cost >= 1);
+    assert!(dense_cost > 5 * silent_cost,
+            "dense {dense_cost} vs silent {silent_cost}: the cost \
+             model must separate the skew");
+    assert!(dense_cost > cap,
+            "an all-255 frame must exceed a 1.5x-nominal cap \
+             (got {dense_cost} <= {cap})");
+    // The service wired the cap into its queue.
+    assert_eq!(service.queue_stats().cost_capacity, cap);
+
+    // A dense burst: the queue can hold at most one above-cap frame
+    // at a time (the empty-queue exemption), so with a single slow
+    // worker most of the burst sheds on cost — far below the 64-slot
+    // count cap.
+    let mut shed = 0;
+    let mut admitted = 0usize;
+    for i in 0..8u64 {
+        match service.try_submit(i, expensive_frame()) {
+            Ok(()) => admitted += 1,
+            Err(SubmitError::Full { .. }) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed >= 4,
+            "dense burst must shed on predicted cost (admitted \
+             {admitted}, shed {shed})");
+    let (resps, report) = service
+        .collect_within(admitted, skydiver::CLOCK_HZ,
+                        Duration::from_secs(120))
+        .unwrap();
+    assert_eq!(resps.len(), admitted);
+    assert!(report.mean_predicted_cost > 0.0);
+    service.shutdown().unwrap();
 }
 
 /// Zero-frame runs produce a finite, all-zero report (regression for
@@ -289,6 +451,7 @@ fn worker_sweep_matches_serial_outputs() {
             queue_cap: 64,
             batch_wait: Duration::from_millis(300),
             dispatch: DispatchMode::RoundRobinBatch,
+            cost_cap: None,
         };
         let wcfg = WorkerConfig {
             sweep_threads,

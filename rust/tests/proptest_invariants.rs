@@ -2,6 +2,7 @@
 //! SplitMix64 — the build is offline, so no proptest crate; same
 //! shrink-free randomized-invariant methodology, 256 cases per property).
 
+use skydiver::coordinator::BoundedQueue;
 use skydiver::data::SplitMix64;
 use skydiver::schedule::baselines::{Contiguous, Oracle, Random,
                                     RoundRobin, SparTen};
@@ -90,6 +91,53 @@ fn prop_balance_ratio_in_unit_interval() {
             let b = p.balance_ratio(&w);
             assert!((0.0..=1.0 + 1e-12).contains(&b), "ratio {b}");
         }
+    }
+}
+
+// ---------------- cost-balanced batch assembly ----------------
+
+#[test]
+fn prop_cost_batches_never_exceed_twice_ideal_max_bin() {
+    // Greedy LPT batch assembly (`pop_batch_cost`) hands each pull at
+    // most `max(costliest_item, queued_cost / consumers)` of predicted
+    // cost — within 2x the ideal max-bin cost
+    // `max(max_item, total / consumers)`, the classic greedy bound.
+    // Drained single-threaded so every batch is observable.
+    let mut rng = SplitMix64::new(0xBA7C);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(64) as usize;
+        let k = 1 + rng.next_below(8) as usize;
+        let costs: Vec<u64> = (0..n)
+            .map(|_| {
+                // Heavy-tailed: occasional 50x items, like the skewed
+                // traffic mode.
+                let c = 1 + rng.next_below(100);
+                if rng.next_below(8) == 0 { c * 50 } else { c }
+            })
+            .collect();
+        let q: BoundedQueue<usize> = BoundedQueue::new(n);
+        q.add_consumers(k);
+        for (i, &c) in costs.iter().enumerate() {
+            q.try_push_cost(i, c).unwrap();
+        }
+        let total: u64 = costs.iter().sum();
+        let max_item = *costs.iter().max().unwrap();
+        let ideal = (total as f64 / k as f64).max(max_item as f64);
+        let mut seen = 0usize;
+        while q.stats().depth > 0 {
+            let batch = q
+                .pop_batch_cost(n, std::time::Duration::ZERO)
+                .expect("queue is non-empty");
+            assert!(!batch.is_empty());
+            let batch_cost: u64 =
+                batch.iter().map(|&i| costs[i]).sum();
+            assert!(batch_cost as f64 <= 2.0 * ideal + 1e-9,
+                    "batch cost {batch_cost} > 2x ideal {ideal} \
+                     (n={n}, k={k})");
+            seen += batch.len();
+        }
+        assert_eq!(seen, n, "every item must be handed out exactly once");
+        assert_eq!(q.stats().cost_popped, total);
     }
 }
 

@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a fresh BENCH_*.json against the
+committed baseline snapshot and fail CI on a regression.
+
+Rules (per row, matched by ``name``):
+
+* ``mean_ns`` may not regress by more than ``--max-regress`` (default
+  0.25 = +25%) over the baseline.
+* On *alloc-free* rows (baseline ``allocs_per_iter`` < 1.0), any real
+  increase (>= +0.5 allocs/iter, tolerance for counter jitter) fails —
+  these rows are the allocation-free hot-path invariants tracked in
+  PERF.md.
+* Rows present only in the fresh file are reported as untracked and do
+  NOT fail the gate (that is how new benches bootstrap); refresh the
+  baseline with ``--update`` to start tracking them.
+* Rows present only in the baseline warn (a bench binary may not have
+  run) but do not fail.
+* Rows whose ``quick`` flags differ are compared anyway but flagged —
+  --quick numbers are only comparable to --quick baselines.
+
+``--update`` merges the fresh rows into the baseline file (by name)
+instead of comparing — the documented baseline-refresh workflow.
+
+``--self-test`` runs the gate against doctored in-memory documents and
+exits non-zero if any rule misfires: this is the unit test CI runs
+before trusting the gate.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA = "skydiver-bench-v1"
+ALLOC_FREE_BASE = 1.0   # baseline rows below this are "alloc-free"
+ALLOC_JITTER = 0.5      # counted-allocator noise tolerance
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise SystemExit(f"{path}: schema {doc.get('schema')!r} != "
+                         f"{SCHEMA!r}")
+    rows = doc.get("results")
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: 'results' must be a list")
+    return doc
+
+
+def by_name(doc):
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def compare(baseline, fresh, max_regress):
+    """Return (failures, notes) comparing two parsed documents."""
+    failures, notes = [], []
+    base = by_name(baseline)
+    new = by_name(fresh)
+    if not base:
+        notes.append("baseline is empty (bootstrap pending) — run "
+                     "tools/bench_gate.py --update to start tracking")
+    for name, row in new.items():
+        b = base.get(name)
+        if b is None:
+            notes.append(f"untracked row {name!r} (not in baseline; "
+                         f"--update to track)")
+            continue
+        if bool(b.get("quick")) != bool(row.get("quick")):
+            notes.append(f"{name}: quick flag differs from baseline "
+                         f"(baseline quick={b.get('quick')}, fresh "
+                         f"quick={row.get('quick')}) — comparison is "
+                         f"approximate")
+        b_mean, mean = float(b["mean_ns"]), float(row["mean_ns"])
+        limit = b_mean * (1.0 + max_regress)
+        if mean > limit:
+            failures.append(
+                f"{name}: mean_ns {mean:.0f} > {limit:.0f} "
+                f"(baseline {b_mean:.0f} +{max_regress * 100:.0f}%)")
+        b_allocs = float(b.get("allocs_per_iter", 0.0))
+        allocs = float(row.get("allocs_per_iter", 0.0))
+        if b_allocs < ALLOC_FREE_BASE and \
+                allocs > b_allocs + ALLOC_JITTER:
+            failures.append(
+                f"{name}: allocs_per_iter grew {b_allocs:.1f} -> "
+                f"{allocs:.1f} on an alloc-free row")
+    for name in base:
+        if name not in new:
+            notes.append(f"baseline row {name!r} missing from fresh "
+                         f"output (bench not run?)")
+    return failures, notes
+
+
+def update(baseline_path, fresh):
+    """Merge fresh rows into the baseline file by name."""
+    if os.path.exists(baseline_path):
+        doc = load(baseline_path)
+    else:
+        doc = {"schema": SCHEMA, "results": []}
+    merged = by_name(doc)
+    merged.update(by_name(fresh))
+    doc["results"] = sorted(merged.values(), key=lambda r: r["name"])
+    if doc["results"]:
+        # The committed bootstrap note ("no rows tracked yet") is
+        # stale once rows exist; replace it with the refresh recipe.
+        doc["note"] = ("Tracked bench baseline — compared by "
+                       "tools/bench_gate.py in CI. Refresh from a "
+                       "trusted --quick run with --update and commit.")
+    os.makedirs(os.path.dirname(baseline_path) or ".", exist_ok=True)
+    with open(baseline_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"updated {baseline_path}: {len(doc['results'])} tracked "
+          f"row(s)")
+
+
+def run_gate(baseline_path, fresh_path, max_regress, do_update):
+    fresh = load(fresh_path)
+    if do_update:
+        update(baseline_path, fresh)
+        return 0
+    if os.path.exists(baseline_path):
+        baseline = load(baseline_path)
+    else:
+        print(f"bench gate: no baseline at {baseline_path} "
+              f"(bootstrap pending)")
+        baseline = {"schema": SCHEMA, "results": []}
+    failures, notes = compare(baseline, fresh, max_regress)
+    for n in notes:
+        print(f"bench gate [note] {n}")
+    for f in failures:
+        print(f"bench gate [FAIL] {f}")
+    if failures:
+        print(f"bench gate: {len(failures)} regression(s) against "
+              f"{baseline_path}")
+        return 1
+    print(f"bench gate: OK ({len(by_name(fresh))} row(s) checked "
+          f"against {baseline_path})")
+    return 0
+
+
+# --------------------------------------------------------- self-test
+
+def row(name, mean_ns, allocs, quick=True):
+    return {"name": name, "iters": 10, "mean_ns": mean_ns,
+            "p50_ns": mean_ns, "p95_ns": mean_ns, "p99_ns": mean_ns,
+            "frames_per_sec": 1e9 / mean_ns,
+            "allocs_per_iter": allocs, "quick": quick, "threads": 2}
+
+
+def doc(*rows):
+    return {"schema": SCHEMA, "results": list(rows)}
+
+
+def self_test():
+    """Doctored-json unit tests of every gate rule."""
+    checks = []
+
+    def check(what, failures, want_fail):
+        ok = bool(failures) == want_fail
+        checks.append((what, ok, failures))
+        status = "ok" if ok else "MISFIRE"
+        print(f"self-test [{status}] {what}: "
+              f"{failures if failures else 'no failures'}")
+
+    base = doc(row("sim_step", 100.0, 0.0),
+               row("serving_e2e", 50_000.0, 120.0))
+
+    # Within the envelope: +10% mean, allocs flat.
+    f, _ = compare(base, doc(row("sim_step", 110.0, 0.0),
+                             row("serving_e2e", 54_000.0, 125.0)), 0.25)
+    check("within-envelope passes", f, want_fail=False)
+
+    # Injected mean regression: +60% on one row must fail.
+    f, _ = compare(base, doc(row("sim_step", 160.0, 0.0),
+                             row("serving_e2e", 50_000.0, 120.0)), 0.25)
+    check("+60% mean_ns fails", f, want_fail=True)
+
+    # Exactly at the limit passes; just beyond fails.
+    f, _ = compare(base, doc(row("sim_step", 125.0, 0.0)), 0.25)
+    check("at +25% passes", f, want_fail=False)
+    f, _ = compare(base, doc(row("sim_step", 126.0, 0.0)), 0.25)
+    check("just past +25% fails", f, want_fail=True)
+
+    # Allocation crept into an alloc-free row.
+    f, _ = compare(base, doc(row("sim_step", 100.0, 2.0)), 0.25)
+    check("allocs 0 -> 2 on alloc-free row fails", f, want_fail=True)
+
+    # Alloc growth on an already-allocating row is not gated.
+    f, _ = compare(base, doc(row("serving_e2e", 50_000.0, 300.0)), 0.25)
+    check("alloc growth on allocating row passes", f, want_fail=False)
+
+    # Untracked fresh row and missing baseline row: notes, not failures.
+    f, notes = compare(base, doc(row("sim_step", 100.0, 0.0),
+                                 row("brand_new", 10.0, 0.0)), 0.25)
+    check("untracked row passes", f, want_fail=False)
+    assert any("untracked" in n for n in notes), notes
+    assert any("missing from fresh" in n for n in notes), notes
+
+    # Empty baseline (bootstrap) never fails.
+    f, notes = compare(doc(), doc(row("sim_step", 999.0, 50.0)), 0.25)
+    check("empty baseline bootstraps", f, want_fail=False)
+    assert any("bootstrap" in n for n in notes), notes
+
+    bad = [what for what, ok, _ in checks if not ok]
+    if bad:
+        print(f"self-test FAILED: {bad}")
+        return 1
+    print(f"self-test: all {len(checks)} gate rules behave")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", help="committed baseline json "
+                    "(e.g. bench/baseline/BENCH_sim.json)")
+    ap.add_argument("--fresh", help="freshly produced bench json")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional mean_ns regression "
+                    "(default 0.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="merge fresh rows into the baseline instead "
+                    "of comparing")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate rules against doctored "
+                    "documents")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.baseline or not args.fresh:
+        ap.error("--baseline and --fresh are required "
+                 "(or use --self-test)")
+    sys.exit(run_gate(args.baseline, args.fresh, args.max_regress,
+                      args.update))
+
+
+if __name__ == "__main__":
+    main()

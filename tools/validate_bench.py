@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json produced by the bench binaries.
+
+Extracted from the inline CI snippets so the same check runs locally:
+
+    python3 tools/validate_bench.py BENCH_sim.json --kind sim
+    python3 tools/validate_bench.py BENCH_serving.json --kind serving
+
+* schema must be ``skydiver-bench-v1`` with a non-empty ``results``
+  list;
+* every row carries the tracked keys (serving rows additionally
+  ``p99_ns`` and a positive ``frames_per_sec``);
+* serving output must contain the canonical row set (loopback rtt/e2e,
+  the two mixed multi-model rows, and the skewed FIFO/cost dispatch
+  pair).
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA = "skydiver-bench-v1"
+COMMON_KEYS = ("name", "iters", "mean_ns", "p50_ns", "p95_ns",
+               "frames_per_sec", "allocs_per_iter")
+SERVING_KEYS = COMMON_KEYS + ("p99_ns",)
+SERVING_ROWS = (
+    "serving_loopback_rtt",
+    "serving_loopback_e2e",
+    "serving_mixed_classifier",
+    "serving_mixed_segmenter",
+    "serving_skewed_fifo",
+    "serving_skewed_cost",
+)
+
+
+def fail(msg):
+    print(f"validate_bench: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path")
+    ap.add_argument("--kind", choices=("sim", "serving"),
+                    default="sim")
+    args = ap.parse_args()
+
+    try:
+        with open(args.path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{args.path}: {e}")
+
+    if doc.get("schema") != SCHEMA:
+        fail(f"{args.path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    rows = doc.get("results")
+    if not isinstance(rows, list) or not rows:
+        fail(f"{args.path}: no bench results")
+
+    keys = SERVING_KEYS if args.kind == "serving" else COMMON_KEYS
+    for r in rows:
+        for k in keys:
+            if k not in r:
+                fail(f"{args.path}: row {r.get('name', r)!r} missing "
+                     f"{k!r}")
+        if args.kind == "serving" and not r["frames_per_sec"] > 0:
+            fail(f"{args.path}: row {r['name']!r} has non-positive "
+                 f"frames_per_sec")
+
+    if args.kind == "serving":
+        names = {r["name"] for r in rows}
+        missing = [w for w in SERVING_ROWS if w not in names]
+        if missing:
+            fail(f"{args.path}: missing serving rows {missing} "
+                 f"(have {sorted(names)})")
+
+    print(f"{args.path} OK: {len(rows)} entries ({args.kind})")
+
+
+if __name__ == "__main__":
+    main()
