@@ -4,7 +4,7 @@
 //! the simulator. Fully hermetic (synthetic artifacts; no
 //! `make artifacts`).
 //!
-//! Emits six rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! Emits seven rows into `BENCH_serving.json` (`skydiver-bench-v1`
 //! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
 //!
 //! * `serving_loopback_rtt` — single-connection, window-1 round-trip
@@ -20,6 +20,13 @@
 //!   heavy-tailed (`--traffic skewed`) workload served under FIFO
 //!   pull vs cost-aware LPT dispatch; the per-mode host/cost balance
 //!   ratios are printed alongside the rows.
+//! * `serving_c10k` — 4096 concurrent pipelined connections (1024 in
+//!   `--quick`) multiplexed through the sharded reactor, two frames
+//!   in flight per connection; the row tracks per-request latency and
+//!   aggregate FPS at connection counts no thread-per-connection
+//!   gateway could reach. The fd soft limit is raised in-process; if
+//!   the hard limit is too low the connection count is clamped (and
+//!   said so on stdout).
 
 #[path = "harness.rs"]
 mod harness;
@@ -266,8 +273,77 @@ fn main() {
     let skew_cost = run_skewed("serving_skewed_cost",
                                DispatchMode::CostAware);
 
+    // 5. c10k: thousands of concurrent pipelined connections through
+    // the sharded reactor — the scale the transport rewrite exists
+    // for. The loadgen multiplexes all connections over one thread;
+    // the gateway holds them all with O(shards + models) threads.
+    let want_conns: usize = if quick { 1024 } else { 4096 };
+    let conns = match skydiver::server::reactor::raise_nofile_limit(
+        32 * 1024) {
+        // Client + server ends share this process: ~2 fds per
+        // connection plus slack for artifacts/listeners.
+        Ok(limit) => {
+            let fit = ((limit.saturating_sub(512)) / 2) as usize;
+            if fit < want_conns {
+                println!("c10k: fd limit {limit} clamps connections \
+                          {want_conns} -> {fit}");
+            }
+            fit.min(want_conns).max(64)
+        }
+        Err(e) => {
+            println!("c10k: cannot raise fd limit ({e}); using 64 \
+                      connections");
+            64
+        }
+    };
+    let gw_c10k = Gateway::start_single(
+        GatewayConfig {
+            max_conns: 2 * conns,
+            drain_timeout: Duration::from_secs(60),
+            ..GatewayConfig::default()
+        },
+        ServiceConfig {
+            queue_cap: 2 * conns,
+            ..service_cfg()
+        },
+        worker_cfg(&dir, NetKind::Classifier))
+        .expect("c10k gateway start");
+    let addr_c10k = gw_c10k.local_addr().to_string();
+    let c10k_cfg = LoadGenConfig {
+        addr: addr_c10k.clone(),
+        model: String::new(),
+        conns,
+        frames: conns * 2, // two pipelined frames per connection
+        window: 2,
+        spikes: false,
+        retry_busy: true,
+        traffic: TrafficMode::Skewed,
+        seed: 0xC10C,
+    };
+    let a2 = harness::alloc_count();
+    let c10k_rep = loadgen::run(&c10k_cfg).expect("c10k loadgen");
+    let c10k_allocs = (harness::alloc_count() - a2) as f64
+        / c10k_rep.ok.max(1) as f64;
+    assert_eq!(c10k_rep.errors, 0, "c10k loadgen frames failed");
+    assert_eq!(c10k_rep.ok as usize, conns * 2,
+               "not all c10k frames served");
+    let c10k = loadgen_row("serving_c10k", &c10k_rep, c10k_allocs);
+    c10k.print();
+    println!("c10k: conns={} shards={} ok={} busy={} fps={:.1}",
+             conns, gw_c10k.shard_count(), c10k_rep.ok, c10k_rep.busy,
+             c10k_rep.fps);
+    Client::connect(&addr_c10k).expect("connect for c10k shutdown")
+        .shutdown_server().expect("c10k shutdown");
+    let report_c10k = gw_c10k.wait().expect("c10k gateway wait");
+    assert_eq!(report_c10k.counters.internal, 0);
+    println!("c10k server: accepted={} served={} shed={}",
+             report_c10k.counters.conns_accepted,
+             report_c10k.counters.served,
+             report_c10k.counters.conns_shed);
+
     let path = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".into());
     harness::write_json_to(
-        &path, &[rtt, e2e, mixed_cls, mixed_seg, skew_fifo, skew_cost]);
+        &path, &[rtt, e2e, mixed_cls, mixed_seg, skew_fifo, skew_cost,
+                 c10k]);
 }

@@ -42,6 +42,7 @@ COMMANDS:
              [--batch-max N] [--batch-wait-ms N] [--queue-cost-cap N]
              [--sweep-threads N]
   serve      [--addr HOST:PORT] [--max-conns N] [--port-file PATH]
+             [--reactor-shards N]
              [--net ... | --model NAME[=KIND] (repeatable)]
              [--plain] [--policy P] [--golden] [--workers N]
              [--dispatch queue|cost|rr] [--queue-cap N] [--batch-max N]
@@ -49,6 +50,10 @@ COMMANDS:
              [--sweep-threads N]
              TCP gateway; --addr defaults to 127.0.0.1:7878, port 0
              picks an ephemeral port (written to --port-file).
+             --reactor-shards sets the event-loop shard count
+             (0 = auto: one per core, max 8); connections are
+             multiplexed over the shards, so thread count stays
+             O(shards + models) no matter how many clients connect.
              Repeat --model to mount several models behind one port
              (the first is the default model v1 clients route to),
              e.g. --model classifier --model segmenter or
@@ -96,6 +101,7 @@ const FLAG_SPECS: &[(&str, bool)] = &[
     ("sweep-threads", true),
     ("addr", true),
     ("max-conns", true),
+    ("reactor-shards", true),
     ("port-file", true),
     ("conns", true),
     ("window", true),
@@ -494,6 +500,8 @@ fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
         addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
         max_conns: args.get_usize("max-conns", 64)?,
         drain_timeout: Duration::from_secs(10),
+        reactor_shards: args.get_usize("reactor-shards", 0)?,
+        ..GatewayConfig::default()
     };
     let names: Vec<String> =
         specs.iter().map(|s| {
@@ -507,7 +515,8 @@ fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
     println!("default model: {}", registry.default_name());
     let gw = Gateway::start(gcfg, registry)?;
     let addr = gw.local_addr();
-    println!("listening on {addr}");
+    println!("listening on {addr} ({} reactor shard(s))",
+             gw.shard_count());
     println!("stop with: skydiver loadgen --addr {addr} --frames 0 \
               --shutdown");
     if let Some(pf) = args.get("port-file") {

@@ -7,23 +7,44 @@
 //! over wall time. `BUSY` responses (shed load) are counted and —
 //! optionally — retried with a small backoff, so an overloaded server
 //! still converges instead of dropping work silently.
+//!
+//! Two drivers share one workload definition (same seeds, same
+//! per-connection frame split, same windowing and busy-retry policy):
+//! below [`MULTIPLEX_CONNS`] connections each gets a blocking client
+//! thread; at or above it, every connection is multiplexed over one
+//! nonblocking poll loop ([`reactor`](super::reactor)), so c10k-scale
+//! runs cost fds, not client threads.
 
 use std::collections::{HashMap, VecDeque};
+use std::io::{self, Write};
+use std::net::TcpStream;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::data::SplitMix64;
 use crate::metrics::percentile;
 use crate::snn::encode_phased_u8;
 
 use super::client::{Client, ServerInfo};
-use super::protocol::{ErrorCode, RequestBody, ResponseBody,
-                      WirePayload, WireRequest, CONN_ERR_ID, NET_ANY};
+use super::protocol::{parse_frame, ErrorCode, RequestBody,
+                      ResponseBody, WirePayload, WireRequest,
+                      WireResponse, CONN_ERR_ID, HEADER_LEN,
+                      KIND_RESPONSE, NET_ANY};
+use super::reactor::{self, PollFd, RecvBuf, POLLIN, POLLOUT};
 
 /// Max resubmissions of one frame after `BUSY` before giving up.
 const MAX_BUSY_RETRIES: u32 = 200;
+
+/// At or above this many connections, [`run`] switches from
+/// one-thread-per-connection to the single-threaded multiplexed
+/// driver (`conns` threads would stop measuring the *server* well
+/// before c10k).
+pub const MULTIPLEX_CONNS: usize = 64;
+
+/// Abort a multiplexed run if no response lands for this long.
+const MUX_STALL_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Input spike-density distribution of the generated frames.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -267,44 +288,29 @@ fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
     Ok(ConnResult { sent, ok, busy, errors, latencies_us })
 }
 
-/// Run a full multi-connection load generation against `cfg.addr`,
-/// targeting `cfg.model` (empty = the server's default model).
-pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
-    ensure!(cfg.conns > 0, "loadgen needs at least one connection");
-    let info = Client::connect(&cfg.addr)?.info_model(&cfg.model)?;
-    let window = cfg.window.max(1);
+/// Per-connection frame count: `frames` split as evenly as the
+/// remainder allows (first `frames % conns` connections get one
+/// extra). Both drivers use this split, so switching drivers never
+/// changes the workload.
+fn conn_frames(cfg: &LoadGenConfig, i: usize) -> usize {
+    cfg.frames / cfg.conns + usize::from(i < cfg.frames % cfg.conns)
+}
 
-    let t0 = Instant::now();
-    let results: Vec<Result<ConnResult>> = thread::scope(|s| {
-        let info = &info;
-        let handles: Vec<_> = (0..cfg.conns)
-            .map(|i| {
-                let n = cfg.frames / cfg.conns
-                    + usize::from(i < cfg.frames % cfg.conns);
-                let seed =
-                    cfg.seed.wrapping_add(0xC0FF_EE00 * i as u64);
-                s.spawn(move || {
-                    run_conn(&cfg.addr, &cfg.model, info, n, window,
-                             cfg.spikes, cfg.retry_busy, cfg.traffic,
-                             seed)
-                })
-            })
-            .collect();
-        handles.into_iter()
-            .map(|h| h.join().unwrap_or_else(
-                |_| Err(anyhow!("loadgen connection thread panicked"))))
-            .collect()
-    });
-    let wall_secs = t0.elapsed().as_secs_f64();
+/// Per-connection workload seed (shared by both drivers, and by the
+/// hermetic tests that regenerate a run's exact frames).
+fn conn_seed(cfg: &LoadGenConfig, i: usize) -> u64 {
+    cfg.seed.wrapping_add(0xC0FF_EE00 * i as u64)
+}
 
+fn aggregate(results: Vec<ConnResult>, wall_secs: f64, frames: usize)
+             -> LoadGenReport {
     let mut report = LoadGenReport {
         wall_secs,
-        per_conn_ok: Vec::with_capacity(cfg.conns),
+        per_conn_ok: Vec::with_capacity(results.len()),
         ..Default::default()
     };
-    let mut all_lat: Vec<u64> = Vec::with_capacity(cfg.frames);
-    for res in results {
-        let r = res?;
+    let mut all_lat: Vec<u64> = Vec::with_capacity(frames);
+    for r in results {
         report.sent += r.sent;
         report.ok += r.ok;
         report.busy += r.busy;
@@ -323,5 +329,378 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         all_lat.iter().sum::<u64>() as f64 / all_lat.len() as f64
     };
     report.latencies_us = all_lat;
-    Ok(report)
+    report
+}
+
+/// Run a full multi-connection load generation against `cfg.addr`,
+/// targeting `cfg.model` (empty = the server's default model). At
+/// [`MULTIPLEX_CONNS`] connections or more the multiplexed driver is
+/// used automatically.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
+    ensure!(cfg.conns > 0, "loadgen needs at least one connection");
+    let info = Client::connect(&cfg.addr)?.info_model(&cfg.model)?;
+    if cfg.conns >= MULTIPLEX_CONNS {
+        return run_mux(cfg, &info, None).map(|(report, _)| report);
+    }
+    let window = cfg.window.max(1);
+
+    let t0 = Instant::now();
+    let results: Vec<Result<ConnResult>> = thread::scope(|s| {
+        let info = &info;
+        let handles: Vec<_> = (0..cfg.conns)
+            .map(|i| {
+                let n = conn_frames(cfg, i);
+                let seed = conn_seed(cfg, i);
+                s.spawn(move || {
+                    run_conn(&cfg.addr, &cfg.model, info, n, window,
+                             cfg.spikes, cfg.retry_busy, cfg.traffic,
+                             seed)
+                })
+            })
+            .collect();
+        handles.into_iter()
+            .map(|h| h.join().unwrap_or_else(
+                |_| Err(anyhow!("loadgen connection thread panicked"))))
+            .collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let results: Vec<ConnResult> =
+        results.into_iter().collect::<Result<_>>()?;
+    Ok(aggregate(results, wall_secs, cfg.frames))
+}
+
+/// One successful inference as the multiplexed driver observed it —
+/// the response fields that are a pure function of the input frame,
+/// for equivalence checks against the in-process `Service` path
+/// (`latency_us`/`worker` vary run to run by design and are
+/// excluded).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CollectedResponse {
+    /// Loadgen connection index (0-based).
+    pub conn: usize,
+    /// Request id within that connection.
+    pub id: u64,
+    pub prediction: u32,
+    pub output_counts: Vec<u32>,
+}
+
+/// Multiplexed run that also returns every successful response's
+/// deterministic fields, sorted by `(conn, id)` — the c10k
+/// equivalence test compares these byte-for-byte (after encoding)
+/// with an in-process run over the same generated frames.
+pub fn run_collect(cfg: &LoadGenConfig)
+                   -> Result<(LoadGenReport, Vec<CollectedResponse>)> {
+    ensure!(cfg.conns > 0, "loadgen needs at least one connection");
+    let info = Client::connect(&cfg.addr)?.info_model(&cfg.model)?;
+    let (report, mut collected) = run_mux(cfg, &info, Some(Vec::new()))?;
+    let mut out = collected.take().unwrap_or_default();
+    out.sort_by_key(|c| (c.conn, c.id));
+    Ok((report, out))
+}
+
+// ---------------------------------------------------- multiplexed driver
+
+/// One connection's state inside the multiplexed driver — the same
+/// bookkeeping `run_conn` keeps on its stack, made explicit.
+struct MuxConn {
+    stream: TcpStream,
+    recv: RecvBuf,
+    /// Encoded-but-unwritten request bytes (bounded by the window).
+    out: Vec<u8>,
+    out_pos: usize,
+    to_send: VecDeque<(u64, u32)>,
+    inflight: HashMap<u64, (Instant, u32)>,
+    /// Busy-retried frames waiting out their backoff.
+    delayed: Vec<(Instant, u64, u32)>,
+    seed: u64,
+    frames: u64,
+    sent: u64,
+    ok: u64,
+    busy: u64,
+    errors: u64,
+    latencies_us: Vec<u64>,
+}
+
+impl MuxConn {
+    fn done(&self) -> bool {
+        self.ok + self.errors >= self.frames
+    }
+
+    /// Move backoff-expired retries back onto the send queue; returns
+    /// the earliest still-pending deadline.
+    fn release_delayed(&mut self, now: Instant) -> Option<Instant> {
+        let mut next = None;
+        let mut i = 0;
+        while i < self.delayed.len() {
+            let (due, id, attempts) = self.delayed[i];
+            if due <= now {
+                self.delayed.swap_remove(i);
+                self.to_send.push_back((id, attempts));
+            } else {
+                next = Some(next.map_or(due, |n: Instant| n.min(due)));
+                i += 1;
+            }
+        }
+        next
+    }
+
+    /// Encode fresh requests until the pipelining window is full.
+    fn top_up(&mut self, cfg: &LoadGenConfig, info: &ServerInfo,
+              window: usize) -> Result<()> {
+        while self.inflight.len() < window {
+            let Some((id, attempts)) = self.to_send.pop_front() else {
+                break;
+            };
+            let payload =
+                make_payload(info, self.seed, id, cfg.spikes,
+                             cfg.traffic);
+            let req = WireRequest {
+                id,
+                body: RequestBody::Infer {
+                    net: NET_ANY,
+                    model: cfg.model.clone(),
+                    payload,
+                },
+            };
+            self.out.extend_from_slice(&req.encode()?);
+            self.inflight.insert(id, (Instant::now(), attempts));
+            self.sent += 1;
+        }
+        Ok(())
+    }
+
+    /// Write queued request bytes until drained or `WouldBlock`.
+    fn flush(&mut self) -> io::Result<()> {
+        while self.out_pos < self.out.len() {
+            match (&self.stream).write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::from(
+                        io::ErrorKind::WriteZero));
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    break;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+        Ok(())
+    }
+
+    fn into_result(self) -> ConnResult {
+        ConnResult {
+            sent: self.sent,
+            ok: self.ok,
+            busy: self.busy,
+            errors: self.errors,
+            latencies_us: self.latencies_us,
+        }
+    }
+}
+
+/// Drive all `cfg.conns` connections from this one thread with a
+/// reactor poll loop. Workload (seeds, splits, windowing, retry
+/// policy) is identical to the threaded driver. All connections stay
+/// open until every one of them finishes — the server really holds
+/// `conns` sockets at once for the whole run.
+fn run_mux(cfg: &LoadGenConfig, info: &ServerInfo,
+           mut collect: Option<Vec<CollectedResponse>>)
+           -> Result<(LoadGenReport, Option<Vec<CollectedResponse>>)> {
+    let window = cfg.window.max(1);
+    let t0 = Instant::now();
+    let mut conns: Vec<MuxConn> = Vec::with_capacity(cfg.conns);
+    for i in 0..cfg.conns {
+        // Serial blocking connects with one retry: under a c10k burst
+        // the kernel may drop SYNs while the accept backlog drains.
+        let stream = match TcpStream::connect(&cfg.addr) {
+            Ok(s) => s,
+            Err(_) => {
+                thread::sleep(Duration::from_millis(50));
+                TcpStream::connect(&cfg.addr).with_context(
+                    || format!("loadgen connect #{i} to {}", cfg.addr))?
+            }
+        };
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        conns.push(MuxConn {
+            stream,
+            recv: RecvBuf::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            to_send: (0..conn_frames(cfg, i) as u64)
+                .map(|id| (id, 0)).collect(),
+            inflight: HashMap::new(),
+            delayed: Vec::new(),
+            seed: conn_seed(cfg, i),
+            frames: conn_frames(cfg, i) as u64,
+            sent: 0,
+            ok: 0,
+            busy: 0,
+            errors: 0,
+            latencies_us: Vec::new(),
+        });
+    }
+
+    let mut fds: Vec<PollFd> = Vec::with_capacity(cfg.conns);
+    let mut order: Vec<usize> = Vec::with_capacity(cfg.conns);
+    let mut last_progress = Instant::now();
+    while conns.iter().any(|c| !c.done()) {
+        let now = Instant::now();
+        let mut next_deadline: Option<Instant> = None;
+        fds.clear();
+        order.clear();
+        for (i, c) in conns.iter_mut().enumerate() {
+            if c.done() {
+                continue;
+            }
+            if let Some(due) = c.release_delayed(now) {
+                next_deadline = Some(
+                    next_deadline.map_or(due, |d: Instant| d.min(due)));
+            }
+            c.top_up(cfg, info, window)?;
+            let mut ev = 0i16;
+            if !c.inflight.is_empty() {
+                ev |= POLLIN;
+            }
+            if c.out_pos < c.out.len() {
+                ev |= POLLOUT;
+            }
+            if ev != 0 {
+                fds.push(PollFd::new(reactor::fd_of(&c.stream), ev));
+                order.push(i);
+            }
+        }
+        if fds.is_empty() {
+            // Nothing pollable: every live connection is waiting out
+            // a retry backoff.
+            if let Some(d) = next_deadline {
+                thread::sleep(d.saturating_duration_since(now)
+                              .min(Duration::from_millis(20)));
+            }
+            continue;
+        }
+        let timeout = next_deadline
+            .map(|d| d.saturating_duration_since(now))
+            .unwrap_or(Duration::from_millis(250))
+            .min(Duration::from_millis(250));
+        let _ = reactor::poll(&mut fds, Some(timeout))?;
+        let mut progressed = false;
+        for (k, &i) in order.iter().enumerate() {
+            let pf = fds[k];
+            let c = &mut conns[i];
+            if pf.writable() && c.out_pos < c.out.len() {
+                c.flush().with_context(
+                    || format!("loadgen conn #{i} write"))?;
+            }
+            if pf.readable() {
+                progressed |=
+                    mux_read(cfg, i, c, &mut collect).with_context(
+                        || format!("loadgen conn #{i}"))?;
+            }
+        }
+        if progressed {
+            last_progress = Instant::now();
+        } else if last_progress.elapsed() > MUX_STALL_TIMEOUT {
+            bail!("loadgen stalled: no response in {:?} ({} conns \
+                   unfinished)", MUX_STALL_TIMEOUT,
+                  conns.iter().filter(|c| !c.done()).count());
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let results: Vec<ConnResult> =
+        conns.into_iter().map(MuxConn::into_result).collect();
+    Ok((aggregate(results, wall_secs, cfg.frames), collect))
+}
+
+/// Drain one readable multiplexed connection: fill the receive
+/// buffer, decode every complete response frame, apply the same
+/// outcome policy as the threaded driver. Returns whether any
+/// response landed.
+fn mux_read(cfg: &LoadGenConfig, conn_idx: usize, c: &mut MuxConn,
+            collect: &mut Option<Vec<CollectedResponse>>)
+            -> Result<bool> {
+    let mut progressed = false;
+    loop {
+        match c.recv.fill_from(&mut (&c.stream)) {
+            Ok(0) => {
+                if c.done() {
+                    return Ok(progressed);
+                }
+                bail!("server closed the connection with {} frames \
+                       unfinished", c.frames - c.ok - c.errors);
+            }
+            Ok(_) => {}
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                return Ok(progressed);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        loop {
+            let (ver, total) =
+                match parse_frame(c.recv.data(), KIND_RESPONSE)? {
+                    Some(x) => x,
+                    None => break,
+                };
+            let resp = WireResponse::decode_body(
+                ver, &c.recv.data()[HEADER_LEN..total])?;
+            c.recv.consume(total);
+            progressed = true;
+            if resp.id == CONN_ERR_ID {
+                match resp.body {
+                    ResponseBody::Error { code, detail } => {
+                        bail!("connection-level {}: {detail}",
+                              code.as_str());
+                    }
+                    other => {
+                        bail!("unexpected connection-level response: \
+                               {other:?}");
+                    }
+                }
+            }
+            let (sent_at, attempts) =
+                c.inflight.remove(&resp.id).ok_or_else(
+                    || anyhow!("response for unknown id {}", resp.id))?;
+            match resp.body {
+                ResponseBody::Infer { prediction, output_counts, .. }
+                => {
+                    c.ok += 1;
+                    c.latencies_us
+                        .push(sent_at.elapsed().as_micros() as u64);
+                    if let Some(out) = collect.as_mut() {
+                        out.push(CollectedResponse {
+                            conn: conn_idx,
+                            id: resp.id,
+                            prediction,
+                            output_counts,
+                        });
+                    }
+                }
+                ResponseBody::Error { code: ErrorCode::Busy, .. } => {
+                    c.busy += 1;
+                    if cfg.retry_busy && attempts < MAX_BUSY_RETRIES {
+                        // Same backoff curve as the threaded driver,
+                        // as a deadline instead of a sleep.
+                        let backoff = Duration::from_millis(
+                            (1 + attempts as u64 / 10).min(10));
+                        c.delayed.push((Instant::now() + backoff,
+                                        resp.id, attempts + 1));
+                    } else {
+                        c.errors += 1;
+                    }
+                }
+                ResponseBody::Error { .. } => c.errors += 1,
+                _ => c.errors += 1,
+            }
+        }
+    }
 }

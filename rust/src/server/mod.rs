@@ -13,22 +13,32 @@
 //!   versions: v1 (single-model) and v2 (`Infer`/`Info` carry a model
 //!   selector); a gateway answers each request in the version it
 //!   arrived with.
+//! * [`reactor`] — the std-only readiness layer under the gateway:
+//!   a `poll(2)`-shaped wrapper over raw syscalls (no `libc`), a
+//!   self-pipe [`Waker`](reactor::Waker) for cross-thread poll
+//!   interruption, and the growable [`RecvBuf`](reactor::RecvBuf)
+//!   incremental-decode receive buffer.
 //! * [`server`] — the TCP [`Gateway`]: a
 //!   [`ModelRegistry`](crate::coordinator::ModelRegistry) of named
-//!   models behind one port, per-connection threads, pipelined
-//!   requests, a connection cap, per-model admission control that maps
-//!   queue-full onto `BUSY` (shed load, never hang), per-model
-//!   Prometheus metrics, and graceful drain-then-shutdown. v1 (no
-//!   selector) traffic routes to the default model.
+//!   models behind one port, N sharded reactor event loops (thread
+//!   count O(shards + models), not O(connections)), pipelined
+//!   requests, a connection cap plus per-connection write-backpressure
+//!   bounds, per-model admission control that maps queue-full onto
+//!   `BUSY` (shed load, never hang), per-model Prometheus metrics, and
+//!   graceful drain-then-shutdown. v1 (no selector) traffic routes to
+//!   the default model.
 //! * [`client`] — a blocking, pipelining client library (speaks v2 by
 //!   default; can be pinned to v1).
 //! * [`loadgen`] — a multi-connection load generator (the
 //!   `skydiver loadgen` CLI and the loopback serving bench), with a
-//!   per-run model selector for mixed multi-model traffic.
+//!   per-run model selector for mixed multi-model traffic; beyond
+//!   ~64 connections it multiplexes them over one nonblocking driver
+//!   thread, so c10k-scale runs don't need c10k client threads.
 
 pub mod client;
 pub mod loadgen;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
 
 pub use client::{Client, ServerInfo};

@@ -602,6 +602,48 @@ pub fn read_frame(r: &mut impl Read, expect_kind: u8)
     Ok(Some((version, body)))
 }
 
+/// Incremental, IO-free sibling of [`read_frame`] for nonblocking
+/// transports: inspect `buf` (the front of a receive buffer) for one
+/// complete frame of the expected kind.
+///
+/// * `Ok(None)` — not enough bytes yet; read more and call again.
+///   Header validation happens as early as the bytes allow (magic is
+///   checked from byte 4 on), so a garbage or oversized stream fails
+///   fast instead of buffering toward a frame that never completes.
+/// * `Ok(Some((version, total_len)))` — `buf[..total_len]` is one
+///   whole frame; its body is `buf[HEADER_LEN..total_len]`, to be
+///   decoded at `version` and then consumed from the buffer.
+/// * `Err(_)` — framing damage, same typed errors as [`read_frame`];
+///   the stream is desynced and the connection must drop.
+pub fn parse_frame(buf: &[u8], expect_kind: u8)
+                   -> Result<Option<(u8, usize)>, ProtoError> {
+    if buf.len() >= 4 && buf[..4] != MAGIC {
+        let mut m = [0u8; 4];
+        m.copy_from_slice(&buf[..4]);
+        return Err(ProtoError::BadMagic(m));
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let version = buf[4];
+    if version != V1 && version != V2 {
+        return Err(ProtoError::BadVersion(version));
+    }
+    if buf[5] != expect_kind {
+        return Err(ProtoError::BadKind(buf[5]));
+    }
+    let len = u32::from_le_bytes(buf[6..10].try_into().unwrap())
+        as usize;
+    if len > MAX_BODY {
+        return Err(ProtoError::Oversized(len));
+    }
+    let total = HEADER_LEN + len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    Ok(Some((version, total)))
+}
+
 fn read_exact(r: &mut impl Read, buf: &mut [u8])
               -> Result<(), ProtoError> {
     match r.read_exact(buf) {
@@ -997,6 +1039,65 @@ mod tests {
         let err = WireRequest::decode_body(ver, &body).unwrap_err();
         assert!(matches!(err, ProtoError::Malformed(_)), "{err}");
         assert!(!err.is_fatal());
+    }
+
+    #[test]
+    fn parse_frame_incremental_byte_at_a_time() {
+        let req = WireRequest {
+            id: 42,
+            body: RequestBody::Infer {
+                net: NET_ANY,
+                model: "classifier".into(),
+                payload: WirePayload::Pixels(vec![9; 64]),
+            },
+        };
+        let f = req.encode().unwrap();
+        // Every proper prefix needs more bytes; the whole frame (and
+        // any longer buffer) parses to exactly the frame's length.
+        for cut in 0..f.len() {
+            assert_eq!(parse_frame(&f[..cut], KIND_REQUEST).unwrap(),
+                       None, "prefix {cut} claimed a whole frame");
+        }
+        let (ver, total) = parse_frame(&f, KIND_REQUEST)
+            .unwrap().unwrap();
+        assert_eq!((ver, total), (V2, f.len()));
+        let decoded =
+            WireRequest::decode_body(ver, &f[HEADER_LEN..total])
+                .unwrap();
+        assert_eq!(decoded, req);
+        // Pipelined: a second frame queued behind the first is
+        // untouched by the first parse.
+        let mut two = f.clone();
+        two.extend_from_slice(&f);
+        let (_, total) = parse_frame(&two, KIND_REQUEST)
+            .unwrap().unwrap();
+        assert_eq!(total, f.len());
+        assert_eq!(parse_frame(&two[total..], KIND_REQUEST)
+                       .unwrap().unwrap().1,
+                   f.len());
+    }
+
+    #[test]
+    fn parse_frame_rejects_damage_like_read_frame() {
+        let mut f = WireRequest {
+            id: 1,
+            body: RequestBody::Info { model: String::new() },
+        }.encode().unwrap();
+        // Garbage magic fails as soon as 4 bytes exist — even before
+        // a full header arrives.
+        assert!(matches!(parse_frame(b"XKYD", KIND_REQUEST),
+                         Err(ProtoError::BadMagic(_))));
+        assert_eq!(parse_frame(b"SKY", KIND_REQUEST).unwrap(), None);
+        // Version / kind / length damage match read_frame's verdicts.
+        f[4] = 99;
+        assert!(matches!(parse_frame(&f, KIND_REQUEST),
+                         Err(ProtoError::BadVersion(99))));
+        f[4] = V2;
+        assert!(matches!(parse_frame(&f, KIND_RESPONSE),
+                         Err(ProtoError::BadKind(KIND_REQUEST))));
+        f[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(parse_frame(&f, KIND_REQUEST),
+                         Err(ProtoError::Oversized(_))));
     }
 
     #[test]

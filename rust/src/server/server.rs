@@ -1,18 +1,33 @@
 //! TCP gateway: the network front end of the serving coordinator —
-//! registry-routed, multi-model.
+//! registry-routed, multi-model, event-driven.
 //!
 //! ```text
-//! clients ──TCP──> accept loop ──> per-connection reader threads
-//!                                      │  resolve model, validate,
-//!                                      v  try_submit (Full -> BUSY)
-//!              [ model 0: Service queue ] <── pull ── workers ┐
-//!              [ model 1: Service queue ] <── pull ── workers ┤
-//!                                      │ WorkerEvent           │
-//!                                      v                       │
-//!                        per-model router threads <────────────┘
-//!                        (match by id) ──> per-connection
-//!                                          writer threads
+//! clients ──TCP──> accept loop (poll: listener + waker)
+//!                      │ round-robin at accept
+//!                      v
+//!            ┌─ shard 0 ─┐ ┌─ shard 1 ─┐ … ┌─ shard N-1 ─┐
+//!            │ poll loop │ │ poll loop │   │  poll loop  │
+//!            │ conn fds  │ │ conn fds  │   │  conn fds   │
+//!            │ + waker   │ │ + waker   │   │  + waker    │
+//!            └───────────┘ └───────────┘   └─────────────┘
+//!              │  per-conn recv buf: incremental frame decode
+//!              │  per-conn outbound queue: bounded (write-backpressure)
+//!              v  resolve model, validate, try_submit (Full -> BUSY)
+//!        [ model 0: Service queue ] <── pull ── workers ┐
+//!        [ model 1: Service queue ] <── pull ── workers ┤
+//!              │ WorkerEvent                            │
+//!              v                                        │
+//!        per-model router threads <─────────────────────┘
+//!        (match by id) ── frame + self-pipe wake ──> owning shard
 //! ```
+//!
+//! Thread count is **O(shards + models)**, not O(connections): one
+//! accept thread, `reactor_shards` event-loop threads (each owning
+//! its connections' sockets and buffers), and one router thread per
+//! model — thousands of idle or pipelining connections cost fds and
+//! buffer bytes, never threads. Routers hand finished responses to
+//! the owning shard through its mailbox and wake its `poll` via a
+//! self-pipe ([`reactor::Waker`]).
 //!
 //! Design rules:
 //!
@@ -24,9 +39,14 @@
 //! * **Per-model isolation.** Each model owns its queue, worker pool,
 //!   stats and admission counters — an overloaded or dead model sheds
 //!   or fails *its* traffic while the others keep serving.
-//! * **Shed, never hang.** Admission is [`ServiceHandle::try_submit`];
-//!   a full queue maps to a `BUSY` error response immediately. A
-//!   connection beyond the cap gets one `BUSY` frame and a close.
+//! * **Shed, never hang — and never buffer unboundedly.** Admission
+//!   is [`ServiceHandle::try_submit`]; a full queue maps to a `BUSY`
+//!   error response immediately. A connection beyond the cap gets one
+//!   `BUSY` frame and a close. A connection that stops *reading*
+//!   while responses pile up is shed once its outbound queue exceeds
+//!   [`GatewayConfig::write_buf_cap`] (counted in
+//!   `skydiver_connections_shed_total`) — a stalled reader costs a
+//!   bounded buffer, then its connection, never gateway memory.
 //! * **Pipelined.** A connection may have any number of requests in
 //!   flight; responses carry the request id and may arrive out of
 //!   order (different workers finish at different times). Each
@@ -40,15 +60,16 @@
 //!   would make its response indistinguishable from a
 //!   connection-level failure.
 //! * **Drain then stop.** Shutdown (wire `Shutdown` message or
-//!   [`Gateway::stop_handle`]) stops admission, waits for in-flight
-//!   requests to finish (bounded by `drain_timeout`), then shuts every
-//!   model down and force-closes lingering connections.
+//!   [`Gateway::stop_handle`]) stops admission, waits (condvar, not
+//!   timer polling) for in-flight requests to finish bounded by
+//!   `drain_timeout`, then shuts every model down and flush-closes
+//!   every connection.
 
-use std::collections::HashMap;
-use std::io::{self, BufReader, BufWriter, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -58,10 +79,11 @@ use crate::coordinator::{FramePayload, ModelRegistry, ServiceConfig,
                          ServiceHandle, ServingReport, Stats,
                          SubmitError, WorkerConfig, WorkerEvent};
 
-use super::protocol::{net_code, read_frame, write_frame, ErrorCode,
-                      RequestBody, ResponseBody, WirePayload,
-                      WireRequest, WireResponse, CONN_ERR_ID,
+use super::protocol::{net_code, parse_frame, ErrorCode, RequestBody,
+                      ResponseBody, WirePayload, WireRequest,
+                      WireResponse, CONN_ERR_ID, HEADER_LEN,
                       KIND_REQUEST, NET_ANY, V1};
+use super::reactor::{self, PollFd, RecvBuf, Waker, POLLIN, POLLOUT};
 
 /// Gateway-level knobs.
 #[derive(Debug, Clone)]
@@ -75,6 +97,15 @@ pub struct GatewayConfig {
     /// How long shutdown waits for in-flight requests before failing
     /// them with `SHUTTING_DOWN`.
     pub drain_timeout: Duration,
+    /// Reactor event-loop shards; connections are assigned
+    /// round-robin at accept. `0` = auto: one per core, capped at 8
+    /// (beyond that the accept path, not the loops, is the
+    /// bottleneck).
+    pub reactor_shards: usize,
+    /// Per-connection outbound-queue bound in bytes. A connection
+    /// whose unread responses exceed this is shed (write
+    /// backpressure) instead of buffering without limit.
+    pub write_buf_cap: usize,
 }
 
 impl Default for GatewayConfig {
@@ -83,7 +114,22 @@ impl Default for GatewayConfig {
             addr: "127.0.0.1:0".into(),
             max_conns: 64,
             drain_timeout: Duration::from_secs(10),
+            reactor_shards: 0,
+            write_buf_cap: 8 << 20,
         }
+    }
+}
+
+impl GatewayConfig {
+    /// Resolve `reactor_shards = 0` to the auto shard count.
+    fn shards(&self) -> usize {
+        if self.reactor_shards > 0 {
+            return self.reactor_shards;
+        }
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, 8)
     }
 }
 
@@ -94,6 +140,7 @@ struct Counters {
     conns_accepted: AtomicU64,
     conns_active: AtomicU64,
     conns_rejected: AtomicU64,
+    conns_shed: AtomicU64,
     requests: AtomicU64,
     served: AtomicU64,
     busy: AtomicU64,
@@ -107,7 +154,13 @@ struct Counters {
 pub struct CounterSnapshot {
     pub conns_accepted: u64,
     pub conns_active: u64,
+    /// Connections refused at accept (over the connection cap): one
+    /// typed `BUSY` frame, then close.
     pub conns_rejected: u64,
+    /// Connections shed mid-life by write backpressure (outbound
+    /// queue over [`GatewayConfig::write_buf_cap`] because the peer
+    /// stopped reading).
+    pub conns_shed: u64,
     /// Infer requests admitted to routing (sum over models; excludes
     /// requests refused before a model was resolved, e.g. a reserved
     /// id or an unknown model — those only count as `bad_request`).
@@ -129,6 +182,7 @@ impl Counters {
             conns_accepted: ld(&self.conns_accepted),
             conns_active: ld(&self.conns_active),
             conns_rejected: ld(&self.conns_rejected),
+            conns_shed: ld(&self.conns_shed),
             requests: ld(&self.requests),
             served: ld(&self.served),
             busy: ld(&self.busy),
@@ -234,9 +288,99 @@ impl GatewayReport {
     }
 }
 
+// ------------------------------------------------------------- transport
+
+/// Where a pending request's response goes: the shard that owns the
+/// connection, and the connection's id within the gateway.
+#[derive(Debug, Clone, Copy)]
+struct ConnRef {
+    shard: usize,
+    conn: u64,
+}
+
+/// Work handed to a shard through its mailbox (+ waker).
+enum ShardMsg {
+    /// A freshly accepted connection to adopt (already counted in
+    /// `conns_active`).
+    Conn(TcpStream, u64),
+    /// A pre-encoded response frame for one of the shard's
+    /// connections, produced by a router (or the drain path) on
+    /// behalf of a pending request.
+    Frame(u64, Vec<u8>),
+}
+
+/// One reactor shard's cross-thread face: its mailbox and the waker
+/// that interrupts its `poll`.
+struct ShardHandle {
+    mailbox: Mutex<VecDeque<ShardMsg>>,
+    waker: Waker,
+    /// Poll-loop wakeups (each poll return counts once).
+    wakeups: AtomicU64,
+    /// Connections currently owned by this shard.
+    connections: AtomicU64,
+}
+
+impl ShardHandle {
+    fn new() -> io::Result<Self> {
+        Ok(Self {
+            mailbox: Mutex::new(VecDeque::new()),
+            waker: Waker::new()?,
+            wakeups: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+        })
+    }
+
+    fn send(&self, msg: ShardMsg) {
+        self.mailbox.lock().unwrap().push_back(msg);
+        self.waker.wake();
+    }
+}
+
+/// One connection as its owning shard sees it. All per-connection
+/// state lives here — no per-connection threads, no shared locks on
+/// the hot path.
+struct Conn {
+    stream: TcpStream,
+    recv: RecvBuf,
+    /// Outbound frames not yet (fully) written; total byte size is
+    /// bounded by [`GatewayConfig::write_buf_cap`].
+    out: VecDeque<Vec<u8>>,
+    out_bytes: usize,
+    /// How much of `out.front()` has already been written.
+    front_pos: usize,
+    /// Version the last well-framed request arrived with — the best
+    /// guess for framing connection-level errors (defaults to v1,
+    /// which every client version decodes).
+    peer_ver: u8,
+    /// Requests submitted to a model and not yet answered — a
+    /// half-closed connection is kept until these flush.
+    inflight: usize,
+    /// Stop reading, flush `out`, then close (clean EOF, framing
+    /// damage after the error frame, wire shutdown ack).
+    closing: bool,
+    /// Close now; pending output is abandoned (IO error, shed).
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            recv: RecvBuf::new(),
+            out: VecDeque::new(),
+            out_bytes: 0,
+            front_pos: 0,
+            peer_ver: V1,
+            inflight: 0,
+            closing: false,
+            dead: false,
+        }
+    }
+}
+
 struct PendingEntry {
-    /// Pre-encoded frames go straight to the connection's writer.
-    tx: mpsc::Sender<Vec<u8>>,
+    /// Which shard/connection to answer.
+    reply: ConnRef,
     client_id: u64,
     /// Protocol version the request arrived with — its response is
     /// framed the same way.
@@ -245,12 +389,15 @@ struct PendingEntry {
     model: usize,
 }
 
-/// State shared by the accept loop, routers, and connection threads.
+/// State shared by the accept loop, shards, and routers.
 struct Shared {
     models: Vec<ModelRuntime>,
     /// internal id -> who to answer. Inserted *before* submit so a
     /// response can never race past its route.
     pending: Mutex<HashMap<u64, PendingEntry>>,
+    /// Notified when `pending` drains empty (the shutdown path waits
+    /// on this instead of sleep-polling).
+    pending_cv: Condvar,
     counters: Counters,
     next_id: AtomicU64,
     conn_seq: AtomicU64,
@@ -259,10 +406,16 @@ struct Shared {
     live_routers: AtomicUsize,
     /// Drain trigger: stops admission and the accept loop.
     stop: AtomicBool,
-    /// One socket clone per *live* connection (removed on connection
-    /// exit — bounded), for force-closing lingering connections at
-    /// shutdown (readers blocked in `read` otherwise never exit).
-    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Pairs with `stop` for [`Gateway::wait`]'s condvar sleep.
+    stop_mu: Mutex<()>,
+    stop_cv: Condvar,
+    /// Final-phase trigger: shards flush-close their connections and
+    /// exit. Set only after pending is drained/failed.
+    teardown: AtomicBool,
+    /// Interrupts the accept loop's poll (stop requests).
+    accept_waker: Waker,
+    shards: Vec<ShardHandle>,
+    write_buf_cap: usize,
     started: Instant,
 }
 
@@ -274,6 +427,33 @@ impl Shared {
         }
         self.models.iter().position(|m| m.name == selector)
     }
+
+    /// Hand a response frame to the shard owning `to`'s connection.
+    fn reply(&self, to: ConnRef, frame: Vec<u8>) {
+        self.shards[to.shard].send(ShardMsg::Frame(to.conn, frame));
+    }
+
+    /// Remove one pending route, waking the drain waiter when the map
+    /// empties.
+    fn remove_pending(&self, id: u64) -> Option<PendingEntry> {
+        let mut p = self.pending.lock().unwrap();
+        let e = p.remove(&id);
+        if e.is_some() && p.is_empty() {
+            self.pending_cv.notify_all();
+        }
+        e
+    }
+
+    /// Begin drain-then-shutdown: flip the stop flag and wake every
+    /// sleeper that gates on it (the [`Gateway::wait`] condvar, the
+    /// accept loop's poll). Idempotent.
+    fn trigger_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _g = self.stop_mu.lock().unwrap();
+        self.stop_cv.notify_all();
+        drop(_g);
+        self.accept_waker.wake();
+    }
 }
 
 /// Remote-controllable drain trigger (cheap clone).
@@ -284,17 +464,19 @@ impl GatewayStop {
     /// Begin drain-then-shutdown, exactly like a wire `Shutdown`
     /// message.
     pub fn trigger(&self) {
-        self.0.stop.store(true, Ordering::SeqCst);
+        self.0.trigger_stop();
     }
 }
 
-/// A running gateway: a bound listener, its accept loop, one response
-/// router per model, and the owned [`ModelRegistry`].
+/// A running gateway: a bound listener, its accept loop, N reactor
+/// shards, one response router per model, and the owned
+/// [`ModelRegistry`].
 pub struct Gateway {
     addr: SocketAddr,
     shared: Arc<Shared>,
     registry: ModelRegistry,
     accept: thread::JoinHandle<()>,
+    shard_threads: Vec<thread::JoinHandle<()>>,
     routers: Vec<thread::JoinHandle<()>>,
     drain_timeout: Duration,
 }
@@ -326,15 +508,28 @@ impl Gateway {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
+        let nshards = gcfg.shards();
+        let mut shards = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            shards.push(ShardHandle::new()
+                .context("creating shard waker")?);
+        }
         let shared = Arc::new(Shared {
             models: runtimes,
             pending: Mutex::new(HashMap::new()),
+            pending_cv: Condvar::new(),
             counters: Counters::default(),
             next_id: AtomicU64::new(1),
             conn_seq: AtomicU64::new(1),
             live_routers: AtomicUsize::new(event_streams.len()),
             stop: AtomicBool::new(false),
-            conns: Mutex::new(HashMap::new()),
+            stop_mu: Mutex::new(()),
+            stop_cv: Condvar::new(),
+            teardown: AtomicBool::new(false),
+            accept_waker: Waker::new()
+                .context("creating accept waker")?,
+            shards,
+            write_buf_cap: gcfg.write_buf_cap.max(1024),
             started: Instant::now(),
         });
 
@@ -344,6 +539,13 @@ impl Gateway {
             routers.push(thread::Builder::new()
                 .name(format!("skydiver-router-{idx}"))
                 .spawn(move || router_loop(idx, events, shared))?);
+        }
+        let mut shard_threads = Vec::with_capacity(nshards);
+        for idx in 0..nshards {
+            let shared = shared.clone();
+            shard_threads.push(thread::Builder::new()
+                .name(format!("skydiver-shard-{idx}"))
+                .spawn(move || shard_loop(idx, shared))?);
         }
         let accept = {
             let shared = shared.clone();
@@ -360,6 +562,7 @@ impl Gateway {
             shared,
             registry,
             accept,
+            shard_threads,
             routers,
             drain_timeout: gcfg.drain_timeout,
         })
@@ -385,6 +588,11 @@ impl Gateway {
         self.registry.names()
     }
 
+    /// How many reactor shards this gateway runs.
+    pub fn shard_count(&self) -> usize {
+        self.shared.shards.len()
+    }
+
     /// A handle that can trigger drain-then-shutdown from any thread.
     pub fn stop_handle(&self) -> GatewayStop {
         GatewayStop(self.shared.clone())
@@ -401,17 +609,22 @@ impl Gateway {
     }
 
     /// Block until shutdown is triggered (wire message or
-    /// [`Self::stop_handle`]), then drain and tear down.
+    /// [`Self::stop_handle`]), then drain and tear down. The wait is
+    /// a condvar sleep — no polling, wakeup latency is scheduler-
+    /// bounded, not timer-quantized.
     pub fn wait(self) -> Result<GatewayReport> {
-        while !self.shared.stop.load(Ordering::SeqCst) {
-            thread::sleep(Duration::from_millis(25));
+        {
+            let mut g = self.shared.stop_mu.lock().unwrap();
+            while !self.shared.stop.load(Ordering::SeqCst) {
+                g = self.shared.stop_cv.wait(g).unwrap();
+            }
         }
         self.finish()
     }
 
     /// Trigger shutdown and tear down immediately (still drains).
     pub fn stop_and_wait(self) -> Result<GatewayReport> {
-        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.trigger_stop();
         self.finish()
     }
 
@@ -420,20 +633,25 @@ impl Gateway {
             shared,
             registry,
             accept,
+            shard_threads,
             routers,
             drain_timeout,
             ..
         } = self;
-        // Accept loop polls the stop flag; joining is bounded.
+        // Idempotent: `wait` arrives here with stop already set, but
+        // `finish` must also work when called directly.
+        shared.trigger_stop();
         let _ = accept.join();
         // Drain: in-flight requests finish as workers catch up (new
-        // admissions are already refused with SHUTTING_DOWN).
-        let deadline = Instant::now() + drain_timeout;
-        while Instant::now() < deadline {
-            if shared.pending.lock().unwrap().is_empty() {
-                break;
-            }
-            thread::sleep(Duration::from_millis(10));
+        // admissions are already refused with SHUTTING_DOWN). The
+        // routers notify `pending_cv` when the map drains empty.
+        {
+            let guard = shared.pending.lock().unwrap();
+            let (guard, _timeout) = shared.pending_cv
+                .wait_timeout_while(guard, drain_timeout,
+                                    |p| !p.is_empty())
+                .unwrap();
+            drop(guard);
         }
         // Whatever outlived the drain window is failed, not stranded.
         {
@@ -443,7 +661,7 @@ impl Gateway {
                     .fetch_add(1, Ordering::Relaxed);
                 shared.models[p.model].counters.shutting_down
                     .fetch_add(1, Ordering::Relaxed);
-                let _ = p.tx.send(err_frame(
+                shared.reply(p.reply, err_frame(
                     p.version, p.client_id, ErrorCode::ShuttingDown,
                     "gateway drain timeout"));
             }
@@ -454,17 +672,16 @@ impl Gateway {
         for r in routers {
             let _ = r.join();
         }
-        // Force-close lingering connections so blocked readers exit
-        // (connection threads are detached; wait for the active count
-        // to hit zero, bounded).
-        for (_, s) in shared.conns.lock().unwrap().drain() {
-            let _ = s.shutdown(Shutdown::Both);
+        // Transport teardown: shards flush queued responses (bounded)
+        // and close their connections. Joining the shard threads IS
+        // the "all connections closed" barrier — no sleep-polling a
+        // counter.
+        shared.teardown.store(true, Ordering::SeqCst);
+        for s in &shared.shards {
+            s.waker.wake();
         }
-        let conn_deadline = Instant::now() + Duration::from_secs(5);
-        while shared.counters.conns_active.load(Ordering::SeqCst) > 0
-            && Instant::now() < conn_deadline
-        {
-            thread::sleep(Duration::from_millis(5));
+        for t in shard_threads {
+            let _ = t.join();
         }
 
         let wall = shared.started.elapsed().as_secs_f64();
@@ -505,46 +722,56 @@ fn err_frame(version: u8, id: u64, code: ErrorCode, detail: &str)
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>,
                max_conns: usize) {
+    let nshards = shared.shards.len();
+    let mut next_shard = 0usize;
     loop {
         if shared.stop.load(Ordering::SeqCst) {
             return;
         }
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                shared.counters.conns_accepted
-                    .fetch_add(1, Ordering::Relaxed);
-                let active = shared.counters.conns_active
-                    .load(Ordering::SeqCst);
-                if active >= max_conns as u64 {
-                    shared.counters.conns_rejected
+        let mut fds = [
+            PollFd::new(reactor::fd_of(&listener), POLLIN),
+            PollFd::new(shared.accept_waker.fd(), POLLIN),
+        ];
+        let _ = reactor::poll(&mut fds, None);
+        if fds[1].readable() {
+            shared.accept_waker.drain();
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // Drain the accept backlog; the listener is nonblocking.
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    shared.counters.conns_accepted
                         .fetch_add(1, Ordering::Relaxed);
-                    shed_connection(stream);
-                    continue;
-                }
-                shared.counters.conns_active
-                    .fetch_add(1, Ordering::SeqCst);
-                let conn_id =
-                    shared.conn_seq.fetch_add(1, Ordering::Relaxed);
-                let sh = shared.clone();
-                // Detached: lifetime is bounded by the socket, which
-                // `finish` force-closes; `conns_active` is the join.
-                let spawned = thread::Builder::new()
-                    .name("skydiver-conn".into())
-                    .spawn(move || {
-                        handle_conn(stream, conn_id, &sh);
-                        sh.conns.lock().unwrap().remove(&conn_id);
-                        sh.counters.conns_active
-                            .fetch_sub(1, Ordering::SeqCst);
-                    });
-                if spawned.is_err() {
+                    let active = shared.counters.conns_active
+                        .load(Ordering::SeqCst);
+                    if active >= max_conns as u64 {
+                        shared.counters.conns_rejected
+                            .fetch_add(1, Ordering::Relaxed);
+                        shed_connection(stream);
+                        continue;
+                    }
                     shared.counters.conns_active
-                        .fetch_sub(1, Ordering::SeqCst);
+                        .fetch_add(1, Ordering::SeqCst);
+                    let conn_id =
+                        shared.conn_seq.fetch_add(1, Ordering::Relaxed);
+                    shared.shards[next_shard]
+                        .send(ShardMsg::Conn(stream, conn_id));
+                    next_shard = (next_shard + 1) % nshards;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    break;
+                }
+                Err(_) => {
+                    // Transient accept failure (e.g. fd exhaustion):
+                    // a brief pause keeps a persistent error from
+                    // turning the poll loop hot.
+                    thread::sleep(Duration::from_millis(10));
+                    break;
                 }
             }
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                thread::sleep(Duration::from_millis(15));
-            }
-            Err(_) => thread::sleep(Duration::from_millis(15)),
         }
     }
 }
@@ -552,7 +779,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>,
 /// Over-cap connection: one typed `BUSY` frame, then close — the
 /// client learns *why* instead of seeing a bare RST. Framed at v1 —
 /// nothing from the peer has been read yet, and every client version
-/// decodes v1 response frames.
+/// decodes v1 response frames. The freshly accepted socket is
+/// blocking (accept does not inherit the listener's nonblocking
+/// flag), so the small frame write completes or fails outright.
 fn shed_connection(mut stream: TcpStream) {
     let frame = err_frame(V1, CONN_ERR_ID, ErrorCode::Busy,
                           "connection cap reached; retry later");
@@ -561,150 +790,355 @@ fn shed_connection(mut stream: TcpStream) {
     let _ = stream.shutdown(Shutdown::Both);
 }
 
-// --------------------------------------------------------- connections
+// --------------------------------------------------------- shard loops
 
-fn handle_conn(stream: TcpStream, conn_id: u64, shared: &Arc<Shared>) {
-    let _ = stream.set_nodelay(true);
-    let reader_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let ctl = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    shared.conns.lock().unwrap().insert(conn_id, ctl);
-    let (tx, rx) = mpsc::channel::<Vec<u8>>();
-    let writer = match thread::Builder::new()
-        .name("skydiver-conn-writer".into())
-        .spawn(move || writer_loop(stream, rx))
-    {
-        Ok(h) => h,
-        Err(_) => return,
-    };
-    read_loop(reader_stream, shared, &tx);
-    drop(tx);
-    let _ = writer.join();
-    // The registry clone keeps the fd alive until removed by our
-    // caller; shut the TCP stream down explicitly so the peer sees
-    // FIN now.
-    if let Some(s) = shared.conns.lock().unwrap().get(&conn_id) {
-        let _ = s.shutdown(Shutdown::Both);
+fn shard_loop(idx: usize, shared: Arc<Shared>) {
+    let me = &shared.shards[idx];
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    // Rebuilt every iteration; `order[i]` owns `fds[i + 1]` (entry 0
+    // is the waker).
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut order: Vec<u64> = Vec::new();
+    loop {
+        fds.clear();
+        order.clear();
+        fds.push(PollFd::new(me.waker.fd(), POLLIN));
+        for (&id, c) in conns.iter() {
+            // A closing connection with nothing to write waits only
+            // on mailbox frames (in-flight responses) — polling its
+            // fd would spin on POLLHUP.
+            if c.closing && c.out.is_empty() {
+                continue;
+            }
+            let mut ev = 0i16;
+            if !c.closing {
+                ev |= POLLIN;
+            }
+            if !c.out.is_empty() {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(reactor::fd_of(&c.stream), ev));
+            order.push(id);
+        }
+        let _ = reactor::poll(&mut fds, None);
+        me.wakeups.fetch_add(1, Ordering::Relaxed);
+        if fds[0].readable() {
+            me.waker.drain();
+        }
+        if shared.teardown.load(Ordering::SeqCst) {
+            shard_teardown(&shared, me, &mut conns);
+            return;
+        }
+        // Mailbox: adopt new connections, route response frames.
+        let msgs: VecDeque<ShardMsg> =
+            std::mem::take(&mut *me.mailbox.lock().unwrap());
+        for msg in msgs {
+            match msg {
+                ShardMsg::Conn(stream, id) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        shared.counters.conns_active
+                            .fetch_sub(1, Ordering::SeqCst);
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    me.connections.fetch_add(1, Ordering::Relaxed);
+                    conns.insert(id, Conn::new(stream));
+                }
+                ShardMsg::Frame(id, frame) => {
+                    if let Some(c) = conns.get_mut(&id) {
+                        c.inflight = c.inflight.saturating_sub(1);
+                        push_frame(&shared, c, frame);
+                    }
+                    // else: the connection died first; the response
+                    // has nowhere to go.
+                }
+            }
+        }
+        // Reads: decode and handle every complete frame available.
+        for (i, &id) in order.iter().enumerate() {
+            let pf = fds[i + 1];
+            if !pf.readable() {
+                continue;
+            }
+            if let Some(c) = conns.get_mut(&id) {
+                if !c.dead && !c.closing {
+                    service_read(&shared, idx, id, c);
+                }
+            }
+        }
+        // Writes: opportunistic flush of everything queued (new
+        // frames this round included — most sockets are writable, so
+        // this usually clears without waiting for POLLOUT).
+        for c in conns.values_mut() {
+            if !c.dead && !c.out.is_empty() && flush_out(c).is_err() {
+                c.dead = true;
+            }
+        }
+        // Reap: dead now, or closing with nothing left to deliver.
+        let finished: Vec<u64> = conns.iter()
+            .filter(|(_, c)| {
+                c.dead
+                    || (c.closing && c.out.is_empty()
+                        && c.inflight == 0)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in finished {
+            let c = conns.remove(&id).unwrap();
+            let _ = c.stream.shutdown(Shutdown::Both);
+            me.connections.fetch_sub(1, Ordering::Relaxed);
+            shared.counters.conns_active
+                .fetch_sub(1, Ordering::SeqCst);
+        }
     }
 }
 
-/// Serialize pre-encoded response frames onto the socket. Frames from
-/// the routers and from the reader (errors, metrics) interleave
-/// through one channel, so they never interleave mid-frame. Batches
-/// writes: flush only when the channel momentarily empties.
-fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
-    let mut w = BufWriter::new(stream);
-    while let Ok(frame) = rx.recv() {
-        if write_frame(&mut w, &frame).is_err() {
-            return;
+/// Final transport teardown: deliver what the mailbox still holds,
+/// give each connection one bounded blocking flush, close everything.
+fn shard_teardown(shared: &Arc<Shared>, me: &ShardHandle,
+                  conns: &mut HashMap<u64, Conn>) {
+    let msgs: VecDeque<ShardMsg> =
+        std::mem::take(&mut *me.mailbox.lock().unwrap());
+    for msg in msgs {
+        match msg {
+            ShardMsg::Conn(stream, _) => {
+                // Accepted but never served: count it back out.
+                let _ = stream.shutdown(Shutdown::Both);
+                shared.counters.conns_active
+                    .fetch_sub(1, Ordering::SeqCst);
+            }
+            ShardMsg::Frame(id, frame) => {
+                if let Some(c) = conns.get_mut(&id) {
+                    c.out_bytes += frame.len();
+                    c.out.push_back(frame);
+                }
+            }
         }
-        while let Ok(next) = rx.try_recv() {
-            if write_frame(&mut w, &next).is_err() {
+    }
+    for (_, c) in conns.drain() {
+        final_flush_close(c);
+        me.connections.fetch_sub(1, Ordering::Relaxed);
+        shared.counters.conns_active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Bounded best-effort delivery of a closing connection's queued
+/// frames (shutdown acks, drain-timeout errors), then close.
+fn final_flush_close(mut c: Conn) {
+    if !c.dead && !c.out.is_empty() {
+        let _ = c.stream.set_nonblocking(false);
+        let _ = c.stream.set_write_timeout(
+            Some(Duration::from_millis(500)));
+        while let Some(front) = c.out.front() {
+            match (&c.stream).write(&front[c.front_pos..]) {
+                Ok(0) => break,
+                Ok(n) => {
+                    c.front_pos += n;
+                    if c.front_pos == front.len() {
+                        c.out.pop_front();
+                        c.front_pos = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+    }
+    let _ = c.stream.shutdown(Shutdown::Both);
+}
+
+/// Queue one outbound frame, enforcing the per-connection write
+/// bound. Over the cap the connection is shed: a best-effort typed
+/// notice goes straight to the socket (usually undeliverable — the
+/// peer is not reading — and never queued) and the connection dies.
+fn push_frame(shared: &Shared, c: &mut Conn, frame: Vec<u8>) {
+    if c.dead {
+        return;
+    }
+    if c.out_bytes + frame.len() > shared.write_buf_cap {
+        shared.counters.conns_shed.fetch_add(1, Ordering::Relaxed);
+        let note = err_frame(
+            c.peer_ver, CONN_ERR_ID, ErrorCode::Busy,
+            "write backpressure: outbound queue over cap; \
+             connection shed");
+        let _ = (&c.stream).write_all(&note);
+        c.dead = true;
+        return;
+    }
+    c.out_bytes += frame.len();
+    c.out.push_back(frame);
+}
+
+/// Write queued frames until done or the socket would block.
+fn flush_out(c: &mut Conn) -> io::Result<()> {
+    while let Some(front) = c.out.front() {
+        match (&c.stream).write(&front[c.front_pos..]) {
+            Ok(0) => {
+                return Err(io::Error::from(
+                    io::ErrorKind::WriteZero));
+            }
+            Ok(n) => {
+                c.front_pos += n;
+                c.out_bytes -= n;
+                if c.front_pos == front.len() {
+                    c.out.pop_front();
+                    c.front_pos = 0;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                return Ok(());
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Drain the socket's readable bytes into the receive buffer and
+/// handle every complete frame. Leaves no complete frame unparsed —
+/// the next poll round only needs to fire for *new* bytes.
+fn service_read(shared: &Arc<Shared>, shard: usize, conn_id: u64,
+                c: &mut Conn) {
+    loop {
+        match c.recv.fill_from(&mut (&c.stream)) {
+            Ok(0) => {
+                // Clean EOF. In-flight responses still flush (the
+                // peer may have half-closed); then the reap check
+                // closes us.
+                c.closing = true;
+                break;
+            }
+            Ok(_) => {
+                decode_frames(shared, shard, conn_id, c);
+                if c.dead || c.closing {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                continue;
+            }
+            Err(_) => {
+                c.dead = true;
                 return;
             }
         }
-        if w.flush().is_err() {
-            return;
-        }
+    }
+    if !c.recv.is_empty() && c.closing {
+        // EOF mid-frame: the partial frame can never complete. Only
+        // this connection is affected; its in-flight requests die
+        // with it (their responses find no connection to land on).
+        c.dead = true;
     }
 }
 
-fn read_loop(stream: TcpStream, shared: &Arc<Shared>,
-             tx: &mpsc::Sender<Vec<u8>>) {
-    let mut r = BufReader::new(stream);
-    // Version the last well-framed request arrived with — the best
-    // guess for framing connection-level errors (defaults to v1,
-    // which every client version decodes).
-    let mut peer_ver = V1;
+/// Parse and dispatch every complete frame in the receive buffer.
+fn decode_frames(shared: &Arc<Shared>, shard: usize, conn_id: u64,
+                 c: &mut Conn) {
     loop {
-        let (ver, body) = match read_frame(&mut r, KIND_REQUEST) {
-            Ok(Some(x)) => x,
-            // Clean close between frames.
+        match parse_frame(c.recv.data(), KIND_REQUEST) {
+            Ok(Some((ver, total))) => {
+                let body = c.recv.data()[HEADER_LEN..total].to_vec();
+                c.recv.consume(total);
+                c.peer_ver = ver;
+                on_request(shared, shard, conn_id, c, ver, &body);
+                if c.dead || c.closing {
+                    return;
+                }
+            }
             Ok(None) => return,
             Err(e) => {
                 // Framing damage: the stream is desynced. Answer once
                 // (best effort) so the peer learns why, then drop.
                 shared.counters.bad_request
                     .fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(err_frame(
-                    peer_ver, CONN_ERR_ID, ErrorCode::BadRequest,
-                    &e.to_string()));
+                let f = err_frame(c.peer_ver, CONN_ERR_ID,
+                                  ErrorCode::BadRequest,
+                                  &e.to_string());
+                push_frame(shared, c, f);
+                c.closing = true;
                 return;
             }
-        };
-        peer_ver = ver;
-        let req = match WireRequest::decode_body(ver, &body) {
-            Ok(req) => req,
-            Err(e) => {
-                // The frame boundary held: reject this request, keep
-                // the connection. The request id may not have parsed,
-                // so answer on the reserved connection-error id.
-                shared.counters.bad_request
-                    .fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(err_frame(
-                    ver, CONN_ERR_ID, ErrorCode::BadRequest,
-                    &e.to_string()));
-                continue;
-            }
-        };
-        // The reserved id cannot name a request: its response would be
-        // indistinguishable from a connection-level failure.
-        if req.id == CONN_ERR_ID {
+        }
+    }
+}
+
+/// Handle one well-framed request arriving on a shard connection.
+fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
+              c: &mut Conn, ver: u8, body: &[u8]) {
+    let req = match WireRequest::decode_body(ver, body) {
+        Ok(req) => req,
+        Err(e) => {
+            // The frame boundary held: reject this request, keep
+            // the connection. The request id may not have parsed,
+            // so answer on the reserved connection-error id.
             shared.counters.bad_request
                 .fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(err_frame(
-                ver, CONN_ERR_ID, ErrorCode::BadRequest,
-                &format!("request id {CONN_ERR_ID} is reserved for \
-                          connection-level errors")));
-            continue;
+            let f = err_frame(ver, CONN_ERR_ID, ErrorCode::BadRequest,
+                              &e.to_string());
+            push_frame(shared, c, f);
+            return;
         }
-        match req.body {
-            RequestBody::Infer { net, model, payload } => {
-                handle_infer(shared, tx, ver, req.id, net, &model,
-                             payload);
-            }
-            RequestBody::Metrics => {
-                let text = render_metrics(shared);
-                let _ = tx.send(WireResponse {
-                    id: req.id,
-                    body: ResponseBody::Metrics { text },
-                }.encode(ver));
-            }
-            RequestBody::Info { model } => {
-                let resp = match shared.resolve(&model) {
-                    None => err_resp(req.id, ErrorCode::BadRequest,
-                                     &unknown_model(shared, &model)),
-                    Some(idx) => {
-                        let m = &shared.models[idx];
-                        let s = m.handle.spec();
-                        WireResponse {
-                            id: req.id,
-                            body: ResponseBody::Info {
-                                net: net_code(s.kind),
-                                c: s.c as u32,
-                                h: s.h as u32,
-                                w: s.w as u32,
-                                timesteps: s.timesteps as u32,
-                                model: m.name.clone(),
-                                nmodels: shared.models.len() as u8,
-                            },
-                        }
+    };
+    // The reserved id cannot name a request: its response would be
+    // indistinguishable from a connection-level failure.
+    if req.id == CONN_ERR_ID {
+        shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+        let f = err_frame(
+            ver, CONN_ERR_ID, ErrorCode::BadRequest,
+            &format!("request id {CONN_ERR_ID} is reserved for \
+                      connection-level errors"));
+        push_frame(shared, c, f);
+        return;
+    }
+    match req.body {
+        RequestBody::Infer { net, model, payload } => {
+            handle_infer(shared, shard, conn_id, c, ver, req.id, net,
+                         &model, payload);
+        }
+        RequestBody::Metrics => {
+            let text = render_metrics(shared);
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::Metrics { text },
+            }.encode(ver);
+            push_frame(shared, c, f);
+        }
+        RequestBody::Info { model } => {
+            let resp = match shared.resolve(&model) {
+                None => err_resp(req.id, ErrorCode::BadRequest,
+                                 &unknown_model(shared, &model)),
+                Some(idx) => {
+                    let m = &shared.models[idx];
+                    let s = m.handle.spec();
+                    WireResponse {
+                        id: req.id,
+                        body: ResponseBody::Info {
+                            net: net_code(s.kind),
+                            c: s.c as u32,
+                            h: s.h as u32,
+                            w: s.w as u32,
+                            timesteps: s.timesteps as u32,
+                            model: m.name.clone(),
+                            nmodels: shared.models.len() as u8,
+                        },
                     }
-                };
-                let _ = tx.send(resp.encode(ver));
-            }
-            RequestBody::Shutdown => {
-                let _ = tx.send(WireResponse {
-                    id: req.id,
-                    body: ResponseBody::ShutdownAck,
-                }.encode(ver));
-                shared.stop.store(true, Ordering::SeqCst);
-            }
+                }
+            };
+            push_frame(shared, c, resp.encode(ver));
+        }
+        RequestBody::Shutdown => {
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::ShutdownAck,
+            }.encode(ver);
+            push_frame(shared, c, f);
+            shared.trigger_stop();
         }
     }
 }
@@ -717,16 +1151,16 @@ fn unknown_model(shared: &Shared, selector: &str) -> String {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
-                version: u8, client_id: u64, net: u8, model: &str,
-                payload: WirePayload) {
+fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
+                c: &mut Conn, version: u8, client_id: u64, net: u8,
+                model: &str, payload: WirePayload) {
     let idx = match shared.resolve(model) {
         Some(idx) => idx,
         None => {
             shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(err_frame(
-                version, client_id, ErrorCode::BadRequest,
-                &unknown_model(shared, model)));
+            let f = err_frame(version, client_id, ErrorCode::BadRequest,
+                              &unknown_model(shared, model));
+            push_frame(shared, c, f);
             return;
         }
     };
@@ -736,9 +1170,9 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
     if shared.stop.load(Ordering::SeqCst) {
         shared.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
         m.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(err_frame(version, client_id,
-                                  ErrorCode::ShuttingDown,
-                                  "gateway is draining"));
+        let f = err_frame(version, client_id, ErrorCode::ShuttingDown,
+                          "gateway is draining");
+        push_frame(shared, c, f);
         return;
     }
     let spec = m.handle.spec();
@@ -748,10 +1182,11 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
     if net != NET_ANY && net != net_code(spec.kind) {
         shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
         m.counters.bad_request.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(err_frame(
+        let f = err_frame(
             version, client_id, ErrorCode::BadRequest,
             &format!("model '{}' runs net {:?}, request asked for \
-                      code {net}", m.name, spec.kind)));
+                      code {net}", m.name, spec.kind));
+        push_frame(shared, c, f);
         return;
     }
     let payload = match payload {
@@ -765,8 +1200,9 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
     if let Err(detail) = spec.validate(&payload) {
         shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
         m.counters.bad_request.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(err_frame(version, client_id,
-                                  ErrorCode::BadRequest, &detail));
+        let f = err_frame(version, client_id, ErrorCode::BadRequest,
+                          &detail);
+        push_frame(shared, c, f);
         return;
     }
     // Request-level APRC: predict once, tag admission with it, and
@@ -774,17 +1210,19 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
     let cost = m.handle.predict_cost(&payload);
     let internal = shared.next_id.fetch_add(1, Ordering::Relaxed);
     shared.pending.lock().unwrap().insert(internal, PendingEntry {
-        tx: tx.clone(),
+        reply: ConnRef { shard, conn: conn_id },
         client_id,
         version,
         model: idx,
     });
+    c.inflight += 1;
     match m.handle.try_submit_cost(internal, payload, cost) {
         Ok(()) => {
             m.counters.cost_admitted.fetch_add(cost, Ordering::Relaxed);
         }
         Err(e) => {
-            shared.pending.lock().unwrap().remove(&internal);
+            shared.remove_pending(internal);
+            c.inflight = c.inflight.saturating_sub(1);
             let code = match e {
                 SubmitError::Full { .. } => {
                     shared.counters.busy.fetch_add(1, Ordering::Relaxed);
@@ -801,8 +1239,9 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
                     ErrorCode::ShuttingDown
                 }
             };
-            let _ = tx.send(err_frame(version, client_id, code,
-                                      &e.to_string()));
+            let f = err_frame(version, client_id, code,
+                              &e.to_string());
+            push_frame(shared, c, f);
         }
     }
 }
@@ -812,6 +1251,8 @@ fn handle_infer(shared: &Arc<Shared>, tx: &mpsc::Sender<Vec<u8>>,
 /// Owns one model's worker event stream: matches responses back to
 /// their connection by internal id, folds that model's serving stats,
 /// and fails exactly the requests a dying worker had in hand.
+/// Delivery is a mailbox push + waker to the shard owning the
+/// connection — routers never touch sockets.
 fn router_loop(model_idx: usize,
                events: mpsc::Receiver<WorkerEvent>,
                shared: Arc<Shared>) {
@@ -824,13 +1265,12 @@ fn router_loop(model_idx: usize,
                 m.counters.served.fetch_add(1, Ordering::Relaxed);
                 m.counters.cost_served
                     .fetch_add(r.predicted_cost, Ordering::Relaxed);
-                let entry = shared.pending.lock().unwrap().remove(&r.id);
-                if let Some(p) = entry {
+                if let Some(p) = shared.remove_pending(r.id) {
                     let prediction = r.output_counts.iter().enumerate()
                         .max_by_key(|&(_, c)| *c)
                         .map(|(i, _)| i as u32)
                         .unwrap_or(0);
-                    let _ = p.tx.send(WireResponse {
+                    shared.reply(p.reply, WireResponse {
                         id: p.client_id,
                         body: ResponseBody::Infer {
                             prediction,
@@ -871,15 +1311,18 @@ fn router_loop(model_idx: usize,
             if let Some(p) = pending.remove(&id) {
                 shared.counters.internal.fetch_add(1, Ordering::Relaxed);
                 m.counters.internal.fetch_add(1, Ordering::Relaxed);
-                let _ = p.tx.send(err_frame(
+                shared.reply(p.reply, err_frame(
                     p.version, p.client_id, ErrorCode::Internal,
                     &format!("all workers for model '{}' exited",
                              m.name)));
             }
         }
+        if pending.is_empty() {
+            shared.pending_cv.notify_all();
+        }
     }
     if shared.live_routers.fetch_sub(1, Ordering::SeqCst) == 1 {
-        shared.stop.store(true, Ordering::SeqCst);
+        shared.trigger_stop();
     }
 }
 
@@ -900,9 +1343,12 @@ fn fail_ids(shared: &Shared, model_idx: usize, ids: &[u64],
         if let Some(p) = pending.remove(id) {
             counter.fetch_add(1, Ordering::Relaxed);
             mcounter.fetch_add(1, Ordering::Relaxed);
-            let _ = p.tx.send(err_frame(p.version, p.client_id, code,
-                                        detail));
+            shared.reply(p.reply, err_frame(p.version, p.client_id,
+                                            code, detail));
         }
+    }
+    if pending.is_empty() {
+        shared.pending_cv.notify_all();
     }
 }
 
@@ -926,7 +1372,8 @@ fn push_labelled(out: &mut String, shared: &Shared, name: &str,
 }
 
 /// Prometheus-style plaintext exposition: gateway-wide counters
-/// (unlabelled, as in protocol v1 days) plus per-model series labelled
+/// (unlabelled, as in protocol v1 days), connection-lifecycle and
+/// per-shard reactor series, plus per-model series labelled
 /// `{model="<name>"}` — admission counters, queue, serving report and
 /// latency quantiles per mounted model.
 fn render_metrics(shared: &Shared) -> String {
@@ -939,8 +1386,31 @@ fn render_metrics(shared: &Shared) -> String {
                 "counter", c.conns_accepted as f64);
     push_metric(&mut out, "skydiver_connections_rejected_total",
                 "counter", c.conns_rejected as f64);
+    // Total connections the gateway dropped to protect itself: cap
+    // rejects at accept + mid-life write-backpressure sheds.
+    push_metric(&mut out, "skydiver_connections_shed_total",
+                "counter", (c.conns_rejected + c.conns_shed) as f64);
+    push_metric(&mut out,
+                "skydiver_connections_backpressure_shed_total",
+                "counter", c.conns_shed as f64);
     push_metric(&mut out, "skydiver_connections_active", "gauge",
                 c.conns_active as f64);
+    push_metric(&mut out, "skydiver_reactor_shards", "gauge",
+                shared.shards.len() as f64);
+    let _ = writeln!(out,
+                     "# TYPE skydiver_reactor_wakeups_total counter");
+    for (i, s) in shared.shards.iter().enumerate() {
+        let _ = writeln!(
+            out, "skydiver_reactor_wakeups_total{{shard=\"{i}\"}} {}",
+            s.wakeups.load(Ordering::Relaxed));
+    }
+    let _ = writeln!(out,
+                     "# TYPE skydiver_reactor_connections gauge");
+    for (i, s) in shared.shards.iter().enumerate() {
+        let _ = writeln!(
+            out, "skydiver_reactor_connections{{shard=\"{i}\"}} {}",
+            s.connections.load(Ordering::Relaxed));
+    }
     push_metric(&mut out, "skydiver_requests_total", "counter",
                 c.requests as f64);
     push_metric(&mut out, "skydiver_served_total", "counter",

@@ -68,6 +68,7 @@ fn start_gateway(label: &str, workers: usize, queue_cap: usize,
         addr: "127.0.0.1:0".into(),
         max_conns,
         drain_timeout: Duration::from_secs(30),
+        ..GatewayConfig::default()
     };
     let gw = Gateway::start_single(gcfg, service_cfg(workers, queue_cap),
                                    worker_cfg(artifacts(label)))
@@ -283,6 +284,38 @@ fn overload_sheds_busy_counts_it_and_drains() {
         "skydiver_queue_capacity{model=\"classifier\"}"));
     assert!(text.contains(
         "skydiver_latency_us{model=\"classifier\",quantile=\"0.99\"}"));
+
+    // Connection-lifecycle + reactor series. This client is the only
+    // connection, so active is exactly 1 and accepted at least 1.
+    let metric = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(name)
+                  && l.as_bytes().get(name.len()) == Some(&b' '))
+            .unwrap_or_else(|| panic!("metrics must expose {name}"))
+            .rsplit(' ').next().unwrap().parse().unwrap()
+    };
+    assert!(metric("skydiver_connections_accepted_total") >= 1.0);
+    assert_eq!(metric("skydiver_connections_active"), 1.0);
+    assert_eq!(metric("skydiver_connections_shed_total"), 0.0);
+    assert_eq!(metric("skydiver_connections_backpressure_shed_total"),
+               0.0);
+    let shards = metric("skydiver_reactor_shards");
+    assert!(shards >= 1.0);
+    // One wakeups series and one connections gauge per shard, and
+    // this connection's shard has polled at least once to serve us.
+    let wakeups: Vec<f64> = text.lines()
+        .filter(|l| l.starts_with(
+            "skydiver_reactor_wakeups_total{shard="))
+        .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+        .collect();
+    assert_eq!(wakeups.len(), shards as usize);
+    assert!(wakeups.iter().sum::<f64>() >= 1.0);
+    let shard_conns: Vec<f64> = text.lines()
+        .filter(|l| l.starts_with("skydiver_reactor_connections{shard="))
+        .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+        .collect();
+    assert_eq!(shard_conns.len(), shards as usize);
+    assert_eq!(shard_conns.iter().sum::<f64>(), 1.0);
 
     client.shutdown_server().unwrap();
     drop(client);

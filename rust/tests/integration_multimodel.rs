@@ -79,6 +79,7 @@ fn start_two_model_gateway(label: &str) -> (Gateway, String) {
         addr: "127.0.0.1:0".into(),
         max_conns: 16,
         drain_timeout: Duration::from_secs(30),
+        ..GatewayConfig::default()
     };
     let gw = Gateway::start(gcfg, registry).expect("gateway start");
     let addr = gw.local_addr().to_string();

@@ -11,8 +11,8 @@ Extracted from the inline CI snippets so the same check runs locally:
 * every row carries the tracked keys (serving rows additionally
   ``p99_ns`` and a positive ``frames_per_sec``);
 * serving output must contain the canonical row set (loopback rtt/e2e,
-  the two mixed multi-model rows, and the skewed FIFO/cost dispatch
-  pair).
+  the two mixed multi-model rows, the skewed FIFO/cost dispatch pair,
+  and the c10k reactor row).
 """
 
 import argparse
@@ -30,6 +30,7 @@ SERVING_ROWS = (
     "serving_mixed_segmenter",
     "serving_skewed_fifo",
     "serving_skewed_cost",
+    "serving_c10k",
 )
 
 
