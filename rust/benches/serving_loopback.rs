@@ -4,7 +4,7 @@
 //! the simulator. Fully hermetic (synthetic artifacts; no
 //! `make artifacts`).
 //!
-//! Emits seven rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! Emits eight rows into `BENCH_serving.json` (`skydiver-bench-v1`
 //! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
 //!
 //! * `serving_loopback_rtt` — single-connection, window-1 round-trip
@@ -27,6 +27,11 @@
 //!   gateway could reach. The fd soft limit is raised in-process; if
 //!   the hard limit is too low the connection count is clamped (and
 //!   said so on stdout).
+//! * `serving_cluster` — the fault-tolerant cluster tier: skewed
+//!   pipelined traffic through a front `Router` balancing two gateway
+//!   backends by heartbeat-reported queue cost, so the row prices the
+//!   extra hop plus placement against a single gateway
+//!   (`serving_skewed_fifo` is the closest single-backend row).
 
 #[path = "harness.rs"]
 mod harness;
@@ -341,9 +346,63 @@ fn main() {
              report_c10k.counters.served,
              report_c10k.counters.conns_shed);
 
+    // 6. The cluster tier: two gateway backends behind a front
+    // router, skewed pipelined traffic placed by heartbeat-reported
+    // queue cost. Compared against the single-gateway skewed rows,
+    // this prices the extra hop + placement machinery.
+    let mk_backend = || {
+        Gateway::start_single(
+            GatewayConfig::default(), service_cfg(),
+            worker_cfg(&dir, NetKind::Classifier))
+            .expect("cluster backend start")
+    };
+    let (bk0, bk1) = (mk_backend(), mk_backend());
+    let router = skydiver::cluster::Router::start(
+        skydiver::cluster::RouterConfig {
+            addr: "127.0.0.1:0".into(),
+            backends: vec![bk0.local_addr().to_string(),
+                           bk1.local_addr().to_string()],
+            heartbeat_every: Duration::from_millis(50),
+            ..skydiver::cluster::RouterConfig::default()
+        }).expect("router start");
+    let cluster_frames = if quick { 150 } else { 1200 };
+    let cluster_cfg = LoadGenConfig {
+        addr: router.local_addr().to_string(),
+        model: String::new(),
+        conns: 4,
+        frames: cluster_frames,
+        window: 8,
+        spikes: false,
+        retry_busy: true,
+        traffic: TrafficMode::Skewed,
+        seed: 0x5EED,
+    };
+    let a3 = harness::alloc_count();
+    let cluster_rep =
+        loadgen::run(&cluster_cfg).expect("cluster loadgen");
+    let cluster_allocs = (harness::alloc_count() - a3) as f64
+        / cluster_rep.ok.max(1) as f64;
+    assert_eq!(cluster_rep.errors, 0, "cluster loadgen frames failed");
+    assert_eq!(cluster_rep.ok as usize, cluster_frames,
+               "not all cluster frames served");
+    let cluster = loadgen_row("serving_cluster", &cluster_rep,
+                              cluster_allocs);
+    cluster.print();
+    Client::connect(router.local_addr().to_string())
+        .expect("connect for router shutdown")
+        .shutdown_server().expect("router shutdown");
+    let rr = router.wait().expect("router wait");
+    println!("cluster: fps={:.1} served={} retries={} failed={} \
+              dispatched=[{}, {}]",
+             cluster_rep.fps, rr.served, rr.retries, rr.failed,
+             rr.backends[0].dispatched, rr.backends[1].dispatched);
+    for bk in [bk0, bk1] {
+        bk.stop_and_wait().expect("cluster backend stop");
+    }
+
     let path = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".into());
     harness::write_json_to(
         &path, &[rtt, e2e, mixed_cls, mixed_seg, skew_fifo, skew_cost,
-                 c10k]);
+                 c10k, cluster]);
 }

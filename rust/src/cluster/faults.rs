@@ -1,0 +1,475 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! [`FaultProxy`] is a frame-aware TCP proxy that sits between a
+//! client (or the cluster router) and one gateway and injects
+//! failures drawn from a seeded [`FaultPlan`] — the same seed and the
+//! same connection order reproduce the same fault sequence, so chaos
+//! tests are debuggable instead of flaky. It is used two ways:
+//!
+//! * hermetically, from `rust/tests/integration_cluster.rs`, where
+//!   [`FaultProxy::kill`]/[`FaultProxy::revive`] simulate a
+//!   SIGKILL'd-and-restarted backend without spawning processes;
+//! * operationally, behind the hidden `serve --inject-faults SPEC`
+//!   flag, which interposes the proxy in front of a real gateway for
+//!   manual resilience drills.
+//!
+//! Faults are applied per frame (the proxy parses the protocol in
+//! both directions), so a plan can shed *requests* with BUSY storms
+//! while leaving the byte stream intact, or corrupt the stream
+//! itself with truncation:
+//!
+//! * `drop` — probability a fresh connection is closed at accept;
+//! * `busy` — probability an `Infer` request is answered locally
+//!   with `BUSY` instead of being forwarded (a busy storm);
+//! * `blackhole` — probability a response is swallowed (request
+//!   delivered and executed, answer never arrives — what a client
+//!   read timeout exists for);
+//! * `delay_ms`/`delay_p` — probability a response is delayed by a
+//!   fixed amount before forwarding;
+//! * `truncate` — probability a response frame is cut mid-frame and
+//!   both connections torn down (framing damage).
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::SplitMix64;
+use crate::server::protocol::{read_frame, ErrorCode, ResponseBody,
+                              WireResponse, KIND_REQUEST,
+                              KIND_RESPONSE, MAGIC};
+
+/// Seeded fault probabilities. Parsed from a `key=value` comma list,
+/// e.g. `busy=0.1,drop=0.05,blackhole=0.01,delay_ms=5,delay_p=0.2,
+/// truncate=0.01,seed=7`. Omitted keys default to "off".
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// P(close a fresh connection at accept).
+    pub conn_drop: f64,
+    /// P(answer an `Infer` request with BUSY instead of forwarding).
+    pub busy: f64,
+    /// P(swallow a response frame).
+    pub blackhole: f64,
+    /// P(cut a response frame mid-frame and drop the connection).
+    pub truncate: f64,
+    /// Fixed response delay, applied with probability `delay_p`.
+    pub delay: Duration,
+    pub delay_p: f64,
+}
+
+impl FaultPlan {
+    /// The all-off plan (a transparent proxy).
+    pub fn none() -> Self {
+        Self {
+            seed: 0,
+            conn_drop: 0.0,
+            busy: 0.0,
+            blackhole: 0.0,
+            truncate: 0.0,
+            delay: Duration::ZERO,
+            delay_p: 0.0,
+        }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.conn_drop == 0.0
+            && self.busy == 0.0
+            && self.blackhole == 0.0
+            && self.truncate == 0.0
+            && (self.delay.is_zero() || self.delay_p == 0.0)
+    }
+
+    /// Parse a `key=value,key=value` spec. Unknown keys and
+    /// out-of-range probabilities are errors — a typo'd fault plan
+    /// silently injecting nothing would defeat the drill.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::none();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=').with_context(|| {
+                format!("fault spec part '{part}' is not key=value")
+            })?;
+            match k.trim() {
+                "seed" => {
+                    plan.seed = v.trim().parse().with_context(|| {
+                        format!("fault seed '{v}' is not a u64")
+                    })?;
+                }
+                "drop" => plan.conn_drop = prob(k, v)?,
+                "busy" => plan.busy = prob(k, v)?,
+                "blackhole" => plan.blackhole = prob(k, v)?,
+                "truncate" => plan.truncate = prob(k, v)?,
+                "delay_p" => plan.delay_p = prob(k, v)?,
+                "delay_ms" => {
+                    let ms: u64 =
+                        v.trim().parse().with_context(|| {
+                            format!("delay_ms '{v}' is not a u64")
+                        })?;
+                    plan.delay = Duration::from_millis(ms);
+                }
+                other => bail!(
+                    "unknown fault key '{other}' (known: drop, busy, \
+                     blackhole, truncate, delay_ms, delay_p, seed)"),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn prob(key: &str, v: &str) -> Result<f64> {
+    let p: f64 = v.trim().parse().with_context(|| {
+        format!("fault probability {key}='{v}' is not a number")
+    })?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("fault probability {key}={p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+/// One biased coin flip.
+fn hit(rng: &mut SplitMix64, p: f64) -> bool {
+    if p <= 0.0 {
+        return false;
+    }
+    if p >= 1.0 {
+        return true;
+    }
+    (rng.next_below(1_000_000) as f64) < p * 1e6
+}
+
+struct ProxyShared {
+    plan: FaultPlan,
+    upstream: String,
+    /// Simulated total failure: every proxied connection is severed
+    /// and fresh accepts are closed immediately.
+    down: AtomicBool,
+    stop: AtomicBool,
+    /// Live proxied sockets (both halves), registered so
+    /// [`FaultProxy::kill`] can sever them all at once.
+    conns: Mutex<Vec<TcpStream>>,
+    conn_seq: AtomicU64,
+}
+
+/// A running fault-injection proxy (one listener, thread per proxied
+/// connection). Dropping it stops the listener and severs every
+/// proxied connection.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    shared: Arc<ProxyShared>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Listen on `listen` (e.g. `127.0.0.1:0`) and forward to the
+    /// gateway at `upstream`, injecting faults per `plan`.
+    pub fn start(listen: &str, upstream: &str, plan: FaultPlan)
+                 -> Result<Self> {
+        let listener = TcpListener::bind(listen).with_context(|| {
+            format!("binding fault proxy to {listen}")
+        })?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(ProxyShared {
+            plan,
+            upstream: upstream.to_string(),
+            down: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            conn_seq: AtomicU64::new(0),
+        });
+        let accept = {
+            let shared = shared.clone();
+            thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(Self { addr, shared, accept: Some(accept) })
+    }
+
+    /// The address clients (or the router) should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Simulate a SIGKILL of the backend *as seen through this
+    /// proxy*: sever every proxied connection mid-stream and refuse
+    /// (accept-then-close) new ones until [`revive`](Self::revive).
+    /// The upstream gateway itself keeps running.
+    pub fn kill(&self) {
+        self.shared.down.store(true, Ordering::SeqCst);
+        let mut conns = self.shared.conns.lock().unwrap();
+        for s in conns.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// End a simulated outage: fresh connections proxy again.
+    pub fn revive(&self) {
+        self.shared.down.store(false, Ordering::SeqCst);
+    }
+
+    /// Stop the proxy: sever everything and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.kill();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ProxyShared>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((s, _)) => {
+                if shared.down.load(Ordering::SeqCst) {
+                    // "Backend is dead": the TCP handshake may
+                    // complete (kernel backlog), but the connection
+                    // dies immediately.
+                    let _ = s.shutdown(Shutdown::Both);
+                    continue;
+                }
+                let shared = shared.clone();
+                thread::spawn(move || proxy_conn(s, shared));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Rebuild the frame bytes for a (version, kind, body) triple —
+/// byte-identical to what the peer sent, since decode validated it.
+fn reframe(ver: u8, kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(10 + body.len());
+    f.extend_from_slice(&MAGIC);
+    f.push(ver);
+    f.push(kind);
+    f.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    f.extend_from_slice(body);
+    f
+}
+
+fn proxy_conn(client: TcpStream, shared: Arc<ProxyShared>) {
+    let cid = shared.conn_seq.fetch_add(1, Ordering::SeqCst);
+    let base = shared.plan.seed
+        ^ cid.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng_conn = SplitMix64::new(base);
+    if hit(&mut rng_conn, shared.plan.conn_drop) {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    }
+    let upstream = match TcpStream::connect(&shared.upstream) {
+        Ok(u) => u,
+        Err(_) => {
+            let _ = client.shutdown(Shutdown::Both);
+            return;
+        }
+    };
+    let _ = client.set_nodelay(true);
+    let _ = upstream.set_nodelay(true);
+    // Register both halves for kill().
+    {
+        let mut conns = shared.conns.lock().unwrap();
+        if shared.down.load(Ordering::SeqCst) {
+            let _ = client.shutdown(Shutdown::Both);
+            let _ = upstream.shutdown(Shutdown::Both);
+            return;
+        }
+        if let (Ok(c2), Ok(u2)) =
+            (client.try_clone(), upstream.try_clone())
+        {
+            conns.push(c2);
+            conns.push(u2);
+        }
+    }
+    // The client's write half is shared: the request thread answers
+    // BUSY storms on it while the response thread forwards real
+    // responses — whole frames only, under the lock.
+    let client_w = match client.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let up_w = match upstream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let plan = shared.plan.clone();
+    let req_thread = {
+        let client_w = client_w.clone();
+        let plan = plan.clone();
+        let rng = SplitMix64::new(base ^ 0xA11C_E5EED);
+        thread::spawn(move || {
+            forward_requests(client, up_w, client_w, plan, rng)
+        })
+    };
+    let rng = SplitMix64::new(base ^ 0xB0B5_1ED);
+    forward_responses(upstream, client_w, plan, rng);
+    let _ = req_thread.join();
+}
+
+/// Client → upstream direction: parse request frames, answer BUSY
+/// storms locally, forward the rest.
+fn forward_requests(client_r: TcpStream, mut up_w: TcpStream,
+                    client_w: Arc<Mutex<TcpStream>>, plan: FaultPlan,
+                    mut rng: SplitMix64) {
+    let mut r = &client_r;
+    loop {
+        match read_frame(&mut r, KIND_REQUEST) {
+            Ok(Some((ver, body))) => {
+                // Request body layout: id u64 LE, op u8, …
+                let op = body.get(8).copied().unwrap_or(0xFF);
+                if op == 0 && hit(&mut rng, plan.busy) {
+                    let id = u64::from_le_bytes(
+                        body[0..8].try_into().unwrap());
+                    let f = WireResponse {
+                        id,
+                        body: ResponseBody::Error {
+                            code: ErrorCode::Busy,
+                            detail: "fault injection: busy storm"
+                                .into(),
+                        },
+                    }.encode(ver);
+                    let mut w = client_w.lock().unwrap();
+                    if w.write_all(&f).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                let f = reframe(ver, KIND_REQUEST, &body);
+                if up_w.write_all(&f).is_err() {
+                    break;
+                }
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+    // Client went away (or stream damage): signal EOF upstream so
+    // the gateway drains; the response direction forwards whatever
+    // is still in flight until the gateway closes.
+    let _ = up_w.shutdown(Shutdown::Write);
+}
+
+/// Upstream → client direction: parse response frames, inject
+/// blackhole / delay / truncation.
+fn forward_responses(up_r: TcpStream,
+                     client_w: Arc<Mutex<TcpStream>>, plan: FaultPlan,
+                     mut rng: SplitMix64) {
+    let mut r = &up_r;
+    loop {
+        match read_frame(&mut r, KIND_RESPONSE) {
+            Ok(Some((ver, body))) => {
+                if hit(&mut rng, plan.blackhole) {
+                    continue;
+                }
+                if !plan.delay.is_zero()
+                    && hit(&mut rng, plan.delay_p)
+                {
+                    thread::sleep(plan.delay);
+                }
+                let f = reframe(ver, KIND_RESPONSE, &body);
+                if hit(&mut rng, plan.truncate) {
+                    // Cut the frame mid-body: framing damage the
+                    // client must treat as a dead connection.
+                    let cut = (f.len() / 2).max(1);
+                    let mut w = client_w.lock().unwrap();
+                    let _ = w.write_all(&f[..cut]);
+                    let _ = w.shutdown(Shutdown::Both);
+                    let _ = up_r.shutdown(Shutdown::Both);
+                    break;
+                }
+                let mut w = client_w.lock().unwrap();
+                if w.write_all(&f).is_err() {
+                    break;
+                }
+            }
+            Ok(None) | Err(_) => {
+                // Upstream closed (or stream damage): sever the
+                // client too — from its point of view the backend
+                // just died.
+                let _ = client_w
+                    .lock()
+                    .unwrap()
+                    .shutdown(Shutdown::Both);
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let plan = FaultPlan::parse(
+            "busy=0.1, drop=0.05,blackhole=0.01,truncate=0.02,\
+             delay_ms=5,delay_p=0.2,seed=7")
+            .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.busy, 0.1);
+        assert_eq!(plan.conn_drop, 0.05);
+        assert_eq!(plan.blackhole, 0.01);
+        assert_eq!(plan.truncate, 0.02);
+        assert_eq!(plan.delay, Duration::from_millis(5));
+        assert_eq!(plan.delay_p, 0.2);
+        assert!(!plan.is_noop());
+    }
+
+    #[test]
+    fn parse_empty_is_noop() {
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::none());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("busy").is_err());
+        assert!(FaultPlan::parse("warp=0.5").is_err());
+        assert!(FaultPlan::parse("busy=1.5").is_err());
+        assert!(FaultPlan::parse("busy=-0.1").is_err());
+        assert!(FaultPlan::parse("delay_ms=abc").is_err());
+        assert!(FaultPlan::parse("seed=-3").is_err());
+    }
+
+    #[test]
+    fn hit_is_deterministic_and_respects_extremes() {
+        let mut rng = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert!(!hit(&mut rng, 0.0));
+            assert!(hit(&mut rng, 1.0));
+        }
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..1000 {
+            assert_eq!(hit(&mut a, 0.3), hit(&mut b, 0.3));
+        }
+        // A 30% coin lands roughly 30% of the time.
+        let mut rng = SplitMix64::new(9);
+        let hits = (0..10_000)
+            .filter(|_| hit(&mut rng, 0.3))
+            .count();
+        assert!((2_500..3_500).contains(&hits), "hits={hits}");
+    }
+}

@@ -1,0 +1,189 @@
+//! Backend health state machine: strike-based ejection, probe-based
+//! readmission.
+//!
+//! Kept as a pure `(state, event) -> transition` machine — the router
+//! drives it from heartbeat outcomes, tests drive it directly. The
+//! policy is deliberately simple and explainable:
+//!
+//! * **Live** backends accumulate *strikes* on consecutive heartbeat
+//!   failures (timeout, connect error, connection loss, rejected
+//!   probe); any success resets the count. `eject_after` consecutive
+//!   strikes eject the backend.
+//! * **Ejected** backends accumulate *probe successes*; any failure
+//!   resets the count. `readmit_after` consecutive successes readmit
+//!   it.
+//!
+//! Requiring consecutive successes to readmit keeps a flapping
+//! backend (up for one probe, down the next) out of the placement set
+//! instead of oscillating traffic onto it.
+
+use std::time::Duration;
+
+/// Health-check tuning knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthPolicy {
+    /// Heartbeat (and probe) period.
+    pub heartbeat_every: Duration,
+    /// Consecutive failures before a live backend is ejected.
+    pub eject_after: u32,
+    /// Consecutive probe successes before an ejected backend is
+    /// readmitted.
+    pub readmit_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            heartbeat_every: Duration::from_millis(200),
+            eject_after: 3,
+            readmit_after: 2,
+        }
+    }
+}
+
+/// State change produced by an observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    /// Live → ejected: stop placing, fail over in-flight requests,
+    /// start probing.
+    Ejected,
+    /// Ejected → live: resume placing.
+    Readmitted,
+}
+
+/// One backend's health automaton.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthState {
+    live: bool,
+    strikes: u32,
+    probe_successes: u32,
+}
+
+impl Default for HealthState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HealthState {
+    /// Backends start live: they get `eject_after` chances before
+    /// traffic shifts away.
+    pub fn new() -> Self {
+        Self { live: true, strikes: 0, probe_successes: 0 }
+    }
+
+    pub fn live(&self) -> bool {
+        self.live
+    }
+
+    /// Current consecutive-failure count (0 when healthy).
+    pub fn strikes(&self) -> u32 {
+        self.strikes
+    }
+
+    /// A heartbeat/probe succeeded. Returns
+    /// [`Transition::Readmitted`] when this flips an ejected backend
+    /// back to live.
+    pub fn on_success(&mut self, policy: &HealthPolicy)
+                      -> Option<Transition> {
+        if self.live {
+            self.strikes = 0;
+            return None;
+        }
+        self.probe_successes += 1;
+        if self.probe_successes >= policy.readmit_after.max(1) {
+            self.live = true;
+            self.strikes = 0;
+            self.probe_successes = 0;
+            return Some(Transition::Readmitted);
+        }
+        None
+    }
+
+    /// A heartbeat/probe failed. Returns [`Transition::Ejected`] when
+    /// this is the strike that ejects a live backend.
+    pub fn on_failure(&mut self, policy: &HealthPolicy)
+                      -> Option<Transition> {
+        if self.live {
+            self.strikes += 1;
+            if self.strikes >= policy.eject_after.max(1) {
+                self.live = false;
+                self.probe_successes = 0;
+                return Some(Transition::Ejected);
+            }
+            return None;
+        }
+        self.probe_successes = 0;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(eject: u32, readmit: u32) -> HealthPolicy {
+        HealthPolicy {
+            heartbeat_every: Duration::from_millis(50),
+            eject_after: eject,
+            readmit_after: readmit,
+        }
+    }
+
+    #[test]
+    fn ejects_only_after_consecutive_failures() {
+        let p = policy(3, 2);
+        let mut h = HealthState::new();
+        assert_eq!(h.on_failure(&p), None);
+        assert_eq!(h.on_failure(&p), None);
+        // A success in between resets the count …
+        assert_eq!(h.on_success(&p), None);
+        assert!(h.live());
+        assert_eq!(h.strikes(), 0);
+        // … so ejection needs three *consecutive* failures again.
+        assert_eq!(h.on_failure(&p), None);
+        assert_eq!(h.on_failure(&p), None);
+        assert_eq!(h.on_failure(&p), Some(Transition::Ejected));
+        assert!(!h.live());
+    }
+
+    #[test]
+    fn readmits_only_after_consecutive_successes() {
+        let p = policy(1, 3);
+        let mut h = HealthState::new();
+        assert_eq!(h.on_failure(&p), Some(Transition::Ejected));
+        assert_eq!(h.on_success(&p), None);
+        assert_eq!(h.on_success(&p), None);
+        // A failed probe resets the streak.
+        assert_eq!(h.on_failure(&p), None);
+        assert_eq!(h.on_success(&p), None);
+        assert_eq!(h.on_success(&p), None);
+        assert_eq!(h.on_success(&p), Some(Transition::Readmitted));
+        assert!(h.live());
+        // Readmitted with a clean slate.
+        assert_eq!(h.strikes(), 0);
+    }
+
+    #[test]
+    fn no_double_transitions() {
+        let p = policy(2, 1);
+        let mut h = HealthState::new();
+        assert_eq!(h.on_failure(&p), None);
+        assert_eq!(h.on_failure(&p), Some(Transition::Ejected));
+        // Further failures while ejected produce no second ejection.
+        assert_eq!(h.on_failure(&p), None);
+        assert_eq!(h.on_failure(&p), None);
+        assert_eq!(h.on_success(&p), Some(Transition::Readmitted));
+        // Further successes while live produce no second readmission.
+        assert_eq!(h.on_success(&p), None);
+        assert_eq!(h.on_success(&p), None);
+    }
+
+    #[test]
+    fn zero_thresholds_behave_like_one() {
+        let p = policy(0, 0);
+        let mut h = HealthState::new();
+        assert_eq!(h.on_failure(&p), Some(Transition::Ejected));
+        assert_eq!(h.on_success(&p), Some(Transition::Readmitted));
+    }
+}

@@ -1,0 +1,23 @@
+//! Fault-tolerant cluster tier: a front [`Router`] process fanning
+//! client requests out to N health-checked gateway backends.
+//!
+//! This sits one layer above `server/`: gateways stay single-process
+//! multi-model servers; the router adds host-level scale-out with
+//! the paper's cost-balanced placement ([`placement`]), strike-based
+//! health checking ([`health`]), failover retry so a killed backend
+//! costs latency rather than lost requests ([`router`]), and a
+//! deterministic fault-injection proxy for chaos testing
+//! ([`faults`]). Everything is std-only, reusing the
+//! `server/reactor` poll primitives and the v2 wire protocol's
+//! `Heartbeat` load reports.
+
+pub mod faults;
+pub mod health;
+pub mod placement;
+pub mod router;
+
+pub use faults::{FaultPlan, FaultProxy};
+pub use health::{HealthPolicy, HealthState, Transition};
+pub use placement::{mounted_anywhere, pick_backend, BackendView};
+pub use router::{render_cluster_metrics, BackendSnapshot, Router,
+                 RouterConfig, RouterReport, RouterStop};

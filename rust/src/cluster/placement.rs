@@ -1,0 +1,176 @@
+//! Cost-aware backend placement — CBWS lifted to host granularity.
+//!
+//! The paper's CBWS balances *channel* workloads inside one
+//! accelerator by predicted cost, not by count; the cluster router
+//! applies the identical idea across gateway processes: each request
+//! goes to the live backend that mounts the target model and carries
+//! the least predicted queue cost (the backend's reported
+//! `cost_depth` plus the router's own estimate for requests it has
+//! dispatched but not yet seen answered).
+//!
+//! Pure functions over a snapshot — no IO, no locks — so the
+//! invariants ("never an ejected backend", "never a backend that
+//! doesn't mount the model") are directly property-testable.
+
+/// One backend as the placement decision sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendView {
+    /// Health-check verdict: ejected backends are never placed on.
+    pub live: bool,
+    /// `(model name, cost_depth)` pairs from the last heartbeat. An
+    /// empty list means no load report has landed yet (the backend
+    /// is not placeable until one does).
+    pub models: Vec<(String, u64)>,
+    /// Router-side estimate: summed cost of requests dispatched to
+    /// this backend whose responses have not arrived yet — the
+    /// correction term between heartbeats.
+    pub inflight_cost: u64,
+}
+
+impl BackendView {
+    /// Cost depth for `model` (`""` selects the backend's default —
+    /// its first reported model); `None` if the backend doesn't
+    /// mount it.
+    pub fn cost_for(&self, model: &str) -> Option<u64> {
+        if model.is_empty() {
+            self.models.first().map(|(_, d)| *d)
+        } else {
+            self.models.iter()
+                .find(|(n, _)| n == model)
+                .map(|(_, d)| *d)
+        }
+    }
+
+    /// Whether this backend is known to mount `model` (`""` = any
+    /// model at all).
+    pub fn mounts(&self, model: &str) -> bool {
+        self.cost_for(model).is_some()
+    }
+}
+
+/// Pick the backend for one request on `model` (`""` = default):
+/// among **live** backends that **mount** the model, minimize
+/// `cost_depth + inflight_cost`; ties break to the lowest index so
+/// the choice is deterministic given a snapshot. `None` when no live
+/// backend qualifies (all ejected, or none mounts the model) — the
+/// caller retries or rejects.
+pub fn pick_backend(views: &[BackendView], model: &str)
+                    -> Option<usize> {
+    let mut best: Option<(u64, usize)> = None;
+    for (i, v) in views.iter().enumerate() {
+        if !v.live {
+            continue;
+        }
+        let Some(depth) = v.cost_for(model) else {
+            continue;
+        };
+        let key = depth.saturating_add(v.inflight_cost);
+        match best {
+            Some((bk, _)) if bk <= key => {}
+            _ => best = Some((key, i)),
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+/// Whether *any* backend — live or ejected — is known to mount
+/// `model`. Distinguishes "unknown model, reject now" from "mounted
+/// only on a currently-ejected backend, worth retrying".
+pub fn mounted_anywhere(views: &[BackendView], model: &str) -> bool {
+    views.iter().any(|v| v.mounts(model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(live: bool, models: &[(&str, u64)], inflight: u64)
+            -> BackendView {
+        BackendView {
+            live,
+            models: models.iter()
+                .map(|(n, d)| (n.to_string(), *d))
+                .collect(),
+            inflight_cost: inflight,
+        }
+    }
+
+    #[test]
+    fn picks_least_loaded_by_cost() {
+        let views = [
+            view(true, &[("cls", 500)], 0),
+            view(true, &[("cls", 100)], 0),
+            view(true, &[("cls", 300)], 0),
+        ];
+        assert_eq!(pick_backend(&views, "cls"), Some(1));
+        assert_eq!(pick_backend(&views, ""), Some(1));
+    }
+
+    #[test]
+    fn inflight_cost_counts_toward_load() {
+        let views = [
+            view(true, &[("cls", 100)], 500),
+            view(true, &[("cls", 300)], 0),
+        ];
+        // 100 + 500 > 300 + 0.
+        assert_eq!(pick_backend(&views, "cls"), Some(1));
+    }
+
+    #[test]
+    fn never_picks_ejected_or_nonmounting() {
+        let views = [
+            view(false, &[("cls", 0)], 0),
+            view(true, &[("seg", 0)], 0),
+            view(true, &[("cls", 9999)], 9999),
+        ];
+        assert_eq!(pick_backend(&views, "cls"), Some(2));
+        assert_eq!(pick_backend(&views, "seg"), Some(1));
+        assert_eq!(pick_backend(&views, "nope"), None);
+        assert!(mounted_anywhere(&views, "cls"));
+        assert!(!mounted_anywhere(&views, "nope"));
+    }
+
+    #[test]
+    fn empty_selector_uses_first_reported_model() {
+        let views = [
+            view(true, &[("seg", 700), ("cls", 1)], 0),
+            view(true, &[("seg", 100)], 0),
+        ];
+        // "" compares each backend's *first* model: 700 vs 100.
+        assert_eq!(pick_backend(&views, ""), Some(1));
+    }
+
+    #[test]
+    fn unreported_backend_is_not_placeable() {
+        let views = [view(true, &[], 0), view(false, &[("cls", 0)], 0)];
+        assert_eq!(pick_backend(&views, "cls"), None);
+        assert_eq!(pick_backend(&views, ""), None);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        let views = [
+            view(true, &[("cls", 50)], 0),
+            view(true, &[("cls", 50)], 0),
+        ];
+        assert_eq!(pick_backend(&views, "cls"), Some(0));
+    }
+
+    #[test]
+    fn saturates_instead_of_overflowing() {
+        let views = [
+            view(true, &[("cls", u64::MAX)], u64::MAX),
+            view(true, &[("cls", 5)], 0),
+        ];
+        assert_eq!(pick_backend(&views, "cls"), Some(1));
+    }
+
+    #[test]
+    fn no_live_backend_means_none() {
+        let views = [
+            view(false, &[("cls", 0)], 0),
+            view(false, &[("cls", 0)], 0),
+        ];
+        assert_eq!(pick_backend(&views, "cls"), None);
+    }
+}

@@ -1,0 +1,1689 @@
+//! The cluster front router: one listener, N health-checked gateway
+//! backends, cost-balanced placement, failover retry.
+//!
+//! # Shape
+//!
+//! ```text
+//!  clients ──► client_loop (poll reactor, one thread)
+//!                 │  Pending{conn, client_id, …} keyed by a fresh
+//!                 │  router-internal id
+//!                 ▼
+//!             dispatch ──► per-backend IO thread ──► gateway
+//!                 ▲            │  persistent pipelined connection,
+//!                 │            │  heartbeats ride the same stream
+//!             retry_loop ◄─────┘  (failures, ejection, failover)
+//! ```
+//!
+//! * **Placement** is the paper's cost-balanced workload selection
+//!   lifted to host granularity ([`super::placement`]): each request
+//!   goes to the live backend mounting the target model with the
+//!   least `cost_depth + inflight_cost`, where `cost_depth` comes
+//!   from the backend's last heartbeat (protocol v2 `Heartbeat`
+//!   frames, `coordinator/cost.rs` units) and `inflight_cost` is the
+//!   router's own estimate of work it has sent but not yet seen
+//!   answered.
+//! * **Health**: every backend gets a heartbeat each
+//!   `heartbeat_every` on its data connection; a heartbeat that goes
+//!   unanswered for a full period, a connect error, or a lost
+//!   connection is a strike ([`super::health`]). `eject_after`
+//!   consecutive strikes eject the backend: it leaves the placement
+//!   set, its in-flight requests fail over to survivors, and a probe
+//!   loop readmits it after `readmit_after` consecutive successful
+//!   probes.
+//! * **Failover** re-dispatches under a *fresh* internal id (the old
+//!   id is forgotten while the pending table is locked), so a
+//!   delayed response from a presumed-dead backend finds no entry
+//!   and is dropped instead of racing the retry into a duplicate
+//!   client response. Requests are pure functions of their payload,
+//!   so executing one twice is safe — the client still gets exactly
+//!   one response. A killed backend therefore costs latency, never a
+//!   lost request; after `retry_max` failed attempts the client gets
+//!   an explicit `INTERNAL` error.
+//!
+//! The router speaks v1 and v2 on the client side (responses are
+//! re-encoded at each client's version) and always v2 upstream.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::io::{self, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
+               ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::NOMINAL_FRAME_COST;
+use crate::data::SplitMix64;
+use crate::server::client::Client;
+use crate::server::loadgen::busy_backoff;
+use crate::server::protocol::{parse_frame, ErrorCode, ModelLoad,
+                              RequestBody, ResponseBody, WireRequest,
+                              WireResponse, CONN_ERR_ID, HEADER_LEN,
+                              KIND_REQUEST, KIND_RESPONSE, V1, V2};
+use crate::server::reactor::{fd_of, poll, raise_nofile_limit, PollFd,
+                             RecvBuf, Waker, POLLIN, POLLOUT};
+
+use super::health::{HealthPolicy, HealthState, Transition};
+use super::placement::{mounted_anywhere, pick_backend, BackendView};
+
+/// "Not currently dispatched to any backend."
+const UNASSIGNED: usize = usize::MAX;
+/// Per-client-connection write backlog cap; a reader this far behind
+/// is pathological and gets dropped rather than ballooning memory.
+const WRITE_BUF_CAP: usize = 8 << 20;
+
+/// Router tuning. `addr` may use port 0; see
+/// [`Router::local_addr`].
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub addr: String,
+    /// Backend gateway addresses (`HOST:PORT`), index-stable for the
+    /// life of the router.
+    pub backends: Vec<String>,
+    pub heartbeat_every: Duration,
+    /// Consecutive heartbeat failures before ejection.
+    pub eject_after: u32,
+    /// Consecutive probe successes before readmission.
+    pub readmit_after: u32,
+    /// Dispatch attempts per request before it fails with
+    /// `INTERNAL` (failover and no-live-backend retries both count).
+    pub retry_max: u32,
+    pub max_conns: usize,
+    pub connect_timeout: Duration,
+    /// Seeds the retry-backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7979".into(),
+            backends: Vec::new(),
+            heartbeat_every: Duration::from_millis(200),
+            eject_after: 3,
+            readmit_after: 2,
+            retry_max: 8,
+            max_conns: 1024,
+            connect_timeout: Duration::from_secs(1),
+            seed: 0xFA11,
+        }
+    }
+}
+
+/// One admitted client request, keyed by router-internal id.
+struct Pending {
+    conn: u64,
+    /// The id the client used; restored on the response.
+    client_id: u64,
+    /// Client's protocol version; responses re-encode at this.
+    version: u8,
+    body: RequestBody,
+    model: String,
+    attempts: u32,
+    backend: usize,
+    /// Predicted cost charged to `inflight_cost` while dispatched.
+    cost: u64,
+}
+
+#[derive(Default)]
+struct BackendCounters {
+    ejections: AtomicU64,
+    readmissions: AtomicU64,
+    failovers: AtomicU64,
+    heartbeats_ok: AtomicU64,
+    heartbeat_failures: AtomicU64,
+    dispatched: AtomicU64,
+    last_heartbeat_us: AtomicU64,
+}
+
+struct BackendShared {
+    addr: String,
+    live: AtomicBool,
+    health: Mutex<HealthState>,
+    /// Last heartbeat's per-model load report.
+    loads: Mutex<Vec<ModelLoad>>,
+    /// Cost dispatched but not yet answered — the between-heartbeats
+    /// correction term for placement.
+    inflight_cost: AtomicU64,
+    counters: BackendCounters,
+    /// Encoded frames awaiting the backend IO thread.
+    outq: Mutex<VecDeque<Vec<u8>>>,
+    waker: Waker,
+}
+
+struct RouterShared {
+    policy: HealthPolicy,
+    retry_max: u32,
+    connect_timeout: Duration,
+    backends: Vec<BackendShared>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    /// Internal ids for upstream frames (requests *and* heartbeats
+    /// share the space, so they can never collide).
+    next_id: AtomicU64,
+    /// Responses headed back to client connections, drained by the
+    /// client loop.
+    mailbox: Mutex<VecDeque<(u64, Vec<u8>)>>,
+    client_waker: Waker,
+    /// Min-heap of (due, internal id) redispatches.
+    retry: Mutex<BinaryHeap<Reverse<(Instant, u64)>>>,
+    retry_cv: Condvar,
+    backoff_rng: Mutex<SplitMix64>,
+    stop: AtomicBool,
+    /// Set after worker threads join: tells the client loop to fail
+    /// leftovers, flush, and exit.
+    teardown: AtomicBool,
+    stop_mu: Mutex<bool>,
+    stop_cv: Condvar,
+    requests: AtomicU64,
+    served: AtomicU64,
+    busy: AtomicU64,
+    failed: AtomicU64,
+    retries: AtomicU64,
+}
+
+impl RouterShared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    fn trigger_stop(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for b in &self.backends {
+            b.waker.wake();
+        }
+        self.client_waker.wake();
+        self.retry_cv.notify_all();
+        let mut stopped = self.stop_mu.lock().unwrap();
+        *stopped = true;
+        self.stop_cv.notify_all();
+    }
+
+    /// Queue a frame for a client connection and nudge the client
+    /// loop.
+    fn reply(&self, conn: u64, frame: Vec<u8>) {
+        self.mailbox.lock().unwrap().push_back((conn, frame));
+        self.client_waker.wake();
+    }
+
+    fn reply_error(&self, p: &Pending, code: ErrorCode, detail: &str) {
+        let f = WireResponse {
+            id: p.client_id,
+            body: ResponseBody::Error {
+                code,
+                detail: detail.to_string(),
+            },
+        }
+        .encode(p.version);
+        self.reply(p.conn, f);
+    }
+}
+
+// ---------------------------------------------------- placement core
+
+/// Place one pending request on a backend, or schedule a retry /
+/// reject it. Called from the client loop (fresh requests), the
+/// retry thread (redispatches) and backend threads (failover).
+fn dispatch(shared: &Arc<RouterShared>, internal: u64) {
+    let model = {
+        let pending = shared.pending.lock().unwrap();
+        match pending.get(&internal) {
+            Some(p) => p.model.clone(),
+            // Already answered (client gone, overflowed, …).
+            None => return,
+        }
+    };
+    let views: Vec<BackendView> = shared
+        .backends
+        .iter()
+        .map(|b| BackendView {
+            live: b.live.load(Ordering::SeqCst),
+            models: b
+                .loads
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|m| (m.name.clone(), m.cost_depth))
+                .collect(),
+            inflight_cost: b.inflight_cost.load(Ordering::SeqCst),
+        })
+        .collect();
+    match pick_backend(&views, &model) {
+        Some(bi) => {
+            let mut pending = shared.pending.lock().unwrap();
+            let Some(p) = pending.get_mut(&internal) else {
+                return;
+            };
+            p.backend = bi;
+            let cost = p.cost;
+            let enc = WireRequest {
+                id: internal,
+                body: p.body.clone(),
+            }
+            .encode();
+            match enc {
+                Ok(frame) => {
+                    drop(pending);
+                    let b = &shared.backends[bi];
+                    b.inflight_cost.fetch_add(cost, Ordering::SeqCst);
+                    b.counters.dispatched.fetch_add(1, Ordering::SeqCst);
+                    b.outq.lock().unwrap().push_back(frame);
+                    b.waker.wake();
+                }
+                Err(e) => {
+                    let p = pending.remove(&internal).unwrap();
+                    drop(pending);
+                    shared.failed.fetch_add(1, Ordering::SeqCst);
+                    shared.reply_error(
+                        &p,
+                        ErrorCode::BadRequest,
+                        &format!("unroutable request: {e}"),
+                    );
+                }
+            }
+        }
+        None => {
+            // Distinguish "model unknown everywhere" (reject now)
+            // from "no live backend right now" (retry) — but only
+            // once at least one load report exists, else we would
+            // reject everything in the startup gap.
+            let loads_known =
+                views.iter().any(|v| !v.models.is_empty());
+            if loads_known && !mounted_anywhere(&views, &model) {
+                let removed =
+                    shared.pending.lock().unwrap().remove(&internal);
+                if let Some(p) = removed {
+                    shared.failed.fetch_add(1, Ordering::SeqCst);
+                    shared.reply_error(
+                        &p,
+                        ErrorCode::BadRequest,
+                        &format!(
+                            "unknown model '{}' (no backend mounts \
+                             it)",
+                            p.model
+                        ),
+                    );
+                }
+                return;
+            }
+            schedule_retry(shared, internal, "no live backend");
+        }
+    }
+}
+
+/// Book a redispatch after a capped jittered backoff, or fail the
+/// request once it is out of attempts.
+fn schedule_retry(shared: &Arc<RouterShared>, internal: u64,
+                  why: &str) {
+    let attempts;
+    {
+        let mut pending = shared.pending.lock().unwrap();
+        let Some(p) = pending.get_mut(&internal) else {
+            return;
+        };
+        p.attempts += 1;
+        p.backend = UNASSIGNED;
+        attempts = p.attempts;
+        if attempts > shared.retry_max {
+            let p = pending.remove(&internal).unwrap();
+            drop(pending);
+            shared.failed.fetch_add(1, Ordering::SeqCst);
+            shared.reply_error(
+                &p,
+                ErrorCode::Internal,
+                &format!(
+                    "request failed after {attempts} attempts: {why}"
+                ),
+            );
+            return;
+        }
+    }
+    let delay = busy_backoff(
+        &mut shared.backoff_rng.lock().unwrap(),
+        attempts,
+    );
+    shared.retries.fetch_add(1, Ordering::SeqCst);
+    shared
+        .retry
+        .lock()
+        .unwrap()
+        .push(Reverse((Instant::now() + delay, internal)));
+    shared.retry_cv.notify_all();
+}
+
+/// Pops due redispatches off the backoff heap.
+fn retry_loop(shared: Arc<RouterShared>) {
+    loop {
+        let due_id = {
+            let mut heap = shared.retry.lock().unwrap();
+            loop {
+                if shared.stopping() {
+                    return;
+                }
+                let now = Instant::now();
+                let head = heap.peek().map(|r| {
+                    let Reverse((t, id)) = *r;
+                    (t, id)
+                });
+                match head {
+                    None => {
+                        let (h, _) = shared
+                            .retry_cv
+                            .wait_timeout(
+                                heap,
+                                Duration::from_millis(200),
+                            )
+                            .unwrap();
+                        heap = h;
+                    }
+                    Some((due, _)) if due > now => {
+                        let (h, _) = shared
+                            .retry_cv
+                            .wait_timeout(heap, due - now)
+                            .unwrap();
+                        heap = h;
+                    }
+                    Some((_, id)) => {
+                        heap.pop();
+                        break id;
+                    }
+                }
+            }
+        };
+        dispatch(&shared, due_id);
+    }
+}
+
+// -------------------------------------------------- health/failover
+
+/// One strike against a backend; ejects (and fails over) on the
+/// threshold strike.
+fn note_failure(shared: &Arc<RouterShared>, bi: usize, why: &str) {
+    let b = &shared.backends[bi];
+    b.counters.heartbeat_failures.fetch_add(1, Ordering::SeqCst);
+    let tr = b.health.lock().unwrap().on_failure(&shared.policy);
+    if tr == Some(Transition::Ejected) {
+        b.live.store(false, Ordering::SeqCst);
+        b.counters.ejections.fetch_add(1, Ordering::SeqCst);
+        failover_inflight(shared, bi, why);
+    }
+}
+
+/// Move every request assigned to backend `bi` back to the retry
+/// path under a *fresh* internal id, so a late response from the old
+/// backend can never produce a duplicate client response.
+fn failover_inflight(shared: &Arc<RouterShared>, bi: usize,
+                     why: &str) {
+    let b = &shared.backends[bi];
+    b.outq.lock().unwrap().clear();
+    b.inflight_cost.store(0, Ordering::SeqCst);
+    let moved: Vec<u64> = {
+        let mut pending = shared.pending.lock().unwrap();
+        let ids: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.backend == bi)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut new_ids = Vec::with_capacity(ids.len());
+        for id in ids {
+            let mut p = pending.remove(&id).unwrap();
+            p.backend = UNASSIGNED;
+            let nid = shared.next_id.fetch_add(1, Ordering::SeqCst);
+            pending.insert(nid, p);
+            new_ids.push(nid);
+        }
+        new_ids
+    };
+    if moved.is_empty() {
+        return;
+    }
+    b.counters
+        .failovers
+        .fetch_add(moved.len() as u64, Ordering::SeqCst);
+    for nid in moved {
+        schedule_retry(shared, nid, why);
+    }
+}
+
+/// Probe an ejected backend each period until it earns readmission.
+fn probe_until_readmitted(shared: &Arc<RouterShared>, bi: usize) {
+    let period = shared.policy.heartbeat_every;
+    let read_timeout = period.max(Duration::from_millis(50));
+    let b = &shared.backends[bi];
+    while !shared.stopping() {
+        sleep_interruptible(shared, period);
+        if shared.stopping() {
+            return;
+        }
+        let started = Instant::now();
+        match probe_once(&b.addr, shared.connect_timeout, read_timeout)
+        {
+            Ok(models) => {
+                b.counters.last_heartbeat_us.store(
+                    started.elapsed().as_micros() as u64,
+                    Ordering::SeqCst,
+                );
+                b.counters
+                    .heartbeats_ok
+                    .fetch_add(1, Ordering::SeqCst);
+                *b.loads.lock().unwrap() = models;
+                let tr =
+                    b.health.lock().unwrap().on_success(&shared.policy);
+                if tr == Some(Transition::Readmitted) {
+                    b.live.store(true, Ordering::SeqCst);
+                    b.counters
+                        .readmissions
+                        .fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+            }
+            Err(_) => {
+                b.counters
+                    .heartbeat_failures
+                    .fetch_add(1, Ordering::SeqCst);
+                let _ =
+                    b.health.lock().unwrap().on_failure(&shared.policy);
+            }
+        }
+    }
+}
+
+/// One fresh-connection heartbeat probe (used for readmission checks
+/// and the startup load seed).
+fn probe_once(addr: &str, connect_timeout: Duration,
+              read_timeout: Duration) -> Result<Vec<ModelLoad>> {
+    let mut c = Client::connect_timeout(addr, connect_timeout)?;
+    c.set_read_timeout(Some(read_timeout))?;
+    c.heartbeat()
+}
+
+fn sleep_interruptible(shared: &RouterShared, d: Duration) {
+    let deadline = Instant::now() + d;
+    while !shared.stopping() {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return;
+        }
+        thread::sleep(left.min(Duration::from_millis(20)));
+    }
+}
+
+// ------------------------------------------------- backend IO thread
+
+fn connect_upstream(addr: &str, timeout: Duration)
+                    -> io::Result<TcpStream> {
+    let mut last: Option<io::Error> = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                s.set_nonblocking(true)?;
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::AddrNotAvailable,
+            "address resolved to no candidates",
+        )
+    }))
+}
+
+/// Drain the backend's outq into the socket (partial-write aware).
+fn write_outq(b: &BackendShared, mut s: &TcpStream,
+              wr: &mut Option<(Vec<u8>, usize)>) -> io::Result<()> {
+    loop {
+        if wr.is_none() {
+            match b.outq.lock().unwrap().pop_front() {
+                Some(f) => *wr = Some((f, 0)),
+                None => return Ok(()),
+            }
+        }
+        let done = {
+            let (buf, pos) = wr.as_mut().unwrap();
+            match s.write(&buf[*pos..]) {
+                Ok(0) => {
+                    return Err(io::ErrorKind::WriteZero.into())
+                }
+                Ok(n) => {
+                    *pos += n;
+                    *pos == buf.len()
+                }
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock =>
+                {
+                    return Ok(())
+                }
+                Err(e)
+                    if e.kind() == io::ErrorKind::Interrupted =>
+                {
+                    false
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        if done {
+            *wr = None;
+        }
+    }
+}
+
+/// Read and route whatever the backend has sent. `Err` means the
+/// connection is broken (EOF, IO damage, or framing damage).
+fn read_upstream(shared: &Arc<RouterShared>, bi: usize,
+                 mut s: &TcpStream, recv: &mut RecvBuf,
+                 hb: &mut Option<(u64, Instant)>) -> io::Result<()> {
+    match recv.fill_from(&mut s) {
+        Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+        Ok(_) => {}
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+            return Ok(())
+        }
+        Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+            return Ok(())
+        }
+        Err(e) => return Err(e),
+    }
+    loop {
+        match parse_frame(recv.data(), KIND_RESPONSE) {
+            Ok(Some((ver, total))) => {
+                let body = recv.data()[HEADER_LEN..total].to_vec();
+                recv.consume(total);
+                handle_upstream_frame(shared, bi, ver, &body, hb);
+            }
+            Ok(None) => return Ok(()),
+            Err(_) => {
+                return Err(io::ErrorKind::InvalidData.into())
+            }
+        }
+    }
+}
+
+fn handle_upstream_frame(shared: &Arc<RouterShared>, bi: usize,
+                         ver: u8, body: &[u8],
+                         hb: &mut Option<(u64, Instant)>) {
+    let resp = match WireResponse::decode_body(ver, body) {
+        Ok(r) => r,
+        // Undecodable body in a well-framed response: drop the one
+        // frame, keep the stream.
+        Err(_) => return,
+    };
+    if let Some((hb_id, sent)) = *hb {
+        if resp.id == hb_id {
+            *hb = None;
+            let b = &shared.backends[bi];
+            match resp.body {
+                ResponseBody::Heartbeat { models } => {
+                    b.counters.last_heartbeat_us.store(
+                        sent.elapsed().as_micros() as u64,
+                        Ordering::SeqCst,
+                    );
+                    b.counters
+                        .heartbeats_ok
+                        .fetch_add(1, Ordering::SeqCst);
+                    *b.loads.lock().unwrap() = models;
+                    // Any success clears the strike count.
+                    let _ = b
+                        .health
+                        .lock()
+                        .unwrap()
+                        .on_success(&shared.policy);
+                }
+                // A v1 backend answers BAD_REQUEST: it cannot report
+                // load and counts as unhealthy for cluster duty.
+                _ => note_failure(
+                    shared,
+                    bi,
+                    "heartbeat rejected by backend",
+                ),
+            }
+            return;
+        }
+    }
+    route_response(shared, bi, resp);
+}
+
+/// Hand a backend response back to the owning client connection.
+fn route_response(shared: &Arc<RouterShared>, bi: usize,
+                  resp: WireResponse) {
+    let p = match shared.pending.lock().unwrap().remove(&resp.id) {
+        Some(p) => p,
+        // Stale: the request failed over (new id) or the client
+        // vanished. The retry path owns it now; drop this copy.
+        None => return,
+    };
+    if p.backend == bi {
+        let b = &shared.backends[bi];
+        let _ = b.inflight_cost.fetch_update(
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+            |v| Some(v.saturating_sub(p.cost)),
+        );
+    }
+    match &resp.body {
+        ResponseBody::Error { code: ErrorCode::Busy, .. } => {
+            shared.busy.fetch_add(1, Ordering::SeqCst);
+        }
+        ResponseBody::Error { .. } => {
+            shared.failed.fetch_add(1, Ordering::SeqCst);
+        }
+        _ => {
+            shared.served.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+    let f = WireResponse { id: p.client_id, body: resp.body }
+        .encode(p.version);
+    shared.reply(p.conn, f);
+}
+
+fn backend_loop(shared: Arc<RouterShared>, bi: usize) {
+    let period = shared.policy.heartbeat_every;
+    let b = &shared.backends[bi];
+    let mut conn: Option<TcpStream> = None;
+    let mut recv = RecvBuf::new();
+    let mut wr: Option<(Vec<u8>, usize)> = None;
+    let mut hb_inflight: Option<(u64, Instant)> = None;
+    let mut next_hb = Instant::now();
+    while !shared.stopping() {
+        if !b.live.load(Ordering::SeqCst) {
+            // Ejected: forget all connection state (any response
+            // still in flight is orphaned — failover already
+            // re-issued those requests) and probe until readmitted.
+            if let Some(s) = conn.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            wr = None;
+            hb_inflight = None;
+            recv = RecvBuf::new();
+            b.outq.lock().unwrap().clear();
+            b.inflight_cost.store(0, Ordering::SeqCst);
+            probe_until_readmitted(&shared, bi);
+            next_hb = Instant::now() + period;
+            continue;
+        }
+        if conn.is_none() {
+            match connect_upstream(&b.addr, shared.connect_timeout) {
+                Ok(s) => {
+                    conn = Some(s);
+                    recv = RecvBuf::new();
+                    wr = None;
+                    hb_inflight = None;
+                    // Heartbeat immediately on a fresh connection.
+                    next_hb = Instant::now();
+                }
+                Err(_) => {
+                    note_failure(&shared, bi, "connect failed");
+                    sleep_interruptible(&shared, period);
+                    continue;
+                }
+            }
+        }
+        let now = Instant::now();
+        if now >= next_hb {
+            if hb_inflight.is_some() {
+                // Previous heartbeat went a full period unanswered.
+                hb_inflight = None;
+                note_failure(&shared, bi, "heartbeat timed out");
+                next_hb = now + period;
+                if !b.live.load(Ordering::SeqCst) {
+                    continue;
+                }
+            } else {
+                let hb_id =
+                    shared.next_id.fetch_add(1, Ordering::SeqCst);
+                if let Ok(f) = (WireRequest {
+                    id: hb_id,
+                    body: RequestBody::Heartbeat,
+                })
+                .encode()
+                {
+                    b.outq.lock().unwrap().push_back(f);
+                    hb_inflight = Some((hb_id, now));
+                }
+                next_hb = now + period;
+            }
+        }
+        let Some(s) = conn.as_ref() else {
+            continue;
+        };
+        let want_write =
+            wr.is_some() || !b.outq.lock().unwrap().is_empty();
+        let mut ev = POLLIN;
+        if want_write {
+            ev |= POLLOUT;
+        }
+        let mut fds = [
+            PollFd::new(fd_of(s), ev),
+            PollFd::new(b.waker.fd(), POLLIN),
+        ];
+        let timeout = next_hb
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(1));
+        let _ = poll(&mut fds, Some(timeout));
+        b.waker.drain();
+        let mut broken = write_outq(b, s, &mut wr).is_err();
+        if !broken && fds[0].readable() {
+            broken = read_upstream(
+                &shared,
+                bi,
+                s,
+                &mut recv,
+                &mut hb_inflight,
+            )
+            .is_err();
+        }
+        if broken {
+            if let Some(s) = conn.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            wr = None;
+            hb_inflight = None;
+            recv = RecvBuf::new();
+            // Responses for anything in flight on this connection
+            // can never arrive now — re-issue immediately, and let
+            // the strike counter decide about ejection.
+            failover_inflight(&shared, bi, "upstream connection lost");
+            note_failure(&shared, bi, "upstream connection lost");
+        }
+    }
+    if let Some(s) = conn {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+// ------------------------------------------------- client-side loop
+
+struct CConn {
+    stream: TcpStream,
+    recv: RecvBuf,
+    out: VecDeque<Vec<u8>>,
+    out_bytes: usize,
+    /// Bytes of `out.front()` already written.
+    front_pos: usize,
+    /// Last version seen from this client (errors pre-decode use it).
+    ver: u8,
+    /// Stop reading; close once the write backlog drains.
+    closing: bool,
+    dead: bool,
+}
+
+fn err_frame(ver: u8, id: u64, code: ErrorCode, detail: &str)
+             -> Vec<u8> {
+    WireResponse {
+        id,
+        body: ResponseBody::Error {
+            code,
+            detail: detail.to_string(),
+        },
+    }
+    .encode(ver)
+}
+
+fn push_frame_c(c: &mut CConn, f: Vec<u8>) {
+    if c.out_bytes + f.len() > WRITE_BUF_CAP {
+        c.dead = true;
+        return;
+    }
+    c.out_bytes += f.len();
+    c.out.push_back(f);
+    // Opportunistic flush so small replies don't wait a poll cycle.
+    flush_conn(c);
+}
+
+fn flush_conn(c: &mut CConn) {
+    loop {
+        let Some(front) = c.out.front() else { return };
+        let res = (&c.stream).write(&front[c.front_pos..]);
+        let flen = front.len();
+        match res {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                c.front_pos += n;
+                c.out_bytes -= n;
+                if c.front_pos == flen {
+                    c.out.pop_front();
+                    c.front_pos = 0;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+fn read_client(shared: &Arc<RouterShared>, cid: u64, c: &mut CConn) {
+    {
+        let mut r = &c.stream;
+        match c.recv.fill_from(&mut r) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(_) => {}
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    loop {
+        match parse_frame(c.recv.data(), KIND_REQUEST) {
+            Ok(Some((ver, total))) => {
+                let body = c.recv.data()[HEADER_LEN..total].to_vec();
+                c.recv.consume(total);
+                c.ver = ver;
+                on_client_request(shared, cid, c, ver, &body);
+                if c.dead || c.closing {
+                    return;
+                }
+            }
+            Ok(None) => return,
+            Err(e) => {
+                // Framing damage: one typed error, then drop once
+                // the backlog drains.
+                let f = err_frame(
+                    c.ver,
+                    CONN_ERR_ID,
+                    ErrorCode::BadRequest,
+                    &format!("bad frame: {e}"),
+                );
+                push_frame_c(c, f);
+                c.closing = true;
+                return;
+            }
+        }
+    }
+}
+
+fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
+                     c: &mut CConn, ver: u8, body: &[u8]) {
+    let req = match WireRequest::decode_body(ver, body) {
+        Ok(r) => r,
+        Err(e) => {
+            let f = err_frame(
+                ver,
+                CONN_ERR_ID,
+                ErrorCode::BadRequest,
+                &format!("undecodable request: {e}"),
+            );
+            push_frame_c(c, f);
+            return;
+        }
+    };
+    if req.id == CONN_ERR_ID {
+        let f = err_frame(
+            ver,
+            CONN_ERR_ID,
+            ErrorCode::BadRequest,
+            "request id reserved for connection errors",
+        );
+        push_frame_c(c, f);
+        return;
+    }
+    match req.body {
+        // Answered by the router itself: the aggregated cluster
+        // picture, not any single backend's.
+        RequestBody::Metrics => {
+            let text =
+                render_cluster_metrics(&snapshot_report(shared));
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::Metrics { text },
+            }
+            .encode(ver);
+            push_frame_c(c, f);
+        }
+        RequestBody::Heartbeat => {
+            let models = aggregate_loads(shared);
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::Heartbeat { models },
+            }
+            .encode(ver);
+            push_frame_c(c, f);
+        }
+        // Stops the router only; backends have their own lifecycle.
+        RequestBody::Shutdown => {
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::ShutdownAck,
+            }
+            .encode(ver);
+            push_frame_c(c, f);
+            shared.trigger_stop();
+        }
+        body @ (RequestBody::Infer { .. }
+        | RequestBody::Info { .. }) => {
+            if shared.stopping() {
+                let f = err_frame(
+                    ver,
+                    req.id,
+                    ErrorCode::ShuttingDown,
+                    "router shutting down",
+                );
+                push_frame_c(c, f);
+                return;
+            }
+            shared.requests.fetch_add(1, Ordering::SeqCst);
+            let (model, cost) = match &body {
+                RequestBody::Infer { model, .. } => {
+                    (model.clone(), NOMINAL_FRAME_COST)
+                }
+                RequestBody::Info { model } => (model.clone(), 0),
+                _ => unreachable!(),
+            };
+            let internal =
+                shared.next_id.fetch_add(1, Ordering::SeqCst);
+            shared.pending.lock().unwrap().insert(
+                internal,
+                Pending {
+                    conn: cid,
+                    client_id: req.id,
+                    version: ver,
+                    body,
+                    model,
+                    attempts: 0,
+                    backend: UNASSIGNED,
+                    cost,
+                },
+            );
+            dispatch(shared, internal);
+        }
+    }
+}
+
+/// Forget a vanished client's pending requests (their responses have
+/// nowhere to go; in-flight cost is un-charged). Not counted as
+/// failures — the router did not fail them, the client left.
+fn purge_conn(shared: &Arc<RouterShared>, cid: u64) {
+    let removed: Vec<Pending> = {
+        let mut pending = shared.pending.lock().unwrap();
+        let ids: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.conn == cid)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.into_iter()
+            .map(|id| pending.remove(&id).unwrap())
+            .collect()
+    };
+    for p in removed {
+        if p.backend != UNASSIGNED {
+            if let Some(b) = shared.backends.get(p.backend) {
+                let _ = b.inflight_cost.fetch_update(
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                    |v| Some(v.saturating_sub(p.cost)),
+                );
+            }
+        }
+    }
+}
+
+/// Over-cap / shutdown shedding: one blocking best-effort error
+/// frame, then close.
+fn shed(s: TcpStream, stopping: bool) {
+    let _ = s.set_nonblocking(false);
+    let _ = s.set_write_timeout(Some(Duration::from_millis(200)));
+    let (code, detail) = if stopping {
+        (ErrorCode::ShuttingDown, "router shutting down")
+    } else {
+        (ErrorCode::Busy, "router connection cap reached")
+    };
+    let f = err_frame(V1, CONN_ERR_ID, code, detail);
+    let mut s = s;
+    let _ = s.write_all(&f);
+    let _ = s.shutdown(Shutdown::Both);
+}
+
+fn final_flush(mut c: CConn) {
+    let _ = c.stream.set_nonblocking(false);
+    let _ = c
+        .stream
+        .set_write_timeout(Some(Duration::from_millis(500)));
+    let mut first = true;
+    while let Some(front) = c.out.pop_front() {
+        let start = if first { c.front_pos } else { 0 };
+        first = false;
+        if c.stream.write_all(&front[start..]).is_err() {
+            break;
+        }
+    }
+    let _ = c.stream.shutdown(Shutdown::Both);
+}
+
+fn client_loop(shared: Arc<RouterShared>, listener: TcpListener,
+               max_conns: usize) {
+    let _ = listener.set_nonblocking(true);
+    let mut conns: HashMap<u64, CConn> = HashMap::new();
+    let mut next_conn: u64 = 1;
+    loop {
+        // Deliver queued responses to their connections.
+        {
+            let mut mail = shared.mailbox.lock().unwrap();
+            while let Some((cid, f)) = mail.pop_front() {
+                if let Some(c) = conns.get_mut(&cid) {
+                    push_frame_c(c, f);
+                }
+            }
+        }
+        if shared.teardown.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut fds = Vec::with_capacity(conns.len() + 2);
+        fds.push(PollFd::new(shared.client_waker.fd(), POLLIN));
+        fds.push(PollFd::new(fd_of(&listener), POLLIN));
+        let mut order: Vec<u64> = Vec::with_capacity(conns.len());
+        for (&cid, c) in &conns {
+            let mut ev = 0i16;
+            if !c.closing && !c.dead {
+                ev |= POLLIN;
+            }
+            if c.out_bytes > 0 {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(fd_of(&c.stream), ev));
+            order.push(cid);
+        }
+        let _ =
+            poll(&mut fds, Some(Duration::from_millis(100)));
+        shared.client_waker.drain();
+        if fds[1].readable() {
+            loop {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        if shared.stopping() {
+                            shed(s, true);
+                        } else if conns.len() >= max_conns {
+                            shed(s, false);
+                        } else {
+                            let _ = s.set_nodelay(true);
+                            let _ = s.set_nonblocking(true);
+                            conns.insert(
+                                next_conn,
+                                CConn {
+                                    stream: s,
+                                    recv: RecvBuf::new(),
+                                    out: VecDeque::new(),
+                                    out_bytes: 0,
+                                    front_pos: 0,
+                                    ver: V2,
+                                    closing: false,
+                                    dead: false,
+                                },
+                            );
+                            next_conn += 1;
+                        }
+                    }
+                    Err(e)
+                        if e.kind()
+                            == io::ErrorKind::WouldBlock =>
+                    {
+                        break
+                    }
+                    Err(e)
+                        if e.kind()
+                            == io::ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+        }
+        for (i, cid) in order.iter().enumerate() {
+            let fd = &fds[i + 2];
+            let Some(c) = conns.get_mut(cid) else { continue };
+            if fd.writable() {
+                flush_conn(c);
+            }
+            if !c.dead && !c.closing && fd.readable() {
+                read_client(&shared, *cid, c);
+            }
+        }
+        let gone: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| {
+                c.dead || (c.closing && c.out_bytes == 0)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for cid in gone {
+            if let Some(c) = conns.remove(&cid) {
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+            purge_conn(&shared, cid);
+        }
+    }
+    // Teardown: every request still pending gets an explicit
+    // SHUTTING_DOWN error, then backlogs flush blockingly.
+    let leftovers: Vec<(u64, Vec<u8>)> = {
+        let mut pending = shared.pending.lock().unwrap();
+        pending
+            .drain()
+            .map(|(_, p)| {
+                (
+                    p.conn,
+                    WireResponse {
+                        id: p.client_id,
+                        body: ResponseBody::Error {
+                            code: ErrorCode::ShuttingDown,
+                            detail: "router shutting down".into(),
+                        },
+                    }
+                    .encode(p.version),
+                )
+            })
+            .collect()
+    };
+    for (cid, f) in leftovers {
+        shared.failed.fetch_add(1, Ordering::SeqCst);
+        if let Some(c) = conns.get_mut(&cid) {
+            c.out_bytes += f.len();
+            c.out.push_back(f);
+        }
+    }
+    {
+        let mut mail = shared.mailbox.lock().unwrap();
+        while let Some((cid, f)) = mail.pop_front() {
+            if let Some(c) = conns.get_mut(&cid) {
+                c.out_bytes += f.len();
+                c.out.push_back(f);
+            }
+        }
+    }
+    for (_cid, c) in conns {
+        final_flush(c);
+    }
+}
+
+// ------------------------------------------------ reports & metrics
+
+/// One backend's externally visible state.
+#[derive(Debug, Clone)]
+pub struct BackendSnapshot {
+    pub addr: String,
+    pub live: bool,
+    pub ejections: u64,
+    pub readmissions: u64,
+    pub failovers: u64,
+    pub heartbeats_ok: u64,
+    pub heartbeat_failures: u64,
+    pub dispatched: u64,
+    /// Latency of the most recent successful heartbeat/probe.
+    pub last_heartbeat_us: u64,
+    pub inflight_cost: u64,
+    pub models: Vec<ModelLoad>,
+}
+
+/// Router-wide counters plus per-backend snapshots.
+#[derive(Debug, Clone)]
+pub struct RouterReport {
+    /// Infer/Info requests admitted (Metrics/Heartbeat/Shutdown are
+    /// answered locally and not counted).
+    pub requests: u64,
+    pub served: u64,
+    pub busy: u64,
+    pub failed: u64,
+    /// Redispatches booked (failover and no-live-backend retries).
+    pub retries: u64,
+    pub backends: Vec<BackendSnapshot>,
+}
+
+fn snapshot_report(shared: &RouterShared) -> RouterReport {
+    RouterReport {
+        requests: shared.requests.load(Ordering::SeqCst),
+        served: shared.served.load(Ordering::SeqCst),
+        busy: shared.busy.load(Ordering::SeqCst),
+        failed: shared.failed.load(Ordering::SeqCst),
+        retries: shared.retries.load(Ordering::SeqCst),
+        backends: shared
+            .backends
+            .iter()
+            .map(|b| BackendSnapshot {
+                addr: b.addr.clone(),
+                live: b.live.load(Ordering::SeqCst),
+                ejections: b.counters.ejections.load(Ordering::SeqCst),
+                readmissions: b
+                    .counters
+                    .readmissions
+                    .load(Ordering::SeqCst),
+                failovers: b.counters.failovers.load(Ordering::SeqCst),
+                heartbeats_ok: b
+                    .counters
+                    .heartbeats_ok
+                    .load(Ordering::SeqCst),
+                heartbeat_failures: b
+                    .counters
+                    .heartbeat_failures
+                    .load(Ordering::SeqCst),
+                dispatched: b
+                    .counters
+                    .dispatched
+                    .load(Ordering::SeqCst),
+                last_heartbeat_us: b
+                    .counters
+                    .last_heartbeat_us
+                    .load(Ordering::SeqCst),
+                inflight_cost: b.inflight_cost.load(Ordering::SeqCst),
+                models: b.loads.lock().unwrap().clone(),
+            })
+            .collect(),
+    }
+}
+
+/// Cluster-wide load picture a client `Heartbeat` gets back: per
+/// model, summed over *live* backends.
+fn aggregate_loads(shared: &RouterShared) -> Vec<ModelLoad> {
+    let mut agg: BTreeMap<String, ModelLoad> = BTreeMap::new();
+    for b in &shared.backends {
+        if !b.live.load(Ordering::SeqCst) {
+            continue;
+        }
+        for m in b.loads.lock().unwrap().iter() {
+            let e = agg.entry(m.name.clone()).or_insert_with(|| {
+                ModelLoad {
+                    name: m.name.clone(),
+                    cost_depth: 0,
+                    cost_capacity: 0,
+                    depth: 0,
+                    capacity: 0,
+                }
+            });
+            e.cost_depth = e.cost_depth.saturating_add(m.cost_depth);
+            e.cost_capacity =
+                e.cost_capacity.saturating_add(m.cost_capacity);
+            e.depth = e.depth.saturating_add(m.depth);
+            e.capacity = e.capacity.saturating_add(m.capacity);
+        }
+    }
+    agg.into_values().collect()
+}
+
+/// Prometheus-style plaintext exposition of a [`RouterReport`] —
+/// per-backend series labelled `{backend="host:port"}`, cluster
+/// totals, and per-model rollups over live backends. Same format as
+/// the gateway's `/metrics` equivalent (the `Metrics` request).
+pub fn render_cluster_metrics(r: &RouterReport) -> String {
+    use std::fmt::Write as _;
+    fn series(out: &mut String, name: &str, kind: &str,
+              backends: &[BackendSnapshot],
+              f: &dyn Fn(&BackendSnapshot) -> f64) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        for b in backends {
+            let _ = writeln!(
+                out,
+                "{name}{{backend=\"{}\"}} {}",
+                b.addr,
+                f(b)
+            );
+        }
+    }
+    let mut out = String::with_capacity(4096);
+    series(&mut out, "skydiver_backend_state", "gauge", &r.backends,
+           &|b| if b.live { 1.0 } else { 0.0 });
+    series(&mut out, "skydiver_backend_ejections_total", "counter",
+           &r.backends, &|b| b.ejections as f64);
+    series(&mut out, "skydiver_backend_readmissions_total", "counter",
+           &r.backends, &|b| b.readmissions as f64);
+    series(&mut out, "skydiver_backend_failovers_total", "counter",
+           &r.backends, &|b| b.failovers as f64);
+    series(&mut out, "skydiver_backend_heartbeats_ok_total",
+           "counter", &r.backends, &|b| b.heartbeats_ok as f64);
+    series(&mut out, "skydiver_backend_heartbeat_failures_total",
+           "counter", &r.backends,
+           &|b| b.heartbeat_failures as f64);
+    series(&mut out, "skydiver_backend_heartbeat_latency_us", "gauge",
+           &r.backends, &|b| b.last_heartbeat_us as f64);
+    series(&mut out, "skydiver_backend_dispatched_total", "counter",
+           &r.backends, &|b| b.dispatched as f64);
+    series(&mut out, "skydiver_backend_inflight_cost", "gauge",
+           &r.backends, &|b| b.inflight_cost as f64);
+    let live = r.backends.iter().filter(|b| b.live).count();
+    let _ = writeln!(out, "# TYPE skydiver_cluster_backends_live \
+                           gauge");
+    let _ = writeln!(out, "skydiver_cluster_backends_live {live}");
+    for (name, v) in [
+        ("skydiver_cluster_requests_total", r.requests),
+        ("skydiver_cluster_served_total", r.served),
+        ("skydiver_cluster_busy_total", r.busy),
+        ("skydiver_cluster_failed_total", r.failed),
+        ("skydiver_cluster_retries_total", r.retries),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let mut agg: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
+    for b in r.backends.iter().filter(|b| b.live) {
+        for m in &b.models {
+            let e = agg.entry(m.name.as_str()).or_insert((0, 0));
+            e.0 = e.0.saturating_add(m.cost_depth);
+            e.1 = e.1.saturating_add(m.depth as u64);
+        }
+    }
+    let _ = writeln!(out, "# TYPE skydiver_cluster_model_cost_depth \
+                           gauge");
+    for (name, (cd, _)) in &agg {
+        let _ = writeln!(
+            out,
+            "skydiver_cluster_model_cost_depth{{model=\"{name}\"}} \
+             {cd}"
+        );
+    }
+    let _ = writeln!(out, "# TYPE skydiver_cluster_model_queue_depth \
+                           gauge");
+    for (name, (_, d)) in &agg {
+        let _ = writeln!(
+            out,
+            "skydiver_cluster_model_queue_depth{{model=\"{name}\"}} \
+             {d}"
+        );
+    }
+    out
+}
+
+// ------------------------------------------------------- public API
+
+/// A running router. Threads: one client reactor, one IO thread per
+/// backend, one retry timer.
+pub struct Router {
+    shared: Arc<RouterShared>,
+    local_addr: SocketAddr,
+    client: Option<thread::JoinHandle<()>>,
+    backends: Vec<thread::JoinHandle<()>>,
+    retry: Option<thread::JoinHandle<()>>,
+}
+
+/// Clonable handle that can stop the router from another thread.
+pub struct RouterStop {
+    shared: Arc<RouterShared>,
+}
+
+impl RouterStop {
+    pub fn trigger(&self) {
+        self.shared.trigger_stop();
+    }
+}
+
+impl Clone for RouterStop {
+    fn clone(&self) -> Self {
+        Self { shared: self.shared.clone() }
+    }
+}
+
+impl Router {
+    pub fn start(cfg: RouterConfig) -> Result<Self> {
+        ensure!(
+            !cfg.backends.is_empty(),
+            "router needs at least one backend address"
+        );
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding router to {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let _ = raise_nofile_limit(
+            (cfg.max_conns as u64 + cfg.backends.len() as u64 + 64)
+                .max(1024),
+        );
+        let policy = HealthPolicy {
+            heartbeat_every: cfg.heartbeat_every,
+            eject_after: cfg.eject_after,
+            readmit_after: cfg.readmit_after,
+        };
+        let mut backends = Vec::with_capacity(cfg.backends.len());
+        for addr in &cfg.backends {
+            backends.push(BackendShared {
+                addr: addr.clone(),
+                live: AtomicBool::new(true),
+                health: Mutex::new(HealthState::new()),
+                loads: Mutex::new(Vec::new()),
+                inflight_cost: AtomicU64::new(0),
+                counters: BackendCounters::default(),
+                outq: Mutex::new(VecDeque::new()),
+                waker: Waker::new()
+                    .context("creating backend waker")?,
+            });
+        }
+        let shared = Arc::new(RouterShared {
+            policy,
+            retry_max: cfg.retry_max,
+            connect_timeout: cfg.connect_timeout,
+            backends,
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            mailbox: Mutex::new(VecDeque::new()),
+            client_waker: Waker::new()
+                .context("creating client waker")?,
+            retry: Mutex::new(BinaryHeap::new()),
+            retry_cv: Condvar::new(),
+            backoff_rng: Mutex::new(SplitMix64::new(cfg.seed)),
+            stop: AtomicBool::new(false),
+            teardown: AtomicBool::new(false),
+            stop_mu: Mutex::new(false),
+            stop_cv: Condvar::new(),
+            requests: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            busy: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+        });
+        // Best-effort synchronous load seed, so the very first
+        // requests have somewhere to go instead of waiting out a
+        // heartbeat period. A backend that isn't up yet stays
+        // unreported (and unplaceable) until its first heartbeat.
+        for b in &shared.backends {
+            if let Ok(models) = probe_once(
+                &b.addr,
+                cfg.connect_timeout,
+                cfg.heartbeat_every.max(Duration::from_millis(50)),
+            ) {
+                *b.loads.lock().unwrap() = models;
+            }
+        }
+        let client = {
+            let sh = shared.clone();
+            let max_conns = cfg.max_conns;
+            thread::Builder::new()
+                .name("router-client".into())
+                .spawn(move || client_loop(sh, listener, max_conns))
+                .context("spawning router client thread")?
+        };
+        let mut bthreads = Vec::with_capacity(shared.backends.len());
+        for bi in 0..shared.backends.len() {
+            let sh = shared.clone();
+            bthreads.push(
+                thread::Builder::new()
+                    .name(format!("router-backend-{bi}"))
+                    .spawn(move || backend_loop(sh, bi))
+                    .context("spawning router backend thread")?,
+            );
+        }
+        let retry = {
+            let sh = shared.clone();
+            thread::Builder::new()
+                .name("router-retry".into())
+                .spawn(move || retry_loop(sh))
+                .context("spawning router retry thread")?
+        };
+        Ok(Self {
+            shared,
+            local_addr,
+            client: Some(client),
+            backends: bthreads,
+            retry: Some(retry),
+        })
+    }
+
+    /// The bound client-facing address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn stop_handle(&self) -> RouterStop {
+        RouterStop { shared: self.shared.clone() }
+    }
+
+    /// Point-in-time counters; safe to call while serving.
+    pub fn snapshot(&self) -> RouterReport {
+        snapshot_report(&self.shared)
+    }
+
+    /// Block until something stops the router (a wire `Shutdown`, a
+    /// [`RouterStop`], Ctrl-C handling in the CLI), then join the
+    /// threads and return the final report.
+    pub fn wait(mut self) -> Result<RouterReport> {
+        {
+            let mut stopped = self.shared.stop_mu.lock().unwrap();
+            while !*stopped {
+                stopped = self.shared.stop_cv.wait(stopped).unwrap();
+            }
+        }
+        self.join_all();
+        Ok(snapshot_report(&self.shared))
+    }
+
+    pub fn stop_and_wait(self) -> Result<RouterReport> {
+        self.shared.trigger_stop();
+        self.wait()
+    }
+
+    fn join_all(&mut self) {
+        for h in self.backends.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.retry.take() {
+            let _ = h.join();
+        }
+        // Workers are quiesced; now the client loop can fail
+        // leftovers and flush without racing new responses.
+        self.shared.teardown.store(true, Ordering::SeqCst);
+        self.shared.client_waker.wake();
+        if let Some(h) = self.client.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        if self.client.is_none()
+            && self.retry.is_none()
+            && self.backends.is_empty()
+        {
+            return;
+        }
+        self.shared.trigger_stop();
+        self.join_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RouterReport {
+        RouterReport {
+            requests: 10,
+            served: 7,
+            busy: 2,
+            failed: 1,
+            retries: 3,
+            backends: vec![
+                BackendSnapshot {
+                    addr: "127.0.0.1:7001".into(),
+                    live: true,
+                    ejections: 0,
+                    readmissions: 0,
+                    failovers: 0,
+                    heartbeats_ok: 12,
+                    heartbeat_failures: 0,
+                    dispatched: 6,
+                    last_heartbeat_us: 250,
+                    inflight_cost: 10_000,
+                    models: vec![ModelLoad {
+                        name: "cls".into(),
+                        cost_depth: 40_000,
+                        cost_capacity: u64::MAX,
+                        depth: 4,
+                        capacity: 64,
+                    }],
+                },
+                BackendSnapshot {
+                    addr: "127.0.0.1:7002".into(),
+                    live: false,
+                    ejections: 1,
+                    readmissions: 0,
+                    failovers: 5,
+                    heartbeats_ok: 3,
+                    heartbeat_failures: 4,
+                    dispatched: 5,
+                    last_heartbeat_us: 300,
+                    inflight_cost: 0,
+                    models: vec![ModelLoad {
+                        name: "cls".into(),
+                        cost_depth: 999,
+                        cost_capacity: u64::MAX,
+                        depth: 1,
+                        capacity: 64,
+                    }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn metrics_exposition_has_the_advertised_series() {
+        let text = render_cluster_metrics(&report());
+        for needle in [
+            "# TYPE skydiver_backend_state gauge",
+            "skydiver_backend_state{backend=\"127.0.0.1:7001\"} 1",
+            "skydiver_backend_state{backend=\"127.0.0.1:7002\"} 0",
+            "skydiver_backend_ejections_total{backend=\
+             \"127.0.0.1:7002\"} 1",
+            "skydiver_backend_failovers_total{backend=\
+             \"127.0.0.1:7002\"} 5",
+            "skydiver_backend_heartbeat_latency_us{backend=\
+             \"127.0.0.1:7001\"} 250",
+            "skydiver_cluster_backends_live 1",
+            "skydiver_cluster_requests_total 10",
+            "skydiver_cluster_retries_total 3",
+        ] {
+            assert!(text.contains(needle), "missing: {needle}");
+        }
+        // Model rollups only sum over live backends: the ejected
+        // backend's 999 must not leak in.
+        assert!(text.contains(
+            "skydiver_cluster_model_cost_depth{model=\"cls\"} 40000"
+        ));
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.retry_max >= 1);
+        assert!(cfg.eject_after >= 1);
+        assert!(cfg.readmit_after >= 1);
+        assert!(!cfg.heartbeat_every.is_zero());
+    }
+
+    #[test]
+    fn start_refuses_zero_backends() {
+        let cfg = RouterConfig {
+            addr: "127.0.0.1:0".into(),
+            ..RouterConfig::default()
+        };
+        assert!(Router::start(cfg).is_err());
+    }
+}

@@ -16,7 +16,9 @@
 //! ## Layer map
 //!
 //! * **L3 (this crate)** — the network [`server`] (wire protocol, TCP
-//!   gateway, client, load generator), the serving [`coordinator`], the
+//!   gateway, client, load generator), the [`cluster`] tier (front
+//!   router with health-checked backends, failover retry and a
+//!   fault-injection harness), the serving [`coordinator`], the
 //!   accelerator [`sim`], the [`schedule`] zoo, [`power`] models and the
 //!   experiment harness ([`experiments`]) that regenerates every table
 //!   and figure of the paper.
@@ -37,6 +39,7 @@
 //! cargo run --release -- experiment fig7
 //! ```
 
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

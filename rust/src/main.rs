@@ -23,6 +23,8 @@ use skydiver::data::SplitMix64;
 use skydiver::experiments::{self, ExperimentCtx};
 use skydiver::metrics::Table;
 use skydiver::power::EnergyModel;
+use skydiver::cluster::{FaultPlan, FaultProxy, Router, RouterConfig,
+                        RouterReport};
 use skydiver::server::{Client, Gateway, GatewayConfig, GatewayReport,
                        LoadGenConfig, TrafficMode};
 use skydiver::sim::ArchConfig;
@@ -42,7 +44,7 @@ COMMANDS:
              [--batch-max N] [--batch-wait-ms N] [--queue-cost-cap N]
              [--sweep-threads N]
   serve      [--addr HOST:PORT] [--max-conns N] [--port-file PATH]
-             [--reactor-shards N]
+             [--reactor-shards N] [--drain-ms N]
              [--net ... | --model NAME[=KIND] (repeatable)]
              [--plain] [--policy P] [--golden] [--workers N]
              [--dispatch queue|cost|rr] [--queue-cap N] [--batch-max N]
@@ -62,7 +64,24 @@ COMMANDS:
              cost-balanced batches + cost-denominated shedding
              (--queue-cost-cap, in cost units; default queue-cap x
              10000; 0 = uncapped). --batch-wait-ms sets the batch
-             grouping window (default 2).
+             grouping window (default 2). --drain-ms bounds the
+             shutdown drain (default 10000): requests still queued
+             when it expires fail with SHUTTING_DOWN instead of
+             wedging shutdown behind a stuck worker.
+  route      --backend HOST:PORT (repeatable) [--addr HOST:PORT]
+             [--heartbeat-ms N] [--eject-after N] [--readmit-after N]
+             [--retry-max N] [--max-conns N] [--port-file PATH]
+             cluster front router: places each request on the live
+             backend that mounts the target model with the least
+             reported queue cost (heartbeat load reports), ejects a
+             backend after N consecutive heartbeat failures, fails
+             its in-flight requests over to survivors (capped
+             jittered retry, --retry-max attempts), and readmits it
+             after N consecutive successful probes. --addr defaults
+             to 127.0.0.1:7979; stops on a wire Shutdown like serve.
+  metrics    --addr HOST:PORT
+             fetch and print Prometheus-style metrics from a gateway
+             or router
   loadgen    --addr HOST:PORT [--model NAME] [--conns N] [--frames N]
              [--window N] [--traffic mixed|skewed] [--spikes]
              [--no-retry] [--shutdown]
@@ -103,6 +122,13 @@ const FLAG_SPECS: &[(&str, bool)] = &[
     ("max-conns", true),
     ("reactor-shards", true),
     ("port-file", true),
+    ("drain-ms", true),
+    ("inject-faults", true),
+    ("backend", true),
+    ("heartbeat-ms", true),
+    ("eject-after", true),
+    ("readmit-after", true),
+    ("retry-max", true),
     ("conns", true),
     ("window", true),
     ("out", true),
@@ -271,6 +297,8 @@ fn main() -> Result<()> {
         Some("report") => report(&artifacts),
         Some("run") => run_serve(&artifacts, &args),
         Some("serve") => serve_cmd(&artifacts, &args),
+        Some("route") => route_cmd(&args),
+        Some("metrics") => metrics_cmd(&args),
         Some("loadgen") => loadgen_cmd(&args),
         Some("synth") => synth_cmd(&args),
         Some("trace") => trace(&artifacts, &args),
@@ -496,10 +524,26 @@ fn run_serve(artifacts: &Path, args: &Args) -> Result<()> {
 /// and prints the final per-model serving reports.
 fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
     let specs = model_specs(artifacts, args)?;
+    let requested_addr =
+        args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
+    // Undocumented chaos knob: interpose a deterministic
+    // fault-injection proxy (cluster::faults) between clients and
+    // the gateway. The gateway binds an ephemeral port; the proxy
+    // takes the requested address, so clients (and --port-file
+    // readers) see the faulty path.
+    let fault_plan = match args.get("inject-faults") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => None,
+    };
     let gcfg = GatewayConfig {
-        addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        addr: if fault_plan.is_some() {
+            "127.0.0.1:0".to_string()
+        } else {
+            requested_addr.clone()
+        },
         max_conns: args.get_usize("max-conns", 64)?,
-        drain_timeout: Duration::from_secs(10),
+        drain_timeout: Duration::from_millis(
+            args.get_usize("drain-ms", 10_000)? as u64),
         reactor_shards: args.get_usize("reactor-shards", 0)?,
         ..GatewayConfig::default()
     };
@@ -515,15 +559,98 @@ fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
     println!("default model: {}", registry.default_name());
     let gw = Gateway::start(gcfg, registry)?;
     let addr = gw.local_addr();
-    println!("listening on {addr} ({} reactor shard(s))",
+    let proxy = match &fault_plan {
+        Some(plan) => {
+            let p = FaultProxy::start(&requested_addr,
+                                      &addr.to_string(),
+                                      plan.clone())?;
+            println!("fault injection: {} -> {addr} ({plan:?})",
+                     p.addr());
+            Some(p)
+        }
+        None => None,
+    };
+    let public_addr = proxy.as_ref()
+        .map(|p| p.addr().to_string())
+        .unwrap_or_else(|| addr.to_string());
+    println!("listening on {public_addr} ({} reactor shard(s))",
              gw.shard_count());
+    println!("stop with: skydiver loadgen --addr {public_addr} \
+              --frames 0 --shutdown");
+    if let Some(pf) = args.get("port-file") {
+        std::fs::write(pf, &public_addr)?;
+    }
+    let report = gw.wait()?;
+    drop(proxy);
+    print_gateway_report(&report);
+    Ok(())
+}
+
+/// `skydiver route`: the cluster front router. Fans client requests
+/// out to health-checked backend gateways and blocks until a wire
+/// `Shutdown` (backends keep running — they have their own
+/// lifecycle).
+fn route_cmd(args: &Args) -> Result<()> {
+    let backends: Vec<String> = args.get_all("backend")
+        .iter().map(|s| s.to_string()).collect();
+    ensure!(!backends.is_empty(),
+            "route needs at least one --backend HOST:PORT");
+    let cfg = RouterConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7979").to_string(),
+        backends,
+        heartbeat_every: Duration::from_millis(
+            args.get_usize("heartbeat-ms", 200)? as u64),
+        eject_after: args.get_usize("eject-after", 3)? as u32,
+        readmit_after: args.get_usize("readmit-after", 2)? as u32,
+        retry_max: args.get_usize("retry-max", 8)? as u32,
+        max_conns: args.get_usize("max-conns", 1024)?,
+        ..RouterConfig::default()
+    };
+    println!("starting router over {} backend(s): {}",
+             cfg.backends.len(), cfg.backends.join(", "));
+    println!("heartbeat every {:?}, eject after {} failure(s), \
+              readmit after {} probe(s), retry max {}",
+             cfg.heartbeat_every, cfg.eject_after, cfg.readmit_after,
+             cfg.retry_max);
+    let router = Router::start(cfg)?;
+    let addr = router.local_addr();
+    println!("routing on {addr}");
     println!("stop with: skydiver loadgen --addr {addr} --frames 0 \
               --shutdown");
     if let Some(pf) = args.get("port-file") {
         std::fs::write(pf, addr.to_string())?;
     }
-    let report = gw.wait()?;
-    print_gateway_report(&report);
+    let report = router.wait()?;
+    print_router_report(&report);
+    Ok(())
+}
+
+fn print_router_report(r: &RouterReport) {
+    let mut t = Table::new("Router", &["metric", "value"]);
+    t.row(&["requests".into(), r.requests.to_string()]);
+    t.row(&["served".into(), r.served.to_string()]);
+    t.row(&["busy (shed)".into(), r.busy.to_string()]);
+    t.row(&["failed".into(), r.failed.to_string()]);
+    t.row(&["retries".into(), r.retries.to_string()]);
+    t.print();
+    for b in &r.backends {
+        println!("--- backend {}: {} | dispatched {} | ejections {} \
+                  | readmissions {} | failovers {} | heartbeats \
+                  ok/fail {}/{}",
+                 b.addr,
+                 if b.live { "live" } else { "ejected" },
+                 b.dispatched, b.ejections, b.readmissions,
+                 b.failovers, b.heartbeats_ok, b.heartbeat_failures);
+    }
+}
+
+/// `skydiver metrics`: fetch and print the Prometheus exposition
+/// from a gateway or router (scriptable health/monitoring hook).
+fn metrics_cmd(args: &Args) -> Result<()> {
+    let addr = args.get("addr")
+        .ok_or_else(|| anyhow!("metrics needs --addr HOST:PORT"))?;
+    let mut client = Client::connect(addr)?;
+    print!("{}", client.metrics()?);
     Ok(())
 }
 
@@ -809,6 +936,40 @@ mod tests {
         assert!(service_cfg(&bad).is_err());
         assert!(TrafficMode::parse("skewed").is_some());
         assert!(TrafficMode::parse("bursty").is_none());
+    }
+
+    #[test]
+    fn route_flags_parse() {
+        let a = Args::parse(&sv(&[
+            "route", "--backend", "127.0.0.1:7001", "--backend",
+            "127.0.0.1:7002", "--heartbeat-ms", "100",
+            "--eject-after", "2", "--readmit-after", "3",
+            "--retry-max", "5",
+        ])).unwrap();
+        assert_eq!(a.get_all("backend"),
+                   vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert_eq!(a.get_usize("heartbeat-ms", 200).unwrap(), 100);
+        assert_eq!(a.get_usize("eject-after", 3).unwrap(), 2);
+        assert_eq!(a.get_usize("readmit-after", 2).unwrap(), 3);
+        assert_eq!(a.get_usize("retry-max", 8).unwrap(), 5);
+        // Typos near the new flags still suggest correctly.
+        assert_eq!(suggest("backnd"), Some("backend"));
+        assert_eq!(suggest("drain-m"), Some("drain-ms"));
+    }
+
+    #[test]
+    fn serve_drain_and_fault_flags_parse() {
+        let a = Args::parse(&sv(&[
+            "serve", "--drain-ms", "50", "--inject-faults",
+            "busy=0.1,seed=7",
+        ])).unwrap();
+        assert_eq!(a.get_usize("drain-ms", 10_000).unwrap(), 50);
+        let plan = FaultPlan::parse(a.get("inject-faults").unwrap())
+            .unwrap();
+        assert_eq!(plan.busy, 0.1);
+        assert_eq!(plan.seed, 7);
+        // A bad plan is a startup error, not a silent no-op.
+        assert!(FaultPlan::parse("busy=2.0").is_err());
     }
 
     #[test]

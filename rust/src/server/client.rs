@@ -20,11 +20,11 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::protocol::{read_frame, write_frame, ErrorCode, ProtoError,
-                      RequestBody, ResponseBody, WirePayload,
-                      WireRequest, WireResponse, CONN_ERR_ID,
-                      HEADER_LEN, KIND_RESPONSE, MAX_BODY, NET_ANY, V1,
-                      V2};
+use super::protocol::{read_frame, write_frame, ErrorCode, ModelLoad,
+                      ProtoError, RequestBody, ResponseBody,
+                      WirePayload, WireRequest, WireResponse,
+                      CONN_ERR_ID, HEADER_LEN, KIND_RESPONSE, MAX_BODY,
+                      NET_ANY, V1, V2};
 
 /// A served model's frame contract, as reported by the `Info` request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -70,10 +70,44 @@ impl Client {
         Self::connect_version(addr, V1)
     }
 
+    /// Connect (v2) with a hard connect deadline instead of the OS
+    /// default (which can be minutes against a blackholed host). The
+    /// deadline applies per resolved address; resolution failures and
+    /// exhausted candidates surface as errors, a deadline as
+    /// [`ProtoError::TimedOut`] in the chain.
+    pub fn connect_timeout(addr: impl ToSocketAddrs,
+                           timeout: Duration) -> Result<Self> {
+        let mut last: Option<anyhow::Error> = None;
+        for sa in addr.to_socket_addrs()
+            .context("resolving gateway address")?
+        {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(stream) => return Self::from_stream(stream, V2),
+                Err(e) if e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    last = Some(anyhow::Error::new(ProtoError::TimedOut)
+                        .context(format!("connecting to {sa}")));
+                }
+                Err(e) => {
+                    last = Some(anyhow::Error::new(e)
+                        .context(format!("connecting to {sa}")));
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            anyhow!("gateway address resolved to no candidates")
+        }))
+    }
+
     fn connect_version(addr: impl ToSocketAddrs, version: u8)
                        -> Result<Self> {
         let stream = TcpStream::connect(addr)
             .context("connecting to skydiver gateway")?;
+        Self::from_stream(stream, version)
+    }
+
+    fn from_stream(stream: TcpStream, version: u8) -> Result<Self> {
         let _ = stream.set_nodelay(true);
         let reader = BufReader::new(
             stream.try_clone().context("cloning stream")?);
@@ -142,14 +176,21 @@ impl Client {
 
     /// Flush queued requests and block for the next response frame.
     /// Responses may arrive in any order — match on
-    /// [`WireResponse::id`].
+    /// [`WireResponse::id`]. The typed [`ProtoError`] is preserved as
+    /// the error source, so callers can
+    /// `err.downcast_ref::<ProtoError>()` — e.g. to tell a
+    /// [`ProtoError::TimedOut`] read deadline (set via
+    /// [`set_read_timeout`](Self::set_read_timeout)) from hard IO
+    /// damage.
     pub fn recv(&mut self) -> Result<WireResponse> {
         self.flush()?;
         let (ver, body) = read_frame(&mut self.reader, KIND_RESPONSE)
-            .map_err(|e| anyhow!("reading response frame: {e}"))?
+            .map_err(|e| anyhow::Error::new(e)
+                .context("reading response frame"))?
             .ok_or_else(|| anyhow!("server closed the connection"))?;
         WireResponse::decode_body(ver, &body)
-            .map_err(|e| anyhow!("decoding response: {e}"))
+            .map_err(|e| anyhow::Error::new(e)
+                .context("decoding response"))
     }
 
     /// Convenience: one pixel-frame inference round trip against
@@ -213,6 +254,23 @@ impl Client {
                 bail!("info failed: {} {detail}", code.as_str())
             }
             other => bail!("unexpected info response: {other:?}"),
+        }
+    }
+
+    /// One health/load probe round trip (v2 only): every mounted
+    /// model's queue-cost depth, as the cluster router consumes it.
+    pub fn heartbeat(&mut self) -> Result<Vec<ModelLoad>> {
+        if self.version == V1 {
+            bail!("heartbeat requires protocol v2");
+        }
+        self.send(&WireRequest { id: 0,
+                                 body: RequestBody::Heartbeat })?;
+        match self.recv()?.body {
+            ResponseBody::Heartbeat { models } => Ok(models),
+            ResponseBody::Error { code, detail } => {
+                bail!("heartbeat failed: {} {detail}", code.as_str())
+            }
+            other => bail!("unexpected heartbeat response: {other:?}"),
         }
     }
 

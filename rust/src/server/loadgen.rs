@@ -37,6 +37,21 @@ use super::reactor::{self, PollFd, RecvBuf, POLLIN, POLLOUT};
 /// Max resubmissions of one frame after `BUSY` before giving up.
 const MAX_BUSY_RETRIES: u32 = 200;
 
+/// Ceiling for one busy-retry backoff step.
+const BUSY_BACKOFF_CAP_MS: u64 = 50;
+
+/// Capped jittered exponential backoff for `BUSY` retries: the step
+/// doubles per attempt up to [`BUSY_BACKOFF_CAP_MS`], and the actual
+/// wait is drawn uniformly from the upper half of the step, so a
+/// window's worth of shed requests decorrelates instead of
+/// re-slamming the queue in lockstep. Deterministic given the rng —
+/// the cluster router reuses the same curve for failover re-dispatch.
+pub fn busy_backoff(rng: &mut SplitMix64, attempts: u32) -> Duration {
+    let step = (1u64 << attempts.min(6)).min(BUSY_BACKOFF_CAP_MS);
+    let half = (step / 2).max(1);
+    Duration::from_millis(half + rng.next_below(half + 1))
+}
+
 /// At or above this many connections, [`run`] switches from
 /// one-thread-per-connection to the single-threaded multiplexed
 /// driver (`conns` threads would stop measuring the *server* well
@@ -218,8 +233,10 @@ fn make_payload(info: &ServerInfo, seed: u64, id: u64, spikes: bool,
 fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
             window: usize, spikes: bool, retry_busy: bool,
             traffic: TrafficMode, seed: u64) -> Result<ConnResult> {
-    let mut client = Client::connect(addr)?;
+    let mut client =
+        Client::connect_timeout(addr, Duration::from_secs(5))?;
     client.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut backoff_rng = SplitMix64::new(seed ^ 0xB0FF_B0FF);
     let mut to_send: VecDeque<(u64, u32)> =
         (0..frames as u64).map(|id| (id, 0)).collect();
     let mut inflight: HashMap<u64, (Instant, u32)> = HashMap::new();
@@ -272,10 +289,10 @@ fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
             ResponseBody::Error { code: ErrorCode::Busy, .. } => {
                 busy += 1;
                 if retry_busy && attempts < MAX_BUSY_RETRIES {
-                    // Back off briefly so the shedding server can
-                    // drain, then requeue the same frame.
-                    thread::sleep(Duration::from_millis(
-                        (1 + attempts as u64 / 10).min(10)));
+                    // Back off (capped, jittered) so the shedding
+                    // server can drain, then requeue the same frame.
+                    thread::sleep(busy_backoff(&mut backoff_rng,
+                                               attempts));
                     to_send.push_back((resp.id, attempts + 1));
                 } else {
                     errors += 1;
@@ -338,7 +355,8 @@ fn aggregate(results: Vec<ConnResult>, wall_secs: f64, frames: usize)
 /// used automatically.
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     ensure!(cfg.conns > 0, "loadgen needs at least one connection");
-    let info = Client::connect(&cfg.addr)?.info_model(&cfg.model)?;
+    let info = Client::connect_timeout(
+        &cfg.addr, Duration::from_secs(5))?.info_model(&cfg.model)?;
     if cfg.conns >= MULTIPLEX_CONNS {
         return run_mux(cfg, &info, None).map(|(report, _)| report);
     }
@@ -391,7 +409,8 @@ pub struct CollectedResponse {
 pub fn run_collect(cfg: &LoadGenConfig)
                    -> Result<(LoadGenReport, Vec<CollectedResponse>)> {
     ensure!(cfg.conns > 0, "loadgen needs at least one connection");
-    let info = Client::connect(&cfg.addr)?.info_model(&cfg.model)?;
+    let info = Client::connect_timeout(
+        &cfg.addr, Duration::from_secs(5))?.info_model(&cfg.model)?;
     let (report, mut collected) = run_mux(cfg, &info, Some(Vec::new()))?;
     let mut out = collected.take().unwrap_or_default();
     out.sort_by_key(|c| (c.conn, c.id));
@@ -412,6 +431,8 @@ struct MuxConn {
     inflight: HashMap<u64, (Instant, u32)>,
     /// Busy-retried frames waiting out their backoff.
     delayed: Vec<(Instant, u64, u32)>,
+    /// Jitter source for the busy-retry backoff deadlines.
+    backoff_rng: SplitMix64,
     seed: u64,
     frames: u64,
     sent: u64,
@@ -538,6 +559,8 @@ fn run_mux(cfg: &LoadGenConfig, info: &ServerInfo,
                 .map(|id| (id, 0)).collect(),
             inflight: HashMap::new(),
             delayed: Vec::new(),
+            backoff_rng: SplitMix64::new(
+                conn_seed(cfg, i) ^ 0xB0FF_B0FF),
             seed: conn_seed(cfg, i),
             frames: conn_frames(cfg, i) as u64,
             sent: 0,
@@ -688,10 +711,10 @@ fn mux_read(cfg: &LoadGenConfig, conn_idx: usize, c: &mut MuxConn,
                 ResponseBody::Error { code: ErrorCode::Busy, .. } => {
                     c.busy += 1;
                     if cfg.retry_busy && attempts < MAX_BUSY_RETRIES {
-                        // Same backoff curve as the threaded driver,
-                        // as a deadline instead of a sleep.
-                        let backoff = Duration::from_millis(
-                            (1 + attempts as u64 / 10).min(10));
+                        // Same capped jittered curve as the threaded
+                        // driver, as a deadline instead of a sleep.
+                        let backoff =
+                            busy_backoff(&mut c.backoff_rng, attempts);
                         c.delayed.push((Instant::now() + backoff,
                                         resp.id, attempts + 1));
                     } else {

@@ -43,8 +43,9 @@ pub mod server;
 
 pub use client::{Client, ServerInfo};
 pub use loadgen::{LoadGenConfig, LoadGenReport, TrafficMode};
-pub use protocol::{ErrorCode, ProtoError, RequestBody, ResponseBody,
-                   WirePayload, WireRequest, WireResponse};
+pub use protocol::{ErrorCode, ModelLoad, ProtoError, RequestBody,
+                   ResponseBody, WirePayload, WireRequest,
+                   WireResponse};
 pub use server::{CounterSnapshot, Gateway, GatewayConfig,
                  GatewayReport, GatewayStop, ModelCounterSnapshot,
                  ModelReport};

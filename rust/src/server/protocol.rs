@@ -38,6 +38,11 @@
 //!   default; v1 = empty body = default). Response describes the
 //!   selected model (shape + timesteps), so a client can build valid
 //!   frames for it.
+//! * `op 4` **Heartbeat** — empty, **v2 only** (a v1 frame carrying
+//!   it is malformed). Health probe from a cluster router: the
+//!   response reports every mounted model's queue-cost depth
+//!   ([`ModelLoad`], `coordinator/cost.rs` units) so the router can
+//!   place requests on the least-loaded-by-cost backend.
 //!
 //! ## Response body
 //!
@@ -53,6 +58,10 @@
 //! * `tag 4` **Info** — `net: u8`, `c/h/w/timesteps: u32` each,
 //!   **v2 only:** `name_len: u8` + model name, `nmodels: u8` (how many
 //!   models the server mounts).
+//! * `tag 5` **Heartbeat** — **v2 only:** `nmodels: u8`, then per
+//!   model: `name_len: u8` + name, `cost_depth: u64`,
+//!   `cost_capacity: u64` (`u64::MAX` = uncapped), `depth: u32`,
+//!   `capacity: u32`.
 //!
 //! Decoding is total: every malformed input returns a typed
 //! [`ProtoError`], never panics. [`ProtoError::is_fatal`] separates
@@ -111,6 +120,10 @@ pub enum ProtoError {
     Truncated,
     /// The frame arrived whole but its body does not parse.
     Malformed(String),
+    /// A configured read/connect deadline expired mid-operation.
+    /// Fatal: a timeout can strike mid-frame, after bytes were
+    /// consumed, so the stream position is no longer trustworthy.
+    TimedOut,
     /// Underlying socket error.
     Io(String),
 }
@@ -141,6 +154,7 @@ impl std::fmt::Display for ProtoError {
             }
             ProtoError::Truncated => write!(f, "truncated frame"),
             ProtoError::Malformed(d) => write!(f, "malformed body: {d}"),
+            ProtoError::TimedOut => write!(f, "timed out"),
             ProtoError::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -221,12 +235,32 @@ pub struct WireRequest {
 /// or the empty string for the server's default model. v1 frames decode
 /// with an empty `model` (they cannot name one), and a request naming a
 /// model is not expressible in v1 ([`WireRequest::encode_v1`] refuses).
+/// `Heartbeat` (the cluster health/load probe) is v2-only in both
+/// directions.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RequestBody {
     Infer { net: u8, model: String, payload: WirePayload },
     Metrics,
     Shutdown,
     Info { model: String },
+    Heartbeat,
+}
+
+/// One mounted model's queue occupancy as reported in a `Heartbeat`
+/// response — the cost fields are `coordinator/cost.rs` units (the
+/// same currency `predict_cost` speaks), so a router can compare load
+/// across backends in work, not request counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelLoad {
+    pub name: String,
+    /// Predicted cost of everything currently queued.
+    pub cost_depth: u64,
+    /// Cost-based admission cap (`u64::MAX` = uncapped).
+    pub cost_capacity: u64,
+    /// Queue depth in requests.
+    pub depth: u32,
+    /// Queue capacity in requests.
+    pub capacity: u32,
 }
 
 /// Server → client message.
@@ -238,6 +272,7 @@ pub struct WireResponse {
 
 /// `Info.model`/`Info.nmodels` are v2-only fields: a v1 encode drops
 /// them, a v1 decode reports the empty name and `nmodels: 1`.
+/// `Heartbeat` is v2-only: a v1 frame carrying tag 5 is malformed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ResponseBody {
     Infer {
@@ -258,6 +293,7 @@ pub enum ResponseBody {
         model: String,
         nmodels: u8,
     },
+    Heartbeat { models: Vec<ModelLoad> },
 }
 
 // -------------------------------------------------------------- encode
@@ -318,6 +354,7 @@ impl WireRequest {
                 b.push(3);
                 put_model(&mut b, model)?;
             }
+            RequestBody::Heartbeat => b.push(4),
         }
         Ok(frame(V2, KIND_REQUEST, b))
     }
@@ -349,6 +386,10 @@ impl WireRequest {
                 }
                 b.push(3);
             }
+            RequestBody::Heartbeat => {
+                return Err(ProtoError::Malformed(
+                    "heartbeat requires protocol v2".into()));
+            }
         }
         Ok(frame(V1, KIND_REQUEST, b))
     }
@@ -378,6 +419,13 @@ impl WireRequest {
                     _ => r.model()?,
                 };
                 RequestBody::Info { model }
+            }
+            4 => {
+                if version == V1 {
+                    return Err(ProtoError::Malformed(
+                        "heartbeat requires protocol v2".into()));
+                }
+                RequestBody::Heartbeat
             }
             op => {
                 return Err(ProtoError::Malformed(format!(
@@ -492,6 +540,29 @@ impl WireResponse {
                     b.push(*nmodels);
                 }
             }
+            ResponseBody::Heartbeat { models } => {
+                // v2-only on the wire; a gateway only emits this in
+                // reply to a (v2-only) heartbeat request, so encoding
+                // ignores `version`. Registries mount far fewer than
+                // 255 models; a hand-built over-long list truncates
+                // rather than corrupting the length byte.
+                b.push(5);
+                let models = &models[..models.len().min(255)];
+                b.push(models.len() as u8);
+                for m in models {
+                    let name = if m.name.len() <= MAX_MODEL_NAME {
+                        m.name.as_str()
+                    } else {
+                        ""
+                    };
+                    b.push(name.len() as u8);
+                    b.extend_from_slice(name.as_bytes());
+                    put_u64(&mut b, m.cost_depth);
+                    put_u64(&mut b, m.cost_capacity);
+                    put_u32(&mut b, m.depth);
+                    put_u32(&mut b, m.capacity);
+                }
+            }
         }
         frame(version, KIND_RESPONSE, b)
     }
@@ -546,6 +617,26 @@ impl WireResponse {
                 ResponseBody::Info {
                     net, c, h, w, timesteps, model, nmodels,
                 }
+            }
+            5 => {
+                if version == V1 {
+                    return Err(ProtoError::Malformed(
+                        "heartbeat requires protocol v2".into()));
+                }
+                let n = r.u8()? as usize;
+                let mut models = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = r.model()?;
+                    let cost_depth = r.u64()?;
+                    let cost_capacity = r.u64()?;
+                    let depth = r.u32()?;
+                    let capacity = r.u32()?;
+                    models.push(ModelLoad {
+                        name, cost_depth, cost_capacity, depth,
+                        capacity,
+                    });
+                }
+                ResponseBody::Heartbeat { models }
             }
             tag => {
                 return Err(ProtoError::Malformed(format!(
@@ -656,7 +747,15 @@ fn read_exact(r: &mut impl Read, buf: &mut [u8])
 }
 
 fn io_err(e: io::Error) -> ProtoError {
-    ProtoError::Io(e.to_string())
+    // A socket read deadline fires as `WouldBlock` (unix) or
+    // `TimedOut` (windows); both mean "the configured timeout
+    // expired", which callers want to tell apart from hard IO damage.
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            ProtoError::TimedOut
+        }
+        _ => ProtoError::Io(e.to_string()),
+    }
 }
 
 /// Write one already-encoded frame.
@@ -1098,6 +1197,85 @@ mod tests {
         f[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(parse_frame(&f, KIND_REQUEST),
                          Err(ProtoError::Oversized(_))));
+    }
+
+    #[test]
+    fn heartbeat_request_roundtrips_v2_and_refuses_v1() {
+        let req = WireRequest { id: 77, body: RequestBody::Heartbeat };
+        let f = req.encode().unwrap();
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        assert_eq!(WireRequest::decode_body(ver, &body).unwrap(), req);
+        // Not expressible in v1 …
+        assert!(matches!(req.encode_v1(),
+                         Err(ProtoError::Malformed(_))));
+        // … and a hand-built v1 frame carrying op 4 is malformed (but
+        // answerable: the frame itself is intact).
+        let err = WireRequest::decode_body(V1, &body).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        assert!(!err.is_fatal());
+    }
+
+    #[test]
+    fn heartbeat_response_roundtrips_v2_only() {
+        let resp = WireResponse {
+            id: 78,
+            body: ResponseBody::Heartbeat {
+                models: vec![
+                    ModelLoad {
+                        name: "classifier".into(),
+                        cost_depth: 123_456,
+                        cost_capacity: u64::MAX,
+                        depth: 3,
+                        capacity: 1024,
+                    },
+                    ModelLoad {
+                        name: "segmenter".into(),
+                        cost_depth: 0,
+                        cost_capacity: 5_000_000,
+                        depth: 0,
+                        capacity: 64,
+                    },
+                ],
+            },
+        };
+        let f = resp.encode(V2);
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        assert_eq!(WireResponse::decode_body(ver, &body).unwrap(),
+                   resp);
+        // A v1 reader cannot decode tag 5.
+        let err = WireResponse::decode_body(V1, &body).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        // An empty load list is valid (a backend with nothing
+        // mounted still answers probes).
+        let empty = WireResponse {
+            id: 79,
+            body: ResponseBody::Heartbeat { models: vec![] },
+        };
+        let f = empty.encode(V2);
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
+                .unwrap().unwrap();
+        assert_eq!(WireResponse::decode_body(ver, &body).unwrap(),
+                   empty);
+    }
+
+    #[test]
+    fn timeout_io_errors_are_typed_and_fatal() {
+        for kind in [io::ErrorKind::WouldBlock, io::ErrorKind::TimedOut]
+        {
+            let err = io_err(io::Error::new(kind, "deadline"));
+            assert_eq!(err, ProtoError::TimedOut);
+            assert!(err.is_fatal());
+        }
+        assert!(matches!(
+            io_err(io::Error::new(io::ErrorKind::BrokenPipe, "x")),
+            ProtoError::Io(_)));
     }
 
     #[test]

@@ -79,10 +79,10 @@ use crate::coordinator::{FramePayload, ModelRegistry, ServiceConfig,
                          ServiceHandle, ServingReport, Stats,
                          SubmitError, WorkerConfig, WorkerEvent};
 
-use super::protocol::{net_code, parse_frame, ErrorCode, RequestBody,
-                      ResponseBody, WirePayload, WireRequest,
-                      WireResponse, CONN_ERR_ID, HEADER_LEN,
-                      KIND_REQUEST, NET_ANY, V1};
+use super::protocol::{net_code, parse_frame, ErrorCode, ModelLoad,
+                      RequestBody, ResponseBody, WirePayload,
+                      WireRequest, WireResponse, CONN_ERR_ID,
+                      HEADER_LEN, KIND_REQUEST, NET_ANY, V1};
 use super::reactor::{self, PollFd, RecvBuf, Waker, POLLIN, POLLOUT};
 
 /// Gateway-level knobs.
@@ -1139,6 +1139,26 @@ fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
             }.encode(ver);
             push_frame(shared, c, f);
             shared.trigger_stop();
+        }
+        RequestBody::Heartbeat => {
+            // Health/load probe from a cluster router: answer from
+            // the queues alone (no worker involvement), so a wedged
+            // worker slows inference, not health reporting.
+            let models = shared.models.iter().map(|m| {
+                let q = m.handle.queue_stats();
+                ModelLoad {
+                    name: m.name.clone(),
+                    cost_depth: q.cost_depth,
+                    cost_capacity: q.cost_capacity,
+                    depth: q.depth as u32,
+                    capacity: q.capacity as u32,
+                }
+            }).collect();
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::Heartbeat { models },
+            }.encode(ver);
+            push_frame(shared, c, f);
         }
     }
 }

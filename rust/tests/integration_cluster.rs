@@ -1,0 +1,398 @@
+//! Cluster-tier integration: a front router over real gateway
+//! backends, with the fault-injection proxy standing in for network
+//! failures. The headline test kills a backend mid-traffic and
+//! asserts the failure costs latency, never a lost request — every
+//! response byte-identical to the in-process `Service` path.
+
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use skydiver::cluster::{FaultPlan, FaultProxy, Router, RouterConfig};
+use skydiver::coordinator::{DispatchMode, Policy, Service,
+                            ServiceConfig, WorkerConfig};
+use skydiver::power::EnergyModel;
+use skydiver::server::loadgen::{self, LoadGenConfig, TrafficMode};
+use skydiver::server::{Client, ErrorCode, Gateway, GatewayConfig,
+                       ProtoError, RequestBody, ResponseBody,
+                       WirePayload, WireRequest};
+use skydiver::sim::ArchConfig;
+use skydiver::snn::NetKind;
+
+const SIDE: usize = 16;
+
+fn artifacts(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(
+        format!("skydiver-cluster-{label}-{}", std::process::id()));
+    skydiver::data::write_synthetic_classifier(&dir, SIDE).unwrap();
+    dir
+}
+
+fn worker_cfg(artifacts: PathBuf) -> WorkerConfig {
+    WorkerConfig {
+        artifacts,
+        kind: NetKind::Classifier,
+        aprc: true,
+        policy: Policy::Cbws,
+        arch: ArchConfig::default(),
+        energy: EnergyModel::default(),
+        use_runtime: false,
+        timesteps: None,
+        sweep_threads: 1,
+    }
+}
+
+fn service_cfg(workers: usize, queue_cap: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        batch_max: 8,
+        queue_cap,
+        batch_wait: Duration::from_millis(2),
+        dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
+    }
+}
+
+fn start_backend(label: &str) -> (Gateway, String) {
+    let gw = Gateway::start_single(GatewayConfig::default(),
+                                   service_cfg(1, 256),
+                                   worker_cfg(artifacts(label)))
+        .expect("backend start");
+    let addr = gw.local_addr().to_string();
+    (gw, addr)
+}
+
+/// The chaos acceptance test: three backends behind a router, one of
+/// them reachable only through a fault proxy. Mid-traffic the proxy
+/// simulates a SIGKILL (every connection severed, new ones refused);
+/// the router must eject it, fail its in-flight requests over to the
+/// survivors, and readmit it after the outage — with zero client-
+/// visible errors and responses byte-identical to the in-process
+/// `Service` on the same frames.
+#[test]
+fn killed_backend_costs_latency_not_requests() {
+    const FRAMES: usize = 1200;
+    let (gw0, addr0) = start_backend("chaos-b0");
+    let (gw1, addr1) = start_backend("chaos-b1");
+    let (gw2, addr2) = start_backend("chaos-b2");
+    let proxy = FaultProxy::start("127.0.0.1:0", &addr2,
+                                  FaultPlan::none())
+        .expect("fault proxy");
+
+    let router = Router::start(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![addr0, addr1, proxy.addr().to_string()],
+        heartbeat_every: Duration::from_millis(50),
+        eject_after: 2,
+        readmit_after: 2,
+        retry_max: 16,
+        ..RouterConfig::default()
+    }).expect("router start");
+    let raddr = router.local_addr().to_string();
+
+    let cfg = LoadGenConfig {
+        addr: raddr,
+        conns: 8,
+        frames: FRAMES,
+        window: 6,
+        traffic: TrafficMode::Skewed,
+        retry_busy: true,
+        seed: 0xC1A0,
+        ..LoadGenConfig::default()
+    };
+    let gen = {
+        let cfg = cfg.clone();
+        thread::spawn(move || loadgen::run_collect(&cfg))
+    };
+
+    // Let traffic reach all three backends, then yank one.
+    thread::sleep(Duration::from_millis(100));
+    proxy.kill();
+    thread::sleep(Duration::from_millis(400));
+    proxy.revive();
+
+    // The backend must be readmitted (two consecutive probe
+    // successes at a 50ms period — well under this deadline).
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        if router.snapshot().backends[2].live {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "backend never readmitted: {:?}",
+                router.snapshot().backends[2]);
+        thread::sleep(Duration::from_millis(25));
+    }
+
+    let (report, collected) =
+        gen.join().unwrap().expect("loadgen through router");
+    assert_eq!(report.ok, FRAMES as u64,
+               "every frame must serve across the outage \
+                (busy={}, errors={})", report.busy, report.errors);
+    assert_eq!(report.errors, 0, "a killed backend must never cost \
+                a non-BUSY request");
+    assert_eq!(collected.len(), FRAMES);
+
+    let rr = router.stop_and_wait().expect("router report");
+    let b2 = &rr.backends[2];
+    assert_eq!(b2.ejections, 1, "exactly one outage: {b2:?}");
+    assert_eq!(b2.readmissions, 1, "exactly one recovery: {b2:?}");
+    assert!(b2.live);
+    assert_eq!(rr.failed, 0,
+               "no admitted request may terminally fail: {rr:?}");
+    assert!(rr.backends[0].dispatched > 0);
+    assert!(rr.backends[1].dispatched > 0);
+    // Heartbeats kept flowing to the live backends throughout.
+    assert!(rr.backends[0].heartbeats_ok > 0);
+    assert!(rr.backends[1].heartbeats_ok > 0);
+    assert!(b2.heartbeat_failures > 0,
+            "the outage must have been observed: {b2:?}");
+
+    for gw in [gw0, gw1, gw2] {
+        let r = gw.stop_and_wait().unwrap();
+        assert_eq!(r.counters.internal, 0);
+    }
+
+    // Reference: identical frames through the in-process Service.
+    // The loadgen workload is a pure function of (seed, conn, id) —
+    // regenerate and byte-compare the deterministic response fields,
+    // which also proves failover re-dispatch never duplicated or
+    // crossed responses between requests.
+    let service = Service::start(service_cfg(2, 1024),
+                                 worker_cfg(artifacts("chaos-ref")))
+        .unwrap();
+    let n = service.frame_spec().pixels_len();
+    for c in &collected {
+        let seed = cfg.seed.wrapping_add(0xC0FF_EE00 * c.conn as u64);
+        let pixels =
+            loadgen::gen_pixels(n, seed, c.id, TrafficMode::Skewed);
+        let gid = ((c.conn as u64) << 32) | c.id;
+        service.submit(gid, pixels).unwrap();
+    }
+    let (resps, _) = service
+        .collect_within(collected.len(), skydiver::CLOCK_HZ,
+                        Duration::from_secs(600))
+        .unwrap();
+    service.shutdown().unwrap();
+    let expected: std::collections::HashMap<u64, Vec<u32>> =
+        resps.into_iter().map(|r| (r.id, r.output_counts)).collect();
+    for c in &collected {
+        let gid = ((c.conn as u64) << 32) | c.id;
+        let want = expected.get(&gid).unwrap();
+        let wire: Vec<u8> = c.output_counts.iter()
+            .flat_map(|v| v.to_le_bytes()).collect();
+        let oracle: Vec<u8> = want.iter()
+            .flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(wire, oracle,
+                   "conn {} frame {}: cluster path diverged from \
+                    in-process path", c.conn, c.id);
+        let argmax = want.iter().enumerate()
+            .max_by_key(|&(_, v)| *v).map(|(i, _)| i as u32).unwrap();
+        assert_eq!(c.prediction, argmax);
+    }
+}
+
+/// Satellite: the gateway drain deadline. With `drain_timeout` at
+/// zero, whatever is still queued when shutdown triggers is failed
+/// with `SHUTTING_DOWN` ("gateway drain timeout") instead of being
+/// waited on — shutdown time is bounded by the deadline, not by the
+/// queue.
+#[test]
+fn drain_deadline_fails_stragglers_instead_of_waiting() {
+    const PIPELINED: usize = 128;
+    let gw = Gateway::start_single(
+        GatewayConfig {
+            drain_timeout: Duration::ZERO,
+            ..GatewayConfig::default()
+        },
+        service_cfg(1, PIPELINED),
+        worker_cfg(artifacts("drain")))
+        .expect("gateway start");
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let n = client.info().unwrap().pixels_len();
+    for id in 0..PIPELINED as u64 {
+        client.send(&WireRequest {
+            id,
+            body: RequestBody::Infer {
+                net: skydiver::server::protocol::NET_ANY,
+                model: String::new(),
+                payload: WirePayload::Pixels(vec![7u8; n]),
+            },
+        }).unwrap();
+    }
+    client.flush().unwrap();
+
+    // Wait until every frame has been read and routed (admitted or
+    // answered) — from here each request gets exactly one response —
+    // then stop while the single worker still has a backlog.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while gw.counters().requests < PIPELINED as u64 {
+        assert!(Instant::now() < deadline, "gateway never read the \
+                 pipelined backlog: {:?}", gw.counters());
+        thread::sleep(Duration::from_millis(1));
+    }
+    let t0 = Instant::now();
+    gw.stop_handle().trigger();
+
+    // Every pipelined request still gets exactly one response: served
+    // if it beat the shutdown, SHUTTING_DOWN otherwise.
+    let mut served = 0u64;
+    let mut drained = 0u64;
+    for _ in 0..PIPELINED {
+        match client.recv() {
+            Ok(resp) => match resp.body {
+                ResponseBody::Infer { .. } => served += 1,
+                ResponseBody::Error {
+                    code: ErrorCode::ShuttingDown, ..
+                } => drained += 1,
+                other => panic!("unexpected response: {other:?}"),
+            },
+            // The gateway may close the connection after the final
+            // flush; by then all frames must have been answered.
+            Err(_) => break,
+        }
+    }
+    drop(client);
+
+    let report = gw.wait().expect("gateway report");
+    let elapsed = t0.elapsed();
+    assert!(elapsed < Duration::from_secs(30),
+            "zero drain deadline must bound shutdown, took \
+             {elapsed:?}");
+    assert!(report.counters.shutting_down > 0,
+            "a zero drain window must fail the backlog: {:?}",
+            report.counters);
+    assert_eq!(served, report.counters.served);
+    assert_eq!(drained, report.counters.shutting_down);
+    assert_eq!(served + drained, PIPELINED as u64,
+               "each pipelined request needs exactly one answer");
+}
+
+/// The fault plans used by the chaos harness, pinned one by one
+/// against a real gateway: a BUSY storm surfaces as typed `BUSY`
+/// errors, a response blackhole surfaces as a client read timeout
+/// (`ProtoError::TimedOut`), and truncation kills the connection.
+#[test]
+fn fault_plans_inject_what_they_say() {
+    let (gw, addr) = start_backend("faults");
+    // Frame contract straight from the gateway — the proxies below
+    // mangle the data path.
+    let n = Client::connect(&addr).unwrap()
+        .info().unwrap().pixels_len();
+
+    // BUSY storm: every Infer answered locally with BUSY; non-Infer
+    // ops (the Info above went direct) pass through untouched.
+    let storm = FaultProxy::start(
+        "127.0.0.1:0", &addr,
+        FaultPlan::parse("busy=1.0,seed=7").unwrap()).unwrap();
+    let mut c = Client::connect(storm.addr().to_string()).unwrap();
+    let resp = c.infer_pixels(1, "", vec![1u8; n]).unwrap();
+    match resp.body {
+        ResponseBody::Error { code: ErrorCode::Busy, .. } => {}
+        other => panic!("busy storm must answer BUSY: {other:?}"),
+    }
+    // Heartbeats are not Infer ops: they reach the gateway.
+    assert!(!c.heartbeat().unwrap().is_empty());
+    drop(c);
+    storm.shutdown();
+
+    // Blackhole: requests forward, responses vanish — exactly the
+    // shape a client read timeout exists for.
+    let hole = FaultProxy::start(
+        "127.0.0.1:0", &addr,
+        FaultPlan::parse("blackhole=1.0").unwrap()).unwrap();
+    let mut c = Client::connect(hole.addr().to_string()).unwrap();
+    c.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+    let err = c.infer_pixels(2, "", vec![2u8; n])
+        .expect_err("blackholed response must time out");
+    assert!(matches!(err.downcast_ref::<ProtoError>(),
+                     Some(ProtoError::TimedOut)),
+            "want ProtoError::TimedOut, got: {err:?}");
+    drop(c);
+    hole.shutdown();
+
+    // Truncation: half a frame then a hard close — the client must
+    // see an error, not a clean result.
+    let cut = FaultProxy::start(
+        "127.0.0.1:0", &addr,
+        FaultPlan::parse("truncate=1.0").unwrap()).unwrap();
+    let mut c = Client::connect(cut.addr().to_string()).unwrap();
+    assert!(c.infer_pixels(3, "", vec![3u8; n]).is_err(),
+            "truncated frame must surface as an error");
+    drop(c);
+    cut.shutdown();
+
+    gw.stop_and_wait().unwrap();
+}
+
+/// Router observability plumbing: `Metrics` renders the cluster
+/// exposition, `Heartbeat` aggregates live-backend loads, inference
+/// proxies end-to-end, and a wire `Shutdown` stops the router (and
+/// only the router — backends keep their own lifecycle).
+#[test]
+fn router_metrics_heartbeat_and_wire_shutdown() {
+    let (gw0, addr0) = start_backend("obs-b0");
+    let (gw1, addr1) = start_backend("obs-b1");
+    let router = Router::start(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![addr0.clone(), addr1.clone()],
+        heartbeat_every: Duration::from_millis(50),
+        ..RouterConfig::default()
+    }).expect("router start");
+
+    let mut c = Client::connect(router.local_addr().to_string())
+        .unwrap();
+    let n = c.info().unwrap().pixels_len();
+    for id in 0..16u64 {
+        let resp = c.infer_pixels(id, "", vec![id as u8; n]).unwrap();
+        assert!(matches!(resp.body, ResponseBody::Infer { .. }),
+                "routed inference failed: {:?}", resp.body);
+    }
+
+    // Heartbeat through the router sums per-model load over live
+    // backends; both mount the synthetic classifier.
+    let loads = c.heartbeat().unwrap();
+    assert_eq!(loads.len(), 1, "one merged model entry: {loads:?}");
+    assert_eq!(loads[0].name, NetKind::Classifier.as_str());
+    assert_eq!(loads[0].capacity, 256 * 2,
+               "capacity must sum across both backends");
+
+    let text = c.metrics().unwrap();
+    for series in [
+        "skydiver_backend_state",
+        "skydiver_backend_ejections_total",
+        "skydiver_backend_failovers_total",
+        "skydiver_backend_heartbeat_latency_us",
+        "skydiver_cluster_backends_live 2",
+        "skydiver_cluster_served_total 16",
+        "skydiver_cluster_failed_total 0",
+        "skydiver_cluster_model_cost_depth{model=\"classifier\"}",
+    ] {
+        assert!(text.contains(series),
+                "metrics must expose {series}:\n{text}");
+    }
+    for addr in [&addr0, &addr1] {
+        assert!(text.contains(
+            &format!("skydiver_backend_state{{backend=\"{addr}\"}} 1")),
+            "both backends live in:\n{text}");
+    }
+
+    // Wire shutdown: acked, router stops, backends stay up.
+    c.shutdown_server().unwrap();
+    drop(c);
+    let rr = router.wait().expect("router report");
+    assert_eq!(rr.served, 16);
+    assert_eq!(rr.failed, 0);
+
+    // Backends are independent processes conceptually — still alive
+    // and serving after the router is gone.
+    let mut direct = Client::connect(&addr0).unwrap();
+    assert!(matches!(direct.infer_pixels(99, "", vec![9u8; n])
+                         .unwrap().body,
+                     ResponseBody::Infer { .. }));
+    drop(direct);
+    gw0.stop_and_wait().unwrap();
+    gw1.stop_and_wait().unwrap();
+}

@@ -258,3 +258,118 @@ fn prop_better_balance_never_slower() {
         }
     }
 }
+
+// ---------------- cluster placement / health invariants ----------------
+
+use skydiver::cluster::{pick_backend, BackendView, HealthPolicy,
+                        HealthState, Transition};
+
+fn rand_views(rng: &mut SplitMix64, models: &[&str])
+              -> Vec<BackendView> {
+    let n = 1 + rng.next_below(8) as usize;
+    (0..n)
+        .map(|_| {
+            let mounted: Vec<(String, u64)> = models
+                .iter()
+                .filter(|_| rng.next_below(3) > 0)
+                .map(|m| (m.to_string(), rng.next_below(1_000_000)))
+                .collect();
+            BackendView {
+                live: rng.next_below(4) > 0,
+                models: mounted,
+                inflight_cost: rng.next_below(1_000_000),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_placement_never_selects_ejected_or_nonmounting() {
+    // The router invariant the chaos test leans on: whatever the
+    // load snapshot looks like, an ejected backend or one that does
+    // not mount the model is never chosen, the pick minimises
+    // cost_depth + inflight_cost, and None is returned exactly when
+    // no live backend mounts the model.
+    let mut rng = SplitMix64::new(0xC1A5);
+    for _ in 0..CASES {
+        let views = rand_views(&mut rng, &["cls", "seg"]);
+        for model in ["cls", "seg", "", "ghost"] {
+            let candidates: Vec<usize> = views
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| v.live && v.mounts(model))
+                .map(|(i, _)| i)
+                .collect();
+            match pick_backend(&views, model) {
+                Some(i) => {
+                    let v = &views[i];
+                    assert!(v.live, "picked an ejected backend");
+                    assert!(v.mounts(model),
+                            "picked a backend not mounting '{model}'");
+                    let key = |j: &usize| {
+                        let u = &views[*j];
+                        u.cost_for(model)
+                            .unwrap()
+                            .saturating_add(u.inflight_cost)
+                    };
+                    let best = candidates.iter().map(key).min()
+                        .expect("a pick implies a candidate");
+                    assert_eq!(key(&i), best,
+                               "pick is not minimal-cost");
+                }
+                None => assert!(
+                    candidates.is_empty(),
+                    "returned None with live candidates for \
+                     '{model}'"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_health_automaton_invariants() {
+    // Random observation sequences: the automaton must (a) only
+    // eject on the configured consecutive-failure count, (b) only
+    // readmit on the configured consecutive-success count, and
+    // (c) emit transitions exactly when `live()` flips.
+    let mut rng = SplitMix64::new(0x4EA1);
+    for _ in 0..CASES {
+        let policy = HealthPolicy {
+            heartbeat_every: std::time::Duration::from_millis(10),
+            eject_after: 1 + rng.next_below(5) as u32,
+            readmit_after: 1 + rng.next_below(5) as u32,
+        };
+        let mut h = HealthState::new();
+        let mut fail_streak = 0u32;
+        let mut ok_streak = 0u32;
+        for _ in 0..200 {
+            let was_live = h.live();
+            let tr = if rng.next_below(2) == 0 {
+                fail_streak += 1;
+                ok_streak = 0;
+                h.on_failure(&policy)
+            } else {
+                ok_streak += 1;
+                fail_streak = 0;
+                h.on_success(&policy)
+            };
+            match tr {
+                Some(Transition::Ejected) => {
+                    assert!(was_live && !h.live());
+                    assert!(fail_streak >= policy.eject_after);
+                }
+                Some(Transition::Readmitted) => {
+                    assert!(!was_live && h.live());
+                    assert!(ok_streak >= policy.readmit_after);
+                }
+                None => assert_eq!(was_live, h.live(),
+                                   "liveness flipped silently"),
+            }
+            // A live backend is always short of the ejection
+            // threshold — hitting it would have ejected it.
+            if h.live() {
+                assert!(h.strikes() < policy.eject_after);
+            }
+        }
+    }
+}

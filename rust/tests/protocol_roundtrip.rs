@@ -10,12 +10,12 @@
 use std::io::Cursor;
 
 use skydiver::data::SplitMix64;
-use skydiver::server::protocol::{read_frame, ErrorCode, ProtoError,
-                                 RequestBody, ResponseBody, WirePayload,
-                                 WireRequest, WireResponse, HEADER_LEN,
-                                 KIND_REQUEST, KIND_RESPONSE, MAGIC,
-                                 MAX_BODY, MAX_MODEL_NAME, NET_ANY, V1,
-                                 V2};
+use skydiver::server::protocol::{read_frame, ErrorCode, ModelLoad,
+                                 ProtoError, RequestBody, ResponseBody,
+                                 WirePayload, WireRequest, WireResponse,
+                                 HEADER_LEN, KIND_REQUEST,
+                                 KIND_RESPONSE, MAGIC, MAX_BODY,
+                                 MAX_MODEL_NAME, NET_ANY, V1, V2};
 
 fn rt_req(req: &WireRequest) {
     let f = req.encode().expect("encode");
@@ -391,6 +391,157 @@ fn trailing_bytes_rejected_but_recoverable() {
     let err = WireRequest::decode_body(ver, &body).unwrap_err();
     assert!(matches!(err, ProtoError::Malformed(_)));
     assert!(!err.is_fatal(), "body-level damage keeps the connection");
+}
+
+// ------------------------------------------- v2 heartbeat (cluster)
+
+#[test]
+fn heartbeat_frames_roundtrip_v2() {
+    rt_req(&WireRequest { id: 99, body: RequestBody::Heartbeat });
+    let mut rng = SplitMix64::new(0x48EA);
+    for &n in &[0usize, 1, 3, 17] {
+        let models: Vec<ModelLoad> = (0..n)
+            .map(|i| ModelLoad {
+                name: if i == 0 {
+                    String::new() // default-model slot
+                } else {
+                    rand_model(&mut rng)
+                },
+                cost_depth: rng.next_u64(),
+                // Exercise the "uncapped" sentinel too.
+                cost_capacity: if i % 2 == 0 {
+                    u64::MAX
+                } else {
+                    rng.next_u64()
+                },
+                depth: rng.next_u64() as u32,
+                capacity: rng.next_u64() as u32,
+            })
+            .collect();
+        rt_resp(&WireResponse {
+            id: rng.next_u64(),
+            body: ResponseBody::Heartbeat { models },
+        });
+    }
+    // A maximum-length model name survives.
+    rt_resp(&WireResponse {
+        id: 1,
+        body: ResponseBody::Heartbeat {
+            models: vec![ModelLoad {
+                name: "m".repeat(MAX_MODEL_NAME),
+                cost_depth: 0,
+                cost_capacity: 0,
+                depth: 0,
+                capacity: 0,
+            }],
+        },
+    });
+}
+
+#[test]
+fn heartbeat_is_v2_only_in_both_directions() {
+    // Encoding: a heartbeat request is not expressible in v1.
+    let req = WireRequest { id: 7, body: RequestBody::Heartbeat };
+    assert!(req.encode_v1().is_err());
+    // Decoding: op 4 under the v1 dialect is malformed, not a
+    // surprise variant — an old gateway answers BAD_REQUEST and the
+    // connection survives.
+    let mut body = Vec::new();
+    body.extend_from_slice(&7u64.to_le_bytes());
+    body.push(4);
+    let err = WireRequest::decode_body(V1, &body).unwrap_err();
+    assert!(matches!(err, ProtoError::Malformed(_)), "{err}");
+    assert!(!err.is_fatal());
+    // Same for response tag 5.
+    let mut rbody = Vec::new();
+    rbody.extend_from_slice(&7u64.to_le_bytes());
+    rbody.push(5);
+    rbody.push(0); // zero models
+    assert!(WireResponse::decode_body(V2, &rbody).is_ok());
+    let err = WireResponse::decode_body(V1, &rbody).unwrap_err();
+    assert!(matches!(err, ProtoError::Malformed(_)), "{err}");
+}
+
+#[test]
+fn every_truncation_of_a_heartbeat_response_is_typed() {
+    let f = WireResponse {
+        id: 11,
+        body: ResponseBody::Heartbeat {
+            models: vec![
+                ModelLoad {
+                    name: "classifier".into(),
+                    cost_depth: 120_000,
+                    cost_capacity: u64::MAX,
+                    depth: 12,
+                    capacity: 256,
+                },
+                ModelLoad {
+                    name: "segmenter".into(),
+                    cost_depth: 50_000,
+                    cost_capacity: 2_560_000,
+                    depth: 5,
+                    capacity: 256,
+                },
+            ],
+        },
+    }
+    .encode(V2);
+    for cut in 0..f.len() {
+        match read_frame(&mut Cursor::new(&f[..cut]), KIND_RESPONSE) {
+            Ok(None) => assert_eq!(cut, 0),
+            Ok(Some(_)) => panic!("prefix of {cut} bytes decoded"),
+            Err(ProtoError::Truncated) => {}
+            Err(e) => panic!("unexpected error at cut {cut}: {e}"),
+        }
+    }
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_RESPONSE)
+        .unwrap().unwrap();
+    for cut in 0..body.len() {
+        assert!(WireResponse::decode_body(ver, &body[..cut]).is_err());
+    }
+    // Trailing garbage after the last model is malformed.
+    let mut b = body.clone();
+    b.push(0x77);
+    assert!(matches!(WireResponse::decode_body(ver, &b),
+                     Err(ProtoError::Malformed(_))));
+}
+
+/// Fuzz the heartbeat response's count and name-length bytes: every
+/// corruption is a typed error or a valid (different) value — never
+/// a panic, never an over-read.
+#[test]
+fn heartbeat_count_and_name_len_fuzz_is_typed() {
+    let f = WireResponse {
+        id: 4,
+        body: ResponseBody::Heartbeat {
+            models: vec![ModelLoad {
+                name: "cls".into(),
+                cost_depth: 1,
+                cost_capacity: 2,
+                depth: 3,
+                capacity: 4,
+            }],
+        },
+    }
+    .encode(V2);
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_RESPONSE)
+        .unwrap().unwrap();
+    // Body layout: id(8) tag(1) nmodels(1) [len(1) name …].
+    for bad in 0..=255u8 {
+        let mut b = body.clone();
+        b[9] = bad; // model count
+        let _ = WireResponse::decode_body(ver, &b);
+        let mut b = body.clone();
+        b[10] = bad; // name length
+        let _ = WireResponse::decode_body(ver, &b);
+    }
+    let mut rng = SplitMix64::new(0xFEED);
+    for _ in 0..500 {
+        let mut b = body.clone();
+        let i = rng.next_below(b.len() as u64) as usize;
+        b[i] = rng.next_below(256) as u8;
+        let _ = WireResponse::decode_body(ver, &b);
+    }
 }
 
 #[test]

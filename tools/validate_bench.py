@@ -12,7 +12,7 @@ Extracted from the inline CI snippets so the same check runs locally:
   ``p99_ns`` and a positive ``frames_per_sec``);
 * serving output must contain the canonical row set (loopback rtt/e2e,
   the two mixed multi-model rows, the skewed FIFO/cost dispatch pair,
-  and the c10k reactor row).
+  the c10k reactor row, and the cluster-router row).
 """
 
 import argparse
@@ -31,6 +31,7 @@ SERVING_ROWS = (
     "serving_skewed_fifo",
     "serving_skewed_cost",
     "serving_c10k",
+    "serving_cluster",
 )
 
 
