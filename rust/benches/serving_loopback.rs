@@ -4,7 +4,7 @@
 //! the simulator. Fully hermetic (synthetic artifacts; no
 //! `make artifacts`).
 //!
-//! Emits eight rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! Emits ten rows into `BENCH_serving.json` (`skydiver-bench-v1`
 //! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
 //!
 //! * `serving_loopback_rtt` — single-connection, window-1 round-trip
@@ -32,6 +32,11 @@
 //!   backends by heartbeat-reported queue cost, so the row prices the
 //!   extra hop plus placement against a single gateway
 //!   (`serving_skewed_fifo` is the closest single-backend row).
+//! * `serving_pipelined` / `serving_traced` — the identical pipelined
+//!   workload against one gateway, back-to-back with span tracing off
+//!   then on (same seed/conns/window), so the pair prices the tracing
+//!   layer end to end. The off leg also asserts the span call sites
+//!   are allocation-free while tracing is disabled.
 
 #[path = "harness.rs"]
 mod harness;
@@ -400,9 +405,77 @@ fn main() {
         bk.stop_and_wait().expect("cluster backend stop");
     }
 
+    // 7. The tracing tax: the same pipelined workload twice against
+    // one gateway — span recording off, then on. The off leg is the
+    // baseline the tracing layer must not move; the on leg prices a
+    // full per-request span timeline (admission, cost-predict, queue,
+    // batch, compute, encode, write) plus the flight recorder.
+    {
+        use skydiver::obs::trace;
+        // The disabled path must be branch-cheap and allocation-free
+        // at the recording call sites themselves.
+        trace::set_enabled(false);
+        let a_off = harness::alloc_count();
+        for i in 0..1000u64 {
+            trace::span([0u8; 16], 0, trace::Stage::Compute, 0, i,
+                        false, 0, 0);
+        }
+        assert_eq!(harness::alloc_count(), a_off,
+                   "disabled tracing allocated on the span path");
+    }
+    let gw_tr = Gateway::start_single(
+        GatewayConfig::default(), service_cfg(),
+        worker_cfg(&dir, NetKind::Classifier))
+        .expect("traced gateway start");
+    let addr_tr = gw_tr.local_addr().to_string();
+    let tr_frames = if quick { 200 } else { 2000 };
+    let mk_tr_cfg = || LoadGenConfig {
+        addr: addr_tr.clone(),
+        model: String::new(),
+        conns: 4,
+        frames: tr_frames,
+        window: 8,
+        spikes: false,
+        retry_busy: true,
+        traffic: TrafficMode::Mixed,
+        seed: 0x72ACE,
+    };
+    let run_leg = |row: &str| {
+        let cfg = mk_tr_cfg();
+        let a = harness::alloc_count();
+        let rep = loadgen::run(&cfg).expect("traced-pair loadgen");
+        let allocs =
+            (harness::alloc_count() - a) as f64 / rep.ok.max(1) as f64;
+        assert_eq!(rep.errors, 0, "traced-pair loadgen frames failed");
+        assert_eq!(rep.ok as usize, tr_frames,
+                   "not all traced-pair frames served");
+        let r = loadgen_row(row, &rep, allocs);
+        r.print();
+        r
+    };
+    let pipelined = run_leg("serving_pipelined");
+    skydiver::obs::trace::set_enabled(true);
+    let traced = run_leg("serving_traced");
+    skydiver::obs::trace::set_enabled(false);
+    println!("tracing tax: off mean={:?} on mean={:?} ({:+.2}%)",
+             pipelined.mean, traced.mean,
+             100.0 * (traced.mean.as_secs_f64()
+                      / pipelined.mean.as_secs_f64() - 1.0));
+    // The traced leg must have actually produced a flight-recorder
+    // dump worth the name.
+    let dump = Client::connect(&addr_tr)
+        .expect("connect for trace dump")
+        .trace_dump().expect("trace dump");
+    assert!(dump.contains("\"traceEvents\""), "dump not chrome JSON");
+    assert!(dump.contains("compute"), "dump records no compute spans");
+    println!("trace dump: {} bytes", dump.len());
+    Client::connect(&addr_tr).expect("connect for traced shutdown")
+        .shutdown_server().expect("traced shutdown");
+    gw_tr.wait().expect("traced gateway wait");
+
     let path = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".into());
     harness::write_json_to(
         &path, &[rtt, e2e, mixed_cls, mixed_seg, skew_fifo, skew_cost,
-                 c10k, cluster]);
+                 c10k, cluster, pipelined, traced]);
 }

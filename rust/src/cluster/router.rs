@@ -57,12 +57,16 @@ use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::NOMINAL_FRAME_COST;
 use crate::data::SplitMix64;
+use crate::obs::recorder::{self, TraceMeta};
+use crate::obs::trace::{self, Stage};
 use crate::server::client::Client;
 use crate::server::loadgen::busy_backoff;
 use crate::server::protocol::{parse_frame, ErrorCode, ModelLoad,
-                              RequestBody, ResponseBody, WireRequest,
-                              WireResponse, CONN_ERR_ID, HEADER_LEN,
-                              KIND_REQUEST, KIND_RESPONSE, V1, V2};
+                              RequestBody, ResponseBody, TraceContext,
+                              WireRequest, WireResponse, CONN_ERR_ID,
+                              HEADER_LEN, KIND_REQUEST, KIND_RESPONSE,
+                              V1, V2};
+use crate::{log_error, log_info, log_warn};
 use crate::server::reactor::{fd_of, poll, raise_nofile_limit, PollFd,
                              RecvBuf, Waker, POLLIN, POLLOUT};
 
@@ -126,6 +130,32 @@ struct Pending {
     backend: usize,
     /// Predicted cost charged to `inflight_cost` while dispatched.
     cost: u64,
+    /// Tracing baggage, present only for `Infer` requests admitted
+    /// while span recording was enabled.
+    trace: Option<RouteTrace>,
+}
+
+/// Per-request tracing state. The root `route` span covers client
+/// arrival to reply and is recorded when the request finishes
+/// ([`finish_trace`]); each dispatch opens an `attempt` span whose id
+/// is pre-allocated (it rides upstream as the [`TraceContext`]
+/// parent, so backend-side spans nest under the attempt) and recorded
+/// once the attempt resolves — success at [`route_response`], failure
+/// at failover.
+#[derive(Clone, Copy)]
+struct RouteTrace {
+    trace_id: [u8; 16],
+    /// Parent of the root span (from the client's wire context; 0
+    /// when the router originated the trace).
+    parent: u64,
+    /// Pre-allocated id of the root `route` span.
+    root_span: u64,
+    t_arrival_ns: u64,
+    /// Open attempt's pre-allocated span id (0 = none open).
+    attempt_span: u64,
+    t_attempt_ns: u64,
+    /// Interned model slot ([`trace::intern_model`]).
+    model: u32,
 }
 
 #[derive(Default)]
@@ -223,6 +253,47 @@ impl RouterShared {
     }
 }
 
+/// Close out a traced request as the router answers the client:
+/// record any still-open `attempt` span, the root `route` span, and
+/// the flight-recorder completion. `error` marks both the root span
+/// and the open attempt.
+fn finish_trace(p: &Pending, error: bool) {
+    let Some(t) = p.trace else { return };
+    let now = trace::now_ns();
+    if t.attempt_span != 0 {
+        trace::record(&trace::SpanRecord {
+            trace_id: t.trace_id,
+            span_id: t.attempt_span,
+            parent_span: t.root_span,
+            start_ns: t.t_attempt_ns,
+            end_ns: now,
+            stage: Stage::Attempt,
+            model: t.model,
+            error,
+            attr_a: p.backend as u64,
+            attr_b: p.attempts as u64 + 1,
+        });
+    }
+    trace::record(&trace::SpanRecord {
+        trace_id: t.trace_id,
+        span_id: t.root_span,
+        parent_span: t.parent,
+        start_ns: t.t_arrival_ns,
+        end_ns: now,
+        stage: Stage::Route,
+        model: t.model,
+        error,
+        attr_a: p.attempts as u64 + 1,
+        attr_b: 0,
+    });
+    recorder::complete(TraceMeta {
+        trace_id: t.trace_id,
+        model: t.model,
+        latency_us: now.saturating_sub(t.t_arrival_ns) / 1_000,
+        error,
+    });
+}
+
 // ---------------------------------------------------- placement core
 
 /// Place one pending request on a backend, or schedule a retry /
@@ -260,11 +331,22 @@ fn dispatch(shared: &Arc<RouterShared>, internal: u64) {
             };
             p.backend = bi;
             let cost = p.cost;
+            // Open this dispatch's `attempt` span: the id is chosen
+            // now so it can ride upstream as the backend's parent;
+            // the span itself is recorded when the attempt resolves.
+            let ctx = p.trace.as_mut().map(|t| {
+                t.attempt_span = trace::next_span_id();
+                t.t_attempt_ns = trace::now_ns();
+                TraceContext {
+                    trace_id: t.trace_id,
+                    parent_span: t.attempt_span,
+                }
+            });
             let enc = WireRequest {
                 id: internal,
                 body: p.body.clone(),
             }
-            .encode();
+            .encode_with_trace(ctx.as_ref());
             match enc {
                 Ok(frame) => {
                     drop(pending);
@@ -278,6 +360,7 @@ fn dispatch(shared: &Arc<RouterShared>, internal: u64) {
                     let p = pending.remove(&internal).unwrap();
                     drop(pending);
                     shared.failed.fetch_add(1, Ordering::SeqCst);
+                    finish_trace(&p, true);
                     shared.reply_error(
                         &p,
                         ErrorCode::BadRequest,
@@ -298,6 +381,7 @@ fn dispatch(shared: &Arc<RouterShared>, internal: u64) {
                     shared.pending.lock().unwrap().remove(&internal);
                 if let Some(p) = removed {
                     shared.failed.fetch_add(1, Ordering::SeqCst);
+                    finish_trace(&p, true);
                     shared.reply_error(
                         &p,
                         ErrorCode::BadRequest,
@@ -332,6 +416,10 @@ fn schedule_retry(shared: &Arc<RouterShared>, internal: u64,
             let p = pending.remove(&internal).unwrap();
             drop(pending);
             shared.failed.fetch_add(1, Ordering::SeqCst);
+            log_error!("cluster",
+                       "request for model '{}' failed after \
+                        {attempts} attempts: {why}", p.model);
+            finish_trace(&p, true);
             shared.reply_error(
                 &p,
                 ErrorCode::Internal,
@@ -409,6 +497,7 @@ fn note_failure(shared: &Arc<RouterShared>, bi: usize, why: &str) {
     if tr == Some(Transition::Ejected) {
         b.live.store(false, Ordering::SeqCst);
         b.counters.ejections.fetch_add(1, Ordering::SeqCst);
+        log_warn!("cluster", "backend {} ejected ({why})", b.addr);
         failover_inflight(shared, bi, why);
     }
 }
@@ -431,6 +520,27 @@ fn failover_inflight(shared: &Arc<RouterShared>, bi: usize,
         let mut new_ids = Vec::with_capacity(ids.len());
         for id in ids {
             let mut p = pending.remove(&id).unwrap();
+            // The open attempt died with the backend: record it as an
+            // errored sibling under the root `route` span, so the
+            // failover shows up as attempt[n] (error) next to the
+            // eventual attempt[n+1] on a survivor.
+            if let Some(t) = p.trace.as_mut() {
+                if t.attempt_span != 0 {
+                    trace::record(&trace::SpanRecord {
+                        trace_id: t.trace_id,
+                        span_id: t.attempt_span,
+                        parent_span: t.root_span,
+                        start_ns: t.t_attempt_ns,
+                        end_ns: trace::now_ns(),
+                        stage: Stage::Attempt,
+                        model: t.model,
+                        error: true,
+                        attr_a: bi as u64,
+                        attr_b: p.attempts as u64 + 1,
+                    });
+                    t.attempt_span = 0;
+                }
+            }
             p.backend = UNASSIGNED;
             let nid = shared.next_id.fetch_add(1, Ordering::SeqCst);
             pending.insert(nid, p);
@@ -441,6 +551,9 @@ fn failover_inflight(shared: &Arc<RouterShared>, bi: usize,
     if moved.is_empty() {
         return;
     }
+    log_warn!("cluster",
+              "failing over {} in-flight request(s) from backend {} \
+               ({why})", moved.len(), b.addr);
     b.counters
         .failovers
         .fetch_add(moved.len() as u64, Ordering::SeqCst);
@@ -478,6 +591,8 @@ fn probe_until_readmitted(shared: &Arc<RouterShared>, bi: usize) {
                     b.counters
                         .readmissions
                         .fetch_add(1, Ordering::SeqCst);
+                    log_info!("cluster", "backend {} readmitted",
+                              b.addr);
                     return;
                 }
             }
@@ -666,6 +781,7 @@ fn route_response(shared: &Arc<RouterShared>, bi: usize,
             |v| Some(v.saturating_sub(p.cost)),
         );
     }
+    let is_err = matches!(resp.body, ResponseBody::Error { .. });
     match &resp.body {
         ResponseBody::Error { code: ErrorCode::Busy, .. } => {
             shared.busy.fetch_add(1, Ordering::SeqCst);
@@ -677,6 +793,7 @@ fn route_response(shared: &Arc<RouterShared>, bi: usize,
             shared.served.fetch_add(1, Ordering::SeqCst);
         }
     }
+    finish_trace(&p, is_err);
     let f = WireResponse { id: p.client_id, body: resp.body }
         .encode(p.version);
     shared.reply(p.conn, f);
@@ -912,7 +1029,8 @@ fn read_client(shared: &Arc<RouterShared>, cid: u64, c: &mut CConn) {
 
 fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
                      c: &mut CConn, ver: u8, body: &[u8]) {
-    let req = match WireRequest::decode_body(ver, body) {
+    let (req, wire_ctx) =
+        match WireRequest::decode_body_traced(ver, body) {
         Ok(r) => r,
         Err(e) => {
             let f = err_frame(
@@ -967,6 +1085,18 @@ fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
             push_frame_c(c, f);
             shared.trigger_stop();
         }
+        // The router's own flight-recorder dump (route/attempt
+        // spans). Backend-side spans live in each backend's dump.
+        RequestBody::Trace => {
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::Trace {
+                    json: recorder::dump_chrome_json(),
+                },
+            }
+            .encode(ver);
+            push_frame_c(c, f);
+        }
         body @ (RequestBody::Infer { .. }
         | RequestBody::Info { .. }) => {
             if shared.stopping() {
@@ -987,6 +1117,28 @@ fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
                 RequestBody::Info { model } => (model.clone(), 0),
                 _ => unreachable!(),
             };
+            // Adopt the client's trace context (its spans become our
+            // root's parent) or start a fresh trace. Only `Infer`
+            // carries the context upstream, so only it is traced.
+            let tr = if trace::enabled()
+                && matches!(body, RequestBody::Infer { .. })
+            {
+                let cx = wire_ctx.unwrap_or(TraceContext {
+                    trace_id: trace::gen_trace_id(),
+                    parent_span: 0,
+                });
+                Some(RouteTrace {
+                    trace_id: cx.trace_id,
+                    parent: cx.parent_span,
+                    root_span: trace::next_span_id(),
+                    t_arrival_ns: trace::now_ns(),
+                    attempt_span: 0,
+                    t_attempt_ns: 0,
+                    model: trace::intern_model(&model),
+                })
+            } else {
+                None
+            };
             let internal =
                 shared.next_id.fetch_add(1, Ordering::SeqCst);
             shared.pending.lock().unwrap().insert(
@@ -1000,6 +1152,7 @@ fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
                     attempts: 0,
                     backend: UNASSIGNED,
                     cost,
+                    trace: tr,
                 },
             );
             dispatch(shared, internal);
@@ -1392,6 +1545,8 @@ pub fn render_cluster_metrics(r: &RouterReport) -> String {
              {d}"
         );
     }
+    crate::obs::render_build_info(&mut out);
+    trace::render_stage_metrics(&mut out);
     out
 }
 
@@ -1517,6 +1672,10 @@ impl Router {
                 .spawn(move || retry_loop(sh))
                 .context("spawning router retry thread")?
         };
+        log_info!("cluster",
+                  "router listening on {local_addr} ({} backend(s), \
+                   tracing {})", shared.backends.len(),
+                  if trace::enabled() { "on" } else { "off" });
         Ok(Self {
             shared,
             local_addr,

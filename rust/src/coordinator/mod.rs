@@ -79,5 +79,6 @@ pub use service::{DispatchMode, FrameSpec, Service, ServiceConfig,
                   ServiceHandle};
 pub use stats::{host_balance_ratio, LatencyHistogram, ServingReport,
                 Stats};
-pub use worker::{default_input_rates, FramePayload, Policy, Request,
-                 Response, SharedPipeline, WorkerConfig, WorkerEvent};
+pub use worker::{default_input_rates, FramePayload, Policy, ReqTrace,
+                 Request, Response, SharedPipeline, WorkerConfig,
+                 WorkerEvent};

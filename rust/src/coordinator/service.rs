@@ -19,9 +19,9 @@ use anyhow::{anyhow, bail, ensure, Result};
 use super::cost::RequestCostModel;
 use super::queue::{BoundedQueue, ConsumerGuard, QueueStats, SubmitError};
 use super::stats::{ServingReport, Stats};
-use super::worker::{worker_loop, FramePayload, Request, Response,
-                    SharedPipeline, WorkSource, WorkerConfig,
-                    WorkerEvent};
+use super::worker::{worker_loop, FramePayload, ReqTrace, Request,
+                    Response, SharedPipeline, WorkSource,
+                    WorkerConfig, WorkerEvent};
 use crate::snn::NetKind;
 
 /// How batches reach the workers.
@@ -205,11 +205,24 @@ impl ServiceHandle {
     pub fn try_submit_cost(&self, id: u64, payload: FramePayload,
                            cost: u64)
                            -> std::result::Result<(), SubmitError> {
+        self.try_submit_cost_traced(id, payload, cost, None)
+    }
+
+    /// [`try_submit_cost`](Self::try_submit_cost) carrying span-
+    /// timeline identity: the worker that pulls the request records
+    /// its queue/batch/compute spans against it. `None` (every caller
+    /// with tracing off) adds one `Option` discriminant — nothing
+    /// else.
+    pub fn try_submit_cost_traced(&self, id: u64, payload: FramePayload,
+                                  cost: u64, trace: Option<ReqTrace>)
+                                  -> std::result::Result<(), SubmitError>
+    {
         self.queue.try_push_cost(Request {
             id,
             payload,
             submitted: Instant::now(),
             cost,
+            trace,
         }, cost)
     }
 
@@ -222,6 +235,7 @@ impl ServiceHandle {
             payload,
             submitted: Instant::now(),
             cost,
+            trace: None,
         }, cost)
     }
 
@@ -399,6 +413,7 @@ impl Service {
                 payload,
                 submitted: Instant::now(),
                 cost,
+                trace: None,
             }, cost)
             .map_err(|e| anyhow!("submit frame {id}: {e}"))
     }
@@ -419,6 +434,7 @@ impl Service {
             payload,
             submitted: Instant::now(),
             cost,
+            trace: None,
         }, cost)
     }
 

@@ -24,6 +24,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::queue::{BoundedQueue, ConsumerGuard};
 use super::service::FrameSpec;
+use crate::obs::trace::{self, Stage};
 use crate::power::{EnergyModel, ResourceModel};
 use crate::runtime::{Runtime, SnnRunner};
 use crate::schedule::cbws::Cbws;
@@ -57,6 +58,21 @@ impl FramePayload {
     }
 }
 
+/// Trace identity a traced request carries through the queue into its
+/// worker, which records the queue/batch/compute spans against it.
+/// `Copy` baggage: the untraced path carries one `Option` discriminant
+/// and never allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct ReqTrace {
+    pub trace_id: [u8; 16],
+    /// Span all of this request's stage spans hang under (0 = root).
+    pub parent: u64,
+    /// Monotonic ns (trace epoch) when the request entered the queue.
+    pub t_enqueue_ns: u64,
+    /// Interned model index ([`crate::obs::trace::intern_model`]).
+    pub model: u32,
+}
+
 /// One inference request: a raw image frame or a pre-encoded train,
 /// tagged at admission with its predicted cost.
 #[derive(Debug, Clone)]
@@ -69,6 +85,9 @@ pub struct Request {
     /// cost-aware batch assembly balances and cost-denominated
     /// admission sheds by.
     pub cost: u64,
+    /// Span-timeline identity (`None` when tracing was disabled at
+    /// admission).
+    pub trace: Option<ReqTrace>,
 }
 
 /// Completed inference.
@@ -376,18 +395,42 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
         timesteps,
     };
     while let Some(batch) = source.next_batch() {
+        // Queue spans close at pull time: submit -> this worker took
+        // the batch. Traced requests only exist while tracing is on,
+        // so the disabled path never reads the span clock.
+        let t_pull = if trace::enabled() { trace::now_ns() } else { 0 };
+        for req in &batch {
+            if let Some(rt) = req.trace {
+                trace::span(rt.trace_id, rt.parent, Stage::QueueWait,
+                            rt.model, rt.t_enqueue_ns, false, 0, 0);
+            }
+        }
         // Functional batches can fan out over the frame-parallel sweep
         // when the worker is configured wider than 1; responses are
         // still emitted in batch order.
         if runner.is_none() && cfg.sweep_threads > 1 && batch.len() > 1 {
-            serve_batch_sweep(idx, cfg, &sim, &spec, batch, events)?;
+            serve_batch_sweep(idx, cfg, &sim, &spec, batch, t_pull,
+                              events)?;
             continue;
         }
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        let nbatch = ids.len() as u64;
         for (i, req) in batch.into_iter().enumerate() {
             // This request plus the rest of the batch die with us.
             let lost = &ids[i..];
+            // Batch span: pull -> this request's compute start (the
+            // intra-batch serialization wait); attrs = batch size,
+            // position.
+            if let Some(rt) = req.trace {
+                trace::span(rt.trace_id, rt.parent, Stage::Batch,
+                            rt.model, t_pull, false, nbatch, i as u64);
+            }
             let t0 = Instant::now();
+            let t_compute = if req.trace.is_some() {
+                trace::now_ns()
+            } else {
+                0
+            };
             check(events, idx, lost, validate_frame(&req, &spec))?;
             let inputs = encode_request(&req, &spec);
             let trace = match runner.as_mut() {
@@ -397,6 +440,11 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
             };
             let report =
                 check(events, idx, lost, sim.run_frame(&inputs, &trace))?;
+            if let Some(rt) = req.trace {
+                trace::span(rt.trace_id, rt.parent, Stage::Compute,
+                            rt.model, t_compute, false,
+                            report.total_cycles, req.cost);
+            }
             let energy = cfg.energy.frame_energy(&report,
                                                  cfg.arch.clock_hz);
             let resp = Response {
@@ -426,8 +474,19 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
 /// sweep failure loses the whole batch.
 fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
                      spec: &FrameSpec, batch: Vec<Request>,
+                     t_pull: u64,
                      events: &mpsc::Sender<WorkerEvent>) -> Result<()> {
     let t0 = Instant::now();
+    let t_sweep = if trace::enabled() { trace::now_ns() } else { 0 };
+    let nbatch = batch.len() as u64;
+    for (i, req) in batch.iter().enumerate() {
+        // Sweep frames start together: every batch span closes at the
+        // sweep launch instead of a per-request compute start.
+        if let Some(rt) = req.trace {
+            trace::span(rt.trace_id, rt.parent, Stage::Batch,
+                        rt.model, t_pull, false, nbatch, i as u64);
+        }
+    }
     let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
     let first_bad = batch.iter()
         .position(|r| validate_frame(r, spec).is_err())
@@ -444,6 +503,11 @@ fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
     let per_frame_us =
         (t0.elapsed().as_micros() as u64) / good.len().max(1) as u64;
     for (req, report) in good.iter().zip(&reports) {
+        if let Some(rt) = req.trace {
+            trace::span(rt.trace_id, rt.parent, Stage::Compute,
+                        rt.model, t_sweep, false,
+                        report.total_cycles, req.cost);
+        }
         let energy = cfg.energy.frame_energy(report, cfg.arch.clock_hz);
         let resp = Response {
             id: req.id,

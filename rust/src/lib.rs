@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod power;
 pub mod runtime;
 pub mod schedule;

@@ -94,9 +94,22 @@ COMMANDS:
              write synthetic artifacts (serve/test without
              `make artifacts`)
   trace      [--net classifier|segmenter] [--plain] [--policy P] [--golden]
+             one-frame per-layer simulator trace; OR, with --addr:
+  trace      --addr HOST:PORT [--chrome] [--out FILE]
+             fetch the flight-recorder span dump from a live gateway
+             or router started with --trace (or SKYDIVER_TRACE=1).
+             Default output is a human span tree; --chrome emits
+             Chrome trace-event JSON (load in chrome://tracing or
+             Perfetto); --out writes to a file instead of stdout.
   experiment <id> [--frames N] [--golden]
              ids: fig2 fig4c fig6 fig7 table1 table2 gains accuracy
                   ablation timesteps all
+
+GLOBAL:
+  --log-level error|warn|info|debug   stderr diagnostics (default
+             warn; SKYDIVER_LOG equivalent)
+  --trace    enable span tracing in serve/route (SKYDIVER_TRACE=1
+             equivalent); dump with `skydiver trace --addr ...`
 
 POLICIES: contiguous round_robin random sparten cbws (default cbws)
 ";
@@ -133,8 +146,11 @@ const FLAG_SPECS: &[(&str, bool)] = &[
     ("window", true),
     ("out", true),
     ("side", true),
+    ("log-level", true),
     ("plain", false),
     ("golden", false),
+    ("trace", false),
+    ("chrome", false),
     ("spikes", false),
     ("no-retry", false),
     ("shutdown", false),
@@ -280,8 +296,18 @@ fn parse_model_spec(s: &str) -> Result<(String, NetKind)> {
 }
 
 fn main() -> Result<()> {
+    skydiver::obs::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
+    if let Some(v) = args.get("log-level") {
+        let l = skydiver::obs::log::parse_level(v)
+            .ok_or_else(|| anyhow!("unknown --log-level {v} \
+                                    (error|warn|info|debug)"))?;
+        skydiver::obs::log::set_level(l);
+    }
+    if args.has("trace") {
+        skydiver::obs::trace::set_enabled(true);
+    }
     if args.has("help") || argv.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -767,7 +793,33 @@ fn synth_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `skydiver trace --addr HOST:PORT`: pull the flight-recorder span
+/// dump off a live server. The default rendering is the terminal
+/// span tree; `--chrome` passes the raw Chrome trace-event JSON
+/// through (for chrome://tracing / Perfetto), `--out` redirects
+/// either form to a file.
+fn trace_fetch(addr: &str, args: &Args) -> Result<()> {
+    let mut client = Client::connect(addr)?;
+    let json = client.trace_dump()?;
+    let text = if args.has("chrome") {
+        json
+    } else {
+        skydiver::obs::recorder::render_tree(&json)?
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {} bytes to {path}", text.len());
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
 fn trace(artifacts: &Path, args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("addr") {
+        return trace_fetch(addr, args);
+    }
     let kind = match args.get("net") {
         None => NetKind::Segmenter,
         Some(s) => NetKind::parse(s)
@@ -970,6 +1022,28 @@ mod tests {
         assert_eq!(plan.seed, 7);
         // A bad plan is a startup error, not a silent no-op.
         assert!(FaultPlan::parse("busy=2.0").is_err());
+    }
+
+    #[test]
+    fn observability_flags_parse() {
+        let a = Args::parse(&sv(&[
+            "serve", "--trace", "--log-level", "debug",
+        ])).unwrap();
+        assert!(a.has("trace"));
+        assert_eq!(a.get("log-level"), Some("debug"));
+        assert!(skydiver::obs::log::parse_level("debug").is_some());
+        // The fetch form of the trace subcommand.
+        let f = Args::parse(&sv(&[
+            "trace", "--addr", "127.0.0.1:7878", "--chrome",
+            "--out", "/tmp/spans.json",
+        ])).unwrap();
+        assert_eq!(f.positional, vec!["trace".to_string()]);
+        assert!(f.has("chrome"));
+        assert_eq!(f.get("addr"), Some("127.0.0.1:7878"));
+        assert_eq!(f.get("out"), Some("/tmp/spans.json"));
+        // Typos near the new flags still suggest correctly.
+        assert_eq!(suggest("lg-level"), Some("log-level"));
+        assert_eq!(suggest("chrme"), Some("chrome"));
     }
 
     #[test]

@@ -60,7 +60,9 @@ impl Table {
     }
 }
 
-/// Format a value with SI prefix (e.g. 22600 -> "22.6K").
+/// Format a value with SI prefix, trailing zeros trimmed (22600 ->
+/// "22.6K", 42 -> "42") — padded zeros would misreport precision in
+/// experiment tables and `ServingReport` summaries.
 pub fn si(v: f64) -> String {
     let (scaled, suffix) = if v.abs() >= 1e9 {
         (v / 1e9, "G")
@@ -71,11 +73,19 @@ pub fn si(v: f64) -> String {
     } else {
         (v, "")
     };
-    format!("{scaled:.3}{suffix}")
+    let num = format!("{scaled:.3}");
+    let num = num.trim_end_matches('0').trim_end_matches('.');
+    format!("{num}{suffix}")
 }
 
-/// Latency percentile helper for the serving coordinator.
+/// Latency percentile helper for the serving coordinator. The input
+/// must already be sorted ascending (debug-asserted): a percentile of
+/// an unsorted vector is a silent lie.
 pub fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    debug_assert!(
+        sorted_us.windows(2).all(|w| w[0] <= w[1]),
+        "percentile() input must be sorted ascending"
+    );
     if sorted_us.is_empty() {
         return 0;
     }
@@ -97,11 +107,14 @@ mod tests {
     }
 
     #[test]
-    fn si_prefixes() {
-        assert_eq!(si(22_600.0), "22.600K");
-        assert_eq!(si(0.11e9), "110.000M");
-        assert_eq!(si(2.26e10), "22.600G");
-        assert_eq!(si(42.0), "42.000");
+    fn si_prefixes_trim_trailing_zeros() {
+        assert_eq!(si(22_600.0), "22.6K");
+        assert_eq!(si(0.11e9), "110M");
+        assert_eq!(si(2.26e10), "22.6G");
+        assert_eq!(si(42.0), "42");
+        assert_eq!(si(1_234.0), "1.234K");
+        assert_eq!(si(0.5), "0.5");
+        assert_eq!(si(0.0), "0");
     }
 
     #[test]

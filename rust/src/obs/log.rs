@@ -1,0 +1,163 @@
+//! Leveled structured logger for the serving/cluster tiers.
+//!
+//! One static level gate (`SKYDIVER_LOG=error|warn|info|debug` or
+//! `--log-level`), monotonic timestamps from the shared trace epoch,
+//! and a `target` field so CI smoke logs are greppable per subsystem:
+//!
+//! ```text
+//! [12.041633 WARN cluster::router] backend 127.0.0.1:4012 ejected after 2 misses
+//! ```
+//!
+//! Use through the crate-root macros:
+//!
+//! ```ignore
+//! log_warn!("cluster::router", "backend {addr} ejected after {n} misses");
+//! ```
+//!
+//! The macros check [`enabled`] before building `format_args`, so a
+//! disabled level costs one relaxed atomic load — cheap enough for
+//! event sites, though per-request hot paths should not log at all.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// Default: warnings and errors only (quiet tests / CI logs).
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Parse a `SKYDIVER_LOG` / `--log-level` value (case-insensitive).
+pub fn parse_level(s: &str) -> Option<Level> {
+    Some(match s.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" | "warning" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        _ => return None,
+    })
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Would a record at `l` be emitted right now?
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr. Called by the `log_*!` macros after
+/// their level check; the line is formatted into a small buffer first
+/// so concurrent threads do not interleave mid-record.
+pub fn write(l: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    let t = super::trace::uptime_secs();
+    let line = format!("[{t:.6} {} {target}] {args}\n", l.as_str());
+    let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Error,
+                $target,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Warn,
+                $target,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Info,
+                $target,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Debug,
+                $target,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_case_insensitively() {
+        assert_eq!(parse_level("WARN"), Some(Level::Warn));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("Info"), Some(Level::Info));
+        assert_eq!(parse_level("warning"), Some(Level::Warn));
+        assert_eq!(parse_level("trace"), None);
+    }
+
+    #[test]
+    fn gate_respects_ordering() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(prev);
+    }
+}

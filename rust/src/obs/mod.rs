@@ -1,0 +1,75 @@
+//! Observability: span tracing, flight recorder, leveled logging,
+//! and build/uptime identity metrics.
+//!
+//! Submodules:
+//! * [`trace`] — per-thread lock-free span rings, the monotonic
+//!   process epoch, model interning, and `skydiver_stage_us`
+//!   histograms. Disabled by default; `--trace` / `SKYDIVER_TRACE=1`
+//!   turns it on.
+//! * [`recorder`] — flight recorder of recent / slowest / errored
+//!   traces, Chrome trace-event dump, terminal tree renderer.
+//! * [`log`] — leveled stderr logger behind the crate-root
+//!   `log_warn!`-family macros; `SKYDIVER_LOG` / `--log-level`.
+
+pub mod log;
+pub mod recorder;
+pub mod trace;
+
+pub use trace::uptime_secs;
+
+/// Crate version baked at compile time.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Git revision if the build exported `SKYDIVER_GIT_SHA`.
+pub const GIT_SHA: &str = match option_env!("SKYDIVER_GIT_SHA") {
+    Some(s) => s,
+    None => "unknown",
+};
+
+/// Read `SKYDIVER_LOG` and `SKYDIVER_TRACE` once at process start.
+/// CLI flags (`--log-level`, `--trace`) override afterwards.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SKYDIVER_LOG") {
+        if let Some(l) = log::parse_level(&v) {
+            log::set_level(l);
+        }
+    }
+    if let Ok(v) = std::env::var("SKYDIVER_TRACE") {
+        if v == "1" || v.eq_ignore_ascii_case("true") {
+            trace::set_enabled(true);
+        }
+    }
+}
+
+/// Append `skydiver_build_info` and `skydiver_uptime_seconds` to a
+/// Prometheus exposition. Shared by the gateway and the router so
+/// multi-process cluster scrapes attribute samples to a binary.
+pub fn render_build_info(out: &mut String) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE skydiver_build_info gauge");
+    let _ = writeln!(
+        out,
+        "skydiver_build_info{{version=\"{VERSION}\",git=\"{GIT_SHA}\"}} 1"
+    );
+    let _ = writeln!(out, "# TYPE skydiver_uptime_seconds gauge");
+    let _ = writeln!(
+        out,
+        "skydiver_uptime_seconds {:.3}",
+        uptime_secs()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_info_exposition_is_well_formed() {
+        let mut out = String::new();
+        render_build_info(&mut out);
+        assert!(out.contains("skydiver_build_info{version=\""));
+        assert!(out.contains("skydiver_uptime_seconds "));
+        assert!(!VERSION.is_empty());
+        assert!(!GIT_SHA.is_empty());
+    }
+}

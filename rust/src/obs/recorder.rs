@@ -1,0 +1,400 @@
+//! Flight recorder: which recent traces are worth looking at.
+//!
+//! The span rings ([`super::trace`]) hold raw spans; the recorder
+//! indexes *completed requests* — the last [`LAST_N`] plus, per
+//! model, the [`TOP_K`] slowest and the [`TOP_K`] most recent errors
+//! — so a dump surfaces the interesting traces instead of whatever
+//! happens to be newest. `complete()` runs at reply time (once per
+//! request, off the per-frame hot path) and takes a brief mutex; a
+//! dump walks the reservoirs, snapshots every ring, and emits Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto loadable).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+use super::trace::{self, SpanRecord};
+use crate::util::json::Json;
+
+/// Completed traces retained in arrival order.
+pub const LAST_N: usize = 128;
+/// Slowest / most-recent-error traces retained per model.
+pub const TOP_K: usize = 16;
+
+/// Identity + verdict of one completed request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceMeta {
+    pub trace_id: [u8; 16],
+    /// Interned model index ([`trace::intern_model`]).
+    pub model: u32,
+    pub latency_us: u64,
+    pub error: bool,
+}
+
+#[derive(Default)]
+struct ModelReservoir {
+    /// Sorted descending by latency, truncated to [`TOP_K`].
+    slowest: Vec<TraceMeta>,
+    /// Most recent errors, oldest popped first.
+    errors: VecDeque<TraceMeta>,
+}
+
+#[derive(Default)]
+struct Inner {
+    last: VecDeque<TraceMeta>,
+    per_model: HashMap<u32, ModelReservoir>,
+}
+
+fn inner() -> &'static Mutex<Inner> {
+    static R: OnceLock<Mutex<Inner>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Inner::default()))
+}
+
+/// Note a completed request. Call once, at reply time, only when
+/// tracing is enabled (the caller already holds a trace id).
+pub fn complete(meta: TraceMeta) {
+    let mut r = inner().lock().unwrap();
+    if r.last.len() == LAST_N {
+        r.last.pop_front();
+    }
+    r.last.push_back(meta);
+    let res = r.per_model.entry(meta.model).or_default();
+    if meta.error {
+        if res.errors.len() == TOP_K {
+            res.errors.pop_front();
+        }
+        res.errors.push_back(meta);
+    }
+    let pos = res
+        .slowest
+        .binary_search_by(|m| meta.latency_us.cmp(&m.latency_us))
+        .unwrap_or_else(|p| p);
+    if pos < TOP_K {
+        res.slowest.insert(pos, meta);
+        res.slowest.truncate(TOP_K);
+    }
+}
+
+/// All retained trace metadata (last-N window + reservoirs),
+/// deduplicated by trace id.
+fn retained() -> Vec<TraceMeta> {
+    let r = inner().lock().unwrap();
+    let mut seen: Vec<TraceMeta> = Vec::new();
+    let mut push = |m: &TraceMeta| {
+        if !seen.iter().any(|s| s.trace_id == m.trace_id) {
+            seen.push(*m);
+        }
+    };
+    for m in &r.last {
+        push(m);
+    }
+    for res in r.per_model.values() {
+        for m in &res.slowest {
+            push(m);
+        }
+        for m in &res.errors {
+            push(m);
+        }
+    }
+    seen
+}
+
+fn span_event(rec: &SpanRecord, tid: usize) -> Json {
+    let mut args = vec![
+        ("trace", Json::str(rec.trace_hex())),
+        ("span", Json::num(rec.span_id as f64)),
+        ("parent", Json::num(rec.parent_span as f64)),
+        ("error", Json::Bool(rec.error)),
+        ("a", Json::num(rec.attr_a as f64)),
+        ("b", Json::num(rec.attr_b as f64)),
+    ];
+    if let Some(name) = trace::model_name(rec.model) {
+        args.push(("model", Json::str(name)));
+    }
+    Json::obj(vec![
+        ("name", Json::str(rec.stage.as_str())),
+        ("cat", Json::str("skydiver")),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(rec.start_ns as f64 / 1_000.0)),
+        (
+            "dur",
+            Json::num(
+                rec.end_ns.saturating_sub(rec.start_ns) as f64 / 1_000.0,
+            ),
+        ),
+        ("pid", Json::num(std::process::id() as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// Dump every span belonging to a retained trace as Chrome
+/// trace-event JSON: `{"traceEvents":[...]}` with complete (`"ph":
+/// "X"`) events, `ts`/`dur` in microseconds since the process trace
+/// epoch. `tid` is an arbitrary per-dump lane index used to keep
+/// overlapping spans visible.
+pub fn dump_chrome_json() -> String {
+    let keep: Vec<[u8; 16]> =
+        retained().iter().map(|m| m.trace_id).collect();
+    let mut spans: Vec<SpanRecord> = trace::snapshot_all()
+        .into_iter()
+        .filter(|s| keep.iter().any(|k| *k == s.trace_id))
+        .collect();
+    spans.sort_by_key(|s| (s.trace_id, s.start_ns, s.span_id));
+    spans.dedup_by_key(|s| (s.trace_id, s.span_id, s.stage as u8));
+
+    // Lane assignment: spans that overlap in time get distinct tids
+    // so chrome://tracing stacks rather than hides them.
+    let mut lane_end: Vec<u64> = Vec::new();
+    let mut events = Vec::with_capacity(spans.len());
+    for s in &spans {
+        let lane = match lane_end
+            .iter()
+            .position(|&end| end <= s.start_ns)
+        {
+            Some(i) => {
+                lane_end[i] = s.end_ns;
+                i
+            }
+            None => {
+                lane_end.push(s.end_ns);
+                lane_end.len() - 1
+            }
+        };
+        events.push(span_event(s, lane));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))]).to_string()
+}
+
+/// Render a Chrome trace-event dump (ours or a compatible one) as an
+/// indented per-trace span tree for terminal reading:
+///
+/// ```text
+/// trace 4f2a… (model=classifier)
+///   route 812.4us
+///     attempt 801.9us [backend=0]
+/// ```
+pub fn render_tree(json: &str) -> Result<String> {
+    struct Node {
+        name: String,
+        ts: f64,
+        dur: f64,
+        span: u64,
+        parent: u64,
+        model: Option<String>,
+        error: bool,
+        a: f64,
+        b: f64,
+    }
+
+    let doc = Json::parse(json)?;
+    let events = doc.field("traceEvents")?.as_arr()?;
+    // trace hex -> nodes
+    let mut traces: Vec<(String, Vec<Node>)> = Vec::new();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str().ok()) != Some("X") {
+            continue;
+        }
+        let args = ev.field("args")?;
+        let trace = args.field("trace")?.as_str()?.to_string();
+        let node = Node {
+            name: ev.field("name")?.as_str()?.to_string(),
+            ts: ev.field("ts")?.as_f64()?,
+            dur: ev.field("dur")?.as_f64()?,
+            span: args.field("span")?.as_f64()? as u64,
+            parent: args.field("parent")?.as_f64()? as u64,
+            model: args
+                .get("model")
+                .and_then(|m| m.as_str().ok())
+                .map(str::to_string),
+            error: args
+                .get("error")
+                .and_then(|e| e.as_bool().ok())
+                .unwrap_or(false),
+            a: args.get("a").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+            b: args.get("b").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+        };
+        match traces.iter_mut().find(|(t, _)| *t == trace) {
+            Some((_, v)) => v.push(node),
+            None => traces.push((trace, vec![node])),
+        }
+    }
+    if traces.is_empty() {
+        bail!("no complete ('ph':'X') span events in dump");
+    }
+
+    fn emit(
+        out: &mut String,
+        nodes: &[Node],
+        parent: u64,
+        depth: usize,
+    ) {
+        use std::fmt::Write as _;
+        let mut children: Vec<&Node> =
+            nodes.iter().filter(|n| n.parent == parent).collect();
+        children.sort_by(|x, y| {
+            x.ts.partial_cmp(&y.ts).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for c in children {
+            let _ = write!(
+                out,
+                "{:indent$}{} {:.1}us",
+                "",
+                c.name,
+                c.dur,
+                indent = 2 + depth * 2
+            );
+            if c.error {
+                out.push_str(" ERROR");
+            }
+            if c.a != 0.0 || c.b != 0.0 {
+                use std::fmt::Write as _;
+                let _ = write!(out, " [a={} b={}]", c.a, c.b);
+            }
+            out.push('\n');
+            emit(out, nodes, c.span, depth + 1);
+        }
+    }
+
+    let mut out = String::new();
+    for (trace, nodes) in &traces {
+        use std::fmt::Write as _;
+        let model = nodes
+            .iter()
+            .find_map(|n| n.model.as_deref())
+            .unwrap_or("-");
+        let _ = writeln!(out, "trace {trace} (model={model})");
+        // Roots: parent id not present among this trace's spans
+        // (covers parent=0 and cross-process parents).
+        let mut roots: Vec<&Node> = nodes
+            .iter()
+            .filter(|n| !nodes.iter().any(|m| m.span == n.parent))
+            .collect();
+        roots.sort_by(|x, y| {
+            x.ts.partial_cmp(&y.ts).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for r in roots {
+            use std::fmt::Write as _;
+            let _ = write!(
+                out,
+                "  {} {:.1}us",
+                r.name, r.dur
+            );
+            if r.error {
+                out.push_str(" ERROR");
+            }
+            out.push('\n');
+            emit(&mut out, nodes, r.span, 1);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{
+        next_span_id, record, set_enabled, Stage, MODEL_NONE,
+    };
+
+    fn meta(id: u8, latency: u64, error: bool) -> TraceMeta {
+        TraceMeta {
+            trace_id: [id; 16],
+            model: MODEL_NONE,
+            latency_us: latency,
+            error,
+        }
+    }
+
+    #[test]
+    fn slowest_reservoir_keeps_top_k_sorted() {
+        for i in 0..(TOP_K as u64 + 40) {
+            complete(meta((i % 200) as u8, i * 10, false));
+        }
+        let r = retained();
+        // The slowest request ever seen must still be retained even
+        // though the last-N window also covers it here.
+        assert!(r.iter().any(|m| m.latency_us
+            == (TOP_K as u64 + 39) * 10));
+    }
+
+    #[test]
+    fn dump_and_tree_roundtrip() {
+        set_enabled(true);
+        let trace_id = crate::obs::trace::gen_trace_id();
+        let root = next_span_id();
+        let child = next_span_id();
+        record(&SpanRecord {
+            trace_id,
+            span_id: root,
+            parent_span: 0,
+            start_ns: 1_000,
+            end_ns: 9_000,
+            stage: Stage::Route,
+            model: MODEL_NONE,
+            error: false,
+            attr_a: 0,
+            attr_b: 0,
+        });
+        record(&SpanRecord {
+            trace_id,
+            span_id: child,
+            parent_span: root,
+            start_ns: 2_000,
+            end_ns: 8_000,
+            stage: Stage::Attempt,
+            model: MODEL_NONE,
+            error: false,
+            attr_a: 2,
+            attr_b: 1,
+        });
+        set_enabled(false);
+        complete(TraceMeta {
+            trace_id,
+            model: MODEL_NONE,
+            latency_us: 8,
+            error: false,
+        });
+
+        let json = dump_chrome_json();
+        let doc = Json::parse(&json).unwrap();
+        let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+        let hex = crate::obs::trace::trace_id_hex(&trace_id);
+        let ours: Vec<_> = events
+            .iter()
+            .filter(|e| {
+                e.field("args")
+                    .and_then(|a| a.field("trace"))
+                    .and_then(|t| t.as_str().map(str::to_string))
+                    .map(|t| t == hex)
+                    .unwrap_or(false)
+            })
+            .collect();
+        assert_eq!(ours.len(), 2);
+
+        let tree = render_tree(&json).unwrap();
+        assert!(tree.contains(&format!("trace {hex}")));
+        // The attempt is indented under the route root.
+        let route_line = tree
+            .lines()
+            .position(|l| l.trim_start().starts_with("route"))
+            .unwrap();
+        let attempt_line = tree
+            .lines()
+            .position(|l| l.trim_start().starts_with("attempt"))
+            .unwrap();
+        assert!(attempt_line > route_line);
+        let indent = |s: &str| s.len() - s.trim_start().len();
+        let lines: Vec<&str> = tree.lines().collect();
+        assert!(
+            indent(lines[attempt_line]) > indent(lines[route_line])
+        );
+    }
+
+    #[test]
+    fn tree_rejects_span_free_dump() {
+        assert!(render_tree("{\"traceEvents\":[]}").is_err());
+        assert!(render_tree("not json").is_err());
+    }
+}

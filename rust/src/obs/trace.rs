@@ -1,0 +1,628 @@
+//! Span recording: per-thread lock-free rings of fixed-size span
+//! records, a process-wide monotonic clock, model-name interning, and
+//! per-(stage, model) explicit-bucket latency histograms.
+//!
+//! Design rules:
+//!
+//! * **Disabled is free.** [`enabled`] is one relaxed atomic load;
+//!   every instrumentation point checks it before taking timestamps
+//!   or touching a ring. No allocation ever happens on the disabled
+//!   path (enforced by the alloc-counting bench harness).
+//! * **Recording never blocks.** A span is recorded *at its end* as
+//!   one fixed-size [`SpanRecord`] into the recording thread's own
+//!   ring. Slots are seqlock-versioned arrays of atomics: the single
+//!   writer bumps the slot sequence to odd, stores the words, bumps
+//!   it back to even; a concurrent dump that observes a mid-write or
+//!   changed sequence skips the slot. No locks, no unsafe.
+//! * **Strings stay off the hot path.** Models are interned once (at
+//!   gateway startup or first sight) to a `u32` index; span records
+//!   carry the index, dumps resolve it back.
+//!
+//! The ring is a bounded history (newest [`RING_CAP`] spans per
+//! thread): a flight-recorder dump reconstructs *recent* traces
+//! best-effort — spans older than one ring lap are gone, which is the
+//! point of a flight recorder.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Pipeline stages a span can describe, in hot-path order. The
+/// `as_str` names are the wire/dump/metrics vocabulary — `PERF.md`
+/// maps each to the code it measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Gateway request validation + model resolution (`handle_infer`
+    /// entry to cost prediction).
+    Admission = 0,
+    /// Request-level APRC cost prediction (`predict_cost`).
+    CostPredict = 1,
+    /// Bounded-queue residency: submit to worker pull.
+    QueueWait = 2,
+    /// Batch assembly + intra-batch wait: worker pull to this
+    /// request's compute start.
+    Batch = 3,
+    /// Worker compute: encode + simulate (sim cycles and predicted
+    /// cost ride along as attributes).
+    Compute = 4,
+    /// Response encoding in the gateway router thread.
+    Encode = 5,
+    /// Reactor write: response frame queued on the connection until
+    /// fully written to the socket.
+    Write = 6,
+    /// Cluster router: whole client-request residency in the router.
+    Route = 7,
+    /// Cluster router: one dispatch attempt against one backend;
+    /// failover produces sibling attempts under the same parent.
+    Attempt = 8,
+}
+
+/// Number of [`Stage`] variants (histogram table dimension).
+pub const N_STAGES: usize = 9;
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::CostPredict => "cost_predict",
+            Stage::QueueWait => "queue",
+            Stage::Batch => "batch",
+            Stage::Compute => "compute",
+            Stage::Encode => "encode",
+            Stage::Write => "write",
+            Stage::Route => "route",
+            Stage::Attempt => "attempt",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::Admission,
+            1 => Stage::CostPredict,
+            2 => Stage::QueueWait,
+            3 => Stage::Batch,
+            4 => Stage::Compute,
+            5 => Stage::Encode,
+            6 => Stage::Write,
+            7 => Stage::Route,
+            8 => Stage::Attempt,
+            _ => return None,
+        })
+    }
+}
+
+/// Model index meaning "no model attribution" (framing errors, router
+/// spans for Info requests, …).
+pub const MODEL_NONE: u32 = u32::MAX;
+
+/// One completed span, fixed-size (packs into [`SLOT_WORDS`] u64s).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub trace_id: [u8; 16],
+    pub span_id: u64,
+    /// 0 = root (no parent).
+    pub parent_span: u64,
+    /// Monotonic ns since this process's [`epoch`].
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub stage: Stage,
+    /// Interned model index ([`intern_model`]) or [`MODEL_NONE`].
+    pub model: u32,
+    pub error: bool,
+    /// Stage-specific: sim cycles (compute), backend index (attempt).
+    pub attr_a: u64,
+    /// Stage-specific: predicted cost (compute), attempt number
+    /// (attempt).
+    pub attr_b: u64,
+}
+
+impl SpanRecord {
+    pub fn duration_us(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns) / 1_000
+    }
+
+    /// Lowercase-hex trace id (the dump/wire spelling).
+    pub fn trace_hex(&self) -> String {
+        trace_id_hex(&self.trace_id)
+    }
+
+    fn pack(&self) -> [u64; SLOT_WORDS] {
+        [
+            u64::from_le_bytes(self.trace_id[..8].try_into().unwrap()),
+            u64::from_le_bytes(self.trace_id[8..].try_into().unwrap()),
+            self.span_id,
+            self.parent_span,
+            self.start_ns,
+            self.end_ns,
+            (self.stage as u64)
+                | ((self.error as u64) << 8)
+                | ((self.model as u64) << 16),
+            self.attr_a,
+            self.attr_b,
+        ]
+    }
+
+    fn unpack(w: &[u64; SLOT_WORDS]) -> Option<SpanRecord> {
+        let mut trace_id = [0u8; 16];
+        trace_id[..8].copy_from_slice(&w[0].to_le_bytes());
+        trace_id[8..].copy_from_slice(&w[1].to_le_bytes());
+        Some(SpanRecord {
+            trace_id,
+            span_id: w[2],
+            parent_span: w[3],
+            start_ns: w[4],
+            end_ns: w[5],
+            stage: Stage::from_u8((w[6] & 0xFF) as u8)?,
+            error: (w[6] >> 8) & 1 == 1,
+            model: (w[6] >> 16) as u32,
+            attr_a: w[7],
+            attr_b: w[8],
+        })
+    }
+}
+
+/// Render a 16-byte trace id as 32 lowercase hex chars.
+pub fn trace_id_hex(id: &[u8; 16]) -> String {
+    let mut s = String::with_capacity(32);
+    for b in id {
+        use std::fmt::Write as _;
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+/// Parse the hex spelling back (dump stitching in tests/tools).
+pub fn trace_id_from_hex(s: &str) -> Option<[u8; 16]> {
+    if s.len() != 32 {
+        return None;
+    }
+    let mut id = [0u8; 16];
+    for (i, chunk) in s.as_bytes().chunks(2).enumerate() {
+        let hx = std::str::from_utf8(chunk).ok()?;
+        id[i] = u8::from_str_radix(hx, 16).ok()?;
+    }
+    Some(id)
+}
+
+// -------------------------------------------------------- global state
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static TRACE_CTR: AtomicU64 = AtomicU64::new(0);
+
+/// Is span recording on? One relaxed load — the whole cost of the
+/// disabled path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip span recording (CLI `--trace`, `SKYDIVER_TRACE=1`, benches).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// The process's span clock origin. First use pins it; all span
+/// timestamps are ns since this instant (monotonic, never wall time).
+pub fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic ns since [`epoch`].
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Seconds since [`epoch`] (uptime metric, log timestamps).
+pub fn uptime_secs() -> f64 {
+    epoch().elapsed().as_secs_f64()
+}
+
+/// Fresh process-unique span id (0 is reserved for "no parent").
+pub fn next_span_id() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Fresh 16-byte trace id: a per-process random seed (wall clock ^
+/// pid, so two processes started together still diverge) mixed with a
+/// counter — unique within a process, collision-negligible across the
+/// cluster.
+pub fn gen_trace_id() -> [u8; 16] {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    let seed = *SEED.get_or_init(|| {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        splitmix64(t ^ ((std::process::id() as u64) << 32))
+    });
+    let n = TRACE_CTR.fetch_add(1, Ordering::Relaxed);
+    let a = splitmix64(seed ^ n);
+    let b = splitmix64(a ^ n.rotate_left(32));
+    let mut id = [0u8; 16];
+    id[..8].copy_from_slice(&a.to_le_bytes());
+    id[8..].copy_from_slice(&b.to_le_bytes());
+    id
+}
+
+// ------------------------------------------------------ span rings
+
+/// Spans retained per recording thread (power of two).
+pub const RING_CAP: usize = 4096;
+const SLOT_WORDS: usize = 9;
+
+struct Slot {
+    /// Seqlock: odd while the writer is mid-store; a reader that sees
+    /// the value change (or odd) discards the slot.
+    seq: AtomicU64,
+    words: [AtomicU64; SLOT_WORDS],
+}
+
+/// One thread's span history. Written only by the owning thread,
+/// snapshot from any thread.
+pub struct SpanRing {
+    slots: Vec<Slot>,
+    head: AtomicU64,
+}
+
+impl SpanRing {
+    fn new() -> Self {
+        let slots = (0..RING_CAP)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                words: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        Self { slots, head: AtomicU64::new(0) }
+    }
+
+    fn push(&self, rec: &SpanRecord) {
+        let h = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(h as usize) & (RING_CAP - 1)];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(seq.wrapping_add(1), Ordering::Release);
+        for (w, v) in slot.words.iter().zip(rec.pack()) {
+            w.store(v, Ordering::Release);
+        }
+        slot.seq.store(seq.wrapping_add(2), Ordering::Release);
+    }
+
+    fn snapshot_into(&self, out: &mut Vec<SpanRecord>) {
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue; // never written, or mid-write
+            }
+            let mut words = [0u64; SLOT_WORDS];
+            for (d, w) in words.iter_mut().zip(&slot.words) {
+                *d = w.load(Ordering::Acquire);
+            }
+            if slot.seq.load(Ordering::Acquire) != s1 {
+                continue; // overwritten while reading
+            }
+            if let Some(rec) = SpanRecord::unpack(&words) {
+                out.push(rec);
+            }
+        }
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<SpanRing>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<SpanRing>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: Arc<SpanRing> = {
+        let ring = Arc::new(SpanRing::new());
+        registry().lock().unwrap().push(ring.clone());
+        ring
+    };
+}
+
+/// Record one completed span into the calling thread's ring and fold
+/// its duration into the stage histograms. No-op while disabled.
+pub fn record(rec: &SpanRecord) {
+    if !enabled() {
+        return;
+    }
+    LOCAL_RING.with(|r| r.push(rec));
+    observe_stage(rec.stage, rec.model, rec.duration_us());
+}
+
+/// Record one completed span `[start_ns, now]` in one call and return
+/// its fresh span id (0 when tracing is disabled — callers hand the
+/// returned id to child spans as `parent_span`). The argument list
+/// mirrors [`SpanRecord`] minus the ids/end, which this fills in.
+#[allow(clippy::too_many_arguments)]
+pub fn span(trace_id: [u8; 16], parent_span: u64, stage: Stage,
+            model: u32, start_ns: u64, error: bool, attr_a: u64,
+            attr_b: u64) -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    let span_id = next_span_id();
+    record(&SpanRecord {
+        trace_id,
+        span_id,
+        parent_span,
+        start_ns,
+        end_ns: now_ns(),
+        stage,
+        model,
+        error,
+        attr_a,
+        attr_b,
+    });
+    span_id
+}
+
+/// Copy every live span out of every thread's ring (dump path only —
+/// walks all rings under the registry lock).
+pub fn snapshot_all() -> Vec<SpanRecord> {
+    let rings: Vec<Arc<SpanRing>> =
+        registry().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        ring.snapshot_into(&mut out);
+    }
+    out
+}
+
+// --------------------------------------------------- model interning
+
+/// Model-name slots with their own histogram row (index
+/// `MAX_MODEL_SLOTS - 1` is the shared overflow row, labelled
+/// `_other`).
+const MAX_MODEL_SLOTS: usize = 17;
+
+fn models() -> &'static Mutex<Vec<String>> {
+    static M: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Intern a model name to a stable index. Call at mount time, not per
+/// request (takes a lock, may allocate).
+pub fn intern_model(name: &str) -> u32 {
+    let mut m = models().lock().unwrap();
+    if let Some(i) = m.iter().position(|n| n == name) {
+        return i as u32;
+    }
+    m.push(name.to_string());
+    (m.len() - 1) as u32
+}
+
+/// Resolve an interned index back to its name.
+pub fn model_name(idx: u32) -> Option<String> {
+    if idx == MODEL_NONE {
+        return None;
+    }
+    models().lock().unwrap().get(idx as usize).cloned()
+}
+
+// ----------------------------------------------------- stage histograms
+
+/// Explicit bucket bounds (µs) for `skydiver_stage_us`.
+pub const BUCKETS_US: [u64; 16] = [
+    1, 2, 5, 10, 25, 50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000,
+    25_000, 50_000, 100_000,
+];
+
+struct Hist {
+    /// One counter per bound plus the `+Inf` overflow.
+    buckets: [AtomicU64; BUCKETS_US.len() + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Hist {
+    fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, us: u64) {
+        let i = BUCKETS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(BUCKETS_US.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `hists()[stage][model_slot]`; the last model slot aggregates
+/// everything beyond `MAX_MODEL_SLOTS - 1` interned models.
+fn hists() -> &'static Vec<Vec<Hist>> {
+    static H: OnceLock<Vec<Vec<Hist>>> = OnceLock::new();
+    H.get_or_init(|| {
+        (0..N_STAGES)
+            .map(|_| (0..MAX_MODEL_SLOTS).map(|_| Hist::new()).collect())
+            .collect()
+    })
+}
+
+fn model_slot(model: u32) -> usize {
+    if model == MODEL_NONE {
+        MAX_MODEL_SLOTS - 1
+    } else {
+        (model as usize).min(MAX_MODEL_SLOTS - 1)
+    }
+}
+
+/// Fold one stage duration into its `skydiver_stage_us` histogram.
+/// (Called by [`record`]; callers that bypass rings can call it
+/// directly.)
+pub fn observe_stage(stage: Stage, model: u32, dur_us: u64) {
+    hists()[stage as usize][model_slot(model)].observe(dur_us);
+}
+
+/// Append the `skydiver_stage_us` Prometheus histogram exposition
+/// (cumulative buckets, `_sum`, `_count`) for every (stage, model)
+/// pair that has observations. Shared by the gateway and the router.
+pub fn render_stage_metrics(out: &mut String) {
+    use std::fmt::Write as _;
+    let h = hists();
+    let _ = writeln!(out, "# TYPE skydiver_stage_us histogram");
+    for stage_idx in 0..N_STAGES {
+        let stage = Stage::from_u8(stage_idx as u8).unwrap();
+        for slot in 0..MAX_MODEL_SLOTS {
+            let hist = &h[stage_idx][slot];
+            let count = hist.count.load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
+            }
+            let model = if slot == MAX_MODEL_SLOTS - 1 {
+                "_other".to_string()
+            } else {
+                model_name(slot as u32)
+                    .unwrap_or_else(|| "_other".to_string())
+            };
+            let stage_s = stage.as_str();
+            let mut cum = 0u64;
+            for (i, &le) in BUCKETS_US.iter().enumerate() {
+                cum += hist.buckets[i].load(Ordering::Relaxed);
+                let _ = writeln!(
+                    out,
+                    "skydiver_stage_us_bucket{{stage=\"{stage_s}\",\
+                     model=\"{model}\",le=\"{le}\"}} {cum}"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "skydiver_stage_us_bucket{{stage=\"{stage_s}\",\
+                 model=\"{model}\",le=\"+Inf\"}} {count}"
+            );
+            let _ = writeln!(
+                out,
+                "skydiver_stage_us_sum{{stage=\"{stage_s}\",\
+                 model=\"{model}\"}} {}",
+                hist.sum_us.load(Ordering::Relaxed)
+            );
+            let _ = writeln!(
+                out,
+                "skydiver_stage_us_count{{stage=\"{stage_s}\",\
+                 model=\"{model}\"}} {count}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(stage: Stage, span: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id: [7; 16],
+            span_id: span,
+            parent_span: 0,
+            start_ns: 100,
+            end_ns: 2_100,
+            stage,
+            model: MODEL_NONE,
+            error: false,
+            attr_a: 42,
+            attr_b: 7,
+        }
+    }
+
+    #[test]
+    fn span_record_packs_and_unpacks() {
+        let mut r = rec(Stage::Compute, 9);
+        r.model = 3;
+        r.error = true;
+        let w = r.pack();
+        assert_eq!(SpanRecord::unpack(&w), Some(r));
+    }
+
+    #[test]
+    fn disabled_recording_is_invisible() {
+        set_enabled(false);
+        let before = snapshot_all().len();
+        record(&rec(Stage::Admission, next_span_id()));
+        assert_eq!(snapshot_all().len(), before);
+    }
+
+    #[test]
+    fn enabled_recording_lands_in_a_snapshot() {
+        set_enabled(true);
+        let span = next_span_id();
+        record(&rec(Stage::QueueWait, span));
+        set_enabled(false);
+        assert!(snapshot_all().iter().any(|r| r.span_id == span));
+    }
+
+    #[test]
+    fn ring_keeps_only_the_newest_lap() {
+        let ring = SpanRing::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            ring.push(&rec(Stage::Write, i));
+        }
+        let mut out = Vec::new();
+        ring.snapshot_into(&mut out);
+        assert_eq!(out.len(), RING_CAP);
+        // Span 0..9 were lapped; the newest survive.
+        assert!(out.iter().all(|r| r.span_id >= 10));
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_hex_roundtrips() {
+        let a = gen_trace_id();
+        let b = gen_trace_id();
+        assert_ne!(a, b);
+        assert_eq!(trace_id_from_hex(&trace_id_hex(&a)), Some(a));
+        assert_eq!(trace_id_from_hex("zz"), None);
+    }
+
+    #[test]
+    fn stage_histogram_buckets_are_cumulative() {
+        observe_stage(Stage::Encode, MODEL_NONE, 3);
+        observe_stage(Stage::Encode, MODEL_NONE, 400);
+        observe_stage(Stage::Encode, MODEL_NONE, 9_999_999);
+        let mut out = String::new();
+        render_stage_metrics(&mut out);
+        assert!(out.contains("# TYPE skydiver_stage_us histogram"));
+        assert!(out.contains(
+            "skydiver_stage_us_bucket{stage=\"encode\",\
+             model=\"_other\",le=\"+Inf\"}"
+        ));
+        // +Inf count equals _count for the same series.
+        let inf: u64 = out
+            .lines()
+            .find(|l| {
+                l.starts_with(
+                    "skydiver_stage_us_bucket{stage=\"encode\"",
+                ) && l.contains("le=\"+Inf\"")
+            })
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .unwrap();
+        let count: u64 = out
+            .lines()
+            .find(|l| {
+                l.starts_with(
+                    "skydiver_stage_us_count{stage=\"encode\"",
+                )
+            })
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .unwrap();
+        assert_eq!(inf, count);
+        assert!(count >= 3);
+    }
+}

@@ -274,6 +274,23 @@ impl Client {
         }
     }
 
+    /// Fetch the peer's flight-recorder dump (v2 only): Chrome
+    /// trace-event JSON of recent / slowest / errored request traces
+    /// (`{"traceEvents":[]}` when the peer has tracing disabled).
+    pub fn trace_dump(&mut self) -> Result<String> {
+        if self.version == V1 {
+            bail!("trace dump requires protocol v2");
+        }
+        self.send(&WireRequest { id: 0, body: RequestBody::Trace })?;
+        match self.recv()?.body {
+            ResponseBody::Trace { json } => Ok(json),
+            ResponseBody::Error { code, detail } => {
+                bail!("trace dump failed: {} {detail}", code.as_str())
+            }
+            other => bail!("unexpected trace response: {other:?}"),
+        }
+    }
+
     /// Fetch the Prometheus-style metrics exposition.
     pub fn metrics(&mut self) -> Result<String> {
         self.send(&WireRequest { id: 0, body: RequestBody::Metrics })?;

@@ -43,6 +43,21 @@
 //!   response reports every mounted model's queue-cost depth
 //!   ([`ModelLoad`], `coordinator/cost.rs` units) so the router can
 //!   place requests on the least-loaded-by-cost backend.
+//! * `op 5` **Trace** — empty, **v2 only**. Asks the peer for its
+//!   flight-recorder dump (Chrome trace-event JSON of recent /
+//!   slowest / errored request traces, see `obs::recorder`).
+//!
+//! ## Trace-context extension (v2, `Infer` only)
+//!
+//! A v2 `Infer` body may carry one optional trailing extension:
+//! `ext_tag: u8` ([`EXT_TRACE`]) + 16-byte trace id + `u64` parent
+//! span id ([`TraceContext`]). The cluster router uses it to stitch
+//! its hop and the backend gateway's spans into one distributed
+//! timeline. Absent extension = zero extra bytes (the common case is
+//! free); an unknown tag is malformed. [`WireRequest::decode_body`]
+//! stays strict (trailing bytes rejected) — extension-aware peers opt
+//! in via [`WireRequest::decode_body_traced`]. v1 frames never carry
+//! extensions.
 //!
 //! ## Response body
 //!
@@ -62,6 +77,8 @@
 //!   model: `name_len: u8` + name, `cost_depth: u64`,
 //!   `cost_capacity: u64` (`u64::MAX` = uncapped), `depth: u32`,
 //!   `capacity: u32`.
+//! * `tag 6` **Trace** — **v2 only:** `len: u32`, UTF-8 JSON (the
+//!   flight-recorder dump).
 //!
 //! Decoding is total: every malformed input returns a typed
 //! [`ProtoError`], never panics. [`ProtoError::is_fatal`] separates
@@ -101,6 +118,19 @@ pub const NET_ANY: u8 = 0xFF;
 /// pipelined client can tell "your request failed" from "this
 /// connection failed". Requests must not use it.
 pub const CONN_ERR_ID: u64 = u64::MAX;
+/// Request-extension tag: trace context (16-byte trace id + u64
+/// parent span id) trailing a v2 `Infer` body.
+pub const EXT_TRACE: u8 = 1;
+
+/// Distributed-tracing context riding a v2 `Infer` request as an
+/// optional trailing extension: which trace this request belongs to
+/// and which span in the sender's timeline is its parent (0 = none —
+/// the receiver's spans become roots of the trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    pub trace_id: [u8; 16],
+    pub parent_span: u64,
+}
 
 // ---------------------------------------------------------------- errors
 
@@ -235,8 +265,8 @@ pub struct WireRequest {
 /// or the empty string for the server's default model. v1 frames decode
 /// with an empty `model` (they cannot name one), and a request naming a
 /// model is not expressible in v1 ([`WireRequest::encode_v1`] refuses).
-/// `Heartbeat` (the cluster health/load probe) is v2-only in both
-/// directions.
+/// `Heartbeat` (the cluster health/load probe) and `Trace` (the
+/// flight-recorder dump request) are v2-only in both directions.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RequestBody {
     Infer { net: u8, model: String, payload: WirePayload },
@@ -244,6 +274,7 @@ pub enum RequestBody {
     Shutdown,
     Info { model: String },
     Heartbeat,
+    Trace,
 }
 
 /// One mounted model's queue occupancy as reported in a `Heartbeat`
@@ -272,7 +303,8 @@ pub struct WireResponse {
 
 /// `Info.model`/`Info.nmodels` are v2-only fields: a v1 encode drops
 /// them, a v1 decode reports the empty name and `nmodels: 1`.
-/// `Heartbeat` is v2-only: a v1 frame carrying tag 5 is malformed.
+/// `Heartbeat` and `Trace` are v2-only: a v1 frame carrying tag 5 or
+/// 6 is malformed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ResponseBody {
     Infer {
@@ -294,6 +326,7 @@ pub enum ResponseBody {
         nmodels: u8,
     },
     Heartbeat { models: Vec<ModelLoad> },
+    Trace { json: String },
 }
 
 // -------------------------------------------------------------- encode
@@ -339,6 +372,16 @@ impl WireRequest {
     /// Full v2 frame (header + body), ready to write to a socket.
     /// Errors only on an over-long model name ([`MAX_MODEL_NAME`]).
     pub fn encode(&self) -> Result<Vec<u8>, ProtoError> {
+        self.encode_with_trace(None)
+    }
+
+    /// Full v2 frame with an optional trailing [`TraceContext`]
+    /// extension. The extension is only expressible on `Infer`
+    /// bodies; requesting it on any other op is an encode error
+    /// (nothing reaches the wire). `trace: None` encodes byte-exactly
+    /// like [`WireRequest::encode`].
+    pub fn encode_with_trace(&self, trace: Option<&TraceContext>)
+                             -> Result<Vec<u8>, ProtoError> {
         let mut b = Vec::new();
         put_u64(&mut b, self.id);
         match &self.body {
@@ -347,14 +390,30 @@ impl WireRequest {
                 b.push(*net);
                 put_model(&mut b, model)?;
                 encode_payload(&mut b, payload);
+                if let Some(t) = trace {
+                    b.push(EXT_TRACE);
+                    b.extend_from_slice(&t.trace_id);
+                    put_u64(&mut b, t.parent_span);
+                }
             }
-            RequestBody::Metrics => b.push(1),
-            RequestBody::Shutdown => b.push(2),
-            RequestBody::Info { model } => {
-                b.push(3);
-                put_model(&mut b, model)?;
+            other => {
+                if trace.is_some() {
+                    return Err(ProtoError::Malformed(format!(
+                        "trace context is only expressible on Infer, \
+                         not {other:?}")));
+                }
+                match other {
+                    RequestBody::Infer { .. } => unreachable!(),
+                    RequestBody::Metrics => b.push(1),
+                    RequestBody::Shutdown => b.push(2),
+                    RequestBody::Info { model } => {
+                        b.push(3);
+                        put_model(&mut b, model)?;
+                    }
+                    RequestBody::Heartbeat => b.push(4),
+                    RequestBody::Trace => b.push(5),
+                }
             }
-            RequestBody::Heartbeat => b.push(4),
         }
         Ok(frame(V2, KIND_REQUEST, b))
     }
@@ -390,17 +449,40 @@ impl WireRequest {
                 return Err(ProtoError::Malformed(
                     "heartbeat requires protocol v2".into()));
             }
+            RequestBody::Trace => {
+                return Err(ProtoError::Malformed(
+                    "trace dump requires protocol v2".into()));
+            }
         }
         Ok(frame(V1, KIND_REQUEST, b))
     }
 
     /// Decode a request body (the bytes after the frame header) at the
-    /// version the frame header carried.
+    /// version the frame header carried. Strict: a trailing
+    /// trace-context extension is rejected as trailing garbage — use
+    /// [`WireRequest::decode_body_traced`] to accept it.
     pub fn decode_body(version: u8, body: &[u8])
                        -> Result<Self, ProtoError> {
+        Self::decode_body_inner(version, body, false)
+            .map(|(req, _)| req)
+    }
+
+    /// Extension-aware decode: like [`WireRequest::decode_body`] but
+    /// a v2 `Infer` body may end with a [`TraceContext`] extension,
+    /// returned alongside the request. Extension-free bodies decode
+    /// identically in both entry points (`None` here). v1 frames
+    /// never carry extensions, so trailing bytes stay malformed.
+    pub fn decode_body_traced(version: u8, body: &[u8])
+            -> Result<(Self, Option<TraceContext>), ProtoError> {
+        Self::decode_body_inner(version, body, true)
+    }
+
+    fn decode_body_inner(version: u8, body: &[u8], want_ext: bool)
+            -> Result<(Self, Option<TraceContext>), ProtoError> {
         let mut r = Cursor::new(body);
         let id = r.u64()?;
         let op = r.u8()?;
+        let mut trace = None;
         let body = match op {
             0 => {
                 let net = r.u8()?;
@@ -409,6 +491,22 @@ impl WireRequest {
                     _ => r.model()?,
                 };
                 let payload = decode_payload(&mut r)?;
+                if want_ext && version != V1 && r.remaining() > 0 {
+                    match r.u8()? {
+                        EXT_TRACE => {
+                            let mut trace_id = [0u8; 16];
+                            trace_id.copy_from_slice(r.bytes(16)?);
+                            let parent_span = r.u64()?;
+                            trace = Some(TraceContext {
+                                trace_id, parent_span,
+                            });
+                        }
+                        tag => {
+                            return Err(ProtoError::Malformed(format!(
+                                "unknown request extension tag {tag}")))
+                        }
+                    }
+                }
                 RequestBody::Infer { net, model, payload }
             }
             1 => RequestBody::Metrics,
@@ -427,13 +525,20 @@ impl WireRequest {
                 }
                 RequestBody::Heartbeat
             }
+            5 => {
+                if version == V1 {
+                    return Err(ProtoError::Malformed(
+                        "trace dump requires protocol v2".into()));
+                }
+                RequestBody::Trace
+            }
             op => {
                 return Err(ProtoError::Malformed(format!(
                     "unknown request op {op}")))
             }
         };
         r.finish()?;
-        Ok(WireRequest { id, body })
+        Ok((WireRequest { id, body }, trace))
     }
 }
 
@@ -563,6 +668,14 @@ impl WireResponse {
                     put_u32(&mut b, m.capacity);
                 }
             }
+            ResponseBody::Trace { json } => {
+                // v2-only on the wire, same reasoning as Heartbeat:
+                // only ever sent in reply to a (v2-only) trace
+                // request.
+                b.push(6);
+                put_u32(&mut b, json.len() as u32);
+                b.extend_from_slice(json.as_bytes());
+            }
         }
         frame(version, KIND_RESPONSE, b)
     }
@@ -637,6 +750,14 @@ impl WireResponse {
                     });
                 }
                 ResponseBody::Heartbeat { models }
+            }
+            6 => {
+                if version == V1 {
+                    return Err(ProtoError::Malformed(
+                        "trace dump requires protocol v2".into()));
+                }
+                let n = r.u32()? as usize;
+                ResponseBody::Trace { json: r.utf8(n)? }
             }
             tag => {
                 return Err(ProtoError::Malformed(format!(
@@ -809,6 +930,11 @@ impl<'a> Cursor<'a> {
     fn model(&mut self) -> Result<String, ProtoError> {
         let n = self.u8()? as usize;
         self.utf8(n)
+    }
+
+    /// Bytes not yet consumed (extension probing).
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     /// Reject trailing bytes — a well-formed body is consumed exactly.
@@ -1263,6 +1389,167 @@ mod tests {
                 .unwrap().unwrap();
         assert_eq!(WireResponse::decode_body(ver, &body).unwrap(),
                    empty);
+    }
+
+    #[test]
+    fn trace_context_extension_roundtrips() {
+        let req = WireRequest {
+            id: 21,
+            body: RequestBody::Infer {
+                net: NET_ANY,
+                model: "classifier".into(),
+                payload: WirePayload::Pixels(vec![3; 16]),
+            },
+        };
+        let ctx = TraceContext {
+            trace_id: *b"0123456789abcdef",
+            parent_span: 0xDEAD_BEEF,
+        };
+        let f = req.encode_with_trace(Some(&ctx)).unwrap();
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        let (got, got_ctx) =
+            WireRequest::decode_body_traced(ver, &body).unwrap();
+        assert_eq!(got, req);
+        assert_eq!(got_ctx, Some(ctx));
+        // The strict decoder sees the extension as trailing garbage
+        // (malformed, answerable) — extension awareness is opt-in.
+        let err = WireRequest::decode_body(ver, &body).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        assert!(!err.is_fatal());
+    }
+
+    #[test]
+    fn absent_trace_extension_costs_zero_bytes() {
+        let req = WireRequest {
+            id: 22,
+            body: RequestBody::Infer {
+                net: 0,
+                model: String::new(),
+                payload: WirePayload::Pixels(vec![1, 2]),
+            },
+        };
+        let plain = req.encode().unwrap();
+        let untraced = req.encode_with_trace(None).unwrap();
+        assert_eq!(plain, untraced);
+        // Both decoders agree on an extension-free body.
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&plain), KIND_REQUEST)
+                .unwrap().unwrap();
+        let (got, ctx) =
+            WireRequest::decode_body_traced(ver, &body).unwrap();
+        assert_eq!(got, req);
+        assert_eq!(ctx, None);
+        assert_eq!(WireRequest::decode_body(ver, &body).unwrap(), req);
+    }
+
+    #[test]
+    fn trace_extension_is_infer_only_and_v2_only() {
+        let ctx = TraceContext {
+            trace_id: [9; 16],
+            parent_span: 1,
+        };
+        // Encode side: refused on every non-Infer op.
+        for body in [RequestBody::Metrics, RequestBody::Shutdown,
+                     RequestBody::Info { model: String::new() },
+                     RequestBody::Heartbeat, RequestBody::Trace] {
+            let req = WireRequest { id: 1, body };
+            assert!(matches!(
+                req.encode_with_trace(Some(&ctx)),
+                Err(ProtoError::Malformed(_))));
+        }
+        // Decode side: v1 bodies never parse extensions — the same
+        // trailing bytes that form a v2 extension are garbage in v1.
+        let req = WireRequest {
+            id: 2,
+            body: RequestBody::Infer {
+                net: 0,
+                model: String::new(),
+                payload: WirePayload::Pixels(vec![7]),
+            },
+        };
+        let f1 = req.encode_v1().unwrap();
+        let mut body1 = f1[HEADER_LEN..].to_vec();
+        body1.push(EXT_TRACE);
+        body1.extend_from_slice(&ctx.trace_id);
+        body1.extend_from_slice(&ctx.parent_span.to_le_bytes());
+        let err =
+            WireRequest::decode_body_traced(V1, &body1).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        assert!(!err.is_fatal());
+    }
+
+    #[test]
+    fn unknown_or_truncated_extension_is_malformed() {
+        let req = WireRequest {
+            id: 23,
+            body: RequestBody::Infer {
+                net: 0,
+                model: String::new(),
+                payload: WirePayload::Pixels(vec![]),
+            },
+        };
+        let ctx = TraceContext {
+            trace_id: [1; 16],
+            parent_span: 42,
+        };
+        let f = req.encode_with_trace(Some(&ctx)).unwrap();
+        let body = &f[HEADER_LEN..];
+        // Unknown tag.
+        let mut doctored = body.to_vec();
+        let tag_at = body.len() - 25;
+        assert_eq!(doctored[tag_at], EXT_TRACE);
+        doctored[tag_at] = 0xEE;
+        assert!(matches!(
+            WireRequest::decode_body_traced(V2, &doctored),
+            Err(ProtoError::Malformed(_))
+                | Err(ProtoError::Truncated)));
+        // Every truncation of the extension bytes errors, never
+        // panics and never parses.
+        for cut in tag_at + 1..body.len() {
+            assert!(WireRequest::decode_body_traced(V2, &body[..cut])
+                .is_err());
+        }
+        // Trailing bytes *after* a whole extension are still garbage.
+        let mut long = body.to_vec();
+        long.push(0);
+        assert!(matches!(
+            WireRequest::decode_body_traced(V2, &long),
+            Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn trace_op_roundtrips_v2_and_refuses_v1() {
+        let req = WireRequest { id: 80, body: RequestBody::Trace };
+        let f = req.encode().unwrap();
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        assert_eq!(WireRequest::decode_body(ver, &body).unwrap(), req);
+        assert!(matches!(req.encode_v1(),
+                         Err(ProtoError::Malformed(_))));
+        let err = WireRequest::decode_body(V1, &body).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        assert!(!err.is_fatal());
+
+        let resp = WireResponse {
+            id: 80,
+            body: ResponseBody::Trace {
+                json: "{\"traceEvents\":[]}".into(),
+            },
+        };
+        let f = resp.encode(V2);
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        assert_eq!(WireResponse::decode_body(ver, &body).unwrap(),
+                   resp);
+        let err = WireResponse::decode_body(V1, &body).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
     }
 
     #[test]

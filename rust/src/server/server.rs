@@ -75,14 +75,19 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{FramePayload, ModelRegistry, ServiceConfig,
-                         ServiceHandle, ServingReport, Stats,
-                         SubmitError, WorkerConfig, WorkerEvent};
+use crate::coordinator::{FramePayload, ModelRegistry, ReqTrace,
+                         ServiceConfig, ServiceHandle, ServingReport,
+                         Stats, SubmitError, WorkerConfig,
+                         WorkerEvent};
+use crate::obs::recorder::{self, TraceMeta};
+use crate::obs::trace::{self, Stage};
+use crate::{log_error, log_info, log_warn};
 
 use super::protocol::{net_code, parse_frame, ErrorCode, ModelLoad,
-                      RequestBody, ResponseBody, WirePayload,
-                      WireRequest, WireResponse, CONN_ERR_ID,
-                      HEADER_LEN, KIND_REQUEST, NET_ANY, V1};
+                      RequestBody, ResponseBody, TraceContext,
+                      WirePayload, WireRequest, WireResponse,
+                      CONN_ERR_ID, HEADER_LEN, KIND_REQUEST, NET_ANY,
+                      V1};
 use super::reactor::{self, PollFd, RecvBuf, Waker, POLLIN, POLLOUT};
 
 /// Gateway-level knobs.
@@ -255,6 +260,9 @@ struct ModelRuntime {
     workers: usize,
     /// Dispatch-mode label of this model's balance metrics.
     dispatch: &'static str,
+    /// Interned trace/model index ([`trace::intern_model`]) — span
+    /// records and stage histograms carry this instead of the name.
+    obs_model: u32,
 }
 
 /// Final per-model summary inside a [`GatewayReport`].
@@ -298,6 +306,19 @@ struct ConnRef {
     conn: u64,
 }
 
+/// Write-span baggage riding an outbound frame: enough to record the
+/// reactor-write stage (frame queued on the connection → fully
+/// written to the socket) once the last byte leaves. `None` on every
+/// frame of an untraced request — the disabled path carries one
+/// `Option` discriminant, no allocation.
+#[derive(Debug, Clone, Copy)]
+struct WriteTrace {
+    trace_id: [u8; 16],
+    parent: u64,
+    model: u32,
+    t_queued_ns: u64,
+}
+
 /// Work handed to a shard through its mailbox (+ waker).
 enum ShardMsg {
     /// A freshly accepted connection to adopt (already counted in
@@ -305,8 +326,8 @@ enum ShardMsg {
     Conn(TcpStream, u64),
     /// A pre-encoded response frame for one of the shard's
     /// connections, produced by a router (or the drain path) on
-    /// behalf of a pending request.
-    Frame(u64, Vec<u8>),
+    /// behalf of a pending request, with optional write-span baggage.
+    Frame(u64, Vec<u8>, Option<WriteTrace>),
 }
 
 /// One reactor shard's cross-thread face: its mailbox and the waker
@@ -343,8 +364,9 @@ struct Conn {
     stream: TcpStream,
     recv: RecvBuf,
     /// Outbound frames not yet (fully) written; total byte size is
-    /// bounded by [`GatewayConfig::write_buf_cap`].
-    out: VecDeque<Vec<u8>>,
+    /// bounded by [`GatewayConfig::write_buf_cap`]. The second slot
+    /// is write-span baggage for traced responses.
+    out: VecDeque<(Vec<u8>, Option<WriteTrace>)>,
     out_bytes: usize,
     /// How much of `out.front()` has already been written.
     front_pos: usize,
@@ -387,6 +409,18 @@ struct PendingEntry {
     version: u8,
     /// Registry slot the request was routed to.
     model: usize,
+    /// Trace identity when this request is traced (`None` whenever
+    /// tracing was disabled at admission).
+    trace: Option<PendingTrace>,
+}
+
+/// Trace identity a pending request carries from admission to reply.
+#[derive(Debug, Clone, Copy)]
+struct PendingTrace {
+    trace_id: [u8; 16],
+    /// Parent span for this gateway's stage spans (the router's
+    /// attempt span in a cluster, 0 standalone).
+    parent: u64,
 }
 
 /// State shared by the accept loop, shards, and routers.
@@ -428,9 +462,12 @@ impl Shared {
         self.models.iter().position(|m| m.name == selector)
     }
 
-    /// Hand a response frame to the shard owning `to`'s connection.
-    fn reply(&self, to: ConnRef, frame: Vec<u8>) {
-        self.shards[to.shard].send(ShardMsg::Frame(to.conn, frame));
+    /// Hand a response frame to the shard owning `to`'s connection,
+    /// with optional write-span baggage for traced requests.
+    fn reply(&self, to: ConnRef, frame: Vec<u8>,
+             wt: Option<WriteTrace>) {
+        self.shards[to.shard]
+            .send(ShardMsg::Frame(to.conn, frame, wt));
     }
 
     /// Remove one pending route, waking the drain waiter when the map
@@ -500,6 +537,7 @@ impl Gateway {
                 counters: ModelCounters::default(),
                 workers: service.worker_count(),
                 dispatch: service.dispatch_mode().as_str(),
+                obs_model: trace::intern_model(entry.name()),
             });
             event_streams.push(events);
         }
@@ -556,6 +594,11 @@ impl Gateway {
                     accept_loop(listener, shared, max_conns)
                 })?
         };
+        log_info!("server::gateway",
+                  "listening on {addr}: {} model(s), {} reactor \
+                   shard(s), tracing {}",
+                  shared.models.len(), nshards,
+                  if trace::enabled() { "on" } else { "off" });
 
         Ok(Self {
             addr,
@@ -647,10 +690,16 @@ impl Gateway {
         // routers notify `pending_cv` when the map drains empty.
         {
             let guard = shared.pending.lock().unwrap();
-            let (guard, _timeout) = shared.pending_cv
+            let (guard, timeout) = shared.pending_cv
                 .wait_timeout_while(guard, drain_timeout,
                                     |p| !p.is_empty())
                 .unwrap();
+            if timeout.timed_out() && !guard.is_empty() {
+                log_warn!("server::gateway",
+                          "drain timeout after {drain_timeout:?}: \
+                           failing {} in-flight request(s)",
+                          guard.len());
+            }
             drop(guard);
         }
         // Whatever outlived the drain window is failed, not stranded.
@@ -663,7 +712,7 @@ impl Gateway {
                     .fetch_add(1, Ordering::Relaxed);
                 shared.reply(p.reply, err_frame(
                     p.version, p.client_id, ErrorCode::ShuttingDown,
-                    "gateway drain timeout"));
+                    "gateway drain timeout"), None);
             }
         }
         // Close every queue and join workers; their event senders
@@ -764,10 +813,12 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>,
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                     break;
                 }
-                Err(_) => {
+                Err(e) => {
                     // Transient accept failure (e.g. fd exhaustion):
                     // a brief pause keeps a persistent error from
                     // turning the poll loop hot.
+                    log_warn!("server::accept",
+                              "accept failed: {e}; pausing 10ms");
                     thread::sleep(Duration::from_millis(10));
                     break;
                 }
@@ -844,10 +895,10 @@ fn shard_loop(idx: usize, shared: Arc<Shared>) {
                     me.connections.fetch_add(1, Ordering::Relaxed);
                     conns.insert(id, Conn::new(stream));
                 }
-                ShardMsg::Frame(id, frame) => {
+                ShardMsg::Frame(id, frame, wt) => {
                     if let Some(c) = conns.get_mut(&id) {
                         c.inflight = c.inflight.saturating_sub(1);
-                        push_frame(&shared, c, frame);
+                        push_frame(&shared, c, frame, wt);
                     }
                     // else: the connection died first; the response
                     // has nowhere to go.
@@ -907,10 +958,12 @@ fn shard_teardown(shared: &Arc<Shared>, me: &ShardHandle,
                 shared.counters.conns_active
                     .fetch_sub(1, Ordering::SeqCst);
             }
-            ShardMsg::Frame(id, frame) => {
+            ShardMsg::Frame(id, frame, _) => {
+                // Teardown delivery drops span baggage: the process
+                // is exiting, nothing will dump these.
                 if let Some(c) = conns.get_mut(&id) {
                     c.out_bytes += frame.len();
-                    c.out.push_back(frame);
+                    c.out.push_back((frame, None));
                 }
             }
         }
@@ -929,7 +982,7 @@ fn final_flush_close(mut c: Conn) {
         let _ = c.stream.set_nonblocking(false);
         let _ = c.stream.set_write_timeout(
             Some(Duration::from_millis(500)));
-        while let Some(front) = c.out.front() {
+        while let Some((front, _)) = c.out.front() {
             match (&c.stream).write(&front[c.front_pos..]) {
                 Ok(0) => break,
                 Ok(n) => {
@@ -953,12 +1006,17 @@ fn final_flush_close(mut c: Conn) {
 /// bound. Over the cap the connection is shed: a best-effort typed
 /// notice goes straight to the socket (usually undeliverable — the
 /// peer is not reading — and never queued) and the connection dies.
-fn push_frame(shared: &Shared, c: &mut Conn, frame: Vec<u8>) {
+fn push_frame(shared: &Shared, c: &mut Conn, frame: Vec<u8>,
+              wt: Option<WriteTrace>) {
     if c.dead {
         return;
     }
     if c.out_bytes + frame.len() > shared.write_buf_cap {
         shared.counters.conns_shed.fetch_add(1, Ordering::Relaxed);
+        log_warn!("server::reactor",
+                  "shedding connection: outbound queue {} bytes \
+                   over cap {}", c.out_bytes + frame.len(),
+                  shared.write_buf_cap);
         let note = err_frame(
             c.peer_ver, CONN_ERR_ID, ErrorCode::Busy,
             "write backpressure: outbound queue over cap; \
@@ -968,12 +1026,12 @@ fn push_frame(shared: &Shared, c: &mut Conn, frame: Vec<u8>) {
         return;
     }
     c.out_bytes += frame.len();
-    c.out.push_back(frame);
+    c.out.push_back((frame, wt));
 }
 
 /// Write queued frames until done or the socket would block.
 fn flush_out(c: &mut Conn) -> io::Result<()> {
-    while let Some(front) = c.out.front() {
+    while let Some((front, wt)) = c.out.front() {
         match (&c.stream).write(&front[c.front_pos..]) {
             Ok(0) => {
                 return Err(io::Error::from(
@@ -983,6 +1041,14 @@ fn flush_out(c: &mut Conn) -> io::Result<()> {
                 c.front_pos += n;
                 c.out_bytes -= n;
                 if c.front_pos == front.len() {
+                    // Traced frame fully on the wire: close its
+                    // reactor-write span (queued -> last byte out).
+                    if let Some(wt) = wt {
+                        trace::span(wt.trace_id, wt.parent,
+                                    Stage::Write, wt.model,
+                                    wt.t_queued_ns, false,
+                                    front.len() as u64, 0);
+                    }
                     c.out.pop_front();
                     c.front_pos = 0;
                 }
@@ -1060,7 +1126,7 @@ fn decode_frames(shared: &Arc<Shared>, shard: usize, conn_id: u64,
                 let f = err_frame(c.peer_ver, CONN_ERR_ID,
                                   ErrorCode::BadRequest,
                                   &e.to_string());
-                push_frame(shared, c, f);
+                push_frame(shared, c, f, None);
                 c.closing = true;
                 return;
             }
@@ -1071,8 +1137,9 @@ fn decode_frames(shared: &Arc<Shared>, shard: usize, conn_id: u64,
 /// Handle one well-framed request arriving on a shard connection.
 fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
               c: &mut Conn, ver: u8, body: &[u8]) {
-    let req = match WireRequest::decode_body(ver, body) {
-        Ok(req) => req,
+    let (req, wire_ctx) =
+        match WireRequest::decode_body_traced(ver, body) {
+        Ok(pair) => pair,
         Err(e) => {
             // The frame boundary held: reject this request, keep
             // the connection. The request id may not have parsed,
@@ -1081,7 +1148,7 @@ fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
                 .fetch_add(1, Ordering::Relaxed);
             let f = err_frame(ver, CONN_ERR_ID, ErrorCode::BadRequest,
                               &e.to_string());
-            push_frame(shared, c, f);
+            push_frame(shared, c, f, None);
             return;
         }
     };
@@ -1093,13 +1160,25 @@ fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
             ver, CONN_ERR_ID, ErrorCode::BadRequest,
             &format!("request id {CONN_ERR_ID} is reserved for \
                       connection-level errors"));
-        push_frame(shared, c, f);
+        push_frame(shared, c, f, None);
         return;
     }
     match req.body {
         RequestBody::Infer { net, model, payload } => {
+            // When tracing is on, every admitted request gets a trace
+            // identity: the wire context when the peer (a cluster
+            // router) sent one, a fresh root otherwise. When off, no
+            // timestamps are taken and nothing allocates.
+            let ctx = if trace::enabled() {
+                Some(wire_ctx.unwrap_or(TraceContext {
+                    trace_id: trace::gen_trace_id(),
+                    parent_span: 0,
+                }))
+            } else {
+                None
+            };
             handle_infer(shared, shard, conn_id, c, ver, req.id, net,
-                         &model, payload);
+                         &model, payload, ctx);
         }
         RequestBody::Metrics => {
             let text = render_metrics(shared);
@@ -1107,7 +1186,7 @@ fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
                 id: req.id,
                 body: ResponseBody::Metrics { text },
             }.encode(ver);
-            push_frame(shared, c, f);
+            push_frame(shared, c, f, None);
         }
         RequestBody::Info { model } => {
             let resp = match shared.resolve(&model) {
@@ -1130,14 +1209,14 @@ fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
                     }
                 }
             };
-            push_frame(shared, c, resp.encode(ver));
+            push_frame(shared, c, resp.encode(ver), None);
         }
         RequestBody::Shutdown => {
             let f = WireResponse {
                 id: req.id,
                 body: ResponseBody::ShutdownAck,
             }.encode(ver);
-            push_frame(shared, c, f);
+            push_frame(shared, c, f, None);
             shared.trigger_stop();
         }
         RequestBody::Heartbeat => {
@@ -1158,7 +1237,19 @@ fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
                 id: req.id,
                 body: ResponseBody::Heartbeat { models },
             }.encode(ver);
-            push_frame(shared, c, f);
+            push_frame(shared, c, f, None);
+        }
+        RequestBody::Trace => {
+            // Flight-recorder dump: the retained traces' spans as
+            // Chrome trace-event JSON (empty event list when tracing
+            // is disabled).
+            let f = WireResponse {
+                id: req.id,
+                body: ResponseBody::Trace {
+                    json: recorder::dump_chrome_json(),
+                },
+            }.encode(ver);
+            push_frame(shared, c, f, None);
         }
     }
 }
@@ -1173,14 +1264,18 @@ fn unknown_model(shared: &Shared, selector: &str) -> String {
 #[allow(clippy::too_many_arguments)]
 fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
                 c: &mut Conn, version: u8, client_id: u64, net: u8,
-                model: &str, payload: WirePayload) {
+                model: &str, payload: WirePayload,
+                ctx: Option<TraceContext>) {
+    // `ctx` is Some only when tracing is enabled, so the disabled
+    // path never reads the clock.
+    let t_admit = if ctx.is_some() { trace::now_ns() } else { 0 };
     let idx = match shared.resolve(model) {
         Some(idx) => idx,
         None => {
             shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
             let f = err_frame(version, client_id, ErrorCode::BadRequest,
                               &unknown_model(shared, model));
-            push_frame(shared, c, f);
+            push_frame(shared, c, f, None);
             return;
         }
     };
@@ -1192,7 +1287,7 @@ fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
         m.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
         let f = err_frame(version, client_id, ErrorCode::ShuttingDown,
                           "gateway is draining");
-        push_frame(shared, c, f);
+        push_frame(shared, c, f, None);
         return;
     }
     let spec = m.handle.spec();
@@ -1206,7 +1301,7 @@ fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
             version, client_id, ErrorCode::BadRequest,
             &format!("model '{}' runs net {:?}, request asked for \
                       code {net}", m.name, spec.kind));
-        push_frame(shared, c, f);
+        push_frame(shared, c, f, None);
         return;
     }
     let payload = match payload {
@@ -1222,27 +1317,56 @@ fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
         m.counters.bad_request.fetch_add(1, Ordering::Relaxed);
         let f = err_frame(version, client_id, ErrorCode::BadRequest,
                           &detail);
-        push_frame(shared, c, f);
+        push_frame(shared, c, f, None);
         return;
+    }
+    // Admission span: frame decoded -> model resolved + contract
+    // validated.
+    if let Some(cx) = ctx {
+        trace::span(cx.trace_id, cx.parent_span, Stage::Admission,
+                    m.obs_model, t_admit, false, 0, 0);
     }
     // Request-level APRC: predict once, tag admission with it, and
     // account the admitted/shed flow in cost units alongside counts.
+    let t_cp = if ctx.is_some() { trace::now_ns() } else { 0 };
     let cost = m.handle.predict_cost(&payload);
+    if let Some(cx) = ctx {
+        trace::span(cx.trace_id, cx.parent_span, Stage::CostPredict,
+                    m.obs_model, t_cp, false, cost, 0);
+    }
     let internal = shared.next_id.fetch_add(1, Ordering::Relaxed);
     shared.pending.lock().unwrap().insert(internal, PendingEntry {
         reply: ConnRef { shard, conn: conn_id },
         client_id,
         version,
         model: idx,
+        trace: ctx.map(|cx| PendingTrace {
+            trace_id: cx.trace_id,
+            parent: cx.parent_span,
+        }),
     });
     c.inflight += 1;
-    match m.handle.try_submit_cost(internal, payload, cost) {
+    let rt = ctx.map(|cx| ReqTrace {
+        trace_id: cx.trace_id,
+        parent: cx.parent_span,
+        t_enqueue_ns: trace::now_ns(),
+        model: m.obs_model,
+    });
+    match m.handle.try_submit_cost_traced(internal, payload, cost, rt) {
         Ok(()) => {
             m.counters.cost_admitted.fetch_add(cost, Ordering::Relaxed);
         }
         Err(e) => {
             shared.remove_pending(internal);
             c.inflight = c.inflight.saturating_sub(1);
+            if let Some(cx) = ctx {
+                recorder::complete(TraceMeta {
+                    trace_id: cx.trace_id,
+                    model: m.obs_model,
+                    latency_us: 0,
+                    error: true,
+                });
+            }
             let code = match e {
                 SubmitError::Full { .. } => {
                     shared.counters.busy.fetch_add(1, Ordering::Relaxed);
@@ -1261,7 +1385,7 @@ fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
             };
             let f = err_frame(version, client_id, code,
                               &e.to_string());
-            push_frame(shared, c, f);
+            push_frame(shared, c, f, None);
         }
     }
 }
@@ -1290,7 +1414,12 @@ fn router_loop(model_idx: usize,
                         .max_by_key(|&(_, c)| *c)
                         .map(|(i, _)| i as u32)
                         .unwrap_or(0);
-                    shared.reply(p.reply, WireResponse {
+                    let t_enc = if p.trace.is_some() {
+                        trace::now_ns()
+                    } else {
+                        0
+                    };
+                    let frame = WireResponse {
                         id: p.client_id,
                         body: ResponseBody::Infer {
                             prediction,
@@ -1298,16 +1427,42 @@ fn router_loop(model_idx: usize,
                             latency_us: r.latency_us,
                             worker: r.worker as u32,
                         },
-                    }.encode(p.version));
+                    }.encode(p.version);
+                    let wt = p.trace.map(|t| {
+                        trace::span(t.trace_id, t.parent,
+                                    Stage::Encode, m.obs_model,
+                                    t_enc, false,
+                                    frame.len() as u64, 0);
+                        recorder::complete(TraceMeta {
+                            trace_id: t.trace_id,
+                            model: m.obs_model,
+                            latency_us: r.latency_us,
+                            error: false,
+                        });
+                        WriteTrace {
+                            trace_id: t.trace_id,
+                            parent: t.parent,
+                            model: m.obs_model,
+                            t_queued_ns: trace::now_ns(),
+                        }
+                    });
+                    shared.reply(p.reply, frame, wt);
                 }
             }
             WorkerEvent::Failed { worker, error, lost } => {
+                log_error!("server::router",
+                           "model '{}' worker {} failed: {} \
+                            ({} request(s) lost)",
+                           m.name, worker, error, lost.len());
                 m.failures.lock().unwrap()
                     .push(format!("worker {worker}: {error}"));
                 fail_ids(&shared, model_idx, &lost,
                          ErrorCode::Internal, &error);
             }
             WorkerEvent::Undeliverable { lost } => {
+                log_error!("server::router",
+                           "model '{}': {} request(s) undeliverable \
+                            (no live workers)", m.name, lost.len());
                 fail_ids(&shared, model_idx, &lost,
                          ErrorCode::ShuttingDown, "no live workers");
             }
@@ -1327,6 +1482,11 @@ fn router_loop(model_idx: usize,
             .filter(|(_, p)| p.model == model_idx)
             .map(|(&id, _)| id)
             .collect();
+        if !dead.is_empty() {
+            log_error!("server::router",
+                       "all workers for model '{}' exited; failing \
+                        {} pending request(s)", m.name, dead.len());
+        }
         for id in dead {
             if let Some(p) = pending.remove(&id) {
                 shared.counters.internal.fetch_add(1, Ordering::Relaxed);
@@ -1334,7 +1494,7 @@ fn router_loop(model_idx: usize,
                 shared.reply(p.reply, err_frame(
                     p.version, p.client_id, ErrorCode::Internal,
                     &format!("all workers for model '{}' exited",
-                             m.name)));
+                             m.name)), None);
             }
         }
         if pending.is_empty() {
@@ -1363,8 +1523,16 @@ fn fail_ids(shared: &Shared, model_idx: usize, ids: &[u64],
         if let Some(p) = pending.remove(id) {
             counter.fetch_add(1, Ordering::Relaxed);
             mcounter.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = p.trace {
+                recorder::complete(TraceMeta {
+                    trace_id: t.trace_id,
+                    model: m.obs_model,
+                    latency_us: 0,
+                    error: true,
+                });
+            }
             shared.reply(p.reply, err_frame(p.version, p.client_id,
-                                            code, detail));
+                                            code, detail), None);
         }
     }
     if pending.is_empty() {
@@ -1557,5 +1725,7 @@ fn render_metrics(shared: &Shared) -> String {
                  worker=\"{i}\"}} {n}", m.name);
         }
     }
+    crate::obs::render_build_info(&mut out);
+    trace::render_stage_metrics(&mut out);
     out
 }

@@ -12,10 +12,11 @@ use std::io::Cursor;
 use skydiver::data::SplitMix64;
 use skydiver::server::protocol::{read_frame, ErrorCode, ModelLoad,
                                  ProtoError, RequestBody, ResponseBody,
-                                 WirePayload, WireRequest, WireResponse,
-                                 HEADER_LEN, KIND_REQUEST,
-                                 KIND_RESPONSE, MAGIC, MAX_BODY,
-                                 MAX_MODEL_NAME, NET_ANY, V1, V2};
+                                 TraceContext, WirePayload, WireRequest,
+                                 WireResponse, EXT_TRACE, HEADER_LEN,
+                                 KIND_REQUEST, KIND_RESPONSE, MAGIC,
+                                 MAX_BODY, MAX_MODEL_NAME, NET_ANY, V1,
+                                 V2};
 
 fn rt_req(req: &WireRequest) {
     let f = req.encode().expect("encode");
@@ -338,6 +339,7 @@ fn random_garbage_never_panics() {
         let _ = read_frame(&mut Cursor::new(&buf), KIND_REQUEST);
         for ver in [V1, V2] {
             let _ = WireRequest::decode_body(ver, &buf);
+            let _ = WireRequest::decode_body_traced(ver, &buf);
             let _ = WireResponse::decode_body(ver, &buf);
         }
     }
@@ -542,6 +544,126 @@ fn heartbeat_count_and_name_len_fuzz_is_typed() {
         b[i] = rng.next_below(256) as u8;
         let _ = WireResponse::decode_body(ver, &b);
     }
+}
+
+// --------------------------------------- v2 trace context (tracing)
+
+fn traced_infer() -> WireRequest {
+    WireRequest {
+        id: 31,
+        body: RequestBody::Infer {
+            net: 0,
+            model: "classifier".into(),
+            payload: WirePayload::Pixels(vec![7; 24]),
+        },
+    }
+}
+
+#[test]
+fn trace_context_roundtrips_v2() {
+    let ctx = TraceContext {
+        trace_id: [0xAB; 16],
+        parent_span: 0x1234_5678_9ABC_DEF0,
+    };
+    let req = traced_infer();
+    let f = req.encode_with_trace(Some(&ctx)).unwrap();
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+        .unwrap().unwrap();
+    assert_eq!(ver, V2);
+    let (dec, got) =
+        WireRequest::decode_body_traced(ver, &body).unwrap();
+    assert_eq!(dec, req);
+    assert_eq!(got, Some(ctx));
+    // The strict entry point treats the extension as trailing
+    // garbage — old decode paths never silently eat it.
+    assert!(matches!(WireRequest::decode_body(ver, &body),
+                     Err(ProtoError::Malformed(_))));
+    // An extension-free frame decodes identically through both entry
+    // points, and `encode()` is byte-exactly `encode_with_trace(None)`.
+    let f0 = req.encode().unwrap();
+    assert_eq!(f0, req.encode_with_trace(None).unwrap());
+    let (_, b0) = read_frame(&mut Cursor::new(&f0), KIND_REQUEST)
+        .unwrap().unwrap();
+    let (d0, none) = WireRequest::decode_body_traced(V2, &b0).unwrap();
+    assert_eq!(d0, req);
+    assert_eq!(none, None);
+}
+
+#[test]
+fn trace_context_is_infer_and_v2_only() {
+    let ctx = TraceContext { trace_id: [1; 16], parent_span: 9 };
+    // Not expressible on any other op: encode error, nothing on the
+    // wire.
+    for body in [RequestBody::Metrics, RequestBody::Shutdown,
+                 RequestBody::Heartbeat, RequestBody::Trace,
+                 RequestBody::Info { model: String::new() }] {
+        assert!(WireRequest { id: 1, body }
+                    .encode_with_trace(Some(&ctx)).is_err());
+    }
+    // v1 never parses extensions: the same trailing bytes after a v1
+    // infer body stay malformed even through the traced entry point.
+    let req = WireRequest {
+        id: 5,
+        body: RequestBody::Infer {
+            net: 0,
+            model: String::new(),
+            payload: WirePayload::Pixels(vec![3; 8]),
+        },
+    };
+    let f1 = req.encode_v1().unwrap();
+    let (ver, mut body) =
+        read_frame(&mut Cursor::new(&f1), KIND_REQUEST)
+            .unwrap().unwrap();
+    assert_eq!(ver, V1);
+    body.push(EXT_TRACE);
+    body.extend_from_slice(&[0u8; 16]);
+    body.extend_from_slice(&0u64.to_le_bytes());
+    assert!(WireRequest::decode_body_traced(V1, &body).is_err());
+}
+
+#[test]
+fn every_truncation_of_a_trace_extension_is_typed() {
+    let ctx = TraceContext { trace_id: [0x5A; 16], parent_span: 42 };
+    let f = traced_infer().encode_with_trace(Some(&ctx)).unwrap();
+    let (ver, body) = read_frame(&mut Cursor::new(&f), KIND_REQUEST)
+        .unwrap().unwrap();
+    // Extension layout: tag(1) trace_id(16) parent(8) = 25 trailing
+    // bytes. Every cut inside it is a typed error, never a panic.
+    let ext_start = body.len() - 25;
+    for cut in ext_start + 1..body.len() {
+        assert!(WireRequest::decode_body_traced(ver, &body[..cut])
+                    .is_err(),
+                "cut at {cut} decoded");
+    }
+    // An unknown extension tag is malformed (forward-compat stays
+    // explicit, not silent).
+    let mut b = body.clone();
+    b[ext_start] = 0xEE;
+    assert!(matches!(WireRequest::decode_body_traced(ver, &b),
+                     Err(ProtoError::Malformed(_))));
+    // Fuzz the extension bytes: typed errors or different values only.
+    let mut rng = SplitMix64::new(0x7E57);
+    for _ in 0..300 {
+        let mut b = body.clone();
+        let i = ext_start
+            + rng.next_below((b.len() - ext_start) as u64) as usize;
+        b[i] = rng.next_below(256) as u8;
+        let _ = WireRequest::decode_body_traced(ver, &b);
+    }
+}
+
+#[test]
+fn trace_dump_op_roundtrips_v2_only() {
+    rt_req(&WireRequest { id: 6, body: RequestBody::Trace });
+    rt_resp(&WireResponse {
+        id: 6,
+        body: ResponseBody::Trace {
+            json: "{\"traceEvents\":[]}".into(),
+        },
+    });
+    // Not expressible in v1.
+    assert!(WireRequest { id: 6, body: RequestBody::Trace }
+                .encode_v1().is_err());
 }
 
 #[test]

@@ -12,7 +12,8 @@ Extracted from the inline CI snippets so the same check runs locally:
   ``p99_ns`` and a positive ``frames_per_sec``);
 * serving output must contain the canonical row set (loopback rtt/e2e,
   the two mixed multi-model rows, the skewed FIFO/cost dispatch pair,
-  the c10k reactor row, and the cluster-router row).
+  the c10k reactor row, the cluster-router row, and the tracing-tax
+  pipelined/traced pair).
 """
 
 import argparse
@@ -32,6 +33,8 @@ SERVING_ROWS = (
     "serving_skewed_cost",
     "serving_c10k",
     "serving_cluster",
+    "serving_pipelined",
+    "serving_traced",
 )
 
 

@@ -1,0 +1,272 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event dump from the skydiver flight
+recorder (``skydiver trace --addr ... --chrome``).
+
+Structural rules:
+
+* the document is an object with a ``traceEvents`` list;
+* every event is a complete span (``"ph": "X"``) with numeric,
+  non-negative ``ts``/``dur`` and a ``pid``/``tid``;
+* every event's ``args`` carries a 32-hex-char ``trace`` id, a
+  positive ``span`` id, a numeric ``parent`` and a boolean ``error``;
+* span names come from the known stage vocabulary (PERF.md maps each
+  to the code it measures);
+* span ids are unique within a trace, and a span never lists itself
+  as its parent. Parents may be absent from the dump (a backend's
+  dump holds spans whose parent lives in the router's recorder — the
+  cross-process stitch), so unresolved parents are fine; cycles and
+  duplicates are not.
+
+Semantic rules, per trace id:
+
+* within one process (``pid``), the serving pipeline is ordered:
+  ``queue`` must not end after ``compute`` ends, and ``compute`` must
+  not end after ``write`` ends — the monotonic-interval contract the
+  integration tests pin in-process, held here against any dump CI
+  captures from a live gateway or router;
+* a resolvable parent must belong to the same trace.
+
+``--self-test`` checks every rule against doctored in-memory
+documents and exits non-zero if any misfires — run before trusting
+the validator, exactly like ``bench_gate.py --self-test``.
+"""
+
+import argparse
+import json
+import sys
+
+STAGES = ("admission", "cost_predict", "queue", "batch", "compute",
+          "encode", "write", "route", "attempt")
+# Intra-process pipeline checkpoints, in must-not-end-later order.
+PIPELINE = ("queue", "compute", "write")
+
+
+def validate(doc):
+    """Return a list of rule violations (empty = valid)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+
+    # (trace, pid) -> name -> latest end; trace -> {span ids}
+    spans = {}
+    parents = {}
+    ends = {}
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        if ev.get("ph") != "X":
+            errs.append(f"{where}: ph {ev.get('ph')!r} != 'X'")
+            continue
+        name = ev.get("name")
+        if name not in STAGES:
+            errs.append(f"{where}: unknown stage {name!r}")
+        for k in ("ts", "dur"):
+            v = ev.get(k)
+            if not isinstance(v, (int, float)) or v < 0:
+                errs.append(f"{where}: {k} must be a number >= 0, "
+                            f"got {v!r}")
+        if not isinstance(ev.get("pid"), (int, float)):
+            errs.append(f"{where}: missing numeric pid")
+        if not isinstance(ev.get("tid"), (int, float)):
+            errs.append(f"{where}: missing numeric tid")
+        args = ev.get("args")
+        if not isinstance(args, dict):
+            errs.append(f"{where}: missing args object")
+            continue
+        trace = args.get("trace")
+        if not (isinstance(trace, str) and len(trace) == 32
+                and all(c in "0123456789abcdef" for c in trace)):
+            errs.append(f"{where}: args.trace must be 32 hex chars, "
+                        f"got {trace!r}")
+            continue
+        span = args.get("span")
+        if not isinstance(span, (int, float)) or span <= 0:
+            errs.append(f"{where}: args.span must be > 0, got "
+                        f"{span!r}")
+            continue
+        parent = args.get("parent")
+        if not isinstance(parent, (int, float)) or parent < 0:
+            errs.append(f"{where}: args.parent must be >= 0, got "
+                        f"{parent!r}")
+            continue
+        if not isinstance(args.get("error"), bool):
+            errs.append(f"{where}: args.error must be a boolean")
+        span, parent = int(span), int(parent)
+        if parent == span:
+            errs.append(f"{where}: span {span} is its own parent")
+        ids = spans.setdefault(trace, set())
+        if span in ids:
+            errs.append(f"{where}: duplicate span id {span} in "
+                        f"trace {trace}")
+        ids.add(span)
+        parents.setdefault(trace, {})[span] = parent
+        if name in PIPELINE:
+            key = (trace, ev.get("pid"))
+            end = float(ev.get("ts") or 0) + float(ev.get("dur") or 0)
+            ends.setdefault(key, {})[name] = \
+                max(end, ends.get(key, {}).get(name, 0.0))
+
+    # Resolvable parents stay inside their trace, acyclically.
+    for trace, links in parents.items():
+        for span, parent in links.items():
+            seen = set()
+            cur = span
+            while cur in links and links[cur] in links:
+                if cur in seen:
+                    errs.append(f"trace {trace}: parent cycle at "
+                                f"span {span}")
+                    break
+                seen.add(cur)
+                cur = links[cur]
+
+    # Pipeline order inside one process: a stage may not end after
+    # the stage that consumes its output. (Float slack for the
+    # ns -> us rounding the dump performs.)
+    eps = 0.01
+    for (trace, pid), stages in ends.items():
+        for a, b in zip(PIPELINE, PIPELINE[1:]):
+            if a in stages and b in stages \
+                    and stages[a] > stages[b] + eps:
+                errs.append(
+                    f"trace {trace} pid {pid}: {a} ends at "
+                    f"{stages[a]:.3f}us, after {b} ends at "
+                    f"{stages[b]:.3f}us")
+
+    if not errs and not events:
+        errs.append("dump contains no span events (tracing off, or "
+                    "no completed requests?)")
+    return errs
+
+
+def check_file(path, min_traces):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"validate_trace: {path}: {e}", file=sys.stderr)
+        return 1
+    errs = validate(doc)
+    traces = {e.get("args", {}).get("trace")
+              for e in doc.get("traceEvents", [])
+              if isinstance(e, dict)} - {None}
+    if len(traces) < min_traces:
+        errs.append(f"only {len(traces)} trace(s), want >= "
+                    f"{min_traces}")
+    for e in errs:
+        print(f"validate_trace [FAIL] {e}", file=sys.stderr)
+    if errs:
+        print(f"validate_trace: {path}: {len(errs)} violation(s)",
+              file=sys.stderr)
+        return 1
+    n = len(doc["traceEvents"])
+    print(f"{path} OK: {n} span event(s) across {len(traces)} "
+          f"trace(s)")
+    return 0
+
+
+# --------------------------------------------------------- self-test
+
+def ev(trace="ab" * 16, name="compute", span=2, parent=1, ts=10.0,
+       dur=5.0, error=False, pid=1, tid=0):
+    return {"name": name, "cat": "skydiver", "ph": "X", "ts": ts,
+            "dur": dur, "pid": pid, "tid": tid,
+            "args": {"trace": trace, "span": span, "parent": parent,
+                     "error": error, "a": 0, "b": 0}}
+
+
+def self_test():
+    checks = []
+
+    def check(what, doc, want_fail):
+        errs = validate(doc)
+        ok = bool(errs) == want_fail
+        checks.append((what, ok))
+        status = "ok" if ok else "MISFIRE"
+        print(f"self-test [{status}] {what}: "
+              f"{errs if errs else 'no violations'}")
+
+    good = {"traceEvents": [
+        ev(name="route", span=1, parent=0, ts=0.0, dur=100.0),
+        ev(name="attempt", span=2, parent=1, ts=1.0, dur=90.0),
+        ev(name="queue", span=3, parent=2, ts=2.0, dur=10.0, pid=2),
+        ev(name="compute", span=4, parent=2, ts=12.0, dur=20.0,
+           pid=2),
+        ev(name="write", span=5, parent=2, ts=33.0, dur=1.0, pid=2),
+    ]}
+    check("well-formed stitched dump passes", good, want_fail=False)
+
+    check("empty dump fails", {"traceEvents": []}, want_fail=True)
+    check("non-object fails", [], want_fail=True)
+    check("missing traceEvents fails", {}, want_fail=True)
+
+    check("unknown stage name fails",
+          {"traceEvents": [ev(name="teleport")]}, want_fail=True)
+    check("incomplete-phase event fails",
+          {"traceEvents": [dict(ev(), ph="B")]}, want_fail=True)
+    check("negative duration fails",
+          {"traceEvents": [ev(dur=-1.0)]}, want_fail=True)
+    check("malformed trace id fails",
+          {"traceEvents": [ev(trace="xyz")]}, want_fail=True)
+    check("zero span id fails",
+          {"traceEvents": [ev(span=0)]}, want_fail=True)
+    check("self-parent fails",
+          {"traceEvents": [ev(span=7, parent=7)]}, want_fail=True)
+    check("duplicate span id in one trace fails",
+          {"traceEvents": [ev(span=2), ev(span=2, ts=20.0)]},
+          want_fail=True)
+
+    # Unresolved parent = cross-process stitch: must PASS.
+    check("unresolved (cross-process) parent passes",
+          {"traceEvents": [ev(name="compute", span=9, parent=777)]},
+          want_fail=False)
+
+    # Pipeline inversion inside one process: queue ending after
+    # compute has ended.
+    bad_order = {"traceEvents": [
+        ev(name="queue", span=3, parent=0, ts=50.0, dur=40.0),
+        ev(name="compute", span=4, parent=0, ts=12.0, dur=20.0),
+    ]}
+    check("queue ending after compute fails", bad_order,
+          want_fail=True)
+    # The same inversion across two pids is legitimate concurrency.
+    ok_order = {"traceEvents": [
+        ev(name="queue", span=3, parent=0, ts=50.0, dur=40.0, pid=1),
+        ev(name="compute", span=4, parent=0, ts=12.0, dur=20.0,
+           pid=2),
+    ]}
+    check("stage overlap across processes passes", ok_order,
+          want_fail=False)
+
+    bad = [what for what, ok in checks if not ok]
+    if bad:
+        print(f"self-test FAILED: {bad}")
+        return 1
+    print(f"self-test: all {len(checks)} validator rules behave")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?",
+                    help="Chrome trace-event JSON to validate")
+    ap.add_argument("--min-traces", type=int, default=1,
+                    help="require at least N distinct trace ids "
+                    "(default 1)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the validator rules against "
+                    "doctored documents")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.path:
+        ap.error("a dump path is required (or use --self-test)")
+    sys.exit(check_file(args.path, args.min_traces))
+
+
+if __name__ == "__main__":
+    main()
