@@ -4,7 +4,7 @@
 //! the simulator. Fully hermetic (synthetic artifacts; no
 //! `make artifacts`).
 //!
-//! Emits ten rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! Emits eleven rows into `BENCH_serving.json` (`skydiver-bench-v1`
 //! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
 //!
 //! * `serving_loopback_rtt` — single-connection, window-1 round-trip
@@ -37,6 +37,11 @@
 //!   then on (same seed/conns/window), so the pair prices the tracing
 //!   layer end to end. The off leg also asserts the span call sites
 //!   are allocation-free while tracing is disabled.
+//! * `serving_temporal_off` — the `serving_loopback_e2e` workload
+//!   served with `--temporal-kernels off` (per-timestep functional
+//!   path). The e2e row is the temporal-on leg — serving defaults to
+//!   the bit-parallel kernels — so the pair prices the time-major
+//!   compute path end to end; outputs are bit-identical either way.
 
 #[path = "harness.rs"]
 mod harness;
@@ -67,6 +72,7 @@ fn worker_cfg(dir: &std::path::Path, kind: NetKind) -> WorkerConfig {
         use_runtime: false,
         timesteps: None,
         sweep_threads: 1,
+        temporal: true,
     }
 }
 
@@ -473,9 +479,52 @@ fn main() {
         .shutdown_server().expect("traced shutdown");
     gw_tr.wait().expect("traced gateway wait");
 
+    // 8. The temporal-kernel dividend: the `serving_loopback_e2e`
+    // workload (same seed/conns/window) served with the temporal
+    // kernels off — the per-timestep functional path the worker used
+    // before the time-major rewrite. The e2e row above is the
+    // temporal-on leg, so the pair prices the bit-parallel compute
+    // path end to end over real TCP.
+    let gw_off = Gateway::start_single(
+        GatewayConfig::default(), service_cfg(),
+        WorkerConfig {
+            temporal: false,
+            ..worker_cfg(&dir, NetKind::Classifier)
+        })
+        .expect("temporal-off gateway start");
+    let addr_off = gw_off.local_addr().to_string();
+    let off_frames = if quick { 200 } else { 2000 };
+    let off_cfg = LoadGenConfig {
+        addr: addr_off.clone(),
+        model: String::new(),
+        conns: 4,
+        frames: off_frames,
+        window: 8,
+        spikes: false,
+        retry_busy: true,
+        traffic: TrafficMode::Mixed,
+        seed: 0xBE7C,
+    };
+    let a4 = harness::alloc_count();
+    let off_rep = loadgen::run(&off_cfg).expect("temporal-off loadgen");
+    let off_allocs = (harness::alloc_count() - a4) as f64
+        / off_rep.ok.max(1) as f64;
+    assert_eq!(off_rep.errors, 0, "temporal-off loadgen frames failed");
+    assert_eq!(off_rep.ok as usize, off_frames,
+               "not all temporal-off frames served");
+    let temporal_off =
+        loadgen_row("serving_temporal_off", &off_rep, off_allocs);
+    temporal_off.print();
+    println!("temporal kernels: on fps={:.1} off fps={:.1}",
+             rep.fps, off_rep.fps);
+    Client::connect(&addr_off)
+        .expect("connect for temporal-off shutdown")
+        .shutdown_server().expect("temporal-off shutdown");
+    gw_off.wait().expect("temporal-off gateway wait");
+
     let path = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".into());
     harness::write_json_to(
         &path, &[rtt, e2e, mixed_cls, mixed_seg, skew_fifo, skew_cost,
-                 c10k, cluster, pipelined, traced]);
+                 c10k, cluster, pipelined, traced, temporal_off]);
 }

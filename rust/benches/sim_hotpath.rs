@@ -1,8 +1,11 @@
 //! Microbenchmarks of the simulator hot path (PERF.md): spike-map
 //! construction, event iteration, per-layer timing, the allocation-free
-//! functional step, and the frame-parallel sweep (serial vs parallel on
-//! the same synthetic workload). Trained-network benches run too when
-//! the artifacts are built; the synthetic ones always run, so
+//! functional step, the frame-parallel sweep (serial vs parallel on
+//! the same synthetic workload), and the bit-parallel temporal kernels
+//! (`sim_temporal_{conv,dense,frame}` vs their per-timestep oracles at
+//! T=64, counts asserted identical and the frame row asserted
+//! allocation-free). Trained-network benches run too when the
+//! artifacts are built; the synthetic ones always run, so
 //! `BENCH_sim.json` is populated on any host.
 
 #[path = "harness.rs"]
@@ -15,9 +18,10 @@ use skydiver::schedule::cbws::Cbws;
 use skydiver::schedule::{AprcPredictor, Scheduler};
 use skydiver::sim::{layer_timing, sweep, ArchConfig, Simulator,
                     TraceSource};
-use skydiver::snn::{encode_phased, encode_phased_u8, ConvGeom,
-                    FunctionalNet, LayerWeights, NetworkWeights,
-                    SpikeMap, WeightsMeta};
+use skydiver::snn::{encode_phased, encode_phased_u8, transpose_dense,
+                    ConvGeom, DenseGeom, FunctionalNet, LayerWeights,
+                    NetworkWeights, SpikeMap, TemporalSpikeMap,
+                    WeightsMeta};
 
 fn rand_map(rng: &mut SplitMix64, c: usize, h: usize, w: usize,
             rate_pct: u64) -> SpikeMap {
@@ -77,6 +81,67 @@ fn synthetic_frames(rng: &mut SplitMix64, net: &NetworkWeights, n: usize)
             .collect();
         encode_phased(&img, c, h, w, net.meta.timesteps)
     }).collect()
+}
+
+/// Single-conv-layer net for the temporal conv kernel row.
+fn conv_only_net(rng: &mut SplitMix64) -> NetworkWeights {
+    let (cin, cout, h, w, pad) = (8usize, 16usize, 32usize, 64usize,
+                                  2usize);
+    let eh = h + 2 * pad - 3 + 1;
+    let ew = w + 2 * pad - 3 + 1;
+    let weights: Vec<f32> = (0..cout * cin * 9)
+        .map(|_| (rng.next_below(1000) as f32 / 1000.0 - 0.3) * 0.2)
+        .collect();
+    let meta = WeightsMeta::parse(&format!(r#"{{
+        "name": "conv_only", "aprc": true, "pad": {pad}, "vth": 0.4,
+        "timesteps": 64, "in_shape": [{cin}, {h}, {w}],
+        "feature_sizes": [[{cout}, {eh}, {ew}]], "dense_out": null,
+        "total_floats": 0, "lambdas": [],
+        "layers": [], "blob_fnv1a64": "0"
+    }}"#)).expect("conv-only meta");
+    NetworkWeights {
+        meta,
+        layers: vec![LayerWeights::Conv {
+            geom: ConvGeom { cin, cout, r: 3, pad, h, w, eh, ew },
+            w: weights,
+        }],
+    }
+}
+
+/// Single-dense-layer net for the temporal dense kernel row.
+fn dense_only_net(rng: &mut SplitMix64) -> NetworkWeights {
+    let (src, per, fout) = (8usize, 64usize, 128usize);
+    let fin = src * per;
+    let w: Vec<f32> = (0..fout * fin)
+        .map(|_| (rng.next_below(1000) as f32 / 1000.0 - 0.3) * 0.05)
+        .collect();
+    let wt = transpose_dense(&w, fout, fin);
+    let b: Vec<f32> = (0..fout)
+        .map(|_| rng.next_below(1000) as f32 / 1000.0 * 0.01)
+        .collect();
+    let meta = WeightsMeta::parse(&format!(r#"{{
+        "name": "dense_only", "aprc": true, "pad": 0, "vth": 0.4,
+        "timesteps": 64, "in_shape": [{src}, 1, {per}],
+        "feature_sizes": [], "dense_out": {fout},
+        "total_floats": 0, "lambdas": [],
+        "layers": [], "blob_fnv1a64": "0"
+    }}"#)).expect("dense-only meta");
+    NetworkWeights {
+        meta,
+        layers: vec![LayerWeights::Dense {
+            geom: DenseGeom { fin, fout, src_channels: src },
+            w, wt, b,
+        }],
+    }
+}
+
+/// One encoded frame at an explicit timestep count.
+fn train_at(rng: &mut SplitMix64, c: usize, h: usize, w: usize,
+            t: usize) -> Vec<SpikeMap> {
+    let img: Vec<f32> = (0..c * h * w)
+        .map(|_| rng.next_below(1000) as f32 / 1000.0 * 0.4)
+        .collect();
+    encode_phased(&img, c, h, w, t)
 }
 
 fn main() {
@@ -144,6 +209,82 @@ fn main() {
             sweep::run_frames_functional(&sim, &trains, threads)
                 .unwrap().len()
         }));
+
+    // Bit-parallel temporal kernels: the per-timestep oracle vs the
+    // time-major word-wide path on identical frames. T=64 packs one
+    // whole train into a single u64 per neuron — the layout's sweet
+    // spot and the acceptance point for the >=2x serial-path speedup
+    // (PERF.md). Counts are asserted equal before timing, so the
+    // temporal rows measure the same computation, not an
+    // approximation; the frame row is additionally asserted
+    // allocation-free in steady state.
+    let t64 = 64usize;
+    let fit = if harness::quick() { 3 } else { 15 };
+
+    let conv_net = conv_only_net(&mut rng);
+    let conv_train = train_at(&mut rng, 8, 32, 64, t64);
+    let conv_packed = TemporalSpikeMap::from_steps(&conv_train);
+    let mut conv_o = FunctionalNet::new(&conv_net);
+    let mut conv_t = FunctionalNet::new(&conv_net);
+    assert_eq!(conv_t.run_frame_counts_temporal(&conv_packed),
+               conv_o.run_frame_counts(&conv_train),
+               "temporal conv kernel diverged from the oracle");
+    let oracle_conv = bench("sim_oracle_conv", wu, fit, || {
+        conv_o.run_frame_counts(&conv_train).len()
+    });
+    let temporal_conv = bench("sim_temporal_conv", wu.max(2), fit, || {
+        conv_t.run_frame_temporal(&conv_packed).len()
+    });
+    println!("(temporal conv speedup: {:.2}x)",
+             oracle_conv.mean.as_secs_f64()
+             / temporal_conv.mean.as_secs_f64().max(1e-12));
+    results.push(oracle_conv);
+    results.push(temporal_conv);
+
+    let dense_net = dense_only_net(&mut rng);
+    let dense_train = train_at(&mut rng, 8, 1, 64, t64);
+    let dense_packed = TemporalSpikeMap::from_steps(&dense_train);
+    let mut dense_o = FunctionalNet::new(&dense_net);
+    let mut dense_t = FunctionalNet::new(&dense_net);
+    assert_eq!(dense_t.run_frame_counts_temporal(&dense_packed),
+               dense_o.run_frame_counts(&dense_train),
+               "temporal dense kernel diverged from the oracle");
+    let oracle_dense = bench("sim_oracle_dense", wu, it, || {
+        dense_o.run_frame_counts(&dense_train).len()
+    });
+    let temporal_dense = bench("sim_temporal_dense", wu.max(2), it, || {
+        dense_t.run_frame_temporal(&dense_packed).len()
+    });
+    println!("(temporal dense speedup: {:.2}x)",
+             oracle_dense.mean.as_secs_f64()
+             / temporal_dense.mean.as_secs_f64().max(1e-12));
+    results.push(oracle_dense);
+    results.push(temporal_dense);
+
+    // Full synthetic frame (3 conv layers) at T=64 — the row the
+    // baseline gate tracks for the serial-path speedup.
+    let frame_train = train_at(&mut rng, 3, 40, 80, t64);
+    let frame_packed = TemporalSpikeMap::from_steps(&frame_train);
+    let mut frame_o = FunctionalNet::new(&net);
+    let mut frame_t = FunctionalNet::new(&net);
+    assert_eq!(frame_t.run_frame_counts_temporal(&frame_packed),
+               frame_o.run_frame_counts(&frame_train),
+               "temporal frame path diverged from the oracle");
+    let oracle_frame = bench("sim_oracle_frame", wu, fit, || {
+        frame_o.run_frame_counts(&frame_train).len()
+    });
+    let temporal_frame = bench("sim_temporal_frame", wu.max(2), fit,
+                               || {
+        frame_t.run_frame_temporal(&frame_packed).len()
+    });
+    println!("(temporal frame speedup: {:.2}x)",
+             oracle_frame.mean.as_secs_f64()
+             / temporal_frame.mean.as_secs_f64().max(1e-12));
+    assert_eq!(temporal_frame.allocs_per_iter, 0.0,
+               "run_frame_temporal must be allocation-free in steady \
+                state");
+    results.push(oracle_frame);
+    results.push(temporal_frame);
 
     // Full functional frames on the trained networks (if built).
     let dir = skydiver::artifacts_dir();

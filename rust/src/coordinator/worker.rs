@@ -30,7 +30,8 @@ use crate::runtime::{Runtime, SnnRunner};
 use crate::schedule::cbws::Cbws;
 use crate::schedule::{baselines, AprcPredictor, Partition, Scheduler};
 use crate::sim::{sweep, ArchConfig, Simulator, TraceSource};
-use crate::snn::{encode_phased_u8, NetKind, NetworkWeights, SpikeMap};
+use crate::snn::{encode_phased_temporal_u8, encode_phased_u8, NetKind,
+                 NetworkWeights, SpikeMap, TemporalSpikeMap};
 
 /// What a request carries: either raw pixels (the worker encodes) or a
 /// pre-encoded spike train (the network client already ran the phased
@@ -184,6 +185,13 @@ pub struct WorkerConfig {
     /// cores (e.g. one worker on a many-core host). Ignored on the
     /// golden/PJRT path — the client is not thread-safe.
     pub sweep_threads: usize,
+    /// Serve functional frames through the bit-parallel temporal
+    /// kernels (time-major spike storage, 64 timesteps per word) —
+    /// bit-identical outputs and reports to the per-timestep path, so
+    /// this is a pure speed knob (`--temporal-kernels`, default on).
+    /// Ignored on the golden/PJRT path, which needs per-timestep
+    /// buffers for the runtime anyway.
+    pub temporal: bool,
 }
 
 impl WorkerConfig {
@@ -318,6 +326,24 @@ fn encode_request(req: &Request, spec: &FrameSpec) -> Vec<SpikeMap> {
     }
 }
 
+/// Time-major twin of [`encode_request`]: the same payload lands
+/// directly in the [`TemporalSpikeMap`] layout the bit-parallel kernels
+/// consume — no per-timestep intermediate, no transpose pass. Stray
+/// bits in client-packed spike payloads are masked exactly as in the
+/// per-timestep path (`from_packed_steps` applies the spatial mask).
+fn encode_request_temporal(req: &Request, spec: &FrameSpec)
+                           -> TemporalSpikeMap {
+    let (c, h, w) = (spec.c, spec.h, spec.w);
+    match &req.payload {
+        FramePayload::Pixels(px) => {
+            encode_phased_temporal_u8(px, c, h, w, spec.timesteps)
+        }
+        FramePayload::Spikes { timesteps: t, words } => {
+            TemporalSpikeMap::from_packed_steps(c, h, w, *t, words)
+        }
+    }
+}
+
 /// Forward an error to the service before propagating it — the step
 /// that turns a dying worker from a silent hang into a reported
 /// failure. `lost` names the requests in hand that die with the worker.
@@ -432,14 +458,26 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
                 0
             };
             check(events, idx, lost, validate_frame(&req, &spec))?;
-            let inputs = encode_request(&req, &spec);
-            let trace = match runner.as_mut() {
-                Some(r) => TraceSource::Golden(
-                    check(events, idx, lost, r.run_frame(&inputs))?),
-                None => TraceSource::Functional,
+            let report = match runner.as_mut() {
+                Some(r) => {
+                    let inputs = encode_request(&req, &spec);
+                    let trace = TraceSource::Golden(check(
+                        events, idx, lost, r.run_frame(&inputs))?);
+                    check(events, idx, lost,
+                          sim.run_frame(&inputs, &trace))?
+                }
+                None if cfg.temporal => {
+                    let tmap = encode_request_temporal(&req, &spec);
+                    check(events, idx, lost,
+                          sim.run_frame_temporal(&tmap))?
+                }
+                None => {
+                    let inputs = encode_request(&req, &spec);
+                    check(events, idx, lost,
+                          sim.run_frame(&inputs,
+                                        &TraceSource::Functional))?
+                }
             };
-            let report =
-                check(events, idx, lost, sim.run_frame(&inputs, &trace))?;
             if let Some(rt) = req.trace {
                 trace::span(rt.trace_id, rt.parent, Stage::Compute,
                             rt.model, t_compute, false,
@@ -492,12 +530,21 @@ fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
         .position(|r| validate_frame(r, spec).is_err())
         .unwrap_or(batch.len());
     let good = &batch[..first_bad];
-    let trains: Vec<Vec<SpikeMap>> = good.iter()
-        .map(|r| encode_request(r, spec))
-        .collect();
-    let reports = check(events, idx, &ids,
-                        sweep::run_frames_functional(sim, &trains,
-                                                     cfg.sweep_threads))?;
+    let reports = if cfg.temporal {
+        let trains: Vec<TemporalSpikeMap> = good.iter()
+            .map(|r| encode_request_temporal(r, spec))
+            .collect();
+        check(events, idx, &ids,
+              sweep::run_frames_temporal(sim, &trains,
+                                         cfg.sweep_threads))?
+    } else {
+        let trains: Vec<Vec<SpikeMap>> = good.iter()
+            .map(|r| encode_request(r, spec))
+            .collect();
+        check(events, idx, &ids,
+              sweep::run_frames_functional(sim, &trains,
+                                           cfg.sweep_threads))?
+    };
     // Frames ran concurrently: attribute an equal share of the batch
     // wall time to each response's busy-time contribution.
     let per_frame_us =

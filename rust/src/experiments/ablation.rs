@@ -48,14 +48,17 @@ pub fn run(ctx: &ExperimentCtx) -> Result<AblationResult> {
     let predictor = AprcPredictor::from_network(&net, &rates);
     let rm = ResourceModel::default();
 
+    // Pack once, reuse across every (N, scheduler) point: the temporal
+    // kernels report bit-identically to the per-timestep path.
+    let packed = super::common::pack_trains(&trains);
     let mut spe_sweep = Vec::new();
     for n in [2usize, 4, 8, 16] {
         let mut arch = ArchConfig::default();
         arch.n_spes = n;
         for s in all_schedulers() {
             let sim = Simulator::new(arch, &net, s.as_ref(), &predictor);
-            let frames = sweep::run_frames_functional(
-                &sim, &trains, sweep::default_threads())?;
+            let frames = sweep::run_frames_temporal(
+                &sim, &packed, sweep::default_threads())?;
             let sum = RunSummary::from_frames(&frames, arch.clock_hz, n);
             spe_sweep.push(SweepPoint {
                 scheduler: s.name().into(),
@@ -132,8 +135,9 @@ pub fn timestep_sweep(ctx: &ExperimentCtx) -> Result<Vec<TimestepPoint>> {
     for t_steps in [8usize, 16, 24, 32] {
         let (trains, labels) =
             classifier_frames(super::accuracy::DIGITS_TEST_SEED, n, t_steps);
-        let frames = sweep::run_frames_functional(
-            &sim, &trains, sweep::default_threads())?;
+        let packed = super::common::pack_trains(&trains);
+        let frames = sweep::run_frames_temporal(
+            &sim, &packed, sweep::default_threads())?;
         let mut correct = 0usize;
         for (rep, &label) in frames.iter().zip(&labels) {
             let pred = rep.output_counts.iter().enumerate()

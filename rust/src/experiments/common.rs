@@ -6,7 +6,8 @@ use anyhow::Result;
 
 use crate::runtime::{Runtime, SnnRunner};
 use crate::sim::{sweep, FrameReport, Simulator, TraceSource};
-use crate::snn::{encode_phased_u8, NetworkWeights, SpikeMap};
+use crate::snn::{encode_phased_u8, NetworkWeights, SpikeMap,
+                 TemporalSpikeMap};
 
 /// Context every experiment receives.
 #[derive(Debug, Clone)]
@@ -78,9 +79,17 @@ pub fn trace_for(ctx: &ExperimentCtx, net: &NetworkWeights,
     Ok(TraceSource::Golden(runner.run_frame(inputs)?))
 }
 
-/// Simulate many frames of one configuration. Functional mode fans the
-/// frames out across the frame-parallel sweep engine (`sim::sweep`) —
-/// reports come back in frame order, bit-identical to a serial loop.
+/// Pack per-timestep spike trains into the time-major layout the
+/// temporal kernels consume (one map per frame).
+pub fn pack_trains(trains: &[Vec<SpikeMap>]) -> Vec<TemporalSpikeMap> {
+    trains.iter().map(|t| TemporalSpikeMap::from_steps(t)).collect()
+}
+
+/// Simulate many frames of one configuration. Functional mode packs
+/// the frames time-major and fans them out across the frame-parallel
+/// sweep engine (`sim::sweep`) on the bit-parallel temporal kernels —
+/// reports come back in frame order, bit-identical to the per-timestep
+/// serial loop (the kernels are an exact oracle match; see PERF.md).
 /// Golden mode keeps the old interleaved serial loop: the PJRT client
 /// is not thread-safe, trace generation dominates the cost anyway, and
 /// interleaving keeps trace memory at one frame instead of all frames.
@@ -92,7 +101,8 @@ pub fn sweep_run(ctx: &ExperimentCtx, net: &NetworkWeights,
             .map(|t| sim.run_frame(t, &trace_for(ctx, net, t)?))
             .collect();
     }
-    sweep::run_frames_functional(sim, trains, sweep::default_threads())
+    let packed = pack_trains(trains);
+    sweep::run_frames_temporal(sim, &packed, sweep::default_threads())
 }
 
 /// Pearson correlation of two equal-length series.

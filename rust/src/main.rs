@@ -42,16 +42,20 @@ COMMANDS:
              [--plain] [--policy P] [--frames N] [--workers N]
              [--golden] [--dispatch queue|cost|rr] [--queue-cap N]
              [--batch-max N] [--batch-wait-ms N] [--queue-cost-cap N]
-             [--sweep-threads N]
+             [--sweep-threads N] [--temporal-kernels on|off]
   serve      [--addr HOST:PORT] [--max-conns N] [--port-file PATH]
              [--reactor-shards N] [--drain-ms N]
              [--net ... | --model NAME[=KIND] (repeatable)]
              [--plain] [--policy P] [--golden] [--workers N]
              [--dispatch queue|cost|rr] [--queue-cap N] [--batch-max N]
              [--batch-wait-ms N] [--queue-cost-cap N]
-             [--sweep-threads N]
+             [--sweep-threads N] [--temporal-kernels on|off]
              TCP gateway; --addr defaults to 127.0.0.1:7878, port 0
              picks an ephemeral port (written to --port-file).
+             --temporal-kernels (default on) serves functional frames
+             through the bit-parallel time-major kernels — outputs are
+             bit-identical to the per-timestep path, so 'off' exists
+             only for A/B timing; the golden path ignores it.
              --reactor-shards sets the event-loop shard count
              (0 = auto: one per core, max 8); connections are
              multiplexed over the shards, so thread count stays
@@ -131,6 +135,7 @@ const FLAG_SPECS: &[(&str, bool)] = &[
     ("queue-cost-cap", true),
     ("traffic", true),
     ("sweep-threads", true),
+    ("temporal-kernels", true),
     ("addr", true),
     ("max-conns", true),
     ("reactor-shards", true),
@@ -446,6 +451,11 @@ fn service_cfg(args: &Args) -> Result<ServiceConfig> {
 /// The worker pipeline knobs for one net kind.
 fn worker_cfg(artifacts: &Path, args: &Args, kind: NetKind)
               -> Result<WorkerConfig> {
+    let temporal = match args.get("temporal-kernels").unwrap_or("on") {
+        "on" => true,
+        "off" => false,
+        other => bail!("unknown --temporal-kernels {other} (on|off)"),
+    };
     Ok(WorkerConfig {
         artifacts: artifacts.to_path_buf(),
         kind,
@@ -456,6 +466,7 @@ fn worker_cfg(artifacts: &Path, args: &Args, kind: NetKind)
         use_runtime: args.has("golden"),
         timesteps: None,
         sweep_threads: args.get_usize("sweep-threads", 1)?,
+        temporal,
     })
 }
 
@@ -1044,6 +1055,33 @@ mod tests {
         // Typos near the new flags still suggest correctly.
         assert_eq!(suggest("lg-level"), Some("log-level"));
         assert_eq!(suggest("chrme"), Some("chrome"));
+    }
+
+    #[test]
+    fn temporal_kernels_flag_parses() {
+        let dir = Path::new("unused");
+        // Default: on.
+        let a = Args::parse(&sv(&["serve"])).unwrap();
+        assert!(worker_cfg(dir, &a, NetKind::Classifier).unwrap()
+                .temporal);
+        let off = Args::parse(&sv(&[
+            "serve", "--temporal-kernels", "off",
+        ])).unwrap();
+        assert!(!worker_cfg(dir, &off, NetKind::Classifier).unwrap()
+                .temporal);
+        let on = Args::parse(&sv(&[
+            "serve", "--temporal-kernels", "on",
+        ])).unwrap();
+        assert!(worker_cfg(dir, &on, NetKind::Classifier).unwrap()
+                .temporal);
+        // A bad value is a startup error, not a silent default.
+        let bad = Args::parse(&sv(&[
+            "serve", "--temporal-kernels", "maybe",
+        ])).unwrap();
+        assert!(worker_cfg(dir, &bad, NetKind::Classifier).is_err());
+        // Typos near the new flag still suggest correctly.
+        assert_eq!(suggest("temporal-kernel"),
+                   Some("temporal-kernels"));
     }
 
     #[test]

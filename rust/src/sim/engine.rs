@@ -15,7 +15,8 @@ use super::timing::{dma_cycles, layer_timing_with_rows};
 use super::ArchConfig;
 use crate::schedule::{Partition, Scheduler};
 use crate::schedule::aprc::AprcPredictor;
-use crate::snn::{FunctionalNet, NetworkWeights, SpikeMap};
+use crate::snn::{FunctionalNet, NetworkWeights, SpikeMap,
+                 TemporalSpikeMap};
 
 /// Where the per-layer spike activity comes from.
 pub enum TraceSource {
@@ -151,6 +152,92 @@ impl<'a> Simulator<'a> {
                                 -> Result<FrameReport> {
         self.run_frame(inputs, &TraceSource::Functional)
     }
+
+    /// Simulate one frame from a time-major input via the bit-parallel
+    /// temporal kernels. Produces a [`FrameReport`] bit-identical to
+    /// [`run_frame`](Self::run_frame) with `TraceSource::Functional`
+    /// over the unpacked timesteps: the temporal kernels are an exact
+    /// oracle match, the per-timestep activity counts the timing model
+    /// consumes are extracted from the packed maps in one pass per
+    /// layer, and the stats are absorbed in the same (timestep outer,
+    /// layer inner) order — the per-layer balance accumulation is f64
+    /// and order-sensitive.
+    pub fn run_frame_temporal(&self, input: &TemporalSpikeMap)
+                              -> Result<FrameReport> {
+        let nl = self.net.layers.len();
+        ensure!(nl > 0, "cannot simulate a zero-layer network");
+        let t_total = input.t;
+        ensure!(t_total > 0, "cannot simulate a zero-timestep frame");
+        let mut report = FrameReport {
+            layers: (0..nl).map(|l| LayerStats { layer: l,
+                                                 ..Default::default() })
+                .collect(),
+            timesteps: t_total,
+            ..Default::default()
+        };
+        let last = nl - 1;
+        let (oc, ohh, oww) = self.net.layer_output_shape(last);
+        report.output_counts = vec![0u32; oc * ohh * oww];
+
+        let mut functional = FunctionalNet::new(self.net);
+        let outs = functional.run_frame_temporal(input);
+        outs[last].counts_into(&mut report.output_counts);
+
+        // Per-layer per-timestep activity, one pass over each packed
+        // map (instead of T per-timestep scans).
+        let n = self.arch.n_spes;
+        let mut nnz_t: Vec<Vec<usize>> = Vec::with_capacity(nl);
+        let mut rows_t: Vec<Option<Vec<u64>>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let in_map = if l == 0 { input } else { &outs[l - 1] };
+            let mut nnz = Vec::new();
+            in_map.nnz_per_channel_t_into(&mut nnz);
+            nnz_t.push(nnz);
+            rows_t.push(match &self.net.layers[l] {
+                crate::snn::LayerWeights::Dense { .. } => {
+                    let mut r = Vec::new();
+                    in_map.nnz_index_interleaved_t_into(n, &mut r);
+                    Some(r)
+                }
+                _ if in_map.c < n => {
+                    let mut r = Vec::new();
+                    in_map.nnz_row_interleaved_t_into(n, &mut r);
+                    Some(r)
+                }
+                _ => None,
+            });
+        }
+
+        for t in 0..t_total {
+            for l in 0..nl {
+                let c = if l == 0 { input.c } else { outs[l - 1].c };
+                let nnz = &nnz_t[l][t * c..(t + 1) * c];
+                let rows = rows_t[l].as_deref()
+                    .map(|r| &r[t * n..(t + 1) * n]);
+                let timing = layer_timing_with_rows(
+                    &self.arch, &self.net.layers[l], &self.partitions[l],
+                    nnz, rows);
+                report.layers[l].absorb(&timing, n);
+                report.compute_cycles += timing.cycles;
+                report.synops += timing.synops;
+                report.events += timing.events;
+                report.weight_reads += timing.weight_reads;
+                report.vmem_rmw += timing.vmem_rmw;
+                report.state_reads += timing.state_reads;
+            }
+        }
+
+        // DMA identical to the per-timestep path: the wire format is
+        // still T spatial maps of `c * ceil(h*w/64)` words each.
+        let step_words = input.c * (input.h * input.w).div_ceil(64);
+        let in_bytes = t_total * step_words * 8;
+        let out_bytes = report.output_counts.len() * 4;
+        report.dma_bytes = (in_bytes + out_bytes) as u64;
+        report.dma_cycles = dma_cycles(&self.arch, in_bytes)
+            + dma_cycles(&self.arch, out_bytes);
+        report.total_cycles = report.compute_cycles + report.dma_cycles;
+        Ok(report)
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +334,49 @@ mod tests {
         let inputs = encoded_inputs(0.5, 4);
         let err = sim.run_frame_functional(&inputs);
         assert!(err.is_err(), "zero-layer net must Err, not panic");
+    }
+
+    #[test]
+    fn temporal_report_equals_per_timestep_report() {
+        // The whole FrameReport — cycles, per-layer stats including the
+        // f64 balance accumulators, output counts, DMA — must be
+        // bit-identical between the temporal path and the per-timestep
+        // path, at T values straddling the 64-bit word.
+        let net = tiny_net();
+        let pred = AprcPredictor::uniform(&net);
+        let sim = Simulator::new(ArchConfig::default(), &net,
+                                 &Contiguous, &pred);
+        for t in [1usize, 4, 63, 64, 65] {
+            let inputs = encoded_inputs(0.37, t);
+            let packed = TemporalSpikeMap::from_steps(&inputs);
+            let a = sim.run_frame_functional(&inputs).unwrap();
+            let b = sim.run_frame_temporal(&packed).unwrap();
+            assert_eq!(a, b, "T={t}");
+        }
+    }
+
+    #[test]
+    fn temporal_rejects_degenerate_frames() {
+        let meta = WeightsMeta::parse(r#"{
+            "name": "empty", "aprc": true, "pad": 2, "vth": 0.5,
+            "timesteps": 4, "in_shape": [2, 6, 6],
+            "feature_sizes": [], "dense_out": null,
+            "total_floats": 0, "lambdas": [], "layers": [],
+            "blob_fnv1a64": "0"
+        }"#).unwrap();
+        let net = NetworkWeights { meta, layers: vec![] };
+        let sim = Simulator::with_partitions(ArchConfig::default(), &net,
+                                             vec![]).unwrap();
+        let packed = TemporalSpikeMap::zeros(2, 6, 6, 4);
+        assert!(sim.run_frame_temporal(&packed).is_err(),
+                "zero-layer net must Err, not panic");
+        let net2 = tiny_net();
+        let pred = AprcPredictor::uniform(&net2);
+        let sim2 = Simulator::new(ArchConfig::default(), &net2,
+                                  &Contiguous, &pred);
+        let empty = TemporalSpikeMap::zeros(2, 6, 6, 0);
+        assert!(sim2.run_frame_temporal(&empty).is_err(),
+                "zero-timestep frame must Err, not panic");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use anyhow::Result;
 
 use super::engine::{Simulator, TraceSource};
 use super::report::FrameReport;
-use crate::snn::SpikeMap;
+use crate::snn::{SpikeMap, TemporalSpikeMap};
 
 /// Sweep width: `SKYDIVER_SWEEP_THREADS` if set, else the machine's
 /// available parallelism, else 1.
@@ -93,6 +93,17 @@ pub fn run_frames_functional(sim: &Simulator, trains: &[Vec<SpikeMap>],
                              threads: usize) -> Result<Vec<FrameReport>> {
     parallel_map(trains, threads,
                  |_, t| sim.run_frame(t, &TraceSource::Functional))
+        .into_iter()
+        .collect()
+}
+
+/// Temporal-kernel sweep over time-major frames: same determinism and
+/// frame-grain parallelism as [`run_frames_functional`], reports
+/// bit-identical to it (see `Simulator::run_frame_temporal`).
+pub fn run_frames_temporal(sim: &Simulator,
+                           trains: &[TemporalSpikeMap],
+                           threads: usize) -> Result<Vec<FrameReport>> {
+    parallel_map(trains, threads, |_, t| sim.run_frame_temporal(t))
         .into_iter()
         .collect()
 }

@@ -5,7 +5,7 @@
 //! is f32 to match the jax lowering bit-for-bit (cross-checked against
 //! `meta.json:encoding_crosscheck` in tests/cross_language.rs).
 
-use super::SpikeMap;
+use super::{SpikeMap, TemporalSpikeMap};
 
 /// Encode a (C, H, W) f32 image in [0,1] into T spike maps.
 pub fn encode_phased(img: &[f32], c: usize, h: usize, w: usize,
@@ -35,6 +35,43 @@ pub fn encode_phased_u8(img: &[u8], c: usize, h: usize, w: usize,
                         timesteps: usize) -> Vec<SpikeMap> {
     let f: Vec<f32> = img.iter().map(|&v| v as f32 / 255.0).collect();
     encode_phased(&f, c, h, w, timesteps)
+}
+
+/// [`encode_phased`] emitting straight into the time-major layout the
+/// bit-parallel temporal kernels consume: for each pixel, the whole
+/// spike train is produced in one inner loop over `t` (no per-timestep
+/// maps, no transpose pass). Per-(pixel, t) arithmetic is the exact
+/// f32 expression of [`encode_phased`], so
+/// `TemporalSpikeMap::to_steps` of the result is bit-identical to the
+/// per-timestep encoder — property-checked in
+/// tests/proptest_invariants.rs.
+pub fn encode_phased_temporal(img: &[f32], c: usize, h: usize,
+                              w: usize, timesteps: usize)
+                              -> TemporalSpikeMap {
+    assert_eq!(img.len(), c * h * w);
+    let mut out = TemporalSpikeMap::zeros(c, h, w, timesteps);
+    let wpt = out.words_per_train();
+    let words = out.words_mut();
+    for (n, &p) in img.iter().enumerate() {
+        let train = &mut words[n * wpt..(n + 1) * wpt];
+        for t in 0..timesteps {
+            let tf = t as f32;
+            let s = (p * (tf + 1.0)).floor() - (p * tf).floor();
+            if s >= 0.5 {
+                train[t / 64] |= 1u64 << (t % 64);
+            }
+        }
+    }
+    out
+}
+
+/// [`encode_phased_u8`] into the time-major layout (scaled by 1/255,
+/// matching python).
+pub fn encode_phased_temporal_u8(img: &[u8], c: usize, h: usize,
+                                 w: usize, timesteps: usize)
+                                 -> TemporalSpikeMap {
+    let f: Vec<f32> = img.iter().map(|&v| v as f32 / 255.0).collect();
+    encode_phased_temporal(&f, c, h, w, timesteps)
 }
 
 /// Spikes [`encode_phased_u8`] emits for one pixel value over `T`
@@ -105,6 +142,26 @@ mod tests {
                            "p={p} T={t}");
             }
         }
+    }
+
+    #[test]
+    fn temporal_encoder_matches_per_timestep_encoder() {
+        // Straddling T values and a partial spatial tail word: the
+        // time-major encoder must agree bit-for-bit with the oracle.
+        let img: Vec<f32> =
+            (0..2 * 5 * 13).map(|i| (i % 97) as f32 / 96.0).collect();
+        for t in [1usize, 8, 63, 64, 65, 128] {
+            let steps = encode_phased(&img, 2, 5, 13, t);
+            let temporal = encode_phased_temporal(&img, 2, 5, 13, t);
+            assert_eq!(temporal, TemporalSpikeMap::from_steps(&steps),
+                       "T={t}");
+            assert_eq!(temporal.to_steps(), steps, "T={t}");
+        }
+        let pix: Vec<u8> = (0..=255).collect();
+        let a = encode_phased_temporal_u8(&pix, 1, 16, 16, 20);
+        let b = TemporalSpikeMap::from_steps(
+            &encode_phased_u8(&pix, 1, 16, 16, 20));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! (ablations, schedule sweeps) run without a PJRT client, and it
 //! produces the per-layer spike traces that the timing model consumes.
 
-use super::{LayerWeights, NetworkWeights, SpikeMap};
+use super::{LayerWeights, NetworkWeights, SpikeMap, TemporalSpikeMap};
 
 /// Output of one layer for one timestep.
 #[derive(Debug, Clone)]
@@ -34,6 +34,35 @@ pub struct FunctionalNet<'a> {
     interior: Vec<(u32, u32)>,
     /// Border-event scratch: (input channel, y, x) for the clipped path.
     border: Vec<(u32, u32, u32)>,
+    /// Lazily-built scratch for the bit-parallel temporal kernels
+    /// ([`run_frame_temporal`](Self::run_frame_temporal)); `None` until
+    /// the first temporal frame.
+    temporal: Option<TemporalScratch>,
+}
+
+/// Reused state of the time-major frame kernels: transposed weight
+/// tables (built once per net) plus the per-frame contribution-sort
+/// buffers and per-layer temporal output maps (rebuilt only when the
+/// frame length T changes). Steady-state temporal frames allocate
+/// nothing (asserted by the counting allocator in benches/sim_hotpath).
+struct TemporalScratch {
+    /// Frame length the output maps are currently sized for.
+    t: usize,
+    /// Per-layer time-major outputs, fully overwritten every frame.
+    outs: Vec<TemporalSpikeMap>,
+    /// Per-layer 8-lane transposed weights. Conv: indexed
+    /// `(mb*cin*r*r + widx)*8 + lane` with output channel
+    /// `m = mb*8 + lane` (lanes past `cout` are zero). Dense: indexed
+    /// `f*fout_pad + k` with `fout_pad = ceil(fout/8)*8`.
+    wt8: Vec<Vec<f32>>,
+    /// Per-layer zero-padded dense bias (`fout_pad` floats; empty for
+    /// conv layers).
+    b8: Vec<Vec<f32>>,
+    /// Counting-sort bucket offsets (conv: `eh*ew*T + 1`; dense: `T+1`).
+    offs: Vec<u32>,
+    /// Sorted contribution stream (conv: weight index per cell-hit;
+    /// dense: input-neuron index per timestep-hit).
+    sorted: Vec<u32>,
 }
 
 impl<'a> FunctionalNet<'a> {
@@ -53,7 +82,8 @@ impl<'a> FunctionalNet<'a> {
                 }
             }
         }
-        Self { net, vmem, outs, interior: Vec::new(), border: Vec::new() }
+        Self { net, vmem, outs, interior: Vec::new(),
+               border: Vec::new(), temporal: None }
     }
 
     pub fn reset(&mut self) {
@@ -123,6 +153,118 @@ impl<'a> FunctionalNet<'a> {
             }
         }
         counts
+    }
+
+    /// Run a full frame through the bit-parallel temporal kernels: one
+    /// time-major input, time-major per-layer outputs (into retained
+    /// scratch, overwritten by the next call). Bit-identical to running
+    /// [`step_reuse`](Self::step_reuse) over the unpacked timesteps —
+    /// spikes AND membrane potentials — because each membrane cell
+    /// replays the oracle's exact f32 add sequence (see the kernel docs
+    /// below and PERF.md). Steady-state calls perform zero heap
+    /// allocations once the scratch has grown to the frame's peak
+    /// activity.
+    pub fn run_frame_temporal(&mut self, input: &TemporalSpikeMap)
+                              -> &[TemporalSpikeMap] {
+        assert!(input.t > 0, "run_frame_temporal: zero-timestep frame");
+        self.reset();
+        self.ensure_temporal(input.t);
+        let vth = self.net.meta.vth;
+        let layers = &self.net.layers;
+        let TemporalScratch { outs, wt8, b8, offs, sorted, .. } =
+            self.temporal.as_mut().unwrap();
+        for (li, layer) in layers.iter().enumerate() {
+            let (done, rest) = outs.split_at_mut(li);
+            let cur: &TemporalSpikeMap =
+                if li == 0 { input } else { &done[li - 1] };
+            let out = &mut rest[0];
+            match layer {
+                LayerWeights::Conv { geom, .. } => {
+                    conv_frame_temporal(cur, geom, &wt8[li],
+                                        &mut self.vmem[li], vth, offs,
+                                        sorted, out);
+                }
+                LayerWeights::Dense { geom, .. } => {
+                    dense_frame_temporal(cur, geom.fin, geom.fout,
+                                         &wt8[li], &b8[li],
+                                         &mut self.vmem[li], vth, offs,
+                                         sorted, out);
+                }
+            }
+        }
+        &self.temporal.as_ref().unwrap().outs
+    }
+
+    /// Accumulated output-layer spike counts over a temporal frame —
+    /// the time-major equivalent of
+    /// [`run_frame_counts`](Self::run_frame_counts) (bit-identical
+    /// predictions, one popcount per output neuron).
+    pub fn run_frame_counts_temporal(&mut self, input: &TemporalSpikeMap)
+                                     -> Vec<u32> {
+        let last = self.net.layers.len() - 1;
+        let (c, h, w) = self.net.layer_output_shape(last);
+        let mut counts = vec![0u32; c * h * w];
+        let outs = self.run_frame_temporal(input);
+        outs[last].counts_into(&mut counts);
+        counts
+    }
+
+    /// Build the temporal weight tables once and (re)size the per-layer
+    /// output maps when the frame length changes.
+    fn ensure_temporal(&mut self, t: usize) {
+        if self.temporal.is_none() {
+            let mut wt8 = Vec::with_capacity(self.net.layers.len());
+            let mut b8 = Vec::with_capacity(self.net.layers.len());
+            for l in &self.net.layers {
+                match l {
+                    LayerWeights::Conv { geom, w } => {
+                        let cin_r2 = geom.cin * geom.r * geom.r;
+                        let nblocks = geom.cout.div_ceil(8);
+                        let mut tbl = vec![0.0f32; nblocks * cin_r2 * 8];
+                        for m in 0..geom.cout {
+                            let (mb, lane) = (m / 8, m % 8);
+                            for widx in 0..cin_r2 {
+                                tbl[(mb * cin_r2 + widx) * 8 + lane] =
+                                    w[m * cin_r2 + widx];
+                            }
+                        }
+                        wt8.push(tbl);
+                        b8.push(Vec::new());
+                    }
+                    LayerWeights::Dense { geom, wt, b, .. } => {
+                        let fout_pad = geom.fout.div_ceil(8) * 8;
+                        let mut tbl = vec![0.0f32; geom.fin * fout_pad];
+                        for f in 0..geom.fin {
+                            tbl[f * fout_pad..f * fout_pad + geom.fout]
+                                .copy_from_slice(
+                                    &wt[f * geom.fout
+                                        ..(f + 1) * geom.fout]);
+                        }
+                        let mut bias = vec![0.0f32; fout_pad];
+                        bias[..geom.fout].copy_from_slice(b);
+                        wt8.push(tbl);
+                        b8.push(bias);
+                    }
+                }
+            }
+            self.temporal = Some(TemporalScratch {
+                t: 0,
+                outs: Vec::new(),
+                wt8,
+                b8,
+                offs: Vec::new(),
+                sorted: Vec::new(),
+            });
+        }
+        let s = self.temporal.as_mut().unwrap();
+        if s.t != t {
+            s.t = t;
+            s.outs.clear();
+            for li in 0..self.net.layers.len() {
+                let (c, h, w) = self.net.layer_output_shape(li);
+                s.outs.push(TemporalSpikeMap::zeros(c, h, w, t));
+            }
+        }
     }
 }
 
@@ -262,6 +404,294 @@ fn dense_step_into(input: &SpikeMap, fin: usize, fout: usize, wt: &[f32],
         if vmem[k] >= vth {
             vmem[k] -= vth;
             out.set(k, 0);
+        }
+    }
+}
+
+/// Stream the membrane contributions of one classification phase
+/// (interior or border) of a conv layer's time-major input, in the
+/// per-timestep oracle's event order: neurons ascending (channel,
+/// linear index), each neuron's set timesteps ascending.
+/// `sink(key, widx)` receives `key = cell*T + t` (cell = flattened
+/// output position) and the weight index `widx = c*r*r + j*r + k`.
+/// Border contributions are pre-clipped, exactly like
+/// [`scatter_clipped`].
+fn emit_conv_phase(input: &TemporalSpikeMap, geom: &super::ConvGeom,
+                   interior_phase: bool,
+                   mut sink: impl FnMut(usize, u32)) {
+    let (r, pad) = (geom.r, geom.pad);
+    let (eh, ew) = (geom.eh, geom.ew);
+    let t_total = input.t;
+    let wpt = input.words_per_train();
+    let words = input.words();
+    let per_in = input.h * input.w;
+    let r2 = r * r;
+    for ch in 0..input.c {
+        for idx in 0..per_in {
+            let n = ch * per_in + idx;
+            let train = &words[n * wpt..(n + 1) * wpt];
+            if train.iter().all(|&w| w == 0) {
+                continue;
+            }
+            let y = idx / input.w;
+            let x = idx % input.w;
+            let (iy, ix) = (y + pad, x + pad);
+            let interior =
+                r == 3 && iy >= 2 && iy < eh && ix >= 2 && ix < ew;
+            if interior != interior_phase {
+                continue;
+            }
+            if interior {
+                let base = (iy - 2) * ew + (ix - 2);
+                for (tw, &word) in train.iter().enumerate() {
+                    let mut rem = word;
+                    while rem != 0 {
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        let tt = tw * 64 + b;
+                        for j in 0..3usize {
+                            let row = base + (2 - j) * ew;
+                            for d in 0..3usize {
+                                sink((row + d) * t_total + tt,
+                                     (ch * 9 + j * 3 + (2 - d)) as u32);
+                            }
+                        }
+                    }
+                }
+            } else {
+                for (tw, &word) in train.iter().enumerate() {
+                    let mut rem = word;
+                    while rem != 0 {
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        let tt = tw * 64 + b;
+                        for j in 0..r {
+                            if iy < j || iy - j >= eh {
+                                continue;
+                            }
+                            let row = (iy - j) * ew;
+                            for k in 0..r {
+                                if ix < k || ix - k >= ew {
+                                    continue;
+                                }
+                                sink((row + (ix - k)) * t_total + tt,
+                                     (ch * r2 + j * r + k) as u32);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Bit-parallel temporal conv + LIF over a whole frame.
+///
+/// The per-timestep oracle ([`conv_step_into`]) walks the event list
+/// once per output channel per timestep; this kernel decodes the
+/// time-major input once, counting-sorts the cell contributions by
+/// (output cell, timestep), and then replays them with the membrane of
+/// 8 output channels held in registers across all T timesteps —
+/// word-wide over time, SIMD-wide over output channels. f32 addition
+/// is non-associative, but a membrane cell is an independent
+/// accumulator: the stable sort keys on `cell*T + t` while emission
+/// order is (interior neurons ascending, then border neurons
+/// ascending, timesteps ascending per neuron), so each bucket replays
+/// the oracle's per-cell add sequence exactly — spikes and membranes
+/// come out bit-identical (property-tested in
+/// tests/proptest_invariants.rs).
+#[allow(clippy::too_many_arguments)]
+fn conv_frame_temporal(input: &TemporalSpikeMap, geom: &super::ConvGeom,
+                       wt8: &[f32], vmem: &mut [f32], vth: f32,
+                       offs: &mut Vec<u32>, sorted: &mut Vec<u32>,
+                       out: &mut TemporalSpikeMap) {
+    let t_total = input.t;
+    let per_out = geom.eh * geom.ew;
+    let cin_r2 = geom.cin * geom.r * geom.r;
+    let cout = geom.cout;
+    debug_assert_eq!((out.c, out.h, out.w, out.t),
+                     (cout, geom.eh, geom.ew, t_total));
+
+    // Counting sort: count per (cell, timestep) bucket, prefix-sum,
+    // then scatter the weight indices in emission order (stable).
+    let nb = per_out * t_total;
+    offs.clear();
+    offs.resize(nb + 1, 0);
+    emit_conv_phase(input, geom, true, |key, _| offs[key + 1] += 1);
+    emit_conv_phase(input, geom, false, |key, _| offs[key + 1] += 1);
+    for i in 1..=nb {
+        offs[i] += offs[i - 1];
+    }
+    let total = offs[nb] as usize;
+    sorted.clear();
+    sorted.resize(total, 0);
+    emit_conv_phase(input, geom, true, |key, widx| {
+        sorted[offs[key] as usize] = widx;
+        offs[key] += 1;
+    });
+    emit_conv_phase(input, geom, false, |key, widx| {
+        sorted[offs[key] as usize] = widx;
+        offs[key] += 1;
+    });
+    // offs[key] is now the END of bucket `key`; buckets are consumed
+    // strictly in key order below via a moving cursor.
+
+    let wpt = out.words_per_train();
+    let out_words = out.words_mut();
+    let nblocks = cout.div_ceil(8);
+    for mb in 0..nblocks {
+        let wtb = &wt8[mb * cin_r2 * 8..(mb + 1) * cin_r2 * 8];
+        let mut pos = 0usize;
+        for s in 0..per_out {
+            // 8 output-channel membranes of this cell, register-resident
+            // across the whole frame.
+            let mut v = [0.0f32; 8];
+            for (lane, vv) in v.iter_mut().enumerate() {
+                let m = mb * 8 + lane;
+                if m < cout {
+                    *vv = vmem[m * per_out + s];
+                }
+            }
+            let mut cur = [0u64; 8];
+            let base_key = s * t_total;
+            for tt in 0..t_total {
+                let end = offs[base_key + tt] as usize;
+                while pos < end {
+                    let wrow = &wtb[sorted[pos] as usize * 8..][..8];
+                    pos += 1;
+                    for (vv, &wv) in v.iter_mut().zip(wrow) {
+                        *vv += wv;
+                    }
+                }
+                // Threshold + reset-by-subtraction, packing the spike
+                // bits of 64 timesteps into one word per lane.
+                let bit = tt % 64;
+                for (lane, vv) in v.iter_mut().enumerate() {
+                    if *vv >= vth {
+                        *vv -= vth;
+                        cur[lane] |= 1u64 << bit;
+                    }
+                }
+                if bit == 63 || tt + 1 == t_total {
+                    let tw = tt / 64;
+                    for (lane, cv) in cur.iter_mut().enumerate() {
+                        let m = mb * 8 + lane;
+                        if m < cout {
+                            out_words[(m * per_out + s) * wpt + tw] = *cv;
+                        }
+                        *cv = 0;
+                    }
+                }
+            }
+            for (lane, &vv) in v.iter().enumerate() {
+                let m = mb * 8 + lane;
+                if m < cout {
+                    vmem[m * per_out + s] = vv;
+                }
+            }
+        }
+    }
+}
+
+/// Stream a dense layer's time-major input as (timestep, input neuron)
+/// pairs, neurons ascending — [`emit_conv_phase`]'s flat equivalent.
+fn emit_dense(input: &TemporalSpikeMap,
+              mut sink: impl FnMut(usize, u32)) {
+    let wpt = input.words_per_train();
+    let words = input.words();
+    for f in 0..input.len() {
+        let train = &words[f * wpt..(f + 1) * wpt];
+        for (tw, &word) in train.iter().enumerate() {
+            let mut rem = word;
+            while rem != 0 {
+                let b = rem.trailing_zeros() as usize;
+                rem &= rem - 1;
+                sink(tw * 64 + b, f as u32);
+            }
+        }
+    }
+}
+
+/// Bit-parallel temporal dense + LIF over a whole frame: active input
+/// neurons are bucketed per timestep (stable — ascending neuron order
+/// within a step, matching the oracle's event order), then replayed
+/// with 8 output membranes register-resident across all T timesteps.
+/// Bit-identical to [`dense_step_into`] per timestep, bias and all.
+#[allow(clippy::too_many_arguments)]
+fn dense_frame_temporal(input: &TemporalSpikeMap, fin: usize,
+                        fout: usize, wt8: &[f32], b8: &[f32],
+                        vmem: &mut [f32], vth: f32,
+                        offs: &mut Vec<u32>, sorted: &mut Vec<u32>,
+                        out: &mut TemporalSpikeMap) {
+    let t_total = input.t;
+    debug_assert_eq!(input.len(), fin);
+    let fout_pad = fout.div_ceil(8) * 8;
+    debug_assert_eq!(wt8.len(), fin * fout_pad);
+    debug_assert_eq!((out.c, out.t), (fout, t_total));
+
+    offs.clear();
+    offs.resize(t_total + 1, 0);
+    emit_dense(input, |tt, _| offs[tt + 1] += 1);
+    for i in 1..=t_total {
+        offs[i] += offs[i - 1];
+    }
+    let total = offs[t_total] as usize;
+    sorted.clear();
+    sorted.resize(total, 0);
+    emit_dense(input, |tt, f| {
+        sorted[offs[tt] as usize] = f;
+        offs[tt] += 1;
+    });
+
+    let wpt = out.words_per_train();
+    let out_words = out.words_mut();
+    for kb in 0..fout_pad / 8 {
+        let bb = &b8[kb * 8..kb * 8 + 8];
+        let mut v = [0.0f32; 8];
+        for (lane, vv) in v.iter_mut().enumerate() {
+            let k = kb * 8 + lane;
+            if k < fout {
+                *vv = vmem[k];
+            }
+        }
+        let mut cur = [0u64; 8];
+        let mut pos = 0usize;
+        for tt in 0..t_total {
+            let end = offs[tt] as usize;
+            while pos < end {
+                let f = sorted[pos] as usize;
+                pos += 1;
+                let row = &wt8[f * fout_pad + kb * 8..][..8];
+                for (vv, &wv) in v.iter_mut().zip(row) {
+                    *vv += wv;
+                }
+            }
+            for (vv, &bv) in v.iter_mut().zip(bb) {
+                *vv += bv;
+            }
+            let bit = tt % 64;
+            for (lane, vv) in v.iter_mut().enumerate() {
+                if *vv >= vth {
+                    *vv -= vth;
+                    cur[lane] |= 1u64 << bit;
+                }
+            }
+            if bit == 63 || tt + 1 == t_total {
+                let tw = tt / 64;
+                for (lane, cv) in cur.iter_mut().enumerate() {
+                    let k = kb * 8 + lane;
+                    if k < fout {
+                        out_words[k * wpt + tw] = *cv;
+                    }
+                    *cv = 0;
+                }
+            }
+        }
+        for (lane, &vv) in v.iter().enumerate() {
+            let k = kb * 8 + lane;
+            if k < fout {
+                vmem[k] = vv;
+            }
         }
     }
 }
@@ -482,5 +912,115 @@ mod tests {
     fn dense_geom_consistency() {
         let g = DenseGeom { fin: 72, fout: 3, src_channels: 2 };
         assert_eq!(g.fin / g.src_channels, 36);
+    }
+
+    /// conv(2->3) -> conv(3->2) -> dense(->4) with varied deterministic
+    /// weights — exercises interior + border events, multi-channel
+    /// weight blocks, a non-multiple-of-8 lane count and the dense
+    /// bias, at both paddings.
+    fn chain_net(pad: usize) -> NetworkWeights {
+        let (h, w) = (5usize, 6usize);
+        let eh1 = h + 2 * pad - 2;
+        let ew1 = w + 2 * pad - 2;
+        let eh2 = eh1 + 2 * pad - 2;
+        let ew2 = ew1 + 2 * pad - 2;
+        let fin = 2 * eh2 * ew2;
+        let total = 112 + 4 * fin;
+        let meta = WeightsMeta::parse(&format!(r#"{{
+            "name": "chain", "aprc": {}, "pad": {pad}, "vth": 0.4,
+            "timesteps": 8, "in_shape": [2, {h}, {w}],
+            "feature_sizes": [[3, {eh1}, {ew1}], [2, {eh2}, {ew2}]],
+            "dense_out": 4, "total_floats": {total}, "lambdas": [],
+            "layers": [
+                {{"kind": "conv", "shape": [3,2,3,3], "offset": 0,
+                  "layer": 0, "pad": {pad}}},
+                {{"kind": "conv", "shape": [2,3,3,3], "offset": 54,
+                  "layer": 1, "pad": {pad}}},
+                {{"kind": "dense_w", "shape": [4, {fin}],
+                  "offset": 108, "layer": 2}},
+                {{"kind": "dense_b", "shape": [4],
+                  "offset": {}, "layer": 2}}
+            ],
+            "blob_fnv1a64": "0"
+        }}"#, pad == 2, 108 + 4 * fin)).unwrap();
+        let floats: Vec<f32> = (0..total)
+            .map(|i| ((i * 37 + 11) % 101) as f32 / 101.0 * 0.6 - 0.25)
+            .collect();
+        NetworkWeights::assemble(meta, &floats).unwrap()
+    }
+
+    fn dense_input_pattern(c: usize, h: usize, w: usize, t: usize,
+                           salt: usize) -> Vec<SpikeMap> {
+        (0..t).map(|tt| {
+            let mut m = SpikeMap::zeros(c, h, w);
+            for ch in 0..c {
+                for i in 0..h * w {
+                    if (ch * 31 + i * 7 + tt * 13 + salt) % 3 == 0 {
+                        m.set(ch, i);
+                    }
+                }
+            }
+            m
+        }).collect()
+    }
+
+    #[test]
+    fn temporal_frame_matches_per_timestep_oracle() {
+        // The acceptance invariant of the temporal kernels: output
+        // spikes AND membrane potentials bit-identical to the
+        // per-timestep oracle, at both paddings and at T values that
+        // straddle the 64-bit word (the random-net sweep lives in
+        // tests/proptest_invariants.rs).
+        for pad in [1usize, 2] {
+            let net = chain_net(pad);
+            for t in [1usize, 5, 63, 64, 65, 128] {
+                let steps = dense_input_pattern(2, 5, 6, t, pad);
+                let temporal = TemporalSpikeMap::from_steps(&steps);
+                let mut oracle = FunctionalNet::new(&net);
+                let want = oracle.run_frame(&steps);
+                let mut f = FunctionalNet::new(&net);
+                let got: Vec<Vec<SpikeMap>> =
+                    f.run_frame_temporal(&temporal).iter()
+                        .map(|m| m.to_steps()).collect();
+                for l in 0..net.layers.len() {
+                    for tt in 0..t {
+                        assert_eq!(got[l][tt], want[tt][l].spikes,
+                                   "pad={pad} T={t} layer={l} t={tt}");
+                    }
+                    assert_eq!(f.vmem(l), oracle.vmem(l),
+                               "pad={pad} T={t} layer={l} vmem");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn temporal_counts_match_oracle_counts() {
+        let net = chain_net(1);
+        let steps = dense_input_pattern(2, 5, 6, 64, 3);
+        let temporal = TemporalSpikeMap::from_steps(&steps);
+        let mut a = FunctionalNet::new(&net);
+        let mut b = FunctionalNet::new(&net);
+        assert_eq!(b.run_frame_counts_temporal(&temporal),
+                   a.run_frame_counts(&steps));
+    }
+
+    #[test]
+    fn temporal_scratch_reuse_and_t_change() {
+        // Reusing one instance across frames — including a change of T,
+        // which resizes the retained output maps — must match fresh
+        // instances bit-for-bit.
+        let net = chain_net(2);
+        let frames: Vec<Vec<SpikeMap>> = (0..3).map(|salt| {
+            dense_input_pattern(2, 5, 6, [64, 7, 65][salt], salt)
+        }).collect();
+        let mut reused = FunctionalNet::new(&net);
+        for steps in &frames {
+            let temporal = TemporalSpikeMap::from_steps(steps);
+            let got: Vec<TemporalSpikeMap> =
+                reused.run_frame_temporal(&temporal).to_vec();
+            let mut fresh = FunctionalNet::new(&net);
+            assert_eq!(got, fresh.run_frame_temporal(&temporal));
+        }
     }
 }

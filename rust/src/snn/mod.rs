@@ -10,10 +10,11 @@ mod functional;
 mod spikes;
 mod weights;
 
-pub use encode::{encode_phased, encode_phased_u8,
+pub use encode::{encode_phased, encode_phased_temporal,
+                 encode_phased_temporal_u8, encode_phased_u8,
                  phased_event_count_u8, phased_events_per_level};
 pub use functional::{FunctionalNet, LayerOutput};
-pub use spikes::{nnz_packed, SpikeMap};
+pub use spikes::{nnz_packed, SpikeMap, TemporalSpikeMap};
 pub use weights::{transpose_dense, LayerWeights, NetworkWeights,
                   WeightsMeta};
 

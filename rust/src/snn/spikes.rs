@@ -259,6 +259,263 @@ pub fn nnz_packed(words: &[u64], wpc: usize, neurons: usize) -> u64 {
             .sum::<u64>()
 }
 
+/// Time-major bit-packed spike storage: the full temporal activity of
+/// one neuron lives in consecutive bits (one `u64` word covers 64
+/// timesteps), so a kernel reads a synapse's whole spike train with a
+/// single load instead of T per-timestep map probes. This is the
+/// FireFly-v2-style layout the bit-parallel temporal kernels in
+/// `snn::functional` consume (see PERF.md, "Bit-parallel temporal
+/// kernels").
+///
+/// Layout: neuron-major — word index of (ch, idx, timestep word tw) is
+/// `(ch*h*w + idx) * wpt + tw` with `wpt = ceil(t/64)`. Straddle
+/// invariant: bits >= `t` in a neuron's tail word stay zero (mirrors
+/// the [`SpikeMap`] per-channel tail-word invariant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TemporalSpikeMap {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Timesteps packed per neuron.
+    pub t: usize,
+    /// words_per_train = ceil(t / 64)
+    wpt: usize,
+    words: Vec<u64>,
+}
+
+impl TemporalSpikeMap {
+    pub fn zeros(c: usize, h: usize, w: usize, t: usize) -> Self {
+        let wpt = t.div_ceil(64);
+        Self { c, h, w, t, wpt, words: vec![0; c * h * w * wpt] }
+    }
+
+    /// Words per neuron spike train (packing stride).
+    #[inline]
+    pub fn words_per_train(&self) -> usize {
+        self.wpt
+    }
+
+    #[inline]
+    pub fn set(&mut self, ch: usize, idx: usize, tt: usize) {
+        debug_assert!(tt < self.t);
+        let n = ch * self.h * self.w + idx;
+        self.words[n * self.wpt + tt / 64] |= 1u64 << (tt % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, ch: usize, idx: usize, tt: usize) -> bool {
+        let n = ch * self.h * self.w + idx;
+        (self.words[n * self.wpt + tt / 64] >> (tt % 64)) & 1 == 1
+    }
+
+    /// Zero every bit, keeping the allocation (scratch-reuse frames).
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// The packed spike train of one neuron (`wpt` words, t ascending).
+    #[inline]
+    pub fn train(&self, ch: usize, idx: usize) -> &[u64] {
+        let n = ch * self.h * self.w + idx;
+        &self.words[n * self.wpt..(n + 1) * self.wpt]
+    }
+
+    /// Whole word storage, neuron-major (read-side of the temporal
+    /// kernels; crate-internal like [`SpikeMap::words_mut`]).
+    pub(crate) fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable word storage for in-place packing (crate-internal;
+    /// callers must respect the straddle invariant — bits >= `t` of a
+    /// neuron's tail word stay zero).
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Pack a per-timestep spike train (the oracle-path representation)
+    /// into the time-major layout. Shapes must agree across steps;
+    /// `steps.len()` becomes `t`.
+    pub fn from_steps(steps: &[SpikeMap]) -> Self {
+        assert!(!steps.is_empty(), "from_steps: empty train");
+        let (c, h, w) = (steps[0].c, steps[0].h, steps[0].w);
+        let mut out = Self::zeros(c, h, w, steps.len());
+        let per = h * w;
+        for (tt, m) in steps.iter().enumerate() {
+            assert_eq!((m.c, m.h, m.w), (c, h, w),
+                       "from_steps: shape mismatch at step {tt}");
+            let (tw, bit) = (tt / 64, tt % 64);
+            for (ch, idx) in m.iter_events() {
+                out.words[(ch * per + idx) * out.wpt + tw] |= 1u64 << bit;
+            }
+        }
+        out
+    }
+
+    /// Unpack to per-timestep maps — the inverse of
+    /// [`Self::from_steps`], used by parity tests and the oracle path.
+    pub fn to_steps(&self) -> Vec<SpikeMap> {
+        let per = self.h * self.w;
+        let mut steps: Vec<SpikeMap> =
+            (0..self.t).map(|_| SpikeMap::zeros(self.c, self.h, self.w))
+                .collect();
+        for ch in 0..self.c {
+            for idx in 0..per {
+                for (tw, &word) in self.train(ch, idx).iter().enumerate() {
+                    let mut rem = word;
+                    while rem != 0 {
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        let tt = tw * 64 + b;
+                        if tt < self.t {
+                            steps[tt].set(ch, idx);
+                        }
+                    }
+                }
+            }
+        }
+        steps
+    }
+
+    /// Pack from the multi-timestep wire layout (`t` consecutive blocks
+    /// of `c * ceil(h*w/64)` spatial words — the `FramePayload::Spikes`
+    /// format). Spatial straddle bits (>= h*w in a channel's tail word)
+    /// are masked off, exactly as the worker masks client-packed
+    /// payloads on the per-timestep path.
+    pub fn from_packed_steps(c: usize, h: usize, w: usize, t: usize,
+                             words: &[u64]) -> Self {
+        let per = h * w;
+        let wpc = per.div_ceil(64);
+        assert_eq!(words.len(), t * c * wpc,
+                   "from_packed_steps: bad word count");
+        let rem = per % 64;
+        let tail: u64 = if rem == 0 { !0u64 } else { (1u64 << rem) - 1 };
+        let mut out = Self::zeros(c, h, w, t);
+        for tt in 0..t {
+            let (tw, bit) = (tt / 64, tt % 64);
+            let block = &words[tt * c * wpc..(tt + 1) * c * wpc];
+            for ch in 0..c {
+                for (wi, &word) in
+                    block[ch * wpc..(ch + 1) * wpc].iter().enumerate()
+                {
+                    let mut w = word;
+                    if wi + 1 == wpc {
+                        w &= tail;
+                    }
+                    let mut rem = w;
+                    while rem != 0 {
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        let idx = wi * 64 + b;
+                        out.words[(ch * per + idx) * out.wpt + tw] |=
+                            1u64 << bit;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total spikes across all neurons and timesteps.
+    pub fn nnz(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Total number of neurons (one spatial position, all timesteps).
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-timestep per-channel spike counts in one pass over the
+    /// packed words: `out[tt * c + ch]` = spikes of channel `ch` at
+    /// timestep `tt`. Equivalent to calling
+    /// [`SpikeMap::nnz_per_channel_into`] on each unpacked step, but
+    /// without materialising the steps — the temporal engine path
+    /// feeds per-timestep timing from this.
+    pub fn nnz_per_channel_t_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.resize(self.t * self.c, 0);
+        let per = self.h * self.w;
+        for ch in 0..self.c {
+            for idx in 0..per {
+                for (tw, &word) in self.train(ch, idx).iter().enumerate() {
+                    let mut rem = word;
+                    while rem != 0 {
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        out[(tw * 64 + b) * self.c + ch] += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-timestep row-interleaved counts (one pass):
+    /// `out[tt * n + g]` = spikes at timestep `tt` in rows `r` with
+    /// `r % n == g`, summed over channels — the temporal-path
+    /// equivalent of [`SpikeMap::nnz_row_interleaved_into`].
+    pub fn nnz_row_interleaved_t_into(&self, n: usize,
+                                      out: &mut Vec<u64>) {
+        out.clear();
+        out.resize(self.t * n, 0);
+        let per = self.h * self.w;
+        for ch in 0..self.c {
+            for idx in 0..per {
+                let g = (idx / self.w) % n;
+                for (tw, &word) in self.train(ch, idx).iter().enumerate() {
+                    let mut rem = word;
+                    while rem != 0 {
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        out[(tw * 64 + b) * n + g] += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-timestep neuron-interleaved counts (one pass):
+    /// `out[tt * n + g]` = spikes at timestep `tt` at linear neuron
+    /// index `i` with `i % n == g` — the temporal-path equivalent of
+    /// [`SpikeMap::nnz_index_interleaved_into`].
+    pub fn nnz_index_interleaved_t_into(&self, n: usize,
+                                        out: &mut Vec<u64>) {
+        out.clear();
+        out.resize(self.t * n, 0);
+        let per = self.h * self.w;
+        for ch in 0..self.c {
+            for idx in 0..per {
+                let g = (ch * per + idx) % n;
+                for (tw, &word) in self.train(ch, idx).iter().enumerate() {
+                    let mut rem = word;
+                    while rem != 0 {
+                        let b = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        out[(tw * 64 + b) * n + g] += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-neuron spike totals over the frame: `out[ch*h*w + idx]` =
+    /// popcount of that neuron's train. Matches what the per-timestep
+    /// path accumulates into `FrameReport::output_counts`.
+    pub fn counts_into(&self, out: &mut [u32]) {
+        let per = self.h * self.w;
+        assert_eq!(out.len(), self.c * per);
+        for (n, slot) in out.iter_mut().enumerate() {
+            let train = &self.words[n * self.wpt..(n + 1) * self.wpt];
+            *slot =
+                train.iter().map(|w| w.count_ones()).sum::<u32>();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -395,5 +652,95 @@ mod tests {
         assert_eq!(nnz_packed(&[], 2, 65), 0);
         assert_eq!(nnz_packed(&[1, 1, 1], 2, 65), 3);
         assert_eq!(nnz_packed(&[7], 0, 65), 0);
+    }
+
+    #[test]
+    fn temporal_set_get_and_train_words() {
+        let mut m = TemporalSpikeMap::zeros(2, 3, 3, 70);
+        assert_eq!(m.words_per_train(), 2);
+        m.set(0, 4, 0);
+        m.set(0, 4, 63);
+        m.set(0, 4, 64);
+        m.set(1, 8, 69);
+        assert!(m.get(0, 4, 0) && m.get(0, 4, 63) && m.get(0, 4, 64));
+        assert!(!m.get(0, 4, 1) && !m.get(1, 8, 68));
+        assert_eq!(m.train(0, 4), &[(1u64 << 63) | 1, 1]);
+        assert_eq!(m.nnz(), 4);
+        m.clear();
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn temporal_steps_roundtrip() {
+        // T = 65 exercises the temporal tail word.
+        let t = 65usize;
+        let mut steps: Vec<SpikeMap> =
+            (0..t).map(|_| SpikeMap::zeros(2, 5, 13)).collect();
+        steps[0].set(0, 0);
+        steps[0].set(1, 64);
+        steps[63].set(0, 12);
+        steps[64].set(0, 12);
+        steps[64].set(1, 3);
+        let m = TemporalSpikeMap::from_steps(&steps);
+        assert_eq!((m.c, m.h, m.w, m.t), (2, 5, 13, t));
+        assert_eq!(m.nnz(), 5);
+        assert!(m.get(0, 12, 63) && m.get(0, 12, 64));
+        assert_eq!(m.to_steps(), steps);
+    }
+
+    #[test]
+    fn temporal_from_packed_steps_masks_spatial_straddle() {
+        // 1 channel of 65 neurons -> wpc = 2; wire payload with a
+        // stray bit above neuron 65 must be dropped.
+        let (c, h, w, t) = (1usize, 5usize, 13usize, 3usize);
+        let wpc = (h * w).div_ceil(64);
+        let mut wire = vec![0u64; t * c * wpc];
+        wire[0] = 1;               // t0: neuron 0
+        wire[1] = 1;               // t0: neuron 64
+        wire[2 * wpc + 1] = 1 | (1u64 << 30); // t2: neuron 64 + stray
+        let m = TemporalSpikeMap::from_packed_steps(c, h, w, t, &wire);
+        assert_eq!(m.nnz(), 3);
+        assert!(m.get(0, 0, 0) && m.get(0, 64, 0) && m.get(0, 64, 2));
+        // Same frame via per-timestep maps agrees bit-for-bit.
+        let mut steps: Vec<SpikeMap> =
+            (0..t).map(|_| SpikeMap::zeros(c, h, w)).collect();
+        steps[0].set(0, 0);
+        steps[0].set(0, 64);
+        steps[2].set(0, 64);
+        assert_eq!(m, TemporalSpikeMap::from_steps(&steps));
+    }
+
+    #[test]
+    fn temporal_t_extractors_match_per_step_counters() {
+        let (c, h, w, t) = (3usize, 4usize, 5usize, 67usize);
+        let mut steps: Vec<SpikeMap> =
+            (0..t).map(|_| SpikeMap::zeros(c, h, w)).collect();
+        // Deterministic scatter touching every timestep word.
+        for tt in 0..t {
+            for k in 0..=(tt % 4) {
+                steps[tt].set((tt + k) % c, (tt * 7 + k * 3) % (h * w));
+            }
+        }
+        let m = TemporalSpikeMap::from_steps(&steps);
+        let n = 4usize;
+        let (mut pc, mut rows, mut idxs) =
+            (Vec::new(), Vec::new(), Vec::new());
+        m.nnz_per_channel_t_into(&mut pc);
+        m.nnz_row_interleaved_t_into(n, &mut rows);
+        m.nnz_index_interleaved_t_into(n, &mut idxs);
+        let mut counts = vec![0u32; c * h * w];
+        m.counts_into(&mut counts);
+        let mut want_counts = vec![0u32; c * h * w];
+        for (tt, s) in steps.iter().enumerate() {
+            assert_eq!(&pc[tt * c..(tt + 1) * c], s.nnz_per_channel());
+            assert_eq!(&rows[tt * n..(tt + 1) * n],
+                       s.nnz_row_interleaved(n));
+            assert_eq!(&idxs[tt * n..(tt + 1) * n],
+                       s.nnz_index_interleaved(n));
+            for (ch, idx) in s.iter_events() {
+                want_counts[ch * h * w + idx] += 1;
+            }
+        }
+        assert_eq!(counts, want_counts);
     }
 }

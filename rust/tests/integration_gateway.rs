@@ -48,6 +48,7 @@ fn worker_cfg(artifacts: PathBuf) -> WorkerConfig {
         use_runtime: false,
         timesteps: None, // meta timesteps (6)
         sweep_threads: 1,
+        temporal: true,
     }
 }
 

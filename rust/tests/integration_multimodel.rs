@@ -47,6 +47,7 @@ fn worker_cfg(artifacts: PathBuf, kind: NetKind) -> WorkerConfig {
         use_runtime: false,
         timesteps: None,
         sweep_threads: 1,
+        temporal: true,
     }
 }
 

@@ -45,6 +45,7 @@ fn worker_cfg(artifacts: PathBuf) -> WorkerConfig {
         use_runtime: false,
         timesteps: None,
         sweep_threads: 1,
+        temporal: true,
     }
 }
 

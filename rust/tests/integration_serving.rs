@@ -40,6 +40,7 @@ fn worker_cfg(artifacts: PathBuf, use_runtime: bool) -> WorkerConfig {
         use_runtime,
         timesteps: Some(TIMESTEPS),
         sweep_threads: 1,
+        temporal: true,
     }
 }
 
@@ -261,6 +262,12 @@ fn backpressure_reports_queue_full() {
 /// collect, shut down, return responses sorted by id plus the report.
 fn run_frames(dir: &Path, dispatch: DispatchMode,
               frames: &[Vec<u8>]) -> (Vec<Response>, ServingReport) {
+    run_frames_with(dir, dispatch, frames, true)
+}
+
+fn run_frames_with(dir: &Path, dispatch: DispatchMode,
+                   frames: &[Vec<u8>], temporal: bool)
+                   -> (Vec<Response>, ServingReport) {
     let scfg = ServiceConfig {
         workers: 2,
         // Large enough that FIFO's first free worker can pull the
@@ -276,9 +283,11 @@ fn run_frames(dir: &Path, dispatch: DispatchMode,
         dispatch,
         cost_cap: None,
     };
-    let service =
-        Service::start(scfg, worker_cfg(dir.to_path_buf(), false))
-            .unwrap();
+    let wcfg = WorkerConfig {
+        temporal,
+        ..worker_cfg(dir.to_path_buf(), false)
+    };
+    let service = Service::start(scfg, wcfg).unwrap();
     for (i, px) in frames.iter().enumerate() {
         service.submit(i as u64, px.clone()).unwrap();
     }
@@ -351,6 +360,45 @@ fn cost_aware_matches_fifo_outputs_and_balance_on_skewed_load() {
     // The calibration metric is populated and finite.
     assert!(cost_rep.mean_predicted_cost > 0.0);
     assert!(cost_rep.cost_calibration_error.is_finite());
+}
+
+/// The request-cost model's calibration must hold unchanged under the
+/// bit-parallel temporal kernels: the same skewed burst served with
+/// the per-timestep path (`temporal: false`) and the time-major path
+/// answers byte-identically — same outputs, same `sim_cycles` (the
+/// actuals the cost model is scored against), same predicted cost —
+/// so the cost -> sim-cycles fit and its calibration error carry over
+/// exactly, with no recalibration.
+#[test]
+fn temporal_kernels_preserve_outputs_and_cost_calibration() {
+    let dir = write_tiny_artifacts("temporalcal");
+    let frames = skewed_burst();
+    let (on, on_rep) =
+        run_frames_with(&dir, DispatchMode::CostAware, &frames, true);
+    let (off, off_rep) =
+        run_frames_with(&dir, DispatchMode::CostAware, &frames, false);
+    assert_eq!(on.len(), off.len());
+    for (a, b) in on.iter().zip(&off) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output_counts, b.output_counts,
+                   "temporal kernels changed frame {} output", a.id);
+        assert_eq!(a.sim_cycles, b.sim_cycles,
+                   "temporal kernels changed frame {} sim cycles \
+                    (the cost model's calibration target)", a.id);
+        assert_eq!(a.predicted_cost, b.predicted_cost);
+        assert!((a.energy_j - b.energy_j).abs() < 1e-15);
+    }
+    // Identical actuals + identical predictions => the calibration
+    // error is the same number on both paths (it is computed from
+    // predicted cost vs sim_cycles only, no wall time involved).
+    assert!(on_rep.cost_calibration_error.is_finite());
+    assert!(off_rep.cost_calibration_error.is_finite());
+    assert!((on_rep.cost_calibration_error
+             - off_rep.cost_calibration_error).abs() < 1e-12,
+            "calibration error moved under temporal kernels: \
+             {} vs {}", on_rep.cost_calibration_error,
+            off_rep.cost_calibration_error);
+    assert!(on_rep.mean_predicted_cost > 0.0);
 }
 
 /// Cost-denominated admission: the real pipeline's cost model prices

@@ -142,6 +142,7 @@ fn gateway_dump_has_full_stage_timelines() {
             use_runtime: false,
             timesteps: None,
             sweep_threads: 1,
+            temporal: true,
         },
     )
     .expect("gateway start");

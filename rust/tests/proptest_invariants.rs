@@ -1,6 +1,7 @@
 //! Property-based tests over randomized inputs (in-crate generator on
 //! SplitMix64 — the build is offline, so no proptest crate; same
-//! shrink-free randomized-invariant methodology, 256 cases per property).
+//! shrink-free randomized-invariant methodology, 256 cases per property;
+//! the full-frame temporal-kernel parity property runs 48 heavier cases).
 
 use skydiver::coordinator::BoundedQueue;
 use skydiver::data::SplitMix64;
@@ -9,7 +10,9 @@ use skydiver::schedule::baselines::{Contiguous, Oracle, Random,
 use skydiver::schedule::cbws::cbws_assign;
 use skydiver::schedule::{Partition, Scheduler};
 use skydiver::sim::{layer_timing, ArchConfig};
-use skydiver::snn::{ConvGeom, LayerWeights, SpikeMap};
+use skydiver::snn::{transpose_dense, ConvGeom, DenseGeom,
+                    FunctionalNet, LayerWeights, NetworkWeights,
+                    SpikeMap, TemporalSpikeMap, WeightsMeta};
 
 const CASES: usize = 256;
 
@@ -166,6 +169,183 @@ fn prop_spikemap_roundtrip_and_counts() {
         assert_eq!(m.nnz(), by_channel);
         assert_eq!(m.nnz(), by_events);
         assert_eq!(m.nnz(), by_dense);
+    }
+}
+
+// ---------------- TemporalSpikeMap invariants ----------------
+
+/// T values the time-major layout must handle: single step, one bit
+/// short of a word, exactly one word, one bit over (straddle), two
+/// words — plus a random length per case.
+const T_EDGES: [usize; 5] = [1, 63, 64, 65, 128];
+
+#[test]
+fn prop_temporal_map_roundtrips_per_step_maps() {
+    // Pack -> unpack must be bit-identical to the per-timestep maps,
+    // and `from_packed_steps` must mask stray spatial straddle bits
+    // (possible in client-packed wire payloads) exactly like the
+    // per-timestep decode path does.
+    let mut rng = SplitMix64::new(0x7E40);
+    for case in 0..CASES {
+        let c = 1 + rng.next_below(4) as usize;
+        let h = 1 + rng.next_below(12) as usize;
+        let w = 1 + rng.next_below(12) as usize;
+        let t = if case % 2 == 0 {
+            T_EDGES[(case / 2) % T_EDGES.len()]
+        } else {
+            1 + rng.next_below(130) as usize
+        };
+        let wpc = (h * w).div_ceil(64);
+        let rem = (h * w) % 64;
+        let mut words = vec![0u64; t * c * wpc];
+        for step in 0..t {
+            for ch in 0..c {
+                for i in 0..h * w {
+                    if rng.next_below(100) < 35 {
+                        words[step * c * wpc + ch * wpc + i / 64] |=
+                            1u64 << (i % 64);
+                    }
+                }
+            }
+        }
+        // Garbage in every spatial straddle bit: the decoder must
+        // drop it, not count or propagate it.
+        if rem != 0 {
+            for step in 0..t {
+                for ch in 0..c {
+                    words[step * c * wpc + ch * wpc + wpc - 1] |=
+                        !((1u64 << rem) - 1);
+                }
+            }
+        }
+        let tm = TemporalSpikeMap::from_packed_steps(c, h, w, t,
+                                                     &words);
+        let steps: Vec<SpikeMap> = (0..t)
+            .map(|s| {
+                let mut chunk =
+                    words[s * c * wpc..(s + 1) * c * wpc].to_vec();
+                if rem != 0 {
+                    for ch in 0..c {
+                        chunk[ch * wpc + wpc - 1] &=
+                            (1u64 << rem) - 1;
+                    }
+                }
+                SpikeMap::from_words(c, h, w, chunk)
+            })
+            .collect();
+        assert_eq!(tm, TemporalSpikeMap::from_steps(&steps),
+                   "wire decode != per-step pack (c={c} h={h} w={w} \
+                    t={t})");
+        assert_eq!(tm.to_steps(), steps,
+                   "unpack not bit-identical (c={c} h={h} w={w} \
+                    t={t})");
+        let per_step: usize = steps.iter().map(|s| s.nnz()).sum();
+        assert_eq!(tm.nnz(), per_step);
+    }
+}
+
+/// Small random conv(+dense) net with deterministic pseudo-random
+/// weights, built the way the bench's synthetic nets are.
+fn rand_net(rng: &mut SplitMix64) -> NetworkWeights {
+    let c0 = 1 + rng.next_below(3) as usize;
+    let h0 = 4 + rng.next_below(6) as usize;
+    let w0 = 4 + rng.next_below(6) as usize;
+    let nconv = 1 + rng.next_below(2) as usize;
+    let pad = if rng.next_below(2) == 0 { 1 } else { 2 };
+    let mut layers = Vec::new();
+    let mut feat = Vec::new();
+    let (mut c, mut h, mut w) = (c0, h0, w0);
+    for _ in 0..nconv {
+        let cout = 1 + rng.next_below(6) as usize;
+        let eh = h + 2 * pad - 3 + 1;
+        let ew = w + 2 * pad - 3 + 1;
+        let wts: Vec<f32> = (0..cout * c * 9)
+            .map(|_| rng.next_below(1000) as f32 / 1000.0 * 0.6 - 0.25)
+            .collect();
+        layers.push(LayerWeights::Conv {
+            geom: ConvGeom { cin: c, cout, r: 3, pad, h, w, eh, ew },
+            w: wts,
+        });
+        feat.push(format!("[{cout}, {eh}, {ew}]"));
+        c = cout;
+        h = eh;
+        w = ew;
+    }
+    let dense_out = if rng.next_below(2) == 0 {
+        let fin = c * h * w;
+        let fout = 2 + rng.next_below(6) as usize;
+        let dw: Vec<f32> = (0..fout * fin)
+            .map(|_| rng.next_below(1000) as f32 / 1000.0 * 0.4 - 0.15)
+            .collect();
+        let wt = transpose_dense(&dw, fout, fin);
+        let b: Vec<f32> = (0..fout)
+            .map(|_| rng.next_below(1000) as f32 / 1000.0 * 0.05)
+            .collect();
+        layers.push(LayerWeights::Dense {
+            geom: DenseGeom { fin, fout, src_channels: c },
+            w: dw, wt, b,
+        });
+        format!("{fout}")
+    } else {
+        "null".into()
+    };
+    let meta = WeightsMeta::parse(&format!(r#"{{
+        "name": "prop", "aprc": true, "pad": {pad}, "vth": 0.4,
+        "timesteps": 8, "in_shape": [{c0}, {h0}, {w0}],
+        "feature_sizes": [{}], "dense_out": {dense_out},
+        "total_floats": 0, "lambdas": [],
+        "layers": [], "blob_fnv1a64": "0"
+    }}"#, feat.join(", "))).expect("prop meta");
+    NetworkWeights { meta, layers }
+}
+
+#[test]
+fn prop_temporal_kernels_match_per_timestep_oracle() {
+    // The parity claim the whole temporal path rests on: random nets
+    // (conv chains, optional dense head), both paddings, T straddling
+    // every word boundary — every layer's output spikes bit-identical
+    // to the per-timestep oracle at every timestep, and the
+    // accumulated predictions identical. Fewer cases than the cheap
+    // properties: each case runs two full frames.
+    let mut rng = SplitMix64::new(0x7E41);
+    let t_choices = [1usize, 5, 63, 64, 65, 128];
+    for case in 0..48 {
+        let net = rand_net(&mut rng);
+        let t = t_choices[case % t_choices.len()];
+        let (c, h, w) = net.layer_input_shape(0);
+        let steps: Vec<SpikeMap> = (0..t)
+            .map(|_| {
+                let mut m = SpikeMap::zeros(c, h, w);
+                for ch in 0..c {
+                    for i in 0..h * w {
+                        if rng.next_below(100) < 30 {
+                            m.set(ch, i);
+                        }
+                    }
+                }
+                m
+            })
+            .collect();
+        let packed = TemporalSpikeMap::from_steps(&steps);
+        let mut oracle = FunctionalNet::new(&net);
+        let mut temporal = FunctionalNet::new(&net);
+        assert_eq!(temporal.run_frame_counts_temporal(&packed),
+                   oracle.run_frame_counts(&steps),
+                   "predictions diverged (case {case}, t={t})");
+        let touts: Vec<Vec<SpikeMap>> = temporal
+            .run_frame_temporal(&packed)
+            .iter()
+            .map(|m| m.to_steps())
+            .collect();
+        oracle.reset();
+        for (tt, s) in steps.iter().enumerate() {
+            let louts = oracle.step_reuse(s);
+            for (li, lm) in louts.iter().enumerate() {
+                assert_eq!(&touts[li][tt], lm,
+                           "layer {li} spikes diverged at t={tt} \
+                            (case {case}, t={t})");
+            }
+        }
     }
 }
 

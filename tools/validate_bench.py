@@ -12,8 +12,10 @@ Extracted from the inline CI snippets so the same check runs locally:
   ``p99_ns`` and a positive ``frames_per_sec``);
 * serving output must contain the canonical row set (loopback rtt/e2e,
   the two mixed multi-model rows, the skewed FIFO/cost dispatch pair,
-  the c10k reactor row, the cluster-router row, and the tracing-tax
-  pipelined/traced pair).
+  the c10k reactor row, the cluster-router row, the tracing-tax
+  pipelined/traced pair, and the temporal-kernels-off A/B row);
+* sim output must contain the bit-parallel temporal-kernel rows
+  (``sim_temporal_{conv,dense,frame}``).
 """
 
 import argparse
@@ -35,6 +37,12 @@ SERVING_ROWS = (
     "serving_cluster",
     "serving_pipelined",
     "serving_traced",
+    "serving_temporal_off",
+)
+SIM_ROWS = (
+    "sim_temporal_conv",
+    "sim_temporal_dense",
+    "sim_temporal_frame",
 )
 
 
@@ -72,12 +80,12 @@ def main():
             fail(f"{args.path}: row {r['name']!r} has non-positive "
                  f"frames_per_sec")
 
-    if args.kind == "serving":
-        names = {r["name"] for r in rows}
-        missing = [w for w in SERVING_ROWS if w not in names]
-        if missing:
-            fail(f"{args.path}: missing serving rows {missing} "
-                 f"(have {sorted(names)})")
+    want = SERVING_ROWS if args.kind == "serving" else SIM_ROWS
+    names = {r["name"] for r in rows}
+    missing = [w for w in want if w not in names]
+    if missing:
+        fail(f"{args.path}: missing {args.kind} rows {missing} "
+             f"(have {sorted(names)})")
 
     print(f"{args.path} OK: {len(rows)} entries ({args.kind})")
 
