@@ -4,7 +4,7 @@
 //! the simulator. Fully hermetic (synthetic artifacts; no
 //! `make artifacts`).
 //!
-//! Emits eleven rows into `BENCH_serving.json` (`skydiver-bench-v1`
+//! Emits thirteen rows into `BENCH_serving.json` (`skydiver-bench-v1`
 //! schema, path overridable via `BENCH_SERVING_JSON` — see PERF.md):
 //!
 //! * `serving_loopback_rtt` — single-connection, window-1 round-trip
@@ -42,6 +42,14 @@
 //!   path). The e2e row is the temporal-on leg — serving defaults to
 //!   the bit-parallel kernels — so the pair prices the time-major
 //!   compute path end to end; outputs are bit-identical either way.
+//! * `serving_degraded` — a deliberately starved pool (1 worker,
+//!   cap-8 queue) with `--degrade reduce-t`: overload serves at
+//!   reduced T instead of shedding, and the row prices that degraded
+//!   serving path (the reduced-T share is printed alongside).
+//! * `serving_autoscale` — an elastic pool (1 worker growing to 4)
+//!   under a skewed burst with a fast control loop: the row prices
+//!   serving *while* the autoscaler reacts, the post-run gauge/event
+//!   counts are printed from the metrics endpoint.
 
 #[path = "harness.rs"]
 mod harness;
@@ -79,6 +87,7 @@ fn worker_cfg(dir: &std::path::Path, kind: NetKind) -> WorkerConfig {
 fn service_cfg() -> ServiceConfig {
     ServiceConfig {
         workers: 2,
+        workers_max: 0,
         batch_max: 8,
         queue_cap: 256,
         batch_wait: Duration::from_millis(2),
@@ -151,6 +160,7 @@ fn main() {
         spikes: false,
         retry_busy: true,
         traffic: TrafficMode::Mixed,
+        priority: None,
         seed: 0xBE7C,
     };
     let a0 = harness::alloc_count();
@@ -202,6 +212,7 @@ fn main() {
         spikes: false,
         retry_busy: true,
         traffic: TrafficMode::Mixed,
+        priority: None,
         seed,
     };
     let cls_cfg = mk_cfg("classifier", 0xC1A5);
@@ -263,6 +274,7 @@ fn main() {
             spikes: false,
             retry_busy: true,
             traffic: TrafficMode::Skewed,
+            priority: None,
             seed: 0x5EED,
         };
         let a = harness::alloc_count();
@@ -334,6 +346,7 @@ fn main() {
         spikes: false,
         retry_busy: true,
         traffic: TrafficMode::Skewed,
+        priority: None,
         seed: 0xC10C,
     };
     let a2 = harness::alloc_count();
@@ -386,6 +399,7 @@ fn main() {
         spikes: false,
         retry_busy: true,
         traffic: TrafficMode::Skewed,
+        priority: None,
         seed: 0x5EED,
     };
     let a3 = harness::alloc_count();
@@ -444,6 +458,7 @@ fn main() {
         spikes: false,
         retry_busy: true,
         traffic: TrafficMode::Mixed,
+        priority: None,
         seed: 0x72ACE,
     };
     let run_leg = |row: &str| {
@@ -503,6 +518,7 @@ fn main() {
         spikes: false,
         retry_busy: true,
         traffic: TrafficMode::Mixed,
+        priority: None,
         seed: 0xBE7C,
     };
     let a4 = harness::alloc_count();
@@ -522,9 +538,135 @@ fn main() {
         .shutdown_server().expect("temporal-off shutdown");
     gw_off.wait().expect("temporal-off gateway wait");
 
+    // 9. Graceful degradation under overload: a deliberately starved
+    // pool (1 worker, cap-8 queue) with `--degrade reduce-t` on,
+    // pushed far past capacity. Requests past the pressure knee serve
+    // at reduced T instead of bouncing as BUSY, so the row prices the
+    // degraded serving path; the printed split shows how much of the
+    // load the policy absorbed.
+    let gw_deg = Gateway::start_single(
+        GatewayConfig {
+            degrade_reduce_t: true,
+            degrade_floor_t: 2,
+            ..GatewayConfig::default()
+        },
+        ServiceConfig {
+            workers: 1,
+            batch_max: 1,
+            queue_cap: 8,
+            ..service_cfg()
+        },
+        worker_cfg(&dir, NetKind::Classifier))
+        .expect("degraded gateway start");
+    let addr_deg = gw_deg.local_addr().to_string();
+    let deg_frames = if quick { 150 } else { 1200 };
+    let deg_cfg = LoadGenConfig {
+        addr: addr_deg.clone(),
+        model: String::new(),
+        conns: 2,
+        frames: deg_frames,
+        window: 32,
+        spikes: false,
+        retry_busy: true,
+        traffic: TrafficMode::Skewed,
+        priority: None,
+        seed: 0xDE64,
+    };
+    let a5 = harness::alloc_count();
+    let deg_rep = loadgen::run(&deg_cfg).expect("degraded loadgen");
+    let deg_allocs = (harness::alloc_count() - a5) as f64
+        / deg_rep.ok.max(1) as f64;
+    assert_eq!(deg_rep.errors, 0, "degraded loadgen frames failed");
+    assert_eq!(deg_rep.ok as usize, deg_frames,
+               "not all degraded-leg frames served");
+    assert!(deg_rep.degraded > 0,
+            "an overloaded cap-8 queue with --degrade reduce-t must \
+             serve some frames at reduced T");
+    let degraded = loadgen_row("serving_degraded", &deg_rep,
+                               deg_allocs);
+    degraded.print();
+    println!("degraded: ok={} of which reduced-T={} busy-retries={}",
+             deg_rep.ok, deg_rep.degraded, deg_rep.busy);
+    Client::connect(&addr_deg)
+        .expect("connect for degraded shutdown")
+        .shutdown_server().expect("degraded shutdown");
+    gw_deg.wait().expect("degraded gateway wait");
+
+    // 10. Elastic-pool serving: the same starved-start shape but with
+    // runtime headroom (1 worker growing to 4) and a fast autoscale
+    // loop. The row prices serving while the controller is scaling;
+    // the printed gauge/event counts come from the live metrics
+    // endpoint right after the run.
+    let gw_as = Gateway::start_single(
+        GatewayConfig {
+            autoscale: skydiver::coordinator::AutoscaleConfig {
+                min: 1,
+                max: 4,
+                tick: Duration::from_millis(10),
+                sustain_ticks: 2,
+                cooldown_ticks: 1,
+                ..skydiver::coordinator::AutoscaleConfig::default()
+            },
+            ..GatewayConfig::default()
+        },
+        ServiceConfig {
+            workers: 1,
+            workers_max: 4,
+            queue_cap: 64,
+            ..service_cfg()
+        },
+        worker_cfg(&dir, NetKind::Classifier))
+        .expect("autoscale gateway start");
+    let addr_as = gw_as.local_addr().to_string();
+    let as_frames = if quick { 200 } else { 2000 };
+    let as_cfg = LoadGenConfig {
+        addr: addr_as.clone(),
+        model: String::new(),
+        conns: 4,
+        frames: as_frames,
+        window: 16,
+        spikes: false,
+        retry_busy: true,
+        traffic: TrafficMode::Skewed,
+        priority: None,
+        seed: 0x5CA1E,
+    };
+    let a6 = harness::alloc_count();
+    let as_rep = loadgen::run(&as_cfg).expect("autoscale loadgen");
+    let as_allocs = (harness::alloc_count() - a6) as f64
+        / as_rep.ok.max(1) as f64;
+    assert_eq!(as_rep.errors, 0, "autoscale loadgen frames failed");
+    assert_eq!(as_rep.ok as usize, as_frames,
+               "not all autoscale-leg frames served");
+    let autoscale = loadgen_row("serving_autoscale", &as_rep,
+                                as_allocs);
+    autoscale.print();
+    {
+        let mut mc = Client::connect(&addr_as)
+            .expect("connect for autoscale metrics");
+        let text = mc.metrics().expect("autoscale metrics");
+        let sample = |name: &str| -> String {
+            let prefix =
+                format!("{name}{{model=\"classifier\"}} ");
+            text.lines()
+                .find_map(|l| l.strip_prefix(prefix.as_str()))
+                .unwrap_or("?")
+                .to_string()
+        };
+        println!("autoscale: workers={} events={} fps={:.1}",
+                 sample("skydiver_autoscale_workers"),
+                 sample("skydiver_autoscale_events_total"),
+                 as_rep.fps);
+    }
+    Client::connect(&addr_as)
+        .expect("connect for autoscale shutdown")
+        .shutdown_server().expect("autoscale shutdown");
+    gw_as.wait().expect("autoscale gateway wait");
+
     let path = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_serving.json".into());
     harness::write_json_to(
         &path, &[rtt, e2e, mixed_cls, mixed_seg, skew_fifo, skew_cost,
-                 c10k, cluster, pipelined, traced, temporal_off]);
+                 c10k, cluster, pipelined, traced, temporal_off,
+                 degraded, autoscale]);
 }

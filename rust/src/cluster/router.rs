@@ -61,11 +61,11 @@ use crate::obs::recorder::{self, TraceMeta};
 use crate::obs::trace::{self, Stage};
 use crate::server::client::Client;
 use crate::server::loadgen::busy_backoff;
-use crate::server::protocol::{parse_frame, ErrorCode, ModelLoad,
-                              RequestBody, ResponseBody, TraceContext,
-                              WireRequest, WireResponse, CONN_ERR_ID,
-                              HEADER_LEN, KIND_REQUEST, KIND_RESPONSE,
-                              V1, V2};
+use crate::server::protocol::{parse_frame, DegradeInfo, ErrorCode,
+                              ModelLoad, RequestBody, RequestExts,
+                              ResponseBody, TraceContext, WireRequest,
+                              WireResponse, CONN_ERR_ID, HEADER_LEN,
+                              KIND_REQUEST, KIND_RESPONSE, V1, V2};
 use crate::{log_error, log_info, log_warn};
 use crate::server::reactor::{fd_of, poll, raise_nofile_limit, PollFd,
                              RecvBuf, Waker, POLLIN, POLLOUT};
@@ -130,6 +130,10 @@ struct Pending {
     backend: usize,
     /// Predicted cost charged to `inflight_cost` while dispatched.
     cost: u64,
+    /// Raw priority-class byte from the client's `EXT_PRIORITY`
+    /// extension, forwarded verbatim on every dispatch (the backend
+    /// validates it — a nonsense byte comes back as `BAD_REQUEST`).
+    priority: Option<u8>,
     /// Tracing baggage, present only for `Infer` requests admitted
     /// while span recording was enabled.
     trace: Option<RouteTrace>,
@@ -346,7 +350,10 @@ fn dispatch(shared: &Arc<RouterShared>, internal: u64) {
                 id: internal,
                 body: p.body.clone(),
             }
-            .encode_with_trace(ctx.as_ref());
+            .encode_with_exts(&RequestExts {
+                trace: ctx,
+                priority: p.priority,
+            });
             match enc {
                 Ok(frame) => {
                     drop(pending);
@@ -723,7 +730,8 @@ fn read_upstream(shared: &Arc<RouterShared>, bi: usize,
 fn handle_upstream_frame(shared: &Arc<RouterShared>, bi: usize,
                          ver: u8, body: &[u8],
                          hb: &mut Option<(u64, Instant)>) {
-    let resp = match WireResponse::decode_body(ver, body) {
+    let (resp, degrade) =
+        match WireResponse::decode_body_ext(ver, body) {
         Ok(r) => r,
         // Undecodable body in a well-framed response: drop the one
         // frame, keep the stream.
@@ -761,12 +769,16 @@ fn handle_upstream_frame(shared: &Arc<RouterShared>, bi: usize,
             return;
         }
     }
-    route_response(shared, bi, resp);
+    route_response(shared, bi, resp, degrade);
 }
 
-/// Hand a backend response back to the owning client connection.
+/// Hand a backend response back to the owning client connection,
+/// re-encoded at the client's protocol version. A degrade notice from
+/// the backend rides through untouched (and silently vanishes for v1
+/// clients, exactly as it would talking to the gateway directly).
 fn route_response(shared: &Arc<RouterShared>, bi: usize,
-                  resp: WireResponse) {
+                  resp: WireResponse,
+                  degrade: Option<DegradeInfo>) {
     let p = match shared.pending.lock().unwrap().remove(&resp.id) {
         Some(p) => p,
         // Stale: the request failed over (new id) or the client
@@ -795,7 +807,7 @@ fn route_response(shared: &Arc<RouterShared>, bi: usize,
     }
     finish_trace(&p, is_err);
     let f = WireResponse { id: p.client_id, body: resp.body }
-        .encode(p.version);
+        .encode_with_degrade(p.version, degrade.as_ref());
     shared.reply(p.conn, f);
 }
 
@@ -1029,8 +1041,8 @@ fn read_client(shared: &Arc<RouterShared>, cid: u64, c: &mut CConn) {
 
 fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
                      c: &mut CConn, ver: u8, body: &[u8]) {
-    let (req, wire_ctx) =
-        match WireRequest::decode_body_traced(ver, body) {
+    let (req, exts) =
+        match WireRequest::decode_body_ext(ver, body) {
         Ok(r) => r,
         Err(e) => {
             let f = err_frame(
@@ -1123,7 +1135,7 @@ fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
             let tr = if trace::enabled()
                 && matches!(body, RequestBody::Infer { .. })
             {
-                let cx = wire_ctx.unwrap_or(TraceContext {
+                let cx = exts.trace.unwrap_or(TraceContext {
                     trace_id: trace::gen_trace_id(),
                     parent_span: 0,
                 });
@@ -1152,6 +1164,7 @@ fn on_client_request(shared: &Arc<RouterShared>, cid: u64,
                     attempts: 0,
                     backend: UNASSIGNED,
                     cost,
+                    priority: exts.priority,
                     trace: tr,
                 },
             );

@@ -1,0 +1,328 @@
+//! Per-model worker-pool autoscaling: the decision logic.
+//!
+//! This module is the *brain* only — a pure, transport-free hysteresis
+//! controller mapping load observations to pool-size targets, so the
+//! policy is hermetically unit-testable without threads, sockets or a
+//! clock. The gateway owns the *body*: one control thread samples each
+//! model's queue ([`QueueStats`](super::QueueStats) depth/cost
+//! fractions) and windowed p99 (via
+//! [`LatencyHistogram::percentile_since`](super::LatencyHistogram::percentile_since))
+//! every tick, feeds an [`AutoscaleObs`] to that model's
+//! [`Autoscaler`], and applies any returned target with
+//! [`Service::scale_to`](super::Service::scale_to) — emitting
+//! `skydiver_autoscale_{workers,events_total}` and a flight-recorder
+//! scale span per event.
+//!
+//! The policy, deliberately boring (an SRE can predict it from the
+//! flag names):
+//!
+//! * **Scale up** (toward `max`, doubling) after `sustain_ticks`
+//!   consecutive ticks of breach — queue pressure at or above
+//!   `high_load_frac`, or windowed p99 over `p99_slo_us`. Sustained
+//!   breach, not a single sample, so one dense frame can't double the
+//!   pool.
+//! * **Scale down** (toward `min`, one worker at a time) after
+//!   `idle_ticks` consecutive quiet ticks — pressure under a quarter
+//!   of `high_load_frac` and p99 inside the SLO. Growing is fast,
+//!   shrinking is slow: the asymmetry is the hysteresis.
+//! * **Cool down** for `cooldown_ticks` after every scale event, so
+//!   the controller observes the new pool before judging it.
+
+use std::time::Duration;
+
+/// Control-loop knobs (CLI: `--workers-min/--workers-max` and the
+/// `--autoscale-*` family). `min == max` disables scaling.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Pool floor (also the decay target after a burst).
+    pub min: usize,
+    /// Pool ceiling (`Service::scale_to` clamps to the slots actually
+    /// reserved at start).
+    pub max: usize,
+    /// Control-loop sampling interval.
+    pub tick: Duration,
+    /// Queue-pressure breach threshold, as a fraction of capacity
+    /// (max of item-count and cost-unit fractions).
+    pub high_load_frac: f64,
+    /// Windowed-p99 SLO in microseconds; 0 disables the latency
+    /// trigger (pressure-only scaling).
+    pub p99_slo_us: u64,
+    /// Consecutive breach ticks required before scaling up.
+    pub sustain_ticks: u32,
+    /// Ticks to hold decisions after a scale event.
+    pub cooldown_ticks: u32,
+    /// Consecutive quiet ticks required before scaling down one step.
+    pub idle_ticks: u32,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            min: 1,
+            max: 1,
+            tick: Duration::from_millis(100),
+            high_load_frac: 0.75,
+            p99_slo_us: 0,
+            sustain_ticks: 2,
+            cooldown_ticks: 3,
+            idle_ticks: 10,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Whether this config actually scales (a degenerate `min == max`
+    /// range never produces a decision).
+    pub fn active(&self) -> bool {
+        self.min < self.max
+    }
+}
+
+/// One tick's load sample for one model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AutoscaleObs {
+    /// Queue depth as a fraction of item capacity, `[0, 1]`.
+    pub depth_frac: f64,
+    /// Queued predicted cost as a fraction of the cost cap, `[0, 1]`
+    /// (0 when uncapped).
+    pub cost_frac: f64,
+    /// p99 latency over the last control window in microseconds
+    /// (0 = no traffic this window).
+    pub p99_us: u64,
+    /// Current pool-size target.
+    pub current: usize,
+}
+
+/// What [`Autoscaler::tick`] decided, with the trigger spelled out for
+/// logs/spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Grow the pool to `to` (queue pressure or p99 breach sustained).
+    Up { to: usize },
+    /// Shrink the pool to `to` (sustained quiet).
+    Down { to: usize },
+}
+
+impl ScaleDecision {
+    pub fn target(self) -> usize {
+        match self {
+            ScaleDecision::Up { to } | ScaleDecision::Down { to } => to,
+        }
+    }
+}
+
+/// Hysteresis state for one model's pool. Feed it one [`AutoscaleObs`]
+/// per tick; it returns a [`ScaleDecision`] only when the policy wants
+/// the pool resized.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    hot_ticks: u32,
+    quiet_ticks: u32,
+    cooldown: u32,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Self { cfg, hot_ticks: 0, quiet_ticks: 0, cooldown: 0 }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Advance the control loop by one tick. Pure: no clock, no I/O —
+    /// time is whatever cadence the caller invokes this at.
+    pub fn tick(&mut self, obs: &AutoscaleObs) -> Option<ScaleDecision> {
+        if !self.cfg.active() {
+            return None;
+        }
+        let pressure = obs.depth_frac.max(obs.cost_frac);
+        let p99_breach = self.cfg.p99_slo_us > 0
+            && obs.p99_us > self.cfg.p99_slo_us;
+        let breach = pressure >= self.cfg.high_load_frac || p99_breach;
+        let quiet = pressure <= self.cfg.high_load_frac / 4.0
+            && !p99_breach;
+        if breach {
+            self.hot_ticks += 1;
+            self.quiet_ticks = 0;
+        } else if quiet {
+            self.quiet_ticks += 1;
+            self.hot_ticks = 0;
+        } else {
+            // Mid-band: healthy under current capacity; hold.
+            self.hot_ticks = 0;
+            self.quiet_ticks = 0;
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return None;
+        }
+        if breach && self.hot_ticks >= self.cfg.sustain_ticks.max(1)
+            && obs.current < self.cfg.max
+        {
+            // Double toward the ceiling: bursts are served in O(log)
+            // scale events instead of one worker per sustain window.
+            let to = (obs.current * 2).clamp(self.cfg.min.max(1),
+                                             self.cfg.max);
+            self.arm(ScaleDecision::Up { to })
+        } else if quiet
+            && self.quiet_ticks >= self.cfg.idle_ticks.max(1)
+            && obs.current > self.cfg.min
+        {
+            // Decay one worker at a time: cheap insurance against the
+            // burst returning right after it ended.
+            let to = (obs.current - 1).max(self.cfg.min);
+            self.arm(ScaleDecision::Down { to })
+        } else {
+            None
+        }
+    }
+
+    fn arm(&mut self, d: ScaleDecision) -> Option<ScaleDecision> {
+        self.hot_ticks = 0;
+        self.quiet_ticks = 0;
+        self.cooldown = self.cfg.cooldown_ticks;
+        Some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min: 1,
+            max: 8,
+            sustain_ticks: 2,
+            cooldown_ticks: 3,
+            idle_ticks: 4,
+            high_load_frac: 0.75,
+            p99_slo_us: 10_000,
+            ..Default::default()
+        }
+    }
+
+    fn hot(current: usize) -> AutoscaleObs {
+        AutoscaleObs { depth_frac: 0.9, cost_frac: 0.2, p99_us: 500,
+                       current }
+    }
+
+    fn idle(current: usize) -> AutoscaleObs {
+        AutoscaleObs { depth_frac: 0.0, cost_frac: 0.0, p99_us: 100,
+                       current }
+    }
+
+    #[test]
+    fn sustained_pressure_scales_up_doubling() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.tick(&hot(1)), None, "one hot tick is not enough");
+        assert_eq!(a.tick(&hot(1)),
+                   Some(ScaleDecision::Up { to: 2 }));
+    }
+
+    #[test]
+    fn alternating_hot_quiet_never_scales() {
+        // A flapping signal resets both counters each flip: neither
+        // threshold can ever be met.
+        let mut a = Autoscaler::new(cfg());
+        for _ in 0..10 {
+            assert_eq!(a.tick(&hot(2)), None);
+            assert_eq!(a.tick(&idle(2)), None);
+        }
+    }
+
+    #[test]
+    fn p99_breach_alone_scales_up() {
+        let mut a = Autoscaler::new(cfg());
+        let obs = AutoscaleObs { depth_frac: 0.1, cost_frac: 0.1,
+                                 p99_us: 50_000, current: 2 };
+        assert_eq!(a.tick(&obs), None);
+        assert_eq!(a.tick(&obs), Some(ScaleDecision::Up { to: 4 }));
+    }
+
+    #[test]
+    fn p99_trigger_disabled_when_slo_zero() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            p99_slo_us: 0, ..cfg()
+        });
+        let obs = AutoscaleObs { depth_frac: 0.1, cost_frac: 0.1,
+                                 p99_us: 1_000_000, current: 2 };
+        for _ in 0..10 {
+            assert_eq!(a.tick(&obs), None);
+        }
+    }
+
+    #[test]
+    fn cooldown_holds_decisions_then_rearms() {
+        let mut a = Autoscaler::new(cfg());
+        a.tick(&hot(1));
+        assert_eq!(a.tick(&hot(1)), Some(ScaleDecision::Up { to: 2 }));
+        // cooldown_ticks = 3: the next 3 ticks are held even though
+        // pressure persists...
+        for _ in 0..3 {
+            assert_eq!(a.tick(&hot(2)), None);
+        }
+        // ...then the (already re-sustained) breach fires again.
+        assert_eq!(a.tick(&hot(2)), Some(ScaleDecision::Up { to: 4 }));
+    }
+
+    #[test]
+    fn scale_up_clamps_at_max() {
+        let mut a = Autoscaler::new(cfg());
+        a.tick(&hot(6));
+        assert_eq!(a.tick(&hot(6)), Some(ScaleDecision::Up { to: 8 }));
+        for _ in 0..3 {
+            a.tick(&hot(8));
+        }
+        for _ in 0..10 {
+            assert_eq!(a.tick(&hot(8)), None,
+                       "at the ceiling nothing more to do");
+        }
+    }
+
+    #[test]
+    fn sustained_quiet_decays_one_step_at_a_time() {
+        let mut a = Autoscaler::new(cfg());
+        for _ in 0..3 {
+            assert_eq!(a.tick(&idle(4)), None);
+        }
+        assert_eq!(a.tick(&idle(4)),
+                   Some(ScaleDecision::Down { to: 3 }));
+        // Cooldown (3) then idle accumulation (4) before the next step.
+        let mut decisions = Vec::new();
+        for _ in 0..16 {
+            if let Some(d) = a.tick(&idle(3)) {
+                decisions.push(d);
+            }
+        }
+        assert_eq!(decisions, vec![ScaleDecision::Down { to: 2 },
+                                   ScaleDecision::Down { to: 1 }]);
+        for _ in 0..10 {
+            assert_eq!(a.tick(&idle(1)), None, "floor holds");
+        }
+    }
+
+    #[test]
+    fn midband_load_holds_steady() {
+        let mut a = Autoscaler::new(cfg());
+        let obs = AutoscaleObs { depth_frac: 0.4, cost_frac: 0.3,
+                                 p99_us: 2_000, current: 4 };
+        for _ in 0..50 {
+            assert_eq!(a.tick(&obs), None,
+                       "healthy mid-band must not flap");
+        }
+    }
+
+    #[test]
+    fn min_equals_max_is_inert() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            min: 2, max: 2, ..cfg()
+        });
+        assert!(!a.config().active());
+        for _ in 0..10 {
+            assert_eq!(a.tick(&hot(2)), None);
+        }
+    }
+}

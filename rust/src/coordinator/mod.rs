@@ -64,7 +64,22 @@
 //! LPT batch assembly ([`BoundedQueue::pop_batch_cost`]) and
 //! cost-denominated admission shedding — while the FIFO
 //! [`DispatchMode::WorkQueue`] stays as the measured baseline.
+//!
+//! **Priorities & fairness.** Every submission also carries a
+//! [`Priority`] class; the queue serves its three class lanes by
+//! weighted round-robin ([`WFQ_WEIGHTS`]) so a flood in one
+//! class delays — but never starves — the others. Single-class traffic
+//! is exact FIFO, keeping the pre-priority baselines comparable.
+//!
+//! **Elastic pools.** Shared-queue pools can be resized at runtime
+//! ([`Service::scale_to`], between the configured size and
+//! `workers_max`): scale-down retires the highest-indexed workers on
+//! their next pull, scale-up respawns empty slots. The decision logic
+//! driving it lives in [`autoscale`] — a pure hysteresis controller
+//! the gateway ticks against queue pressure and windowed p99
+//! ([`LatencyHistogram::percentile_since`]).
 
+pub mod autoscale;
 pub mod cost;
 mod queue;
 mod registry;
@@ -72,11 +87,14 @@ mod service;
 mod stats;
 pub mod worker;
 
+pub use autoscale::{AutoscaleConfig, AutoscaleObs, Autoscaler,
+                    ScaleDecision};
 pub use cost::{RequestCostModel, NOMINAL_FRAME_COST};
-pub use queue::{BoundedQueue, QueueStats, SubmitError};
+pub use queue::{BoundedQueue, Priority, QueueStats, SubmitError,
+                N_PRIORITIES, WFQ_WEIGHTS};
 pub use registry::{ModelEntry, ModelRegistry, ModelSpec, MAX_MODELS};
-pub use service::{DispatchMode, FrameSpec, Service, ServiceConfig,
-                  ServiceHandle};
+pub use service::{DispatchMode, FrameSpec, PoolScaler, Service,
+                  ServiceConfig, ServiceHandle};
 pub use stats::{host_balance_ratio, LatencyHistogram, ServingReport,
                 Stats};
 pub use worker::{default_input_rates, FramePayload, Policy, ReqTrace,

@@ -24,10 +24,86 @@
 //!   hands each idle worker its fair share of the queued cost via an
 //!   LPT-style greedy fill, instead of the FIFO count-based
 //!   [`BoundedQueue::pop_batch`].
+//!
+//! ## Priority classes and weighted-fair pulls
+//!
+//! Every item also carries a [`Priority`] class (`High`/`Normal`/
+//! `Low`; the cost-1 and cost-only push helpers tag `Normal`).
+//! Internally the queue keeps one FIFO lane per class and serves them
+//! by **weighted round-robin** ([`WFQ_WEIGHTS`], high to low): while
+//! several classes are backlogged, each round hands class `k` exactly
+//! `WFQ_WEIGHTS[k]` pulls, so a flood of high-priority traffic can
+//! delay — but never starve — the lower classes (bounded starvation:
+//! any backlogged class is served at least `weight` times per
+//! `sum(weights)` pulls; property-tested in
+//! `proptest_invariants.rs`). With only one class occupied the
+//! schedule degenerates to the exact FIFO order of the pre-priority
+//! queue — single-class callers observe no behavior change.
+//!
+//! ## Dynamic consumer population
+//!
+//! Worker pools can grow and shrink at runtime
+//! ([`BoundedQueue::set_consumer_target`]): each pool worker pulls via
+//! the `*_as(worker_idx, ..)` variants, and a worker whose index is at
+//! or beyond the current target gets `None` on its next pull — the
+//! same "exit now" signal as a closed-and-drained queue — letting the
+//! autoscaler retire the highest-indexed workers without touching the
+//! ones still serving.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Priority class of a queued item. Lower discriminant = served more
+/// often under backlog ([`WFQ_WEIGHTS`]). The wire protocol carries
+/// the same codes in the v2 `EXT_PRIORITY` request extension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Priority {
+    /// Latency-sensitive traffic; largest weighted share.
+    High = 0,
+    /// The default class — everything that never asked for one.
+    Normal = 1,
+    /// Batch/backfill traffic; smallest share, still starvation-free.
+    Low = 2,
+}
+
+/// Number of [`Priority`] classes (lane-array dimension).
+pub const N_PRIORITIES: usize = 3;
+
+/// Weighted-round-robin shares per class, [`Priority`] order (high to
+/// low): under full backlog each round of `4 + 2 + 1` pulls serves 4
+/// high, 2 normal, 1 low.
+pub const WFQ_WEIGHTS: [u64; N_PRIORITIES] = [4, 2, 1];
+
+impl Priority {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => Priority::High,
+            1 => Priority::Normal,
+            2 => Priority::Low,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Parse the CLI/ops spelling (`high`/`normal`/`low`).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "high" => Priority::High,
+            "normal" => Priority::Normal,
+            "low" => Priority::Low,
+            _ => return None,
+        })
+    }
+}
 
 /// Why a submission was rejected.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,8 +143,10 @@ impl std::error::Error for SubmitError {}
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QueueStats {
     pub capacity: usize,
-    /// Items currently enqueued.
+    /// Items currently enqueued (all classes).
     pub depth: usize,
+    /// Items currently enqueued per [`Priority`] class (high to low).
+    pub depth_by_class: [usize; N_PRIORITIES],
     /// High-water mark of `depth` over the queue's lifetime.
     pub max_depth: usize,
     /// Total items ever accepted.
@@ -88,10 +166,18 @@ pub struct QueueStats {
 }
 
 struct Inner<T> {
-    /// Items with their predicted cost.
-    items: VecDeque<(T, u64)>,
+    /// One FIFO lane per [`Priority`] class, high to low; items carry
+    /// their predicted cost.
+    classes: [VecDeque<(T, u64)>; N_PRIORITIES],
+    /// Weighted-round-robin credits left this round, per class.
+    credit: [u64; N_PRIORITIES],
     closed: bool,
     consumers: usize,
+    /// Pool-size target for indexed consumers: a worker pulling via a
+    /// `*_as(idx, ..)` variant retires (gets `None`) once
+    /// `idx >= consumer_target`. `usize::MAX` = no target (fixed
+    /// pools, non-indexed callers).
+    consumer_target: usize,
     max_depth: usize,
     pushed: u64,
     popped: u64,
@@ -102,6 +188,40 @@ struct Inner<T> {
 }
 
 impl<T> Inner<T> {
+    fn len(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.classes.iter().all(|c| c.is_empty())
+    }
+
+    /// Next class to serve under weighted round-robin: the highest
+    /// class that is backlogged and still holds round credit; when no
+    /// backlogged class has credit left, a new round starts (credits
+    /// refill to [`WFQ_WEIGHTS`]). `None` iff the queue is empty.
+    fn next_class(&mut self) -> Option<usize> {
+        if self.is_empty() {
+            return None;
+        }
+        loop {
+            for k in 0..N_PRIORITIES {
+                if !self.classes[k].is_empty() && self.credit[k] > 0 {
+                    return Some(k);
+                }
+            }
+            self.credit = WFQ_WEIGHTS;
+        }
+    }
+
+    /// Pop the weighted-fair head (the single-item WFQ schedule step).
+    /// Does NOT touch the pop counters — callers batch the accounting.
+    fn pop_head(&mut self) -> Option<(T, u64)> {
+        let k = self.next_class()?;
+        self.credit[k] -= 1;
+        self.classes[k].pop_front()
+    }
+
     /// Room for one more item of `cost`? `Ok(())` or which limit
     /// refused it (`Full`, with `by_cost` naming the cost cap when the
     /// item-count cap still had slots). The cost cap carries the
@@ -109,10 +229,10 @@ impl<T> Inner<T> {
     /// cost, else an above-cap item could never run.
     fn check_room(&self, capacity: usize, cost_cap: u64, cost: u64)
                   -> Result<(), SubmitError> {
-        if self.items.len() >= capacity {
+        if self.len() >= capacity {
             return Err(SubmitError::Full { capacity, by_cost: false });
         }
-        if !self.items.is_empty()
+        if !self.is_empty()
             && self.cost_depth.saturating_add(cost) > cost_cap
         {
             return Err(SubmitError::Full { capacity, by_cost: true });
@@ -120,24 +240,24 @@ impl<T> Inner<T> {
         Ok(())
     }
 
-    /// Remove the first `take` items, returning them with their summed
-    /// cost and updating the pop counters — the single accounting path
-    /// for every front-of-queue drain.
+    /// Remove up to `take` items in weighted-fair order, returning
+    /// them with their summed cost and updating the pop counters — the
+    /// single accounting path for every schedule-order drain.
     fn take_front(&mut self, take: usize) -> (Vec<T>, u64) {
+        let mut batch = Vec::with_capacity(take.min(self.len()));
         let mut cost = 0u64;
-        let batch: Vec<T> = self.items.drain(..take)
-            .map(|(item, c)| {
-                cost = cost.saturating_add(c);
-                item
-            })
-            .collect();
-        self.record_pop(take as u64, cost);
+        while batch.len() < take {
+            let Some((item, c)) = self.pop_head() else { break };
+            cost = cost.saturating_add(c);
+            batch.push(item);
+        }
+        self.record_pop(batch.len() as u64, cost);
         (batch, cost)
     }
 
     fn record_push(&mut self, cost: u64) {
         self.pushed += 1;
-        self.max_depth = self.max_depth.max(self.items.len());
+        self.max_depth = self.max_depth.max(self.len());
         self.cost_depth = self.cost_depth.saturating_add(cost);
         self.cost_pushed = self.cost_pushed.saturating_add(cost);
         self.max_cost_depth = self.max_cost_depth.max(self.cost_depth);
@@ -173,9 +293,11 @@ impl<T> BoundedQueue<T> {
         let cost_cap = if cost_cap == 0 { u64::MAX } else { cost_cap };
         Self {
             inner: Mutex::new(Inner {
-                items: VecDeque::with_capacity(capacity),
+                classes: std::array::from_fn(|_| VecDeque::new()),
+                credit: WFQ_WEIGHTS,
                 closed: false,
                 consumers: 0,
+                consumer_target: usize::MAX,
                 max_depth: 0,
                 pushed: 0,
                 popped: 0,
@@ -208,6 +330,20 @@ impl<T> BoundedQueue<T> {
         g.consumers += n;
     }
 
+    /// Set the pool-size target for indexed consumers: workers pulling
+    /// via [`pop_batch_wait_as`](Self::pop_batch_wait_as) /
+    /// [`pop_batch_cost_as`](Self::pop_batch_cost_as) with
+    /// `idx >= target` get `None` on their next pull and exit. Wakes
+    /// every waiting consumer so retirement is prompt even on an idle
+    /// queue. Scaling *up* is the pool's job (spawn + `add_consumers`);
+    /// this only signals the excess.
+    pub fn set_consumer_target(&self, target: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.consumer_target = target;
+        drop(g);
+        self.not_empty.notify_all();
+    }
+
     fn consumer_gone(&self) {
         let mut g = self.inner.lock().unwrap();
         g.consumers = g.consumers.saturating_sub(1);
@@ -220,15 +356,24 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Non-blocking push; [`SubmitError::Full`] is the backpressure
-    /// signal. Cost 1 — submit paths that predicted a real cost use
-    /// [`try_push_cost`](Self::try_push_cost).
+    /// signal. Cost 1, class `Normal` — submit paths that predicted a
+    /// real cost use [`try_push_cost`](Self::try_push_cost).
     pub fn try_push(&self, item: T) -> Result<(), SubmitError> {
         self.try_push_cost(item, 1)
     }
 
-    /// [`try_push`](Self::try_push) with an explicit predicted cost.
+    /// [`try_push`](Self::try_push) with an explicit predicted cost
+    /// (class `Normal`).
     pub fn try_push_cost(&self, item: T, cost: u64)
                          -> Result<(), SubmitError> {
+        self.try_push_cost_pri(item, cost, Priority::Normal)
+    }
+
+    /// [`try_push_cost`](Self::try_push_cost) into an explicit
+    /// [`Priority`] lane — the full-form submission every admission
+    /// path funnels into.
+    pub fn try_push_cost_pri(&self, item: T, cost: u64, pri: Priority)
+                             -> Result<(), SubmitError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err(SubmitError::Closed);
@@ -237,7 +382,7 @@ impl<T> BoundedQueue<T> {
             return Err(SubmitError::NoWorkers);
         }
         g.check_room(self.capacity, self.cost_cap, cost)?;
-        g.items.push_back((item, cost));
+        g.classes[pri as usize].push_back((item, cost));
         g.record_push(cost);
         drop(g);
         self.not_empty.notify_one();
@@ -245,12 +390,14 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Blocking push: waits for space (backpressure), failing only if
-    /// the queue closes or every consumer exits while waiting. Cost 1.
+    /// the queue closes or every consumer exits while waiting. Cost 1,
+    /// class `Normal`.
     pub fn push(&self, item: T) -> Result<(), SubmitError> {
         self.push_cost(item, 1)
     }
 
-    /// [`push`](Self::push) with an explicit predicted cost.
+    /// [`push`](Self::push) with an explicit predicted cost (class
+    /// `Normal`).
     pub fn push_cost(&self, item: T, cost: u64)
                      -> Result<(), SubmitError> {
         let mut g = self.inner.lock().unwrap();
@@ -262,7 +409,8 @@ impl<T> BoundedQueue<T> {
                 return Err(SubmitError::NoWorkers);
             }
             if g.check_room(self.capacity, self.cost_cap, cost).is_ok() {
-                g.items.push_back((item, cost));
+                g.classes[Priority::Normal as usize]
+                    .push_back((item, cost));
                 g.record_push(cost);
                 drop(g);
                 self.not_empty.notify_one();
@@ -275,15 +423,15 @@ impl<T> BoundedQueue<T> {
     /// Pull up to `max` items, blocking while the queue is empty.
     /// Returns `None` once the queue is closed *and* drained — the
     /// consumer's signal to exit. Greedy: takes whatever is there
-    /// rather than waiting to fill `max`. FIFO order — the baseline
-    /// batch assembly [`pop_batch_cost`](Self::pop_batch_cost) is
-    /// measured against.
+    /// rather than waiting to fill `max`. Weighted-fair order (exact
+    /// FIFO when one class is occupied) — the baseline batch assembly
+    /// [`pop_batch_cost`](Self::pop_batch_cost) is measured against.
     pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.inner.lock().unwrap();
         loop {
-            if !g.items.is_empty() {
-                let take = g.items.len().min(max);
+            if !g.is_empty() {
+                let take = g.len().min(max);
                 let (batch, _) = g.take_front(take);
                 drop(g);
                 self.not_full.notify_all();
@@ -301,13 +449,26 @@ impl<T> BoundedQueue<T> {
     /// `max` — the legacy batcher's grouping window.
     pub fn pop_batch_wait(&self, max: usize, fill_wait: Duration)
                           -> Option<Vec<T>> {
+        self.pop_batch_wait_inner(max, fill_wait, None)
+    }
+
+    /// [`pop_batch_wait`](Self::pop_batch_wait) as pool worker `idx`:
+    /// additionally returns `None` (retire) once the consumer target
+    /// drops to `idx` or below.
+    pub fn pop_batch_wait_as(&self, idx: usize, max: usize,
+                             fill_wait: Duration) -> Option<Vec<T>> {
+        self.pop_batch_wait_inner(max, fill_wait, Some(idx))
+    }
+
+    fn pop_batch_wait_inner(&self, max: usize, fill_wait: Duration,
+                            idx: Option<usize>) -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.inner.lock().unwrap();
-        g = match self.await_first(g, fill_wait, max) {
+        g = match self.await_first(g, fill_wait, max, idx) {
             Some(g) => g,
             None => return None,
         };
-        let take = g.items.len().min(max);
+        let take = g.len().min(max);
         let (batch, _) = g.take_front(take);
         drop(g);
         self.not_full.notify_all();
@@ -317,8 +478,8 @@ impl<T> BoundedQueue<T> {
     /// Cost-balanced batch assembly: block for the first item, give
     /// late arrivals the same `fill_wait` grouping window as
     /// [`pop_batch_wait`](Self::pop_batch_wait), then assemble this
-    /// consumer's fair share of the queued cost — the **oldest item
-    /// first** (so every pull advances the FIFO head and no request
+    /// consumer's fair share of the queued cost — the **weighted-fair
+    /// head first** (so every pull advances a lane head and no request
     /// can be bypassed indefinitely by costlier newcomers), then an
     /// LPT-style greedy fill with the costliest remaining items that
     /// keep the batch within `queued_cost / consumers`. Every batch's
@@ -328,9 +489,22 @@ impl<T> BoundedQueue<T> {
     /// `proptest_invariants.rs`).
     pub fn pop_batch_cost(&self, max: usize, fill_wait: Duration)
                           -> Option<Vec<T>> {
+        self.pop_batch_cost_inner(max, fill_wait, None)
+    }
+
+    /// [`pop_batch_cost`](Self::pop_batch_cost) as pool worker `idx`:
+    /// additionally returns `None` (retire) once the consumer target
+    /// drops to `idx` or below.
+    pub fn pop_batch_cost_as(&self, idx: usize, max: usize,
+                             fill_wait: Duration) -> Option<Vec<T>> {
+        self.pop_batch_cost_inner(max, fill_wait, Some(idx))
+    }
+
+    fn pop_batch_cost_inner(&self, max: usize, fill_wait: Duration,
+                            idx: Option<usize>) -> Option<Vec<T>> {
         let max = max.max(1);
         let mut g = self.inner.lock().unwrap();
-        g = match self.await_first(g, fill_wait, max) {
+        g = match self.await_first(g, fill_wait, max, idx) {
             Some(g) => g,
             None => return None,
         };
@@ -338,31 +512,37 @@ impl<T> BoundedQueue<T> {
         let budget = (g.cost_depth / consumers).max(1);
         let mut batch: Vec<T> = Vec::new();
         let mut batch_cost = 0u64;
-        // Anchor: the FIFO head, unconditionally. An item at queue
-        // position k is served within k pulls, whatever its cost.
-        if let Some((item, cost)) = g.items.pop_front() {
+        // Anchor: the weighted-fair head, unconditionally. An item at
+        // lane position k is served within its lane's weighted share
+        // of pulls, whatever its cost.
+        if let Some((item, cost)) = g.pop_head() {
             batch.push(item);
             batch_cost = cost;
         }
-        while batch.len() < max && !g.items.is_empty() {
+        while batch.len() < max && !g.is_empty() {
             // LPT fill: the costliest item that keeps the batch within
-            // budget; ties go to the oldest, keeping equal-cost
-            // traffic FIFO.
-            let mut pick: Option<(usize, u64)> = None;
-            for (i, (_, c)) in g.items.iter().enumerate() {
-                if batch_cost.saturating_add(*c) > budget {
-                    continue;
-                }
-                let better = match pick {
-                    None => true,
-                    Some((_, best)) => *c > best,
-                };
-                if better {
-                    pick = Some((i, *c));
+            // budget; ties go to the higher class, then the oldest,
+            // keeping equal-cost single-class traffic FIFO. Fills are
+            // opportunistic across lanes and spend no WFQ credit —
+            // fairness is enforced at the anchors.
+            let mut pick: Option<(usize, usize, u64)> = None;
+            for k in 0..N_PRIORITIES {
+                for (i, (_, c)) in g.classes[k].iter().enumerate() {
+                    if batch_cost.saturating_add(*c) > budget {
+                        continue;
+                    }
+                    let better = match pick {
+                        None => true,
+                        Some((_, _, best)) => *c > best,
+                    };
+                    if better {
+                        pick = Some((k, i, *c));
+                    }
                 }
             }
-            let Some((idx, cost)) = pick else { break };
-            let (item, _) = g.items.remove(idx).expect("index in range");
+            let Some((k, i, cost)) = pick else { break };
+            let (item, _) =
+                g.classes[k].remove(i).expect("index in range");
             batch.push(item);
             batch_cost = batch_cost.saturating_add(cost);
         }
@@ -373,16 +553,23 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Shared phase-1/phase-2 of the batching pops: block for the
-    /// first item (or closure), then hold the lock loop up to
-    /// `fill_wait` while fewer than `max` items are queued. Returns
+    /// first item (or closure/retirement), then hold the lock loop up
+    /// to `fill_wait` while fewer than `max` items are queued. Returns
     /// the guard ready for extraction, or `None` when the queue closed
-    /// empty.
+    /// empty — or, for an indexed consumer, when the consumer target
+    /// retired it.
     fn await_first<'a>(&'a self,
                        mut g: std::sync::MutexGuard<'a, Inner<T>>,
-                       fill_wait: Duration, max: usize)
+                       fill_wait: Duration, max: usize,
+                       idx: Option<usize>)
                        -> Option<std::sync::MutexGuard<'a, Inner<T>>> {
         loop {
-            if !g.items.is_empty() {
+            if let Some(i) = idx {
+                if i >= g.consumer_target {
+                    return None;
+                }
+            }
+            if !g.is_empty() {
                 break;
             }
             if g.closed {
@@ -392,7 +579,7 @@ impl<T> BoundedQueue<T> {
         }
         if !fill_wait.is_zero() {
             let deadline = Instant::now() + fill_wait;
-            while g.items.len() < max && !g.closed {
+            while g.len() < max && !g.closed {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -413,7 +600,7 @@ impl<T> BoundedQueue<T> {
     /// dies.
     pub fn drain_now(&self) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
-        let n = g.items.len();
+        let n = g.len();
         let (out, _) = g.take_front(n);
         drop(g);
         self.not_full.notify_all();
@@ -434,7 +621,8 @@ impl<T> BoundedQueue<T> {
         let g = self.inner.lock().unwrap();
         QueueStats {
             capacity: self.capacity,
-            depth: g.items.len(),
+            depth: g.len(),
+            depth_by_class: std::array::from_fn(|k| g.classes[k].len()),
             max_depth: g.max_depth,
             pushed: g.pushed,
             popped: g.popped,
@@ -686,5 +874,102 @@ mod tests {
         let rest = q.pop_batch_cost(4, Duration::ZERO).unwrap();
         assert_eq!(rest.len(), 2);
         assert_eq!(q.pop_batch_cost(4, Duration::ZERO), None);
+    }
+
+    // ---------------- priorities / WFQ ----------------
+
+    #[test]
+    fn priority_codes_roundtrip_and_parse() {
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::from_u8(p as u8), Some(p));
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::from_u8(3), None);
+        assert_eq!(Priority::parse("urgent"), None);
+    }
+
+    #[test]
+    fn wfq_serves_backlogged_classes_by_weight() {
+        let q = BoundedQueue::new(64);
+        q.add_consumers(1);
+        // 14 of each class: two full WRR rounds of credit per class.
+        for i in 0..14u32 {
+            q.try_push_cost_pri(100 + i, 1, Priority::High).unwrap();
+            q.try_push_cost_pri(200 + i, 1, Priority::Normal).unwrap();
+            q.try_push_cost_pri(300 + i, 1, Priority::Low).unwrap();
+        }
+        // One WRR round = 7 single-item pops: 4 high, 2 normal, 1 low,
+        // each lane FIFO within itself.
+        let mut round = Vec::new();
+        for _ in 0..7 {
+            round.extend(q.pop_batch(1).unwrap());
+        }
+        assert_eq!(round, vec![100, 101, 102, 103, 200, 201, 300]);
+        let s = q.stats();
+        assert_eq!(s.depth_by_class, [10, 12, 13]);
+    }
+
+    #[test]
+    fn single_class_is_exact_fifo_whatever_the_class() {
+        for pri in [Priority::High, Priority::Normal, Priority::Low] {
+            let q = BoundedQueue::new(32);
+            q.add_consumers(1);
+            for i in 0..9u32 {
+                q.try_push_cost_pri(i, 1, pri).unwrap();
+            }
+            let mut got = Vec::new();
+            while let Some(b) = {
+                if q.stats().depth == 0 { None }
+                else { q.pop_batch(4) }
+            } {
+                got.extend(b);
+            }
+            assert_eq!(got, (0..9).collect::<Vec<_>>(),
+                       "class {pri:?} must stay FIFO alone");
+        }
+    }
+
+    #[test]
+    fn empty_lane_credit_flows_to_occupied_lanes() {
+        let q = BoundedQueue::new(32);
+        q.add_consumers(1);
+        // Only low-class traffic: it must be served every pull, not
+        // once per 7.
+        for i in 0..5u32 {
+            q.try_push_cost_pri(i, 1, Priority::Low).unwrap();
+        }
+        assert_eq!(q.pop_batch(5), Some(vec![0, 1, 2, 3, 4]));
+    }
+
+    // ---------------- consumer target / retirement ----------------
+
+    #[test]
+    fn indexed_pop_retires_at_or_beyond_target() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(8));
+        q.add_consumers(3);
+        q.try_push(1).unwrap();
+        q.set_consumer_target(1);
+        // Worker 2 retires even though items are queued; worker 0
+        // keeps pulling.
+        assert_eq!(q.pop_batch_wait_as(2, 4, Duration::ZERO), None);
+        assert_eq!(q.pop_batch_cost_as(1, 4, Duration::ZERO), None);
+        assert_eq!(q.pop_batch_wait_as(0, 4, Duration::ZERO),
+                   Some(vec![1]));
+    }
+
+    #[test]
+    fn target_drop_wakes_idle_indexed_consumer() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(8));
+        q.add_consumers(2);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            q2.pop_batch_cost_as(1, 4, Duration::from_millis(5))
+        });
+        thread::sleep(Duration::from_millis(20));
+        q.set_consumer_target(1); // retire worker 1 while it waits
+        assert_eq!(h.join().unwrap(), None);
+        // Un-indexed pops never retire.
+        q.try_push(9).unwrap();
+        assert_eq!(q.pop_batch(1), Some(vec![9]));
     }
 }

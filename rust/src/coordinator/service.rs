@@ -9,15 +9,17 @@
 //! dispatcher ([`DispatchMode::RoundRobinBatch`]) is kept as the
 //! baseline the work-queue mode is measured against.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
 use super::cost::RequestCostModel;
-use super::queue::{BoundedQueue, ConsumerGuard, QueueStats, SubmitError};
+use super::queue::{BoundedQueue, ConsumerGuard, Priority, QueueStats,
+                   SubmitError};
 use super::stats::{ServingReport, Stats};
 use super::worker::{worker_loop, FramePayload, ReqTrace, Request,
                     Response, SharedPipeline, WorkSource,
@@ -72,7 +74,14 @@ impl DispatchMode {
 /// Coordinator-level knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Initial worker-pool size (threads spawned at start).
     pub workers: usize,
+    /// Upper bound the pool may be scaled to at runtime
+    /// ([`Service::scale_to`]); slots above `workers` start empty. 0
+    /// (the default) means "same as `workers`" — a fixed pool.
+    /// Shared-queue dispatch modes only; the legacy round-robin
+    /// dispatcher keeps its fixed pool.
+    pub workers_max: usize,
     /// Max frames a worker pulls (or the legacy dispatcher groups) at
     /// once.
     pub batch_max: usize,
@@ -98,6 +107,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         Self {
             workers: 2,
+            workers_max: 0,
             batch_max: 8,
             queue_cap: 256,
             batch_wait: Duration::from_millis(2),
@@ -217,13 +227,26 @@ impl ServiceHandle {
                                   cost: u64, trace: Option<ReqTrace>)
                                   -> std::result::Result<(), SubmitError>
     {
-        self.queue.try_push_cost(Request {
+        self.try_submit_full(id, payload, cost, trace,
+                             Priority::Normal, None)
+    }
+
+    /// The full-form non-blocking submit the gateway funnels into:
+    /// pre-computed cost, optional span-timeline identity, an explicit
+    /// [`Priority`] lane, and the degradation policy's reduced-T
+    /// override (`None` = full fidelity).
+    pub fn try_submit_full(&self, id: u64, payload: FramePayload,
+                           cost: u64, trace: Option<ReqTrace>,
+                           pri: Priority, timesteps: Option<usize>)
+                           -> std::result::Result<(), SubmitError> {
+        self.queue.try_push_cost_pri(Request {
             id,
             payload,
             submitted: Instant::now(),
             cost,
             trace,
-        }, cost)
+            timesteps,
+        }, cost, pri)
     }
 
     /// Blocking submit (backpressure by waiting).
@@ -236,11 +259,121 @@ impl ServiceHandle {
             submitted: Instant::now(),
             cost,
             trace: None,
+            timesteps: None,
         }, cost)
     }
 
     pub fn queue_stats(&self) -> QueueStats {
         self.queue.stats()
+    }
+}
+
+/// Everything needed to (re)spawn one shared-queue pool worker — held
+/// by the service so [`Service::scale_to`] can grow the pool after
+/// start. Keeping a live `events_tx` clone here means the worker event
+/// channel only disconnects at shutdown, not when the pool momentarily
+/// drains to zero live workers between scale events.
+struct PoolCtl {
+    shared: SharedPipeline,
+    wcfg: WorkerConfig,
+    events_tx: mpsc::Sender<WorkerEvent>,
+    batch_max: usize,
+    lpt_fill: Option<Duration>,
+}
+
+/// Shared pool-control state behind [`PoolScaler`]: the worker slot
+/// table, the respawn kit, and the live size target. The service and
+/// any number of scaler handles point at the same instance, so a
+/// control loop can resize the pool while the service keeps serving.
+struct PoolInner {
+    queue: Arc<BoundedQueue<Request>>,
+    /// One slot per possible worker index (`workers_max` of them for
+    /// dynamic pools). `None` = never spawned or joined after retire.
+    handles: Mutex<Vec<Option<thread::JoinHandle<Result<()>>>>>,
+    /// Respawn kit. `None` in round-robin mode (that pool is fixed)
+    /// and after shutdown clears it (dropping the retained event
+    /// sender so routers see the stream disconnect).
+    ctl: Mutex<Option<PoolCtl>>,
+    /// Current pool-size target (== the configured size until scaled).
+    target: AtomicUsize,
+    /// Configured (initial) pool size — the answer fixed pools give.
+    fixed: usize,
+}
+
+/// A cheap, cloneable, `Sync` handle that resizes a running service's
+/// worker pool — what the gateway's autoscale control loop holds. All
+/// clones (and the owning [`Service`]) share one slot table, so
+/// concurrent calls serialize on it and every call re-reconciles the
+/// whole pool.
+#[derive(Clone)]
+pub struct PoolScaler {
+    inner: Arc<PoolInner>,
+}
+
+impl PoolScaler {
+    /// Retarget the pool to `n` workers (clamped to
+    /// `[1, workers_max]`); returns the applied target. Scaling *down*
+    /// signals the highest-indexed workers to retire on their next
+    /// pull (an in-flight batch always completes); scaling *up*
+    /// respawns every empty-or-finished slot below the target,
+    /// re-registering its queue consumer slot first. A slot whose old
+    /// thread is still draining its final batch is skipped and healed
+    /// on a later call — the control loop re-reconciles every tick.
+    /// No-op (returns the fixed pool size) in round-robin mode and
+    /// after shutdown.
+    pub fn scale_to(&self, n: usize) -> usize {
+        let ctl = self.inner.ctl.lock().unwrap();
+        let Some(pool) = ctl.as_ref() else {
+            return self.inner.fixed;
+        };
+        let mut slots = self.inner.handles.lock().unwrap();
+        let n = n.clamp(1, slots.len().max(1));
+        self.inner.target.store(n, Ordering::Relaxed);
+        self.inner.queue.set_consumer_target(n);
+        for (i, slot) in slots.iter_mut().enumerate().take(n) {
+            match slot {
+                Some(h) if !h.is_finished() => continue,
+                Some(_) => {
+                    // Retired (or dead) but never joined: reap before
+                    // reusing the index.
+                    if let Some(h) = slot.take() {
+                        let _ = h.join();
+                    }
+                }
+                None => {}
+            }
+            // Same reserve-then-spawn order as `Service::start`.
+            self.inner.queue.add_consumers(1);
+            let source = WorkSource::Shared {
+                queue: self.inner.queue.clone(),
+                batch_max: pool.batch_max,
+                lpt_fill: pool.lpt_fill,
+            };
+            let (wc, sh, tx) = (pool.wcfg.clone(), pool.shared.clone(),
+                                pool.events_tx.clone());
+            match thread::Builder::new()
+                .name(format!("skydiver-worker-{i}"))
+                .spawn(move || worker_loop(i, wc, sh, source, tx))
+            {
+                Ok(h) => *slot = Some(h),
+                Err(_) => {
+                    // Undo the reservation (adopt-and-drop decrements).
+                    drop(ConsumerGuard::adopt(self.inner.queue.clone()));
+                }
+            }
+        }
+        n
+    }
+
+    /// Current pool-size target (live gauge for the autoscaler and the
+    /// metrics endpoint; == the configured size for fixed pools).
+    pub fn target(&self) -> usize {
+        self.inner.target.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound [`scale_to`](Self::scale_to) can reach.
+    pub fn max(&self) -> usize {
+        self.inner.handles.lock().unwrap().len()
     }
 }
 
@@ -251,9 +384,14 @@ pub struct Service {
     /// `Some` until a gateway takes the stream with
     /// [`Service::take_events`]; `collect` needs it present.
     events_rx: Option<mpsc::Receiver<WorkerEvent>>,
-    handles: Vec<thread::JoinHandle<Result<()>>>,
     dispatcher: Option<thread::JoinHandle<()>>,
     worker_count: usize,
+    /// Worker slot table + respawn kit + live target, shared with
+    /// every [`PoolScaler`] handed out by [`Service::scaler`].
+    pool: PoolScaler,
+    /// True when workers run the golden/PJRT runtime (fixed-T program
+    /// — reduced-T degradation unavailable).
+    fixed_t: bool,
     spec: FrameSpec,
     dispatch: DispatchMode,
     started: Instant,
@@ -291,8 +429,15 @@ impl Service {
             Arc::new(BoundedQueue::with_cost_cap(cfg.queue_cap, cost_cap));
         let (events_tx, events_rx) = mpsc::channel::<WorkerEvent>();
         let batch_max = cfg.batch_max.max(1);
-        let mut handles = Vec::with_capacity(cfg.workers);
+        let fixed_t = wcfg.use_runtime;
+        let workers_max = match cfg.dispatch {
+            DispatchMode::RoundRobinBatch => cfg.workers,
+            _ => cfg.workers_max.max(cfg.workers),
+        };
+        let mut handles: Vec<Option<thread::JoinHandle<Result<()>>>> =
+            (0..workers_max).map(|_| None).collect();
         let mut dispatcher = None;
+        let mut pool = None;
 
         match cfg.dispatch {
             DispatchMode::WorkQueue | DispatchMode::CostAware => {
@@ -303,7 +448,10 @@ impl Service {
                 // Reserve consumer slots before any thread runs so a
                 // submit can never race ahead of worker startup.
                 queue.add_consumers(cfg.workers);
-                for i in 0..cfg.workers {
+                queue.set_consumer_target(cfg.workers);
+                for (i, slot) in
+                    handles.iter_mut().enumerate().take(cfg.workers)
+                {
                     let source = WorkSource::Shared {
                         queue: queue.clone(),
                         batch_max,
@@ -311,20 +459,27 @@ impl Service {
                     };
                     let (wc, sh, tx) =
                         (wcfg.clone(), shared.clone(), events_tx.clone());
-                    handles.push(thread::Builder::new()
+                    *slot = Some(thread::Builder::new()
                         .name(format!("skydiver-worker-{i}"))
                         .spawn(move || worker_loop(i, wc, sh, source, tx))?);
                 }
+                pool = Some(PoolCtl {
+                    shared: shared.clone(),
+                    wcfg,
+                    events_tx: events_tx.clone(),
+                    batch_max,
+                    lpt_fill,
+                });
             }
             DispatchMode::RoundRobinBatch => {
                 let mut worker_txs = Vec::with_capacity(cfg.workers);
-                for i in 0..cfg.workers {
+                for (i, slot) in handles.iter_mut().enumerate() {
                     let (tx, rx) = mpsc::channel::<Vec<Request>>();
                     worker_txs.push(tx);
                     let source = WorkSource::Private(rx);
                     let (wc, sh, etx) =
                         (wcfg.clone(), shared.clone(), events_tx.clone());
-                    handles.push(thread::Builder::new()
+                    *slot = Some(thread::Builder::new()
                         .name(format!("skydiver-worker-{i}"))
                         .spawn(move || worker_loop(i, wc, sh, source, etx))?);
                 }
@@ -341,17 +496,59 @@ impl Service {
         }
         drop(events_tx);
 
+        let pool = PoolScaler {
+            inner: Arc::new(PoolInner {
+                queue: queue.clone(),
+                handles: Mutex::new(handles),
+                ctl: Mutex::new(pool),
+                target: AtomicUsize::new(cfg.workers),
+                fixed: cfg.workers,
+            }),
+        };
         Ok(Self {
             queue,
             cost_model: shared.cost_model.clone(),
             events_rx: Some(events_rx),
-            handles,
             dispatcher,
             worker_count: cfg.workers,
+            pool,
+            fixed_t,
             spec,
             dispatch: cfg.dispatch,
             started: Instant::now(),
         })
+    }
+
+    /// Retarget a dynamic pool to `n` workers — see
+    /// [`PoolScaler::scale_to`] for semantics.
+    pub fn scale_to(&self, n: usize) -> usize {
+        self.pool.scale_to(n)
+    }
+
+    /// A cloneable handle onto this pool's scaling controls, for a
+    /// control loop that outlives its borrow of the service (the
+    /// gateway's autoscaler thread).
+    pub fn scaler(&self) -> PoolScaler {
+        self.pool.clone()
+    }
+
+    /// Current pool-size target (live gauge for the autoscaler and the
+    /// metrics endpoint; == the configured size for fixed pools).
+    pub fn pool_target(&self) -> usize {
+        self.pool.target()
+    }
+
+    /// Whether this service can serve reduced-timestep (degraded)
+    /// frames: functional/temporal pipelines can (T is a runtime
+    /// parameter there); golden/PJRT pipelines cannot (their compiled
+    /// step program bakes T in).
+    pub fn degrade_capable(&self) -> bool {
+        !self.fixed_t
+    }
+
+    /// Upper bound [`scale_to`](Self::scale_to) can reach.
+    pub fn pool_max(&self) -> usize {
+        self.pool.max()
     }
 
     /// How this service dispatches batches to its workers.
@@ -414,6 +611,7 @@ impl Service {
                 submitted: Instant::now(),
                 cost,
                 trace: None,
+                timesteps: None,
             }, cost)
             .map_err(|e| anyhow!("submit frame {id}: {e}"))
     }
@@ -435,6 +633,7 @@ impl Service {
             submitted: Instant::now(),
             cost,
             trace: None,
+            timesteps: None,
         }, cost)
     }
 
@@ -538,14 +737,19 @@ impl Service {
     }
 
     /// Shut down: close the queue (workers drain the remainder and
-    /// exit), join all threads, and surface the first worker error.
+    /// exit), drop the pool's retained event sender (so a router
+    /// holding the event stream sees it disconnect once the last
+    /// worker exits), join all threads, and surface the first worker
+    /// error.
     pub fn shutdown(mut self) -> Result<()> {
         self.queue.close();
+        *self.pool.inner.ctl.lock().unwrap() = None;
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
         let mut first_err: Option<anyhow::Error> = None;
-        for h in self.handles.drain(..) {
+        for h in self.pool.inner.handles.lock().unwrap().iter_mut() {
+            let Some(h) = h.take() else { continue };
             match h.join() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {

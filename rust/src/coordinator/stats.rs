@@ -126,6 +126,33 @@ impl LatencyHistogram {
         self.max
     }
 
+    /// Windowed percentile: the percentile of only the samples
+    /// recorded *since* `base` was cloned off this histogram, computed
+    /// by bucket-count difference. This is how the autoscaler reads
+    /// p99 over its control interval without resetting (and thereby
+    /// racing) the live histogram: clone a baseline under the stats
+    /// lock at tick N, diff against the live histogram at tick N+1.
+    /// Bucketed resolution only (the exact-sample prefix cannot be
+    /// diffed); ≤ ~6.25% relative error, which is ample for a
+    /// scale-up/scale-down decision. Returns 0 when the window is
+    /// empty or `base` is not an earlier snapshot of `self`.
+    pub fn percentile_since(&self, base: &LatencyHistogram, p: f64)
+                            -> u64 {
+        let count_w = self.count.saturating_sub(base.count);
+        if count_w == 0 {
+            return 0;
+        }
+        let rank = ((count_w - 1) as f64 * p / 100.0).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c.saturating_sub(base.buckets[i]);
+            if seen > rank {
+                return Self::bucket_mid(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
     /// Fixed memory bound in bytes (buckets + exact prefix capacity) —
     /// asserted by tests, independent of `count`.
     pub fn mem_bound_bytes(&self) -> usize {
@@ -331,6 +358,8 @@ mod tests {
             service_us,
             worker,
             predicted_cost: 100,
+            timesteps: 8,
+            degraded: false,
         }
     }
 
@@ -502,6 +531,82 @@ mod tests {
         assert!(h.percentile(50.0) <= h.percentile(95.0));
         assert!(h.percentile(95.0) <= h.percentile(99.0));
         assert!(h.percentile(100.0) <= h.max());
+    }
+
+    #[test]
+    fn windowed_percentile_sees_only_new_samples() {
+        let mut h = LatencyHistogram::default();
+        // Old regime: fast responses.
+        for _ in 0..2_000 {
+            h.record(100);
+        }
+        let base = h.clone();
+        assert_eq!(h.percentile_since(&base, 99.0), 0,
+                   "empty window must read 0, not the lifetime p99");
+        // New regime: 10x slower. Lifetime p50 still says "fast"; the
+        // window must say "slow" — this is the misdecision the
+        // autoscaler would make if it read lifetime percentiles.
+        for _ in 0..2_000 {
+            h.record(1_000);
+        }
+        let lifetime_p50 = h.percentile(50.0);
+        let window_p50 = h.percentile_since(&base, 50.0);
+        assert!(lifetime_p50 < 300, "lifetime p50 {lifetime_p50}");
+        assert!((window_p50 as f64 - 1_000.0).abs() / 1_000.0 < 0.10,
+                "window p50 {window_p50} must track the new regime");
+        // Degenerate: base == self.
+        assert_eq!(h.percentile_since(&h.clone(), 99.0), 0);
+    }
+
+    #[test]
+    fn windowed_reads_race_free_under_concurrent_writers() {
+        // Autoscaler-style usage: writers fold responses into a
+        // Mutex<Stats> while a control loop snapshots the histogram
+        // each tick and diffs windows. Assert every window read is
+        // internally consistent (count monotone, percentile within the
+        // recorded value range) — no torn or stale-window misdecision.
+        use std::sync::{Arc, Mutex};
+        use std::thread;
+        let stats = Arc::new(Mutex::new(Stats::default()));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let stats = stats.clone();
+                thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        let r = resp(i, w, 50 + (i % 400), 10);
+                        stats.lock().unwrap().record(&r);
+                    }
+                })
+            })
+            .collect();
+        let mut base = stats.lock().unwrap().latency().clone();
+        let mut last_count = 0u64;
+        for _ in 0..50 {
+            let snap = stats.lock().unwrap().latency().clone();
+            assert!(snap.count() >= last_count,
+                    "histogram count went backwards");
+            let window = snap.count() - base.count();
+            let p99 = snap.percentile_since(&base, 99.0);
+            if window == 0 {
+                assert_eq!(p99, 0);
+            } else {
+                // All recorded values lie in [50, 450); the bucketed
+                // window p99 must too (within bucket resolution).
+                assert!(p99 >= 50 && p99 <= 480,
+                        "window p99 {p99} outside recorded range");
+            }
+            last_count = snap.count();
+            base = snap;
+            thread::yield_now();
+        }
+        for h in writers {
+            h.join().unwrap();
+        }
+        let final_snap = stats.lock().unwrap().latency().clone();
+        assert_eq!(final_snap.count(), 20_000);
+        let empty = LatencyHistogram::default();
+        let p99 = final_snap.percentile_since(&empty, 99.0);
+        assert!(p99 >= 50 && p99 <= 480, "full-window p99 {p99}");
     }
 
     #[test]

@@ -89,6 +89,12 @@ pub struct Request {
     /// Span-timeline identity (`None` when tracing was disabled at
     /// admission).
     pub trace: Option<ReqTrace>,
+    /// Reduced-timestep override set by the gateway's graceful-
+    /// degradation policy (`--degrade reduce-t`): serve this frame at
+    /// `Some(t)` timesteps instead of the model's full T. `None` =
+    /// full-fidelity. Functional/temporal paths only — the golden/PJRT
+    /// runtime has a fixed-T program and ignores the override.
+    pub timesteps: Option<usize>,
 }
 
 /// Completed inference.
@@ -112,6 +118,12 @@ pub struct Response {
     /// The cost the request was admitted at — echoed back so stats can
     /// score prediction against the simulated actuals (`sim_cycles`).
     pub predicted_cost: u64,
+    /// Timesteps this frame was actually served at (== the model's T
+    /// unless the degradation policy reduced it).
+    pub timesteps: u32,
+    /// True iff served at reduced T: the response went out cheaper and
+    /// earlier than full fidelity; `energy_j` prices the shorter run.
+    pub degraded: bool,
 }
 
 /// What a worker reports back to the service.
@@ -260,14 +272,21 @@ pub enum WorkSource {
 }
 
 impl WorkSource {
-    fn next_batch(&self) -> Option<Vec<Request>> {
+    /// Pull the next batch as worker `idx`. Shared-queue pulls are
+    /// indexed so a pool scale-down can retire this worker: once the
+    /// queue's consumer target drops to `idx` or below the pull
+    /// returns `None` — the same exit signal as a drained closed
+    /// queue. Fixed pools never lower the target, so the index is
+    /// inert there.
+    fn next_batch(&self, idx: usize) -> Option<Vec<Request>> {
         match self {
             WorkSource::Shared { queue, batch_max, lpt_fill } => {
                 match lpt_fill {
                     Some(window) => {
-                        queue.pop_batch_cost(*batch_max, *window)
+                        queue.pop_batch_cost_as(idx, *batch_max, *window)
                     }
-                    None => queue.pop_batch(*batch_max),
+                    None => queue.pop_batch_wait_as(
+                        idx, *batch_max, std::time::Duration::ZERO),
                 }
             }
             WorkSource::Private(rx) => rx.recv().ok(),
@@ -282,6 +301,21 @@ impl WorkSource {
             WorkSource::Private(_) => None,
         }
     }
+}
+
+/// The spec a request is *served* at: the model spec with the
+/// degradation policy's reduced-T override applied (clamped to
+/// `[1, full T]`). Golden/PJRT workers (`fixed_t`) always serve full
+/// fidelity — their compiled step program bakes T in.
+fn effective_spec(req: &Request, spec: &FrameSpec, fixed_t: bool)
+                  -> FrameSpec {
+    let mut espec = *spec;
+    if !fixed_t {
+        if let Some(t) = req.timesteps {
+            espec.timesteps = t.clamp(1, spec.timesteps);
+        }
+    }
+    espec
 }
 
 /// Reject malformed frames before encoding — the encoder (or
@@ -309,7 +343,11 @@ fn encode_request(req: &Request, spec: &FrameSpec) -> Vec<SpikeMap> {
             let per_frame = c * wpc;
             let rem = (h * w) % 64;
             let mask: u64 = if rem == 0 { !0u64 } else { (1 << rem) - 1 };
-            (0..*t)
+            // Serving at reduced T truncates a full-T spike payload:
+            // phased encoding orders timesteps most-significant-first,
+            // so the prefix is exactly the reduced-precision train.
+            let t = (*t).min(spec.timesteps);
+            (0..t)
                 .map(|step| {
                     let mut chunk = words
                         [step * per_frame..(step + 1) * per_frame]
@@ -339,7 +377,11 @@ fn encode_request_temporal(req: &Request, spec: &FrameSpec)
             encode_phased_temporal_u8(px, c, h, w, spec.timesteps)
         }
         FramePayload::Spikes { timesteps: t, words } => {
-            TemporalSpikeMap::from_packed_steps(c, h, w, *t, words)
+            // Same reduced-T truncation rule as `encode_request`.
+            let t = (*t).min(spec.timesteps);
+            let wpc = (h * w).div_ceil(64);
+            TemporalSpikeMap::from_packed_steps(c, h, w, t,
+                                                &words[..t * c * wpc])
         }
     }
 }
@@ -420,7 +462,7 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
         w: net.meta.in_shape[2],
         timesteps,
     };
-    while let Some(batch) = source.next_batch() {
+    while let Some(batch) = source.next_batch(idx) {
         // Queue spans close at pull time: submit -> this worker took
         // the batch. Traced requests only exist while tracing is on,
         // so the disabled path never reads the span clock.
@@ -458,21 +500,27 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
                 0
             };
             check(events, idx, lost, validate_frame(&req, &spec))?;
+            // Graceful degradation: serve at the reduced T the gateway
+            // picked, by encoding against a shortened spec (payloads
+            // stay validated against the full spec above). The PJRT
+            // path has a fixed-T compiled program, so it ignores the
+            // override — the gateway never degrades runtime models.
+            let espec = effective_spec(&req, &spec, runner.is_some());
             let report = match runner.as_mut() {
                 Some(r) => {
-                    let inputs = encode_request(&req, &spec);
+                    let inputs = encode_request(&req, &espec);
                     let trace = TraceSource::Golden(check(
                         events, idx, lost, r.run_frame(&inputs))?);
                     check(events, idx, lost,
                           sim.run_frame(&inputs, &trace))?
                 }
                 None if cfg.temporal => {
-                    let tmap = encode_request_temporal(&req, &spec);
+                    let tmap = encode_request_temporal(&req, &espec);
                     check(events, idx, lost,
                           sim.run_frame_temporal(&tmap))?
                 }
                 None => {
-                    let inputs = encode_request(&req, &spec);
+                    let inputs = encode_request(&req, &espec);
                     check(events, idx, lost,
                           sim.run_frame(&inputs,
                                         &TraceSource::Functional))?
@@ -494,6 +542,8 @@ fn serve(idx: usize, cfg: &WorkerConfig, shared: &SharedPipeline,
                 service_us: t0.elapsed().as_micros() as u64,
                 worker: idx,
                 predicted_cost: req.cost,
+                timesteps: espec.timesteps as u32,
+                degraded: espec.timesteps < spec.timesteps,
             };
             if events.send(WorkerEvent::Served(resp)).is_err() {
                 return Ok(()); // collector gone; shut down
@@ -530,16 +580,21 @@ fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
         .position(|r| validate_frame(r, spec).is_err())
         .unwrap_or(batch.len());
     let good = &batch[..first_bad];
+    // Per-request effective specs: a sweep batch can mix full-T and
+    // degraded frames (the sweep is only ever functional, never PJRT).
+    let especs: Vec<FrameSpec> = good.iter()
+        .map(|r| effective_spec(r, spec, false))
+        .collect();
     let reports = if cfg.temporal {
-        let trains: Vec<TemporalSpikeMap> = good.iter()
-            .map(|r| encode_request_temporal(r, spec))
+        let trains: Vec<TemporalSpikeMap> = good.iter().zip(&especs)
+            .map(|(r, es)| encode_request_temporal(r, es))
             .collect();
         check(events, idx, &ids,
               sweep::run_frames_temporal(sim, &trains,
                                          cfg.sweep_threads))?
     } else {
-        let trains: Vec<Vec<SpikeMap>> = good.iter()
-            .map(|r| encode_request(r, spec))
+        let trains: Vec<Vec<SpikeMap>> = good.iter().zip(&especs)
+            .map(|(r, es)| encode_request(r, es))
             .collect();
         check(events, idx, &ids,
               sweep::run_frames_functional(sim, &trains,
@@ -549,7 +604,9 @@ fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
     // wall time to each response's busy-time contribution.
     let per_frame_us =
         (t0.elapsed().as_micros() as u64) / good.len().max(1) as u64;
-    for (req, report) in good.iter().zip(&reports) {
+    for ((req, report), espec) in
+        good.iter().zip(&reports).zip(&especs)
+    {
         if let Some(rt) = req.trace {
             trace::span(rt.trace_id, rt.parent, Stage::Compute,
                         rt.model, t_sweep, false,
@@ -565,6 +622,8 @@ fn serve_batch_sweep(idx: usize, cfg: &WorkerConfig, sim: &Simulator,
             service_us: per_frame_us,
             worker: idx,
             predicted_cost: req.cost,
+            timesteps: espec.timesteps as u32,
+            degraded: espec.timesteps < spec.timesteps,
         };
         if events.send(WorkerEvent::Served(resp)).is_err() {
             return Ok(()); // collector gone; shut down

@@ -16,9 +16,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use skydiver::coordinator::{DispatchMode, FrameSpec, ModelRegistry,
-                            ModelSpec, Policy, Service, ServiceConfig,
-                            ServingReport, WorkerConfig};
+use skydiver::coordinator::{AutoscaleConfig, DispatchMode, FrameSpec,
+                            ModelRegistry, ModelSpec, Policy, Priority,
+                            Service, ServiceConfig, ServingReport,
+                            WorkerConfig};
 use skydiver::data::SplitMix64;
 use skydiver::experiments::{self, ExperimentCtx};
 use skydiver::metrics::Table;
@@ -47,6 +48,9 @@ COMMANDS:
              [--reactor-shards N] [--drain-ms N]
              [--net ... | --model NAME[=KIND] (repeatable)]
              [--plain] [--policy P] [--golden] [--workers N]
+             [--workers-min N] [--workers-max N]
+             [--autoscale-tick-ms N] [--autoscale-slo-us N]
+             [--degrade off|reduce-t] [--degrade-floor-t N]
              [--dispatch queue|cost|rr] [--queue-cap N] [--batch-max N]
              [--batch-wait-ms N] [--queue-cost-cap N]
              [--sweep-threads N] [--temporal-kernels on|off]
@@ -72,6 +76,17 @@ COMMANDS:
              shutdown drain (default 10000): requests still queued
              when it expires fail with SHUTTING_DOWN instead of
              wedging shutdown behind a stuck worker.
+             --workers-max N (> --workers) enables per-model pool
+             autoscaling: sustained queue pressure (or a p99 over
+             --autoscale-slo-us, when set) doubles the pool toward N;
+             sustained quiet decays it one worker at a time back to
+             --workers-min (default: the initial --workers). The
+             control loop ticks every --autoscale-tick-ms (default
+             100). --degrade reduce-t serves reduced-timestep
+             inference instead of BUSY once a queue passes half full
+             (never below --degrade-floor-t; default 0 = T/4);
+             responses carry a degrade notice with the served T and
+             energy, so work is degraded, not lost.
   route      --backend HOST:PORT (repeatable) [--addr HOST:PORT]
              [--heartbeat-ms N] [--eject-after N] [--readmit-after N]
              [--retry-max N] [--max-conns N] [--port-file PATH]
@@ -87,12 +102,15 @@ COMMANDS:
              fetch and print Prometheus-style metrics from a gateway
              or router
   loadgen    --addr HOST:PORT [--model NAME] [--conns N] [--frames N]
-             [--window N] [--traffic mixed|skewed] [--spikes]
+             [--window N] [--traffic mixed|skewed]
+             [--priority high|normal|low] [--spikes]
              [--no-retry] [--shutdown]
              drive a gateway; --model targets a mounted model (default:
              the server's default model); --traffic skewed sends
              heavy-tailed input spike densities (the cost-aware
-             dispatch scenario); --shutdown sends a drain request
+             dispatch scenario); --priority tags every request with a
+             wire priority class (default: none sent, the server
+             assumes normal); --shutdown sends a drain request
              after
   synth      [--out DIR] [--side N] [--net classifier|segmenter|both]
              write synthetic artifacts (serve/test without
@@ -128,6 +146,13 @@ const FLAG_SPECS: &[(&str, bool)] = &[
     ("policy", true),
     ("frames", true),
     ("workers", true),
+    ("workers-min", true),
+    ("workers-max", true),
+    ("autoscale-tick-ms", true),
+    ("autoscale-slo-us", true),
+    ("degrade", true),
+    ("degrade-floor-t", true),
+    ("priority", true),
     ("dispatch", true),
     ("queue-cap", true),
     ("batch-max", true),
@@ -423,6 +448,40 @@ fn make_frames_for(spec: &FrameSpec, n: usize) -> Vec<Vec<u8>> {
     make_frames(spec.c, spec.h, spec.w, n)
 }
 
+/// The gateway-side autoscale knobs: `--workers-min` defaults to the
+/// initial `--workers` size (the decay target after a burst), and
+/// autoscaling engages only when `--workers-max` raises the ceiling
+/// above it. `--autoscale-slo-us 0` (the default) scales on queue
+/// pressure alone.
+fn autoscale_cfg(args: &Args) -> Result<AutoscaleConfig> {
+    let workers = args.get_usize("workers", 2)?;
+    let min = args.get_usize("workers-min", workers)?;
+    let max = args.get_usize("workers-max", 0)?;
+    ensure!(min >= 1, "--workers-min must be at least 1");
+    ensure!(max == 0 || max >= min,
+            "--workers-max ({max}) must be at least --workers-min \
+             ({min})");
+    Ok(AutoscaleConfig {
+        min,
+        max,
+        tick: Duration::from_millis(
+            args.get_usize("autoscale-tick-ms", 100)? as u64),
+        p99_slo_us: args.get_usize("autoscale-slo-us", 0)? as u64,
+        ..AutoscaleConfig::default()
+    })
+}
+
+/// The `--degrade` policy: `(reduce_t, floor)`; `off` keeps the
+/// BUSY-shedding baseline behaviour.
+fn degrade_cfg(args: &Args) -> Result<(bool, usize)> {
+    let reduce_t = match args.get("degrade").unwrap_or("off") {
+        "off" => false,
+        "reduce-t" => true,
+        other => bail!("unknown --degrade {other} (off|reduce-t)"),
+    };
+    Ok((reduce_t, args.get_usize("degrade-floor-t", 0)?))
+}
+
 /// The coordinator-side knobs shared by every mounted model.
 fn service_cfg(args: &Args) -> Result<ServiceConfig> {
     let dispatch = match args.get("dispatch") {
@@ -439,6 +498,7 @@ fn service_cfg(args: &Args) -> Result<ServiceConfig> {
     };
     Ok(ServiceConfig {
         workers: args.get_usize("workers", 2)?,
+        workers_max: args.get_usize("workers-max", 0)?,
         batch_max: args.get_usize("batch-max", 8)?,
         queue_cap: args.get_usize("queue-cap", 256)?,
         batch_wait: Duration::from_millis(
@@ -572,6 +632,8 @@ fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
         Some(spec) => Some(FaultPlan::parse(spec)?),
         None => None,
     };
+    let autoscale = autoscale_cfg(args)?;
+    let (degrade_reduce_t, degrade_floor_t) = degrade_cfg(args)?;
     let gcfg = GatewayConfig {
         addr: if fault_plan.is_some() {
             "127.0.0.1:0".to_string()
@@ -582,6 +644,9 @@ fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
         drain_timeout: Duration::from_millis(
             args.get_usize("drain-ms", 10_000)? as u64),
         reactor_shards: args.get_usize("reactor-shards", 0)?,
+        autoscale,
+        degrade_reduce_t,
+        degrade_floor_t,
         ..GatewayConfig::default()
     };
     let names: Vec<String> =
@@ -592,6 +657,25 @@ fn serve_cmd(artifacts: &Path, args: &Args) -> Result<()> {
               and queue cap {} each",
              specs.len(), names.join(", "),
              specs[0].scfg.workers, specs[0].scfg.queue_cap);
+    if gcfg.autoscale.active() {
+        println!("autoscale: {}..{} workers per model, tick {:?}, \
+                  p99 SLO {}",
+                 gcfg.autoscale.min, gcfg.autoscale.max,
+                 gcfg.autoscale.tick,
+                 if gcfg.autoscale.p99_slo_us == 0 {
+                     "off".to_string()
+                 } else {
+                     format!("{}us", gcfg.autoscale.p99_slo_us)
+                 });
+    }
+    if gcfg.degrade_reduce_t {
+        println!("degradation: reduce-T under overload (floor {})",
+                 if gcfg.degrade_floor_t == 0 {
+                     "auto T/4".to_string()
+                 } else {
+                     gcfg.degrade_floor_t.to_string()
+                 });
+    }
     let registry = ModelRegistry::start(specs)?;
     println!("default model: {}", registry.default_name());
     let gw = Gateway::start(gcfg, registry)?;
@@ -724,6 +808,11 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown --traffic {s} \
                                     (mixed|skewed)"))?,
     };
+    let priority = match args.get("priority") {
+        None => None,
+        Some(s) => Some(Priority::parse(s).ok_or_else(|| anyhow!(
+            "unknown --priority {s} (high|normal|low)"))? as u8),
+    };
     let cfg = LoadGenConfig {
         addr: addr.clone(),
         model: args.get("model").unwrap_or("").to_string(),
@@ -733,6 +822,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         spikes: args.has("spikes"),
         retry_busy: !args.has("no-retry"),
         traffic,
+        priority,
         seed: 0x10AD,
     };
     let mut failed = 0u64;
@@ -751,6 +841,8 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         t.row(&["sent (incl. retries)".into(), rep.sent.to_string()]);
         t.row(&["ok".into(), rep.ok.to_string()]);
         t.row(&["busy (shed)".into(), rep.busy.to_string()]);
+        t.row(&["degraded (reduced T)".into(),
+                rep.degraded.to_string()]);
         t.row(&["errors".into(), rep.errors.to_string()]);
         t.row(&["wall (s)".into(), format!("{:.3}", rep.wall_secs)]);
         t.row(&["throughput (fps)".into(), format!("{:.1}", rep.fps)]);
@@ -999,6 +1091,60 @@ mod tests {
         assert!(service_cfg(&bad).is_err());
         assert!(TrafficMode::parse("skewed").is_some());
         assert!(TrafficMode::parse("bursty").is_none());
+    }
+
+    #[test]
+    fn autoscale_flags_parse() {
+        let a = Args::parse(&sv(&[
+            "serve", "--workers", "2", "--workers-max", "8",
+            "--autoscale-tick-ms", "50", "--autoscale-slo-us", "9000",
+        ])).unwrap();
+        let ac = autoscale_cfg(&a).unwrap();
+        assert!(ac.active());
+        assert_eq!((ac.min, ac.max), (2, 8)); // min defaults to --workers
+        assert_eq!(ac.tick, Duration::from_millis(50));
+        assert_eq!(ac.p99_slo_us, 9000);
+        // The pool reserves the slots the controller may scale into.
+        assert_eq!(service_cfg(&a).unwrap().workers_max, 8);
+        // Without --workers-max, scaling is off and the pool is fixed.
+        let off = Args::parse(&sv(&["serve", "--workers", "4"])).unwrap();
+        assert!(!autoscale_cfg(&off).unwrap().active());
+        assert_eq!(service_cfg(&off).unwrap().workers_max, 0);
+        // An inverted range is a startup error, not a frozen pool.
+        let bad = Args::parse(&sv(&[
+            "serve", "--workers-min", "8", "--workers-max", "2",
+        ])).unwrap();
+        assert!(autoscale_cfg(&bad).is_err());
+        assert_eq!(suggest("workers-mx"), Some("workers-max"));
+    }
+
+    #[test]
+    fn degrade_flags_parse() {
+        let off = Args::parse(&sv(&["serve"])).unwrap();
+        assert_eq!(degrade_cfg(&off).unwrap(), (false, 0));
+        let on = Args::parse(&sv(&[
+            "serve", "--degrade", "reduce-t", "--degrade-floor-t", "4",
+        ])).unwrap();
+        assert_eq!(degrade_cfg(&on).unwrap(), (true, 4));
+        // An unknown policy is a startup error, not silent shedding.
+        let bad = Args::parse(&sv(&[
+            "serve", "--degrade", "reduce-accuracy",
+        ])).unwrap();
+        assert!(degrade_cfg(&bad).is_err());
+        assert_eq!(suggest("degrad"), Some("degrade"));
+    }
+
+    #[test]
+    fn loadgen_priority_flag_parses() {
+        for (s, code) in [("high", 0u8), ("normal", 1), ("low", 2)] {
+            assert_eq!(Priority::parse(s).map(|p| p as u8), Some(code));
+        }
+        assert!(Priority::parse("urgent").is_none());
+        let a = Args::parse(&sv(&[
+            "loadgen", "--addr", "127.0.0.1:7878", "--priority", "low",
+        ])).unwrap();
+        assert_eq!(a.get("priority"), Some("low"));
+        assert_eq!(suggest("priorty"), Some("priority"));
     }
 
     #[test]

@@ -56,10 +56,14 @@ pub enum Stage {
     /// Cluster router: one dispatch attempt against one backend;
     /// failover produces sibling attempts under the same parent.
     Attempt = 8,
+    /// Autoscaler scale event: the control-loop tick that resized a
+    /// model's worker pool (attrs = old and new pool size). Root span
+    /// under its own generated trace id — not tied to any request.
+    Scale = 9,
 }
 
 /// Number of [`Stage`] variants (histogram table dimension).
-pub const N_STAGES: usize = 9;
+pub const N_STAGES: usize = 10;
 
 impl Stage {
     pub fn as_str(self) -> &'static str {
@@ -73,6 +77,7 @@ impl Stage {
             Stage::Write => "write",
             Stage::Route => "route",
             Stage::Attempt => "attempt",
+            Stage::Scale => "scale",
         }
     }
 
@@ -87,6 +92,7 @@ impl Stage {
             6 => Stage::Write,
             7 => Stage::Route,
             8 => Stage::Attempt,
+            9 => Stage::Scale,
             _ => return None,
         })
     }
@@ -96,7 +102,7 @@ impl Stage {
 /// spans for Info requests, …).
 pub const MODEL_NONE: u32 = u32::MAX;
 
-/// One completed span, fixed-size (packs into [`SLOT_WORDS`] u64s).
+/// One completed span, fixed-size (packs into `SLOT_WORDS` u64s).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpanRecord {
     pub trace_id: [u8; 16],

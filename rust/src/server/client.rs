@@ -20,11 +20,11 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::protocol::{read_frame, write_frame, ErrorCode, ModelLoad,
-                      ProtoError, RequestBody, ResponseBody,
-                      WirePayload, WireRequest, WireResponse,
-                      CONN_ERR_ID, HEADER_LEN, KIND_RESPONSE, MAX_BODY,
-                      NET_ANY, V1, V2};
+use super::protocol::{read_frame, write_frame, DegradeInfo, ErrorCode,
+                      ModelLoad, ProtoError, RequestBody, RequestExts,
+                      ResponseBody, WirePayload, WireRequest,
+                      WireResponse, CONN_ERR_ID, HEADER_LEN,
+                      KIND_RESPONSE, MAX_BODY, NET_ANY, V1, V2};
 
 /// A served model's frame contract, as reported by the `Info` request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -151,13 +151,28 @@ impl Client {
     /// connection-error id, or — on a v1 connection — that names a
     /// model (not expressible in v1).
     pub fn send(&mut self, req: &WireRequest) -> Result<()> {
+        self.send_with_exts(req, &RequestExts::default())
+    }
+
+    /// Like [`send`](Self::send), with trailing request extensions
+    /// (scheduling priority, trace context). Extensions are v2-only:
+    /// a v1-pinned connection refuses a non-empty bundle rather than
+    /// silently dropping the caller's intent.
+    pub fn send_with_exts(&mut self, req: &WireRequest,
+                          exts: &RequestExts) -> Result<()> {
         if req.id == CONN_ERR_ID {
             bail!("request id {CONN_ERR_ID} is reserved for \
                    connection-level errors");
         }
         let frame = match self.version {
-            V1 => req.encode_v1(),
-            _ => req.encode(),
+            V1 => {
+                if !exts.is_empty() {
+                    bail!("request extensions are not expressible in \
+                           protocol v1");
+                }
+                req.encode_v1()
+            }
+            _ => req.encode_with_exts(exts),
         }.map_err(|e: ProtoError| anyhow!("encoding request: {e}"))?;
         if frame.len() - HEADER_LEN > MAX_BODY {
             bail!("request body {} bytes exceeds protocol cap {} — \
@@ -183,12 +198,21 @@ impl Client {
     /// [`set_read_timeout`](Self::set_read_timeout)) from hard IO
     /// damage.
     pub fn recv(&mut self) -> Result<WireResponse> {
+        self.recv_ext().map(|(resp, _)| resp)
+    }
+
+    /// Like [`recv`](Self::recv), also surfacing a trailing
+    /// [`DegradeInfo`] extension if the server served this request at
+    /// reduced timesteps under overload (`None` for a full-precision
+    /// answer or any non-`Infer` response).
+    pub fn recv_ext(&mut self)
+                    -> Result<(WireResponse, Option<DegradeInfo>)> {
         self.flush()?;
         let (ver, body) = read_frame(&mut self.reader, KIND_RESPONSE)
             .map_err(|e| anyhow::Error::new(e)
                 .context("reading response frame"))?
             .ok_or_else(|| anyhow!("server closed the connection"))?;
-        WireResponse::decode_body(ver, &body)
+        WireResponse::decode_body_ext(ver, &body)
             .map_err(|e| anyhow::Error::new(e)
                 .context("decoding response"))
     }

@@ -29,9 +29,9 @@ use crate::snn::encode_phased_u8;
 
 use super::client::{Client, ServerInfo};
 use super::protocol::{parse_frame, ErrorCode, RequestBody,
-                      ResponseBody, WirePayload, WireRequest,
-                      WireResponse, CONN_ERR_ID, HEADER_LEN,
-                      KIND_RESPONSE, NET_ANY};
+                      RequestExts, ResponseBody, WirePayload,
+                      WireRequest, WireResponse, CONN_ERR_ID,
+                      HEADER_LEN, KIND_RESPONSE, NET_ANY};
 use super::reactor::{self, PollFd, RecvBuf, POLLIN, POLLOUT};
 
 /// Max resubmissions of one frame after `BUSY` before giving up.
@@ -41,7 +41,7 @@ const MAX_BUSY_RETRIES: u32 = 200;
 const BUSY_BACKOFF_CAP_MS: u64 = 50;
 
 /// Capped jittered exponential backoff for `BUSY` retries: the step
-/// doubles per attempt up to [`BUSY_BACKOFF_CAP_MS`], and the actual
+/// doubles per attempt up to `BUSY_BACKOFF_CAP_MS`, and the actual
 /// wait is drawn uniformly from the upper half of the step, so a
 /// window's worth of shed requests decorrelates instead of
 /// re-slamming the queue in lockstep. Deterministic given the rng —
@@ -113,6 +113,10 @@ pub struct LoadGenConfig {
     pub retry_busy: bool,
     /// Input-density distribution of the generated frames.
     pub traffic: TrafficMode,
+    /// Wire priority class sent with every request (`Some(0)` high,
+    /// `Some(1)` normal, `Some(2)` low); `None` omits the extension
+    /// and the server defaults to normal.
+    pub priority: Option<u8>,
     pub seed: u64,
 }
 
@@ -127,6 +131,7 @@ impl Default for LoadGenConfig {
             spikes: false,
             retry_busy: true,
             traffic: TrafficMode::Mixed,
+            priority: None,
             seed: 0x10AD,
         }
     }
@@ -141,6 +146,9 @@ pub struct LoadGenReport {
     pub ok: u64,
     /// `BUSY` responses observed (shed load; retries count each time).
     pub busy: u64,
+    /// Successful responses served at reduced timesteps (a subset of
+    /// `ok` — degraded, not lost).
+    pub degraded: u64,
     /// Terminal failures (non-busy errors, or busy past the retry cap).
     pub errors: u64,
     pub wall_secs: f64,
@@ -162,6 +170,7 @@ struct ConnResult {
     sent: u64,
     ok: u64,
     busy: u64,
+    degraded: u64,
     errors: u64,
     latencies_us: Vec<u64>,
 }
@@ -232,38 +241,40 @@ fn make_payload(info: &ServerInfo, seed: u64, id: u64, spikes: bool,
 #[allow(clippy::too_many_arguments)]
 fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
             window: usize, spikes: bool, retry_busy: bool,
-            traffic: TrafficMode, seed: u64) -> Result<ConnResult> {
+            traffic: TrafficMode, priority: Option<u8>, seed: u64)
+            -> Result<ConnResult> {
     let mut client =
         Client::connect_timeout(addr, Duration::from_secs(5))?;
     client.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let exts = RequestExts { trace: None, priority };
     let mut backoff_rng = SplitMix64::new(seed ^ 0xB0FF_B0FF);
     let mut to_send: VecDeque<(u64, u32)> =
         (0..frames as u64).map(|id| (id, 0)).collect();
     let mut inflight: HashMap<u64, (Instant, u32)> = HashMap::new();
     let mut latencies_us = Vec::with_capacity(frames);
-    let (mut sent, mut ok, mut busy, mut errors) = (0u64, 0u64, 0u64,
-                                                    0u64);
+    let (mut sent, mut ok, mut busy, mut degraded, mut errors) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
     while ok + errors < frames as u64 {
         while inflight.len() < window {
             let Some((id, attempts)) = to_send.pop_front() else {
                 break;
             };
             let payload = make_payload(info, seed, id, spikes, traffic);
-            client.send(&WireRequest {
+            client.send_with_exts(&WireRequest {
                 id,
                 body: RequestBody::Infer {
                     net: NET_ANY,
                     model: model.to_string(),
                     payload,
                 },
-            })?;
+            }, &exts)?;
             inflight.insert(id, (Instant::now(), attempts));
             sent += 1;
         }
         if inflight.is_empty() {
             break;
         }
-        let resp = client.recv()?;
+        let (resp, degrade) = client.recv_ext()?;
         if resp.id == CONN_ERR_ID {
             // Connection-level error (shed connection, framing
             // damage): the whole connection is failing, not one frame.
@@ -284,6 +295,9 @@ fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
         match resp.body {
             ResponseBody::Infer { .. } => {
                 ok += 1;
+                if degrade.is_some() {
+                    degraded += 1;
+                }
                 latencies_us.push(t0.elapsed().as_micros() as u64);
             }
             ResponseBody::Error { code: ErrorCode::Busy, .. } => {
@@ -302,7 +316,7 @@ fn run_conn(addr: &str, model: &str, info: &ServerInfo, frames: usize,
             _ => errors += 1,
         }
     }
-    Ok(ConnResult { sent, ok, busy, errors, latencies_us })
+    Ok(ConnResult { sent, ok, busy, degraded, errors, latencies_us })
 }
 
 /// Per-connection frame count: `frames` split as evenly as the
@@ -331,6 +345,7 @@ fn aggregate(results: Vec<ConnResult>, wall_secs: f64, frames: usize)
         report.sent += r.sent;
         report.ok += r.ok;
         report.busy += r.busy;
+        report.degraded += r.degraded;
         report.errors += r.errors;
         report.per_conn_ok.push(r.ok);
         all_lat.extend_from_slice(&r.latencies_us);
@@ -372,7 +387,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                 s.spawn(move || {
                     run_conn(&cfg.addr, &cfg.model, info, n, window,
                              cfg.spikes, cfg.retry_busy, cfg.traffic,
-                             seed)
+                             cfg.priority, seed)
                 })
             })
             .collect();
@@ -438,6 +453,7 @@ struct MuxConn {
     sent: u64,
     ok: u64,
     busy: u64,
+    degraded: u64,
     errors: u64,
     latencies_us: Vec<u64>,
 }
@@ -468,6 +484,7 @@ impl MuxConn {
     /// Encode fresh requests until the pipelining window is full.
     fn top_up(&mut self, cfg: &LoadGenConfig, info: &ServerInfo,
               window: usize) -> Result<()> {
+        let exts = RequestExts { trace: None, priority: cfg.priority };
         while self.inflight.len() < window {
             let Some((id, attempts)) = self.to_send.pop_front() else {
                 break;
@@ -483,7 +500,7 @@ impl MuxConn {
                     payload,
                 },
             };
-            self.out.extend_from_slice(&req.encode()?);
+            self.out.extend_from_slice(&req.encode_with_exts(&exts)?);
             self.inflight.insert(id, (Instant::now(), attempts));
             self.sent += 1;
         }
@@ -520,6 +537,7 @@ impl MuxConn {
             sent: self.sent,
             ok: self.ok,
             busy: self.busy,
+            degraded: self.degraded,
             errors: self.errors,
             latencies_us: self.latencies_us,
         }
@@ -566,6 +584,7 @@ fn run_mux(cfg: &LoadGenConfig, info: &ServerInfo,
             sent: 0,
             ok: 0,
             busy: 0,
+            degraded: 0,
             errors: 0,
             latencies_us: Vec::new(),
         });
@@ -674,7 +693,7 @@ fn mux_read(cfg: &LoadGenConfig, conn_idx: usize, c: &mut MuxConn,
                     Some(x) => x,
                     None => break,
                 };
-            let resp = WireResponse::decode_body(
+            let (resp, degrade) = WireResponse::decode_body_ext(
                 ver, &c.recv.data()[HEADER_LEN..total])?;
             c.recv.consume(total);
             progressed = true;
@@ -697,6 +716,9 @@ fn mux_read(cfg: &LoadGenConfig, conn_idx: usize, c: &mut MuxConn,
                 ResponseBody::Infer { prediction, output_counts, .. }
                 => {
                     c.ok += 1;
+                    if degrade.is_some() {
+                        c.degraded += 1;
+                    }
                     c.latencies_us
                         .push(sent_at.elapsed().as_micros() as u64);
                     if let Some(out) = collect.as_mut() {

@@ -31,9 +31,20 @@
 //!   default; can be pinned to v1).
 //! * [`loadgen`] — a multi-connection load generator (the
 //!   `skydiver loadgen` CLI and the loopback serving bench), with a
-//!   per-run model selector for mixed multi-model traffic; beyond
+//!   per-run model selector for mixed multi-model traffic and an
+//!   optional priority class stamped on every request; beyond
 //!   ~64 connections it multiplexes them over one nonblocking driver
 //!   thread, so c10k-scale runs don't need c10k client threads.
+//!
+//! On top of admission control the gateway is *self-driving*: an
+//! autoscale control thread resizes each model's worker pool between
+//! `--workers-min` and `--workers-max` from queue pressure and
+//! windowed p99 ([`crate::coordinator::Autoscaler`]); requests may
+//! carry a [`Priority`](crate::coordinator::Priority) class extension
+//! served by weighted-fair queueing; and under `--degrade reduce-t`
+//! overload is answered with reduced-timestep inference — flagged to
+//! v2 clients via a [`DegradeInfo`] response extension — instead of
+//! `BUSY`.
 
 pub mod client;
 pub mod loadgen;
@@ -43,9 +54,9 @@ pub mod server;
 
 pub use client::{Client, ServerInfo};
 pub use loadgen::{LoadGenConfig, LoadGenReport, TrafficMode};
-pub use protocol::{ErrorCode, ModelLoad, ProtoError, RequestBody,
-                   ResponseBody, WirePayload, WireRequest,
-                   WireResponse};
+pub use protocol::{DegradeInfo, ErrorCode, ModelLoad, ProtoError,
+                   RequestBody, RequestExts, ResponseBody, WirePayload,
+                   WireRequest, WireResponse};
 pub use server::{CounterSnapshot, Gateway, GatewayConfig,
                  GatewayReport, GatewayStop, ModelCounterSnapshot,
                  ModelReport};

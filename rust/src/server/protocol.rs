@@ -47,17 +47,38 @@
 //!   flight-recorder dump (Chrome trace-event JSON of recent /
 //!   slowest / errored request traces, see `obs::recorder`).
 //!
-//! ## Trace-context extension (v2, `Infer` only)
+//! ## Request extensions (v2, `Infer` only)
 //!
-//! A v2 `Infer` body may carry one optional trailing extension:
-//! `ext_tag: u8` ([`EXT_TRACE`]) + 16-byte trace id + `u64` parent
-//! span id ([`TraceContext`]). The cluster router uses it to stitch
-//! its hop and the backend gateway's spans into one distributed
-//! timeline. Absent extension = zero extra bytes (the common case is
-//! free); an unknown tag is malformed. [`WireRequest::decode_body`]
+//! A v2 `Infer` body may carry optional trailing extensions, each
+//! `ext_tag: u8` + a tag-determined payload, in any order, at most
+//! once each:
+//!
+//! * [`EXT_TRACE`] — 16-byte trace id + `u64` parent span id
+//!   ([`TraceContext`]). The cluster router uses it to stitch its hop
+//!   and the backend gateway's spans into one distributed timeline.
+//! * [`EXT_PRIORITY`] — `class: u8` scheduling class
+//!   (0 high / 1 normal / 2 low, `coordinator::Priority` codes).
+//!   Absent = normal. The protocol carries the raw byte; the gateway
+//!   rejects unknown classes with `BAD_REQUEST`.
+//!
+//! Absent extensions = zero extra bytes (the common case is free); an
+//! unknown or repeated tag is malformed. [`WireRequest::decode_body`]
 //! stays strict (trailing bytes rejected) — extension-aware peers opt
-//! in via [`WireRequest::decode_body_traced`]. v1 frames never carry
+//! in via [`WireRequest::decode_body_ext`]. v1 frames never carry
 //! extensions.
+//!
+//! ## Response extensions (v2, `Infer` only)
+//!
+//! Symmetrically, a v2 `Infer` *response* may carry trailing
+//! extensions; the single tag today is [`EXT_DEGRADE`]
+//! ([`DegradeInfo`]): the gateway served this request at reduced
+//! timesteps under overload (`t_served < t_full`) and prices the
+//! answer (`energy_uj`, the `power/energy.rs` uJ/inference currency)
+//! so the caller can weigh the cheaper result. Strict
+//! [`WireResponse::decode_body`] rejects it as trailing garbage;
+//! degradation-aware clients opt in via
+//! [`WireResponse::decode_body_ext`]. v1 responses never carry it
+//! (legacy clients see a plain answer).
 //!
 //! ## Response body
 //!
@@ -121,6 +142,13 @@ pub const CONN_ERR_ID: u64 = u64::MAX;
 /// Request-extension tag: trace context (16-byte trace id + u64
 /// parent span id) trailing a v2 `Infer` body.
 pub const EXT_TRACE: u8 = 1;
+/// Request-extension tag: scheduling class (`class: u8`,
+/// `coordinator::Priority` codes 0 high / 1 normal / 2 low) trailing
+/// a v2 `Infer` body. Absent = normal.
+pub const EXT_PRIORITY: u8 = 2;
+/// Response-extension tag: degraded-service notice ([`DegradeInfo`])
+/// trailing a v2 `Infer` response.
+pub const EXT_DEGRADE: u8 = 1;
 
 /// Distributed-tracing context riding a v2 `Infer` request as an
 /// optional trailing extension: which trace this request belongs to
@@ -130,6 +158,42 @@ pub const EXT_TRACE: u8 = 1;
 pub struct TraceContext {
     pub trace_id: [u8; 16],
     pub parent_span: u64,
+}
+
+/// Every optional extension a v2 `Infer` request can carry, parsed
+/// (or to be encoded) as one bundle. `Default` = no extensions =
+/// byte-identical to a plain [`WireRequest::encode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RequestExts {
+    /// [`EXT_TRACE`]: distributed-tracing context.
+    pub trace: Option<TraceContext>,
+    /// [`EXT_PRIORITY`]: raw scheduling-class byte. Carried opaquely;
+    /// the gateway maps it via `Priority::from_u8` and answers
+    /// `BAD_REQUEST` for unknown codes.
+    pub priority: Option<u8>,
+}
+
+impl RequestExts {
+    /// True when no extension is present (encodes to zero bytes).
+    pub fn is_empty(&self) -> bool {
+        self.trace.is_none() && self.priority.is_none()
+    }
+}
+
+/// Degraded-service notice riding a v2 `Infer` response as an
+/// optional trailing extension ([`EXT_DEGRADE`]): the gateway chose
+/// to serve this request at `t_served < t_full` timesteps instead of
+/// shedding it (`--degrade reduce-t`), and `energy_uj` prices the
+/// reduced answer in the accelerator's uJ/inference currency so the
+/// caller can weigh cost against the accuracy it gave up.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeInfo {
+    /// Timesteps actually integrated.
+    pub t_served: u32,
+    /// The model's configured full-precision timestep count.
+    pub t_full: u32,
+    /// Estimated energy of the degraded inference, microjoules.
+    pub energy_uj: f64,
 }
 
 // ---------------------------------------------------------------- errors
@@ -376,12 +440,23 @@ impl WireRequest {
     }
 
     /// Full v2 frame with an optional trailing [`TraceContext`]
-    /// extension. The extension is only expressible on `Infer`
-    /// bodies; requesting it on any other op is an encode error
-    /// (nothing reaches the wire). `trace: None` encodes byte-exactly
-    /// like [`WireRequest::encode`].
+    /// extension — shorthand for [`WireRequest::encode_with_exts`]
+    /// with only the trace slot filled.
     pub fn encode_with_trace(&self, trace: Option<&TraceContext>)
                              -> Result<Vec<u8>, ProtoError> {
+        self.encode_with_exts(&RequestExts {
+            trace: trace.copied(),
+            priority: None,
+        })
+    }
+
+    /// Full v2 frame with any combination of trailing extensions.
+    /// Extensions are only expressible on `Infer` bodies; requesting
+    /// one on any other op is an encode error (nothing reaches the
+    /// wire). An empty [`RequestExts`] encodes byte-exactly like
+    /// [`WireRequest::encode`].
+    pub fn encode_with_exts(&self, exts: &RequestExts)
+                            -> Result<Vec<u8>, ProtoError> {
         let mut b = Vec::new();
         put_u64(&mut b, self.id);
         match &self.body {
@@ -390,17 +465,21 @@ impl WireRequest {
                 b.push(*net);
                 put_model(&mut b, model)?;
                 encode_payload(&mut b, payload);
-                if let Some(t) = trace {
+                if let Some(t) = &exts.trace {
                     b.push(EXT_TRACE);
                     b.extend_from_slice(&t.trace_id);
                     put_u64(&mut b, t.parent_span);
                 }
+                if let Some(p) = exts.priority {
+                    b.push(EXT_PRIORITY);
+                    b.push(p);
+                }
             }
             other => {
-                if trace.is_some() {
+                if !exts.is_empty() {
                     return Err(ProtoError::Malformed(format!(
-                        "trace context is only expressible on Infer, \
-                         not {other:?}")));
+                        "request extensions are only expressible on \
+                         Infer, not {other:?}")));
                 }
                 match other {
                     RequestBody::Infer { .. } => unreachable!(),
@@ -458,9 +537,9 @@ impl WireRequest {
     }
 
     /// Decode a request body (the bytes after the frame header) at the
-    /// version the frame header carried. Strict: a trailing
-    /// trace-context extension is rejected as trailing garbage — use
-    /// [`WireRequest::decode_body_traced`] to accept it.
+    /// version the frame header carried. Strict: trailing extensions
+    /// are rejected as trailing garbage — use
+    /// [`WireRequest::decode_body_ext`] to accept them.
     pub fn decode_body(version: u8, body: &[u8])
                        -> Result<Self, ProtoError> {
         Self::decode_body_inner(version, body, false)
@@ -468,21 +547,23 @@ impl WireRequest {
     }
 
     /// Extension-aware decode: like [`WireRequest::decode_body`] but
-    /// a v2 `Infer` body may end with a [`TraceContext`] extension,
-    /// returned alongside the request. Extension-free bodies decode
-    /// identically in both entry points (`None` here). v1 frames
-    /// never carry extensions, so trailing bytes stay malformed.
-    pub fn decode_body_traced(version: u8, body: &[u8])
-            -> Result<(Self, Option<TraceContext>), ProtoError> {
+    /// a v2 `Infer` body may end with trailing extensions
+    /// ([`EXT_TRACE`], [`EXT_PRIORITY`] — any order, at most once
+    /// each), returned alongside the request. Extension-free bodies
+    /// decode identically in both entry points (an empty
+    /// [`RequestExts`] here). v1 frames never carry extensions, so
+    /// trailing bytes stay malformed.
+    pub fn decode_body_ext(version: u8, body: &[u8])
+            -> Result<(Self, RequestExts), ProtoError> {
         Self::decode_body_inner(version, body, true)
     }
 
     fn decode_body_inner(version: u8, body: &[u8], want_ext: bool)
-            -> Result<(Self, Option<TraceContext>), ProtoError> {
+            -> Result<(Self, RequestExts), ProtoError> {
         let mut r = Cursor::new(body);
         let id = r.u64()?;
         let op = r.u8()?;
-        let mut trace = None;
+        let mut exts = RequestExts::default();
         let body = match op {
             0 => {
                 let net = r.u8()?;
@@ -491,15 +572,27 @@ impl WireRequest {
                     _ => r.model()?,
                 };
                 let payload = decode_payload(&mut r)?;
-                if want_ext && version != V1 && r.remaining() > 0 {
+                while want_ext && version != V1 && r.remaining() > 0 {
                     match r.u8()? {
                         EXT_TRACE => {
+                            if exts.trace.is_some() {
+                                return Err(ProtoError::Malformed(
+                                    "repeated trace extension".into()));
+                            }
                             let mut trace_id = [0u8; 16];
                             trace_id.copy_from_slice(r.bytes(16)?);
                             let parent_span = r.u64()?;
-                            trace = Some(TraceContext {
+                            exts.trace = Some(TraceContext {
                                 trace_id, parent_span,
                             });
+                        }
+                        EXT_PRIORITY => {
+                            if exts.priority.is_some() {
+                                return Err(ProtoError::Malformed(
+                                    "repeated priority extension"
+                                        .into()));
+                            }
+                            exts.priority = Some(r.u8()?);
                         }
                         tag => {
                             return Err(ProtoError::Malformed(format!(
@@ -538,7 +631,7 @@ impl WireRequest {
             }
         };
         r.finish()?;
-        Ok((WireRequest { id, body }, trace))
+        Ok((WireRequest { id, body }, exts))
     }
 }
 
@@ -591,6 +684,18 @@ impl WireResponse {
     /// Only `Info` differs between the versions (the v2-only model
     /// fields are dropped under v1).
     pub fn encode(&self, version: u8) -> Vec<u8> {
+        self.encode_with_degrade(version, None)
+    }
+
+    /// Encode with an optional trailing [`EXT_DEGRADE`] extension.
+    /// The extension only exists on v2 `Infer` responses; on any
+    /// other body — or under v1, where the legacy client cannot parse
+    /// it — the notice is silently dropped and the frame is
+    /// byte-identical to [`WireResponse::encode`]. `degrade: None`
+    /// always matches [`WireResponse::encode`] exactly.
+    pub fn encode_with_degrade(&self, version: u8,
+                               degrade: Option<&DegradeInfo>)
+                               -> Vec<u8> {
         let mut b = Vec::new();
         put_u64(&mut b, self.id);
         match &self.body {
@@ -608,6 +713,14 @@ impl WireResponse {
                 }
                 put_u64(&mut b, *latency_us);
                 put_u32(&mut b, *worker);
+                if version != V1 {
+                    if let Some(d) = degrade {
+                        b.push(EXT_DEGRADE);
+                        put_u32(&mut b, d.t_served);
+                        put_u32(&mut b, d.t_full);
+                        put_u64(&mut b, d.energy_uj.to_bits());
+                    }
+                }
             }
             ResponseBody::Metrics { text } => {
                 b.push(1);
@@ -680,11 +793,31 @@ impl WireResponse {
         frame(version, KIND_RESPONSE, b)
     }
 
+    /// Strict decode: trailing response extensions are rejected as
+    /// trailing garbage — use [`WireResponse::decode_body_ext`] to
+    /// accept them.
     pub fn decode_body(version: u8, body: &[u8])
                        -> Result<Self, ProtoError> {
+        Self::decode_body_inner(version, body, false)
+            .map(|(resp, _)| resp)
+    }
+
+    /// Extension-aware decode: like [`WireResponse::decode_body`] but
+    /// a v2 `Infer` response may end with an [`EXT_DEGRADE`]
+    /// extension, returned alongside. Extension-free bodies decode
+    /// identically in both entry points (`None` here). v1 frames
+    /// never carry extensions, so trailing bytes stay malformed.
+    pub fn decode_body_ext(version: u8, body: &[u8])
+            -> Result<(Self, Option<DegradeInfo>), ProtoError> {
+        Self::decode_body_inner(version, body, true)
+    }
+
+    fn decode_body_inner(version: u8, body: &[u8], want_ext: bool)
+            -> Result<(Self, Option<DegradeInfo>), ProtoError> {
         let mut r = Cursor::new(body);
         let id = r.u64()?;
         let tag = r.u8()?;
+        let mut degrade = None;
         let body = match tag {
             0 => {
                 let prediction = r.u32()?;
@@ -699,6 +832,28 @@ impl WireResponse {
                 }
                 let latency_us = r.u64()?;
                 let worker = r.u32()?;
+                while want_ext && version != V1 && r.remaining() > 0 {
+                    match r.u8()? {
+                        EXT_DEGRADE => {
+                            if degrade.is_some() {
+                                return Err(ProtoError::Malformed(
+                                    "repeated degrade extension"
+                                        .into()));
+                            }
+                            let t_served = r.u32()?;
+                            let t_full = r.u32()?;
+                            let energy_uj = f64::from_bits(r.u64()?);
+                            degrade = Some(DegradeInfo {
+                                t_served, t_full, energy_uj,
+                            });
+                        }
+                        tag => {
+                            return Err(ProtoError::Malformed(format!(
+                                "unknown response extension tag \
+                                 {tag}")))
+                        }
+                    }
+                }
                 ResponseBody::Infer {
                     prediction,
                     output_counts,
@@ -765,7 +920,7 @@ impl WireResponse {
             }
         };
         r.finish()?;
-        Ok(WireResponse { id, body })
+        Ok((WireResponse { id, body }, degrade))
     }
 }
 
@@ -1410,10 +1565,11 @@ mod tests {
             read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
                 .unwrap().unwrap();
         assert_eq!(ver, V2);
-        let (got, got_ctx) =
-            WireRequest::decode_body_traced(ver, &body).unwrap();
+        let (got, exts) =
+            WireRequest::decode_body_ext(ver, &body).unwrap();
         assert_eq!(got, req);
-        assert_eq!(got_ctx, Some(ctx));
+        assert_eq!(exts.trace, Some(ctx));
+        assert_eq!(exts.priority, None);
         // The strict decoder sees the extension as trailing garbage
         // (malformed, answerable) — extension awareness is opt-in.
         let err = WireRequest::decode_body(ver, &body).unwrap_err();
@@ -1438,10 +1594,10 @@ mod tests {
         let (ver, body) =
             read_frame(&mut IoCursor::new(&plain), KIND_REQUEST)
                 .unwrap().unwrap();
-        let (got, ctx) =
-            WireRequest::decode_body_traced(ver, &body).unwrap();
+        let (got, exts) =
+            WireRequest::decode_body_ext(ver, &body).unwrap();
         assert_eq!(got, req);
-        assert_eq!(ctx, None);
+        assert!(exts.is_empty());
         assert_eq!(WireRequest::decode_body(ver, &body).unwrap(), req);
     }
 
@@ -1476,7 +1632,7 @@ mod tests {
         body1.extend_from_slice(&ctx.trace_id);
         body1.extend_from_slice(&ctx.parent_span.to_le_bytes());
         let err =
-            WireRequest::decode_body_traced(V1, &body1).unwrap_err();
+            WireRequest::decode_body_ext(V1, &body1).unwrap_err();
         assert!(matches!(err, ProtoError::Malformed(_)));
         assert!(!err.is_fatal());
     }
@@ -1503,21 +1659,196 @@ mod tests {
         assert_eq!(doctored[tag_at], EXT_TRACE);
         doctored[tag_at] = 0xEE;
         assert!(matches!(
-            WireRequest::decode_body_traced(V2, &doctored),
+            WireRequest::decode_body_ext(V2, &doctored),
             Err(ProtoError::Malformed(_))
                 | Err(ProtoError::Truncated)));
         // Every truncation of the extension bytes errors, never
         // panics and never parses.
         for cut in tag_at + 1..body.len() {
-            assert!(WireRequest::decode_body_traced(V2, &body[..cut])
+            assert!(WireRequest::decode_body_ext(V2, &body[..cut])
                 .is_err());
         }
-        // Trailing bytes *after* a whole extension are still garbage.
+        // Trailing bytes *after* a whole extension are still garbage
+        // (tag 0 is not a known extension).
         let mut long = body.to_vec();
         long.push(0);
         assert!(matches!(
-            WireRequest::decode_body_traced(V2, &long),
+            WireRequest::decode_body_ext(V2, &long),
             Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn priority_extension_roundtrips_and_composes_with_trace() {
+        let req = WireRequest {
+            id: 31,
+            body: RequestBody::Infer {
+                net: NET_ANY,
+                model: "classifier".into(),
+                payload: WirePayload::Pixels(vec![5; 8]),
+            },
+        };
+        // Priority alone.
+        let exts = RequestExts { trace: None, priority: Some(0) };
+        let f = req.encode_with_exts(&exts).unwrap();
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
+        let (got, got_exts) =
+            WireRequest::decode_body_ext(ver, &body).unwrap();
+        assert_eq!(got, req);
+        assert_eq!(got_exts, exts);
+        // The strict decoder treats it as trailing garbage.
+        assert!(matches!(WireRequest::decode_body(ver, &body),
+                         Err(ProtoError::Malformed(_))));
+        // Both extensions together.
+        let both = RequestExts {
+            trace: Some(TraceContext {
+                trace_id: [7; 16],
+                parent_span: 9,
+            }),
+            priority: Some(2),
+        };
+        let f = req.encode_with_exts(&both).unwrap();
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_REQUEST)
+                .unwrap().unwrap();
+        let (got, got_exts) =
+            WireRequest::decode_body_ext(ver, &body).unwrap();
+        assert_eq!(got, req);
+        assert_eq!(got_exts, both);
+        // An empty bundle is byte-identical to the plain encode.
+        assert_eq!(
+            req.encode_with_exts(&RequestExts::default()).unwrap(),
+            req.encode().unwrap());
+    }
+
+    #[test]
+    fn extensions_decode_in_any_order_but_never_twice() {
+        let req = WireRequest {
+            id: 32,
+            body: RequestBody::Infer {
+                net: 0,
+                model: String::new(),
+                payload: WirePayload::Pixels(vec![1]),
+            },
+        };
+        let ctx = TraceContext { trace_id: [3; 16], parent_span: 4 };
+        // Hand-build priority *before* trace: order-free decode.
+        let plain = req.encode().unwrap();
+        let mut body = plain[HEADER_LEN..].to_vec();
+        body.push(EXT_PRIORITY);
+        body.push(1);
+        body.push(EXT_TRACE);
+        body.extend_from_slice(&ctx.trace_id);
+        body.extend_from_slice(&ctx.parent_span.to_le_bytes());
+        let (got, exts) =
+            WireRequest::decode_body_ext(V2, &body).unwrap();
+        assert_eq!(got, req);
+        assert_eq!(exts.trace, Some(ctx));
+        assert_eq!(exts.priority, Some(1));
+        // A repeated tag is malformed, not last-wins.
+        let mut dup = plain[HEADER_LEN..].to_vec();
+        dup.push(EXT_PRIORITY);
+        dup.push(1);
+        dup.push(EXT_PRIORITY);
+        dup.push(2);
+        let err = WireRequest::decode_body_ext(V2, &dup).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        assert!(!err.is_fatal());
+        // v1 bodies never parse the priority extension.
+        let f1 = req.encode_v1().unwrap();
+        let mut body1 = f1[HEADER_LEN..].to_vec();
+        body1.push(EXT_PRIORITY);
+        body1.push(0);
+        assert!(matches!(
+            WireRequest::decode_body_ext(V1, &body1),
+            Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn degrade_notice_roundtrips_v2_and_vanishes_under_v1() {
+        let resp = WireResponse {
+            id: 90,
+            body: ResponseBody::Infer {
+                prediction: 2,
+                output_counts: vec![1, 4, 9],
+                latency_us: 777,
+                worker: 0,
+            },
+        };
+        let info = DegradeInfo {
+            t_served: 5,
+            t_full: 20,
+            energy_uj: 123.5,
+        };
+        let f = resp.encode_with_degrade(V2, Some(&info));
+        let (ver, body) =
+            read_frame(&mut IoCursor::new(&f), KIND_RESPONSE)
+                .unwrap().unwrap();
+        assert_eq!(ver, V2);
+        let (got, got_info) =
+            WireResponse::decode_body_ext(ver, &body).unwrap();
+        assert_eq!(got, resp);
+        assert_eq!(got_info, Some(info));
+        // The strict decoder rejects the trailing extension.
+        assert!(matches!(WireResponse::decode_body(ver, &body),
+                         Err(ProtoError::Malformed(_))));
+        // Under v1 the notice is dropped: byte-identical to a plain
+        // v1 encode, and a legacy decode sees a normal answer.
+        assert_eq!(resp.encode_with_degrade(V1, Some(&info)),
+                   resp.encode(V1));
+        // Absent notice costs zero bytes at v2 too.
+        assert_eq!(resp.encode_with_degrade(V2, None),
+                   resp.encode(V2));
+        // Non-Infer bodies never carry it.
+        let err_resp = WireResponse {
+            id: 91,
+            body: ResponseBody::Error {
+                code: ErrorCode::Busy,
+                detail: "q".into(),
+            },
+        };
+        assert_eq!(err_resp.encode_with_degrade(V2, Some(&info)),
+                   err_resp.encode(V2));
+    }
+
+    #[test]
+    fn degrade_extension_damage_is_typed_never_panics() {
+        let resp = WireResponse {
+            id: 92,
+            body: ResponseBody::Infer {
+                prediction: 0,
+                output_counts: vec![],
+                latency_us: 1,
+                worker: 3,
+            },
+        };
+        let info = DegradeInfo {
+            t_served: 1,
+            t_full: 8,
+            energy_uj: 0.25,
+        };
+        let f = resp.encode_with_degrade(V2, Some(&info));
+        let body = &f[HEADER_LEN..];
+        // ext = tag(1) + t_served(4) + t_full(4) + energy(8) = 17 B.
+        let tag_at = body.len() - 17;
+        assert_eq!(body[tag_at], EXT_DEGRADE);
+        // Unknown tag.
+        let mut doctored = body.to_vec();
+        doctored[tag_at] = 0xEE;
+        assert!(WireResponse::decode_body_ext(V2, &doctored).is_err());
+        // Every truncation of the extension bytes errors.
+        for cut in tag_at + 1..body.len() {
+            assert!(WireResponse::decode_body_ext(V2, &body[..cut])
+                .is_err());
+        }
+        // A repeated notice is malformed.
+        let mut dup = body.to_vec();
+        dup.extend_from_slice(&body[tag_at..]);
+        let err = WireResponse::decode_body_ext(V2, &dup).unwrap_err();
+        assert!(matches!(err, ProtoError::Malformed(_)));
+        // A v1 reader treats the same trailing bytes as garbage.
+        assert!(WireResponse::decode_body_ext(V1, body).is_err());
     }
 
     #[test]

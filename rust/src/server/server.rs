@@ -75,19 +75,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{FramePayload, ModelRegistry, ReqTrace,
-                         ServiceConfig, ServiceHandle, ServingReport,
-                         Stats, SubmitError, WorkerConfig,
-                         WorkerEvent};
+use crate::coordinator::{AutoscaleConfig, AutoscaleObs, Autoscaler,
+                         FramePayload, LatencyHistogram, ModelRegistry,
+                         PoolScaler, Priority, ReqTrace, ServiceConfig,
+                         ServiceHandle, ServingReport, Stats,
+                         SubmitError, WorkerConfig, WorkerEvent};
 use crate::obs::recorder::{self, TraceMeta};
 use crate::obs::trace::{self, Stage};
 use crate::{log_error, log_info, log_warn};
 
-use super::protocol::{net_code, parse_frame, ErrorCode, ModelLoad,
-                      RequestBody, ResponseBody, TraceContext,
-                      WirePayload, WireRequest, WireResponse,
-                      CONN_ERR_ID, HEADER_LEN, KIND_REQUEST, NET_ANY,
-                      V1};
+use super::protocol::{net_code, parse_frame, DegradeInfo, ErrorCode,
+                      ModelLoad, RequestBody, ResponseBody,
+                      TraceContext, WirePayload, WireRequest,
+                      WireResponse, CONN_ERR_ID, HEADER_LEN,
+                      KIND_REQUEST, NET_ANY, V1};
 use super::reactor::{self, PollFd, RecvBuf, Waker, POLLIN, POLLOUT};
 
 /// Gateway-level knobs.
@@ -111,6 +112,22 @@ pub struct GatewayConfig {
     /// whose unread responses exceed this is shed (write
     /// backpressure) instead of buffering without limit.
     pub write_buf_cap: usize,
+    /// Worker-pool autoscaling policy, applied to every model whose
+    /// pool reserved runtime headroom
+    /// (`ServiceConfig::workers_max > workers`). The default
+    /// (`min == max`) never spawns the control loop.
+    pub autoscale: AutoscaleConfig,
+    /// `--degrade reduce-t`: under queue pressure, serve
+    /// reduced-timestep inference instead of shedding with `BUSY`.
+    /// Only models whose runtime re-parameterizes T per request
+    /// participate
+    /// ([`degrade_capable`](crate::coordinator::Service::degrade_capable));
+    /// their responses carry a [`DegradeInfo`] notice to v2 clients.
+    pub degrade_reduce_t: bool,
+    /// Floor on the reduced timestep count (`--degrade-floor-t`);
+    /// 0 = auto (a quarter of the model's full T, at least 1).
+    /// Pressure that would need T below the floor sheds as before.
+    pub degrade_floor_t: usize,
 }
 
 impl Default for GatewayConfig {
@@ -121,6 +138,9 @@ impl Default for GatewayConfig {
             drain_timeout: Duration::from_secs(10),
             reactor_shards: 0,
             write_buf_cap: 8 << 20,
+            autoscale: AutoscaleConfig::default(),
+            degrade_reduce_t: false,
+            degrade_floor_t: 0,
         }
     }
 }
@@ -213,6 +233,7 @@ struct ModelCounters {
     cost_admitted: AtomicU64,
     cost_served: AtomicU64,
     cost_shed: AtomicU64,
+    degraded: AtomicU64,
 }
 
 /// Point-in-time copy of one model's counters.
@@ -231,6 +252,9 @@ pub struct ModelCounterSnapshot {
     pub cost_served: u64,
     /// Predicted cost shed with `BUSY` (queue full).
     pub cost_shed: u64,
+    /// Served responses that ran at reduced timesteps (a subset of
+    /// `served` — degraded, not lost).
+    pub degraded: u64,
 }
 
 impl ModelCounters {
@@ -246,6 +270,7 @@ impl ModelCounters {
             cost_admitted: ld(&self.cost_admitted),
             cost_served: ld(&self.cost_served),
             cost_shed: ld(&self.cost_shed),
+            degraded: ld(&self.degraded),
         }
     }
 }
@@ -263,6 +288,14 @@ struct ModelRuntime {
     /// Interned trace/model index ([`trace::intern_model`]) — span
     /// records and stage histograms carry this instead of the name.
     obs_model: u32,
+    /// Pool-resize handle when this model autoscales (`None`: fixed
+    /// pool, or autoscaling disabled gateway-wide).
+    scaler: Option<PoolScaler>,
+    /// Reduced-T floor when degradation applies to this model;
+    /// 0 = off (policy off, or a fixed-T runtime).
+    degrade_floor: usize,
+    /// Scale events applied to this model's pool.
+    autoscale_events: AtomicU64,
 }
 
 /// Final per-model summary inside a [`GatewayReport`].
@@ -515,6 +548,7 @@ pub struct Gateway {
     accept: thread::JoinHandle<()>,
     shard_threads: Vec<thread::JoinHandle<()>>,
     routers: Vec<thread::JoinHandle<()>>,
+    autoscaler: Option<thread::JoinHandle<()>>,
     drain_timeout: Duration,
 }
 
@@ -529,6 +563,26 @@ impl Gateway {
             let entry = registry.entry_mut(idx);
             let events = entry.service_mut().take_events()?;
             let service = entry.service();
+            // A model autoscales only when the policy is on AND its
+            // pool reserved headroom slots at start.
+            let scaler = if gcfg.autoscale.active()
+                && service.pool_max() > service.worker_count()
+            {
+                Some(service.scaler())
+            } else {
+                None
+            };
+            let degrade_floor = if gcfg.degrade_reduce_t
+                && service.degrade_capable()
+            {
+                let t = service.frame_spec().timesteps;
+                match gcfg.degrade_floor_t {
+                    0 => (t / 4).max(1),
+                    f => f.clamp(1, t),
+                }
+            } else {
+                0
+            };
             runtimes.push(ModelRuntime {
                 name: entry.name().to_string(),
                 handle: service.handle(),
@@ -538,6 +592,9 @@ impl Gateway {
                 workers: service.worker_count(),
                 dispatch: service.dispatch_mode().as_str(),
                 obs_model: trace::intern_model(entry.name()),
+                scaler,
+                degrade_floor,
+                autoscale_events: AtomicU64::new(0),
             });
             event_streams.push(events);
         }
@@ -594,6 +651,17 @@ impl Gateway {
                     accept_loop(listener, shared, max_conns)
                 })?
         };
+        let autoscaler = if shared.models.iter()
+            .any(|m| m.scaler.is_some())
+        {
+            let shared = shared.clone();
+            let cfg = gcfg.autoscale.clone();
+            Some(thread::Builder::new()
+                .name("skydiver-autoscale".into())
+                .spawn(move || autoscale_loop(cfg, shared))?)
+        } else {
+            None
+        };
         log_info!("server::gateway",
                   "listening on {addr}: {} model(s), {} reactor \
                    shard(s), tracing {}",
@@ -607,6 +675,7 @@ impl Gateway {
             accept,
             shard_threads,
             routers,
+            autoscaler,
             drain_timeout: gcfg.drain_timeout,
         })
     }
@@ -678,6 +747,7 @@ impl Gateway {
             accept,
             shard_threads,
             routers,
+            autoscaler,
             drain_timeout,
             ..
         } = self;
@@ -685,6 +755,12 @@ impl Gateway {
         // `finish` must also work when called directly.
         shared.trigger_stop();
         let _ = accept.join();
+        // The autoscale loop gates on the same stop signal; join it
+        // before the registry shutdown so no scale event races a pool
+        // teardown.
+        if let Some(a) = autoscaler {
+            let _ = a.join();
+        }
         // Drain: in-flight requests finish as workers catch up (new
         // admissions are already refused with SHUTTING_DOWN). The
         // routers notify `pending_cv` when the map drains empty.
@@ -1137,8 +1213,8 @@ fn decode_frames(shared: &Arc<Shared>, shard: usize, conn_id: u64,
 /// Handle one well-framed request arriving on a shard connection.
 fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
               c: &mut Conn, ver: u8, body: &[u8]) {
-    let (req, wire_ctx) =
-        match WireRequest::decode_body_traced(ver, body) {
+    let (req, exts) =
+        match WireRequest::decode_body_ext(ver, body) {
         Ok(pair) => pair,
         Err(e) => {
             // The frame boundary held: reject this request, keep
@@ -1170,15 +1246,33 @@ fn on_request(shared: &Arc<Shared>, shard: usize, conn_id: u64,
             // router) sent one, a fresh root otherwise. When off, no
             // timestamps are taken and nothing allocates.
             let ctx = if trace::enabled() {
-                Some(wire_ctx.unwrap_or(TraceContext {
+                Some(exts.trace.unwrap_or(TraceContext {
                     trace_id: trace::gen_trace_id(),
                     parent_span: 0,
                 }))
             } else {
                 None
             };
+            // An unknown priority byte is a per-request error, not a
+            // silent default: the class changes scheduling, so a
+            // client must learn its byte meant nothing.
+            let pri = match exts.priority.map(Priority::from_u8) {
+                None => Priority::Normal,
+                Some(Some(p)) => p,
+                Some(None) => {
+                    shared.counters.bad_request
+                        .fetch_add(1, Ordering::Relaxed);
+                    let f = err_frame(
+                        ver, req.id, ErrorCode::BadRequest,
+                        &format!("unknown priority class {} (known: \
+                                  0=high 1=normal 2=low)",
+                                 exts.priority.unwrap_or(0)));
+                    push_frame(shared, c, f, None);
+                    return;
+                }
+            };
             handle_infer(shared, shard, conn_id, c, ver, req.id, net,
-                         &model, payload, ctx);
+                         &model, payload, ctx, pri);
         }
         RequestBody::Metrics => {
             let text = render_metrics(shared);
@@ -1265,7 +1359,7 @@ fn unknown_model(shared: &Shared, selector: &str) -> String {
 fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
                 c: &mut Conn, version: u8, client_id: u64, net: u8,
                 model: &str, payload: WirePayload,
-                ctx: Option<TraceContext>) {
+                ctx: Option<TraceContext>, pri: Priority) {
     // `ctx` is Some only when tracing is enabled, so the disabled
     // path never reads the clock.
     let t_admit = if ctx.is_some() { trace::now_ns() } else { 0 };
@@ -1334,6 +1428,34 @@ fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
         trace::span(cx.trace_id, cx.parent_span, Stage::CostPredict,
                     m.obs_model, t_cp, false, cost, 0);
     }
+    // Graceful degradation: under queue pressure, serve *fewer
+    // timesteps* instead of shedding. Pressure is the max of this
+    // model's count- and cost-fraction; from 50% full the served T
+    // ramps linearly from full down to the model's floor, and only
+    // traffic the floor can't absorb is shed (by the queue, with
+    // `BUSY`, as before).
+    let mut degrade_t = None;
+    let mut cost = cost;
+    if m.degrade_floor > 0 && m.degrade_floor < spec.timesteps {
+        let q = m.handle.queue_stats();
+        let mut p = q.depth as f64 / q.capacity.max(1) as f64;
+        if q.cost_capacity != u64::MAX && q.cost_capacity > 0 {
+            p = p.max(q.cost_depth as f64 / q.cost_capacity as f64);
+        }
+        if p > 0.5 {
+            let t_full = spec.timesteps;
+            let frac = ((p - 0.5) / 0.5).min(1.0);
+            let span = (t_full - m.degrade_floor) as f64;
+            let t_eff = t_full - (span * frac).round() as usize;
+            if t_eff < t_full {
+                degrade_t = Some(t_eff);
+                // The admission tag shrinks with the work: a degraded
+                // frame integrates t_eff/t_full of the timesteps.
+                cost = (cost.saturating_mul(t_eff as u64)
+                        / t_full as u64).max(1);
+            }
+        }
+    }
     let internal = shared.next_id.fetch_add(1, Ordering::Relaxed);
     shared.pending.lock().unwrap().insert(internal, PendingEntry {
         reply: ConnRef { shard, conn: conn_id },
@@ -1352,7 +1474,8 @@ fn handle_infer(shared: &Arc<Shared>, shard: usize, conn_id: u64,
         t_enqueue_ns: trace::now_ns(),
         model: m.obs_model,
     });
-    match m.handle.try_submit_cost_traced(internal, payload, cost, rt) {
+    match m.handle.try_submit_full(internal, payload, cost, rt, pri,
+                                   degrade_t) {
         Ok(()) => {
             m.counters.cost_admitted.fetch_add(cost, Ordering::Relaxed);
         }
@@ -1409,6 +1532,9 @@ fn router_loop(model_idx: usize,
                 m.counters.served.fetch_add(1, Ordering::Relaxed);
                 m.counters.cost_served
                     .fetch_add(r.predicted_cost, Ordering::Relaxed);
+                if r.degraded {
+                    m.counters.degraded.fetch_add(1, Ordering::Relaxed);
+                }
                 if let Some(p) = shared.remove_pending(r.id) {
                     let prediction = r.output_counts.iter().enumerate()
                         .max_by_key(|&(_, c)| *c)
@@ -1419,6 +1545,19 @@ fn router_loop(model_idx: usize,
                     } else {
                         0
                     };
+                    // Degraded responses tell the client what fidelity
+                    // it got and what it cost; the notice silently
+                    // vanishes for v1 peers (they asked before the
+                    // extension existed).
+                    let degrade = if r.degraded {
+                        Some(DegradeInfo {
+                            t_served: r.timesteps,
+                            t_full: m.handle.spec().timesteps as u32,
+                            energy_uj: r.energy_j * 1e6,
+                        })
+                    } else {
+                        None
+                    };
                     let frame = WireResponse {
                         id: p.client_id,
                         body: ResponseBody::Infer {
@@ -1427,7 +1566,7 @@ fn router_loop(model_idx: usize,
                             latency_us: r.latency_us,
                             worker: r.worker as u32,
                         },
-                    }.encode(p.version);
+                    }.encode_with_degrade(p.version, degrade.as_ref());
                     let wt = p.trace.map(|t| {
                         trace::span(t.trace_id, t.parent,
                                     Stage::Encode, m.obs_model,
@@ -1540,6 +1679,82 @@ fn fail_ids(shared: &Shared, model_idx: usize, ids: &[u64],
     }
 }
 
+// ----------------------------------------------------------- autoscale
+
+/// The autoscaler's *body*: one control thread ticking every scalable
+/// model's pure hysteresis controller
+/// ([`Autoscaler`](crate::coordinator::Autoscaler)) against live queue
+/// pressure and the p99 of the window since the previous tick, and
+/// applying decisions through that model's [`PoolScaler`]. Pacing is a
+/// condvar wait on the gateway stop signal, so shutdown interrupts a
+/// sleeping tick instead of waiting one out.
+fn autoscale_loop(cfg: AutoscaleConfig, shared: Arc<Shared>) {
+    let mut ctls: Vec<Autoscaler> = shared.models.iter()
+        .map(|_| Autoscaler::new(cfg.clone()))
+        .collect();
+    // Histogram baseline from the previous tick: p99 is computed over
+    // the inter-tick window, not since process start, so the
+    // controller reacts to *current* latency, not history.
+    let mut bases: Vec<LatencyHistogram> = shared.models.iter()
+        .map(|m| m.stats.lock().unwrap().latency().clone())
+        .collect();
+    loop {
+        {
+            let g = shared.stop_mu.lock().unwrap();
+            let _ = shared.stop_cv.wait_timeout(g, cfg.tick).unwrap();
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        for (idx, m) in shared.models.iter().enumerate() {
+            let Some(scaler) = &m.scaler else { continue };
+            let q = m.handle.queue_stats();
+            let snap = m.stats.lock().unwrap().latency().clone();
+            let p99 = snap.percentile_since(&bases[idx], 99.0);
+            bases[idx] = snap;
+            let obs = AutoscaleObs {
+                depth_frac: q.depth as f64 / q.capacity.max(1) as f64,
+                cost_frac: if q.cost_capacity == u64::MAX
+                    || q.cost_capacity == 0
+                {
+                    0.0
+                } else {
+                    q.cost_depth as f64 / q.cost_capacity as f64
+                },
+                p99_us: p99,
+                current: scaler.target(),
+            };
+            let Some(decision) = ctls[idx].tick(&obs) else {
+                continue;
+            };
+            let t0 = if trace::enabled() { trace::now_ns() } else { 0 };
+            let from = scaler.target();
+            let to = scaler.scale_to(decision.target());
+            m.autoscale_events.fetch_add(1, Ordering::Relaxed);
+            log_info!("server::autoscale",
+                      "model '{}': pool {from} -> {to} ({decision:?}, \
+                       depth {:.0}%, cost {:.0}%, window p99 {p99}us)",
+                      m.name, obs.depth_frac * 100.0,
+                      obs.cost_frac * 100.0);
+            // Scale events are rare and operationally interesting:
+            // record each as its own root trace so `skydiver trace`
+            // shows them on the same timeline as the requests that
+            // provoked them.
+            if trace::enabled() {
+                let tid = trace::gen_trace_id();
+                trace::span(tid, 0, Stage::Scale, m.obs_model, t0,
+                            false, from as u64, to as u64);
+                recorder::complete(TraceMeta {
+                    trace_id: tid,
+                    model: m.obs_model,
+                    latency_us: 0,
+                    error: false,
+                });
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------- metrics
 
 fn push_metric(out: &mut String, name: &str, kind: &str, v: f64) {
@@ -1641,6 +1856,23 @@ fn render_metrics(shared: &Shared) -> String {
     push_labelled(&mut out, shared,
                   "skydiver_model_internal_error_total", "counter",
                   &col(&|i| mcs[i].internal as f64));
+    // Degradation: served-but-reduced-T responses (subset of served).
+    push_labelled(&mut out, shared,
+                  "skydiver_model_degraded_total", "counter",
+                  &col(&|i| mcs[i].degraded as f64));
+    // Autoscaling: live pool-size target and scale events applied.
+    // Fixed-pool models report their configured worker count and a
+    // frozen zero event counter.
+    push_labelled(&mut out, shared, "skydiver_autoscale_workers",
+                  "gauge", &col(&|i| {
+                      let m = &shared.models[i];
+                      m.scaler.as_ref().map(|s| s.target())
+                          .unwrap_or(m.workers) as f64
+                  }));
+    push_labelled(&mut out, shared,
+                  "skydiver_autoscale_events_total", "counter",
+                  &col(&|i| shared.models[i].autoscale_events
+                      .load(Ordering::Relaxed) as f64));
     // Per-model queue state.
     push_labelled(&mut out, shared, "skydiver_queue_depth", "gauge",
                   &col(&|i| queues[i].depth as f64));

@@ -1,0 +1,530 @@
+//! Self-driving serving tier acceptance: worker-pool autoscaling,
+//! priority-class validation, and graceful reduced-T degradation —
+//! hermetic per-piece tests plus the headline skewed-burst scenario
+//! (hot model scales up, cold model is not starved, overload degrades
+//! instead of dropping, the pool decays back to the floor).
+//!
+//! Everything runs against synthetic artifacts on loopback; the only
+//! wall-clock assertions compare the cold model against its own
+//! unloaded baseline with generous slack, so the tests stay stable on
+//! loaded CI machines.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use skydiver::coordinator::{AutoscaleConfig, DispatchMode,
+                            ModelRegistry, ModelSpec, Policy,
+                            ServiceConfig, WorkerConfig};
+use skydiver::power::EnergyModel;
+use skydiver::server::protocol::NET_ANY;
+use skydiver::server::{Client, DegradeInfo, ErrorCode, Gateway,
+                       GatewayConfig, RequestBody, RequestExts,
+                       ResponseBody, WirePayload, WireRequest};
+use skydiver::sim::ArchConfig;
+use skydiver::snn::NetKind;
+
+const CLS_SIDE: usize = 24; // classifier: 1 x 24 x 24, 6 timesteps
+const SEG_SIDE: usize = 12; // segmenter: 3 x 12 x 12, 4 timesteps
+
+fn artifacts(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(
+        format!("skydiver-autoscale-{label}-{}", std::process::id()));
+    skydiver::data::write_synthetic_classifier(&dir, CLS_SIDE).unwrap();
+    skydiver::data::write_synthetic_segmenter(&dir, SEG_SIDE).unwrap();
+    dir
+}
+
+fn worker_cfg(artifacts: PathBuf, kind: NetKind) -> WorkerConfig {
+    WorkerConfig {
+        artifacts,
+        kind,
+        aprc: true,
+        policy: Policy::Cbws,
+        arch: ArchConfig::default(),
+        energy: EnergyModel::default(),
+        use_runtime: false,
+        timesteps: None,
+        sweep_threads: 1,
+        temporal: true,
+    }
+}
+
+/// A pool that may grow: 1 worker at start, `workers_max` slots
+/// reserved for the autoscaler.
+fn elastic_scfg(queue_cap: usize, workers_max: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        workers_max,
+        batch_max: 2,
+        queue_cap,
+        batch_wait: Duration::from_millis(1),
+        dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
+    }
+}
+
+/// A fast control loop for tests: 5 ms ticks, scale up after 2 hot
+/// ticks, decay one step after 4 quiet ticks.
+fn fast_autoscale(max: usize) -> AutoscaleConfig {
+    AutoscaleConfig {
+        min: 1,
+        max,
+        tick: Duration::from_millis(5),
+        sustain_ticks: 2,
+        cooldown_ticks: 1,
+        idle_ticks: 4,
+        ..AutoscaleConfig::default()
+    }
+}
+
+/// Parse one `{model="..."}`-labelled sample out of a metrics scrape.
+fn labelled(text: &str, name: &str, model: &str) -> f64 {
+    let prefix = format!("{name}{{model=\"{model}\"}} ");
+    text.lines()
+        .find_map(|l| l.strip_prefix(prefix.as_str()))
+        .unwrap_or_else(|| panic!("metrics must expose {prefix}"))
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+/// Poll the metrics endpoint until `pred` holds for the named series.
+fn wait_metric(mon: &mut Client, name: &str, model: &str,
+               pred: impl Fn(f64) -> bool, what: &str,
+               timeout: Duration) -> f64 {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let v = labelled(&mon.metrics().unwrap(), name, model);
+        if pred(v) {
+            return v;
+        }
+        assert!(Instant::now() < deadline,
+                "timed out waiting for {what}: \
+                 {name}{{model=\"{model}\"}} = {v}");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+struct SatResult {
+    sent: u64,
+    ok: u64,
+    busy: u64,
+    degraded: u64,
+    notices: Vec<DegradeInfo>,
+}
+
+/// Saturate `model` with dense frames for `run_for`, keeping up to
+/// `window` requests pipelined, then drain what is in flight. Every
+/// response must be a served `Infer` (possibly degraded) or a typed
+/// `BUSY` — anything else is a lost request and panics, which is
+/// exactly the "zero lost non-BUSY requests" acceptance property.
+fn saturate(client: &mut Client, model: &str, n: usize, window: usize,
+            run_for: Duration) -> SatResult {
+    let started = Instant::now();
+    let (mut sent, mut ok, mut busy, mut degraded) = (0u64, 0, 0, 0);
+    let mut inflight = 0usize;
+    let mut notices = Vec::new();
+    loop {
+        while inflight < window && started.elapsed() < run_for {
+            client.send(&WireRequest {
+                id: sent,
+                body: RequestBody::Infer {
+                    net: NET_ANY,
+                    model: model.to_string(),
+                    payload: WirePayload::Pixels(vec![255u8; n]),
+                },
+            }).unwrap();
+            sent += 1;
+            inflight += 1;
+        }
+        if inflight == 0 {
+            break;
+        }
+        let (resp, notice) = client.recv_ext().unwrap();
+        inflight -= 1;
+        match resp.body {
+            ResponseBody::Infer { .. } => {
+                ok += 1;
+                if let Some(d) = notice {
+                    degraded += 1;
+                    notices.push(d);
+                }
+            }
+            ResponseBody::Error { code: ErrorCode::Busy, .. } => {
+                busy += 1;
+            }
+            other => panic!("request {} lost: {other:?}", resp.id),
+        }
+    }
+    SatResult { sent, ok, busy, degraded, notices }
+}
+
+fn sparse_frame(n: usize) -> Vec<u8> {
+    (0..n).map(|i| if i % 16 == 0 { 255 } else { 0 }).collect()
+}
+
+/// One sequential cold-model probe; returns the client-observed RTT.
+fn probe_once(c: &mut Client, id: u64, n: usize) -> Duration {
+    let t = Instant::now();
+    let resp = c.infer_pixels(id, "segmenter", sparse_frame(n)).unwrap();
+    assert!(matches!(&resp.body, ResponseBody::Infer { .. }),
+            "cold-model probe {id} failed: {:?}", resp.body);
+    t.elapsed()
+}
+
+fn p99(samples: &mut [Duration]) -> Duration {
+    samples.sort();
+    samples[((samples.len() - 1) as f64 * 0.99).round() as usize]
+}
+
+/// Sustained saturation of a 1-worker elastic pool must scale it up
+/// (first event can only be `Up`: the pool starts at the floor), the
+/// gauge must show the larger pool, and after the burst the pool must
+/// decay back to `min` — all visible through the metrics endpoint.
+#[test]
+fn sustained_burst_scales_pool_up_then_decays_to_min() {
+    let gcfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: 8,
+        drain_timeout: Duration::from_secs(60),
+        autoscale: fast_autoscale(4),
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start_single(gcfg, elastic_scfg(64, 4),
+                                   worker_cfg(artifacts("scale"),
+                                              NetKind::Classifier))
+        .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    let mut driver = Client::connect(&addr).unwrap();
+    driver.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let n = driver.info().unwrap().pixels_len();
+    let mut mon = Client::connect(&addr).unwrap();
+    mon.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+
+    // Saturate from a background thread; watch the scrape live.
+    let load = thread::spawn(move || {
+        let r = saturate(&mut driver, "", n, 128,
+                         Duration::from_millis(1500));
+        (r, driver)
+    });
+    wait_metric(&mut mon, "skydiver_autoscale_events_total",
+                "classifier", |v| v >= 1.0,
+                "a scale event under sustained saturation",
+                Duration::from_secs(120));
+    // The grown pool shows in the gauge. If scheduling delayed this
+    // poll past the whole burst *and* decay, a second (down) event
+    // with the gauge back at the floor proves the same round trip.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut peak = 1.0f64;
+    loop {
+        let text = mon.metrics().unwrap();
+        let w = labelled(&text, "skydiver_autoscale_workers",
+                         "classifier");
+        let ev = labelled(&text, "skydiver_autoscale_events_total",
+                          "classifier");
+        peak = peak.max(w);
+        if peak >= 2.0 || (ev >= 2.0 && w <= 1.0) {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "pool gauge never left the floor (events {ev})");
+        thread::sleep(Duration::from_millis(2));
+    }
+
+    let (r, driver) = load.join().unwrap();
+    assert_eq!(r.ok + r.busy, r.sent, "every request must be answered");
+    assert!(r.ok > 0, "saturation must still serve");
+    assert_eq!(r.degraded, 0, "degradation is off in this test");
+
+    // After the burst: one-at-a-time decay back to the floor.
+    wait_metric(&mut mon, "skydiver_autoscale_workers", "classifier",
+                |v| v == 1.0, "post-burst decay to --workers-min",
+                Duration::from_secs(120));
+    let events = labelled(&mon.metrics().unwrap(),
+                          "skydiver_autoscale_events_total",
+                          "classifier");
+    assert!(events >= 2.0,
+            "up + down is at least two scale events, got {events}");
+
+    drop((driver, mon));
+    let report = gw.stop_and_wait().unwrap();
+    assert_eq!(report.counters.served, r.ok);
+    assert_eq!(report.counters.busy, r.busy);
+    assert!(report.default_model().serving.worker_failures.is_empty(),
+            "{:?}", report.default_model().serving.worker_failures);
+}
+
+/// Overload against a tiny queue with `--degrade reduce-t`: admissions
+/// past the pressure knee serve at reduced T (flagged and
+/// energy-priced on the wire, counted in metrics and the report)
+/// instead of everything past the cap shedding as `BUSY`.
+#[test]
+fn overload_degrades_to_reduced_t_instead_of_pure_busy() {
+    let gcfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: 8,
+        drain_timeout: Duration::from_secs(60),
+        degrade_reduce_t: true,
+        degrade_floor_t: 2,
+        ..GatewayConfig::default()
+    };
+    let scfg = ServiceConfig {
+        workers: 1,
+        workers_max: 0,
+        batch_max: 1,
+        queue_cap: 8,
+        batch_wait: Duration::from_millis(1),
+        dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
+    };
+    let gw = Gateway::start_single(gcfg, scfg,
+                                   worker_cfg(artifacts("degrade"),
+                                              NetKind::Classifier))
+        .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let info = client.info().unwrap();
+    let n = info.pixels_len();
+    let t_full = info.timesteps as u32;
+
+    let r = saturate(&mut client, "", n, 64,
+                     Duration::from_millis(800));
+    assert_eq!(r.ok + r.busy, r.sent, "every request must be answered");
+    assert!(r.degraded > 0,
+            "a saturated cap-8 queue must push admissions past the \
+             50% pressure knee (ok {} busy {} of {})",
+            r.ok, r.busy, r.sent);
+    assert_eq!(r.degraded as usize, r.notices.len());
+    for d in &r.notices {
+        assert_eq!(d.t_full, t_full);
+        assert!(d.t_served >= 2 && d.t_served < d.t_full,
+                "served T {} must sit in [--degrade-floor-t, T)",
+                d.t_served);
+        assert!(d.energy_uj > 0.0,
+                "degraded responses are energy-priced");
+    }
+
+    let text = client.metrics().unwrap();
+    assert!(labelled(&text, "skydiver_model_degraded_total",
+                     "classifier") >= r.degraded as f64);
+    drop(client);
+    let report = gw.stop_and_wait().unwrap();
+    assert_eq!(report.default_model().counters.degraded, r.degraded);
+    assert_eq!(report.counters.served, r.ok);
+    assert_eq!(report.counters.busy, r.busy);
+    assert!(report.default_model().serving.worker_failures.is_empty());
+}
+
+/// The priority extension: all three known classes serve; an unknown
+/// class byte is a per-request `BAD_REQUEST` naming the valid classes
+/// (a class changes scheduling, so it must never be silently
+/// defaulted) and the connection stays usable.
+#[test]
+fn priority_classes_serve_and_unknown_byte_is_rejected() {
+    let gcfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: 8,
+        drain_timeout: Duration::from_secs(60),
+        ..GatewayConfig::default()
+    };
+    let scfg = ServiceConfig {
+        workers: 1,
+        workers_max: 0,
+        batch_max: 8,
+        queue_cap: 16,
+        batch_wait: Duration::from_millis(1),
+        dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
+    };
+    let gw = Gateway::start_single(gcfg, scfg,
+                                   worker_cfg(artifacts("priority"),
+                                              NetKind::Classifier))
+        .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let n = client.info().unwrap().pixels_len();
+
+    for (id, pri) in [(0u64, 0u8), (1, 1), (2, 2)] {
+        client.send_with_exts(&WireRequest {
+            id,
+            body: RequestBody::Infer {
+                net: NET_ANY,
+                model: String::new(),
+                payload: WirePayload::Pixels(sparse_frame(n)),
+            },
+        }, &RequestExts { priority: Some(pri),
+                          ..RequestExts::default() }).unwrap();
+        let (resp, notice) = client.recv_ext().unwrap();
+        assert_eq!(resp.id, id);
+        assert!(matches!(&resp.body, ResponseBody::Infer { .. }),
+                "priority class {pri} must serve: {:?}", resp.body);
+        assert!(notice.is_none(), "no overload, no degradation");
+    }
+
+    // Unknown class byte: typed rejection, not a silent default.
+    client.send_with_exts(&WireRequest {
+        id: 9,
+        body: RequestBody::Infer {
+            net: NET_ANY,
+            model: String::new(),
+            payload: WirePayload::Pixels(sparse_frame(n)),
+        },
+    }, &RequestExts { priority: Some(9),
+                      ..RequestExts::default() }).unwrap();
+    let (resp, _) = client.recv_ext().unwrap();
+    assert_eq!(resp.id, 9);
+    match resp.body {
+        ResponseBody::Error { code, detail } => {
+            assert_eq!(code, ErrorCode::BadRequest);
+            assert!(detail.contains("priority"), "{detail}");
+        }
+        other => panic!("expected BAD_REQUEST, got {other:?}"),
+    }
+
+    // The connection survives the rejection.
+    let resp = client.infer_pixels(10, "", sparse_frame(n)).unwrap();
+    assert!(matches!(resp.body, ResponseBody::Infer { .. }));
+    drop(client);
+
+    let report = gw.stop_and_wait().unwrap();
+    assert_eq!(report.counters.served, 4);
+    assert!(report.counters.bad_request >= 1);
+}
+
+/// The headline acceptance scenario from the issue: a skewed burst on
+/// a two-model gateway. The hot model's elastic pool scales up (and
+/// only its pool — the cold model's gauge stays at its fixed size),
+/// overload on the hot model degrades instead of dropping, the cold
+/// model's p99 stays within 2x its unloaded baseline (plus fixed
+/// scheduler slack), and the hot pool decays back to the floor once
+/// the burst ends.
+#[test]
+fn skewed_burst_scales_hot_model_without_starving_cold() {
+    let dir = artifacts("headline");
+    let cold_scfg = ServiceConfig {
+        workers: 1,
+        workers_max: 0,
+        batch_max: 8,
+        queue_cap: 64,
+        batch_wait: Duration::from_millis(1),
+        dispatch: DispatchMode::WorkQueue,
+        cost_cap: None,
+    };
+    let registry = ModelRegistry::start(vec![
+        ModelSpec {
+            name: "classifier".into(),
+            scfg: elastic_scfg(64, 4),
+            wcfg: worker_cfg(dir.clone(), NetKind::Classifier),
+        },
+        ModelSpec {
+            name: "segmenter".into(),
+            scfg: cold_scfg,
+            wcfg: worker_cfg(dir, NetKind::Segmenter),
+        },
+    ]).expect("registry start");
+    let gcfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: 8,
+        drain_timeout: Duration::from_secs(60),
+        autoscale: fast_autoscale(4),
+        degrade_reduce_t: true,
+        degrade_floor_t: 0, // auto: T/4
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start(gcfg, registry).expect("gateway start");
+    let addr = gw.local_addr().to_string();
+
+    // Unloaded cold-model baseline, measured through the same stack.
+    let mut probe = Client::connect(&addr).unwrap();
+    probe.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let seg_n = probe.info_model("segmenter").unwrap().pixels_len();
+    let mut baseline: Vec<Duration> =
+        (0..24).map(|i| probe_once(&mut probe, i, seg_n)).collect();
+    let base_p99 = p99(&mut baseline);
+
+    // Skewed burst: saturate the classifier from a background thread.
+    let mut driver = Client::connect(&addr).unwrap();
+    driver.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let cls_n = driver.info_model("classifier").unwrap().pixels_len();
+    let done = Arc::new(AtomicBool::new(false));
+    let done2 = done.clone();
+    let load = thread::spawn(move || {
+        let r = saturate(&mut driver, "classifier", cls_n, 128,
+                         Duration::from_millis(2000));
+        done2.store(true, Ordering::SeqCst);
+        (r, driver)
+    });
+
+    // While the burst runs: keep probing the cold model and sampling
+    // the scrape. The cold model's fixed pool must never move.
+    let mut during = Vec::new();
+    let mut peak_hot = 1.0f64;
+    let mut hot_events = 0.0f64;
+    let mut probe_id = 1000u64;
+    while !done.load(Ordering::SeqCst) {
+        during.push(probe_once(&mut probe, probe_id, seg_n));
+        probe_id += 1;
+        let text = probe.metrics().unwrap();
+        peak_hot = peak_hot.max(
+            labelled(&text, "skydiver_autoscale_workers", "classifier"));
+        hot_events = hot_events.max(
+            labelled(&text, "skydiver_autoscale_events_total",
+                     "classifier"));
+        assert_eq!(labelled(&text, "skydiver_autoscale_workers",
+                            "segmenter"), 1.0,
+                   "the cold model's fixed pool must never resize");
+    }
+    let (r, driver) = load.join().unwrap();
+
+    // Hot model: scaled up, nothing lost, overload degraded.
+    assert!(hot_events >= 1.0,
+            "the hot model must scale up under the skewed burst");
+    assert!(peak_hot >= 2.0,
+            "the scale-up must be visible in \
+             skydiver_autoscale_workers (peak {peak_hot})");
+    assert_eq!(r.ok + r.busy, r.sent, "zero lost non-BUSY requests");
+    assert!(r.degraded > 0,
+            "sustained overload with --degrade reduce-t must serve \
+             reduced-T responses (ok {} busy {} of {})",
+            r.ok, r.busy, r.sent);
+    for d in &r.notices {
+        assert!(d.t_served < d.t_full);
+        assert!(d.energy_uj > 0.0);
+    }
+
+    // Cold model: never starved. The bound is 2x its own unloaded
+    // p99 plus fixed slack for scheduler noise on shared CI cores.
+    assert!(during.len() >= 4,
+            "probes must keep flowing during the burst");
+    let during_p99 = p99(&mut during);
+    assert!(during_p99 <= base_p99 * 2 + Duration::from_millis(200),
+            "cold-model p99 under the skewed burst ({during_p99:?}) \
+             must stay within 2x its unloaded baseline ({base_p99:?})");
+
+    // After the burst: the hot pool decays back to the floor.
+    wait_metric(&mut probe, "skydiver_autoscale_workers", "classifier",
+                |v| v == 1.0, "hot-pool decay to --workers-min",
+                Duration::from_secs(120));
+
+    drop((probe, driver));
+    let report = gw.stop_and_wait().unwrap();
+    let cls = report.model("classifier").unwrap();
+    let seg = report.model("segmenter").unwrap();
+    assert_eq!(cls.counters.served, r.ok);
+    assert_eq!(cls.counters.busy, r.busy);
+    assert_eq!(cls.counters.degraded, r.degraded);
+    assert_eq!(seg.counters.served,
+               24 + during.len() as u64);
+    assert_eq!(seg.counters.degraded, 0,
+               "an unloaded model must never degrade");
+    assert!(cls.serving.worker_failures.is_empty());
+    assert!(seg.serving.worker_failures.is_empty());
+}

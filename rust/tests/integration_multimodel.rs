@@ -54,6 +54,7 @@ fn worker_cfg(artifacts: PathBuf, kind: NetKind) -> WorkerConfig {
 fn service_cfg() -> ServiceConfig {
     ServiceConfig {
         workers: 2,
+        workers_max: 0,
         batch_max: 8,
         queue_cap: 256,
         batch_wait: Duration::from_millis(2),

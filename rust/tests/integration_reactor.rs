@@ -52,6 +52,7 @@ fn worker_cfg(artifacts: PathBuf) -> WorkerConfig {
 fn service_cfg(workers: usize, queue_cap: usize) -> ServiceConfig {
     ServiceConfig {
         workers,
+        workers_max: 0,
         batch_max: 8,
         queue_cap,
         batch_wait: Duration::from_millis(2),

@@ -79,6 +79,7 @@ fn assert_build_failure_surfaces(dispatch: DispatchMode) {
     let dir = write_tiny_artifacts("fail");
     let scfg = ServiceConfig {
         workers: 2,
+        workers_max: 0,
         batch_max: 2,
         queue_cap: 16,
         batch_wait: Duration::from_millis(2),
@@ -127,6 +128,7 @@ fn worker_build_failure_surfaces_round_robin() {
 fn run_skewed(dir: &Path, dispatch: DispatchMode) -> ServingReport {
     let scfg = ServiceConfig {
         workers: 2,
+        workers_max: 0,
         batch_max: 4,
         queue_cap: 64,
         // Generous fill window so the legacy batcher forms full
@@ -185,6 +187,7 @@ fn all_workers_serve_under_bursty_load() {
     let dir = write_tiny_artifacts("bursty");
     let scfg = ServiceConfig {
         workers: 4,
+        workers_max: 0,
         batch_max: 2,
         queue_cap: 128,
         batch_wait: Duration::from_millis(2),
@@ -224,6 +227,7 @@ fn backpressure_reports_queue_full() {
     let dir = write_tiny_artifacts("backpressure");
     let scfg = ServiceConfig {
         workers: 1,
+        workers_max: 0,
         batch_max: 1,
         queue_cap: 2,
         batch_wait: Duration::from_millis(2),
@@ -270,6 +274,7 @@ fn run_frames_with(dir: &Path, dispatch: DispatchMode,
                    -> (Vec<Response>, ServingReport) {
     let scfg = ServiceConfig {
         workers: 2,
+        workers_max: 0,
         // Large enough that FIFO's first free worker can pull the
         // whole dense half of the burst as ONE batch — maximising the
         // imbalance cost-aware assembly must beat, which also keeps
@@ -412,6 +417,7 @@ fn cost_cap_sheds_dense_bursts_before_count_cap() {
     let cap = NOMINAL_FRAME_COST * 3 / 2;
     let scfg = ServiceConfig {
         workers: 1,
+        workers_max: 0,
         batch_max: 1,
         queue_cap: 64,
         batch_wait: Duration::from_millis(2),
@@ -495,6 +501,7 @@ fn worker_sweep_matches_serial_outputs() {
     let run = |sweep_threads: usize| {
         let scfg = ServiceConfig {
             workers: 1,
+            workers_max: 0,
             batch_max: 8,
             queue_cap: 64,
             batch_wait: Duration::from_millis(300),

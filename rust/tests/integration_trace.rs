@@ -126,6 +126,7 @@ fn gateway_dump_has_full_stage_timelines() {
         GatewayConfig::default(),
         ServiceConfig {
             workers: 1,
+            workers_max: 0,
             batch_max: 8,
             queue_cap: 256,
             batch_wait: Duration::from_millis(2),

@@ -3,7 +3,8 @@
 //! shrink-free randomized-invariant methodology, 256 cases per property;
 //! the full-frame temporal-kernel parity property runs 48 heavier cases).
 
-use skydiver::coordinator::BoundedQueue;
+use skydiver::coordinator::{BoundedQueue, LatencyHistogram, Priority,
+                            WFQ_WEIGHTS};
 use skydiver::data::SplitMix64;
 use skydiver::schedule::baselines::{Contiguous, Oracle, Random,
                                     RoundRobin, SparTen};
@@ -142,6 +143,194 @@ fn prop_cost_batches_never_exceed_twice_ideal_max_bin() {
         assert_eq!(seen, n, "every item must be handed out exactly once");
         assert_eq!(q.stats().cost_popped, total);
     }
+}
+
+// ---------------- WFQ priority-lane invariants ----------------
+
+#[test]
+fn prop_wfq_starvation_bound_and_lane_fifo() {
+    // The bounded-starvation guarantee the priority tier rests on:
+    // while a class stays backlogged, the number of *other* pulls
+    // between two of its consecutive services never exceeds one full
+    // WRR round minus its own share (`sum(WFQ_WEIGHTS) -
+    // WFQ_WEIGHTS[k]`), whatever mix floods the other lanes. Each lane
+    // stays FIFO within itself, and any aligned full round in which
+    // every lane holds at least its share is split *exactly* by
+    // weight.
+    let total: u64 = WFQ_WEIGHTS.iter().sum();
+    let mut rng = SplitMix64::new(0x3FA1);
+    for _ in 0..CASES {
+        let per: Vec<usize> = (0..3)
+            .map(|_| 1 + rng.next_below(40) as usize)
+            .collect();
+        let n: usize = per.iter().sum();
+        let q: BoundedQueue<(usize, usize)> = BoundedQueue::new(n);
+        q.add_consumers(1);
+        // Random arrival interleaving of the three classes.
+        let mut remaining = per.clone();
+        let mut seq = [0usize; 3];
+        while remaining.iter().any(|&r| r > 0) {
+            let k = loop {
+                let k = rng.next_below(3) as usize;
+                if remaining[k] > 0 {
+                    break k;
+                }
+            };
+            q.try_push_cost_pri((k, seq[k]), 1,
+                                Priority::from_u8(k as u8).unwrap())
+                .unwrap();
+            seq[k] += 1;
+            remaining[k] -= 1;
+        }
+        // Drain one pull at a time, recording the service order.
+        let mut order: Vec<(usize, usize)> = Vec::with_capacity(n);
+        while q.stats().depth > 0 {
+            let b = q.pop_batch(1).expect("queue is non-empty");
+            assert_eq!(b.len(), 1);
+            order.push(b[0]);
+        }
+        assert_eq!(order.len(), n);
+        // Per-lane FIFO.
+        let mut next = [0usize; 3];
+        for &(k, s) in &order {
+            assert_eq!(s, next[k], "lane {k} served out of order");
+            next[k] += 1;
+        }
+        // Starvation bound: while lane k still has items queued, the
+        // gap to its next service is at most one round of everyone
+        // else's credit.
+        for k in 0..3 {
+            let bound = (total - WFQ_WEIGHTS[k]) as usize;
+            let positions: Vec<usize> = order
+                .iter()
+                .enumerate()
+                .filter(|(_, &(c, _))| c == k)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(positions.len(), per[k]);
+            assert!(positions[0] <= bound,
+                    "class {k} first served at {} > {bound} \
+                     (per={per:?})", positions[0]);
+            for w in positions.windows(2) {
+                let gap = w[1] - w[0] - 1;
+                assert!(gap <= bound,
+                        "class {k} starved for {gap} pulls (> {bound}) \
+                         between {} and {} (per={per:?})", w[0], w[1]);
+            }
+        }
+        // Aligned full rounds split exactly by weight while every
+        // lane holds at least its share at the round boundary.
+        let mut left = per.clone();
+        for round in order.chunks(total as usize) {
+            let precondition = (0..3)
+                .all(|k| left[k] >= WFQ_WEIGHTS[k] as usize);
+            if !precondition || round.len() < total as usize {
+                break;
+            }
+            for k in 0..3 {
+                let got =
+                    round.iter().filter(|&&(c, _)| c == k).count();
+                assert_eq!(got, WFQ_WEIGHTS[k] as usize,
+                           "round served {got} of class {k} \
+                            (per={per:?})");
+            }
+            for &(k, _) in round {
+                left[k] -= 1;
+            }
+        }
+    }
+}
+
+// ---------------- windowed-percentile invariants ----------------
+
+#[test]
+fn prop_windowed_percentile_tracks_window_not_history() {
+    // `percentile_since` must reflect only the samples recorded after
+    // the baseline snapshot — however much differently-shaped history
+    // preceded it — to bucketed resolution (≤ ~6.25% relative error).
+    // This is the read the autoscaler's p99-SLO trigger is built on.
+    let mut rng = SplitMix64::new(0x99A7);
+    for _ in 0..CASES {
+        let mut h = LatencyHistogram::default();
+        // History skewed far below the window's value range.
+        for _ in 0..rng.next_below(2000) {
+            h.record(1 + rng.next_below(100));
+        }
+        let base = h.clone();
+        let win_n = 1 + rng.next_below(600) as usize;
+        let mut window = Vec::with_capacity(win_n);
+        for _ in 0..win_n {
+            let v = 10_000 + rng.next_below(1_000_000);
+            window.push(v);
+            h.record(v);
+        }
+        window.sort_unstable();
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            let got = h.percentile_since(&base, p) as f64;
+            let exact =
+                skydiver::metrics::percentile(&window, p) as f64;
+            assert!((got - exact).abs() <= exact * 0.0665 + 1.0,
+                    "p{p}: window-exact {exact} vs diffed {got} \
+                     (n={win_n})");
+        }
+        // A later snapshot is not a valid baseline, and an empty
+        // window reports 0, not stale history.
+        assert_eq!(base.percentile_since(&h, 99.0), 0);
+        assert_eq!(h.percentile_since(&h.clone(), 99.0), 0);
+    }
+}
+
+#[test]
+fn windowed_percentile_concurrent_with_recording() {
+    // The live autoscale read pattern: a control thread snapshots the
+    // histogram under the stats lock and diffs consecutive windows
+    // while worker threads keep recording through the same lock.
+    // Every windowed read must be internally consistent — zero
+    // exactly for empty windows, otherwise inside the recorded value
+    // range — with no panics across thousands of interleavings.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    let h = Arc::new(Mutex::new(LatencyHistogram::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (0..3)
+        .map(|w| {
+            let h = Arc::clone(&h);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(0xBEEF ^ w as u64);
+                let mut n = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    h.lock().unwrap()
+                        .record(50 + rng.next_below(10_000));
+                    n += 1;
+                    if n % 64 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                n
+            })
+        })
+        .collect();
+    let mut base = h.lock().unwrap().clone();
+    let mut nonempty_windows = 0u32;
+    for _ in 0..200 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let snap = h.lock().unwrap().clone();
+        let p99 = snap.percentile_since(&base, 99.0);
+        if snap.count() == base.count() {
+            assert_eq!(p99, 0, "empty window reported {p99}");
+        } else {
+            nonempty_windows += 1;
+            assert!(p99 >= 50 && p99 <= snap.max(),
+                    "window p99 {p99} outside [50, {}]", snap.max());
+        }
+        base = snap;
+    }
+    stop.store(true, Ordering::Relaxed);
+    let recorded: u64 =
+        writers.into_iter().map(|w| w.join().unwrap()).sum();
+    assert!(recorded > 0);
+    assert!(nonempty_windows > 0, "no window ever saw traffic");
 }
 
 // ---------------- SpikeMap invariants ----------------

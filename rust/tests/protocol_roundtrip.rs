@@ -339,8 +339,9 @@ fn random_garbage_never_panics() {
         let _ = read_frame(&mut Cursor::new(&buf), KIND_REQUEST);
         for ver in [V1, V2] {
             let _ = WireRequest::decode_body(ver, &buf);
-            let _ = WireRequest::decode_body_traced(ver, &buf);
+            let _ = WireRequest::decode_body_ext(ver, &buf);
             let _ = WireResponse::decode_body(ver, &buf);
+            let _ = WireResponse::decode_body_ext(ver, &buf);
         }
     }
 }
@@ -571,9 +572,10 @@ fn trace_context_roundtrips_v2() {
         .unwrap().unwrap();
     assert_eq!(ver, V2);
     let (dec, got) =
-        WireRequest::decode_body_traced(ver, &body).unwrap();
+        WireRequest::decode_body_ext(ver, &body).unwrap();
     assert_eq!(dec, req);
-    assert_eq!(got, Some(ctx));
+    assert_eq!(got.trace, Some(ctx));
+    assert_eq!(got.priority, None);
     // The strict entry point treats the extension as trailing
     // garbage — old decode paths never silently eat it.
     assert!(matches!(WireRequest::decode_body(ver, &body),
@@ -584,9 +586,9 @@ fn trace_context_roundtrips_v2() {
     assert_eq!(f0, req.encode_with_trace(None).unwrap());
     let (_, b0) = read_frame(&mut Cursor::new(&f0), KIND_REQUEST)
         .unwrap().unwrap();
-    let (d0, none) = WireRequest::decode_body_traced(V2, &b0).unwrap();
+    let (d0, none) = WireRequest::decode_body_ext(V2, &b0).unwrap();
     assert_eq!(d0, req);
-    assert_eq!(none, None);
+    assert!(none.is_empty());
 }
 
 #[test]
@@ -618,7 +620,7 @@ fn trace_context_is_infer_and_v2_only() {
     body.push(EXT_TRACE);
     body.extend_from_slice(&[0u8; 16]);
     body.extend_from_slice(&0u64.to_le_bytes());
-    assert!(WireRequest::decode_body_traced(V1, &body).is_err());
+    assert!(WireRequest::decode_body_ext(V1, &body).is_err());
 }
 
 #[test]
@@ -631,7 +633,7 @@ fn every_truncation_of_a_trace_extension_is_typed() {
     // bytes. Every cut inside it is a typed error, never a panic.
     let ext_start = body.len() - 25;
     for cut in ext_start + 1..body.len() {
-        assert!(WireRequest::decode_body_traced(ver, &body[..cut])
+        assert!(WireRequest::decode_body_ext(ver, &body[..cut])
                     .is_err(),
                 "cut at {cut} decoded");
     }
@@ -639,7 +641,7 @@ fn every_truncation_of_a_trace_extension_is_typed() {
     // explicit, not silent).
     let mut b = body.clone();
     b[ext_start] = 0xEE;
-    assert!(matches!(WireRequest::decode_body_traced(ver, &b),
+    assert!(matches!(WireRequest::decode_body_ext(ver, &b),
                      Err(ProtoError::Malformed(_))));
     // Fuzz the extension bytes: typed errors or different values only.
     let mut rng = SplitMix64::new(0x7E57);
@@ -648,7 +650,7 @@ fn every_truncation_of_a_trace_extension_is_typed() {
         let i = ext_start
             + rng.next_below((b.len() - ext_start) as u64) as usize;
         b[i] = rng.next_below(256) as u8;
-        let _ = WireRequest::decode_body_traced(ver, &b);
+        let _ = WireRequest::decode_body_ext(ver, &b);
     }
 }
 

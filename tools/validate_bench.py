@@ -13,7 +13,8 @@ Extracted from the inline CI snippets so the same check runs locally:
 * serving output must contain the canonical row set (loopback rtt/e2e,
   the two mixed multi-model rows, the skewed FIFO/cost dispatch pair,
   the c10k reactor row, the cluster-router row, the tracing-tax
-  pipelined/traced pair, and the temporal-kernels-off A/B row);
+  pipelined/traced pair, the temporal-kernels-off A/B row, and the
+  degraded-overload and autoscaling rows);
 * sim output must contain the bit-parallel temporal-kernel rows
   (``sim_temporal_{conv,dense,frame}``).
 """
@@ -38,6 +39,8 @@ SERVING_ROWS = (
     "serving_pipelined",
     "serving_traced",
     "serving_temporal_off",
+    "serving_degraded",
+    "serving_autoscale",
 )
 SIM_ROWS = (
     "sim_temporal_conv",

@@ -1,0 +1,236 @@
+#!/usr/bin/env python3
+"""Cross-check docs/OPERATIONS.md against the source of truth.
+
+The operator guide documents every CLI flag and every Prometheus
+series the serving tier renders. Documentation drifts; this validator
+makes drift a CI failure instead of a support ticket:
+
+* every metric name rendered by the gateway
+  (``rust/src/server/server.rs``), the cluster router
+  (``rust/src/cluster/router.rs``) and the shared observability layer
+  (``rust/src/obs/*.rs``) must appear in OPERATIONS.md;
+* every ``skydiver_*`` name OPERATIONS.md mentions must exist in that
+  rendered set (no stale series after a rename);
+* every flag in ``FLAG_SPECS`` (``rust/src/main.rs``) must appear as
+  ``--flag`` in OPERATIONS.md, and every ``--flag`` the doc mentions
+  must be a real flag.
+
+Comment lines in the Rust sources are ignored so prose shorthand like
+``skydiver_autoscale_{workers,events_total}`` doesn't pollute the
+extracted name set. Histogram suffixes (``_bucket``/``_sum``/
+``_count``) are folded into their base series.
+
+``--self-test`` runs every rule against doctored in-memory inputs and
+exits non-zero on a misfire, like ``validate_trace.py --self-test``.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC = os.path.join(REPO, "docs", "OPERATIONS.md")
+MAIN = os.path.join(REPO, "rust", "src", "main.rs")
+METRIC_SOURCES = (
+    os.path.join(REPO, "rust", "src", "server", "server.rs"),
+    os.path.join(REPO, "rust", "src", "cluster", "router.rs"),
+)
+OBS_DIR = os.path.join(REPO, "rust", "src", "obs")
+
+METRIC_RE = re.compile(r"skydiver_[a-z0-9_]*[a-z0-9]")
+FLAG_SPEC_RE = re.compile(r'^\s*\("([a-z][a-z0-9-]*)",\s*(?:true|false)\)')
+DOC_FLAG_RE = re.compile(r"--([a-z][a-z0-9-]*)")
+HISTO_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def fold_histogram(name):
+    """skydiver_stage_us_bucket -> skydiver_stage_us."""
+    for suf in HISTO_SUFFIXES:
+        if name.endswith(suf):
+            return name[: -len(suf)]
+    return name
+
+
+def metric_names_from_rust(text):
+    """Names in string-literal/render code, skipping // comments."""
+    names = set()
+    for line in text.splitlines():
+        if line.lstrip().startswith("//"):
+            continue
+        for m in METRIC_RE.findall(line):
+            names.add(fold_histogram(m))
+    return names
+
+
+def metric_names_from_doc(text):
+    names = set()
+    in_code = False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        for m in METRIC_RE.findall(line):
+            names.add(fold_histogram(m))
+    return names
+
+
+def flags_from_main(text):
+    flags = set()
+    in_specs = False
+    for line in text.splitlines():
+        if "FLAG_SPECS" in line and "&[" in line:
+            in_specs = True
+            continue
+        if in_specs:
+            if line.strip().startswith("];"):
+                break
+            m = FLAG_SPEC_RE.match(line)
+            if m:
+                flags.add(m.group(1))
+    return flags
+
+
+def flags_from_doc(text):
+    return set(DOC_FLAG_RE.findall(text))
+
+
+def cross_check(doc_text, rust_metrics, spec_flags):
+    """Return a list of violations (empty = docs and source agree)."""
+    errs = []
+    doc_metrics = metric_names_from_doc(doc_text)
+    doc_flags = flags_from_doc(doc_text)
+
+    for name in sorted(rust_metrics - doc_metrics):
+        errs.append(f"metric {name} is rendered but not documented "
+                    f"in OPERATIONS.md")
+    for name in sorted(doc_metrics - rust_metrics):
+        errs.append(f"metric {name} is documented but no longer "
+                    f"rendered (stale name?)")
+    for flag in sorted(spec_flags - doc_flags):
+        errs.append(f"flag --{flag} is in FLAG_SPECS but not "
+                    f"documented in OPERATIONS.md")
+    for flag in sorted(doc_flags - spec_flags):
+        errs.append(f"flag --{flag} is documented but unknown to the "
+                    f"CLI (stale flag?)")
+    return errs
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return f.read()
+    except OSError as e:
+        print(f"validate_ops_docs: {path}: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+def run():
+    rust_metrics = set()
+    sources = list(METRIC_SOURCES)
+    if os.path.isdir(OBS_DIR):
+        sources += [os.path.join(OBS_DIR, f)
+                    for f in sorted(os.listdir(OBS_DIR))
+                    if f.endswith(".rs")]
+    for path in sources:
+        rust_metrics |= metric_names_from_rust(load(path))
+    spec_flags = flags_from_main(load(MAIN))
+    if not rust_metrics:
+        print("validate_ops_docs: extracted no metric names — "
+              "extraction regex broken?", file=sys.stderr)
+        return 1
+    if not spec_flags:
+        print("validate_ops_docs: extracted no FLAG_SPECS flags — "
+              "main.rs layout changed?", file=sys.stderr)
+        return 1
+    errs = cross_check(load(DOC), rust_metrics, spec_flags)
+    for e in errs:
+        print(f"validate_ops_docs [FAIL] {e}", file=sys.stderr)
+    if errs:
+        print(f"validate_ops_docs: {len(errs)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print(f"docs/OPERATIONS.md OK: {len(rust_metrics)} metric "
+          f"name(s), {len(spec_flags)} flag(s) cross-checked")
+    return 0
+
+
+# --------------------------------------------------------- self-test
+
+RUST_FIXTURE = """
+// comment mentioning skydiver_phantom_series is ignored
+let _ = writeln!(out, "# TYPE skydiver_served_total counter");
+let _ = writeln!(out, "skydiver_served_total {v}");
+push_labelled(&mut out, "skydiver_queue_depth", "gauge", d);
+out.push_str("skydiver_stage_us_bucket{le=\\"1\\"} 0\\n");
+"""
+
+MAIN_FIXTURE = """
+const FLAG_SPECS: &[(&str, bool)] = &[
+    ("addr", true),
+    ("workers", true),
+    ("golden", false),
+];
+"""
+
+GOOD_DOC = """
+| `skydiver_served_total` | counter | served |
+| `skydiver_queue_depth` | gauge | depth |
+`skydiver_stage_us` histogram (`skydiver_stage_us_bucket`).
+Flags: `--addr`, `--workers N`, `--golden`.
+"""
+
+
+def self_test():
+    checks = []
+
+    def check(what, doc, want_errs):
+        metrics = metric_names_from_rust(RUST_FIXTURE)
+        flags = flags_from_main(MAIN_FIXTURE)
+        errs = cross_check(doc, metrics, flags)
+        ok = bool(errs) == want_errs
+        checks.append((what, ok))
+        status = "ok" if ok else "MISFIRE"
+        print(f"self-test [{status}] {what}: "
+              f"{errs if errs else 'no violations'}")
+
+    metrics = metric_names_from_rust(RUST_FIXTURE)
+    assert_ok = metrics == {"skydiver_served_total",
+                            "skydiver_queue_depth",
+                            "skydiver_stage_us"}
+    checks.append(("extraction folds histograms, skips comments",
+                   assert_ok))
+    print(f"self-test [{'ok' if assert_ok else 'MISFIRE'}] "
+          f"extracted {sorted(metrics)}")
+
+    check("complete doc passes", GOOD_DOC, want_errs=False)
+    check("missing metric fails",
+          GOOD_DOC.replace("skydiver_queue_depth` | gauge", "x"),
+          want_errs=True)
+    check("stale metric fails",
+          GOOD_DOC + "\n`skydiver_retired_series` gauge\n",
+          want_errs=True)
+    check("missing flag fails",
+          GOOD_DOC.replace("`--golden`", "x"), want_errs=True)
+    check("stale flag fails",
+          GOOD_DOC + "\nuse `--turbo` for speed\n", want_errs=True)
+
+    bad = [what for what, ok in checks if not ok]
+    if bad:
+        print(f"self-test FAILED: {bad}")
+        return 1
+    print(f"self-test: all {len(checks)} validator rules behave")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the cross-check rules against "
+                    "doctored inputs")
+    args = ap.parse_args()
+    sys.exit(self_test() if args.self_test else run())
+
+
+if __name__ == "__main__":
+    main()

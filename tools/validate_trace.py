@@ -36,7 +36,7 @@ import json
 import sys
 
 STAGES = ("admission", "cost_predict", "queue", "batch", "compute",
-          "encode", "write", "route", "attempt")
+          "encode", "write", "route", "attempt", "scale")
 # Intra-process pipeline checkpoints, in must-not-end-later order.
 PIPELINE = ("queue", "compute", "write")
 
